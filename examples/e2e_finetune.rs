@@ -1,0 +1,158 @@
+//! End-to-end driver: the full pretrain -> finetune protocol on a real
+//! (small) workload, proving every layer composes — L1 Pallas kernels
+//! inside L2 AOT graphs executed by the L3 Rust coordinator.
+//!
+//!   cargo run --release --example e2e_finetune -- [--steps N]
+//!       [--pretrain-steps N] [--preset e2e|e2e100m] [--out-dir DIR]
+//!
+//! Protocol (mirrors the paper's adaptation setting):
+//!   1. "Pretrain" the base transformer (`<preset>_full`) on the wiki
+//!      corpus, distribution style 0. Checkpoint it.
+//!   2. Finetune OFTv2 and LoRA adapters from that checkpoint on the
+//!      *shifted* wiki distribution (style 1) — frozen base, adapters
+//!      only — and compare loss curves / perplexity / step time.
+//!
+//! Histories land in `<out-dir>/<tag>_history.json`; the run summary is
+//! recorded in EXPERIMENTS.md §E2E.
+
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{Manifest, Trainer};
+use oftv2::data::corpus::TaskKind;
+use oftv2::data::loader::Loader;
+use oftv2::runtime::Engine;
+use oftv2::{artifacts_root, Result};
+
+/// Corpus size for both phases (one tokenizer over the union).
+const DOCUMENTS: usize = 4000;
+
+struct Opts {
+    preset: String,
+    pretrain_steps: usize,
+    steps: usize,
+    out_dir: String,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |key: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    };
+    Opts {
+        preset: get("--preset", "e2e"),
+        pretrain_steps: get("--pretrain-steps", "200").parse().unwrap(),
+        steps: get("--steps", "300").parse().unwrap(),
+        out_dir: get("--out-dir", "e2e_out"),
+    }
+}
+
+fn main() -> Result<()> {
+    let opts = parse_opts();
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    std::fs::create_dir_all(&opts.out_dir)?;
+
+    let root = artifacts_root();
+    let full_tag = format!("{}_full", opts.preset);
+    let man = Manifest::load(root.join(&full_tag))?;
+    println!(
+        "== {} :: {} base parameters, d={}, {} layers ==",
+        opts.preset, man.params_base, man.model.d_model, man.model.n_layers
+    );
+
+    // ---- Phase 1: pretraining on wiki style-0 --------------------------
+    let mut cfg = RunCfg::default();
+    cfg.tag = full_tag.clone();
+    cfg.steps = opts.pretrain_steps;
+    cfg.log_every = 20;
+    cfg.eval_every = 100;
+    cfg.optim.lr = 1e-3;
+    cfg.optim.warmup = 20;
+    cfg.data.task = "wiki".into();
+    cfg.data.documents = 4000;
+    cfg.out_dir = Some(opts.out_dir.clone());
+
+    // One tokenizer over both distributions: token ids must stay
+    // aligned between the pretraining checkpoint and the finetune runs.
+    let (pre_loader, fin_loader) = Loader::pretrain_finetune_pair(
+        TaskKind::Wiki,
+        DOCUMENTS,
+        7,
+        man.model.vocab,
+        man.model.batch,
+        man.model.seq_len,
+    );
+
+    let pretrain_cfg = cfg.clone();
+    println!("\n-- pretraining {} for {} steps --", full_tag, cfg.steps);
+    let mut pre = Trainer::new(&engine, &root, pretrain_cfg)?;
+    pre.set_loader(pre_loader);
+    let pre_hist = pre.train()?;
+    let (pre_loss, pre_ppl) = pre.evaluate()?;
+    println!(
+        "pretrain: loss {:.3} -> {:.3}, eval {:.3}, ppl {:.1}",
+        pre_hist.first_loss().unwrap(),
+        pre_hist.final_loss().unwrap(),
+        pre_loss,
+        pre_ppl
+    );
+    let ckpt = pre.checkpoint()?;
+    let ckpt_path = std::path::Path::new(&opts.out_dir).join("pretrained.ckpt");
+    pre.save_checkpoint(&ckpt_path)?;
+    println!("checkpoint -> {}", ckpt_path.display());
+    drop(pre);
+
+    // ---- Phase 2: adapter finetuning on the shifted corpus -------------
+    let mut rows = Vec::new();
+    for method_tag in [format!("{}_oft_v2", opts.preset), format!("{}_lora", opts.preset)] {
+        if !root.join(&method_tag).exists() {
+            println!("(skipping {method_tag}: bundle not built)");
+            continue;
+        }
+        println!("\n-- finetuning {method_tag} for {} steps --", opts.steps);
+        let man = Manifest::load(root.join(&method_tag))?;
+        let mut fcfg = cfg.clone();
+        fcfg.tag = method_tag.clone();
+        fcfg.steps = opts.steps;
+        fcfg.eval_every = opts.steps / 3;
+        fcfg.optim.lr = if method_tag.contains("oft") { 4e-3 } else { 1e-3 };
+        let mut tr = Trainer::with_checkpoint(&engine, man, fcfg, Some(&ckpt))?;
+        // shifted distribution (style 1), shared vocabulary
+        tr.set_loader(fin_loader.clone());
+        let (loss0, ppl0) = tr.evaluate()?;
+        let hist = tr.train()?;
+        let (loss1, ppl1) = tr.evaluate()?;
+        println!(
+            "{method_tag}: eval {loss0:.3} -> {loss1:.3} (ppl {ppl0:.1} -> {ppl1:.1}), \
+             {:.0} ms/step, {} trainable params",
+            hist.mean_step_secs(5) * 1e3,
+            tr.manifest.params_trainable
+        );
+        rows.push((
+            method_tag.clone(),
+            tr.manifest.params_trainable,
+            loss0,
+            loss1,
+            ppl1,
+            hist.mean_step_secs(5) * 1e3,
+        ));
+        assert!(loss1 < loss0, "{method_tag}: finetuning did not improve eval loss");
+    }
+
+    println!("\n== E2E summary (pretrain ppl {:.1}) ==", pre_ppl);
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>9} {:>10}",
+        "method", "params", "eval0", "eval1", "ppl", "ms/step"
+    );
+    for (tag, params, l0, l1, ppl, ms) in &rows {
+        println!(
+            "{:<16} {:>10} {:>10.3} {:>10.3} {:>9.1} {:>10.0}",
+            tag, params, l0, l1, ppl, ms
+        );
+    }
+    println!("\ne2e_finetune OK");
+    Ok(())
+}

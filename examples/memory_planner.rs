@@ -1,0 +1,80 @@
+//! Memory planner: size a finetuning run before you rent the GPUs.
+//!
+//!   cargo run --release --example memory_planner
+//!
+//! Uses the analytic memory model (the same arithmetic behind the
+//! paper's Fig. 1, Fig. 4 and Table 11) to answer: which (method,
+//! precision) combinations fit which GPUs for each Qwen2.5 scale?
+
+use oftv2::memmodel::{finetune_memory, Method, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::Result;
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn main() -> Result<()> {
+    let shape = TrainShape {
+        batch: 1,
+        seq: 2048,
+        act_bytes: 2.0,
+        grad_checkpoint: true,
+    };
+    let gpus = [("A100-40G", 40.0), ("H100-80G", 80.0), ("H100-NVL", 94.0)];
+
+    println!("Finetuning-memory planner (batch 1 x 2048 tokens, bf16 activations)\n");
+    println!(
+        "{:<14} {:<8} {:<6} {:>9}   {}",
+        "model", "method", "prec", "total", "fits"
+    );
+    for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
+        let spec = ModelSpec::qwen25(size);
+        for (method, prec) in [
+            (Method::OftWeightCentric { b: 32 }, Precision::Bf16),
+            (Method::OftInputCentric { b: 32 }, Precision::Bf16),
+            (Method::Lora { r: 16 }, Precision::Bf16),
+            (Method::OftInputCentric { b: 32 }, Precision::Nf4),
+            (Method::Lora { r: 16 }, Precision::Nf4),
+        ] {
+            let total = finetune_memory(&spec, method, prec, shape).total() / GIB;
+            let fits: Vec<&str> = gpus
+                .iter()
+                .filter(|(_, cap)| total < *cap)
+                .map(|(n, _)| *n)
+                .collect();
+            println!(
+                "{:<14} {:<8} {:<6} {:>8.1}G   {}",
+                spec.name,
+                method.label(prec != Precision::Bf16),
+                prec.label(),
+                total,
+                if fits.is_empty() { "none".into() } else { fits.join(", ") }
+            );
+        }
+        println!();
+    }
+
+    // The Fig. 1 headline: weight-centric OFT vs OFTv2 on Qwen2.5-7B.
+    let spec = ModelSpec::qwen25("7b");
+    let oft = finetune_memory(&spec, Method::OftWeightCentric { b: 32 }, Precision::Bf16, shape);
+    let v2 = finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
+    println!("== Fig. 1 breakdown: Qwen2.5-7B, BF16 ==");
+    println!("{:<16} {:>12} {:>12}", "", "OFT (GiB)", "OFTv2 (GiB)");
+    for (label, a, b) in [
+        ("base weights", oft.base_weights, v2.base_weights),
+        ("adapter+grads", oft.adapter_params + oft.adapter_grads, v2.adapter_params + v2.adapter_grads),
+        ("optimizer", oft.optimizer, v2.optimizer),
+        ("activations", oft.activations, v2.activations),
+        ("transient", oft.transient, v2.transient),
+        ("overhead", oft.overhead, v2.overhead),
+    ] {
+        println!("{:<16} {:>12.2} {:>12.2}", label, a / GIB, b / GIB);
+    }
+    println!(
+        "{:<16} {:>12.2} {:>12.2}   ({:.1}x reduction)",
+        "TOTAL",
+        oft.total() / GIB,
+        v2.total() / GIB,
+        oft.total() / v2.total()
+    );
+    Ok(())
+}

@@ -1,0 +1,414 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust (L3).
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each (preset, method[, quant]) bundle becomes artifacts/<tag>/ with:
+  train_step.hlo.txt   (new_trainables + new_m + new_v + [loss])
+  eval_loss.hlo.txt    (sum_nll, token_count)
+  logits_last.hlo.txt  (vocab logits at position cur_len-1)
+  manifest.json        the full input contract (names, shapes, dtypes,
+                       init specs, quantized packing layout)
+
+plus artifacts/micro/ — standalone kernels for the complexity/benchmark
+sweeps (Fig. 1, §3.2 scaling, CNP ablations).
+
+Usage:
+  python -m compile.aot --out-root ../artifacts            # default set
+  python -m compile.aot --out-root ../artifacts --bundle bench:oft_v2
+  python -m compile.aot --out-root ../artifacts --micro-only
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import PRESETS, ModelCfg, param_count
+from .kernels import awq as awq_k
+from .kernels import cnp as cnp_k
+from .kernels import nf4 as nf4_k
+from .kernels import ref
+from .kernels.rotate import block_rotate
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default elides big
+    # constant payloads as `{...}`, which xla_extension 0.5.1's text
+    # parser accepts silently and materializes as garbage (NaNs at
+    # runtime). The Pallas kernels carry static gather-index/sign tables
+    # as large constants.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u8": jnp.uint8, "i8": jnp.int8}
+
+
+# ---------------------------------------------------------------------------
+# Model bundles
+# ---------------------------------------------------------------------------
+
+
+def bundle_tag(preset: str, method: str, quant: str) -> str:
+    return f"{preset}_{method}" + (f"_{quant}" if quant != "none" else "")
+
+
+def build_manifest(preset: str, cfg: ModelCfg) -> dict:
+    base_specs = M.base_param_specs(cfg)
+    adapter_specs = M.adapter_param_specs(cfg)
+
+    def entry(name, spec):
+        (shape, (kind, std)) = spec
+        return {"name": name, "shape": list(shape), "dtype": "f32", "init": [kind, std]}
+
+    trainable = []
+    for n in M.trainable_names(cfg):
+        spec = adapter_specs.get(n) or base_specs[n]
+        trainable.append(entry(n, spec))
+    frozen = [entry(n, base_specs[n]) for n in M.frozen_names(cfg)]
+    quantized = [
+        {"name": qn, "base": base, "shape": list(shape), "dtype": dt}
+        for qn, base, shape, dt in M.quantized_specs(cfg)
+    ]
+    b, t, v = cfg.batch, cfg.seq_len, cfg.vocab
+    return {
+        "tag": bundle_tag(preset, cfg.method, cfg.quant),
+        "preset": preset,
+        "method": cfg.method,
+        "quant": cfg.quant,
+        "model": {
+            "vocab": v,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": t,
+            "batch": b,
+            "block_b": cfg.block_b,
+            "neumann_k": cfg.neumann_k,
+            "lora_r": cfg.lora_r,
+            "lora_alpha": cfg.lora_alpha,
+        },
+        "params": param_count(cfg),
+        "inputs": {
+            "trainable": trainable,
+            "frozen": frozen,
+            "quantized": quantized,
+            "data": [
+                {"name": "tokens", "shape": [b, t + 1], "dtype": "i32"},
+                {"name": "mask", "shape": [b, t], "dtype": "f32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+                {"name": "t", "shape": [], "dtype": "f32"},
+            ],
+        },
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "eval_loss": "eval_loss.hlo.txt",
+            "logits_last": "logits_last.hlo.txt",
+        },
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+    }
+
+
+def _sources_mtime() -> float:
+    """Newest mtime across the compile package (bundle staleness check)."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    latest = 0.0
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            if f.endswith(".py"):
+                latest = max(latest, os.path.getmtime(os.path.join(dirpath, f)))
+    return latest
+
+
+def _up_to_date(marker: str) -> bool:
+    return os.path.exists(marker) and os.path.getmtime(marker) >= _sources_mtime()
+
+
+def lower_bundle(preset: str, method: str, quant: str, out_root: str, force=False):
+    cfg = PRESETS[preset].with_method(method, quant)
+    tag = bundle_tag(preset, method, quant)
+    outdir = os.path.join(out_root, tag)
+    marker = os.path.join(outdir, "manifest.json")
+    if not force and _up_to_date(marker):
+        print(f"[aot] {tag}: up to date")
+        return
+    os.makedirs(outdir, exist_ok=True)
+    man = build_manifest(preset, cfg)
+
+    tr_specs = [_sds(e["shape"]) for e in man["inputs"]["trainable"]]
+    fr_specs = [_sds(e["shape"]) for e in man["inputs"]["frozen"]]
+    qt_specs = [_sds(e["shape"], _DTYPES[e["dtype"]]) for e in man["inputs"]["quantized"]]
+    fixed = fr_specs + qt_specs
+    b, t = cfg.batch, cfg.seq_len
+    tokens = _sds((b, t + 1), jnp.int32)
+    mask = _sds((b, t), jnp.float32)
+    scalar = _sds((), jnp.float32)
+
+    print(f"[aot] {tag}: lowering train_step ...", flush=True)
+    step = M.make_train_step(cfg)
+    hlo = to_hlo_text(
+        jax.jit(step).lower(tr_specs, tr_specs, tr_specs, fixed, tokens, mask, scalar, scalar)
+    )
+    with open(os.path.join(outdir, "train_step.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    print(f"[aot] {tag}: lowering eval_loss ...", flush=True)
+    ev = M.make_eval_loss(cfg)
+    hlo = to_hlo_text(jax.jit(ev).lower(tr_specs, fixed, tokens, mask))
+    with open(os.path.join(outdir, "eval_loss.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    print(f"[aot] {tag}: lowering logits_last ...", flush=True)
+    ll = M.make_logits_last(cfg)
+    tokens1 = _sds((1, t), jnp.int32)
+    cur = _sds((), jnp.int32)
+    hlo = to_hlo_text(jax.jit(ll).lower(tr_specs, fixed, tokens1, cur))
+    with open(os.path.join(outdir, "logits_last.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    with open(marker, "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"[aot] {tag}: done")
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel artifacts (complexity sweeps, ablations)
+# ---------------------------------------------------------------------------
+
+MICRO_ROWS = 128  # input rows for the linear-layer micro benches
+MICRO_B = 32
+MICRO_K = 5
+MICRO_LORA_R = 16
+
+
+def micro_defs(dims, cnp_bs, ks):
+    """name -> (fn, [(input_name, shape, dtype)], meta). All f32 unless noted."""
+    p_of = ref.packed_dim
+    defs = {}
+
+    for d in dims:
+        nb = d // MICRO_B
+        p = p_of(MICRO_B)
+        x = ("x", (MICRO_ROWS, d), "f32")
+        q = ("q", (nb, p), "f32")
+        w = ("w", (d, d), "f32")
+
+        def mk_rotate(d=d, nb=nb):
+            def f(x, q):
+                r = cnp_k.cnp_build(q, MICRO_B, MICRO_K)
+                return (block_rotate(x, r),)
+
+            return f
+
+        def mk_rotate_w(d=d, nb=nb):
+            def f(x, q, w):
+                r = cnp_k.cnp_build(q, MICRO_B, MICRO_K)
+                return (block_rotate(x, r) @ w,)
+
+            return f
+
+        def mk_merge_w(d=d, nb=nb):
+            def f(x, q, w):
+                r = ref.cayley_neumann(q, MICRO_B, MICRO_K)
+                rd = ref.blockdiag_dense(r, d)
+                return (x @ (rd @ w),)
+
+            return f
+
+        def mk_base_w():
+            def f(x, w):
+                return (x @ w,)
+
+            return f
+
+        def mk_lora_w(d=d):
+            def f(x, a, bb, w):
+                return (x @ w + ((x @ a) @ bb) * (16.0 / MICRO_LORA_R),)
+
+            return f
+
+        defs[f"rotate_d{d}"] = (mk_rotate(), [x, q], {"d": d})
+        defs[f"rotate_w_d{d}"] = (mk_rotate_w(), [x, q, w], {"d": d})
+        defs[f"merge_w_d{d}"] = (mk_merge_w(), [x, q, w], {"d": d})
+        defs[f"base_w_d{d}"] = (mk_base_w(), [x, w], {"d": d})
+        defs[f"lora_w_d{d}"] = (
+            mk_lora_w(),
+            [x, ("a", (d, MICRO_LORA_R), "f32"), ("b", (MICRO_LORA_R, d), "f32"), w],
+            {"d": d},
+        )
+
+    for b in cnp_bs:
+        q = ("q", (32, p_of(b)), "f32")
+
+        def mk_cnp(b=b, k=MICRO_K):
+            def f(q):
+                return (cnp_k.cnp_build(q, b, k),)
+
+            return f
+
+        def mk_schulz(b=b):
+            def f(q):
+                return (M.cayley_schulz(q, b, 12),)
+
+            return f
+
+        defs[f"cnp_b{b}"] = (mk_cnp(), [q], {"b": b, "k": MICRO_K})
+        defs[f"cayley_schulz_b{b}"] = (mk_schulz(), [q], {"b": b})
+
+    for k in ks:
+        q = ("q", (32, p_of(MICRO_B)), "f32")
+
+        def mk_cnp_k(k=k):
+            def f(q):
+                return (cnp_k.cnp_build(q, MICRO_B, k),)
+
+            return f
+
+        defs[f"cnp_b{MICRO_B}_k{k}"] = (mk_cnp_k(), [q], {"b": MICRO_B, "k": k})
+
+    # quant dequant kernels at a fixed realistic size
+    n = 1024 * 1024
+    nbytes, nblocks, ngroups = nf4_k.packed_sizes(n)
+    defs["nf4_dequant_1m"] = (
+        lambda c, aq, as_, off: (nf4_k.nf4_dequant_flat(c, aq, as_, off),),
+        [
+            ("codes", (nbytes,), "u8"),
+            ("absmax_q", (nblocks,), "i8"),
+            ("absmax_s", (ngroups,), "f32"),
+            ("offset", (1,), "f32"),
+        ],
+        {"n": n},
+    )
+    dq = 1024
+    defs["awq_dequant_1m"] = (
+        lambda c, s, e: (awq_k.awq_dequant(c, s, e),),
+        [
+            ("codes", (dq // 2, dq), "u8"),
+            ("scales", (dq // ref.AWQ_GROUP, dq), "f32"),
+            ("eq", (dq,), "f32"),
+        ],
+        {"din": dq, "dout": dq},
+    )
+    return defs
+
+
+def lower_micro(out_root: str, dims, force=False):
+    outdir = os.path.join(out_root, "micro")
+    marker = os.path.join(outdir, "manifest.json")
+    if not force and _up_to_date(marker):
+        print("[aot] micro: up to date")
+        return
+    os.makedirs(outdir, exist_ok=True)
+    defs = micro_defs(dims, cnp_bs=(16, 32, 64), ks=(1, 2, 3, 4, 5, 6, 7, 8))
+    man = {}
+    for name, (fn, inputs, meta) in defs.items():
+        specs = [_sds(shape, _DTYPES[dt]) for _, shape, dt in inputs]
+        print(f"[aot] micro/{name} ...", flush=True)
+        hlo = to_hlo_text(jax.jit(fn).lower(*specs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(hlo)
+        man[name] = {
+            "artifact": fname,
+            "inputs": [{"name": n, "shape": list(s), "dtype": dt} for n, s, dt in inputs],
+            "meta": meta,
+        }
+    with open(marker, "w") as f:
+        json.dump(man, f, indent=1)
+    print("[aot] micro: done")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+DEFAULT_BUNDLES = [
+    # pytest / cargo-test bundle: every method at minimal size
+    ("tiny", "full", "none"),
+    ("tiny", "none", "none"),
+    ("tiny", "lora", "none"),
+    ("tiny", "oft_merged", "none"),
+    ("tiny", "oft_v2", "none"),
+    ("tiny", "qlora", "nf4"),
+    ("tiny", "qoft", "nf4"),
+    ("tiny", "qlora", "awq"),
+    ("tiny", "qoft", "awq"),
+    # integration bundle
+    ("small", "full", "none"),
+    ("small", "lora", "none"),
+    ("small", "oft_v2", "none"),
+    ("small", "qlora", "nf4"),
+    ("small", "qoft", "nf4"),
+    # Fig.1 timing bundle (d > rows: the merge-dominated regime)
+    ("fig1", "oft_merged", "none"),
+    ("fig1", "oft_v2", "none"),
+    ("fig1", "lora", "none"),
+    # timing bundle (Tab.1 / Tab.2)
+    ("bench", "lora", "none"),
+    ("bench", "oft_merged", "none"),
+    ("bench", "oft_v2", "none"),
+    ("bench", "qlora", "nf4"),
+    ("bench", "qoft", "nf4"),
+    ("bench", "qlora", "awq"),
+    ("bench", "qoft", "awq"),
+    # end-to-end demo bundle
+    ("e2e", "full", "none"),
+    ("e2e", "lora", "none"),
+    ("e2e", "oft_v2", "none"),
+    ("e2e", "qoft", "nf4"),
+]
+
+MICRO_DIMS = (256, 512, 1024, 2048)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--bundle", action="append", default=[],
+                    help="preset:method[:quant] (repeatable; overrides default set)")
+    ap.add_argument("--micro-only", action="store_true")
+    ap.add_argument("--no-micro", action="store_true")
+    ap.add_argument("--with-100m", action="store_true",
+                    help="also lower the e2e100m bundles (slow)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_root, exist_ok=True)
+    if not args.micro_only:
+        bundles = DEFAULT_BUNDLES
+        if args.bundle:
+            bundles = []
+            for spec in args.bundle:
+                parts = spec.split(":")
+                preset, method = parts[0], parts[1]
+                quant = parts[2] if len(parts) > 2 else "none"
+                bundles.append((preset, method, quant))
+        elif args.with_100m:
+            bundles = bundles + [
+                ("e2e100m", "full", "none"),
+                ("e2e100m", "oft_v2", "none"),
+                ("e2e100m", "lora", "none"),
+            ]
+        for preset, method, quant in bundles:
+            lower_bundle(preset, method, quant, args.out_root, force=args.force)
+    if not args.no_micro:
+        lower_micro(args.out_root, MICRO_DIMS, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

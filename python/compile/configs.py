@@ -1,0 +1,113 @@
+"""Model / finetuning configurations and named presets.
+
+A (preset, method, quant) triple fully determines one artifact bundle
+under artifacts/<preset>_<method>[_<quant>]/. The Rust coordinator reads
+the bundle's manifest.json and never re-derives any of these numbers.
+"""
+
+from dataclasses import dataclass, field, replace
+
+METHODS = ("full", "none", "lora", "oft_merged", "oft_v2", "qlora", "qoft")
+QUANT_BACKENDS = ("none", "nf4", "awq")
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Decoder-only transformer + PEFT-method configuration."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    seq_len: int = 32  # training context length T (batches are (B, T+1))
+    batch: int = 4
+
+    method: str = "oft_v2"
+    quant: str = "none"  # weight backend for qlora/qoft: nf4 | awq
+
+    # OFT family
+    block_b: int = 16  # orthogonal block size b (must divide d_model, d_ff)
+    neumann_k: int = 5  # Neumann series terms (CNP)
+    cayley: str = "neumann"  # oft_merged parameterization: neumann | schulz
+    schulz_iters: int = 12  # Newton-Schulz iterations for "exact" inverse
+
+    # LoRA family
+    lora_r: int = 4
+    lora_alpha: float = 16.0
+
+    def __post_init__(self):
+        assert self.method in METHODS, self.method
+        assert self.quant in QUANT_BACKENDS, self.quant
+        assert self.d_model % self.n_heads == 0
+        if self.method in ("oft_merged", "oft_v2", "qoft"):
+            assert self.d_model % self.block_b == 0, (self.d_model, self.block_b)
+            assert self.d_ff % self.block_b == 0, (self.d_ff, self.block_b)
+        if self.method in ("qlora", "qoft"):
+            assert self.quant != "none", "quantized methods need a quant backend"
+        else:
+            assert self.quant == "none", (self.method, self.quant)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def with_method(self, method: str, quant: str = "none") -> "ModelCfg":
+        return replace(self, method=method, quant=quant)
+
+
+# Named presets (model shape only; method/quant applied per artifact).
+PRESETS = {
+    # fast pytest / cargo-test bundle
+    "tiny": ModelCfg(
+        vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=256,
+        seq_len=48, batch=4, block_b=16, lora_r=4,
+    ),
+    # unit/integration bundle with realistic block size
+    "small": ModelCfg(
+        vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=512,
+        seq_len=64, batch=8, block_b=32, lora_r=8,
+    ),
+    # timing bundle for Tab.1 / Tab.2
+    "bench": ModelCfg(
+        vocab=512, d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+        seq_len=128, batch=8, block_b=32, lora_r=16,
+    ),
+    # Fig.1 regime: d > rows, where the weight-centric d^2·n merge
+    # dominates the rows·d·n layer (the paper's 7B setting scaled down)
+    "fig1": ModelCfg(
+        vocab=512, d_model=1024, n_layers=2, n_heads=8, d_ff=2048,
+        seq_len=32, batch=4, block_b=32, lora_r=16,
+    ),
+    # end-to-end finetuning demo (~23M params)
+    "e2e": ModelCfg(
+        vocab=4096, d_model=512, n_layers=6, n_heads=8, d_ff=2048,
+        seq_len=256, batch=8, block_b=32, lora_r=16,
+    ),
+    # ~100M-parameter configuration for the headline end-to-end run
+    "e2e100m": ModelCfg(
+        vocab=8192, d_model=896, n_layers=8, n_heads=14, d_ff=3584,
+        seq_len=256, batch=4, block_b=32, lora_r=16,
+    ),
+}
+
+
+def param_count(cfg: ModelCfg) -> dict:
+    """Base / trainable parameter counts (mirrors rust/src/peft counting)."""
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    base = v * d + t * d  # embeddings
+    base += cfg.n_layers * (2 * d + 4 * d * d + d * f + f * d)  # norms+attn+mlp
+    base += d + d * v  # final norm + head
+    linears = []
+    for _ in range(cfg.n_layers):
+        linears += [(d, d)] * 4 + [(d, f), (f, d)]
+    if cfg.method in ("lora", "qlora"):
+        trainable = sum(cfg.lora_r * (din + dout) for din, dout in linears)
+    elif cfg.method in ("oft_merged", "oft_v2", "qoft"):
+        b = cfg.block_b
+        trainable = sum((din // b) * (b * (b - 1) // 2) for din, dout in linears)
+    elif cfg.method == "full":
+        trainable = base
+    else:
+        trainable = 0
+    return {"base": base, "trainable": trainable}

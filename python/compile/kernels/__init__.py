@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- cnp: fused skew-unpack + Cayley-Neumann orthogonal-block build
+  (the paper's custom CUDA kernel, rethought for TPU/VMEM).
+- rotate: block-diagonal input rotation — the input-centric OFTv2 hot
+  path, with a custom VJP so the train graph can differentiate it.
+- nf4: NF4 (QLoRA) dequantization with double quantization.
+- awq: AWQ-style groupwise int4 dequantization.
+- ref: pure-jnp oracles for all of the above.
+
+All kernels lower with interpret=True so they compile to plain HLO and run
+on the CPU PJRT client driven by the Rust runtime (real-TPU lowering emits
+Mosaic custom-calls the CPU plugin cannot execute).
+"""
+
+from . import awq, cnp, nf4, ref, rotate  # noqa: F401

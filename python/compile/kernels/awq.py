@@ -1,0 +1,57 @@
+"""Pallas kernel: AWQ-style groupwise int4 dequantization.
+
+Layout (see ref.awq_quantize / rust/src/quant/awq.rs):
+  codes  (din/2, dout) uint8 — rows 2i in the hi nibble, 2i+1 in the lo
+  scales (din/AWQ_GROUP, dout) f32 — symmetric per-(group, out-channel)
+
+Grid: one program per (AWQ group, column tile). Each program expands a
+(AWQ_GROUP/2, TC) byte tile into a (AWQ_GROUP, TC) float tile and scales
+it by the (1, TC) scale row — contiguous VMEM tiles, no cross-program
+traffic. Activation-aware equalization is folded into `scales` at
+quantization time, so dequant is a single multiply (as in AutoAWQ).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import AWQ_GROUP
+
+
+def _awq_kernel(codes_ref, scale_ref, eq_ref, o_ref):
+    codes = codes_ref[...]  # (AWQ_GROUP//2, TC)
+    hi = (codes >> 4).astype(jnp.int32) - 8
+    lo = (codes & 0xF).astype(jnp.int32) - 8
+    h2, tc = codes.shape
+    q = jnp.stack([hi, lo], axis=1).reshape(h2 * 2, tc).astype(jnp.float32)
+    o_ref[...] = q * scale_ref[...] / eq_ref[...][:, None]
+
+
+def _pick_tc(dout: int) -> int:
+    for tc in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if dout % tc == 0:
+            return tc
+    return 1
+
+
+@jax.jit
+def awq_dequant(codes, scales, eq):
+    """codes (din/2, dout) u8, scales (g, dout) f32, eq (din,) f32
+    -> (din, dout) f32."""
+    din2, dout = codes.shape
+    din = din2 * 2
+    g = scales.shape[0]
+    assert din % AWQ_GROUP == 0 and g == din // AWQ_GROUP
+    tc = _pick_tc(dout)
+    return pl.pallas_call(
+        _awq_kernel,
+        grid=(g, dout // tc),
+        in_specs=[
+            pl.BlockSpec((AWQ_GROUP // 2, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((AWQ_GROUP,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((AWQ_GROUP, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), jnp.float32),
+        interpret=True,
+    )(codes, scales, eq)

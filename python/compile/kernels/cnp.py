@@ -1,0 +1,101 @@
+"""Pallas kernel: fused skew-unpack + Cayley-Neumann build.
+
+This is the TPU adaptation of the paper's custom CUDA kernel (§3.3,
+"Custom CUDA kernel for skew-symmetric matrices") plus the CNP build:
+
+  packed upper triangle q (nb, p)  ->  orthogonal blocks R (nb, b, b)
+      R_i = (I + Q_i)(I + sum_{j=1..k} Q_i^j)
+
+CUDA -> Pallas rethink (see DESIGN.md §Hardware adaptation):
+  * the CUDA scatter (one thread per element) becomes a *static gather*
+    (`idx`/`sign` maps precomputed host-side) — TPU VPU-friendly;
+  * the grid iterates over the nb blocks; each program keeps one packed
+    vector and the (b, b) working set entirely in VMEM;
+  * the k Neumann matmuls run back-to-back on the same VMEM tile — dense
+    Q and the partial powers never round-trip to HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same graph runs
+under the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _cnp_kernel(qp_ref, idx_ref, sign_ref, o_ref, *, b: int, k: int):
+    qp = qp_ref[0]  # (p + 1,) packed, padded with one trailing zero slot
+    q = (jnp.take(qp, idx_ref[...], axis=0) * sign_ref[...]).reshape(b, b)
+    eye = jnp.eye(b, dtype=q.dtype)
+    acc = eye
+    term = eye
+    for _ in range(k):
+        term = term @ q
+        acc = acc + term
+    o_ref[0] = (eye + q) @ acc
+
+
+@functools.partial(jax.jit, static_argnames=("b", "k"))
+def cnp_build(q_packed: jax.Array, b: int, k: int) -> jax.Array:
+    """Build (nb, b, b) orthogonal blocks from packed skew params (nb, p).
+
+    Matches ref.cayley_neumann to float32 accuracy.
+    """
+    nb, p = q_packed.shape
+    assert p == ref.packed_dim(b), (p, b)
+    idx, sign = ref.skew_index_maps(b)
+    qpad = jnp.concatenate([q_packed, jnp.zeros((nb, 1), q_packed.dtype)], axis=1)
+    return pl.pallas_call(
+        functools.partial(_cnp_kernel, b=b, k=k),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, p + 1), lambda i: (i, 0)),
+            pl.BlockSpec((b * b,), lambda i: (0,)),
+            pl.BlockSpec((b * b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, b, b), q_packed.dtype),
+        interpret=True,
+    )(qpad, idx, sign)
+
+
+def _skew_kernel(qp_ref, idx_ref, sign_ref, o_ref, *, b: int):
+    qp = qp_ref[0]
+    o_ref[0] = (jnp.take(qp, idx_ref[...], axis=0) * sign_ref[...]).reshape(b, b)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def skew_build(q_packed: jax.Array, b: int) -> jax.Array:
+    """Packed -> dense skew-symmetric blocks only (the paper's CUDA kernel
+    in isolation). (nb, p) -> (nb, b, b)."""
+    nb, p = q_packed.shape
+    assert p == ref.packed_dim(b), (p, b)
+    idx, sign = ref.skew_index_maps(b)
+    qpad = jnp.concatenate([q_packed, jnp.zeros((nb, 1), q_packed.dtype)], axis=1)
+    return pl.pallas_call(
+        functools.partial(_skew_kernel, b=b),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, p + 1), lambda i: (i, 0)),
+            pl.BlockSpec((b * b,), lambda i: (0,)),
+            pl.BlockSpec((b * b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, b, b), q_packed.dtype),
+        interpret=True,
+    )(qpad, idx, sign)
+
+
+def vmem_bytes(b: int, k: int) -> int:
+    """Static VMEM working-set estimate for one CNP program (f32):
+    packed vector + gather maps + Q + two accumulators + output tile.
+    Used by the perf notes in DESIGN.md / EXPERIMENTS.md §Perf."""
+    p = ref.packed_dim(b) + 1
+    words = p + 2 * b * b  # packed + idx/sign maps (idx i32 counts as word)
+    words += 4 * b * b  # Q, term, acc, out
+    return 4 * words

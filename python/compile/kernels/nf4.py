@@ -1,0 +1,70 @@
+"""Pallas kernel: NF4 dequantization (QLoRA-style, double-quantized).
+
+Layout (see ref.nf4_quantize / rust/src/quant/nf4.rs — byte-identical):
+  codes    (npad/2,)  uint8 — two 4-bit NF4 codes per byte (hi = even idx)
+  absmax_q (nblocks,) int8  — per-64-element-block absmax, double-quantized
+  absmax_s (ngroups,) f32   — per-256-block group scale for absmax_q
+  offset   (1,)       f32   — double-quant offset (mean absmax)
+
+One grid program dequantizes one double-quant group (NF4_TILE = 16384
+elements = 8192 bytes = 256 blocks): the group boundary makes the scale a
+per-program scalar, so the kernel touches exactly one absmax_s element and
+one contiguous slab of codes — a clean HBM->VMEM stream with no gather
+across programs. The 16-level codebook lives in VMEM as a constant.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_BLOCK, NF4_CODE, NF4_GROUP, NF4_TILE
+
+
+def _nf4_kernel(codes_ref, amq_ref, ams_ref, off_ref, lut_ref, o_ref):
+    codes = codes_ref[...]
+    hi = (codes >> 4).astype(jnp.int32)
+    lo = (codes & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=1).reshape(-1)  # (TILE,)
+    vals = jnp.take(lut_ref[...], idx, axis=0)
+    am = (
+        amq_ref[...].astype(jnp.float32) / 127.0 * ams_ref[0] + off_ref[0]
+    )  # (NF4_GROUP,)
+    o_ref[...] = (vals.reshape(NF4_GROUP, NF4_BLOCK) * am[:, None]).reshape(-1)
+
+
+@jax.jit
+def nf4_dequant_flat(codes, absmax_q, absmax_s, offset):
+    """Dequantize to the padded flat float32 array (npad,)."""
+    nbytes = codes.shape[0]
+    npad = nbytes * 2
+    assert npad % NF4_TILE == 0, npad
+    ng = npad // NF4_TILE
+    return pl.pallas_call(
+        _nf4_kernel,
+        grid=(ng,),
+        in_specs=[
+            pl.BlockSpec((NF4_TILE // 2,), lambda i: (i,)),
+            pl.BlockSpec((NF4_GROUP,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((NF4_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(codes, absmax_q, absmax_s, offset, jnp.asarray(NF4_CODE))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape"))
+def nf4_dequant(codes, absmax_q, absmax_s, offset, n: int, shape):
+    """Dequantize to the original (unpadded) shape."""
+    flat = nf4_dequant_flat(codes, absmax_q, absmax_s, offset)
+    return flat[:n].reshape(shape)
+
+
+def packed_sizes(n: int):
+    """(nbytes, nblocks, ngroups) for an n-element tensor after padding."""
+    npad = n + ((-n) % NF4_TILE)
+    return npad // 2, npad // NF4_BLOCK, npad // NF4_TILE

@@ -1,0 +1,302 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+compare each Pallas kernel against the function of the same name here.
+They are also used directly inside L2 graphs where a kernel is not the
+right tool (e.g. the differentiable CNP build in the train step).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Skew-symmetric packing
+# ---------------------------------------------------------------------------
+
+
+def packed_dim(b: int) -> int:
+    """Number of packed parameters for a b x b skew-symmetric matrix."""
+    return b * (b - 1) // 2
+
+
+def skew_index_maps(b: int):
+    """Static gather index map + sign mask used to reconstruct a dense
+    skew-symmetric matrix from its packed upper triangle.
+
+    Returns (idx, sign) with shapes (b*b,). `idx[i*b+j]` indexes into the
+    packed vector *padded with one trailing zero* (position `packed_dim(b)`),
+    and `sign` is +1 above the diagonal, -1 below, 0 on it.
+
+    This is the TPU-friendly replacement for the paper's CUDA scatter
+    kernel: scatters become a static vectorized gather.
+    """
+    p = packed_dim(b)
+    idx = np.full((b, b), p, dtype=np.int32)  # default: the zero pad slot
+    sign = np.zeros((b, b), dtype=np.float32)
+    k = 0
+    for i in range(b):
+        for j in range(i + 1, b):
+            idx[i, j] = k
+            idx[j, i] = k
+            sign[i, j] = 1.0
+            sign[j, i] = -1.0
+            k += 1
+    assert k == p
+    return jnp.asarray(idx.reshape(-1)), jnp.asarray(sign.reshape(-1))
+
+
+def skew_from_packed(q_packed: jax.Array, b: int) -> jax.Array:
+    """(..., p) packed upper triangle -> (..., b, b) skew-symmetric."""
+    idx, sign = skew_index_maps(b)
+    qpad = jnp.concatenate(
+        [q_packed, jnp.zeros(q_packed.shape[:-1] + (1,), q_packed.dtype)], axis=-1
+    )
+    flat = jnp.take(qpad, idx, axis=-1) * sign
+    return flat.reshape(q_packed.shape[:-1] + (b, b))
+
+
+def packed_from_skew(q: jax.Array) -> jax.Array:
+    """(..., b, b) skew-symmetric -> (..., p) packed upper triangle."""
+    b = q.shape[-1]
+    iu = np.triu_indices(b, k=1)
+    return q[..., iu[0], iu[1]]
+
+
+# ---------------------------------------------------------------------------
+# Cayley transforms
+# ---------------------------------------------------------------------------
+
+
+def cayley_exact(q_packed: jax.Array, b: int) -> jax.Array:
+    """Exact Cayley transform R = (I+Q)(I-Q)^{-1} per block.
+
+    q_packed: (nb, p). Returns (nb, b, b). This is the original OFT
+    parameterization (with the matrix inverse the paper removes).
+    """
+    q = skew_from_packed(q_packed, b)
+    eye = jnp.eye(b, dtype=q.dtype)
+    # R (I-Q) = (I+Q)  =>  (I-Q)^T R^T = (I+Q)^T
+    lhs = jnp.swapaxes(eye - q, -1, -2)
+    rhs = jnp.swapaxes(eye + q, -1, -2)
+    rt = jnp.linalg.solve(lhs, rhs)
+    return jnp.swapaxes(rt, -1, -2)
+
+
+def cayley_neumann(q_packed: jax.Array, b: int, k: int) -> jax.Array:
+    """Cayley-Neumann parameterization (CNP, Qiu et al. 2025):
+
+        R = (I+Q)(I-Q)^{-1} approx (I+Q)(I + sum_{i=1..k} Q^i)
+
+    q_packed: (nb, p). Returns (nb, b, b). Differentiable; used in the
+    train-step graph (and mirrored by the Pallas kernel in cnp.py).
+    """
+    q = skew_from_packed(q_packed, b)
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=q.dtype), q.shape)
+    acc = eye
+    term = eye
+    for _ in range(k):
+        term = term @ q
+        acc = acc + term
+    return (eye + q) @ acc
+
+
+def orthogonality_error(r: jax.Array) -> jax.Array:
+    """max_block ||R^T R - I||_F — the approximate-orthogonality metric."""
+    b = r.shape[-1]
+    eye = jnp.eye(b, dtype=r.dtype)
+    g = jnp.swapaxes(r, -1, -2) @ r - eye
+    return jnp.max(jnp.sqrt(jnp.sum(g * g, axis=(-1, -2))))
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal rotation (the input-centric OFTv2 hot path)
+# ---------------------------------------------------------------------------
+
+
+def block_rotate(x: jax.Array, r_blocks: jax.Array) -> jax.Array:
+    """y[:, i*b:(i+1)*b] = x[:, i*b:(i+1)*b] @ R_i  (row convention).
+
+    x: (m, d); r_blocks: (nb, b, b) with nb*b == d. Equivalent to the
+    paper's input-side transform R^T x in column convention.
+    """
+    m, d = x.shape
+    nb, b, _ = r_blocks.shape
+    assert nb * b == d, (nb, b, d)
+    xb = x.reshape(m, nb, b)
+    yb = jnp.einsum("mnb,nbc->mnc", xb, r_blocks)
+    return yb.reshape(m, d)
+
+
+def block_rotate_grad_r(x: jax.Array, dy: jax.Array, nb: int, b: int) -> jax.Array:
+    """dR_i = x_i^T @ dy_i summed over rows. Returns (nb, b, b)."""
+    m, d = x.shape
+    xb = x.reshape(m, nb, b)
+    dyb = dy.reshape(m, nb, b)
+    return jnp.einsum("mnb,mnc->nbc", xb, dyb)
+
+
+def blockdiag_dense(r_blocks: jax.Array, d: int) -> jax.Array:
+    """Materialize the dense (d, d) block-diagonal matrix (weight-centric
+    baseline only — this is the thing OFTv2 avoids)."""
+    nb, b, _ = r_blocks.shape
+    eye = jnp.eye(nb, dtype=r_blocks.dtype)
+    # (nb, nb, b, b) -> (nb*b, nb*b)
+    dense = jnp.einsum("pq,pbc->pbqc", eye, r_blocks)
+    return dense.reshape(d, d)
+
+
+# ---------------------------------------------------------------------------
+# NF4 quantization (QLoRA-style, with double quantization)
+# ---------------------------------------------------------------------------
+
+# The 16 NormalFloat4 levels from Dettmers et al. 2023 (bitsandbytes).
+NF4_CODE = np.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+NF4_BLOCK = 64  # elements per absmax block
+NF4_GROUP = 256  # absmax values per double-quantization group
+NF4_TILE = NF4_BLOCK * NF4_GROUP  # flat elements handled per kernel program
+
+
+def nf4_quantize(w: np.ndarray):
+    """Quantize a float array to NF4 with double quantization.
+
+    Mirrors rust/src/quant/nf4.rs byte-for-byte. Returns a dict:
+      codes      (npad/2,) uint8   two 4-bit codes per byte (hi = even idx)
+      absmax_q   (nblocks,) int8   double-quantized per-block absmax
+      absmax_s   (ngroups,) float32 per-group scale for absmax_q
+      offset     (1,)       float32 mean absmax (double-quant offset)
+      n, shape                     original element count / shape
+
+    The flat length is padded to NF4_TILE so the Pallas dequant kernel can
+    use one double-quant group per program.
+    """
+    shape = w.shape
+    flat = np.asarray(w, dtype=np.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % NF4_TILE
+    flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    nb = flat.size // NF4_BLOCK
+    blocks = flat.reshape(nb, NF4_BLOCK)
+    absmax = np.abs(blocks).max(axis=1)
+    absmax = np.maximum(absmax, 1e-12)
+    # double quantization of absmax: int8 with per-group scale around offset
+    offset = np.float32(absmax.mean())
+    ng = nb // NF4_GROUP
+    am_groups = (absmax - offset).reshape(ng, NF4_GROUP)
+    am_scale = np.abs(am_groups).max(axis=1)
+    am_scale = np.maximum(am_scale, 1e-12).astype(np.float32)
+    am_q = np.clip(np.round(am_groups / am_scale[:, None] * 127.0), -127, 127).astype(
+        np.int8
+    )
+    # reconstructed absmax (what dequant will see) — quantize codes against it
+    am_rec = am_q.astype(np.float32) / 127.0 * am_scale[:, None] + offset
+    am_rec = am_rec.reshape(nb)
+    am_rec = np.where(np.abs(am_rec) < 1e-12, 1e-12, am_rec)
+    normed = blocks / am_rec[:, None]
+    # nearest NF4 level
+    dist = np.abs(normed.reshape(-1, 1) - NF4_CODE[None, :])
+    codes = dist.argmin(axis=1).astype(np.uint8)
+    hi = codes[0::2]
+    lo = codes[1::2]
+    packed = ((hi << 4) | lo).astype(np.uint8)
+    return {
+        "codes": packed,
+        "absmax_q": am_q.reshape(-1),
+        "absmax_s": am_scale,
+        "offset": np.array([offset], np.float32),
+        "n": n,
+        "shape": shape,
+    }
+
+
+def nf4_dequant_ref(codes, absmax_q, absmax_s, offset, n, shape):
+    """Reference dequantization (jnp). Returns float32 array of `shape`."""
+    codes = jnp.asarray(codes)
+    hi = (codes >> 4).astype(jnp.int32)
+    lo = (codes & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=1).reshape(-1)
+    lut = jnp.asarray(NF4_CODE)
+    vals = lut[idx]
+    nb = vals.shape[0] // NF4_BLOCK
+    ng = nb // NF4_GROUP
+    am = (
+        jnp.asarray(absmax_q).astype(jnp.float32).reshape(ng, NF4_GROUP)
+        / 127.0
+        * jnp.asarray(absmax_s).reshape(ng, 1)
+        + jnp.asarray(offset).reshape(1, 1)
+    ).reshape(nb)
+    out = vals.reshape(nb, NF4_BLOCK) * am[:, None]
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# AWQ-style groupwise int4 quantization
+# ---------------------------------------------------------------------------
+
+AWQ_GROUP = 64  # rows (input-dim) per scale group
+
+
+def awq_quantize(w: np.ndarray, act_scale=None):
+    """Groupwise symmetric int4 quantization with activation-aware
+    per-input-channel equalization (the AWQ idea: scale salient channels
+    up before quantization so they get a finer effective step; divide the
+    equalization back out at dequant time).
+
+    w: (din, dout) float. Returns dict:
+      codes  (din//2, dout) uint8 — rows 2i (hi nibble) and 2i+1 (lo nibble)
+      scales (din//AWQ_GROUP, dout) float32 — per-(group, out-channel)
+      eq     (din,) float32 — per-input-channel equalization (sqrt act scale)
+    Requires din % AWQ_GROUP == 0.
+    """
+    din, dout = w.shape
+    assert din % AWQ_GROUP == 0, (din, AWQ_GROUP)
+    w = np.asarray(w, np.float32)
+    if act_scale is None:
+        act_scale = np.ones(din, np.float32)
+    s_eq = np.sqrt(np.maximum(np.asarray(act_scale, np.float32), 1e-6)).astype(np.float32)
+    g = din // AWQ_GROUP
+    weq = w * s_eq[:, None]
+    wg = weq.reshape(g, AWQ_GROUP, dout)
+    absmax = np.maximum(np.abs(wg).max(axis=1), 1e-12)  # (g, dout)
+    scales = (absmax / 7.0).astype(np.float32)
+    q = np.clip(np.round(wg / scales[:, None, :]), -8, 7).astype(np.int32)
+    q = q.reshape(din, dout)
+    u = (q + 8).astype(np.uint8)
+    hi = u[0::2, :]
+    lo = u[1::2, :]
+    codes = ((hi << 4) | lo).astype(np.uint8)
+    return {"codes": codes, "scales": scales, "eq": s_eq}
+
+
+def awq_dequant_ref(codes, scales, eq):
+    """Reference dequantization: w = q * scales[group] / eq[row]."""
+    codes = jnp.asarray(codes)
+    hi = (codes >> 4).astype(jnp.int32) - 8
+    lo = (codes & 0xF).astype(jnp.int32) - 8
+    din2, dout = codes.shape
+    q = jnp.stack([hi, lo], axis=1).reshape(din2 * 2, dout).astype(jnp.float32)
+    g = scales.shape[0]
+    rep = (din2 * 2) // g
+    s = jnp.repeat(jnp.asarray(scales), rep, axis=0)
+    return q * s / jnp.asarray(eq)[:, None]

@@ -1,0 +1,376 @@
+"""L2: decoder-only transformer with pluggable PEFT adapters (OFTv2 paper).
+
+Every method from the paper is a first-class `method` on the same model:
+
+  full        all parameters trainable ("pretraining" for the harness)
+  none        frozen base (baseline evaluation)
+  lora        W x + (alpha/r) B A x                      [Hu et al. 2022]
+  oft_merged  (R W) x  — weight-centric OFT, cubic merge [Qiu et al. 2023]
+  oft_v2      W (R^T x) — input-centric OFTv2, matrix-free (this paper)
+  qlora       LoRA over NF4/AWQ-quantized frozen weights [Dettmers 2023]
+  qoft        OFTv2 over NF4/AWQ-quantized frozen weights (this paper)
+
+The train step differentiates through the Pallas block-rotate kernel via
+its custom VJP; CNP (Cayley-Neumann) is built with the differentiable jnp
+reference. Inference graphs (eval_loss / logits_last) run the full Pallas
+path (cnp.cnp_build + rotate).
+
+Parameters are name-keyed dicts; graph input order is the sorted name
+order recorded in manifest.json (see aot.py) — the Rust coordinator
+uploads buffers in exactly that order and never reorders.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelCfg
+from .kernels import awq as awq_k
+from .kernels import cnp as cnp_k
+from .kernels import nf4 as nf4_k
+from .kernels import ref
+from .kernels.rotate import rotate_nd
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter inventory
+# ---------------------------------------------------------------------------
+
+
+def linear_names(cfg: ModelCfg):
+    """(name, din, dout) for every adapted linear layer."""
+    out = []
+    d, f = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layers):
+        for proj in ("wq", "wk", "wv", "wo"):
+            out.append((f"layers.{i}.attn.{proj}", d, d))
+        out.append((f"layers.{i}.mlp.up", d, f))
+        out.append((f"layers.{i}.mlp.down", f, d))
+    return out
+
+
+def base_param_specs(cfg: ModelCfg):
+    """name -> (shape, init) for the base (pretrained) parameters."""
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs = {
+        "embed.tok": ((v, d), ("normal", 0.02)),
+        "embed.pos": ((t, d), ("normal", 0.01)),
+        "final_norm": ((d,), ("ones", 0.0)),
+        "lm_head": ((d, v), ("normal", 0.02)),
+    }
+    for i in range(cfg.n_layers):
+        specs[f"layers.{i}.attn.norm"] = ((d,), ("ones", 0.0))
+        specs[f"layers.{i}.mlp.norm"] = ((d,), ("ones", 0.0))
+    for name, din, dout in linear_names(cfg):
+        specs[name] = ((din, dout), ("normal", 0.02))
+    return specs
+
+
+def adapter_param_specs(cfg: ModelCfg):
+    """name -> (shape, init) for the trainable adapter parameters."""
+    specs = {}
+    if cfg.method in ("lora", "qlora"):
+        r = cfg.lora_r
+        for name, din, dout in linear_names(cfg):
+            specs[f"{name}.lora_a"] = ((din, r), ("normal", 0.01))
+            specs[f"{name}.lora_b"] = ((r, dout), ("zeros", 0.0))
+    elif cfg.method in ("oft_merged", "oft_v2", "qoft"):
+        b = cfg.block_b
+        p = ref.packed_dim(b)
+        for name, din, dout in linear_names(cfg):
+            specs[f"{name}.oft_q"] = ((din // b, p), ("zeros", 0.0))
+    return specs
+
+
+def trainable_names(cfg: ModelCfg):
+    if cfg.method == "full":
+        return sorted(base_param_specs(cfg).keys())
+    if cfg.method == "none":
+        return []
+    return sorted(adapter_param_specs(cfg).keys())
+
+
+def frozen_names(cfg: ModelCfg):
+    """Base parameters kept in f32 as graph inputs (everything for
+    full-precision methods; all *non-quantized* tensors for q-methods)."""
+    if cfg.method == "full":
+        return []
+    base = sorted(base_param_specs(cfg).keys())
+    if cfg.method in ("qlora", "qoft"):
+        quantized = {name for name, _, _ in linear_names(cfg)}
+        base = [n for n in base if n not in quantized]
+    return base
+
+
+def quantized_specs(cfg: ModelCfg):
+    """Packed-tensor specs for quantized base weights, in graph order.
+
+    Returns list of (input_name, base_name, shape, dtype) with dtype one of
+    u8 | i8 | f32. Shapes follow the packing in kernels/ref.py (NF4) and
+    kernels/awq.py, and are mirrored by rust/src/quant.
+    """
+    if cfg.method not in ("qlora", "qoft"):
+        return []
+    out = []
+    for name, din, dout in linear_names(cfg):
+        n = din * dout
+        if cfg.quant == "nf4":
+            nbytes, nblocks, ngroups = nf4_k.packed_sizes(n)
+            out.append((f"{name}.nf4_codes", name, (nbytes,), "u8"))
+            out.append((f"{name}.nf4_absmax_q", name, (nblocks,), "i8"))
+            out.append((f"{name}.nf4_absmax_s", name, (ngroups,), "f32"))
+            out.append((f"{name}.nf4_offset", name, (1,), "f32"))
+        else:  # awq
+            g = din // ref.AWQ_GROUP
+            out.append((f"{name}.awq_codes", name, (din // 2, dout), "u8"))
+            out.append((f"{name}.awq_scales", name, (g, dout), "f32"))
+            out.append((f"{name}.awq_eq", name, (din,), "f32"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Orthogonal-matrix construction
+# ---------------------------------------------------------------------------
+
+
+def schulz_inverse(a: jax.Array, iters: int) -> jax.Array:
+    """Newton-Schulz iteration X <- X(2I - A X) for A^{-1} (batched).
+
+    Used for the *exact* Cayley baseline inside AOT graphs: LAPACK-backed
+    jnp.linalg.solve lowers to custom-calls the standalone PJRT CPU plugin
+    does not register, so we use a pure-matmul inverse instead. Converges
+    quadratically for ||I - A|| < 1, which holds for A = I - Q in the OFT
+    regime (Q starts at 0 and stays small — same argument as the paper's
+    Neumann convergence note).
+    """
+    b = a.shape[-1]
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=a.dtype), a.shape)
+    x = eye
+    for _ in range(iters):
+        x = x @ (2.0 * eye - a @ x)
+    return x
+
+
+def cayley_schulz(q_packed: jax.Array, b: int, iters: int) -> jax.Array:
+    """Exact Cayley R = (I+Q)(I-Q)^{-1} with a Newton-Schulz inverse."""
+    q = ref.skew_from_packed(q_packed, b)
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=q.dtype), q.shape)
+    return (eye + q) @ schulz_inverse(eye - q, iters)
+
+
+def build_r_blocks(cfg: ModelCfg, q_packed: jax.Array, *, trainable: bool):
+    """(nb, p) packed -> (nb, b, b) orthogonal blocks, method-appropriate.
+
+    trainable=True (train step) uses differentiable jnp builds; inference
+    graphs use the fused Pallas CNP kernel.
+    """
+    b = cfg.block_b
+    if cfg.method == "oft_merged" and cfg.cayley == "schulz":
+        return cayley_schulz(q_packed, b, cfg.schulz_iters)
+    if trainable:
+        return ref.cayley_neumann(q_packed, b, cfg.neumann_k)
+    return cnp_k.cnp_build(q_packed, b, cfg.neumann_k)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _base_weight(cfg: ModelCfg, params: dict, name: str) -> jax.Array:
+    """Fetch a linear weight: f32 input, or dequantized NF4/AWQ packs."""
+    if cfg.method in ("qlora", "qoft"):
+        if cfg.quant == "nf4":
+            din, dout = _linear_shape(cfg, name)
+            return nf4_k.nf4_dequant(
+                params[f"{name}.nf4_codes"],
+                params[f"{name}.nf4_absmax_q"],
+                params[f"{name}.nf4_absmax_s"],
+                params[f"{name}.nf4_offset"],
+                din * dout,
+                (din, dout),
+            )
+        return awq_k.awq_dequant(
+            params[f"{name}.awq_codes"],
+            params[f"{name}.awq_scales"],
+            params[f"{name}.awq_eq"],
+        )
+    return params[name]
+
+
+@functools.lru_cache(maxsize=None)
+def _linear_shapes_cached(cfg: ModelCfg):
+    return {name: (din, dout) for name, din, dout in linear_names(cfg)}
+
+
+def _linear_shape(cfg: ModelCfg, name: str):
+    return _linear_shapes_cached(cfg)[name]
+
+
+def adapted_linear(cfg: ModelCfg, params: dict, name: str, x: jax.Array, *, trainable: bool) -> jax.Array:
+    """Apply one adapted linear layer to x (..., din) -> (..., dout)."""
+    w = _base_weight(cfg, params, name)
+    method = cfg.method
+    if method in ("lora", "qlora"):
+        a, bb = params[f"{name}.lora_a"], params[f"{name}.lora_b"]
+        scale = cfg.lora_alpha / cfg.lora_r
+        return x @ w + ((x @ a) @ bb) * scale
+    if method in ("oft_v2", "qoft"):
+        # Input-centric (the paper's contribution): z = W^T (R^T x).
+        # Training graph: the differentiable jnp rotate — XLA fuses the
+        # per-block einsum into batched GEMMs, the CPU analogue of the
+        # cuBLAS path the paper benchmarks (Pallas interpret=True is a
+        # serial emulation whose timing is not TPU-indicative; see
+        # DESIGN.md §8). Inference graphs run the real Pallas kernel.
+        r_blocks = build_r_blocks(cfg, params[f"{name}.oft_q"], trainable=trainable)
+        if trainable:
+            return _rotate_nd_ref(x, r_blocks) @ w
+        return rotate_nd(x, r_blocks) @ w
+    if method == "oft_merged":
+        # Weight-centric baseline: materialize blockdiag(R) @ W each
+        # forward — the cubic matrix-matrix product OFTv2 eliminates.
+        r_blocks = build_r_blocks(cfg, params[f"{name}.oft_q"], trainable=trainable)
+        din = w.shape[0]
+        r_dense = ref.blockdiag_dense(r_blocks, din)
+        return x @ (r_dense @ w)
+    return x @ w  # full / none
+
+
+def _rotate_nd_ref(x: jax.Array, r_blocks: jax.Array) -> jax.Array:
+    """jnp block rotation over the last axis (differentiable train path)."""
+    lead, d = x.shape[:-1], x.shape[-1]
+    y = ref.block_rotate(x.reshape(-1, d), r_blocks)
+    return y.reshape(*lead, d)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def forward(cfg: ModelCfg, params: dict, tokens: jax.Array, *, trainable: bool) -> jax.Array:
+    """tokens (B, T) int32 -> logits (B, T, V)."""
+    bsz, t = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = jnp.take(params["embed.tok"], tokens, axis=0)
+    x = x + params["embed.pos"][:t][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}"
+        xn = rmsnorm(x, params[f"{pre}.attn.norm"])
+        q = adapted_linear(cfg, params, f"{pre}.attn.wq", xn, trainable=trainable)
+        k = adapted_linear(cfg, params, f"{pre}.attn.wk", xn, trainable=trainable)
+        v = adapted_linear(cfg, params, f"{pre}.attn.wv", xn, trainable=trainable)
+        q = q.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+        x = x + adapted_linear(cfg, params, f"{pre}.attn.wo", o, trainable=trainable)
+        xn = rmsnorm(x, params[f"{pre}.mlp.norm"])
+        hdn = adapted_linear(cfg, params, f"{pre}.mlp.up", xn, trainable=trainable)
+        hdn = jax.nn.gelu(hdn)
+        x = x + adapted_linear(cfg, params, f"{pre}.mlp.down", hdn, trainable=trainable)
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+def loss_fn(cfg: ModelCfg, params: dict, tokens: jax.Array, mask: jax.Array):
+    """tokens (B, T+1) i32, mask (B, T) f32 -> (mean_nll, token_count)."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, params, inputs, trainable=True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    total = jnp.sum(nll * mask)
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / count, count
+
+
+# ---------------------------------------------------------------------------
+# Graphs exported by aot.py
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelCfg):
+    """Returns f(trainables, m, v, fixed, tokens, mask, lr, t) ->
+    (new_trainables + new_m + new_v + [loss]) as one flat tuple.
+
+    `trainables`/`m`/`v` are lists ordered by trainable_names(cfg);
+    `fixed` is frozen f32 params followed by quantized packs (graph order
+    per manifest). Adam with bias correction; frozen tensors pass through
+    untouched (they are *inputs*, so artifacts stay small and upload
+    happens once — see DESIGN.md §7).
+    """
+    tn = trainable_names(cfg)
+    fixed_names = frozen_names(cfg) + [q[0] for q in quantized_specs(cfg)]
+
+    def step(trainables, m, v, fixed, tokens, mask, lr, t):
+        params = dict(zip(tn, trainables))
+        params.update(dict(zip(fixed_names, fixed)))
+
+        def scalar_loss(tr_list):
+            p = dict(params)
+            p.update(dict(zip(tn, tr_list)))
+            return loss_fn(cfg, p, tokens, mask)[0]
+
+        loss, grads = jax.value_and_grad(scalar_loss)(list(trainables))
+        b1, b2, eps = ADAM_B1, ADAM_B2, ADAM_EPS
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        new_p, new_m, new_v = [], [], []
+        for p, mm, vv, g in zip(trainables, m, v, grads):
+            mm = b1 * mm + (1.0 - b1) * g
+            vv = b2 * vv + (1.0 - b2) * (g * g)
+            mhat = mm / bc1
+            vhat = vv / bc2
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return step
+
+
+def make_eval_loss(cfg: ModelCfg):
+    """f(trainables, fixed, tokens, mask) -> (sum_nll, token_count)."""
+    tn = trainable_names(cfg)
+    fixed_names = frozen_names(cfg) + [q[0] for q in quantized_specs(cfg)]
+
+    def eval_loss(trainables, fixed, tokens, mask):
+        params = dict(zip(tn, trainables))
+        params.update(dict(zip(fixed_names, fixed)))
+        inputs = tokens[:, :-1]
+        targets = tokens[:, 1:]
+        logits = forward(cfg, params, inputs, trainable=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return (jnp.sum(nll * mask), jnp.sum(mask))
+
+    return eval_loss
+
+
+def make_logits_last(cfg: ModelCfg):
+    """f(trainables, fixed, tokens (1, T) i32, cur_len i32) -> (logits (V,),).
+
+    Greedy decoding driver: the Rust coordinator appends argmax(logits)
+    and re-invokes. Causality makes padded positions > cur_len-1 inert.
+    """
+    tn = trainable_names(cfg)
+    fixed_names = frozen_names(cfg) + [q[0] for q in quantized_specs(cfg)]
+
+    def logits_last(trainables, fixed, tokens, cur_len):
+        params = dict(zip(tn, trainables))
+        params.update(dict(zip(fixed_names, fixed)))
+        logits = forward(cfg, params, tokens, trainable=False)  # (1, T, V)
+        idx = jnp.clip(cur_len - 1, 0, cfg.seq_len - 1)
+        row = jax.lax.dynamic_slice(logits, (0, idx, 0), (1, 1, cfg.vocab))
+        return (row.reshape(cfg.vocab),)
+
+    return logits_last

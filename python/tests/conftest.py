@@ -1,0 +1,14 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+_here = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_here, ".."))
+sys.path.insert(0, _here)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

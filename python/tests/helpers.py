@@ -1,0 +1,21 @@
+"""Shared test helpers (importable module, unlike conftest)."""
+
+import numpy as np
+
+
+def init_array(shape, kind, std, rng):
+    if kind == "zeros":
+        return np.zeros(shape, np.float32)
+    if kind == "ones":
+        return np.ones(shape, np.float32)
+    return (rng.standard_normal(shape) * std).astype(np.float32)
+
+
+def init_params(specs, names, rng):
+    """Initialize a list of arrays for `names` from a {name: (shape, init)}
+    spec dict — the python mirror of the Rust coordinator's initializer."""
+    out = []
+    for n in names:
+        shape, (kind, std) = specs[n]
+        out.append(init_array(shape, kind, std, rng))
+    return out

@@ -1,0 +1,78 @@
+"""AOT lowering contract: manifests must exactly describe the HLO graphs."""
+
+import json
+import re
+
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import PRESETS
+
+
+@pytest.fixture(scope="module")
+def tiny_bundle(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    aot.lower_bundle("tiny", "oft_v2", "none", str(root))
+    return root / "tiny_oft_v2"
+
+
+def hlo_entry_param_count(path) -> int:
+    """Count parameter instructions in the ENTRY computation of HLO text."""
+    text = path.read_text()
+    entry = text[text.index("ENTRY") :]
+    return len(re.findall(r"=\s*\S+\s+parameter\(\d+\)", entry))
+
+
+def test_manifest_schema(tiny_bundle):
+    man = json.loads((tiny_bundle / "manifest.json").read_text())
+    for key in ("tag", "method", "quant", "model", "inputs", "artifacts", "adam"):
+        assert key in man
+    assert man["method"] == "oft_v2"
+    assert [d["name"] for d in man["inputs"]["data"]] == ["tokens", "mask", "lr", "t"]
+    for e in man["inputs"]["trainable"]:
+        assert e["init"][0] in ("normal", "zeros", "ones")
+
+
+def test_train_step_input_count_matches_manifest(tiny_bundle):
+    man = json.loads((tiny_bundle / "manifest.json").read_text())
+    nt = len(man["inputs"]["trainable"])
+    nf = len(man["inputs"]["frozen"])
+    nq = len(man["inputs"]["quantized"])
+    want = 3 * nt + nf + nq + 4  # params,m,v + fixed + tokens,mask,lr,t
+    got = hlo_entry_param_count(tiny_bundle / "train_step.hlo.txt")
+    assert got == want, (got, want)
+
+
+def test_eval_and_logits_input_counts(tiny_bundle):
+    man = json.loads((tiny_bundle / "manifest.json").read_text())
+    nt = len(man["inputs"]["trainable"])
+    nfq = len(man["inputs"]["frozen"]) + len(man["inputs"]["quantized"])
+    assert hlo_entry_param_count(tiny_bundle / "eval_loss.hlo.txt") == nt + nfq + 2
+    assert hlo_entry_param_count(tiny_bundle / "logits_last.hlo.txt") == nt + nfq + 2
+
+
+def test_manifest_trainable_order_is_sorted(tiny_bundle):
+    man = json.loads((tiny_bundle / "manifest.json").read_text())
+    names = [e["name"] for e in man["inputs"]["trainable"]]
+    assert names == sorted(names)
+    assert names == M.trainable_names(PRESETS["tiny"].with_method("oft_v2"))
+
+
+def test_quantized_manifest_shapes():
+    cfg = PRESETS["tiny"].with_method("qoft", "nf4")
+    specs = M.quantized_specs(cfg)
+    # 4 packed tensors per adapted linear
+    assert len(specs) == 4 * len(M.linear_names(cfg))
+    by_kind = {}
+    for name, base, shape, dt in specs:
+        kind = name.split(".")[-1]
+        by_kind.setdefault(kind, []).append((shape, dt))
+    assert all(dt == "u8" for _, dt in by_kind["nf4_codes"])
+    assert all(dt == "i8" for _, dt in by_kind["nf4_absmax_q"])
+    assert all(dt == "f32" for _, dt in by_kind["nf4_absmax_s"])
+
+
+def test_bundle_tags():
+    assert aot.bundle_tag("tiny", "oft_v2", "none") == "tiny_oft_v2"
+    assert aot.bundle_tag("bench", "qoft", "nf4") == "bench_qoft_nf4"

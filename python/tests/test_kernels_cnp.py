@@ -1,0 +1,132 @@
+"""Pallas CNP / skew kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model as M
+from compile.kernels import cnp, ref
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def rand_packed(nb, b, scale, seed):
+    r = np.random.default_rng(seed)
+    return (r.standard_normal((nb, ref.packed_dim(b))) * scale).astype(np.float32)
+
+
+@SET
+@given(
+    b=st.sampled_from([2, 4, 8, 16, 32]),
+    nb=st.integers(1, 6),
+    k=st.integers(1, 8),
+    scale=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cnp_kernel_matches_ref(b, nb, k, scale, seed):
+    qp = rand_packed(nb, b, scale, seed)
+    got = cnp.cnp_build(jnp.asarray(qp), b, k)
+    want = ref.cayley_neumann(jnp.asarray(qp), b, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@SET
+@given(
+    b=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    nb=st.integers(1, 4),
+    scale=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_skew_kernel_matches_ref(b, nb, scale, seed):
+    qp = rand_packed(nb, b, scale, seed)
+    got = cnp.skew_build(jnp.asarray(qp), b)
+    want = ref.skew_from_packed(jnp.asarray(qp), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@SET
+@given(
+    b=st.sampled_from([4, 8, 16]),
+    scale=st.floats(0.01, 0.6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_skew_is_skew_symmetric(b, scale, seed):
+    qp = rand_packed(3, b, scale, seed)
+    q = np.asarray(cnp.skew_build(jnp.asarray(qp), b))
+    np.testing.assert_allclose(q, -np.swapaxes(q, -1, -2), atol=0)
+    assert np.all(np.diagonal(q, axis1=-2, axis2=-1) == 0)
+
+
+def test_packed_roundtrip():
+    qp = rand_packed(5, 16, 0.5, 7)
+    q = ref.skew_from_packed(jnp.asarray(qp), 16)
+    back = ref.packed_from_skew(q)
+    np.testing.assert_allclose(np.asarray(back), qp, atol=0)
+
+
+def test_identity_at_zero():
+    """Q=0 must give R=I exactly — OFT's 'start from the pretrained
+    model' initialization (paper §3.3)."""
+    for k in (1, 3, 8):
+        r = np.asarray(cnp.cnp_build(jnp.zeros((4, ref.packed_dim(16)), jnp.float32), 16, k))
+        np.testing.assert_array_equal(r, np.broadcast_to(np.eye(16, dtype=np.float32), (4, 16, 16)))
+
+
+def test_orthogonality_error_decreases_with_k():
+    """CNP error ||R^T R - I|| shrinks as Neumann terms are added — the
+    paper's 'larger k leads to better approximation'. Because Q is
+    skew-symmetric the truncation residual alternates in parity, so the
+    error oscillates between odd and even k; the guarantee is monotone
+    along each parity class (k vs k+2). The cnp_vs_cayley bench plots
+    this parity effect."""
+    qp = rand_packed(8, 16, 0.04, 3)
+    errs = []
+    for k in range(1, 9):
+        r = cnp.cnp_build(jnp.asarray(qp), 16, k)
+        errs.append(float(ref.orthogonality_error(r)))
+    assert errs[-1] < errs[0] * 1e-2, errs
+    assert all(errs[i + 2] <= errs[i] * 1.05 for i in range(len(errs) - 2)), errs
+
+
+def test_exact_cayley_is_orthogonal():
+    qp = rand_packed(6, 16, 0.9, 11)
+    r = ref.cayley_exact(jnp.asarray(qp), 16)
+    assert float(ref.orthogonality_error(r)) < 1e-4
+
+
+def test_schulz_matches_solve():
+    """The AOT-safe Newton-Schulz exact Cayley equals the LAPACK one
+    (within the Schulz convergence radius ||Q||_2 < 1, which is the OFT
+    operating regime — Q starts at 0 and stays small)."""
+    qp = rand_packed(6, 16, 0.05, 13)
+    a = M.cayley_schulz(jnp.asarray(qp), 16, 12)
+    b_ = ref.cayley_exact(jnp.asarray(qp), 16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+def test_cnp_approaches_exact_cayley():
+    qp = rand_packed(4, 8, 0.05, 17)
+    exact = np.asarray(ref.cayley_exact(jnp.asarray(qp), 8))
+    err_prev = np.inf
+    for k in (1, 2, 4, 8):
+        got = np.asarray(cnp.cnp_build(jnp.asarray(qp), 8, k))
+        err = np.abs(got - exact).max()
+        assert err < err_prev + 1e-7
+        err_prev = err
+    assert err_prev < 1e-5
+
+
+def test_determinant_is_plus_one():
+    """Cayley produces rotations (SO(b)), not reflections (paper §3.3)."""
+    qp = rand_packed(5, 8, 0.4, 23)
+    r = np.asarray(ref.cayley_exact(jnp.asarray(qp), 8))
+    np.testing.assert_allclose(np.linalg.det(r), np.ones(5), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,k", [(16, 5), (32, 5), (64, 5), (32, 8)])
+def test_vmem_estimate_under_budget(b, k):
+    """Structural perf check: one CNP program's working set must stay far
+    below a TPU core's ~16MB VMEM (DESIGN.md §Hardware adaptation)."""
+    assert cnp.vmem_bytes(b, k) < 1 << 20

@@ -1,0 +1,125 @@
+"""NF4 / AWQ quantization: Pallas kernels vs oracles + error invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import awq, nf4, ref
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def nf4_roundtrip(w):
+    qz = ref.nf4_quantize(w)
+    wd = ref.nf4_dequant_ref(
+        qz["codes"], qz["absmax_q"], qz["absmax_s"], qz["offset"], qz["n"], qz["shape"]
+    )
+    return np.asarray(wd), qz
+
+
+@SET
+@given(
+    rows=st.sampled_from([1, 7, 64, 128]),
+    cols=st.sampled_from([16, 64, 256]),
+    scale=st.floats(0.01, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nf4_kernel_matches_ref(rows, cols, scale, seed):
+    w = (np.random.default_rng(seed).standard_normal((rows, cols)) * scale).astype(np.float32)
+    qz = ref.nf4_quantize(w)
+    want = ref.nf4_dequant_ref(
+        qz["codes"], qz["absmax_q"], qz["absmax_s"], qz["offset"], qz["n"], qz["shape"]
+    )
+    got = nf4.nf4_dequant(
+        jnp.asarray(qz["codes"]),
+        jnp.asarray(qz["absmax_q"]),
+        jnp.asarray(qz["absmax_s"]),
+        jnp.asarray(qz["offset"]),
+        qz["n"],
+        tuple(qz["shape"]),
+    )
+    # rtol covers fp32 fma-order differences at large scales
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6, rtol=1e-6)
+
+
+@SET
+@given(scale=st.floats(0.01, 5.0), seed=st.integers(0, 2**31 - 1))
+def test_nf4_error_bound(scale, seed):
+    """Per-element |w - dq(q(w))| <= absmax * (max code gap / 2) + dq slack.
+    The widest NF4 gap is |-1.0 - -0.696| ≈ 0.304."""
+    w = (np.random.default_rng(seed).standard_normal((64, 64)) * scale).astype(np.float32)
+    wd, _ = nf4_roundtrip(w)
+    gap = np.max(np.diff(ref.NF4_CODE)) / 2
+    blocks = np.abs(w.reshape(-1, ref.NF4_BLOCK)).max(axis=1)
+    bound = np.repeat(blocks, ref.NF4_BLOCK).reshape(w.shape) * gap * 1.10 + 1e-4
+    assert np.all(np.abs(wd - w) <= bound)
+
+
+def test_nf4_preserves_dynamic_range():
+    """Dequantized values never exceed the (reconstructed) block absmax —
+    the property §4 leans on for QOFT's requantization argument."""
+    w = np.random.default_rng(0).standard_normal((128, 128)).astype(np.float32)
+    wd, qz = nf4_roundtrip(w)
+    blocks = np.abs(w.reshape(-1, ref.NF4_BLOCK)).max(axis=1)
+    # allow the double-quant absmax reconstruction slack
+    assert np.all(np.abs(wd.reshape(-1, ref.NF4_BLOCK)).max(axis=1) <= blocks * 1.05 + 1e-5)
+
+
+def test_nf4_codebook_pinned():
+    """The 16 NormalFloat4 levels are bit-for-bit the bitsandbytes ones."""
+    assert ref.NF4_CODE[0] == -1.0 and ref.NF4_CODE[-1] == 1.0 and ref.NF4_CODE[7] == 0.0
+    assert np.all(np.diff(ref.NF4_CODE) > 0)
+    assert abs(ref.NF4_CODE[8] - 0.07958029955625534) < 1e-12
+
+
+def test_nf4_zero_input():
+    wd, _ = nf4_roundtrip(np.zeros((64, 64), np.float32))
+    np.testing.assert_allclose(wd, 0.0, atol=1e-6)
+
+
+@SET
+@given(
+    din=st.sampled_from([64, 128, 256]),
+    dout=st.sampled_from([16, 64, 96]),
+    scale=st.floats(0.01, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_awq_kernel_matches_ref(din, dout, scale, seed):
+    w = (np.random.default_rng(seed).standard_normal((din, dout)) * scale).astype(np.float32)
+    qz = ref.awq_quantize(w)
+    want = ref.awq_dequant_ref(qz["codes"], qz["scales"], qz["eq"])
+    got = awq.awq_dequant(
+        jnp.asarray(qz["codes"]), jnp.asarray(qz["scales"]), jnp.asarray(qz["eq"])
+    )
+    # rtol covers fp32 fma-order differences at large scales
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6, rtol=1e-6)
+
+
+@SET
+@given(scale=st.floats(0.05, 2.0), seed=st.integers(0, 2**31 - 1))
+def test_awq_error_bound(scale, seed):
+    """Symmetric int4: |err| <= group-absmax / 7 / 2 per element."""
+    w = (np.random.default_rng(seed).standard_normal((128, 32)) * scale).astype(np.float32)
+    qz = ref.awq_quantize(w)
+    wd = np.asarray(ref.awq_dequant_ref(qz["codes"], qz["scales"], qz["eq"]))
+    g = 128 // ref.AWQ_GROUP
+    am = np.abs(w.reshape(g, ref.AWQ_GROUP, 32)).max(axis=1)
+    bound = np.repeat(am / 7.0 / 2.0 * 1.01 + 1e-6, ref.AWQ_GROUP, axis=0)
+    assert np.all(np.abs(wd - w) <= bound)
+
+
+def test_awq_activation_aware_helps_salient_channels():
+    """Scaling a salient input channel group up before quantization must
+    reduce its reconstruction error (the AWQ premise)."""
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((128, 64)).astype(np.float32)
+    w[:ref.AWQ_GROUP] *= 0.05  # salient-but-small rows get drowned by others
+    act = np.ones(128, np.float32)
+    plain = ref.awq_dequant_ref(**ref.awq_quantize(w))
+    act_aware = act.copy()
+    act_aware[:ref.AWQ_GROUP] = 16.0  # mark rows as salient
+    tuned = ref.awq_dequant_ref(**ref.awq_quantize(w, act_scale=act_aware))
+    err_plain = np.abs(np.asarray(plain)[:ref.AWQ_GROUP] - w[:ref.AWQ_GROUP]).mean()
+    err_tuned = np.abs(np.asarray(tuned)[:ref.AWQ_GROUP] - w[:ref.AWQ_GROUP]).mean()
+    assert err_tuned <= err_plain

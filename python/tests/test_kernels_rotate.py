@@ -1,0 +1,120 @@
+"""Pallas block-rotate kernel (OFTv2 hot path) vs oracle + VJP checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, rotate
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def rand_r(nb, b, seed, scale=None):
+    r = np.random.default_rng(seed)
+    # keep ||Q||_2 well inside the Neumann convergence radius (paper §3.3)
+    scale = 0.2 / np.sqrt(b) if scale is None else scale
+    qp = (r.standard_normal((nb, ref.packed_dim(b))) * scale).astype(np.float32)
+    return ref.cayley_neumann(jnp.asarray(qp), b, 6), jnp.asarray(qp)
+
+
+@SET
+@given(
+    m=st.sampled_from([1, 2, 3, 5, 8, 16, 64, 100]),
+    b=st.sampled_from([2, 4, 8, 16, 32]),
+    nb=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rotate_matches_ref(m, b, nb, seed):
+    r_blocks, _ = rand_r(nb, b, seed)
+    x = np.random.default_rng(seed + 1).standard_normal((m, nb * b)).astype(np.float32)
+    got = rotate.block_rotate(jnp.asarray(x), r_blocks)
+    want = ref.block_rotate(jnp.asarray(x), r_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    m=st.sampled_from([2, 8, 32]),
+    b=st.sampled_from([4, 8, 16]),
+    nb=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rotate_preserves_norm(m, b, nb, seed):
+    """Orthogonal R must preserve per-row L2 norm — the hyperspherical-
+    energy invariance OFT is built on."""
+    r_blocks, qp = rand_r(nb, b, seed, scale=0.02)
+    x = np.random.default_rng(seed + 1).standard_normal((m, nb * b)).astype(np.float32)
+    y = np.asarray(rotate.block_rotate(jnp.asarray(x), r_blocks))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-3
+    )
+
+
+def test_rotate_identity():
+    eye = jnp.broadcast_to(jnp.eye(8, dtype=jnp.float32), (4, 8, 8))
+    x = np.random.default_rng(0).standard_normal((16, 32)).astype(np.float32)
+    y = rotate.block_rotate(jnp.asarray(x), eye)
+    np.testing.assert_array_equal(np.asarray(y), x)
+
+
+def test_rotate_equals_dense_blockdiag():
+    r_blocks, _ = rand_r(4, 8, 5)
+    d = 32
+    x = np.random.default_rng(6).standard_normal((10, d)).astype(np.float32)
+    dense = ref.blockdiag_dense(r_blocks, d)
+    want = jnp.asarray(x) @ dense
+    got = rotate.block_rotate(jnp.asarray(x), r_blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@SET
+@given(
+    m=st.sampled_from([4, 16, 64]),
+    b=st.sampled_from([4, 8, 16]),
+    nb=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vjp_matches_ref(m, b, nb, seed):
+    """Custom VJP (Pallas bwd kernels) == autodiff of the jnp oracle,
+    for both dx and the chained dq through CNP."""
+    _, qp = rand_r(nb, b, seed)
+    x = np.random.default_rng(seed + 1).standard_normal((m, nb * b)).astype(np.float32)
+
+    def f_kernel(xx, qq):
+        return jnp.sum(jnp.sin(rotate.block_rotate(xx, ref.cayley_neumann(qq, b, 4))))
+
+    def f_ref(xx, qq):
+        return jnp.sum(jnp.sin(ref.block_rotate(xx, ref.cayley_neumann(qq, b, 4))))
+
+    gx_k, gq_k = jax.grad(f_kernel, argnums=(0, 1))(jnp.asarray(x), qp)
+    gx_r, gq_r = jax.grad(f_ref, argnums=(0, 1))(jnp.asarray(x), qp)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gq_k), np.asarray(gq_r), atol=1e-4)
+
+
+def test_grad_r_kernel_direct():
+    """The per-block accumulation kernel computes dR = x^T dy per block."""
+    nb, b, m = 3, 8, 40
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((m, nb * b)).astype(np.float32)
+    dy = rng.standard_normal((m, nb * b)).astype(np.float32)
+    got = rotate._grad_r_call(jnp.asarray(x), jnp.asarray(dy), nb, b)
+    want = ref.block_rotate_grad_r(jnp.asarray(x), jnp.asarray(dy), nb, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_rotate_nd_batched():
+    r_blocks, _ = rand_r(2, 8, 9)
+    x = np.random.default_rng(3).standard_normal((2, 5, 16)).astype(np.float32)
+    got = rotate.rotate_nd(jnp.asarray(x), r_blocks)
+    want = ref.block_rotate(jnp.asarray(x.reshape(10, 16)), r_blocks).reshape(2, 5, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_flops_model():
+    """Input-centric cost d*b per row — quadratic-in-d total, vs the
+    d*d*n merge (paper §3.2). Pure arithmetic, but keep it pinned."""
+    assert rotate.flops_per_row(1024, 32) == 1024 * 32
+    assert rotate.flops_per_row(1024, 32) * 128 < 1024 * 1024 * 1024

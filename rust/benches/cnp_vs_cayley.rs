@@ -1,0 +1,104 @@
+//! §3.3 — the Cayley–Neumann parameterization ablation:
+//!   (a) build time of CNP vs the "exact" Cayley (Newton–Schulz
+//!       inverse, the matmul-only stand-in for LAPACK `solve`) across
+//!       block sizes b ∈ {16, 32, 64};
+//!   (b) approximation error and orthogonality error of CNP vs the
+//!       number of Neumann terms k ∈ {1..8}, against the exact host
+//!       Cayley oracle.
+//!
+//! Shape targets: CNP builds faster than the inverse-based transform at
+//! every b; error decreases monotonically in k and is ≈0 by k=8 in the
+//! small-‖Q‖ finetuning regime.
+
+use oftv2::bench::{fmt_ms, print_table, quick_mode, Bench, Report};
+use oftv2::json::Json;
+use oftv2::peft;
+use oftv2::runtime::micro::MicroCatalog;
+use oftv2::runtime::{lit_f32, Engine};
+use oftv2::tensor::Tensor;
+use oftv2::util::rng::Rng;
+use oftv2::{artifacts_root, Result};
+
+fn main() -> Result<()> {
+    let iters = if quick_mode() { 5 } else { 20 };
+    let engine = Engine::cpu()?;
+    let cat = MicroCatalog::load(artifacts_root())?;
+    let mut report = Report::new("cnp_vs_cayley");
+
+    // ---- (a) build-time comparison --------------------------------------
+    let mut rows = Vec::new();
+    for b in [16usize, 32, 64] {
+        let cnp = cat.compile(&engine, &format!("cnp_b{b}"))?;
+        let exact = cat.compile(&engine, &format!("cayley_schulz_b{b}"))?;
+        let inputs = cnp.random_inputs(3, 0.02)?;
+        let t_cnp = Bench::new("cnp").warmup(2).iters(iters).run(|| {
+            cnp.run(&inputs).unwrap();
+        });
+        let t_exact = Bench::new("exact").warmup(2).iters(iters).run(|| {
+            exact.run(&inputs).unwrap();
+        });
+        rows.push(vec![
+            format!("{b}"),
+            fmt_ms(t_cnp.median),
+            fmt_ms(t_exact.median),
+            format!("{:.2}x", t_exact.median / t_cnp.median),
+        ]);
+        report.add_kv(vec![
+            ("b", Json::num(b as f64)),
+            ("cnp_secs", Json::num(t_cnp.median)),
+            ("exact_secs", Json::num(t_exact.median)),
+        ]);
+        assert!(
+            t_cnp.median < t_exact.median,
+            "b={b}: CNP ({}) should beat the inverse-based build ({})",
+            fmt_ms(t_cnp.median),
+            fmt_ms(t_exact.median)
+        );
+    }
+    print_table(
+        "§3.3a: orthogonal-matrix build time (32 blocks per call)",
+        &["block b", "CNP (k=5)", "exact Cayley (Schulz)", "speedup"],
+        &rows,
+    );
+
+    // ---- (b) error vs k --------------------------------------------------
+    let b = 32;
+    let p = peft::packed_dim(b);
+    let mut rng = Rng::new(7);
+    let packed: Vec<f32> = rng.normal_vec(32 * p, 0.02);
+    let exact0 = peft::cayley_exact(&packed[..p], b)?;
+    let mut rows = Vec::new();
+    let mut prev_err = f64::INFINITY;
+    for k in 1..=8usize {
+        let kern = cat.compile(&engine, &format!("cnp_b{b}_k{k}"))?;
+        let out = kern.run(&[lit_f32(&[32, p], &packed)?])?[0].to_vec::<f32>()?;
+        let r0 = Tensor::from_vec(&[b, b], out[..b * b].to_vec());
+        let approx_err = r0.max_abs_diff(&exact0) as f64;
+        let ortho_err = peft::orthogonality_error(&r0) as f64;
+        rows.push(vec![
+            format!("{k}"),
+            format!("{approx_err:.2e}"),
+            format!("{ortho_err:.2e}"),
+        ]);
+        report.add_kv(vec![
+            ("k", Json::num(k as f64)),
+            ("approx_err", Json::num(approx_err)),
+            ("ortho_err", Json::num(ortho_err)),
+        ]);
+        assert!(
+            approx_err <= prev_err * 1.2 + 1e-8,
+            "k={k}: error should not grow ({approx_err} vs {prev_err})"
+        );
+        prev_err = approx_err;
+    }
+    print_table(
+        "§3.3b: CNP error vs Neumann terms k (b=32, ||Q|| small)",
+        &["k", "|CNP - exact|_max", "||R^T R - I||_F"],
+        &rows,
+    );
+    println!("\n(paper: k=5 suffices; exact orthogonality is unnecessary in practice)");
+
+    let path = report.save()?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Fig. 4a/b/c — GPU memory across the Qwen2.5 family (0.5B–72B) for
+//! (a) OFT / LoRA / OFTv2 at BF16, (b) QLoRA / QOFT at NF4,
+//! (c) QLoRA / QOFT at AWQ. Analytic model (DESIGN.md §Substitutions).
+//!
+//! Shape targets: OFTv2 within a few % of LoRA at every scale; OFT
+//! diverges enormously with model size; quantized variants track each
+//! other and cut memory ~3-4x at large scales.
+
+use oftv2::bench::{print_table, Report};
+use oftv2::json::Json;
+use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::Result;
+
+const SIZES: [&str; 7] = ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"];
+
+fn main() -> Result<()> {
+    let shape = TrainShape::default();
+    let mut report = Report::new("fig4_memory_sweep");
+
+    let sweep = |title: &str,
+                 precision: Precision,
+                 methods: &[(&str, Method)],
+                 report: &mut Report| {
+        let mut rows = Vec::new();
+        for size in SIZES {
+            let spec = ModelSpec::qwen25(size);
+            let mut row = vec![spec.name.clone()];
+            for (label, m) in methods {
+                let gib = finetune_gib(&spec, *m, precision, shape);
+                row.push(format!("{gib:.1}"));
+                report.add_kv(vec![
+                    ("panel", Json::str(title)),
+                    ("model", Json::str(spec.name.clone())),
+                    ("method", Json::str(*label)),
+                    ("gib", Json::num(gib)),
+                ]);
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["model"];
+        headers.extend(methods.iter().map(|(l, _)| *l));
+        print_table(title, &headers, &rows);
+    };
+
+    sweep(
+        "Fig. 4a: BF16 (GiB)",
+        Precision::Bf16,
+        &[
+            ("OFT", Method::OftWeightCentric { b: 32 }),
+            ("LoRA", Method::Lora { r: 16 }),
+            ("OFTv2", Method::OftInputCentric { b: 32 }),
+        ],
+        &mut report,
+    );
+    sweep(
+        "Fig. 4b: NF4 (GiB)",
+        Precision::Nf4,
+        &[
+            ("QLoRA", Method::Lora { r: 16 }),
+            ("QOFT", Method::OftInputCentric { b: 32 }),
+        ],
+        &mut report,
+    );
+    sweep(
+        "Fig. 4c: AWQ (GiB)",
+        Precision::Awq4,
+        &[
+            ("QLoRA", Method::Lora { r: 16 }),
+            ("QOFT", Method::OftInputCentric { b: 32 }),
+        ],
+        &mut report,
+    );
+
+    // shape assertions
+    for size in SIZES {
+        let spec = ModelSpec::qwen25(size);
+        let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
+        let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
+        assert!(
+            (v2 - lora).abs() / lora < 0.10,
+            "{size}: OFTv2 {v2} vs LoRA {lora}"
+        );
+        for p in [Precision::Nf4, Precision::Awq4] {
+            let ql = finetune_gib(&spec, Method::Lora { r: 16 }, p, shape);
+            let qo = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, p, shape);
+            assert!((qo - ql).abs() / ql < 0.10, "{size}: QOFT {qo} vs QLoRA {ql}");
+        }
+    }
+    println!("\nshape checks OK: OFTv2/QOFT within 10% of LoRA/QLoRA at every scale");
+    let path = report.save()?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! §3.2 — the cubic-to-quadratic complexity claim, measured: per-call
+//! time of the weight-centric merge path (blockdiag(R)·W then x·(RW))
+//! vs the input-centric rotate path ((Rᵀx)·W) over d ∈ {256..2048},
+//! with the plain linear layer and LoRA as floors.
+//!
+//! Shape targets: the merge path's log-log slope ≈ 3 (cubic in d); the
+//! rotate path's ≈ 2 (quadratic); rotate_w stays within a small factor
+//! of base_w at every d, while merge_w blows up.
+
+use oftv2::bench::{fmt_ms, print_table, quick_mode, Bench, Report};
+use oftv2::json::Json;
+use oftv2::runtime::micro::MicroCatalog;
+use oftv2::runtime::Engine;
+use oftv2::util::stats::loglog_slope;
+use oftv2::{artifacts_root, Result};
+
+const DIMS: [usize; 4] = [256, 512, 1024, 2048];
+
+fn main() -> Result<()> {
+    let iters = if quick_mode() { 5 } else { 15 };
+    let engine = Engine::cpu()?;
+    let cat = MicroCatalog::load(artifacts_root())?;
+    let mut report = Report::new("kernel_scaling");
+
+    let mut rows = Vec::new();
+    let mut series: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for d in DIMS {
+        let mut row = vec![format!("{d}")];
+        for prefix in ["base_w", "lora_w", "rotate_w", "merge_w"] {
+            let name = format!("{prefix}_d{d}");
+            let k = cat.compile(&engine, &name)?;
+            let inputs = k.random_inputs(11, 0.02)?;
+            let s = Bench::new(&name)
+                .warmup(2)
+                .iters(iters)
+                .max_secs(10.0)
+                .run(|| {
+                    k.run(&inputs).unwrap();
+                });
+            row.push(fmt_ms(s.median));
+            series.entry(prefix).or_default().push(s.median);
+            report.add_kv(vec![
+                ("kernel", Json::str(prefix)),
+                ("d", Json::num(d as f64)),
+                ("median_secs", Json::num(s.median)),
+            ]);
+        }
+        rows.push(row);
+    }
+    print_table(
+        "§3.2 kernel scaling: per-call time vs hidden size d (128 rows)",
+        &["d", "base x@W", "LoRA", "OFTv2 rotate", "OFT merge"],
+        &rows,
+    );
+
+    // Theory line: FLOPs per call (exact, machine-independent). The
+    // rotate path adds rows·d·b MACs on top of the rows·d·n layer; the
+    // merge path adds the d·d·n matrix-matrix product (eq. 1 vs eq. 2).
+    let rows = 128.0;
+    let b = 32.0;
+    let flops_rotate: Vec<f64> = DIMS.iter().map(|&d| {
+        let d = d as f64;
+        rows * d * b + rows * d * d
+    }).collect();
+    let flops_merge: Vec<f64> = DIMS.iter().map(|&d| {
+        let d = d as f64;
+        d * d * d + rows * d * d
+    }).collect();
+    let xs: Vec<f64> = DIMS.iter().map(|&d| d as f64).collect();
+    println!(
+        "\nFLOP-count log-log slopes (theory): rotate {:.2} (quadratic), merge {:.2} (cubic)",
+        loglog_slope(&xs, &flops_rotate),
+        loglog_slope(&xs, &flops_merge),
+    );
+    let slope_rotate = loglog_slope(&xs, &series["rotate_w"]);
+    let slope_merge = loglog_slope(&xs, &series["merge_w"]);
+    println!(
+        "measured log-log slopes:            rotate {slope_rotate:.2}, merge {slope_merge:.2} \
+         (cache-level transitions inflate both on CPU)"
+    );
+    report.add_kv(vec![
+        ("slope_rotate", Json::num(slope_rotate)),
+        ("slope_merge", Json::num(slope_merge)),
+    ]);
+
+    // The paper-shape claims, robust to machine effects:
+    //  (1) the merge/rotate gap *grows* with d,
+    //  (2) at large d the merge dominates the layer cost while the
+    //      rotate path stays within a small factor of the plain layer.
+    let first = 0;
+    let last = DIMS.len() - 1;
+    let gap_small = series["merge_w"][first] / series["rotate_w"][first];
+    let gap_large = series["merge_w"][last] / series["rotate_w"][last];
+    println!(
+        "merge/rotate gap: {gap_small:.2}x at d={} -> {gap_large:.2}x at d={} \
+         (the paper's 10x-training-speedup driver)",
+        DIMS[first], DIMS[last]
+    );
+    report.add_kv(vec![
+        ("gap_small", Json::num(gap_small)),
+        ("gap_large", Json::num(gap_large)),
+    ]);
+    assert!(
+        gap_large > gap_small,
+        "merge/rotate gap should grow with d ({gap_small:.2} -> {gap_large:.2})"
+    );
+    assert!(
+        gap_large > 1.5,
+        "merge should be clearly slower at d={} ({gap_large:.2}x)",
+        DIMS[last]
+    );
+
+    let path = report.save()?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Table 11 (+ Figs. 5/7 memory captions) — Dreambooth-finetuning
+//! memory for Stable Diffusion 3.5 Medium/Large: LoRA vs OFTv2 vs
+//! QLoRA vs QOFT, from the analytic memory model over the MMDiT specs.
+//!
+//! Paper numbers: Medium — 38.00 / 38.02 / 35.03 / 35.02 GB;
+//!                Large  — 52.33 / 52.32 / 41.60 / 41.53 GB.
+//! Shape: LoRA ≈ OFTv2, QLoRA ≈ QOFT, quantized < full precision.
+
+use oftv2::bench::{print_table, Report};
+use oftv2::json::Json;
+use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::Result;
+
+fn main() -> Result<()> {
+    let shape = TrainShape {
+        batch: 1,  // Dreambooth default
+        seq: 4096, // 128x128 latent patches + text tokens
+        act_bytes: 2.0,
+        grad_checkpoint: false, // Dreambooth scripts keep activations
+    };
+    let mut report = Report::new("tab11_sd35_memory");
+
+    let mut rows = Vec::new();
+    let paper: [(&str, f64, f64); 4] = [
+        ("LoRA", 38.00, 52.33),
+        ("OFTv2", 38.02, 52.32),
+        ("QLoRA", 35.03, 41.60),
+        ("QOFT", 35.02, 41.53),
+    ];
+    let mut ours = std::collections::BTreeMap::new();
+    for (size, col) in [("medium", 0usize), ("large", 1usize)] {
+        let spec = ModelSpec::sd35(size);
+        for (label, m, p) in [
+            ("LoRA", Method::Lora { r: 16 }, Precision::Bf16),
+            ("OFTv2", Method::OftInputCentric { b: 32 }, Precision::Bf16),
+            ("QLoRA", Method::Lora { r: 16 }, Precision::Nf4),
+            ("QOFT", Method::OftInputCentric { b: 32 }, Precision::Nf4),
+        ] {
+            let gib = finetune_gib(&spec, m, p, shape);
+            ours.insert((label, size), gib);
+            report.add_kv(vec![
+                ("model", Json::str(spec.name.clone())),
+                ("method", Json::str(label)),
+                ("gib", Json::num(gib)),
+                (
+                    "paper_gib",
+                    Json::num(paper.iter().find(|(l, _, _)| *l == label).map(|r| if col == 0 { r.1 } else { r.2 }).unwrap()),
+                ),
+            ]);
+        }
+    }
+    for (label, p_med, p_lrg) in paper {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}", ours[&(label, "medium")]),
+            format!("{p_med:.2}"),
+            format!("{:.1}", ours[&(label, "large")]),
+            format!("{p_lrg:.2}"),
+        ]);
+    }
+    print_table(
+        "Table 11: SD3.5 Dreambooth finetuning memory (GiB)",
+        &["method", "Medium (ours)", "Medium (paper)", "Large (ours)", "Large (paper)"],
+        &rows,
+    );
+
+    // shape assertions
+    for size in ["medium", "large"] {
+        let lora = ours[&("LoRA", size)];
+        let v2 = ours[&("OFTv2", size)];
+        let ql = ours[&("QLoRA", size)];
+        let qo = ours[&("QOFT", size)];
+        assert!((v2 - lora).abs() / lora < 0.10, "{size}: OFTv2 vs LoRA");
+        assert!((qo - ql).abs() / ql < 0.10, "{size}: QOFT vs QLoRA");
+        assert!(qo < lora, "{size}: quantized must beat full precision");
+    }
+    println!("\nshape checks OK: LoRA ≈ OFTv2, QLoRA ≈ QOFT, quantized < full");
+    let path = report.save()?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

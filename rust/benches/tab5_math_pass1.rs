@@ -1,0 +1,140 @@
+//! Table 5 (and App. B Table 10) — pass@1 on math reasoning for the
+//! quantized finetuning setting: pretrained-but-frozen baseline vs
+//! QLoRA vs QOFT, at two model scales (tiny and small presets standing
+//! in for the Qwen2.5 1.5B/7B/32B ladder).
+//!
+//! Protocol: pretrain `<preset>_full` on math (style 0), finetune the
+//! quantized adapters from that checkpoint on the shifted corpus
+//! (style 1), report pass@1 over held-out problems.
+//!
+//! Shape targets: finetuning beats the frozen baseline; QOFT >= QLoRA
+//! at roughly half the trainable parameters.
+
+use oftv2::bench::{print_table, quick_mode, Report};
+use oftv2::coordinator::protocol::{finetune_trainer, pretrain, Phase};
+use oftv2::data::corpus::TaskKind;
+use oftv2::json::Json;
+use oftv2::runtime::Engine;
+use oftv2::util::human_count;
+use oftv2::{artifacts_root, Result};
+
+fn main() -> Result<()> {
+    let quick = quick_mode();
+    let n_eval = if quick { 10 } else { 24 };
+    let engine = Engine::cpu()?;
+    let mut report = Report::new("tab5_math_pass1");
+
+    let scales = [
+        ("scale-1 (tiny)", "tiny", 400usize, 300usize),
+        ("scale-2 (small)", "small", 300, 200),
+    ];
+    let mut rows = Vec::new();
+    let mut results: Vec<(String, String, f64)> = Vec::new();
+
+    for (scale, preset, pre_steps, fin_steps) in scales {
+        let pre = Phase {
+            steps: if quick { pre_steps / 4 } else { pre_steps },
+            documents: 2000,
+            lr: 3e-3,
+            seed: 7,
+        };
+        let fin = Phase {
+            steps: if quick { fin_steps / 4 } else { fin_steps },
+            documents: 2000,
+            lr: 2e-3,
+            seed: 11,
+        };
+        let (ckpt, fin_loader) = pretrain(&engine, &artifacts_root(), preset, TaskKind::Math, &pre)?;
+
+        let methods = [
+            ("Baseline", format!("{preset}_none"), 0usize),
+            ("QLoRA", format!("{preset}_qlora_nf4"), fin.steps),
+            ("QOFT", format!("{preset}_qoft_nf4"), fin.steps),
+        ];
+        for (label, tag, steps) in methods {
+            if !artifacts_root().join(&tag).exists() {
+                // small preset has no "none" bundle; use the full one frozen
+                let alt = format!("{preset}_full");
+                if label == "Baseline" && artifacts_root().join(&alt).exists() {
+                    let mut phase = fin.clone();
+                    phase.steps = 0;
+                    let mut tr = finetune_trainer(
+                        &engine,
+                        &artifacts_root(),
+                        &alt,
+                        TaskKind::Math,
+                        &phase,
+                        Some(&ckpt),
+                        &fin_loader,
+                    )?;
+                    let p1 = tr.pass1_eval(n_eval, 28)?;
+                    rows.push(vec![scale.into(), label.into(), "-".into(), format!("{p1:.1}")]);
+                    results.push((scale.into(), label.into(), p1));
+                    continue;
+                }
+                println!("(skipping {tag})");
+                continue;
+            }
+            let mut phase = fin.clone();
+            phase.steps = steps;
+            // paper App. A: OFT variants train at 4x the LoRA LR
+            if tag.contains("oft") {
+                phase.lr *= 4.0;
+            }
+            let mut tr = finetune_trainer(
+                &engine,
+                &artifacts_root(),
+                &tag,
+                TaskKind::Math,
+                &phase,
+                Some(&ckpt),
+                &fin_loader,
+            )?;
+            if steps > 0 {
+                tr.train()?;
+            }
+            let p1 = tr.pass1_eval(n_eval, 28)?;
+            let params = tr.manifest.params_trainable;
+            rows.push(vec![
+                scale.into(),
+                label.into(),
+                if steps == 0 { "-".into() } else { human_count(params) },
+                format!("{p1:.1}"),
+            ]);
+            report.add_kv(vec![
+                ("scale", Json::str(scale)),
+                ("method", Json::str(label)),
+                ("params", Json::num(params as f64)),
+                ("pass1", Json::num(p1)),
+            ]);
+            results.push((scale.into(), label.into(), p1));
+        }
+    }
+
+    print_table(
+        "Table 5: math pass@1 after quantized finetuning (pretrained base)",
+        &["scale", "method", "# params", "pass@1 %"],
+        &rows,
+    );
+    println!("(paper Table 5, Qwen2.5-7B-it: baseline vs QLoRA vs QOFT SAT = 53.1 / 68.8 / 96.9)");
+
+    // shape: QOFT >= baseline at each scale
+    for (scale, _, _, _) in scales {
+        let get = |m: &str| {
+            results
+                .iter()
+                .find(|(s, l, _)| s == scale && l == m)
+                .map(|(_, _, p)| *p)
+        };
+        if let (Some(base), Some(qoft)) = (get("Baseline"), get("QOFT")) {
+            assert!(
+                qoft >= base,
+                "{scale}: QOFT pass@1 {qoft} below baseline {base}"
+            );
+        }
+    }
+
+    let path = report.save()?;
+    println!("\nresults -> {}", path.display());
+    Ok(())
+}

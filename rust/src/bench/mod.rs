@@ -1,0 +1,227 @@
+//! Benchmark harness (offline substitute for `criterion`): warmup +
+//! timed iterations + summary stats, paper-style table printing, and a
+//! JSON results file per bench so EXPERIMENTS.md numbers are
+//! regenerable.
+//!
+//! Every `cargo bench` target (one per paper table/figure) builds on
+//! this module; see DESIGN.md §3 for the experiment index.
+
+use std::path::PathBuf;
+
+use crate::json::Json;
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// A configured micro/macro benchmark.
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub iters: usize,
+    /// Stop early once this much measurement time has accumulated (0 =
+    /// always run all `iters`).
+    pub max_secs: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup: 3,
+            iters: 10,
+            max_secs: 0.0,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    pub fn max_secs(mut self, s: f64) -> Bench {
+        self.max_secs = s;
+        self
+    }
+
+    /// Run the benchmark; `f` is invoked warmup+iters times, with each
+    /// post-warmup call timed individually.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let budget = Timer::start();
+        for _ in 0..self.iters.max(1) {
+            let t = Timer::start();
+            f();
+            samples.push(t.secs());
+            if self.max_secs > 0.0 && budget.secs() > self.max_secs && !samples.is_empty() {
+                break;
+            }
+        }
+        Summary::of(&samples)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table printing (the "same rows the paper reports" contract)
+// ---------------------------------------------------------------------------
+
+/// Print an aligned ASCII table with a header rule.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    println!(
+        "{}",
+        widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Format seconds as ms with sensible precision.
+pub fn fmt_ms(secs: f64) -> String {
+    let ms = secs * 1e3;
+    if ms >= 100.0 {
+        format!("{ms:.0} ms")
+    } else if ms >= 1.0 {
+        format!("{ms:.2} ms")
+    } else {
+        format!("{:.1} µs", ms * 1e3)
+    }
+}
+
+/// Format a unitless ratio (speedups, memory factors).
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+// ---------------------------------------------------------------------------
+// Result persistence
+// ---------------------------------------------------------------------------
+
+/// Collects result rows and writes `bench_results/<name>.json`.
+pub struct Report {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>) -> Report {
+        Report {
+            name: name.into(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Convenience: a row of (key, value) pairs.
+    pub fn add_kv(&mut self, pairs: Vec<(&str, Json)>) {
+        self.rows.push(Json::obj(pairs));
+    }
+
+    pub fn rows(&self) -> &[Json] {
+        &self.rows
+    }
+
+    /// Write to `bench_results/<name>.json` (path overridable with
+    /// `OFT_BENCH_OUT`); returns the path written.
+    pub fn save(&self) -> crate::Result<PathBuf> {
+        let dir = std::env::var("OFT_BENCH_OUT").unwrap_or_else(|_| "bench_results".into());
+        std::fs::create_dir_all(&dir)?;
+        let path = PathBuf::from(dir).join(format!("{}.json", self.name));
+        let doc = Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("rows", Json::arr(self.rows.clone())),
+        ]);
+        std::fs::write(&path, doc.to_string())?;
+        Ok(path)
+    }
+}
+
+/// Standard bench entrypoint boilerplate: honor `--quick` (fewer iters)
+/// from argv so `cargo bench` stays fast in CI.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("OFT_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let counter = std::cell::Cell::new(0usize);
+        let s = Bench::new("x").warmup(2).iters(5).run(|| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_budget_stops_early() {
+        let s = Bench::new("slow")
+            .warmup(0)
+            .iters(1000)
+            .max_secs(0.02)
+            .run(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.n < 1000);
+    }
+
+    #[test]
+    fn report_saves_json() {
+        let dir = std::env::temp_dir().join(format!("oft_bench_{}", std::process::id()));
+        std::env::set_var("OFT_BENCH_OUT", &dir);
+        let mut r = Report::new("unit_test");
+        r.add_kv(vec![("d", Json::num(256.0)), ("ms", Json::num(1.5))]);
+        let path = r.save().unwrap();
+        let parsed = crate::json::parse_file(&path).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap()[0]
+                .get("d")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            256
+        );
+        std::env::remove_var("OFT_BENCH_OUT");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ms(0.1234), "123 ms");
+        assert_eq!(fmt_ms(0.00123), "1.23 ms");
+        assert_eq!(fmt_ms(0.0000005), "0.5 µs");
+        assert_eq!(fmt_ratio(3.04), "3.04x");
+    }
+}

@@ -1,0 +1,220 @@
+//! Command-line argument parsing (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative option spec for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A command parser with declared options (for validation + help).
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse argv (without program name / subcommand). Unknown options
+    /// are rejected; declared defaults are filled in.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = parse_raw(argv, /*expect_subcommand=*/ false)?;
+        for o in &self.opts {
+            if o.is_flag {
+                if args.options.contains_key(o.name) {
+                    bail!("--{} is a flag and takes no value", o.name);
+                }
+            } else if args.flags.iter().any(|f| f == o.name) {
+                bail!("--{} expects a value", o.name);
+            }
+        }
+        let known: Vec<&str> = self.opts.iter().map(|o| o.name).collect();
+        for k in args.options.keys().chain(args.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}\n\n{}", self.help_text());
+            }
+        }
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.options.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Raw tokenizer: `--k=v`, `--k v`, `--flag` (followed by another option
+/// or end), positionals. If `expect_subcommand`, the first positional is
+/// the subcommand.
+pub fn parse_raw(argv: &[String], expect_subcommand: bool) -> Result<Args> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(rest) = tok.strip_prefix("--") {
+            if rest.is_empty() {
+                // `--` ends option parsing
+                args.positional.extend(argv[i + 1..].iter().cloned());
+                break;
+            }
+            if let Some(eq) = rest.find('=') {
+                args.options
+                    .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                args.options.insert(rest.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                args.flags.push(rest.to_string());
+            }
+        } else if expect_subcommand && args.subcommand.is_none() {
+            args.subcommand = Some(tok.clone());
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse_raw(&v(&["train", "--tag", "tiny_oft_v2", "--steps=100", "--quiet"]), true).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("tag"), Some("tiny_oft_v2"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn command_defaults_and_validation() {
+        let cmd = Command::new("train", "run finetuning")
+            .opt("steps", "number of steps", Some("50"))
+            .flag("quiet", "suppress logs");
+        let a = cmd.parse(&v(&["--quiet"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 50);
+        assert!(a.has_flag("quiet"));
+        assert!(cmd.parse(&v(&["--bogus", "1"])).is_err());
+        assert!(cmd.parse(&v(&["--steps"])).is_err()); // flag-used-as-value
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse_raw(&v(&["--a", "1", "--", "--not-an-opt"]), false).unwrap();
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse_raw(&v(&["--lr", "0.004", "--n", "7"]), false).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.004);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 7);
+        assert!(a.get_usize("lr", 0).is_err());
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let cmd = Command::new("x", "y").opt("steps", "s", Some("5")).flag("q", "z");
+        let h = cmd.help_text();
+        assert!(h.contains("--steps") && h.contains("default: 5") && h.contains("--q"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Configuration system: a TOML-subset parser + typed run configs.
+//!
+//! The launcher accepts `--config run.toml` files like:
+//!
+//! ```toml
+//! [run]
+//! tag = "e2e_oft_v2"          # artifact bundle to execute
+//! steps = 300
+//! seed = 42
+//!
+//! [optim]
+//! lr = 4e-4
+//! warmup = 20
+//! schedule = "cosine"
+//! min_lr_frac = 0.1           # paper App. B: cosine to 10% of peak
+//!
+//! [data]
+//! task = "wiki"               # wiki | math | summarize
+//! documents = 2000
+//! ```
+//!
+//! plus CLI overrides `--set optim.lr=1e-4`.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+pub use self::toml::TomlDoc;
+
+/// Learning-rate schedule shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Constant,
+    Cosine,
+}
+
+/// Optimizer / schedule settings (Adam hyperparameters live in the AOT
+/// graph; the coordinator owns the schedule — paper App. A/B).
+#[derive(Clone, Debug)]
+pub struct OptimCfg {
+    pub lr: f64,
+    pub warmup: usize,
+    pub schedule: Schedule,
+    /// Cosine floor as a fraction of peak LR (paper: 10%).
+    pub min_lr_frac: f64,
+}
+
+impl Default for OptimCfg {
+    fn default() -> Self {
+        OptimCfg {
+            lr: 4e-4,
+            warmup: 20,
+            schedule: Schedule::Cosine,
+            min_lr_frac: 0.1,
+        }
+    }
+}
+
+impl OptimCfg {
+    /// LR at 1-based step `t` out of `total`.
+    pub fn lr_at(&self, t: usize, total: usize) -> f64 {
+        let t = t.max(1);
+        if t <= self.warmup {
+            return self.lr * t as f64 / self.warmup.max(1) as f64;
+        }
+        match self.schedule {
+            Schedule::Constant => self.lr,
+            Schedule::Cosine => {
+                let span = (total.saturating_sub(self.warmup)).max(1) as f64;
+                let prog = ((t - self.warmup) as f64 / span).min(1.0);
+                let floor = self.lr * self.min_lr_frac;
+                floor + 0.5 * (self.lr - floor) * (1.0 + (std::f64::consts::PI * prog).cos())
+            }
+        }
+    }
+}
+
+/// Synthetic-data settings.
+#[derive(Clone, Debug)]
+pub struct DataCfg {
+    pub task: String,
+    pub documents: usize,
+    pub seed: u64,
+}
+
+impl Default for DataCfg {
+    fn default() -> Self {
+        DataCfg {
+            task: "wiki".into(),
+            documents: 2000,
+            seed: 7,
+        }
+    }
+}
+
+/// A full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub tag: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub init_from: Option<String>,
+    pub out_dir: Option<String>,
+    pub optim: OptimCfg,
+    pub data: DataCfg,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            tag: "tiny_oft_v2".into(),
+            steps: 50,
+            seed: 42,
+            log_every: 10,
+            eval_every: 0,
+            init_from: None,
+            out_dir: None,
+            optim: OptimCfg::default(),
+            data: DataCfg::default(),
+        }
+    }
+}
+
+impl RunCfg {
+    /// Load from a TOML document (missing keys keep defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<RunCfg> {
+        let mut cfg = RunCfg::default();
+        cfg.apply_doc(doc)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<RunCfg> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml(&toml::parse(&text)?)
+    }
+
+    fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (section, key, value) in doc.entries() {
+            self.set(&format!("{section}.{key}"), value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one dotted-path override (CLI `--set a.b=v`, TOML entries).
+    pub fn set(&mut self, path: &str, value: &str) -> Result<()> {
+        match path {
+            "run.tag" => self.tag = value.into(),
+            "run.steps" => self.steps = value.parse()?,
+            "run.seed" => self.seed = value.parse()?,
+            "run.log_every" => self.log_every = value.parse()?,
+            "run.eval_every" => self.eval_every = value.parse()?,
+            "run.init_from" => self.init_from = Some(value.into()),
+            "run.out_dir" => self.out_dir = Some(value.into()),
+            "optim.lr" => self.optim.lr = value.parse()?,
+            "optim.warmup" => self.optim.warmup = value.parse()?,
+            "optim.min_lr_frac" => self.optim.min_lr_frac = value.parse()?,
+            "optim.schedule" => {
+                self.optim.schedule = match value {
+                    "constant" => Schedule::Constant,
+                    "cosine" => Schedule::Cosine,
+                    _ => bail!("unknown schedule '{value}'"),
+                }
+            }
+            "data.task" => self.data.task = value.into(),
+            "data.documents" => self.data.documents = value.parse()?,
+            "data.seed" => self.data.seed = value.parse()?,
+            _ => bail!("unknown config key '{path}'"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_toml_then_override() {
+        let doc = toml::parse(
+            "[run]\ntag = \"bench_lora\"\nsteps = 120\n\n[optim]\nlr = 1e-4\nschedule = \"constant\"\n",
+        )
+        .unwrap();
+        let mut cfg = RunCfg::from_toml(&doc).unwrap();
+        assert_eq!(cfg.tag, "bench_lora");
+        assert_eq!(cfg.steps, 120);
+        assert_eq!(cfg.optim.lr, 1e-4);
+        assert_eq!(cfg.optim.schedule, Schedule::Constant);
+        cfg.set("optim.lr", "5e-5").unwrap();
+        assert_eq!(cfg.optim.lr, 5e-5);
+        assert!(cfg.set("nope.x", "1").is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let o = OptimCfg {
+            lr: 1.0,
+            warmup: 10,
+            schedule: Schedule::Cosine,
+            min_lr_frac: 0.1,
+        };
+        // warmup ramps linearly
+        assert!((o.lr_at(5, 100) - 0.5).abs() < 1e-12);
+        assert!((o.lr_at(10, 100) - 1.0).abs() < 1e-12);
+        // decays monotonically to the 10% floor (paper App. B)
+        let mut prev = f64::INFINITY;
+        for t in 10..=100 {
+            let lr = o.lr_at(t, 100);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+        assert!((o.lr_at(100, 100) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let o = OptimCfg {
+            lr: 0.5,
+            warmup: 0,
+            schedule: Schedule::Constant,
+            min_lr_frac: 0.1,
+        };
+        assert_eq!(o.lr_at(1, 10), 0.5);
+        assert_eq!(o.lr_at(10, 10), 0.5);
+    }
+}

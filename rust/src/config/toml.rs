@@ -1,0 +1,122 @@
+//! TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports: `[section]` headers, `key = value` with string / number /
+//! boolean values, `#` comments, blank lines. Values are kept as raw
+//! strings; typed parsing happens in the config layer.
+
+use anyhow::{bail, Result};
+
+/// A parsed document: ordered (section, key, value) triples.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, String)>,
+}
+
+impl TomlDoc {
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &str)> {
+        self.entries
+            .iter()
+            .map(|(s, k, v)| (s.as_str(), k.as_str(), v.as_str()))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v.as_str())
+    }
+}
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: malformed section header '{raw}'", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entries
+            .push((section.clone(), key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<String> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = v.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string '{v}'");
+        };
+        return Ok(inner.replace("\\\"", "\"").replace("\\\\", "\\"));
+    }
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top comment\n[run]\ntag = \"x_y\"  # trailing\nsteps = 50\n\n[optim]\nlr = 4e-4\nflagish = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("run", "tag"), Some("x_y"));
+        assert_eq!(doc.get("run", "steps"), Some("50"));
+        assert_eq!(doc.get("optim", "lr"), Some("4e-4"));
+        assert_eq!(doc.get("optim", "flagish"), Some("true"));
+        assert_eq!(doc.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("a", "k"), Some("x # y"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[broken\n").is_err());
+        assert!(parse("[a]\nnovalue\n").is_err());
+        assert!(parse("[a]\nk = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn last_write_wins() {
+        let doc = parse("[a]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get("a", "k"), Some("2"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Checkpoints: a name->tensor map in one file (JSON header + raw f32
+//! little-endian payload). Used for the pretrain→finetune protocol
+//! (`run.init_from`) and for saving finetuned adapters.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Json};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"OFTCKPT1";
+
+/// An ordered name -> tensor map.
+pub type Checkpoint = BTreeMap<String, Tensor>;
+
+/// Write a checkpoint file.
+pub fn save(path: impl AsRef<Path>, ckpt: &Checkpoint) -> Result<()> {
+    let mut header_entries = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in ckpt {
+        header_entries.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            (
+                "shape",
+                Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("offset", Json::num(offset as f64)),
+        ]));
+        offset += t.numel();
+    }
+    let header = Json::obj(vec![
+        ("entries", Json::arr(header_entries)),
+        ("total", Json::num(offset as f64)),
+    ])
+    .to_string();
+
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    for t in ckpt.values() {
+        for x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a checkpoint file.
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an OFT checkpoint: bad magic");
+    }
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes)?;
+    let header = json::parse(std::str::from_utf8(&hbytes)?)?;
+
+    let total = header.get("total")?.as_usize()?;
+    let mut payload = vec![0u8; total * 4];
+    r.read_exact(&mut payload)?;
+    let floats: Vec<f32> = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut ckpt = Checkpoint::new();
+    for e in header.get("entries")?.as_arr()? {
+        let name = e.get("name")?.as_str()?.to_string();
+        let shape = e.get("shape")?.as_shape()?;
+        let offset = e.get("offset")?.as_usize()?;
+        let n: usize = shape.iter().product();
+        if offset + n > floats.len() {
+            bail!("checkpoint entry '{name}' overruns payload");
+        }
+        ckpt.insert(name, Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()));
+    }
+    Ok(ckpt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("oft_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ck = Checkpoint::new();
+        ck.insert("embed.tok".into(), Tensor::randn(&[16, 8], 0.1, &mut rng));
+        ck.insert("final_norm".into(), Tensor::ones(&[8]));
+        ck.insert("layers.0.attn.wq".into(), Tensor::randn(&[8, 8], 0.02, &mut rng));
+        let p = tmp("roundtrip");
+        save(&p, &ck).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn empty_checkpoint() {
+        let p = tmp("empty");
+        save(&p, &Checkpoint::new()).unwrap();
+        assert!(load(&p).unwrap().is_empty());
+        let _ = std::fs::remove_file(p);
+    }
+}

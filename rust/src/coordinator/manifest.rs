@@ -1,0 +1,284 @@
+//! `manifest.json` — the L2→L3 contract for one artifact bundle.
+//!
+//! The manifest lists every graph input *in graph order* (trainables,
+//! then frozen, then quantized packs, then data), with shapes, dtypes
+//! and init specs. The coordinator never re-derives these numbers; it
+//! uploads buffers in exactly the recorded order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Json};
+use crate::runtime::Dtype;
+
+/// Parameter initialization spec (`init` field).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    fn parse(j: &Json) -> Result<Init> {
+        let arr = j.as_arr()?;
+        let kind = arr[0].as_str()?;
+        let std = arr[1].as_f64()? as f32;
+        Ok(match kind {
+            "normal" => Init::Normal(std),
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            _ => bail!("unknown init kind '{kind}'"),
+        })
+    }
+}
+
+/// One f32 parameter input (trainable or frozen).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One quantized-pack input (codes / scales / metadata tensor).
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    /// Graph input name, e.g. `layers.0.attn.wq.nf4_codes`.
+    pub name: String,
+    /// The base weight it packs, e.g. `layers.0.attn.wq`.
+    pub base: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Model dimensions recorded by the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub block_b: usize,
+    pub neumann_k: usize,
+    pub lora_r: usize,
+    pub lora_alpha: f64,
+}
+
+/// A parsed artifact-bundle manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tag: String,
+    pub preset: String,
+    pub method: String,
+    pub quant: String,
+    pub model: ModelDims,
+    pub params_base: u64,
+    pub params_trainable: u64,
+    pub trainable: Vec<ParamSpec>,
+    pub frozen: Vec<ParamSpec>,
+    pub quantized: Vec<QuantSpec>,
+    pub adam: (f64, f64, f64),
+    pub train_step_file: String,
+    pub eval_loss_file: String,
+    pub logits_last_file: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let j = json::parse_file(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "loading bundle manifest {} (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+
+        let m = j.get("model")?;
+        let model = ModelDims {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            batch: m.get("batch")?.as_usize()?,
+            block_b: m.get("block_b")?.as_usize()?,
+            neumann_k: m.get("neumann_k")?.as_usize()?,
+            lora_r: m.get("lora_r")?.as_usize()?,
+            lora_alpha: m.get("lora_alpha")?.as_f64()?,
+        };
+
+        let param_spec = |e: &Json| -> Result<ParamSpec> {
+            Ok(ParamSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.as_shape()?,
+                init: Init::parse(e.get("init")?)?,
+            })
+        };
+        let inputs = j.get("inputs")?;
+        let trainable = inputs
+            .get("trainable")?
+            .as_arr()?
+            .iter()
+            .map(param_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let frozen = inputs
+            .get("frozen")?
+            .as_arr()?
+            .iter()
+            .map(param_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let quantized = inputs
+            .get("quantized")?
+            .as_arr()?
+            .iter()
+            .map(|e| -> Result<QuantSpec> {
+                Ok(QuantSpec {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    base: e.get("base")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_shape()?,
+                    dtype: Dtype::parse(e.get("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let adam = j.get("adam")?;
+        let art = j.get("artifacts")?;
+        let params = j.get("params")?;
+        Ok(Manifest {
+            dir,
+            tag: j.get("tag")?.as_str()?.to_string(),
+            preset: j.get("preset")?.as_str()?.to_string(),
+            method: j.get("method")?.as_str()?.to_string(),
+            quant: j.get("quant")?.as_str()?.to_string(),
+            model,
+            params_base: params.get("base")?.as_usize()? as u64,
+            params_trainable: params.get("trainable")?.as_usize()? as u64,
+            trainable,
+            frozen,
+            quantized,
+            adam: (
+                adam.get("b1")?.as_f64()?,
+                adam.get("b2")?.as_f64()?,
+                adam.get("eps")?.as_f64()?,
+            ),
+            train_step_file: art.get("train_step")?.as_str()?.to_string(),
+            eval_loss_file: art.get("eval_loss")?.as_str()?.to_string(),
+            logits_last_file: art.get("logits_last")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Path of one artifact file.
+    pub fn artifact(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Unique base weights behind the quantized packs, in first-seen
+    /// (graph) order.
+    pub fn quantized_bases(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for q in &self.quantized {
+            if !seen.contains(&q.base) {
+                seen.push(q.base.clone());
+            }
+        }
+        seen
+    }
+
+    /// The (din, dout) of a base linear weight referenced by a quantized
+    /// pack — mirrors `linear_names()` in python/compile/model.py.
+    pub fn linear_shape(&self, base: &str) -> Result<(usize, usize)> {
+        let (d, f) = (self.model.d_model, self.model.d_ff);
+        if base.ends_with(".mlp.up") {
+            Ok((d, f))
+        } else if base.ends_with(".mlp.down") {
+            Ok((f, d))
+        } else if base.contains(".attn.w") {
+            Ok((d, d))
+        } else {
+            bail!("'{base}' is not an adapted linear weight");
+        }
+    }
+
+    /// Total trainable elements (must equal `params_trainable`).
+    pub fn trainable_numel(&self) -> u64 {
+        self.trainable.iter().map(|p| p.numel() as u64).sum()
+    }
+
+    /// Bytes a full train-step state (params + 2 Adam moments) occupies.
+    pub fn state_bytes(&self) -> u64 {
+        3 * 4 * self.trainable_numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_root;
+
+    fn tiny(tag: &str) -> Option<Manifest> {
+        let dir = artifacts_root().join(tag);
+        dir.exists().then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn loads_tiny_bundle() {
+        let Some(m) = tiny("tiny_oft_v2") else { return };
+        assert_eq!(m.method, "oft_v2");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.model.block_b, 16);
+        assert!(!m.trainable.is_empty());
+        assert!(!m.frozen.is_empty());
+        assert!(m.quantized.is_empty());
+        assert_eq!(m.trainable_numel(), m.params_trainable);
+        // every adapted linear contributes one packed-q tensor
+        assert_eq!(m.trainable.len(), 6 * m.model.n_layers);
+    }
+
+    #[test]
+    fn quantized_bundle_has_packs() {
+        let Some(m) = tiny("tiny_qoft_nf4") else { return };
+        assert_eq!(m.quant, "nf4");
+        assert_eq!(m.quantized.len(), 4 * 6 * m.model.n_layers);
+        let bases = m.quantized_bases();
+        assert_eq!(bases.len(), 6 * m.model.n_layers);
+        // base weights are excluded from the frozen f32 inputs
+        for b in &bases {
+            assert!(!m.frozen.iter().any(|f| &f.name == b));
+            let (din, dout) = m.linear_shape(b).unwrap();
+            assert!(din >= 64 && dout >= 64);
+        }
+    }
+
+    #[test]
+    fn linear_shapes_match_dims() {
+        let Some(m) = tiny("tiny_qoft_nf4") else { return };
+        assert_eq!(m.linear_shape("layers.0.attn.wq").unwrap(), (64, 64));
+        assert_eq!(m.linear_shape("layers.1.mlp.up").unwrap(), (64, 256));
+        assert_eq!(m.linear_shape("layers.1.mlp.down").unwrap(), (256, 64));
+        assert!(m.linear_shape("embed.tok").is_err());
+    }
+
+    #[test]
+    fn init_parsing() {
+        let j = json::parse(r#"["normal", 0.02]"#).unwrap();
+        assert_eq!(Init::parse(&j).unwrap(), Init::Normal(0.02));
+        let j = json::parse(r#"["zeros", 0.0]"#).unwrap();
+        assert_eq!(Init::parse(&j).unwrap(), Init::Zeros);
+        let j = json::parse(r#"["bogus", 0.0]"#).unwrap();
+        assert!(Init::parse(&j).is_err());
+    }
+}

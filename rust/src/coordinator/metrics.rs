@@ -1,0 +1,174 @@
+//! Training metrics: per-step records, eval points, and JSON export
+//! (the loss curves EXPERIMENTS.md plots come from these files).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::json::Json;
+
+/// One optimizer step's record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    /// Wall-clock seconds for this step (upload + execute + fetch).
+    pub secs: f64,
+}
+
+/// One evaluation point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub eval_loss: f64,
+    pub perplexity: f64,
+}
+
+/// A run's full metric history.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl History {
+    pub fn push_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn push_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.steps.last().map(|r| r.loss)
+    }
+
+    pub fn first_loss(&self) -> Option<f64> {
+        self.steps.first().map(|r| r.loss)
+    }
+
+    /// Mean step time over the (post-warmup) tail.
+    pub fn mean_step_secs(&self, skip: usize) -> f64 {
+        let tail: Vec<f64> = self.steps.iter().skip(skip).map(|r| r.secs).collect();
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// Mean loss over the last `n` steps (noise-robust convergence
+    /// check for the paper-shape assertions).
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "steps",
+                Json::arr(
+                    self.steps
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::num(r.step as f64)),
+                                ("loss", Json::num(r.loss)),
+                                ("lr", Json::num(r.lr)),
+                                ("secs", Json::num(r.secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::arr(
+                    self.evals
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("step", Json::num(r.step as f64)),
+                                ("eval_loss", Json::num(r.eval_loss)),
+                                ("perplexity", Json::num(r.perplexity)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path.as_ref(), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist() -> History {
+        let mut h = History::default();
+        for i in 1..=10 {
+            h.push_step(StepRecord {
+                step: i,
+                loss: 10.0 / i as f64,
+                lr: 1e-3,
+                secs: 0.01,
+            });
+        }
+        h.push_eval(EvalRecord {
+            step: 10,
+            eval_loss: 1.5,
+            perplexity: 1.5f64.exp(),
+        });
+        h
+    }
+
+    #[test]
+    fn aggregates() {
+        let h = hist();
+        assert_eq!(h.first_loss(), Some(10.0));
+        assert_eq!(h.final_loss(), Some(1.0));
+        assert!((h.mean_step_secs(2) - 0.01).abs() < 1e-12);
+        assert!(h.tail_loss(3).unwrap() < 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let h = hist();
+        let j = h.to_json();
+        let steps = j.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 10);
+        assert_eq!(steps[0].get("step").unwrap().as_usize().unwrap(), 1);
+        let evals = j.get("evals").unwrap().as_arr().unwrap();
+        assert_eq!(evals.len(), 1);
+    }
+
+    #[test]
+    fn save_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join(format!("oft_metrics_{}", std::process::id()));
+        let path = dir.join("nested/history.json");
+        hist().save(&path).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn empty_history() {
+        let h = History::default();
+        assert_eq!(h.final_loss(), None);
+        assert_eq!(h.tail_loss(5), None);
+        assert_eq!(h.mean_step_secs(0), 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator — the finetuning framework around the AOT graphs.
+//!
+//! * [`manifest`]   — the L2→L3 input contract (`manifest.json`)
+//! * [`state`]      — deterministic init + base-weight quantization
+//! * [`trainer`]    — train loop, LR schedule, eval, greedy decode
+//! * [`metrics`]    — step/eval records + JSON export
+//! * [`checkpoint`] — name→tensor files for the pretrain→finetune protocol
+//!
+//! The coordinator's job mirrors what HF PEFT + TRL + Accelerate do in
+//! the paper's stack: own the run lifecycle while the compute graphs —
+//! including the paper's contribution, the OFTv2 input-centric rotation
+//! and CNP (L1/L2) — execute through [`crate::runtime`].
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod metrics;
+pub mod protocol;
+pub mod state;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{Init, Manifest, ModelDims, ParamSpec, QuantSpec};
+pub use metrics::{EvalRecord, History, StepRecord};
+pub use state::BundleState;
+pub use trainer::Trainer;

@@ -1,0 +1,154 @@
+//! The pretrain→finetune protocol (the paper's adaptation setting):
+//! pretrain the base model on a task's distribution, checkpoint it,
+//! then attach PEFT adapters and finetune on the shifted distribution
+//! with the base frozen (or quantized).
+//!
+//! Used by the quality benches (Tables 3–5) and `examples/e2e_finetune`.
+
+use anyhow::Result;
+
+use super::checkpoint::Checkpoint;
+use super::manifest::Manifest;
+use super::trainer::Trainer;
+use crate::config::RunCfg;
+use crate::data::corpus::TaskKind;
+use crate::data::loader::Loader;
+use crate::runtime::Engine;
+
+/// Settings for one pretrain or finetune phase.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub steps: usize,
+    pub documents: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for Phase {
+    fn default() -> Self {
+        Phase {
+            steps: 150,
+            documents: 1500,
+            lr: 2e-3,
+            seed: 7,
+        }
+    }
+}
+
+fn run_cfg(tag: &str, phase: &Phase, task: TaskKind) -> RunCfg {
+    let mut cfg = RunCfg::default();
+    cfg.tag = tag.into();
+    cfg.steps = phase.steps;
+    cfg.seed = phase.seed;
+    cfg.log_every = 0;
+    cfg.optim.lr = phase.lr;
+    cfg.data.task = match task {
+        TaskKind::Wiki => "wiki",
+        TaskKind::Math => "math",
+        TaskKind::Summarize => "summarize",
+    }
+    .into();
+    cfg.data.documents = phase.documents;
+    cfg
+}
+
+/// Pretrain `<preset>_full` on `task` (distribution style 0). Returns
+/// the full-model checkpoint AND the style-1 finetuning loader that
+/// shares the pretraining tokenizer — token ids must stay aligned
+/// across phases or the checkpointed embeddings are useless.
+pub fn pretrain(
+    engine: &Engine,
+    artifacts_root: &std::path::Path,
+    preset: &str,
+    task: TaskKind,
+    phase: &Phase,
+) -> Result<(Checkpoint, Loader)> {
+    let tag = format!("{preset}_full");
+    let man = Manifest::load(artifacts_root.join(&tag))?;
+    let (pre_loader, fin_loader) = Loader::pretrain_finetune_pair(
+        task,
+        phase.documents,
+        phase.seed,
+        man.model.vocab,
+        man.model.batch,
+        man.model.seq_len,
+    );
+    let cfg = run_cfg(&tag, phase, task);
+    let mut tr = Trainer::with_checkpoint(engine, man, cfg, None)?;
+    tr.set_loader(pre_loader);
+    tr.train()?;
+    Ok((tr.checkpoint()?, fin_loader))
+}
+
+/// Build a finetuning trainer for `tag`, initialized from `ckpt`, over
+/// the shared-vocabulary shifted-distribution loader from [`pretrain`].
+pub fn finetune_trainer<'e>(
+    engine: &'e Engine,
+    artifacts_root: &std::path::Path,
+    tag: &str,
+    task: TaskKind,
+    phase: &Phase,
+    ckpt: Option<&Checkpoint>,
+    fin_loader: &Loader,
+) -> Result<Trainer<'e>> {
+    let man = Manifest::load(artifacts_root.join(tag))?;
+    let cfg = run_cfg(tag, phase, task);
+    let mut tr = Trainer::with_checkpoint(engine, man, cfg, ckpt)?;
+    tr.set_loader(fin_loader.clone());
+    Ok(tr)
+}
+
+/// Pretrain once, then finetune `tag` and return the trainer after
+/// training (ready for evaluation/decoding).
+pub fn pretrain_then_finetune<'e>(
+    engine: &'e Engine,
+    artifacts_root: &std::path::Path,
+    preset: &str,
+    tag: &str,
+    task: TaskKind,
+    pretrain_phase: &Phase,
+    finetune_phase: &Phase,
+) -> Result<Trainer<'e>> {
+    let (ckpt, fin_loader) = pretrain(engine, artifacts_root, preset, task, pretrain_phase)?;
+    let mut tr = finetune_trainer(
+        engine,
+        artifacts_root,
+        tag,
+        task,
+        finetune_phase,
+        Some(&ckpt),
+        &fin_loader,
+    )?;
+    if finetune_phase.steps > 0 {
+        tr.train()?;
+    }
+    Ok(tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_defaults_sane() {
+        let p = Phase::default();
+        assert!(p.steps > 0 && p.documents > 0 && p.lr > 0.0);
+    }
+
+    #[test]
+    fn run_cfg_maps_tasks() {
+        let p = Phase::default();
+        for (task, name) in [
+            (TaskKind::Wiki, "wiki"),
+            (TaskKind::Math, "math"),
+            (TaskKind::Summarize, "summarize"),
+        ] {
+            let cfg = run_cfg("tiny_oft_v2", &p, task);
+            assert_eq!(cfg.data.task, name);
+            assert_eq!(cfg.steps, p.steps);
+        }
+    }
+
+    // End-to-end protocol coverage lives in rust/tests/trainer.rs
+    // (pretrain_then_finetune_protocol) and the quality benches.
+}

@@ -1,0 +1,300 @@
+//! Parameter-state construction: deterministic initialization from the
+//! manifest's init specs, checkpoint overrides, and quantization of the
+//! frozen base weights into the exact packed layouts the graphs expect.
+//!
+//! Rust owns *quantization* (model-load time); the AOT graphs own
+//! *dequantization* (Pallas kernels) — DESIGN.md §4.
+
+use anyhow::{bail, ensure, Context, Result};
+use xla::Literal;
+
+use super::checkpoint::Checkpoint;
+use super::manifest::{Init, Manifest, ParamSpec};
+use crate::quant::{AwqTensor, Nf4Tensor};
+use crate::runtime::{lit_f32, lit_i8, lit_u8};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// FNV-1a over a parameter name — gives each parameter an independent,
+/// order-free random stream.
+fn name_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Initialize one parameter per its spec (checkpoint value wins).
+pub fn init_param(spec: &ParamSpec, seed: u64, ckpt: Option<&Checkpoint>) -> Result<Tensor> {
+    if let Some(c) = ckpt {
+        if let Some(t) = c.get(&spec.name) {
+            ensure!(
+                t.shape == spec.shape,
+                "checkpoint '{}' has shape {:?}, manifest wants {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            return Ok(t.clone());
+        }
+    }
+    let mut rng = Rng::new(seed ^ name_hash(&spec.name));
+    Ok(match spec.init {
+        Init::Normal(std) => Tensor::randn(&spec.shape, std, &mut rng),
+        Init::Zeros => Tensor::zeros(&spec.shape),
+        Init::Ones => Tensor::ones(&spec.shape),
+    })
+}
+
+/// Initialize a *base* linear weight that exists only behind quantized
+/// packs (not in the manifest's f32 inputs): N(0, 0.02), the same init
+/// model.py uses for linears.
+pub fn init_quantized_base(
+    man: &Manifest,
+    base: &str,
+    seed: u64,
+    ckpt: Option<&Checkpoint>,
+) -> Result<Tensor> {
+    let (din, dout) = man.linear_shape(base)?;
+    if let Some(c) = ckpt {
+        if let Some(t) = c.get(base) {
+            ensure!(t.shape == vec![din, dout], "checkpoint '{base}' shape mismatch");
+            return Ok(t.clone());
+        }
+    }
+    let mut rng = Rng::new(seed ^ name_hash(base));
+    Ok(Tensor::randn(&[din, dout], 0.02, &mut rng))
+}
+
+/// Packed quantized tensors for one base weight, as (input-name, literal)
+/// in the manifest's graph order.
+pub fn quantize_base(
+    man: &Manifest,
+    base: &str,
+    weight: &Tensor,
+) -> Result<Vec<(String, Literal)>> {
+    let specs: Vec<_> = man.quantized.iter().filter(|q| q.base == base).collect();
+    ensure!(!specs.is_empty(), "no quantized specs for '{base}'");
+    let mut out = Vec::new();
+    match man.quant.as_str() {
+        "nf4" => {
+            let q = Nf4Tensor::quantize(weight);
+            for s in specs {
+                let lit = match s.name.rsplit('.').next().unwrap() {
+                    "nf4_codes" => lit_u8(&s.shape, &q.codes)?,
+                    "nf4_absmax_q" => lit_i8(&s.shape, &q.absmax_q)?,
+                    "nf4_absmax_s" => lit_f32(&s.shape, &q.absmax_s)?,
+                    "nf4_offset" => lit_f32(&s.shape, &[q.offset])?,
+                    other => bail!("unknown NF4 pack field '{other}'"),
+                };
+                out.push((s.name.clone(), lit));
+            }
+        }
+        "awq" => {
+            let q = AwqTensor::quantize(weight, None)?;
+            for s in specs {
+                let lit = match s.name.rsplit('.').next().unwrap() {
+                    "awq_codes" => lit_u8(&s.shape, &q.codes)?,
+                    "awq_scales" => lit_f32(&s.shape, &q.scales)?,
+                    "awq_eq" => lit_f32(&s.shape, &q.eq)?,
+                    other => bail!("unknown AWQ pack field '{other}'"),
+                };
+                out.push((s.name.clone(), lit));
+            }
+        }
+        other => bail!("bundle '{}' has unknown quant backend '{other}'", man.tag),
+    }
+    Ok(out)
+}
+
+/// The full input state for a bundle: trainables (+ Adam moments) as
+/// host tensors, fixed inputs (frozen f32 + quantized packs) as
+/// literals ready for a one-time device upload.
+pub struct BundleState {
+    /// Trainable tensors, manifest order.
+    pub trainable: Vec<Tensor>,
+    /// Frozen + quantized literals, graph order.
+    pub fixed: Vec<Literal>,
+    /// Host copies of the quantized base weights (for §4 requantization
+    /// analyses and oracle checks); empty for full-precision bundles.
+    pub quantized_bases: Vec<(String, Tensor)>,
+}
+
+impl BundleState {
+    /// Build the initial state for `man` with master seed `seed`,
+    /// overriding initialization with `ckpt` values where names match.
+    pub fn init(man: &Manifest, seed: u64, ckpt: Option<&Checkpoint>) -> Result<BundleState> {
+        let trainable = man
+            .trainable
+            .iter()
+            .map(|s| init_param(s, seed, ckpt))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut fixed = Vec::new();
+        for s in &man.frozen {
+            let t = init_param(s, seed, ckpt)?;
+            fixed.push(lit_f32(&s.shape, &t.data)?);
+        }
+
+        let mut quantized_bases = Vec::new();
+        if !man.quantized.is_empty() {
+            // Quantize each base once, then emit packs in manifest order.
+            let mut packs: Vec<(String, Literal)> = Vec::new();
+            for base in man.quantized_bases() {
+                let w = init_quantized_base(man, &base, seed, ckpt)?;
+                packs.extend(quantize_base(man, &base, &w)?);
+                quantized_bases.push((base, w));
+            }
+            for s in &man.quantized {
+                let idx = packs
+                    .iter()
+                    .position(|(n, _)| n == &s.name)
+                    .with_context(|| format!("missing pack '{}'", s.name))?;
+                fixed.push(packs.remove(idx).1);
+            }
+        }
+
+        Ok(BundleState {
+            trainable,
+            fixed,
+            quantized_bases,
+        })
+    }
+
+    /// Trainable tensors as literals (manifest order).
+    pub fn trainable_literals(&self, man: &Manifest) -> Result<Vec<Literal>> {
+        man.trainable
+            .iter()
+            .zip(&self.trainable)
+            .map(|(s, t)| lit_f32(&s.shape, &t.data))
+            .collect()
+    }
+
+    /// Zero-filled Adam-moment literals (manifest order).
+    pub fn zero_moments(&self, man: &Manifest) -> Result<Vec<Literal>> {
+        man.trainable
+            .iter()
+            .map(|s| lit_f32(&s.shape, &vec![0.0; s.numel()]))
+            .collect()
+    }
+}
+
+/// Sanity check a quantized-pack literal count: NF4 has 4 packs per
+/// base, AWQ has 3.
+pub fn packs_per_base(quant: &str) -> Result<usize> {
+    Ok(match quant {
+        "nf4" => 4,
+        "awq" => 3,
+        other => bail!("unknown quant backend '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_root;
+    use crate::coordinator::manifest::Manifest;
+
+    fn man(tag: &str) -> Option<Manifest> {
+        let dir = artifacts_root().join(tag);
+        dir.exists().then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn init_is_deterministic_and_order_free() {
+        let spec = ParamSpec {
+            name: "layers.0.attn.wq".into(),
+            shape: vec![8, 8],
+            init: Init::Normal(0.02),
+        };
+        let a = init_param(&spec, 42, None).unwrap();
+        let b = init_param(&spec, 42, None).unwrap();
+        assert_eq!(a, b);
+        let c = init_param(&spec, 43, None).unwrap();
+        assert_ne!(a, c);
+        // different names, same seed -> different values
+        let spec2 = ParamSpec {
+            name: "layers.0.attn.wk".into(),
+            ..spec.clone()
+        };
+        assert_ne!(init_param(&spec2, 42, None).unwrap(), a);
+    }
+
+    #[test]
+    fn checkpoint_overrides_init() {
+        let spec = ParamSpec {
+            name: "final_norm".into(),
+            shape: vec![4],
+            init: Init::Ones,
+        };
+        let mut ck = Checkpoint::new();
+        ck.insert("final_norm".into(), Tensor::from_vec(&[4], vec![9.0; 4]));
+        let t = init_param(&spec, 0, Some(&ck)).unwrap();
+        assert_eq!(t.data, vec![9.0; 4]);
+        // shape mismatch is an error, not silent fallback
+        ck.insert("final_norm".into(), Tensor::zeros(&[5]));
+        assert!(init_param(&spec, 0, Some(&ck)).is_err());
+    }
+
+    #[test]
+    fn zeros_and_ones_inits() {
+        let z = ParamSpec {
+            name: "q".into(),
+            shape: vec![3],
+            init: Init::Zeros,
+        };
+        assert_eq!(init_param(&z, 1, None).unwrap().data, vec![0.0; 3]);
+        let o = ParamSpec {
+            name: "g".into(),
+            shape: vec![2],
+            init: Init::Ones,
+        };
+        assert_eq!(init_param(&o, 1, None).unwrap().data, vec![1.0; 2]);
+    }
+
+    #[test]
+    fn full_precision_bundle_state() {
+        let Some(m) = man("tiny_oft_v2") else { return };
+        let st = BundleState::init(&m, 7, None).unwrap();
+        assert_eq!(st.trainable.len(), m.trainable.len());
+        assert_eq!(st.fixed.len(), m.frozen.len());
+        assert!(st.quantized_bases.is_empty());
+        // adapters start at identity (Q = 0)
+        for t in &st.trainable {
+            assert!(t.data.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn quantized_bundle_state_pack_counts() {
+        for (tag, per_base) in [("tiny_qoft_nf4", 4usize), ("tiny_qoft_awq", 3usize)] {
+            let Some(m) = man(tag) else { continue };
+            let st = BundleState::init(&m, 7, None).unwrap();
+            let n_base = st.quantized_bases.len();
+            assert_eq!(m.quantized.len(), n_base * per_base);
+            assert_eq!(st.fixed.len(), m.frozen.len() + m.quantized.len());
+            assert_eq!(packs_per_base(&m.quant).unwrap(), per_base);
+            // pack literal shapes match the manifest
+            for (lit, spec) in st.fixed[m.frozen.len()..].iter().zip(&m.quantized) {
+                assert_eq!(lit.element_count(), spec.shape.iter().product::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn nf4_pack_layout_matches_quant_module() {
+        let Some(m) = man("tiny_qoft_nf4") else { return };
+        let base = &m.quantized_bases()[0];
+        let w = init_quantized_base(&m, base, 7, None).unwrap();
+        let packs = quantize_base(&m, base, &w).unwrap();
+        let q = crate::quant::Nf4Tensor::quantize(&w);
+        let codes = &packs
+            .iter()
+            .find(|(n, _)| n.ends_with("nf4_codes"))
+            .unwrap()
+            .1;
+        assert_eq!(codes.to_vec::<u8>().unwrap(), q.codes);
+    }
+}

@@ -1,0 +1,290 @@
+//! Synthetic corpora standing in for the paper's datasets.
+//!
+//! Each generator produces (prompt, completion) [`Example`]s; for pure
+//! language modeling the prompt is empty. Generators take a *style*
+//! parameter so the harness can pretrain on one distribution and
+//! finetune on a shifted one (the pretrain->finetune protocol).
+
+use crate::util::rng::Rng;
+
+/// One training/eval example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    /// Conditioning text (loss-masked during SFT), may be empty.
+    pub prompt: String,
+    /// Target text (loss-bearing).
+    pub completion: String,
+    /// Reference answer for exact-match tasks (e.g. "42" for math).
+    pub answer: Option<String>,
+}
+
+/// Which synthetic task to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// WikiText-like prose LM.
+    Wiki,
+    /// Arithmetic word problems with CoT + `#### n` answers.
+    Math,
+    /// Document -> summary pairs.
+    Summarize,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "wiki" => Some(TaskKind::Wiki),
+            "math" => Some(TaskKind::Math),
+            "summarize" => Some(TaskKind::Summarize),
+            _ => None,
+        }
+    }
+}
+
+/// Generate `n` examples of `task` with a seeded RNG. `style` shifts the
+/// distribution (0 = pretraining corpus, 1 = finetuning corpus, ...).
+pub fn generate(task: TaskKind, n: usize, seed: u64, style: u32) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ ((style as u64) << 32));
+    (0..n)
+        .map(|_| match task {
+            TaskKind::Wiki => wiki_example(&mut rng, style),
+            TaskKind::Math => math_example(&mut rng, style),
+            TaskKind::Summarize => summarize_example(&mut rng, style),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Wiki-like prose
+// ---------------------------------------------------------------------------
+
+const SUBJECTS: &[&str] = &[
+    "the river", "the empire", "the composer", "the festival", "the theorem",
+    "the village", "the engine", "the treaty", "the comet", "the cathedral",
+    "the archive", "the glacier", "the railway", "the senate", "the harbor",
+];
+const VERBS: &[&str] = &[
+    "was founded in", "was described by", "flows through", "was composed during",
+    "collapsed after", "expanded across", "was restored in", "was observed near",
+    "was signed at", "was excavated from",
+];
+const OBJECTS: &[&str] = &[
+    "the northern province", "the early dynasty", "the industrial era",
+    "the coastal region", "the winter campaign", "the old quarter",
+    "the great survey", "the second council", "the silk route", "the high plateau",
+];
+const CONNECTIVES: &[&str] = &["and", "while", "although", "because", "whereas"];
+// style-1 (finetuning) vocabulary shift: domain-specific jargon
+const SHIFT_OBJECTS: &[&str] = &[
+    "the orbital station", "the quantum archive", "the fusion grid",
+    "the lunar colony", "the neural lattice",
+];
+
+fn wiki_sentence(rng: &mut Rng, style: u32) -> String {
+    let s = SUBJECTS[rng.zipf(SUBJECTS.len(), 1.1)];
+    let v = VERBS[rng.zipf(VERBS.len(), 1.1)];
+    let objs: &[&str] = if style > 0 && rng.next_f64() < 0.5 {
+        SHIFT_OBJECTS
+    } else {
+        OBJECTS
+    };
+    let o = objs[rng.zipf(objs.len(), 1.1)];
+    let year = 1400 + rng.below(600);
+    if rng.next_f64() < 0.35 {
+        let c = CONNECTIVES[rng.below(CONNECTIVES.len())];
+        let s2 = SUBJECTS[rng.zipf(SUBJECTS.len(), 1.1)];
+        let v2 = VERBS[rng.zipf(VERBS.len(), 1.1)];
+        let o2 = objs[rng.zipf(objs.len(), 1.1)];
+        format!("{s} {v} {o} in {year} {c} {s2} {v2} {o2} .")
+    } else {
+        format!("{s} {v} {o} in {year} .")
+    }
+}
+
+fn wiki_example(rng: &mut Rng, style: u32) -> Example {
+    let n_sent = rng.range(2, 6);
+    let text = (0..n_sent)
+        .map(|_| wiki_sentence(rng, style))
+        .collect::<Vec<_>>()
+        .join(" ");
+    Example {
+        prompt: String::new(),
+        completion: text,
+        answer: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GSM8K-style arithmetic with chain of thought
+// ---------------------------------------------------------------------------
+
+const NAMES: &[&str] = &["ava", "liam", "mia", "noah", "zoe", "eli", "ida", "max"];
+const ITEMS: &[&str] = &["apples", "coins", "books", "stones", "cards", "shells"];
+// style-1 (finetuning) distribution shift: new entities, same arithmetic
+// (keeps the numeric vocabulary identical so small-vocab tokenizers can
+// still emit every answer).
+const SHIFT_NAMES: &[&str] = &["kira", "omar", "tess", "remy", "june", "axel"];
+const SHIFT_ITEMS: &[&str] = &["gears", "seeds", "tiles", "pins"];
+
+fn math_example(rng: &mut Rng, style: u32) -> Example {
+    let (names, items): (&[&str], &[&str]) = if style == 0 {
+        (NAMES, ITEMS)
+    } else {
+        (SHIFT_NAMES, SHIFT_ITEMS)
+    };
+    let name = names[rng.below(names.len())];
+    let item = items[rng.below(items.len())];
+    let hi = 10;
+    let a = rng.range(2, hi);
+    let b = rng.range(2, hi);
+    let c = rng.range(2, 6);
+    // two templates: (a + b) * c and a * c + b
+    if rng.next_f64() < 0.5 {
+        let ans = (a + b) * c;
+        Example {
+            prompt: format!(
+                "question : {name} has {a} {item} and finds {b} more , each of {c} friends matches the total . how many in all ?"
+            ),
+            completion: format!(
+                "answer : first {a} + {b} = {} . then {} * {c} = {ans} . #### {ans}",
+                a + b,
+                a + b
+            ),
+            answer: Some(ans.to_string()),
+        }
+    } else {
+        let ans = a * c + b;
+        Example {
+            prompt: format!(
+                "question : {name} packs {c} boxes of {a} {item} and keeps {b} aside . how many in all ?"
+            ),
+            completion: format!(
+                "answer : first {a} * {c} = {} . then {} + {b} = {ans} . #### {ans}",
+                a * c,
+                a * c
+            ),
+            answer: Some(ans.to_string()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Summarization pairs
+// ---------------------------------------------------------------------------
+
+fn summarize_example(rng: &mut Rng, style: u32) -> Example {
+    // A document of topic sentences + filler noise; summary = topic
+    // sentences in order. Learnable signal: topic sentences start with a
+    // marker word and the model must copy them.
+    // Kept short so document + summary fit the small presets' context
+    // windows (truncated prompts destroy the copy signal).
+    let n_topics = 1;
+    let n_noise = rng.range(1, 3);
+    let mut sentences: Vec<(bool, String)> = Vec::new();
+    for _ in 0..n_topics {
+        sentences.push((true, format!("topic {}", wiki_sentence(rng, style))));
+    }
+    for _ in 0..n_noise {
+        sentences.push((false, wiki_sentence(rng, style)));
+    }
+    rng.shuffle(&mut sentences);
+    let doc = sentences
+        .iter()
+        .map(|(_, s)| s.as_str())
+        .collect::<Vec<_>>()
+        .join(" ");
+    let summary = sentences
+        .iter()
+        .filter(|(t, _)| *t)
+        .map(|(_, s)| s.trim_start_matches("topic ").to_string())
+        .collect::<Vec<_>>()
+        .join(" ");
+    Example {
+        prompt: format!("document : {doc} summary :"),
+        completion: summary,
+        answer: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(TaskKind::Wiki, 10, 7, 0);
+        let b = generate(TaskKind::Wiki, 10, 7, 0);
+        assert_eq!(a, b);
+        let c = generate(TaskKind::Wiki, 10, 8, 0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn style_shifts_distribution() {
+        let pre = generate(TaskKind::Wiki, 200, 7, 0);
+        let fin = generate(TaskKind::Wiki, 200, 7, 1);
+        let has_shift = |ex: &[Example]| {
+            ex.iter()
+                .any(|e| SHIFT_OBJECTS.iter().any(|o| e.completion.contains(o)))
+        };
+        assert!(!has_shift(&pre));
+        assert!(has_shift(&fin));
+    }
+
+    #[test]
+    fn math_answers_are_consistent() {
+        for ex in generate(TaskKind::Math, 100, 3, 1) {
+            let ans = ex.answer.unwrap();
+            assert!(
+                ex.completion.trim_end().ends_with(&format!("#### {ans}")),
+                "{}",
+                ex.completion
+            );
+            // recompute from the prompt numbers via the CoT line
+            assert!(ex.completion.contains('='));
+        }
+    }
+
+    #[test]
+    fn math_cot_arithmetic_is_correct() {
+        for ex in generate(TaskKind::Math, 50, 11, 0) {
+            // every "x OP y = z" step in the CoT must be true
+            for step in ex.completion.split('.') {
+                let toks: Vec<&str> = step.split_whitespace().collect();
+                for w in toks.windows(5) {
+                    if w[3] == "=" {
+                        if let (Ok(x), Ok(y), Ok(z)) =
+                            (w[0].parse::<i64>(), w[2].parse::<i64>(), w[4].parse::<i64>())
+                        {
+                            match w[1] {
+                                "+" => assert_eq!(x + y, z, "{step}"),
+                                "*" => assert_eq!(x * y, z, "{step}"),
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn summaries_are_subsets_of_documents() {
+        for ex in generate(TaskKind::Summarize, 50, 5, 0) {
+            assert!(ex.prompt.starts_with("document :"));
+            // each summary sentence appears in the document (after the
+            // "topic" marker is stripped)
+            for sent in ex.completion.split(" . ") {
+                let key = sent.split_whitespace().take(3).collect::<Vec<_>>().join(" ");
+                assert!(ex.prompt.contains(&key), "missing '{key}' in doc");
+            }
+        }
+    }
+
+    #[test]
+    fn wiki_prompt_is_empty() {
+        for ex in generate(TaskKind::Wiki, 5, 1, 0) {
+            assert!(ex.prompt.is_empty());
+            assert!(!ex.completion.is_empty());
+        }
+    }
+}

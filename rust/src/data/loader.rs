@@ -1,0 +1,450 @@
+//! Batching: examples -> fixed-shape (tokens, mask) arrays for the AOT
+//! graphs, with loss masking for SFT tasks and stream packing for LM
+//! tasks, plus a bounded-channel prefetch thread (the backpressure
+//! design DESIGN.md §7 calls out).
+//!
+//! Graph contract (manifest `inputs.data`):
+//!   tokens  (B, T+1) i32 — input row t, target row t+1
+//!   mask    (B, T)   f32 — 1.0 where target position t+1 bears loss
+
+use std::sync::mpsc;
+
+use crate::data::corpus::{Example, TaskKind};
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::util::rng::Rng;
+
+/// One fixed-shape training/eval batch (row-major flat storage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// (batch, seq+1) i32.
+    pub tokens: Vec<i32>,
+    /// (batch, seq) f32.
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    /// Number of loss-bearing target tokens.
+    pub fn loss_tokens(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// One tokenized example: full id sequence + index of the first
+/// loss-bearing *target* token (prompt tokens are loss-masked).
+#[derive(Clone, Debug)]
+struct Encoded {
+    ids: Vec<i32>,
+    loss_start: usize,
+}
+
+/// Deterministic train/eval batcher over a synthetic corpus.
+#[derive(Clone)]
+pub struct Loader {
+    tok: Tokenizer,
+    task: TaskKind,
+    train: Vec<Encoded>,
+    eval: Vec<Encoded>,
+    /// Raw eval examples (decode-time answer checking, ROUGE refs).
+    eval_examples: Vec<Example>,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+/// Fraction of examples held out for evaluation.
+const EVAL_FRAC: f64 = 0.1;
+
+impl Loader {
+    /// Generate `documents` examples of `task` (distribution `style`),
+    /// build a tokenizer over them, and split train/eval.
+    pub fn new(
+        task: TaskKind,
+        documents: usize,
+        seed: u64,
+        style: u32,
+        vocab: usize,
+        batch: usize,
+        seq: usize,
+    ) -> Loader {
+        let examples = crate::data::corpus::generate(task, documents, seed, style);
+        let texts: Vec<String> = examples
+            .iter()
+            .map(|e| format!("{} {}", e.prompt, e.completion))
+            .collect();
+        let tok = Tokenizer::build(texts.iter().map(|s| s.as_str()), vocab);
+        Self::from_examples(task, examples, tok, seed, batch, seq)
+    }
+
+    /// The pretrain→finetune pair: one tokenizer built over the union
+    /// of both distributions, so token ids stay aligned across phases
+    /// (a finetuning run must see the pretrained embedding rows it
+    /// expects). Returns (style-0 pretrain loader, style-1 finetune
+    /// loader).
+    pub fn pretrain_finetune_pair(
+        task: TaskKind,
+        documents: usize,
+        seed: u64,
+        vocab: usize,
+        batch: usize,
+        seq: usize,
+    ) -> (Loader, Loader) {
+        let pre = crate::data::corpus::generate(task, documents, seed, 0);
+        let fin = crate::data::corpus::generate(task, documents, seed ^ 0x5EED, 1);
+        let texts: Vec<String> = pre
+            .iter()
+            .chain(fin.iter())
+            .map(|e| format!("{} {}", e.prompt, e.completion))
+            .collect();
+        let tok = Tokenizer::build(texts.iter().map(|s| s.as_str()), vocab);
+        (
+            Self::from_examples(task, pre, tok.clone(), seed, batch, seq),
+            Self::from_examples(task, fin, tok, seed.wrapping_add(1), batch, seq),
+        )
+    }
+
+    /// Build from pre-generated examples and an existing tokenizer (so a
+    /// finetuning run can reuse the pretraining vocabulary).
+    pub fn from_examples(
+        task: TaskKind,
+        examples: Vec<Example>,
+        tok: Tokenizer,
+        seed: u64,
+        batch: usize,
+        seq: usize,
+    ) -> Loader {
+        assert!(!examples.is_empty());
+        let n_eval = ((examples.len() as f64 * EVAL_FRAC) as usize).clamp(1, examples.len() - 1);
+        let (eval_ex, train_ex) = examples.split_at(n_eval);
+
+        let encode = |exs: &[Example]| -> Vec<Encoded> {
+            match task {
+                // LM: pack the document stream into full-length rows so
+                // every position bears loss (WikiText protocol).
+                TaskKind::Wiki => pack_stream(exs, &tok, seq),
+                // SFT: one example per row, loss only on the completion.
+                _ => exs.iter().map(|e| encode_sft(e, &tok)).collect(),
+            }
+        };
+        let train = encode(train_ex);
+        let eval = encode(eval_ex);
+        let order: Vec<usize> = (0..train.len()).collect();
+        Loader {
+            tok,
+            task,
+            train,
+            eval,
+            eval_examples: eval_ex.to_vec(),
+            batch,
+            seq,
+            rng: Rng::new(seed ^ 0xBA7C4),
+            order,
+            cursor: 0,
+        }
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
+    }
+
+    pub fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    pub fn num_train(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn num_eval(&self) -> usize {
+        self.eval.len()
+    }
+
+    /// Raw held-out examples (prompts + reference answers).
+    pub fn eval_examples(&self) -> &[Example] {
+        &self.eval_examples
+    }
+
+    /// Next training batch; reshuffles at each epoch boundary.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut rows = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor == 0 {
+                self.rng.shuffle(&mut self.order);
+            }
+            rows.push(&self.train[self.order[self.cursor]]);
+            self.cursor = (self.cursor + 1) % self.order.len();
+        }
+        build_batch(&rows, self.batch, self.seq)
+    }
+
+    /// Deterministic eval batches covering the held-out split once.
+    pub fn eval_batches(&self) -> Vec<Batch> {
+        self.eval
+            .chunks(self.batch)
+            .map(|chunk| {
+                // Repeat the last row to fill the fixed batch dimension;
+                // padding rows carry zero mask so they are loss-inert.
+                let mut rows: Vec<&Encoded> = chunk.iter().collect();
+                let pad = Encoded {
+                    ids: vec![],
+                    loss_start: 0,
+                };
+                let padded: Vec<Encoded> =
+                    (rows.len()..self.batch).map(|_| pad.clone()).collect();
+                rows.extend(padded.iter());
+                build_batch(&rows, self.batch, self.seq)
+            })
+            .collect()
+    }
+
+    /// Encode a raw prompt for the greedy-decode driver: [BOS] + prompt.
+    pub fn encode_prompt(&self, prompt: &str) -> Vec<i32> {
+        let mut ids = vec![BOS];
+        ids.extend(self.tok.encode(prompt));
+        ids
+    }
+
+    /// Move the loader onto a prefetch thread with a bounded queue.
+    pub fn prefetch(self, capacity: usize) -> Prefetcher {
+        Prefetcher::spawn(self, capacity)
+    }
+}
+
+/// SFT encoding: [BOS] prompt completion [EOS]; loss starts at the first
+/// completion *target*.
+fn encode_sft(e: &Example, tok: &Tokenizer) -> Encoded {
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(&e.prompt));
+    let loss_start = ids.len().saturating_sub(1); // target index of first completion token
+    ids.extend(tok.encode(&e.completion));
+    ids.push(EOS);
+    Encoded { ids, loss_start }
+}
+
+/// LM packing: concatenate `[BOS] doc [EOS]` streams into rows of
+/// exactly seq+1 ids; every target position bears loss.
+fn pack_stream(exs: &[Example], tok: &Tokenizer, seq: usize) -> Vec<Encoded> {
+    let mut stream: Vec<i32> = Vec::new();
+    for e in exs {
+        stream.push(BOS);
+        stream.extend(tok.encode(&e.completion));
+        stream.push(EOS);
+    }
+    let row_len = seq + 1;
+    let mut rows = Vec::new();
+    let mut i = 0;
+    while i + row_len <= stream.len() {
+        rows.push(Encoded {
+            ids: stream[i..i + row_len].to_vec(),
+            loss_start: 0,
+        });
+        i += seq; // overlap by one so no target is skipped between rows
+    }
+    if rows.is_empty() {
+        // Tiny corpora still produce one (padded) row.
+        rows.push(Encoded {
+            ids: stream,
+            loss_start: 0,
+        });
+    }
+    rows
+}
+
+/// Assemble fixed-shape arrays from encoded rows (truncate/pad to T+1).
+fn build_batch(rows: &[&Encoded], batch: usize, seq: usize) -> Batch {
+    assert_eq!(rows.len(), batch);
+    let row_len = seq + 1;
+    let mut tokens = vec![PAD; batch * row_len];
+    let mut mask = vec![0.0f32; batch * seq];
+    for (r, enc) in rows.iter().enumerate() {
+        let n = enc.ids.len().min(row_len);
+        tokens[r * row_len..r * row_len + n].copy_from_slice(&enc.ids[..n]);
+        // target position t predicts tokens[t+1]; it bears loss iff the
+        // target is real (not padding) and at/after loss_start.
+        for t in enc.loss_start..seq {
+            if t + 1 < n {
+                mask[r * seq + t] = 1.0;
+            }
+        }
+    }
+    Batch {
+        tokens,
+        mask,
+        batch,
+        seq,
+    }
+}
+
+/// A bounded-queue prefetch thread wrapping a [`Loader`].
+///
+/// The channel capacity bounds in-flight batches, so a slow consumer
+/// (the device) applies backpressure to the producer thread.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Batch>,
+    handle: Option<std::thread::JoinHandle<Loader>>,
+    stop_tx: mpsc::Sender<()>,
+}
+
+impl Prefetcher {
+    fn spawn(mut loader: Loader, capacity: usize) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+        let (stop_tx, stop_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            loop {
+                if stop_rx.try_recv().is_ok() {
+                    break;
+                }
+                let b = loader.next_batch();
+                if tx.send(b).is_err() {
+                    break;
+                }
+            }
+            loader
+        });
+        Prefetcher {
+            rx,
+            handle: Some(handle),
+            stop_tx,
+        }
+    }
+
+    /// Blocking receive of the next batch.
+    pub fn next_batch(&self) -> Batch {
+        self.rx
+            .recv()
+            .expect("prefetch thread terminated unexpectedly")
+    }
+
+    /// Stop the thread and recover the loader.
+    pub fn stop(mut self) -> Loader {
+        let _ = self.stop_tx.send(());
+        // Drain so a blocked send unblocks.
+        while self.rx.try_recv().is_ok() {}
+        let handle = self.handle.take().unwrap();
+        // Keep draining until the thread observes the stop signal.
+        loop {
+            match self.rx.recv_timeout(std::time::Duration::from_millis(10)) {
+                Ok(_) => continue,
+                Err(_) if handle.is_finished() => break,
+                Err(_) => continue,
+            }
+        }
+        handle.join().expect("prefetch thread panicked")
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        let _ = self.stop_tx.send(());
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            while !h.is_finished() {
+                while self.rx.try_recv().is_ok() {}
+                std::thread::yield_now();
+            }
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loader(task: TaskKind) -> Loader {
+        Loader::new(task, 100, 7, 0, 512, 4, 32)
+    }
+
+    #[test]
+    fn batch_shapes_fixed() {
+        let mut l = loader(TaskKind::Math);
+        for _ in 0..5 {
+            let b = l.next_batch();
+            assert_eq!(b.tokens.len(), 4 * 33);
+            assert_eq!(b.mask.len(), 4 * 32);
+        }
+    }
+
+    #[test]
+    fn sft_masks_prompt() {
+        let mut l = loader(TaskKind::Math);
+        let b = l.next_batch();
+        for r in 0..b.batch {
+            // the prompt region has zero mask: first few targets masked out
+            assert_eq!(b.mask[r * b.seq], 0.0, "row {r} leaks prompt loss");
+            // some completion positions bear loss
+            assert!(b.mask[r * b.seq..(r + 1) * b.seq].iter().any(|&m| m > 0.0));
+        }
+    }
+
+    #[test]
+    fn wiki_packs_full_rows() {
+        let mut l = loader(TaskKind::Wiki);
+        let b = l.next_batch();
+        // packed LM rows: every target position bears loss
+        assert!(b.loss_tokens() >= 4 * 31, "{}", b.loss_tokens());
+    }
+
+    #[test]
+    fn mask_never_covers_padding() {
+        let mut l = loader(TaskKind::Summarize);
+        for _ in 0..10 {
+            let b = l.next_batch();
+            for r in 0..b.batch {
+                for t in 0..b.seq {
+                    if b.mask[r * b.seq + t] > 0.0 {
+                        assert_ne!(b.tokens[r * (b.seq + 1) + t + 1], PAD);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = loader(TaskKind::Math);
+        let mut b = loader(TaskKind::Math);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn eval_batches_cover_split_once() {
+        let l = loader(TaskKind::Math);
+        let evs = l.eval_batches();
+        assert_eq!(evs.len(), l.num_eval().div_ceil(4));
+        // deterministic
+        assert_eq!(l.eval_batches(), evs);
+    }
+
+    #[test]
+    fn epoch_reshuffles() {
+        let mut l = Loader::new(TaskKind::Math, 40, 3, 0, 512, 4, 32);
+        let epoch_batches = l.num_train() / 4;
+        let first: Vec<Batch> = (0..epoch_batches).map(|_| l.next_batch()).collect();
+        let second: Vec<Batch> = (0..epoch_batches).map(|_| l.next_batch()).collect();
+        assert_ne!(first, second, "epochs should differ in order");
+    }
+
+    #[test]
+    fn prefetcher_delivers_same_stream() {
+        let mut plain = loader(TaskKind::Wiki);
+        let expected: Vec<Batch> = (0..6).map(|_| plain.next_batch()).collect();
+        let pf = loader(TaskKind::Wiki).prefetch(2);
+        for e in &expected {
+            assert_eq!(&pf.next_batch(), e);
+        }
+        pf.stop();
+    }
+
+    #[test]
+    fn encode_prompt_starts_with_bos() {
+        let l = loader(TaskKind::Math);
+        let ids = l.encode_prompt("question : ava has 2 apples");
+        assert_eq!(ids[0], BOS);
+        assert!(ids.len() > 1);
+    }
+}

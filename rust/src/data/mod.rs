@@ -1,0 +1,22 @@
+//! Synthetic-data pipeline: corpora, tokenizer, batching, prefetching.
+//!
+//! Substitutes for the paper's datasets (DESIGN.md §Substitutions):
+//!   * [`wiki`]    — WikiText-2 stand-in: Zipf-vocabulary templated prose
+//!                   (perplexity finetuning, Table 4).
+//!   * [`math`]    — GSM8K / OpenR1 stand-in: arithmetic word problems
+//!                   with chain-of-thought and `#### <answer>` finals
+//!                   (exact-match / pass@1, Tables 4, 5, 10).
+//!   * [`summarize`] — XSum/CNN-DM stand-in: noisy documents with topic
+//!                   sentences; target = the topic sentences (ROUGE,
+//!                   Table 3).
+//!
+//! All generators are deterministic in their seed, so the "pretrain on
+//! corpus A, finetune on shifted corpus B" protocol is reproducible.
+
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::{Example, TaskKind};
+pub use loader::{Batch, Loader};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,200 @@
+//! Word-level tokenizer with byte fallback.
+//!
+//! The synthetic corpora are word-generated, so a word vocabulary built
+//! from the generator's lexicon covers them exactly; rare/unknown
+//! strings fall back to byte tokens, so *any* text round-trips.
+//!
+//! Token-id layout (vocab_size >= 512, the byte-fallback layout):
+//!   0            PAD
+//!   1            BOS
+//!   2            EOS
+//!   3..3+256    byte fallback tokens
+//!   259..       word tokens (most frequent first)
+//!
+//! For small vocabularies (< 512, e.g. the `tiny` test preset) byte
+//! fallback cannot fit; unknown words collapse to a single UNK token:
+//!   0 PAD, 1 BOS, 2 EOS, 3 UNK, 4.. word tokens.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// UNK id in the compact (small-vocab) layout.
+pub const UNK: i32 = 3;
+const BYTE_BASE: i32 = 3;
+const WORD_BASE: i32 = 259;
+/// Smallest vocab that uses the byte-fallback layout.
+const BYTE_LAYOUT_MIN: usize = 512;
+
+/// A frozen word-level vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab_size: usize,
+    byte_fallback: bool,
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from a corpus iterator, keeping the most frequent words that
+    /// fit into `vocab_size` (ties broken lexicographically for
+    /// determinism).
+    pub fn build<'a>(texts: impl Iterator<Item = &'a str>, vocab_size: usize) -> Tokenizer {
+        let byte_fallback = vocab_size >= BYTE_LAYOUT_MIN;
+        let word_base = if byte_fallback { WORD_BASE } else { UNK + 1 };
+        assert!(vocab_size as i32 > word_base, "vocab too small");
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        for t in texts {
+            for w in t.split_whitespace() {
+                *counts.entry(w.to_string()).or_insert(0) += 1;
+            }
+        }
+        let mut words: Vec<(String, u64)> = counts.into_iter().collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        words.truncate(vocab_size - word_base as usize);
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word = Vec::new();
+        for (i, (w, _)) in words.iter().enumerate() {
+            word_to_id.insert(w.clone(), word_base + i as i32);
+            id_to_word.push(w.clone());
+        }
+        Tokenizer {
+            vocab_size,
+            byte_fallback,
+            word_to_id,
+            id_to_word,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    /// Number of known words.
+    pub fn num_words(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    /// Encode text (whitespace-split words; unknown words become byte
+    /// tokens). No BOS/EOS — callers add framing.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for w in text.split_whitespace() {
+            match self.word_to_id.get(w) {
+                Some(&id) => out.push(id),
+                None if self.byte_fallback => {
+                    out.extend(w.bytes().map(|b| BYTE_BASE + b as i32))
+                }
+                None => out.push(UNK),
+            }
+        }
+        out
+    }
+
+    /// Decode ids back to a string (byte tokens are merged per run).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut byte_run: Vec<u8> = Vec::new();
+        let flush = |run: &mut Vec<u8>, parts: &mut Vec<String>| {
+            if !run.is_empty() {
+                parts.push(String::from_utf8_lossy(run).into_owned());
+                run.clear();
+            }
+        };
+        let word_base = if self.byte_fallback { WORD_BASE } else { UNK + 1 };
+        for &id in ids {
+            if id == PAD || id == BOS {
+                continue;
+            }
+            if id == EOS {
+                break;
+            }
+            if self.byte_fallback && (BYTE_BASE..BYTE_BASE + 256).contains(&id) {
+                byte_run.push((id - BYTE_BASE) as u8);
+            } else if !self.byte_fallback && id == UNK {
+                flush(&mut byte_run, &mut parts);
+                parts.push("<unk>".to_string());
+            } else {
+                flush(&mut byte_run, &mut parts);
+                let wi = (id - word_base) as usize;
+                if wi < self.id_to_word.len() {
+                    parts.push(self.id_to_word[wi].clone());
+                }
+            }
+        }
+        flush(&mut byte_run, &mut parts);
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        let texts = ["the cat sat on the mat", "the dog sat too"];
+        Tokenizer::build(texts.iter().copied(), 512)
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = tok();
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+        assert_eq!(ids.len(), 3);
+    }
+
+    #[test]
+    fn unknown_words_fall_back_to_bytes() {
+        let t = tok();
+        let ids = t.encode("zebra");
+        assert_eq!(ids.len(), 5); // 5 bytes
+        assert_eq!(t.decode(&ids), "zebra");
+    }
+
+    #[test]
+    fn frequency_ordering() {
+        let t = tok();
+        // "the" (3x) must have the smallest word id
+        let the_id = t.encode("the")[0];
+        let dog_id = t.encode("dog")[0];
+        assert!(the_id < dog_id);
+    }
+
+    #[test]
+    fn special_tokens_respected() {
+        let t = tok();
+        assert_eq!(t.decode(&[BOS, PAD]), "");
+        let mut ids = t.encode("the cat");
+        ids.push(EOS);
+        ids.extend(t.encode("dog")); // after EOS: ignored
+        assert_eq!(t.decode(&ids), "the cat");
+    }
+
+    #[test]
+    fn compact_layout_for_small_vocab() {
+        let texts = ["the cat sat on the mat"];
+        let t = Tokenizer::build(texts.iter().copied(), 256);
+        let ids = t.encode("the cat sat");
+        assert_eq!(ids.len(), 3);
+        assert_eq!(t.decode(&ids), "the cat sat");
+        // unknown words become UNK, not bytes
+        let unk = t.encode("zebra");
+        assert_eq!(unk, vec![UNK]);
+        assert_eq!(t.decode(&unk), "<unk>");
+        // all ids stay below the declared vocab
+        assert!(ids.iter().all(|&i| (i as usize) < 256));
+    }
+
+    #[test]
+    fn vocab_capacity_respected() {
+        let texts = ["a b c d e f g h"];
+        // byte-fallback layout: 562 - 259 = 303 slots, all 8 words fit
+        let t = Tokenizer::build(texts.iter().copied(), 562);
+        assert_eq!(t.num_words(), 8);
+        // compact layout: 7 - 4 = 3 word slots
+        let t = Tokenizer::build(texts.iter().copied(), 7);
+        assert_eq!(t.num_words(), 3);
+    }
+}

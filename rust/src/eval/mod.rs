@@ -1,0 +1,321 @@
+//! Evaluation metrics used by the paper's tables:
+//!
+//! * perplexity from summed NLL          — Table 4 (WikiText-2)
+//! * ROUGE-1 / ROUGE-2 / ROUGE-L (F1)    — Table 3 (XSum, CNN/DailyMail)
+//! * `#### n` answer extraction + pass@1 — Tables 4, 5, 10 (GSM8K-style)
+
+use std::collections::HashMap;
+
+/// Perplexity = exp(total_nll / token_count).
+pub fn perplexity(sum_nll: f64, token_count: f64) -> f64 {
+    if token_count <= 0.0 {
+        return f64::INFINITY;
+    }
+    (sum_nll / token_count).exp()
+}
+
+// ---------------------------------------------------------------------------
+// ROUGE
+// ---------------------------------------------------------------------------
+
+/// ROUGE-1/2/L F1 scores (percent, as the paper reports them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rouge {
+    pub r1: f64,
+    pub r2: f64,
+    pub rl: f64,
+}
+
+fn tokens(text: &str) -> Vec<&str> {
+    text.split_whitespace().collect()
+}
+
+fn ngram_counts<'a>(toks: &[&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if toks.len() >= n {
+        for w in toks.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+fn f1(overlap: f64, cand: f64, refr: f64) -> f64 {
+    if cand == 0.0 || refr == 0.0 || overlap == 0.0 {
+        return 0.0;
+    }
+    let p = overlap / cand;
+    let r = overlap / refr;
+    2.0 * p * r / (p + r)
+}
+
+/// ROUGE-N F1 between candidate and reference (clipped n-gram overlap).
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> f64 {
+    let c = ngram_counts(&tokens(candidate), n);
+    let r = ngram_counts(&tokens(reference), n);
+    let overlap: usize = c
+        .iter()
+        .map(|(g, &cc)| cc.min(r.get(g).copied().unwrap_or(0)))
+        .sum();
+    let cn: usize = c.values().sum();
+    let rn: usize = r.values().sum();
+    f1(overlap as f64, cn as f64, rn as f64)
+}
+
+/// Longest common subsequence length (O(n·m) DP, two rows).
+fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 (sequence-level LCS).
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c = tokens(candidate);
+    let r = tokens(reference);
+    f1(lcs_len(&c, &r) as f64, c.len() as f64, r.len() as f64)
+}
+
+/// All three ROUGE scores, scaled to percent.
+pub fn rouge(candidate: &str, reference: &str) -> Rouge {
+    Rouge {
+        r1: 100.0 * rouge_n(candidate, reference, 1),
+        r2: 100.0 * rouge_n(candidate, reference, 2),
+        rl: 100.0 * rouge_l(candidate, reference),
+    }
+}
+
+/// Corpus-level ROUGE: mean of per-pair F1 (the convention the
+/// summarization literature reports).
+pub fn rouge_corpus(pairs: &[(String, String)]) -> Rouge {
+    assert!(!pairs.is_empty());
+    let mut acc = Rouge {
+        r1: 0.0,
+        r2: 0.0,
+        rl: 0.0,
+    };
+    for (c, r) in pairs {
+        let s = rouge(c, r);
+        acc.r1 += s.r1;
+        acc.r2 += s.r2;
+        acc.rl += s.rl;
+    }
+    let n = pairs.len() as f64;
+    Rouge {
+        r1: acc.r1 / n,
+        r2: acc.r2 / n,
+        rl: acc.rl / n,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Math answers / pass@1
+// ---------------------------------------------------------------------------
+
+/// Extract the final answer after the last `####` marker (GSM8K
+/// convention; our synthetic corpus emits `#### <n>`).
+pub fn extract_answer(text: &str) -> Option<String> {
+    let idx = text.rfind("####")?;
+    let tail = &text[idx + 4..];
+    let ans: String = tail
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || *c == '-' || *c == '.')
+        .collect();
+    if ans.is_empty() {
+        None
+    } else {
+        Some(ans)
+    }
+}
+
+/// Exact-match between an extracted answer and the reference.
+pub fn exact_match(prediction: &str, reference: &str) -> bool {
+    match extract_answer(prediction) {
+        Some(a) => a == reference.trim(),
+        None => false,
+    }
+}
+
+/// pass@1 (percent) over (prediction, reference-answer) pairs — first
+/// and only attempt per problem, the paper's Table 5 protocol.
+pub fn pass_at_1(pairs: &[(String, String)]) -> f64 {
+    assert!(!pairs.is_empty());
+    let hits = pairs.iter().filter(|(p, r)| exact_match(p, r)).count();
+    100.0 * hits as f64 / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // NLL = ln(V) per token over V-way uniform => ppl = V
+        let v: f64 = 256.0;
+        let ppl = perplexity(v.ln() * 100.0, 100.0);
+        assert!((ppl - v).abs() < 1e-6);
+        assert!(perplexity(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn rouge1_identical_is_100() {
+        let s = "the river was founded in 1452";
+        let r = rouge(s, s);
+        assert!((r.r1 - 100.0).abs() < 1e-9);
+        assert!((r.r2 - 100.0).abs() < 1e-9);
+        assert!((r.rl - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_0() {
+        let r = rouge("aa bb cc", "xx yy zz");
+        assert_eq!(r.r1, 0.0);
+        assert_eq!(r.r2, 0.0);
+        assert_eq!(r.rl, 0.0);
+    }
+
+    #[test]
+    fn rouge1_known_value() {
+        // cand: 4 tokens, ref: 5 tokens, overlap 3 => P=3/4, R=3/5,
+        // F1 = 2*0.75*0.6/1.35 = 2/3
+        let f = rouge_n("a b c x", "a b c y z", 1);
+        assert!((f - 2.0 / 3.0).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn rouge2_counts_bigrams() {
+        // shared bigrams: "a b", "b c" => overlap 2; cand 3, ref 4
+        let f = rouge_n("a b c x", "a b c y z", 2);
+        let expect = f1(2.0, 3.0, 4.0);
+        assert!((f - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_l_subsequence_not_substring() {
+        // LCS("a x b y c", "a b c") = 3
+        let f = rouge_l("a x b y c", "a b c");
+        let expect = f1(3.0, 5.0, 3.0);
+        assert!((f - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_clips_repeats() {
+        // candidate repeats "the" 4x; reference has it once -> clipped to 1
+        let f = rouge_n("the the the the", "the cat", 1);
+        let expect = f1(1.0, 4.0, 2.0);
+        assert!((f - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corpus_rouge_averages() {
+        let pairs = vec![
+            ("a b".to_string(), "a b".to_string()),
+            ("x".to_string(), "y".to_string()),
+        ];
+        let r = rouge_corpus(&pairs);
+        assert!((r.r1 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extracts_final_answer() {
+        assert_eq!(
+            extract_answer("first 2 + 3 = 5 . #### 5").as_deref(),
+            Some("5")
+        );
+        // takes the LAST marker
+        assert_eq!(
+            extract_answer("#### 1 nope #### 42").as_deref(),
+            Some("42")
+        );
+        assert_eq!(extract_answer("no marker here"), None);
+        assert_eq!(extract_answer("#### "), None);
+    }
+
+    #[test]
+    fn exact_match_and_pass1() {
+        assert!(exact_match("steps ... #### 12", "12"));
+        assert!(!exact_match("steps ... #### 13", "12"));
+        let pairs = vec![
+            ("#### 1".to_string(), "1".to_string()),
+            ("#### 2".to_string(), "3".to_string()),
+        ];
+        assert_eq!(pass_at_1(&pairs), 50.0);
+    }
+
+    #[test]
+    fn rouge_properties() {
+        // F1 is symmetric in (candidate, reference) and bounded in
+        // [0, 100]; identical strings score 100.
+        crate::testkit::check("rouge f1 properties", 60, |g| {
+            let vocab = ["a", "b", "c", "d", "e", "f"];
+            let nc = g.usize_in(1, 12);
+            let nr = g.usize_in(1, 12);
+            let mut mk = |n: usize| -> String {
+                (0..n)
+                    .map(|_| *g.choose(&vocab))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            let c = mk(nc);
+            let r = mk(nr);
+            let s1 = rouge(&c, &r);
+            let s2 = rouge(&r, &c);
+            for (a, b) in [(s1.r1, s2.r1), (s1.r2, s2.r2), (s1.rl, s2.rl)] {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("asymmetric: {a} vs {b}"));
+                }
+                if !(0.0..=100.0 + 1e-9).contains(&a) {
+                    return Err(format!("out of range: {a}"));
+                }
+            }
+            let self_score = rouge(&c, &c);
+            if (self_score.r1 - 100.0).abs() > 1e-9 {
+                return Err("self score != 100".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rouge_l_bounded_by_rouge_1() {
+        // LCS overlap cannot exceed unigram overlap.
+        crate::testkit::check("rouge-L <= rouge-1", 60, |g| {
+            let vocab = ["x", "y", "z", "w"];
+            let nc = g.usize_in(1, 10);
+            let nr = g.usize_in(1, 10);
+            let mut mk = |n: usize| -> String {
+                (0..n)
+                    .map(|_| *g.choose(&vocab))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            let c = mk(nc);
+            let r = mk(nr);
+            let s = rouge(&c, &r);
+            if s.rl > s.r1 + 1e-9 {
+                return Err(format!("rl {} > r1 {}", s.rl, s.r1));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn negative_and_decimal_answers() {
+        assert_eq!(extract_answer("#### -7").as_deref(), Some("-7"));
+        assert_eq!(extract_answer("#### 3.5 end").as_deref(), Some("3.5"));
+    }
+}

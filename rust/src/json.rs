@@ -1,0 +1,408 @@
+//! Minimal JSON parser + writer (offline substitute for `serde_json`).
+//!
+//! Covers the full JSON grammar; used for `manifest.json`, metrics
+//! output, and bench result files. Not performance-critical.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // -- accessors ---------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m
+                .get(key)
+                .ok_or_else(|| anyhow!("missing key '{key}' in object")),
+            _ => bail!("expected object while reading key '{key}'"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+
+    /// Shape helper: `[4, 33]` -> `vec![4, 33]`.
+    pub fn as_shape(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    // -- constructors ------------------------------------------------------
+
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            entries
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing characters at offset {}", p.pos);
+    }
+    Ok(v)
+}
+
+/// Parse the JSON file at `path`.
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<Json> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!(
+                "expected '{}' at offset {}, got '{}'",
+                b as char,
+                self.pos - 1,
+                got as char
+            );
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected EOF"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(m)),
+                c => bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(v)),
+                c => bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    c => bail!("bad escape '\\{}'", c as char),
+                },
+                c if c < 0x80 => s.push(c as char),
+                c => {
+                    // re-decode UTF-8 multibyte sequence
+                    let start = self.pos - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    self.pos = start + len;
+                    let chunk = self
+                        .bytes
+                        .get(start..start + len)
+                        .ok_or_else(|| anyhow!("truncated UTF-8"))?;
+                    s.push_str(std::str::from_utf8(chunk)?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow!("bad number '{text}' at offset {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let j = parse(r#"{"a": 1, "b": [true, null, "x\n"], "c": -2.5e3}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("c").unwrap().as_f64().unwrap(), -2500.0);
+        let arr = j.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0], Json::Bool(true));
+        assert_eq!(arr[2].as_str().unwrap(), "x\n");
+        // serialize + reparse
+        let again = parse(&j.to_string()).unwrap();
+        assert_eq!(again, j);
+    }
+
+    #[test]
+    fn parses_manifest_like() {
+        let j = parse(
+            r#"{"inputs": {"trainable": [{"name": "q", "shape": [4, 33],
+                "dtype": "f32", "init": ["zeros", 0.0]}]}}"#,
+        )
+        .unwrap();
+        let t = &j.get("inputs").unwrap().get("trainable").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.get("shape").unwrap().as_shape().unwrap(), vec![4, 33]);
+        assert_eq!(t.get("init").unwrap().as_arr().unwrap()[0].as_str().unwrap(), "zeros");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let j = parse(r#""café ☕""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "café ☕");
+    }
+
+    #[test]
+    fn escapes_on_write() {
+        let j = Json::str("a\"b\\c\nd");
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn integers_stay_integral() {
+        assert_eq!(Json::num(42.0).to_string(), "42");
+        assert_eq!(Json::num(1.5).to_string(), "1.5");
+    }
+}

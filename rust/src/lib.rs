@@ -1,0 +1,54 @@
+//! # oftv2 — Orthogonal Finetuning Made Scalable (EMNLP 2025) in Rust
+//!
+//! A three-layer reproduction of the OFTv2/QOFT finetuning system:
+//!
+//! * **L3 (this crate)** — the finetuning *coordinator*: config system,
+//!   launcher, synthetic-data pipeline, training loop, evaluation,
+//!   checkpointing, quantization, memory accounting, and the benchmark
+//!   harness that regenerates every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — a JAX transformer with pluggable
+//!   PEFT adapters (LoRA / weight-centric OFT / input-centric OFTv2 /
+//!   QLoRA / QOFT), AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the paper's
+//!   hot spots (Cayley–Neumann build, block-diagonal input rotation,
+//!   NF4/AWQ dequantization), lowered into the same HLO.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO text
+//! via the PJRT C API (`xla` crate) and [`coordinator`] drives training
+//! with device-resident state.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod memmodel;
+pub mod modelspec;
+pub mod peft;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the repository's artifact directory: `$OFT_ARTIFACTS`, else
+/// `./artifacts` relative to the current dir, else relative to the
+/// crate manifest (so tests/benches work from any cwd).
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("OFT_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,326 @@
+//! `repro` — the OFTv2/QOFT finetuning launcher.
+//!
+//! Subcommands:
+//!   train    finetune one artifact bundle (config file + --set overrides)
+//!   eval     evaluate a bundle's initial state on its held-out split
+//!   decode   greedy-decode a prompt through a bundle
+//!   params   print the paper's trainable-parameter tables (Tables 3-5)
+//!   memory   print the analytic GPU-memory tables (Figs. 1/4, Table 11)
+//!   bundles  list available artifact bundles
+//!
+//! Examples:
+//!   repro train --tag tiny_oft_v2 --steps 50
+//!   repro train --config run.toml --set optim.lr=1e-4
+//!   repro params
+//!   repro memory --model qwen2.5-7b
+
+use anyhow::{bail, Context, Result};
+
+use oftv2::cli::{parse_raw, Command};
+use oftv2::config::RunCfg;
+use oftv2::coordinator::Trainer;
+use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::peft::{count_lora, count_oft};
+use oftv2::runtime::Engine;
+use oftv2::util::{human_count, human_bytes};
+use oftv2::{artifacts_root, log_info};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let raw = parse_raw(argv, /*expect_subcommand=*/ true)?;
+    match raw.subcommand.as_deref() {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("eval") => cmd_eval(&argv[1..]),
+        Some("decode") => cmd_decode(&argv[1..]),
+        Some("params") => cmd_params(),
+        Some("memory") => cmd_memory(&argv[1..]),
+        Some("bundles") => cmd_bundles(),
+        Some("inspect") => cmd_inspect(&argv[1..]),
+        Some(other) => bail!("unknown subcommand '{other}'\n\n{}", usage()),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "repro — OFTv2/QOFT finetuning framework (EMNLP 2025 reproduction)\n\n\
+     Subcommands:\n\
+     \x20 train    finetune one artifact bundle\n\
+     \x20 eval     evaluate a bundle without training\n\
+     \x20 decode   greedy-decode a prompt through a bundle\n\
+     \x20 params   trainable-parameter tables (paper Tables 3-5)\n\
+     \x20 memory   analytic GPU-memory tables (paper Figs. 1/4, Table 11)\n\
+     \x20 bundles  list available artifact bundles\n\
+     \x20 inspect  static HLO cost analysis of a bundle's graphs\n\n\
+     Run `repro <subcommand> --help` for options."
+}
+
+/// Shared config assembly: defaults <- --config file <- individual flags
+/// <- --set overrides.
+fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunCfg::from_file(path)?,
+        None => RunCfg::default(),
+    };
+    if let Some(tag) = args.get("tag") {
+        cfg.tag = tag.to_string();
+    }
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.log_every = args.get_usize("log-every", cfg.log_every)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.optim.lr = args.get_f64("lr", cfg.optim.lr)?;
+    if let Some(task) = args.get("task") {
+        cfg.data.task = task.to_string();
+    }
+    cfg.data.documents = args.get_usize("documents", cfg.data.documents)?;
+    if let Some(p) = args.get("init-from") {
+        cfg.init_from = Some(p.to_string());
+    }
+    if let Some(d) = args.get("out-dir") {
+        cfg.out_dir = Some(d.to_string());
+    }
+    // --set a.b=v (repeatable via comma separation)
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("--set expects key=value, got '{kv}'"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn train_command(name: &'static str, about: &'static str) -> Command {
+    Command::new(name, about)
+        .opt("config", "TOML run config file", None)
+        .opt("tag", "artifact bundle tag (e.g. tiny_oft_v2)", None)
+        .opt("steps", "optimizer steps", None)
+        .opt("seed", "master seed", None)
+        .opt("lr", "peak learning rate", None)
+        .opt("task", "data task: wiki | math | summarize", None)
+        .opt("documents", "synthetic corpus size", None)
+        .opt("log-every", "steps between log lines", None)
+        .opt("eval-every", "steps between evals (0 = off)", None)
+        .opt("init-from", "checkpoint to initialize from", None)
+        .opt("out-dir", "directory for history/checkpoint output", None)
+        .opt("set", "comma-separated config overrides a.b=v", None)
+        .opt("save-checkpoint", "path to write the final checkpoint", None)
+        .flag("help", "show help")
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = train_command("train", "finetune one artifact bundle");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let cfg = run_cfg(&args)?;
+    let engine = Engine::cpu()?;
+    log_info!("PJRT platform: {}", engine.platform());
+    let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
+    let history = trainer.train()?;
+    let (eval_loss, ppl) = trainer.evaluate()?;
+    println!(
+        "final: train_loss {:.4} -> {:.4}, eval_loss {eval_loss:.4}, ppl {ppl:.2}",
+        history.first_loss().unwrap_or(f64::NAN),
+        history.final_loss().unwrap_or(f64::NAN),
+    );
+    if let Some(path) = args.get("save-checkpoint") {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cmd = train_command("eval", "evaluate a bundle without training");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let cfg = run_cfg(&args)?;
+    let engine = Engine::cpu()?;
+    let trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
+    let (eval_loss, ppl) = trainer.evaluate()?;
+    println!(
+        "{}: eval_loss {eval_loss:.4}, perplexity {ppl:.2} ({} eval examples)",
+        trainer.manifest.tag,
+        trainer.loader.num_eval()
+    );
+    Ok(())
+}
+
+fn cmd_decode(argv: &[String]) -> Result<()> {
+    let cmd = train_command("decode", "greedy-decode a prompt")
+        .opt("prompt", "prompt text", Some("question :"))
+        .opt("max-new", "max generated tokens", Some("32"));
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let cfg = run_cfg(&args)?;
+    let prompt = args.get_or("prompt", "question :").to_string();
+    let max_new = args.get_usize("max-new", 32)?;
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
+    let out = trainer.complete(&prompt, max_new)?;
+    println!("prompt:    {prompt}");
+    println!("generated: {out}");
+    Ok(())
+}
+
+/// The `# Params` columns of Tables 3, 4, 5 from real model specs.
+fn cmd_params() -> Result<()> {
+    println!("Trainable parameters (paper Tables 3-5)\n");
+    println!("{:<18} {:>14} {:>14}", "model", "LoRA r=16", "OFTv2 b=32");
+    for spec in [
+        ModelSpec::llama2_7b(),
+        ModelSpec::llama2_13b(),
+        ModelSpec::qwen25("1.5b"),
+        ModelSpec::qwen25("7b"),
+        ModelSpec::qwen25("32b"),
+    ] {
+        println!(
+            "{:<18} {:>14} {:>14}",
+            spec.name,
+            human_count(count_lora(&spec, 16)),
+            human_count(count_oft(&spec, 32)),
+        );
+    }
+    println!("\nBART-large budget sweep (Table 3):");
+    let bart = ModelSpec::bart_large();
+    println!("{:<12} {:>10}   {:<12} {:>10}", "LoRA", "params", "OFTv2", "params");
+    for (r, b) in [(8usize, 16usize), (16, 32), (32, 64)] {
+        println!(
+            "{:<12} {:>10}   {:<12} {:>10}",
+            format!("r={r}"),
+            human_count(count_lora(&bart, r)),
+            format!("b={b}"),
+            human_count(count_oft(&bart, b)),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("memory", "analytic finetuning-memory tables")
+        .opt("model", "qwen2.5-<size> | llama2-7b | sd3.5-<size>", Some("qwen2.5-7b"))
+        .flag("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let name = args.get_or("model", "qwen2.5-7b");
+    let spec = parse_model(name)?;
+    let shape = TrainShape::default();
+    println!("Finetuning memory for {} (analytic model)\n", spec.name);
+    println!("{:<10} {:<6} {:>12}", "method", "prec", "total");
+    for (m, p) in [
+        (Method::OftWeightCentric { b: 32 }, Precision::Bf16),
+        (Method::OftInputCentric { b: 32 }, Precision::Bf16),
+        (Method::Lora { r: 16 }, Precision::Bf16),
+        (Method::OftInputCentric { b: 32 }, Precision::Nf4),
+        (Method::Lora { r: 16 }, Precision::Nf4),
+        (Method::OftInputCentric { b: 32 }, Precision::Awq4),
+        (Method::Lora { r: 16 }, Precision::Awq4),
+    ] {
+        let gib = finetune_gib(&spec, m, p, shape);
+        println!(
+            "{:<10} {:<6} {:>12}",
+            m.label(p != Precision::Bf16),
+            p.label(),
+            human_bytes((gib * 1024.0 * 1024.0 * 1024.0) as u64)
+        );
+    }
+    Ok(())
+}
+
+/// Static HLO cost analysis (op histogram, FLOPs, arithmetic
+/// intensity) of one bundle's graphs — the L2 profiling view.
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("inspect", "static HLO cost analysis")
+        .opt("tag", "artifact bundle tag", Some("tiny_oft_v2"))
+        .flag("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let tag = args.get_or("tag", "tiny_oft_v2");
+    let man = oftv2::coordinator::Manifest::load(artifacts_root().join(tag))?;
+    println!("bundle {tag} (method={}, quant={})\n", man.method, man.quant);
+    for file in [&man.train_step_file, &man.eval_loss_file, &man.logits_last_file] {
+        let cost = oftv2::runtime::hlo_cost::analyze_file(man.artifact(file))?;
+        println!("{file}:");
+        println!(
+            "  dot FLOPs {:>14}   elementwise {:>12}   output bytes {:>12}   intensity {:.2}",
+            cost.dot_flops,
+            cost.elementwise_flops,
+            cost.output_bytes,
+            cost.intensity()
+        );
+        let top: Vec<String> = cost
+            .top_ops(6)
+            .into_iter()
+            .map(|(op, n)| format!("{op} x{n}"))
+            .collect();
+        println!("  top ops: {}", top.join(", "));
+    }
+    Ok(())
+}
+
+fn parse_model(name: &str) -> Result<ModelSpec> {
+    Ok(match name.to_lowercase().as_str() {
+        "llama2-7b" => ModelSpec::llama2_7b(),
+        "llama2-13b" => ModelSpec::llama2_13b(),
+        "bart-large" => ModelSpec::bart_large(),
+        n if n.starts_with("qwen2.5-") => ModelSpec::qwen25(&n["qwen2.5-".len()..]),
+        n if n.starts_with("sd3.5-") => ModelSpec::sd35(&n["sd3.5-".len()..]),
+        _ => bail!("unknown model '{name}'"),
+    })
+}
+
+fn cmd_bundles() -> Result<()> {
+    let root = artifacts_root();
+    if !root.exists() {
+        bail!("no artifacts at {} — run `make artifacts`", root.display());
+    }
+    println!("{:<22} {:<12} {:<6} {:>12} {:>10}", "tag", "method", "quant", "trainable", "d_model");
+    let mut entries: Vec<_> = std::fs::read_dir(&root)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        if e.file_name() == "micro" {
+            println!("{:<22} (micro-kernel sweep bundle)", "micro");
+            continue;
+        }
+        let man = oftv2::coordinator::Manifest::load(e.path())?;
+        println!(
+            "{:<22} {:<12} {:<6} {:>12} {:>10}",
+            man.tag,
+            man.method,
+            man.quant,
+            human_count(man.params_trainable),
+            man.model.d_model
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! Architecture specifications of the real foundation models the paper
+//! finetunes, used for exact parameter counting (Tables 3-5) and the
+//! analytic GPU-memory model (Figs. 1, 4; Table 11).
+//!
+//! Numbers come from the public HF configs: hidden sizes, layer counts,
+//! FFN widths, GQA head groups, vocabularies.
+
+/// One adapted linear layer (a weight matrix PEFT attaches to).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Linear {
+    pub label: &'static str,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// A transformer-family model description.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    /// Linears adapted by PEFT, per transformer block.
+    pub linears_per_layer: Vec<Linear>,
+    /// Embedding / head parameters (input + output unless tied).
+    pub embed_params: u64,
+    /// Norms, biases, and anything else not in the big matrices.
+    pub extra_params: u64,
+    /// Default context length used by the memory model.
+    pub default_seq: usize,
+}
+
+impl ModelSpec {
+    /// All adapted linears across layers.
+    pub fn adapted_linears(&self) -> impl Iterator<Item = Linear> + '_ {
+        self.linears_per_layer
+            .iter()
+            .copied()
+            .cycle()
+            .take(self.linears_per_layer.len() * self.n_layers)
+    }
+
+    /// Parameters held in the big (adaptable) weight matrices.
+    pub fn linear_params(&self) -> u64 {
+        self.adapted_linears()
+            .map(|l| (l.din * l.dout) as u64)
+            .sum()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.linear_params() + self.embed_params + self.extra_params
+    }
+
+    // -- concrete models -----------------------------------------------
+
+    /// Llama-2 7B / 13B (MHA, SwiGLU; q,k,v,o,gate,up,down adapted).
+    fn llama2(name: &str, d: usize, ffn: usize, layers: usize, heads: usize) -> ModelSpec {
+        let vocab = 32_000;
+        ModelSpec {
+            name: name.into(),
+            d_model: d,
+            n_layers: layers,
+            n_heads: heads,
+            vocab,
+            linears_per_layer: vec![
+                Linear { label: "q_proj", din: d, dout: d },
+                Linear { label: "k_proj", din: d, dout: d },
+                Linear { label: "v_proj", din: d, dout: d },
+                Linear { label: "o_proj", din: d, dout: d },
+                Linear { label: "gate_proj", din: d, dout: ffn },
+                Linear { label: "up_proj", din: d, dout: ffn },
+                Linear { label: "down_proj", din: ffn, dout: d },
+            ],
+            embed_params: 2 * (vocab * d) as u64, // untied embed + lm_head
+            extra_params: ((2 * layers + 1) * d) as u64, // RMSNorm gains
+            default_seq: 4096,
+        }
+    }
+
+    pub fn llama2_7b() -> ModelSpec {
+        Self::llama2("Llama-2-7B", 4096, 11008, 32, 32)
+    }
+
+    pub fn llama2_13b() -> ModelSpec {
+        Self::llama2("Llama-2-13B", 5120, 13824, 40, 40)
+    }
+
+    /// Qwen2.5 family (GQA: k/v project to n_kv*head_dim; SwiGLU).
+    /// `size` in {"0.5b","1.5b","3b","7b","14b","32b","72b"}.
+    pub fn qwen25(size: &str) -> ModelSpec {
+        // (d, ffn, layers, heads, kv_heads, tied_embeddings)
+        let (d, ffn, layers, heads, kv, tied) = match size {
+            "0.5b" => (896, 4864, 24, 14, 2, true),
+            "1.5b" => (1536, 8960, 28, 12, 2, true),
+            "3b" => (2048, 11008, 36, 16, 2, true),
+            "7b" => (3584, 18944, 28, 28, 4, false),
+            "14b" => (5120, 13824, 48, 40, 8, false),
+            "32b" => (5120, 27648, 64, 40, 8, false),
+            "72b" => (8192, 29568, 80, 64, 8, false),
+            _ => panic!("unknown qwen2.5 size '{size}'"),
+        };
+        // head_dim = d/heads (64 for 0.5B, 128 for the rest)
+        let head_dim = d / heads;
+        let kv_dim = kv * head_dim;
+        let vocab = 151_936;
+        let embeds = if tied { vocab * d } else { 2 * vocab * d };
+        ModelSpec {
+            name: format!("Qwen2.5-{}", size.to_uppercase()),
+            d_model: d,
+            n_layers: layers,
+            n_heads: heads,
+            vocab,
+            linears_per_layer: vec![
+                Linear { label: "q_proj", din: d, dout: heads * head_dim },
+                Linear { label: "k_proj", din: d, dout: kv_dim },
+                Linear { label: "v_proj", din: d, dout: kv_dim },
+                Linear { label: "o_proj", din: heads * head_dim, dout: d },
+                Linear { label: "gate_proj", din: d, dout: ffn },
+                Linear { label: "up_proj", din: d, dout: ffn },
+                Linear { label: "down_proj", din: ffn, dout: d },
+            ],
+            embed_params: embeds as u64,
+            // norms + qkv biases (Qwen uses attention biases)
+            extra_params: (layers * (2 * d + heads * head_dim + 2 * kv_dim) + d) as u64,
+            default_seq: 16_384, // the paper's OpenR1 context window
+        }
+    }
+
+    /// BART-large encoder-decoder (Table 3): 12 enc + 12 dec layers,
+    /// d=1024, ffn=4096. PEFT adapts q,k,v,o of every attention module
+    /// (enc self, dec self, dec cross) plus both FFN matrices.
+    pub fn bart_large() -> ModelSpec {
+        let d = 1024;
+        let ffn = 4096;
+        // Model as 12 "macro layers", each holding one encoder layer
+        // (1 attn + ffn) and one decoder layer (2 attn + ffn).
+        let attn = |label| Linear { label, din: d, dout: d };
+        let mut lin = Vec::new();
+        for _ in 0..3 {
+            // enc self, dec self, dec cross
+            lin.push(attn("q_proj"));
+            lin.push(attn("k_proj"));
+            lin.push(attn("v_proj"));
+            lin.push(attn("out_proj"));
+        }
+        for _ in 0..2 {
+            // enc ffn, dec ffn
+            lin.push(Linear { label: "fc1", din: d, dout: ffn });
+            lin.push(Linear { label: "fc2", din: ffn, dout: d });
+        }
+        let vocab = 50_265;
+        ModelSpec {
+            name: "BART-large".into(),
+            d_model: d,
+            n_layers: 12,
+            n_heads: 16,
+            vocab,
+            linears_per_layer: lin,
+            embed_params: (vocab * d + 2 * 1026 * d) as u64, // tied + learned pos x2
+            extra_params: (12 * 2 * (2 * d) + 12 * 3 * (2 * d)) as u64,
+            default_seq: 1024,
+        }
+    }
+
+    /// Stable Diffusion 3.5 MMDiT approximations (Table 11 memory).
+    /// MMDiT totals calibrated to the published sizes (Medium 2.5B,
+    /// Large 8.1B); Dreambooth additionally keeps the frozen text
+    /// encoders (T5-XXL 4.76B + CLIP-G 0.69B + CLIP-L 0.12B) and the
+    /// VAE on-device, so those ride along in `extra_params`.
+    pub fn sd35(size: &str) -> ModelSpec {
+        let (d, blocks, mmdit): (usize, usize, u64) = match size {
+            "medium" => (1536, 24, 2_500_000_000),
+            "large" => (2432, 38, 8_100_000_000),
+            _ => panic!("unknown sd3.5 size '{size}'"),
+        };
+        const ENCODERS_AND_VAE: u64 = 5_650_000_000;
+        let total = mmdit + ENCODERS_AND_VAE;
+        // Dual-stream MMDiT block: per stream qkv, proj, mlp up (4x), down.
+        let mut lin = Vec::new();
+        for _ in 0..2 {
+            lin.push(Linear { label: "qkv", din: d, dout: 3 * d });
+            lin.push(Linear { label: "proj", din: d, dout: d });
+            lin.push(Linear { label: "mlp_up", din: d, dout: 4 * d });
+            lin.push(Linear { label: "mlp_down", din: 4 * d, dout: d });
+        }
+        let linear_total: u64 = lin
+            .iter()
+            .map(|l| (l.din * l.dout) as u64)
+            .sum::<u64>()
+            * blocks as u64;
+        ModelSpec {
+            name: format!("SD3.5-{}", size),
+            d_model: d,
+            n_layers: blocks,
+            n_heads: d / 64,
+            vocab: 0,
+            linears_per_layer: lin,
+            embed_params: 0,
+            // everything else (text encoders kept frozen on-device, VAE,
+            // embedders, modulation) folded here to match the total
+            extra_params: total.saturating_sub(linear_total),
+            default_seq: 4096, // latent + text tokens
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn billions(x: u64) -> f64 {
+        x as f64 / 1e9
+    }
+
+    #[test]
+    fn llama2_totals_match_published() {
+        assert!((billions(ModelSpec::llama2_7b().total_params()) - 6.74).abs() < 0.05);
+        assert!((billions(ModelSpec::llama2_13b().total_params()) - 13.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn qwen25_totals_match_published() {
+        // HF model cards: 0.49B, 1.54B, 3.09B, 7.62B, 14.7B, 32.8B, 72.7B
+        let expect = [
+            ("0.5b", 0.49),
+            ("1.5b", 1.54),
+            ("3b", 3.09),
+            ("7b", 7.62),
+            ("14b", 14.7),
+            ("32b", 32.8),
+            ("72b", 72.7),
+        ];
+        for (size, want) in expect {
+            let got = billions(ModelSpec::qwen25(size).total_params());
+            assert!(
+                (got - want).abs() / want < 0.03,
+                "qwen2.5-{size}: got {got}B want {want}B"
+            );
+        }
+    }
+
+    #[test]
+    fn bart_large_total() {
+        // published ~406M
+        let got = ModelSpec::bart_large().total_params() as f64 / 1e6;
+        assert!((got - 406.0).abs() < 20.0, "{got}");
+    }
+
+    #[test]
+    fn sd35_totals_pinned() {
+        // MMDiT size + frozen encoders/VAE (5.65B) kept on-device
+        assert_eq!(ModelSpec::sd35("large").total_params(), 8_100_000_000 + 5_650_000_000);
+        assert_eq!(ModelSpec::sd35("medium").total_params(), 2_500_000_000 + 5_650_000_000);
+    }
+
+    #[test]
+    fn adapted_linears_count() {
+        let q = ModelSpec::qwen25("7b");
+        assert_eq!(q.adapted_linears().count(), 7 * 28);
+        let b = ModelSpec::bart_large();
+        assert_eq!(b.adapted_linears().count(), 16 * 12);
+    }
+}

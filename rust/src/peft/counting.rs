@@ -1,0 +1,98 @@
+//! Trainable-parameter counting — reproduces the `# Params` columns of
+//! Tables 3, 4 and 5 *exactly* from the real model architectures in
+//! [`crate::modelspec`].
+
+use crate::modelspec::ModelSpec;
+
+/// PEFT method kind for counting purposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    /// LoRA / QLoRA with rank r: r*(din + dout) per adapted linear.
+    Lora { r: usize },
+    /// OFT / OFTv2 / QOFT with block size b: (din/b) * b(b-1)/2 per
+    /// adapted linear (packed skew-symmetric storage, §3.3).
+    Oft { b: usize },
+}
+
+/// LoRA trainable parameters over every adapted linear of `spec`.
+pub fn count_lora(spec: &ModelSpec, r: usize) -> u64 {
+    spec.adapted_linears()
+        .map(|l| (r * (l.din + l.dout)) as u64)
+        .sum()
+}
+
+/// OFT trainable parameters (packed skew storage) over every adapted
+/// linear of `spec`. Blocks sit on the *input* dimension; when b does
+/// not divide din the remainder columns are left unadapted (matching the
+/// HF PEFT implementation's block truncation).
+pub fn count_oft(spec: &ModelSpec, b: usize) -> u64 {
+    let p = (b * (b - 1) / 2) as u64;
+    spec.adapted_linears().map(|l| (l.din / b) as u64 * p).sum()
+}
+
+/// Count for either method.
+pub fn count(spec: &ModelSpec, m: MethodKind) -> u64 {
+    match m {
+        MethodKind::Lora { r } => count_lora(spec, r),
+        MethodKind::Oft { b } => count_oft(spec, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelspec::ModelSpec;
+
+    fn mm(x: u64) -> f64 {
+        x as f64 / 1e6
+    }
+
+    #[test]
+    fn table4_llama2_param_counts() {
+        // Paper Table 4: Llama-2 7B — LoRA r=16: 39.98M, OFTv2 b=32: 17.65M
+        //                Llama-2 13B — LoRA r=16: 62.59M, OFTv2 b=32: 27.62M
+        let l7 = ModelSpec::llama2_7b();
+        assert!((mm(count_lora(&l7, 16)) - 39.98).abs() < 0.02, "{}", mm(count_lora(&l7, 16)));
+        assert!((mm(count_oft(&l7, 32)) - 17.65).abs() < 0.02, "{}", mm(count_oft(&l7, 32)));
+        let l13 = ModelSpec::llama2_13b();
+        assert!((mm(count_lora(&l13, 16)) - 62.59).abs() < 0.02, "{}", mm(count_lora(&l13, 16)));
+        assert!((mm(count_oft(&l13, 32)) - 27.62).abs() < 0.02, "{}", mm(count_oft(&l13, 32)));
+    }
+
+    #[test]
+    fn table5_qwen25_param_counts() {
+        // Paper Table 5: Qwen2.5-1.5B — QLoRA 18.46M / QOFT 7.89M;
+        // 7B — 40.37M / 17.55M; 32B — 134.22M / 57.90M.
+        let q15 = ModelSpec::qwen25("1.5b");
+        assert!((mm(count_lora(&q15, 16)) - 18.46).abs() < 0.02, "{}", mm(count_lora(&q15, 16)));
+        assert!((mm(count_oft(&q15, 32)) - 7.89).abs() < 0.02, "{}", mm(count_oft(&q15, 32)));
+        let q7 = ModelSpec::qwen25("7b");
+        assert!((mm(count_lora(&q7, 16)) - 40.37).abs() < 0.02, "{}", mm(count_lora(&q7, 16)));
+        assert!((mm(count_oft(&q7, 32)) - 17.55).abs() < 0.02, "{}", mm(count_oft(&q7, 32)));
+        let q32 = ModelSpec::qwen25("32b");
+        assert!((mm(count_lora(&q32, 16)) - 134.22).abs() < 0.05, "{}", mm(count_lora(&q32, 16)));
+        assert!((mm(count_oft(&q32, 32)) - 57.90).abs() < 0.05, "{}", mm(count_oft(&q32, 32)));
+    }
+
+    #[test]
+    fn table3_bart_param_counts() {
+        // Paper Table 3 budgets: LoRA r=8/16/32 -> 4.33M / 8.65M / 17.30M
+        //                        OFTv2 b=16/32/64 -> 2.03M / 4.19M / 8.52M
+        let bart = ModelSpec::bart_large();
+        assert!((mm(count_lora(&bart, 8)) - 4.33).abs() < 0.01, "{}", mm(count_lora(&bart, 8)));
+        assert!((mm(count_lora(&bart, 16)) - 8.65).abs() < 0.01, "{}", mm(count_lora(&bart, 16)));
+        assert!((mm(count_lora(&bart, 32)) - 17.30).abs() < 0.01, "{}", mm(count_lora(&bart, 32)));
+        assert!((mm(count_oft(&bart, 16)) - 2.03).abs() < 0.01, "{}", mm(count_oft(&bart, 16)));
+        assert!((mm(count_oft(&bart, 32)) - 4.19).abs() < 0.01, "{}", mm(count_oft(&bart, 32)));
+        assert!((mm(count_oft(&bart, 64)) - 8.52).abs() < 0.01, "{}", mm(count_oft(&bart, 64)));
+    }
+
+    #[test]
+    fn oft_uses_roughly_half_of_lora() {
+        // The paper's "47-53% fewer trainable parameters" claim at b=2r.
+        for spec in [ModelSpec::llama2_7b(), ModelSpec::qwen25("7b")] {
+            let ratio = count_oft(&spec, 32) as f64 / count_lora(&spec, 16) as f64;
+            assert!(ratio > 0.40 && ratio < 0.60, "{ratio}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Host-side PEFT mathematics: the Rust mirror of python/compile/kernels.
+//!
+//! Everything the accelerator graphs compute is re-implemented here in
+//! plain Rust so the coordinator can (a) verify runtime outputs against
+//! an independent oracle, (b) run the requantization/merging analyses of
+//! §4 without a device, and (c) count trainable parameters exactly.
+
+pub mod butterfly;
+pub mod counting;
+pub mod lora;
+pub mod oft;
+
+pub use butterfly::ButterflyAdapter;
+pub use counting::{count_lora, count_oft, MethodKind};
+pub use lora::LoraAdapter;
+pub use oft::{
+    block_rotate, blockdiag_dense, cayley_exact, cayley_neumann, orthogonality_error,
+    packed_dim, skew_from_packed, OftAdapter,
+};

@@ -1,0 +1,308 @@
+//! Orthogonal finetuning math: packed skew storage, Cayley transforms,
+//! block-diagonal rotation — the Rust oracle for the L1 Pallas kernels.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Packed parameter count for a b x b skew-symmetric matrix: b(b-1)/2.
+/// This is the §3.3 storage saving (vs b^2 dense).
+pub fn packed_dim(b: usize) -> usize {
+    b * (b - 1) / 2
+}
+
+/// Reconstruct one dense skew-symmetric (b, b) matrix from its packed
+/// upper triangle (the paper's custom CUDA kernel, host-side).
+pub fn skew_from_packed(packed: &[f32], b: usize) -> Tensor {
+    assert_eq!(packed.len(), packed_dim(b));
+    let mut q = Tensor::zeros(&[b, b]);
+    let mut k = 0;
+    for i in 0..b {
+        for j in i + 1..b {
+            q.set2(i, j, packed[k]);
+            q.set2(j, i, -packed[k]);
+            k += 1;
+        }
+    }
+    q
+}
+
+/// Pack the upper triangle of a dense skew-symmetric matrix.
+pub fn packed_from_skew(q: &Tensor) -> Vec<f32> {
+    let b = q.shape[0];
+    let mut out = Vec::with_capacity(packed_dim(b));
+    for i in 0..b {
+        for j in i + 1..b {
+            out.push(q.at2(i, j));
+        }
+    }
+    out
+}
+
+/// Exact Cayley transform R = (I+Q)(I-Q)^{-1} (matrix inverse — the cost
+/// and instability the paper's CNP removes).
+pub fn cayley_exact(packed: &[f32], b: usize) -> Result<Tensor> {
+    let q = skew_from_packed(packed, b);
+    let eye = Tensor::eye(b);
+    let i_plus = eye.add(&q)?;
+    let i_minus = eye.sub(&q)?;
+    i_plus.matmul(&i_minus.inverse()?)
+}
+
+/// Cayley-Neumann parameterization: R = (I+Q)(I + sum_{i=1..k} Q^i).
+pub fn cayley_neumann(packed: &[f32], b: usize, k: usize) -> Result<Tensor> {
+    let q = skew_from_packed(packed, b);
+    let eye = Tensor::eye(b);
+    let mut acc = eye.clone();
+    let mut term = eye.clone();
+    for _ in 0..k {
+        term = term.matmul(&q)?;
+        acc = acc.add(&term)?;
+    }
+    eye.add(&q)?.matmul(&acc)
+}
+
+/// ||R^T R - I||_F — approximate-orthogonality error.
+pub fn orthogonality_error(r: &Tensor) -> f32 {
+    let b = r.shape[0];
+    let gram = r.transpose2().matmul(r).unwrap();
+    gram.sub(&Tensor::eye(b)).unwrap().fro_norm()
+}
+
+/// Materialize the dense block-diagonal matrix Diag(R_1..R_nb).
+/// (Weight-centric baseline only.)
+pub fn blockdiag_dense(blocks: &[Tensor], d: usize) -> Tensor {
+    let b = blocks[0].shape[0];
+    assert_eq!(blocks.len() * b, d);
+    let mut out = Tensor::zeros(&[d, d]);
+    for (bi, blk) in blocks.iter().enumerate() {
+        for i in 0..b {
+            for j in 0..b {
+                out.set2(bi * b + i, bi * b + j, blk.at2(i, j));
+            }
+        }
+    }
+    out
+}
+
+/// Input-centric block rotation (OFTv2): y[:, ib..ib+b] = x[:, ib..ib+b] @ R_i.
+pub fn block_rotate(x: &Tensor, blocks: &[Tensor]) -> Result<Tensor> {
+    ensure!(x.rank() == 2);
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let b = blocks[0].shape[0];
+    ensure!(blocks.len() * b == d, "blocks {}x{b} vs d={d}", blocks.len());
+    let mut out = Tensor::zeros(&[m, d]);
+    for (bi, blk) in blocks.iter().enumerate() {
+        for row in 0..m {
+            let xoff = row * d + bi * b;
+            for j in 0..b {
+                let mut acc = 0.0f32;
+                for i in 0..b {
+                    acc += x.data[xoff + i] * blk.at2(i, j);
+                }
+                out.data[row * d + bi * b + j] = acc;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// A full OFT adapter for one linear layer: nb packed blocks over the
+/// input dimension.
+#[derive(Clone, Debug)]
+pub struct OftAdapter {
+    pub b: usize,
+    pub nb: usize,
+    pub packed: Vec<Vec<f32>>, // nb x packed_dim(b)
+    pub neumann_k: usize,
+}
+
+impl OftAdapter {
+    /// Identity-initialized adapter (Q = 0 -> R = I), the paper's init.
+    pub fn identity(din: usize, b: usize, neumann_k: usize) -> OftAdapter {
+        assert_eq!(din % b, 0, "block size {b} must divide din {din}");
+        OftAdapter {
+            b,
+            nb: din / b,
+            packed: vec![vec![0.0; packed_dim(b)]; din / b],
+            neumann_k,
+        }
+    }
+
+    /// Random small-Q adapter (for tests / analyses).
+    pub fn random(din: usize, b: usize, neumann_k: usize, std: f32, rng: &mut Rng) -> OftAdapter {
+        let mut a = Self::identity(din, b, neumann_k);
+        for blk in &mut a.packed {
+            *blk = rng.normal_vec(packed_dim(b), std);
+        }
+        a
+    }
+
+    /// Number of trainable parameters.
+    pub fn num_params(&self) -> usize {
+        self.nb * packed_dim(self.b)
+    }
+
+    /// Build all orthogonal blocks via CNP.
+    pub fn blocks(&self) -> Result<Vec<Tensor>> {
+        self.packed
+            .iter()
+            .map(|p| cayley_neumann(p, self.b, self.neumann_k))
+            .collect()
+    }
+
+    /// Build via exact Cayley (baseline).
+    pub fn blocks_exact(&self) -> Result<Vec<Tensor>> {
+        self.packed.iter().map(|p| cayley_exact(p, self.b)).collect()
+    }
+
+    /// Input-centric forward: y = rotate(x) @ w  (OFTv2, eq. 2).
+    pub fn forward_input_centric(&self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        block_rotate(x, &self.blocks()?)?.matmul(w)
+    }
+
+    /// Weight-centric forward: y = x @ (blockdiag(R) @ w)  (OFT, eq. 1).
+    pub fn forward_weight_centric(&self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        let din = w.shape[0];
+        let rd = blockdiag_dense(&self.blocks()?, din);
+        x.matmul(&rd.matmul(w)?)
+    }
+
+    /// The merged weight R W (what you would write back to disk after
+    /// finetuning; §4's requantization analysis runs on this).
+    pub fn merge(&self, w: &Tensor) -> Result<Tensor> {
+        let din = w.shape[0];
+        blockdiag_dense(&self.blocks()?, din).matmul(w)
+    }
+
+    /// FLOPs per input row for the rotation itself: d*b MACs
+    /// (quadratic-in-d total vs the cubic d^2 n merge).
+    pub fn rotate_flops_per_row(&self) -> usize {
+        self.nb * self.b * self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn packed_roundtrip() {
+        testkit::check("skew pack/unpack roundtrip", 50, |g| {
+            let b = *g.choose(&[2usize, 3, 4, 8, 16]);
+            let packed = g.vec_f32(packed_dim(b), 0.5);
+            let q = skew_from_packed(&packed, b);
+            // skew-symmetry
+            for i in 0..b {
+                for j in 0..b {
+                    if (q.at2(i, j) + q.at2(j, i)).abs() > 0.0 {
+                        return Err(format!("not skew at ({i},{j})"));
+                    }
+                }
+            }
+            testkit::assert_allclose(&packed_from_skew(&q), &packed, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn exact_cayley_orthogonal() {
+        testkit::check("exact Cayley in O(b)", 30, |g| {
+            let b = *g.choose(&[2usize, 4, 8, 16]);
+            let packed = g.vec_f32(packed_dim(b), 0.3);
+            let r = cayley_exact(&packed, b).map_err(|e| e.to_string())?;
+            let err = orthogonality_error(&r);
+            if err > 1e-4 {
+                return Err(format!("orthogonality error {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cnp_matches_exact_for_small_q() {
+        testkit::check("CNP -> exact Cayley", 30, |g| {
+            let b = *g.choose(&[4usize, 8, 16]);
+            let packed = g.vec_f32(packed_dim(b), 0.2 / (b as f32).sqrt());
+            let exact = cayley_exact(&packed, b).map_err(|e| e.to_string())?;
+            let approx = cayley_neumann(&packed, b, 8).map_err(|e| e.to_string())?;
+            testkit::assert_allclose(&approx.data, &exact.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn cnp_identity_at_zero() {
+        let r = cayley_neumann(&vec![0.0; packed_dim(16)], 16, 5).unwrap();
+        assert_eq!(r, Tensor::eye(16));
+    }
+
+    #[test]
+    fn input_centric_equals_weight_centric() {
+        // Eq. (1) == Eq. (2): the paper's core reformulation argument.
+        let mut rng = Rng::new(3);
+        let (din, dout, b) = (32, 24, 8);
+        let ad = OftAdapter::random(din, b, 6, 0.05, &mut rng);
+        let x = Tensor::randn(&[5, din], 1.0, &mut rng);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        let a = ad.forward_input_centric(&x, &w).unwrap();
+        let bb = ad.forward_weight_centric(&x, &w).unwrap();
+        assert!(a.max_abs_diff(&bb) < 1e-4, "{}", a.max_abs_diff(&bb));
+    }
+
+    #[test]
+    fn rotation_preserves_row_norms() {
+        testkit::check("hyperspherical energy invariance", 25, |g| {
+            let b = *g.choose(&[4usize, 8]);
+            let nb = g.usize_in(1, 4);
+            let din = nb * b;
+            let mut rng = Rng::new(g.rng.next_u64());
+            let ad = OftAdapter::random(din, b, 8, 0.02, &mut rng);
+            let x = Tensor::randn(&[6, din], 1.0, &mut rng);
+            let y = block_rotate(&x, &ad.blocks().map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            for row in 0..6 {
+                let nx: f32 = x.data[row * din..(row + 1) * din].iter().map(|v| v * v).sum();
+                let ny: f32 = y.data[row * din..(row + 1) * din].iter().map(|v| v * v).sum();
+                if (nx.sqrt() - ny.sqrt()).abs() > 1e-2 * nx.sqrt().max(1.0) {
+                    return Err(format!("row {row}: {} vs {}", nx.sqrt(), ny.sqrt()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_preserves_linf_scale() {
+        // §4: the merged weight RW keeps per-element dynamic range close
+        // to W (orthogonal rows mix but do not amplify); contrast with
+        // LoRA's W + AB which adds ||AB||_inf.
+        let mut rng = Rng::new(9);
+        let (din, dout) = (32, 32);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        let ad = OftAdapter::random(din, 8, 8, 0.05, &mut rng);
+        let merged = ad.merge(&w).unwrap();
+        // Orthogonal mixing bound: |(RW)_ij| <= ||R row|| * ||W col|| —
+        // check the empirical inflation stays below sqrt(b).
+        assert!(merged.linf_norm() <= w.linf_norm() * (8.0f32).sqrt());
+    }
+
+    #[test]
+    fn identity_adapter_is_noop() {
+        let mut rng = Rng::new(11);
+        let ad = OftAdapter::identity(16, 4, 5);
+        let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let w = Tensor::randn(&[16, 8], 0.2, &mut rng);
+        let y = ad.forward_input_centric(&x, &w).unwrap();
+        assert!(y.max_abs_diff(&x.matmul(&w).unwrap()) < 1e-6);
+    }
+
+    #[test]
+    fn flops_quadratic_vs_cubic() {
+        let ad = OftAdapter::identity(1024, 32, 5);
+        let rotate = ad.rotate_flops_per_row(); // 1024*32
+        let merge = 1024usize * 1024 * 1024; // d*d*n for n=1024
+        assert_eq!(rotate, 1024 * 32);
+        assert!(merge / rotate > 30_000 / 32); // >> even per-row
+    }
+}

@@ -1,0 +1,172 @@
+//! AWQ-style activation-aware groupwise int4 quantization (Lin et al.
+//! 2024), mirrored from python/compile/kernels/ref.py.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// Input-dim rows per quantization group.
+pub const AWQ_GROUP: usize = 64;
+
+/// A quantized (din, dout) weight: packed int4 + per-(group, column)
+/// scales + per-row activation-aware equalization.
+#[derive(Clone, Debug)]
+pub struct AwqTensor {
+    /// (din/2, dout): rows 2i in the high nibble, 2i+1 in the low.
+    pub codes: Vec<u8>,
+    /// (din/AWQ_GROUP, dout) symmetric scales.
+    pub scales: Vec<f32>,
+    /// (din,) equalization factors (sqrt of activation scale).
+    pub eq: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl AwqTensor {
+    /// Quantize with optional per-input-channel activation magnitudes
+    /// (salient channels get scaled up -> finer effective step).
+    pub fn quantize(w: &Tensor, act_scale: Option<&[f32]>) -> Result<AwqTensor> {
+        ensure!(w.rank() == 2, "awq needs 2-D weights");
+        let (din, dout) = (w.shape[0], w.shape[1]);
+        ensure!(din % AWQ_GROUP == 0, "din {din} % {AWQ_GROUP} != 0");
+        let eq: Vec<f32> = match act_scale {
+            Some(a) => {
+                ensure!(a.len() == din);
+                a.iter().map(|x| x.max(1e-6).sqrt()).collect()
+            }
+            None => vec![1.0; din],
+        };
+        let g = din / AWQ_GROUP;
+        let mut scales = vec![0f32; g * dout];
+        // group absmax of the equalized weights
+        for gi in 0..g {
+            for c in 0..dout {
+                let mut am = 1e-12f32;
+                for r in gi * AWQ_GROUP..(gi + 1) * AWQ_GROUP {
+                    am = am.max((w.at2(r, c) * eq[r]).abs());
+                }
+                scales[gi * dout + c] = am / 7.0;
+            }
+        }
+        let mut codes = vec![0u8; din / 2 * dout];
+        for r2 in 0..din / 2 {
+            for c in 0..dout {
+                let qv = |r: usize| -> u8 {
+                    let s = scales[(r / AWQ_GROUP) * dout + c];
+                    let q = (w.at2(r, c) * eq[r] / s).round().clamp(-8.0, 7.0);
+                    (q as i32 + 8) as u8
+                };
+                codes[r2 * dout + c] = (qv(2 * r2) << 4) | qv(2 * r2 + 1);
+            }
+        }
+        Ok(AwqTensor {
+            codes,
+            scales,
+            eq,
+            din,
+            dout,
+        })
+    }
+
+    /// Dequantize: w = q * scales[group, col] / eq[row].
+    pub fn dequantize(&self) -> Tensor {
+        let (din, dout) = (self.din, self.dout);
+        let mut out = vec![0f32; din * dout];
+        for r2 in 0..din / 2 {
+            for c in 0..dout {
+                let byte = self.codes[r2 * dout + c];
+                for (k, nib) in [(byte >> 4) as i32 - 8, (byte & 0xF) as i32 - 8]
+                    .into_iter()
+                    .enumerate()
+                {
+                    let r = 2 * r2 + k;
+                    let s = self.scales[(r / AWQ_GROUP) * dout + c];
+                    out[r * dout + c] = nib as f32 * s / self.eq[r];
+                }
+            }
+        }
+        Tensor::from_vec(&[din, dout], out)
+    }
+
+    /// Storage bytes: codes + scales + eq.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len() + 4 * self.eq.len()
+    }
+
+    pub fn bytes_per_param(&self) -> f64 {
+        self.storage_bytes() as f64 / (self.din * self.dout) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        testkit::check("awq roundtrip error", 20, |g| {
+            let din = *g.choose(&[64usize, 128, 256]);
+            let dout = *g.choose(&[8usize, 32, 64]);
+            let std = g.f32_in(0.01, 2.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let w = Tensor::randn(&[din, dout], std, &mut rng);
+            let q = AwqTensor::quantize(&w, None).map_err(|e| e.to_string())?;
+            let d = q.dequantize();
+            for gi in 0..din / AWQ_GROUP {
+                for c in 0..dout {
+                    let mut am = 0f32;
+                    for r in gi * AWQ_GROUP..(gi + 1) * AWQ_GROUP {
+                        am = am.max(w.at2(r, c).abs());
+                    }
+                    for r in gi * AWQ_GROUP..(gi + 1) * AWQ_GROUP {
+                        let err = (w.at2(r, c) - d.at2(r, c)).abs();
+                        if err > am / 7.0 / 2.0 * 1.01 + 1e-6 {
+                            return Err(format!("({r},{c}): err {err}, absmax {am}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn activation_awareness_reduces_salient_error() {
+        let mut rng = Rng::new(4);
+        let mut w = Tensor::randn(&[128, 64], 1.0, &mut rng);
+        // salient-but-small first group
+        for r in 0..AWQ_GROUP {
+            for c in 0..64 {
+                let v = w.at2(r, c) * 0.05;
+                w.set2(r, c, v);
+            }
+        }
+        let plain = AwqTensor::quantize(&w, None).unwrap().dequantize();
+        let mut act = vec![1.0f32; 128];
+        act[..AWQ_GROUP].iter_mut().for_each(|a| *a = 16.0);
+        let tuned = AwqTensor::quantize(&w, Some(&act)).unwrap().dequantize();
+        let err = |d: &Tensor| -> f32 {
+            (0..AWQ_GROUP)
+                .map(|r| (0..64).map(|c| (w.at2(r, c) - d.at2(r, c)).abs()).sum::<f32>())
+                .sum()
+        };
+        assert!(err(&tuned) <= err(&plain));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let w = Tensor::zeros(&[63, 8]);
+        assert!(AwqTensor::quantize(&w, None).is_err());
+    }
+
+    #[test]
+    fn storage_near_half_byte() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&[1024, 1024], 0.1, &mut rng);
+        let q = AwqTensor::quantize(&w, None).unwrap();
+        let bpp = q.bytes_per_param();
+        assert!(bpp > 0.5 && bpp < 0.58, "{bpp}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Weight quantization substrate (the bitsandbytes/AutoAWQ role).
+//!
+//! The Rust side *quantizes* (at model-load time); the AOT graphs
+//! *dequantize* (Pallas kernels, every forward). Packing layouts are
+//! byte-identical to python/compile/kernels/ref.py — pytest and the
+//! integration tests cross-check the pair.
+
+pub mod awq;
+pub mod nf4;
+pub mod requant;
+
+pub use awq::{AwqTensor, AWQ_GROUP};
+pub use nf4::{Nf4Tensor, NF4_BLOCK, NF4_CODE, NF4_GROUP, NF4_TILE};

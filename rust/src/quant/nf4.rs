@@ -1,0 +1,241 @@
+//! NF4 (NormalFloat4) quantization with double quantization — the QLoRA
+//! storage format (Dettmers et al. 2023), mirrored from
+//! python/compile/kernels/ref.py byte-for-byte.
+
+use crate::tensor::Tensor;
+
+/// The 16 NormalFloat4 code levels (bitsandbytes constants).
+pub const NF4_CODE: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// Elements per absmax block.
+pub const NF4_BLOCK: usize = 64;
+/// Absmax values per double-quantization group.
+pub const NF4_GROUP: usize = 256;
+/// Flat elements per Pallas dequant program (= one double-quant group).
+pub const NF4_TILE: usize = NF4_BLOCK * NF4_GROUP;
+
+/// A quantized tensor: packed 4-bit codes + double-quantized absmax.
+#[derive(Clone, Debug)]
+pub struct Nf4Tensor {
+    /// Two 4-bit codes per byte; even element in the high nibble.
+    pub codes: Vec<u8>,
+    /// Per-block absmax, int8 double-quantized.
+    pub absmax_q: Vec<i8>,
+    /// Per-group scale for `absmax_q`.
+    pub absmax_s: Vec<f32>,
+    /// Double-quantization offset (mean absmax).
+    pub offset: f32,
+    /// Original element count (before tile padding).
+    pub n: usize,
+    /// Original shape.
+    pub shape: Vec<usize>,
+}
+
+fn nearest_code(x: f32) -> u8 {
+    let mut best = 0u8;
+    let mut bd = f32::INFINITY;
+    for (i, &c) in NF4_CODE.iter().enumerate() {
+        let d = (x - c).abs();
+        if d < bd {
+            bd = d;
+            best = i as u8;
+        }
+    }
+    best
+}
+
+impl Nf4Tensor {
+    /// Quantize a float tensor. Pads the flat length to a multiple of
+    /// NF4_TILE (so the Pallas kernel sees whole double-quant groups).
+    pub fn quantize(t: &Tensor) -> Nf4Tensor {
+        let n = t.numel();
+        let pad = (NF4_TILE - n % NF4_TILE) % NF4_TILE;
+        let mut flat = t.data.clone();
+        flat.extend(std::iter::repeat(0.0).take(pad));
+        let nb = flat.len() / NF4_BLOCK;
+
+        // per-block absmax
+        let mut absmax: Vec<f32> = (0..nb)
+            .map(|b| {
+                flat[b * NF4_BLOCK..(b + 1) * NF4_BLOCK]
+                    .iter()
+                    .fold(0.0f32, |m, x| m.max(x.abs()))
+                    .max(1e-12)
+            })
+            .collect();
+
+        // double quantization of absmax
+        let offset = absmax.iter().sum::<f32>() / nb as f32;
+        let ng = nb / NF4_GROUP;
+        let mut absmax_q = vec![0i8; nb];
+        let mut absmax_s = vec![0f32; ng];
+        for g in 0..ng {
+            let grp = &absmax[g * NF4_GROUP..(g + 1) * NF4_GROUP];
+            let s = grp
+                .iter()
+                .fold(0.0f32, |m, a| m.max((a - offset).abs()))
+                .max(1e-12);
+            absmax_s[g] = s;
+            for (i, &a) in grp.iter().enumerate() {
+                let q = ((a - offset) / s * 127.0).round().clamp(-127.0, 127.0);
+                absmax_q[g * NF4_GROUP + i] = q as i8;
+            }
+        }
+        // quantize codes against the *reconstructed* absmax
+        for b in 0..nb {
+            let g = b / NF4_GROUP;
+            let rec = absmax_q[b] as f32 / 127.0 * absmax_s[g] + offset;
+            absmax[b] = if rec.abs() < 1e-12 { 1e-12 } else { rec };
+        }
+        let mut codes = vec![0u8; flat.len() / 2];
+        for (i, pair) in codes.iter_mut().enumerate() {
+            let hi = nearest_code(flat[2 * i] / absmax[(2 * i) / NF4_BLOCK]);
+            let lo = nearest_code(flat[2 * i + 1] / absmax[(2 * i + 1) / NF4_BLOCK]);
+            *pair = (hi << 4) | lo;
+        }
+        Nf4Tensor {
+            codes,
+            absmax_q,
+            absmax_s,
+            offset,
+            n,
+            shape: t.shape.clone(),
+        }
+    }
+
+    /// Dequantize back to f32 (host-side oracle for the Pallas kernel).
+    pub fn dequantize(&self) -> Tensor {
+        let npad = self.codes.len() * 2;
+        let nb = npad / NF4_BLOCK;
+        let mut absmax = vec![0f32; nb];
+        for b in 0..nb {
+            let g = b / NF4_GROUP;
+            absmax[b] = self.absmax_q[b] as f32 / 127.0 * self.absmax_s[g] + self.offset;
+        }
+        let mut out = Vec::with_capacity(npad);
+        for (i, &byte) in self.codes.iter().enumerate() {
+            let b = (2 * i) / NF4_BLOCK;
+            out.push(NF4_CODE[(byte >> 4) as usize] * absmax[b]);
+            let b2 = (2 * i + 1) / NF4_BLOCK;
+            out.push(NF4_CODE[(byte & 0xF) as usize] * absmax[b2]);
+        }
+        out.truncate(self.n);
+        Tensor::from_vec(&self.shape, out)
+    }
+
+    /// Storage bytes (codes + absmax + scales + offset) — the memory the
+    /// analytic model charges for NF4 weights.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.absmax_q.len() + 4 * self.absmax_s.len() + 4
+    }
+
+    /// Bytes per original parameter (~0.52 for large tensors).
+    pub fn bytes_per_param(&self) -> f64 {
+        self.storage_bytes() as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        testkit::check("nf4 roundtrip error", 20, |g| {
+            let rows = *g.choose(&[16usize, 64, 100]);
+            let cols = *g.choose(&[32usize, 64]);
+            let std = g.f32_in(0.01, 2.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let t = Tensor::randn(&[rows, cols], std, &mut rng);
+            let q = Nf4Tensor::quantize(&t);
+            let d = q.dequantize();
+            if d.shape != t.shape {
+                return Err("shape".into());
+            }
+            // error <= block absmax * (max code gap / 2) + slack
+            let gap = NF4_CODE
+                .windows(2)
+                .map(|w| w[1] - w[0])
+                .fold(0.0f32, f32::max)
+                / 2.0;
+            for b in 0..(t.numel() / NF4_BLOCK).max(1) {
+                let lo = b * NF4_BLOCK;
+                let hi = ((b + 1) * NF4_BLOCK).min(t.numel());
+                let am = t.data[lo..hi].iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                for i in lo..hi {
+                    let err = (t.data[i] - d.data[i]).abs();
+                    if err > am * gap * 1.1 + 1e-4 {
+                        return Err(format!("elem {i}: err {err} absmax {am}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // A tiny fixed vector quantized by the python reference
+        // (kernels/ref.py) — values regenerated by
+        // python -c "... nf4_quantize(np.linspace(-1,1,64)) ..."
+        // First byte packs codes of (-1.0, -0.968...) -> both nearest to
+        // code 0 -> byte 0x00; middle elements map around code 7/8.
+        let xs: Vec<f32> = (0..64).map(|i| -1.0 + 2.0 * i as f32 / 63.0).collect();
+        let t = Tensor::from_vec(&[64], xs);
+        let q = Nf4Tensor::quantize(&t);
+        assert_eq!(q.codes[0], 0x00);
+        assert_eq!(q.codes[q.n / 2 - 1] >> 4, 15); // last pair: (~0.968, 1.0)
+        assert_eq!(q.codes[q.n / 2 - 1] & 0xF, 15);
+        // absmax for the only real block is 1.0
+        let g = 0;
+        let rec = q.absmax_q[0] as f32 / 127.0 * q.absmax_s[g] + q.offset;
+        assert!((rec - 1.0).abs() < 0.02, "{rec}");
+    }
+
+    #[test]
+    fn storage_is_half_byte_per_param() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[1024, 1024], 0.1, &mut rng);
+        let q = Nf4Tensor::quantize(&t);
+        let bpp = q.bytes_per_param();
+        assert!(bpp > 0.5 && bpp < 0.53, "{bpp}");
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let t = Tensor::zeros(&[64, 64]);
+        let q = Nf4Tensor::quantize(&t);
+        let d = q.dequantize();
+        assert!(d.linf_norm() < 1e-6);
+    }
+
+    #[test]
+    fn preserves_dynamic_range() {
+        // §4: NF4 codes are in [-1, 1] so dequantized values never exceed
+        // the (reconstructed) block absmax.
+        let mut rng = Rng::new(4);
+        let t = Tensor::randn(&[256, 64], 0.5, &mut rng);
+        let q = Nf4Tensor::quantize(&t);
+        let d = q.dequantize();
+        assert!(d.linf_norm() <= t.linf_norm() * 1.05 + 1e-5);
+    }
+}

@@ -1,0 +1,144 @@
+//! Requantization-error analysis — the §4 "QOFT vs QLoRA" discussion.
+//!
+//! After finetuning a quantized model you may want to merge the adapter
+//! back and re-quantize. The paper argues:
+//!   * QLoRA's merged weight `W + AB` can change the per-block dynamic
+//!     range, inflating requantization error by up to `||AB||_inf`;
+//!   * QOFT's merged weight `R W` preserves per-element magnitudes
+//!     (orthogonal mixing), so requantization stays benign.
+//! The `requant_error` bench regenerates this comparison.
+
+use anyhow::Result;
+
+use crate::peft::{LoraAdapter, OftAdapter};
+use crate::quant::nf4::Nf4Tensor;
+use crate::tensor::Tensor;
+
+/// RMS + max-abs error between two tensors.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrStats {
+    pub rms: f64,
+    pub max: f64,
+}
+
+pub fn err_stats(a: &Tensor, b: &Tensor) -> ErrStats {
+    assert_eq!(a.shape, b.shape);
+    let mut sum = 0f64;
+    let mut max = 0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let d = (*x - *y) as f64;
+        sum += d * d;
+        max = max.max(d.abs());
+    }
+    ErrStats {
+        rms: (sum / a.numel() as f64).sqrt(),
+        max,
+    }
+}
+
+/// Result of one merge -> requantize experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct RequantReport {
+    /// Error of re-quantizing the *merged* finetuned weight.
+    pub merged: ErrStats,
+    /// Error of quantizing the original weight (the baseline floor).
+    pub baseline: ErrStats,
+    /// Range inflation: ||merged||_inf / ||W||_inf.
+    pub range_inflation: f64,
+    /// ||Delta||_inf (= ||AB||_inf for LoRA, ||RW - W||_inf for OFT).
+    pub delta_inf: f64,
+}
+
+fn requant_roundtrip(w: &Tensor) -> Tensor {
+    Nf4Tensor::quantize(w).dequantize()
+}
+
+/// QLoRA: merge W + (alpha/r) A B, requantize, measure.
+pub fn qlora_requant(w: &Tensor, adapter: &LoraAdapter) -> Result<RequantReport> {
+    let merged = adapter.merge(w)?;
+    let delta = adapter.delta()?;
+    Ok(report(w, &merged, delta.linf_norm() as f64))
+}
+
+/// QOFT: merge R W, requantize, measure.
+pub fn qoft_requant(w: &Tensor, adapter: &OftAdapter) -> Result<RequantReport> {
+    let merged = adapter.merge(w)?;
+    let delta = merged.sub(w)?;
+    Ok(report(w, &merged, delta.linf_norm() as f64))
+}
+
+fn report(w: &Tensor, merged: &Tensor, delta_inf: f64) -> RequantReport {
+    let mq = requant_roundtrip(merged);
+    let bq = requant_roundtrip(w);
+    RequantReport {
+        merged: err_stats(&mq, merged),
+        baseline: err_stats(&bq, w),
+        range_inflation: merged.linf_norm() as f64 / w.linf_norm().max(1e-12) as f64,
+        delta_inf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Tensor, LoraAdapter, OftAdapter) {
+        let mut rng = Rng::new(seed);
+        let (din, dout) = (128, 128);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        // comparable adaptation strength: both trained-looking magnitudes
+        let lora = LoraAdapter::random(din, dout, 16, 32.0, 0.06, &mut rng);
+        let oft = OftAdapter::random(din, 32, 6, 0.04, &mut rng);
+        (w, lora, oft)
+    }
+
+    #[test]
+    fn qoft_preserves_range_better_than_qlora() {
+        // §4's core claim: at matched adaptation strength ||ΔW||_F, the
+        // low-rank update W + AB concentrates its energy (rank-r
+        // outliers -> range inflation), while the orthogonal update RW
+        // spreads it (a rotated Gaussian stays Gaussian). Compare mean
+        // range inflation across seeds with the LoRA delta rescaled to
+        // the OFT delta's Frobenius norm.
+        let mut infl_lora = 0.0f64;
+        let mut infl_oft = 0.0f64;
+        let n_seeds = 10;
+        for seed in 0..n_seeds {
+            let (w, lora, oft) = setup(seed);
+            let d_oft = oft.merge(&w).unwrap().sub(&w).unwrap();
+            let d_lora = lora.delta().unwrap().scale(lora.scale());
+            let match_scale = d_oft.fro_norm() / d_lora.fro_norm().max(1e-12);
+            let merged_lora = w.add(&d_lora.scale(match_scale)).unwrap();
+            let merged_oft = w.add(&d_oft).unwrap();
+            infl_lora += (merged_lora.linf_norm() / w.linf_norm()) as f64;
+            infl_oft += (merged_oft.linf_norm() / w.linf_norm()) as f64;
+            // orthogonal merging keeps the range bounded
+            let ro = qoft_requant(&w, &oft).unwrap();
+            assert!(ro.range_inflation < 1.35, "{}", ro.range_inflation);
+        }
+        infl_lora /= n_seeds as f64;
+        infl_oft /= n_seeds as f64;
+        assert!(
+            infl_oft <= infl_lora + 1e-3,
+            "mean range inflation: QOFT {infl_oft:.4} vs QLoRA {infl_lora:.4}"
+        );
+    }
+
+    #[test]
+    fn requant_error_floor_is_baseline() {
+        let (w, lora, oft) = setup(7);
+        let rl = qlora_requant(&w, &lora).unwrap();
+        let ro = qoft_requant(&w, &oft).unwrap();
+        // merged requant error can't beat quantizing the original
+        assert!(rl.merged.rms >= rl.baseline.rms * 0.5);
+        assert!(ro.merged.rms >= ro.baseline.rms * 0.5);
+    }
+
+    #[test]
+    fn delta_inf_reported() {
+        let (w, lora, _) = setup(9);
+        let r = qlora_requant(&w, &lora).unwrap();
+        assert!(r.delta_inf > 0.0);
+    }
+}

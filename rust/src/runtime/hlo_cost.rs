@@ -1,0 +1,244 @@
+//! Static HLO cost analysis: parse HLO text into an op histogram and a
+//! FLOP/byte estimate — the L2 profiling tool the perf pass uses
+//! (DESIGN.md §7: "JAX tracer / HLO cost analysis on the lowered
+//! module") and the `repro inspect` subcommand exposes.
+//!
+//! Coverage is deliberately the 95% that matters for transformers:
+//! `dot` contributes 2·M·N·K FLOPs, elementwise/reduce ops contribute
+//! one FLOP per output element, and every instruction contributes its
+//! output bytes to the traffic estimate. Fusion is invisible in
+//! pre-optimization HLO text, so treat numbers as *upper bounds* on
+//! memory traffic and *exact* for matmul FLOPs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Aggregate cost summary of one HLO module.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HloCost {
+    /// Instruction count per opcode.
+    pub ops: BTreeMap<String, usize>,
+    /// 2·M·N·K summed over all `dot` instructions.
+    pub dot_flops: u64,
+    /// One per output element over non-dot compute ops.
+    pub elementwise_flops: u64,
+    /// Sum of output-buffer bytes over all instructions.
+    pub output_bytes: u64,
+}
+
+impl HloCost {
+    pub fn total_flops(&self) -> u64 {
+        self.dot_flops + self.elementwise_flops
+    }
+
+    /// Arithmetic intensity (FLOPs per byte of instruction output) —
+    /// the roofline x-axis.
+    pub fn intensity(&self) -> f64 {
+        self.total_flops() as f64 / (self.output_bytes.max(1)) as f64
+    }
+
+    /// The opcodes with the most instructions, descending.
+    pub fn top_ops(&self, n: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self.ops.clone().into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(n);
+        v
+    }
+}
+
+/// A parsed `f32[128,256]{1,0}`-style shape: dtype + dims.
+#[derive(Clone, Debug, PartialEq)]
+struct ShapeInfo {
+    dtype: String,
+    dims: Vec<u64>,
+}
+
+impl ShapeInfo {
+    fn elements(&self) -> u64 {
+        self.dims.iter().product::<u64>().max(1)
+    }
+
+    fn bytes(&self) -> u64 {
+        let per = match self.dtype.as_str() {
+            "f64" | "s64" | "u64" | "c64" => 8,
+            "f32" | "s32" | "u32" => 4,
+            "f16" | "bf16" | "s16" | "u16" => 2,
+            "pred" | "s8" | "u8" => 1,
+            _ => 4,
+        };
+        self.elements() * per
+    }
+}
+
+/// Parse `dtype[d0,d1,...]` from the start of `s`.
+fn parse_shape(s: &str) -> Option<ShapeInfo> {
+    let open = s.find('[')?;
+    let dtype = s[..open].trim().to_string();
+    if dtype.is_empty() || !dtype.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return None;
+    }
+    let close = s[open..].find(']')? + open;
+    let inner = &s[open + 1..close];
+    let dims = if inner.trim().is_empty() {
+        vec![]
+    } else {
+        inner
+            .split(',')
+            .map(|d| d.trim().parse::<u64>().ok())
+            .collect::<Option<Vec<_>>>()?
+    };
+    Some(ShapeInfo { dtype, dims })
+}
+
+/// Opcodes counted as one-FLOP-per-element compute.
+const ELEMENTWISE: &[&str] = &[
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential", "log",
+    "rsqrt", "sqrt", "power", "tanh", "negate", "select", "compare", "convert", "reduce",
+    "and", "or", "xor",
+];
+
+/// Analyze one HLO-text module.
+pub fn analyze(text: &str) -> HloCost {
+    let mut cost = HloCost::default();
+    for line in text.lines() {
+        let line = line.trim();
+        // instruction lines look like: `%name = f32[..]{..} opcode(...)`
+        let Some(eq) = line.find(" = ") else { continue };
+        let rhs = &line[eq + 3..];
+        let Some(shape) = parse_shape(rhs) else { continue };
+        // opcode comes after the shape spec (and optional layout `{..}`)
+        let after_shape = &rhs[rhs.find(']').map(|i| i + 1).unwrap_or(0)..];
+        let after_layout = after_shape
+            .trim_start()
+            .trim_start_matches(|c| c == '{' || c == '}' || c == ',' || char::is_numeric(c));
+        let opcode: String = after_layout
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() || opcode == "parameter" {
+            continue;
+        }
+        *cost.ops.entry(opcode.clone()).or_insert(0) += 1;
+        cost.output_bytes += shape.bytes();
+
+        if opcode == "dot" {
+            // FLOPs = 2 * output_elems * K; K from lhs contracting dim
+            let k = dot_contraction_size(rhs).unwrap_or(1);
+            cost.dot_flops += 2 * shape.elements() * k;
+        } else if ELEMENTWISE.contains(&opcode.as_str()) {
+            cost.elementwise_flops += shape.elements();
+        }
+    }
+    cost
+}
+
+/// For a dot instruction line, extract the contracted-dimension size
+/// from the lhs operand's shape + `lhs_contracting_dims={i}`.
+fn dot_contraction_size(rhs: &str) -> Option<u64> {
+    let open = rhs.find('(')?;
+    let args = &rhs[open + 1..];
+    // first operand shape, e.g. `f32[16,16]{1,0} %x` or `dot(add.1, ...)`
+    // in full HLO text operands are `f32[16,16]{1,0} name`; find the
+    // first shape in the argument list.
+    let lhs_shape = parse_shape(args.trim_start())?;
+    let idx_key = "lhs_contracting_dims={";
+    let at = rhs.find(idx_key)? + idx_key.len();
+    let end = rhs[at..].find('}')? + at;
+    let dim: usize = rhs[at..end].split(',').next()?.trim().parse().ok()?;
+    lhs_shape.dims.get(dim).copied()
+}
+
+/// Analyze an artifact file.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<HloCost> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    Ok(analyze(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_f, entry_computation_layout={(f32[2,4]{1,0})->(f32[2,8]{1,0})}
+
+ENTRY main {
+  Arg_0.1 = f32[2,4]{1,0} parameter(0)
+  constant.1 = f32[4,8]{1,0} constant({...})
+  dot.1 = f32[2,8]{1,0} dot(f32[2,4]{1,0} Arg_0.1, f32[4,8]{1,0} constant.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  add.1 = f32[2,8]{1,0} add(dot.1, dot.1)
+  ROOT tuple.1 = (f32[2,8]{1,0}) tuple(add.1)
+}
+"#;
+
+    #[test]
+    fn counts_ops_and_flops() {
+        let c = analyze(SAMPLE);
+        assert_eq!(c.ops.get("dot"), Some(&1));
+        assert_eq!(c.ops.get("add"), Some(&1));
+        assert_eq!(c.ops.get("parameter"), None);
+        // dot: 2 * (2*8) * 4 = 128 FLOPs
+        assert_eq!(c.dot_flops, 128);
+        assert_eq!(c.elementwise_flops, 16);
+        assert_eq!(c.total_flops(), 144);
+        assert!(c.output_bytes > 0);
+    }
+
+    #[test]
+    fn shape_parsing() {
+        let s = parse_shape("f32[128,256]{1,0} dot(...)").unwrap();
+        assert_eq!(s.dims, vec![128, 256]);
+        assert_eq!(s.bytes(), 128 * 256 * 4);
+        let s = parse_shape("pred[] parameter(0)").unwrap();
+        assert_eq!(s.elements(), 1);
+        assert_eq!(s.bytes(), 1);
+        assert!(parse_shape("no shape here").is_none());
+    }
+
+    #[test]
+    fn top_ops_ordering() {
+        let c = analyze(SAMPLE);
+        let top = c.top_ops(2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].1 >= top[1].1);
+    }
+
+    #[test]
+    fn real_artifact_has_dots() {
+        let path = crate::artifacts_root().join("tiny_oft_v2/train_step.hlo.txt");
+        if !path.exists() {
+            return;
+        }
+        let c = analyze_file(path).unwrap();
+        assert!(c.dot_flops > 1_000_000, "train step should be GEMM-heavy");
+        assert!(c.ops.get("dot").copied().unwrap_or(0) > 10);
+        // pre-fusion HLO inflates output bytes, so intensity is a
+        // lower bound; it should still be clearly non-trivial
+        assert!(c.intensity() > 0.05, "intensity {}", c.intensity());
+    }
+
+    #[test]
+    fn merge_graph_costs_more_than_rotate() {
+        // The §3.2 claim, statically: the weight-centric micro kernel
+        // carries more dot FLOPs than the input-centric one at equal d.
+        let root = crate::artifacts_root().join("micro");
+        let (m, r) = (
+            root.join("merge_w_d1024.hlo.txt"),
+            root.join("rotate_w_d1024.hlo.txt"),
+        );
+        if !m.exists() || !r.exists() {
+            return;
+        }
+        let cm = analyze_file(m).unwrap();
+        let cr = analyze_file(r).unwrap();
+        assert!(
+            cm.dot_flops > 2 * cr.dot_flops,
+            "merge {} vs rotate {}",
+            cm.dot_flops,
+            cr.dot_flops
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Micro-kernel artifact loader: `artifacts/micro/` holds standalone
+//! HLO graphs (rotate / merge / CNP / dequant at swept sizes) used by
+//! the complexity-scaling and ablation benches (Fig. 1, §3.2, §3.3).
+//!
+//! `manifest.json` maps kernel name -> {artifact, inputs, meta}; this
+//! module loads a kernel, fabricates seeded random inputs matching the
+//! declared specs, and executes through the same [`Engine`] as the
+//! training path.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use super::{lit_f32, lit_i32, lit_i8, lit_u8, Dtype, Engine, Graph};
+use crate::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// One input spec of a micro kernel.
+#[derive(Clone, Debug)]
+pub struct MicroInput {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// A loadable micro kernel.
+#[derive(Clone, Debug)]
+pub struct MicroSpec {
+    pub name: String,
+    pub artifact: String,
+    pub inputs: Vec<MicroInput>,
+    /// Free-form metadata (d, b, k, ...).
+    pub meta: Json,
+}
+
+impl MicroSpec {
+    /// Integer metadata accessor (e.g. `d`, `b`, `k`).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.opt(key).and_then(|v| v.as_usize().ok())
+    }
+}
+
+/// The parsed micro manifest.
+pub struct MicroCatalog {
+    pub root: std::path::PathBuf,
+    pub specs: Vec<MicroSpec>,
+}
+
+impl MicroCatalog {
+    /// Parse `<artifacts>/micro/manifest.json`.
+    pub fn load(artifacts_root: impl AsRef<Path>) -> Result<MicroCatalog> {
+        let root = artifacts_root.as_ref().join("micro");
+        let man = json::parse_file(root.join("manifest.json"))
+            .context("reading micro manifest (run `make artifacts`)")?;
+        let mut specs = Vec::new();
+        for (name, entry) in man.as_obj()? {
+            let mut inputs = Vec::new();
+            for inp in entry.get("inputs")?.as_arr()? {
+                inputs.push(MicroInput {
+                    name: inp.get("name")?.as_str()?.to_string(),
+                    shape: inp.get("shape")?.as_shape()?,
+                    dtype: Dtype::parse(inp.get("dtype")?.as_str()?)?,
+                });
+            }
+            specs.push(MicroSpec {
+                name: name.clone(),
+                artifact: entry.get("artifact")?.as_str()?.to_string(),
+                inputs,
+                meta: entry.get("meta")?.clone(),
+            });
+        }
+        Ok(MicroCatalog { root, specs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&MicroSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("micro kernel '{name}' not in manifest"))
+    }
+
+    /// Names matching a prefix (e.g. `rotate_d` for the scaling sweep).
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .specs
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.name.clone())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Compile one kernel.
+    pub fn compile(&self, engine: &Engine, name: &str) -> Result<MicroKernel> {
+        let spec = self.get(name)?.clone();
+        let graph = engine.load_graph(self.root.join(&spec.artifact))?;
+        Ok(MicroKernel { spec, graph })
+    }
+}
+
+/// A compiled micro kernel ready to execute.
+pub struct MicroKernel {
+    pub spec: MicroSpec,
+    pub graph: Graph,
+}
+
+impl MicroKernel {
+    /// Fabricate seeded inputs matching the declared specs. f32 inputs
+    /// are N(0, std); integer/code inputs are uniform over their domain.
+    pub fn random_inputs(&self, seed: u64, std: f32) -> Result<Vec<Literal>> {
+        let mut rng = Rng::new(seed);
+        self.spec
+            .inputs
+            .iter()
+            .map(|inp| {
+                let n: usize = inp.shape.iter().product();
+                match inp.dtype {
+                    Dtype::F32 => lit_f32(&inp.shape, &rng.normal_vec(n, std)),
+                    Dtype::I32 => {
+                        let v: Vec<i32> = (0..n).map(|_| rng.below(16) as i32).collect();
+                        lit_i32(&inp.shape, &v)
+                    }
+                    Dtype::U8 => {
+                        let v: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                        lit_u8(&inp.shape, &v)
+                    }
+                    Dtype::I8 => {
+                        let v: Vec<i8> =
+                            (0..n).map(|_| rng.below(255) as i32 as i8).collect();
+                        lit_i8(&inp.shape, &v)
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Execute once with the given inputs.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.graph.run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Catalog parsing is covered here; execution tests live in
+    // rust/tests/ (they need compiled artifacts).
+
+    #[test]
+    fn parses_micro_manifest_shape() {
+        let doc = r#"{
+            "rotate_d256": {
+                "artifact": "rotate_d256.hlo.txt",
+                "inputs": [
+                    {"name": "x", "shape": [128, 256], "dtype": "f32"},
+                    {"name": "q", "shape": [8, 496], "dtype": "f32"}
+                ],
+                "meta": {"d": 256}
+            }
+        }"#;
+        let dir = std::env::temp_dir().join(format!("oft_micro_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("micro")).unwrap();
+        std::fs::write(dir.join("micro/manifest.json"), doc).unwrap();
+        let cat = MicroCatalog::load(&dir).unwrap();
+        assert_eq!(cat.specs.len(), 1);
+        let s = cat.get("rotate_d256").unwrap();
+        assert_eq!(s.meta_usize("d"), Some(256));
+        assert_eq!(s.inputs[0].shape, vec![128, 256]);
+        assert_eq!(cat.names_with_prefix("rotate_d"), vec!["rotate_d256"]);
+        assert!(cat.get("nope").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

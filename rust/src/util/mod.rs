@@ -1,0 +1,72 @@
+//! Small shared utilities: PRNG, statistics, timing, logging, formatting.
+//!
+//! The offline crate registry has no `rand`/`criterion`/`log` backends, so
+//! these are in-repo substrates (see DESIGN.md §Substitutions).
+
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Format a byte count as a human-readable string (GiB/MiB/KiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a parameter count (e.g. `17.65M`, `7.89M`, `1.2B`).
+pub fn human_count(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.2}B", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}M", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.1}K", f / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Format seconds as `HH:MM:SS` (the paper's clock-time tables).
+pub fn human_clock(secs: f64) -> String {
+    let s = secs.max(0.0).round() as u64;
+    format!("{:02}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(80 * 1024 * 1024 * 1024), "80.00 GiB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(human_count(17_650_000), "17.65M");
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(7_890_000), "7.89M");
+        assert_eq!(human_count(1_200_000_000), "1.20B");
+    }
+
+    #[test]
+    fn clock_formatting() {
+        assert_eq!(human_clock(0.0), "00:00:00");
+        assert_eq!(human_clock(3.0 * 3600.0 + 25.0 * 60.0), "03:25:00");
+        assert_eq!(human_clock(12.0 * 3600.0 + 51.0 * 60.0 + 45.0), "12:51:45");
+    }
+}

@@ -1,0 +1,126 @@
+//! Summary statistics over measurement samples (bench-harness backbone).
+
+/// Summary of a sample set (times in seconds, or any unit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample set");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        Summary {
+            n,
+            mean,
+            median: percentile(&sorted, 50.0),
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+            p95: percentile(&sorted, 95.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean (used for speedup aggregation across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Ordinary least squares fit of log(y) = a + b*log(x); returns the
+/// exponent b. Used by the complexity-scaling bench to estimate whether
+/// step cost grows ~d^2 (OFTv2) or ~d^3 (weight-centric OFT).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / lx.len() as f64;
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile(&s, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&s, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglog_slope_quadratic() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_order_invariants() {
+        crate::testkit::check("summary ordering", 50, |g| {
+            let n = g.usize_in(1, 40);
+            let xs: Vec<f64> = (0..n).map(|_| g.f32_in(0.0, 100.0) as f64).collect();
+            let s = Summary::of(&xs);
+            if !(s.min <= s.median && s.median <= s.p95 + 1e-12 && s.p95 <= s.max) {
+                return Err(format!("{s:?}"));
+            }
+            if s.mean < s.min - 1e-9 || s.mean > s.max + 1e-9 {
+                return Err(format!("mean out of range: {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loglog_slope_cubic() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x * x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,388 @@
+//! Integration: AOT artifacts executed through the PJRT runtime,
+//! cross-checked against the host-side Rust oracles (rust/src/peft,
+//! rust/src/quant).
+//!
+//! Requires `make artifacts`; every test skips gracefully when the
+//! artifact tree is absent so plain `cargo test` still passes.
+
+use oftv2::artifacts_root;
+use oftv2::coordinator::{BundleState, Manifest};
+use oftv2::peft;
+use oftv2::quant::{AwqTensor, Nf4Tensor};
+use oftv2::runtime::micro::MicroCatalog;
+use oftv2::runtime::{lit_f32, lit_i32, Engine};
+use oftv2::tensor::Tensor;
+use oftv2::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::cpu().expect("PJRT CPU client")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("micro/manifest.json").exists()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+fn assert_finite(xs: &[f32], what: &str) {
+    assert!(xs.iter().all(|x| x.is_finite()), "{what}: non-finite values");
+}
+
+// ---------------------------------------------------------------------------
+// Micro kernels vs host oracles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cnp_kernel_matches_host_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    for name in ["cnp_b16", "cnp_b32"] {
+        let k = cat.compile(&e, name).unwrap();
+        let b = k.spec.meta_usize("b").unwrap();
+        let kk = k.spec.meta_usize("k").unwrap();
+        let inputs = k.random_inputs(3, 0.02).unwrap();
+        let out = k.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+        assert_finite(&out, name);
+        let q = inputs[0].to_vec::<f32>().unwrap();
+        let p = peft::packed_dim(b);
+        // check the first 4 blocks against the host CNP
+        for blk in 0..4 {
+            let r = peft::cayley_neumann(&q[blk * p..(blk + 1) * p], b, kk).unwrap();
+            let got = &out[blk * b * b..(blk + 1) * b * b];
+            let diff = max_abs_diff(got, &r.data);
+            assert!(diff < 1e-4, "{name} block {blk}: diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn cnp_kernel_is_orthogonal_for_small_q() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let k = cat.compile(&e, "cnp_b32_k8").unwrap();
+    let inputs = k.random_inputs(5, 0.01).unwrap();
+    let out = k.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    let b = 32;
+    for blk in 0..3 {
+        let r = Tensor::from_vec(&[b, b], out[blk * b * b..(blk + 1) * b * b].to_vec());
+        let err = peft::orthogonality_error(&r);
+        assert!(err < 1e-3, "block {blk}: orthogonality error {err}");
+    }
+}
+
+#[test]
+fn neumann_error_decreases_with_k() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let b = 32;
+    let p = peft::packed_dim(b);
+    let mut rng = Rng::new(9);
+    let packed: Vec<f32> = rng.normal_vec(32 * p, 0.02);
+    let mut errs = Vec::new();
+    for k in [1usize, 3, 6, 8] {
+        let kern = cat.compile(&e, &format!("cnp_b{b}_k{k}")).unwrap();
+        let out = kern
+            .run(&[lit_f32(&[32, p], &packed).unwrap()])
+            .unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        // compare block 0 against the exact Cayley
+        let exact = peft::cayley_exact(&packed[..p], b).unwrap();
+        errs.push(max_abs_diff(&out[..b * b], &exact.data));
+    }
+    for w in errs.windows(2) {
+        assert!(w[1] <= w[0] * 1.5 + 1e-7, "errors not decreasing: {errs:?}");
+    }
+    assert!(errs.last().unwrap() < &1e-4, "k=8 error too large: {errs:?}");
+}
+
+#[test]
+fn rotate_kernel_matches_host_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let k = cat.compile(&e, "rotate_d256").unwrap();
+    // realistic adapter regime: small Q (the paper's ||Q|| < 1 setting)
+    let inputs = k.random_inputs(7, 0.05).unwrap();
+    let out = k.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    assert_finite(&out, "rotate_d256");
+
+    let rows = 128;
+    let d = 256;
+    let b = 32; // MICRO_B
+    let p = peft::packed_dim(b);
+    let x = Tensor::from_vec(&[rows, d], inputs[0].to_vec::<f32>().unwrap());
+    let q = inputs[1].to_vec::<f32>().unwrap();
+    let blocks: Vec<Tensor> = (0..d / b)
+        .map(|i| peft::cayley_neumann(&q[i * p..(i + 1) * p], b, 5).unwrap())
+        .collect();
+    let want = peft::block_rotate(&x, &blocks).unwrap();
+    let diff = max_abs_diff(&out, &want.data);
+    assert!(diff < 1e-3, "rotate mismatch: {diff}");
+}
+
+#[test]
+fn rotate_with_zero_q_is_identity() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let k = cat.compile(&e, "rotate_d256").unwrap();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = rng.normal_vec(128 * 256, 1.0);
+    let q = vec![0.0f32; 8 * peft::packed_dim(32)];
+    let out = k
+        .run(&[
+            lit_f32(&[128, 256], &x).unwrap(),
+            lit_f32(&[8, 496], &q).unwrap(),
+        ])
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    assert!(max_abs_diff(&out, &x) < 1e-5, "R(0) != I");
+}
+
+#[test]
+fn nf4_dequant_kernel_matches_rust_packing() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let k = cat.compile(&e, "nf4_dequant_1m").unwrap();
+    // quantize a real tensor with the Rust packer, feed the packs
+    let mut rng = Rng::new(13);
+    let n = 1024 * 1024;
+    let t = Tensor::randn(&[n], 0.1, &mut rng);
+    let q = Nf4Tensor::quantize(&t);
+    let out = k
+        .run(&[
+            oftv2::runtime::lit_u8(&[q.codes.len()], &q.codes).unwrap(),
+            oftv2::runtime::lit_i8(&[q.absmax_q.len()], &q.absmax_q).unwrap(),
+            lit_f32(&[q.absmax_s.len()], &q.absmax_s).unwrap(),
+            lit_f32(&[1], &[q.offset]).unwrap(),
+        ])
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    let host = q.dequantize();
+    let diff = max_abs_diff(&out[..n], &host.data);
+    assert!(diff < 1e-5, "nf4 dequant kernel vs rust packer: {diff}");
+}
+
+#[test]
+fn awq_dequant_kernel_matches_rust_packing() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let k = cat.compile(&e, "awq_dequant_1m").unwrap();
+    let mut rng = Rng::new(17);
+    let (din, dout) = (1024, 1024);
+    let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+    let act: Vec<f32> = (0..din).map(|i| 1.0 + (i % 7) as f32).collect();
+    let q = AwqTensor::quantize(&w, Some(&act)).unwrap();
+    let out = k
+        .run(&[
+            oftv2::runtime::lit_u8(&[din / 2, dout], &q.codes).unwrap(),
+            lit_f32(&[din / 64, dout], &q.scales).unwrap(),
+            lit_f32(&[din], &q.eq).unwrap(),
+        ])
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    let host = q.dequantize();
+    let diff = max_abs_diff(&out, &host.data);
+    assert!(diff < 1e-5, "awq dequant kernel vs rust packer: {diff}");
+}
+
+#[test]
+fn merge_and_rotate_paths_agree() {
+    // Eq. (1) == Eq. (2) at the HLO level: weight-centric merge_w and
+    // input-centric rotate_w must produce the same output.
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let cat = MicroCatalog::load(artifacts_root()).unwrap();
+    let merged = cat.compile(&e, "merge_w_d256").unwrap();
+    let rotated = cat.compile(&e, "rotate_w_d256").unwrap();
+    let inputs = merged.random_inputs(23, 0.1).unwrap();
+    let a = merged.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    let b = rotated.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    let scale = a.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1.0);
+    let diff = max_abs_diff(&a, &b) / scale;
+    assert!(diff < 1e-3, "merge vs rotate relative diff {diff}");
+}
+
+// ---------------------------------------------------------------------------
+// Bundle graphs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eval_loss_is_ln_vocab_at_init_for_every_tiny_bundle() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let root = artifacts_root();
+    for tag in [
+        "tiny_full",
+        "tiny_none",
+        "tiny_lora",
+        "tiny_oft_merged",
+        "tiny_oft_v2",
+        "tiny_qlora_nf4",
+        "tiny_qoft_nf4",
+        "tiny_qlora_awq",
+        "tiny_qoft_awq",
+    ] {
+        let man = Manifest::load(root.join(tag)).unwrap();
+        let st = BundleState::init(&man, 7, None).unwrap();
+        let g = e.load_graph(man.artifact(&man.eval_loss_file)).unwrap();
+        let (b, t) = (man.model.batch, man.model.seq_len);
+        let mut rng = Rng::new(3);
+        let tokens: Vec<i32> = (0..b * (t + 1)).map(|_| rng.below(250) as i32).collect();
+        let mask = vec![1.0f32; b * t];
+        let mut args = st.trainable_literals(&man).unwrap();
+        args.extend(st.fixed.iter().cloned());
+        args.push(lit_i32(&[b, t + 1], &tokens).unwrap());
+        args.push(lit_f32(&[b, t], &mask).unwrap());
+        let outs = g.run(&args).unwrap();
+        let sum_nll = outs[0].to_vec::<f32>().unwrap()[0];
+        let count = outs[1].to_vec::<f32>().unwrap()[0];
+        let mean = sum_nll / count;
+        // an untrained model on random tokens: mean NLL ~ ln(vocab),
+        // with slack for init noise and quantization error
+        let lnv = (man.model.vocab as f32).ln();
+        assert!(
+            (mean - lnv).abs() < 1.0,
+            "{tag}: mean NLL {mean} vs ln(V) {lnv}"
+        );
+        assert_eq!(count, (b * t) as f32, "{tag}");
+    }
+}
+
+#[test]
+fn adapter_bundles_match_base_loss_at_identity_init() {
+    // At init (Q=0, B=0) every adapter is a no-op, so oft_v2 / lora /
+    // oft_merged must produce exactly the base model's loss.
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let root = artifacts_root();
+    let mut rng = Rng::new(3);
+    let man0 = Manifest::load(root.join("tiny_none")).unwrap();
+    let (b, t) = (man0.model.batch, man0.model.seq_len);
+    let tokens: Vec<i32> = (0..b * (t + 1)).map(|_| rng.below(250) as i32).collect();
+    let mask = vec![1.0f32; b * t];
+
+    let loss_of = |tag: &str| -> f32 {
+        let man = Manifest::load(root.join(tag)).unwrap();
+        let st = BundleState::init(&man, 7, None).unwrap();
+        let g = e.load_graph(man.artifact(&man.eval_loss_file)).unwrap();
+        let mut args = st.trainable_literals(&man).unwrap();
+        args.extend(st.fixed.iter().cloned());
+        args.push(lit_i32(&[b, t + 1], &tokens).unwrap());
+        args.push(lit_f32(&[b, t], &mask).unwrap());
+        let outs = g.run(&args).unwrap();
+        outs[0].to_vec::<f32>().unwrap()[0] / outs[1].to_vec::<f32>().unwrap()[0]
+    };
+
+    let base = loss_of("tiny_none");
+    for tag in ["tiny_lora", "tiny_oft_v2", "tiny_oft_merged"] {
+        let l = loss_of(tag);
+        assert!(
+            (l - base).abs() < 1e-3,
+            "{tag}: {l} vs base {base} — adapter not identity at init"
+        );
+    }
+}
+
+#[test]
+fn logits_last_returns_vocab_row() {
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let man = Manifest::load(artifacts_root().join("tiny_oft_v2")).unwrap();
+    let st = BundleState::init(&man, 7, None).unwrap();
+    let g = e.load_graph(man.artifact(&man.logits_last_file)).unwrap();
+    let t = man.model.seq_len;
+    let mut tokens = vec![0i32; t];
+    tokens[0] = 1;
+    tokens[1] = 42;
+    let mut args = st.trainable_literals(&man).unwrap();
+    args.extend(st.fixed.iter().cloned());
+    args.push(lit_i32(&[1, t], &tokens).unwrap());
+    args.push(oftv2::runtime::lit_scalar_i32(2));
+    let outs = g.run(&args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), man.model.vocab);
+    assert_finite(&logits, "logits_last");
+    // causality: changing a token *after* cur_len must not change logits
+    let mut tokens2 = tokens.clone();
+    tokens2[10] = 99;
+    let mut args2 = st.trainable_literals(&man).unwrap();
+    args2.extend(st.fixed.iter().cloned());
+    args2.push(lit_i32(&[1, t], &tokens2).unwrap());
+    args2.push(oftv2::runtime::lit_scalar_i32(2));
+    let logits2 = g.run(&args2).unwrap()[0].to_vec::<f32>().unwrap();
+    assert!(max_abs_diff(&logits, &logits2) < 1e-5, "future tokens leak");
+}
+
+#[test]
+fn quantized_eval_close_to_full_precision() {
+    // NF4/AWQ dequantization error should shift the eval loss only
+    // slightly relative to the same weights in f32.
+    if !have_artifacts() {
+        return;
+    }
+    let e = engine();
+    let root = artifacts_root();
+    let mut rng = Rng::new(3);
+    let man_f = Manifest::load(root.join("tiny_none")).unwrap();
+    let (b, t) = (man_f.model.batch, man_f.model.seq_len);
+    let tokens: Vec<i32> = (0..b * (t + 1)).map(|_| rng.below(250) as i32).collect();
+    let mask = vec![1.0f32; b * t];
+
+    let loss_of = |tag: &str| -> f32 {
+        let man = Manifest::load(root.join(tag)).unwrap();
+        let st = BundleState::init(&man, 7, None).unwrap();
+        let g = e.load_graph(man.artifact(&man.eval_loss_file)).unwrap();
+        let mut args = st.trainable_literals(&man).unwrap();
+        args.extend(st.fixed.iter().cloned());
+        args.push(lit_i32(&[b, t + 1], &tokens).unwrap());
+        args.push(lit_f32(&[b, t], &mask).unwrap());
+        let outs = g.run(&args).unwrap();
+        outs[0].to_vec::<f32>().unwrap()[0] / outs[1].to_vec::<f32>().unwrap()[0]
+    };
+    let full = loss_of("tiny_none");
+    for tag in ["tiny_qoft_nf4", "tiny_qoft_awq"] {
+        let quant = loss_of(tag);
+        assert!(
+            (quant - full).abs() < 0.3,
+            "{tag}: quantized loss {quant} too far from f32 {full}"
+        );
+    }
+}
