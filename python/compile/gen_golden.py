@@ -1,0 +1,134 @@
+"""Generate cross-language golden fixtures for the Rust oracles.
+
+Writes small JSON files under rust/tests/golden/ from the python
+reference kernels (compile/kernels/ref.py): CNP builds at k in {2,4,8},
+one block rotation, and an NF4 quantize->dequantize pass. The Rust test
+rust/tests/golden.rs replays the same inputs through rust/src/peft and
+rust/src/quant and asserts 1e-4 agreement — cross-language parity
+without requiring JAX at cargo-test time.
+
+Inputs are synthesized from an integer Weyl sequence so both languages
+reconstruct bit-identical f32 inputs from three scalars (n, scale,
+offset index) instead of shipping big arrays:
+
+    h_i = (i * 2654435761) mod 2^32
+    x_i = (f32(h_i) / 4294967296.0 - 0.5) * scale
+
+Usage (from python/):  python -m compile.gen_golden [--out DIR]
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+MULT = np.uint64(2654435761)
+MOD = np.uint64(1) << np.uint64(32)
+
+
+def weyl_f32(n: int, scale: float, start: int = 0) -> np.ndarray:
+    """Deterministic f32 inputs both languages can reproduce exactly."""
+    i = np.arange(start, start + n, dtype=np.uint64)
+    h = (i * MULT) % MOD
+    return ((h.astype(np.float32) / np.float32(4294967296.0)) - np.float32(0.5)) * np.float32(
+        scale
+    )
+
+
+def floats(a) -> list:
+    return [float(x) for x in np.asarray(a, np.float32).reshape(-1)]
+
+
+def gen_cnp(out_dir: str):
+    b, nb = 8, 4
+    p = ref.packed_dim(b)
+    for k in (2, 4, 8):
+        packed = weyl_f32(nb * p, 0.2, start=100 + k).reshape(nb, p)
+        r = np.asarray(ref.cayley_neumann(packed, b, k), np.float32)
+        doc = {
+            "kernel": "cayley_neumann",
+            "b": b,
+            "nb": nb,
+            "k": k,
+            "input": {"n": nb * p, "scale": 0.2, "start": 100 + k},
+            "output": floats(r),
+            "tolerance": 1e-4,
+        }
+        path = os.path.join(out_dir, f"cnp_k{k}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        print(f"[golden] {path}: {len(doc['output'])} values")
+
+
+def gen_rotate(out_dir: str):
+    b, nb, rows, k = 8, 4, 8, 5
+    d = b * nb
+    p = ref.packed_dim(b)
+    x = weyl_f32(rows * d, 2.0, start=7).reshape(rows, d)
+    packed = weyl_f32(nb * p, 0.1, start=900).reshape(nb, p)
+    blocks = np.asarray(ref.cayley_neumann(packed, b, k), np.float32)
+    y = np.asarray(ref.block_rotate(x, blocks), np.float32)
+    doc = {
+        "kernel": "block_rotate",
+        "b": b,
+        "nb": nb,
+        "rows": rows,
+        "k": k,
+        "x": {"n": rows * d, "scale": 2.0, "start": 7},
+        "q": {"n": nb * p, "scale": 0.1, "start": 900},
+        "output": floats(y),
+        "tolerance": 1e-4,
+    }
+    path = os.path.join(out_dir, "rotate.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"[golden] {path}: {len(doc['output'])} values")
+
+
+def gen_nf4(out_dir: str):
+    # one full double-quant tile (the smallest unpadded case)
+    n = ref.NF4_TILE
+    x = weyl_f32(n, 0.4, start=31)
+    q = ref.nf4_quantize(x)
+    deq = np.asarray(
+        ref.nf4_dequant_ref(
+            q["codes"], q["absmax_q"], q["absmax_s"], q["offset"], n, (n,)
+        ),
+        np.float32,
+    )
+    stride = 97
+    samples = deq[::stride]
+    rms = float(np.sqrt(((deq - x) ** 2).mean()))
+    doc = {
+        "kernel": "nf4_roundtrip",
+        "input": {"n": n, "scale": 0.4, "start": 31},
+        "offset": float(q["offset"][0]),
+        "absmax_s": floats(q["absmax_s"]),
+        "absmax_q": [int(v) for v in q["absmax_q"]],
+        "sample_stride": stride,
+        "dequant_samples": floats(samples),
+        "roundtrip_rms": rms,
+        # absmax path is float-exact; codes may differ by ties only
+        "tolerance": 1e-4,
+    }
+    path = os.path.join(out_dir, "nf4.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"[golden] {path}: {len(doc['dequant_samples'])} samples, rms {rms:.5f}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("..", "rust", "tests", "golden"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    gen_cnp(args.out)
+    gen_rotate(args.out)
+    gen_nf4(args.out)
+
+
+if __name__ == "__main__":
+    main()

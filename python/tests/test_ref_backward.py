@@ -1,0 +1,443 @@
+"""Lock the hand-derived backward formulas used by the Rust reference
+backend (rust/src/runtime/refmodel.rs) against jax.grad of the L2 model.
+
+The Rust crate executes train-step graphs natively (no JAX at runtime),
+with a manually written backward pass. Each formula here is a 1:1 numpy
+mirror of the Rust implementation; if these tests pass, the Rust code is
+math-correct by transcription.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ModelCfg
+from compile.kernels import ref
+
+CFG_KW = dict(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+    seq_len=8, batch=2, block_b=8, lora_r=2, neumann_k=5,
+)
+
+
+def packed_dim(b):
+    return b * (b - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors of the Rust refmodel kernels
+# ---------------------------------------------------------------------------
+
+
+def skew_np(p, b):
+    """(pd,) packed -> (b, b) skew-symmetric (single block)."""
+    q = np.zeros((b, b), np.float32)
+    k = 0
+    for i in range(b):
+        for j in range(i + 1, b):
+            q[i, j] = p[k]
+            q[j, i] = -p[k]
+            k += 1
+    return q
+
+
+def cnp_fwd_np(p, b, k):
+    """Single-block CNP: R = (I+Q)(I + Q + ... + Q^k)."""
+    q = skew_np(p, b)
+    eye = np.eye(b, dtype=np.float32)
+    acc = eye.copy()
+    term = eye.copy()
+    for _ in range(k):
+        term = term @ q
+        acc = acc + term
+    return (eye + q) @ acc
+
+
+def cnp_bwd_np(p, b, k, g):
+    """d(loss)/d(packed) for R = (I+Q)S, S = sum_{i=0..k} Q^i, given
+    G = d(loss)/dR. This is the formula rust cnp_backward implements."""
+    q = skew_np(p, b)
+    eye = np.eye(b, dtype=np.float32)
+    acc = eye.copy()
+    term = eye.copy()
+    for _ in range(k):
+        term = term @ q
+        acc = acc + term
+    dq = g @ acc.T
+    h = (eye + q).T @ g
+    qt = q.T
+    powers = [eye.copy()]
+    for _ in range(max(k - 1, 0)):
+        powers.append(powers[-1] @ qt)
+    for i in range(1, k + 1):
+        for j in range(i):
+            dq = dq + powers[j] @ h @ powers[i - 1 - j]
+    dp = np.zeros(packed_dim(b), np.float32)
+    idx = 0
+    for i in range(b):
+        for j in range(i + 1, b):
+            dp[idx] = dq[i, j] - dq[j, i]
+            idx += 1
+    return dp
+
+
+def rmsnorm_fwd_np(x, g):
+    r = 1.0 / np.sqrt((x * x).mean(-1, keepdims=True) + 1e-6)
+    return x * r * g, r
+
+
+def rmsnorm_bwd_np(x, g, r, dy):
+    d = x.shape[-1]
+    dg = (dy * x * r).sum(0)
+    s = (dy * g * x).sum(-1, keepdims=True)
+    dx = dy * g * r - x * (r ** 3 / d) * s
+    return dx, dg
+
+
+GELU_C = np.float32(np.sqrt(2.0 / np.pi))
+GELU_A = np.float32(0.044715)
+
+
+def gelu_np(x):
+    return 0.5 * x * (1.0 + np.tanh(GELU_C * (x + GELU_A * x ** 3)))
+
+
+def gelu_bwd_np(x, dy):
+    u = GELU_C * (x + GELU_A * x ** 3)
+    th = np.tanh(u)
+    return dy * (0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x * x))
+
+
+def block_rotate_np(x, blocks):
+    """x (M, d), blocks (nb, b, b): y[:, i*b:(i+1)*b] = x_i @ R_i."""
+    m, d = x.shape
+    nb, b, _ = blocks.shape
+    xb = x.reshape(m, nb, b)
+    return np.einsum("mnb,nbc->mnc", xb, blocks).reshape(m, d)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror of the full model forward/backward
+# ---------------------------------------------------------------------------
+
+
+class Mirror:
+    """The numpy twin of rust refmodel: forward with caches + manual
+    backward producing grads for every parameter (trainable-or-not)."""
+
+    def __init__(self, cfg: ModelCfg):
+        self.cfg = cfg
+
+    def _weight(self, params, name):
+        return np.asarray(params[name], np.float32)
+
+    def linear_fwd(self, params, name, x):
+        cfg = self.cfg
+        w = self._weight(params, name)
+        cache = {"x": x, "w": w, "name": name}
+        if cfg.method in ("lora", "qlora"):
+            a = self._weight(params, f"{name}.lora_a")
+            bb = self._weight(params, f"{name}.lora_b")
+            s = np.float32(cfg.lora_alpha / cfg.lora_r)
+            xa = x @ a
+            cache.update(a=a, b=bb, xa=xa, s=s)
+            return x @ w + (xa @ bb) * s, cache
+        if cfg.method in ("oft_v2", "qoft"):
+            p = self._weight(params, f"{name}.oft_q")
+            blocks = np.stack(
+                [cnp_fwd_np(p[i], cfg.block_b, cfg.neumann_k) for i in range(p.shape[0])]
+            )
+            z = block_rotate_np(x, blocks)
+            cache.update(packed=p, blocks=blocks, z=z)
+            return z @ w, cache
+        if cfg.method == "oft_merged":
+            p = self._weight(params, f"{name}.oft_q")
+            blocks = np.stack(
+                [cnp_fwd_np(p[i], cfg.block_b, cfg.neumann_k) for i in range(p.shape[0])]
+            )
+            din = w.shape[0]
+            rd = np.zeros((din, din), np.float32)
+            b = cfg.block_b
+            for i in range(p.shape[0]):
+                rd[i * b:(i + 1) * b, i * b:(i + 1) * b] = blocks[i]
+            rw = rd @ w
+            cache.update(packed=p, blocks=blocks, rw=rw)
+            return x @ rw, cache
+        return x @ w, cache
+
+    def linear_bwd(self, cache, dy, grads):
+        cfg = self.cfg
+        x, w, name = cache["x"], cache["w"], cache["name"]
+        b = cfg.block_b
+        if cfg.method == "full":
+            grads[name] = grads.get(name, 0) + x.T @ dy
+            return dy @ w.T
+        if cfg.method in ("lora", "qlora"):
+            s = cache["s"]
+            dxa = (dy @ cache["b"].T) * s
+            grads[f"{name}.lora_b"] = grads.get(f"{name}.lora_b", 0) + cache["xa"].T @ dy * s
+            grads[f"{name}.lora_a"] = grads.get(f"{name}.lora_a", 0) + x.T @ dxa
+            return dy @ w.T + dxa @ cache["a"].T
+        if cfg.method in ("oft_v2", "qoft"):
+            blocks, p = cache["blocks"], cache["packed"]
+            dz = dy @ w.T
+            m, d = x.shape
+            nb = d // b
+            xb = x.reshape(m, nb, b)
+            dzb = dz.reshape(m, nb, b)
+            dr = np.einsum("mnb,mnc->nbc", xb, dzb)
+            dp = np.stack(
+                [cnp_bwd_np(p[i], b, cfg.neumann_k, dr[i]) for i in range(nb)]
+            )
+            grads[f"{name}.oft_q"] = grads.get(f"{name}.oft_q", 0) + dp
+            # dx: rotate dz by R^T per block
+            dx = np.einsum("mnc,nbc->mnb", dzb, blocks).reshape(m, d)
+            return dx
+        if cfg.method == "oft_merged":
+            blocks, p, rw = cache["blocks"], cache["packed"], cache["rw"]
+            dm = x.T @ dy  # (din, dout)
+            nb = w.shape[0] // b
+            dr = np.stack(
+                [dm[i * b:(i + 1) * b] @ w[i * b:(i + 1) * b].T for i in range(nb)]
+            )
+            dp = np.stack(
+                [cnp_bwd_np(p[i], b, cfg.neumann_k, dr[i]) for i in range(nb)]
+            )
+            grads[f"{name}.oft_q"] = grads.get(f"{name}.oft_q", 0) + dp
+            return dy @ rw.T
+        return dy @ w.T  # none
+
+    def loss_and_grads(self, params, tokens, mask):
+        cfg = self.cfg
+        bsz, t1 = tokens.shape
+        t = t1 - 1
+        d, h = cfg.d_model, cfg.n_heads
+        hd = cfg.head_dim
+        full = cfg.method == "full"
+        inputs = tokens[:, :-1]
+        targets = tokens[:, 1:]
+        m = bsz * t
+
+        tok_emb = self._weight(params, "embed.tok")
+        pos_emb = self._weight(params, "embed.pos")
+        x = tok_emb[inputs.reshape(-1)] + np.tile(pos_emb[:t], (bsz, 1))
+        caches = []
+        for i in range(cfg.n_layers):
+            pre = f"layers.{i}"
+            c = {"xin": x}
+            g1 = self._weight(params, f"{pre}.attn.norm")
+            xn1, r1 = rmsnorm_fwd_np(x, g1)
+            c.update(g1=g1, xn1=xn1, r1=r1)
+            q, c["cq"] = self.linear_fwd(params, f"{pre}.attn.wq", xn1)
+            k, c["ck"] = self.linear_fwd(params, f"{pre}.attn.wk", xn1)
+            v, c["cv"] = self.linear_fwd(params, f"{pre}.attn.wv", xn1)
+            qh = q.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+            kh = k.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+            vh = v.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+            scale = np.float32(1.0 / np.sqrt(hd))
+            logits = np.einsum("bhqd,bhkd->bhqk", qh, kh) * scale
+            tril = np.tril(np.ones((t, t), np.float32))
+            logits = np.where(tril[None, None] > 0, logits, np.float32(-1e9))
+            logits = logits - logits.max(-1, keepdims=True)
+            e = np.exp(logits)
+            att = e / e.sum(-1, keepdims=True)
+            o = np.einsum("bhqk,bhkd->bhqd", att, vh)
+            o = o.transpose(0, 2, 1, 3).reshape(m, d)
+            c.update(qh=qh, kh=kh, vh=vh, att=att, o=o, scale=scale)
+            ywo, c["co"] = self.linear_fwd(params, f"{pre}.attn.wo", o)
+            x = x + ywo
+            c["x_mid"] = x
+            g2 = self._weight(params, f"{pre}.mlp.norm")
+            xn2, r2 = rmsnorm_fwd_np(x, g2)
+            c.update(g2=g2, xn2=xn2, r2=r2)
+            up, c["cup"] = self.linear_fwd(params, f"{pre}.mlp.up", xn2)
+            act = gelu_np(up)
+            c.update(up=up, act=act)
+            ydown, c["cdown"] = self.linear_fwd(params, f"{pre}.mlp.down", act)
+            x = x + ydown
+            caches.append(c)
+
+        gf = self._weight(params, "final_norm")
+        xf, rf = rmsnorm_fwd_np(x, gf)
+        head = self._weight(params, "lm_head")
+        logits = xf @ head  # (m, V)
+        lmax = logits.max(-1, keepdims=True)
+        lse = lmax + np.log(np.exp(logits - lmax).sum(-1, keepdims=True))
+        logp = logits - lse
+        tgt = targets.reshape(-1)
+        nll = -logp[np.arange(m), tgt]
+        mflat = mask.reshape(-1)
+        count = max(mflat.sum(), 1.0)
+        loss = (nll * mflat).sum() / count
+
+        # ---- backward ----
+        grads = {}
+        soft = np.exp(logp)
+        dlogits = soft.copy()
+        dlogits[np.arange(m), tgt] -= 1.0
+        dlogits *= (mflat / count)[:, None]
+        if full:
+            grads["lm_head"] = xf.T @ dlogits
+        dxf = dlogits @ head.T
+        dx, dgf = rmsnorm_bwd_np(x, gf, rf, dxf)
+        if full:
+            grads["final_norm"] = dgf
+
+        for i in reversed(range(cfg.n_layers)):
+            pre = f"layers.{i}"
+            c = caches[i]
+            dact = self.linear_bwd(c["cdown"], dx, grads)
+            dup = gelu_bwd_np(c["up"], dact)
+            dxn2 = self.linear_bwd(c["cup"], dup, grads)
+            dxmid_n, dg2 = rmsnorm_bwd_np(c["x_mid"], c["g2"], c["r2"], dxn2)
+            if full:
+                grads[f"{pre}.mlp.norm"] = dg2
+            dxmid = dx + dxmid_n
+            do = self.linear_bwd(c["co"], dxmid, grads)
+            doh = do.reshape(bsz, t, h, hd).transpose(0, 2, 1, 3)
+            att, qh, kh, vh, scale = c["att"], c["qh"], c["kh"], c["vh"], c["scale"]
+            datt_post = np.einsum("bhqd,bhkd->bhqk", doh, vh)
+            dvh = np.einsum("bhqk,bhqd->bhkd", att, doh)
+            datt = att * (datt_post - (datt_post * att).sum(-1, keepdims=True))
+            dqh = np.einsum("bhqk,bhkd->bhqd", datt, kh) * scale
+            dkh = np.einsum("bhqk,bhqd->bhkd", datt, qh) * scale
+            dq = dqh.transpose(0, 2, 1, 3).reshape(m, d)
+            dk = dkh.transpose(0, 2, 1, 3).reshape(m, d)
+            dv = dvh.transpose(0, 2, 1, 3).reshape(m, d)
+            dxn1 = (
+                self.linear_bwd(c["cq"], dq, grads)
+                + self.linear_bwd(c["ck"], dk, grads)
+                + self.linear_bwd(c["cv"], dv, grads)
+            )
+            dxin_n, dg1 = rmsnorm_bwd_np(c["xin"], c["g1"], c["r1"], dxn1)
+            if full:
+                grads[f"{pre}.attn.norm"] = dg1
+            dx = dxmid + dxin_n
+
+        if full:
+            dtok = np.zeros_like(tok_emb)
+            np.add.at(dtok, inputs.reshape(-1), dx)
+            grads["embed.tok"] = dtok
+            grads["embed.pos"] = dx.reshape(bsz, t, d).sum(0)
+        return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+
+
+def build_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    specs = dict(M.base_param_specs(cfg))
+    specs.update(M.adapter_param_specs(cfg))
+    params = {}
+    for name, (shape, (kind, std)) in specs.items():
+        if kind == "normal":
+            # non-trivial adapters so gradients are generic (not the
+            # zero-init special case)
+            params[name] = rng.normal(0.0, max(std, 0.01), shape).astype(np.float32)
+        elif kind == "ones":
+            params[name] = np.ones(shape, np.float32)
+        else:
+            params[name] = rng.normal(0.0, 0.02, shape).astype(np.float32)
+    return params
+
+
+def batch(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len + 1)).astype(np.int32)
+    mask = (rng.random((cfg.batch, cfg.seq_len)) > 0.3).astype(np.float32)
+    return toks, mask
+
+
+def jax_grads(cfg, params, toks, mask):
+    tn = M.trainable_names(cfg)
+
+    def scalar(tr_list):
+        p = dict(params)
+        p.update({n: a for n, a in zip(tn, tr_list)})
+        return M.loss_fn(cfg, p, toks, mask)[0]
+
+    tr = [jnp.asarray(params[n]) for n in tn]
+    loss, gr = jax.value_and_grad(scalar)(tr)
+    return float(loss), {n: np.asarray(g) for n, g in zip(tn, gr)}
+
+
+def rel_err(a, b):
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,k", [(4, 2), (8, 5), (8, 8)])
+def test_cnp_backward_matches_jax(b, k):
+    rng = np.random.default_rng(5)
+    nb = 3
+    p = rng.normal(0, 0.1, (nb, packed_dim(b))).astype(np.float32)
+    g = rng.normal(0, 1.0, (nb, b, b)).astype(np.float32)
+
+    def scalar(pp):
+        return (ref.cayley_neumann(pp, b, k) * g).sum()
+
+    want = np.asarray(jax.grad(scalar)(jnp.asarray(p)))
+    got = np.stack([cnp_bwd_np(p[i], b, k, g[i]) for i in range(nb)])
+    assert rel_err(got, want) < 1e-4, rel_err(got, want)
+
+
+def test_rmsnorm_backward_matches_jax():
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 1, (5, 16)).astype(np.float32)
+    g = rng.normal(1, 0.1, (16,)).astype(np.float32)
+    dy = rng.normal(0, 1, (5, 16)).astype(np.float32)
+
+    def scalar_x(xx):
+        return (M.rmsnorm(xx, g) * dy).sum()
+
+    def scalar_g(gg):
+        return (M.rmsnorm(jnp.asarray(x), gg) * dy).sum()
+
+    _, r = rmsnorm_fwd_np(x, g)
+    dx, dg = rmsnorm_bwd_np(x, g, r, dy)
+    assert rel_err(dx, np.asarray(jax.grad(scalar_x)(jnp.asarray(x)))) < 1e-4
+    assert rel_err(dg, np.asarray(jax.grad(scalar_g)(jnp.asarray(g)))) < 1e-4
+
+
+def test_gelu_backward_matches_jax():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 2, (64,)).astype(np.float32)
+    dy = rng.normal(0, 1, (64,)).astype(np.float32)
+
+    def scalar(xx):
+        return (jax.nn.gelu(xx) * dy).sum()
+
+    got = gelu_bwd_np(x, dy)
+    want = np.asarray(jax.grad(scalar)(jnp.asarray(x)))
+    assert rel_err(got, want) < 1e-3, rel_err(got, want)
+
+
+@pytest.mark.parametrize("method", ["full", "lora", "oft_v2", "oft_merged"])
+def test_model_grads_match_jax(method):
+    cfg = ModelCfg(method=method, **CFG_KW)
+    params = build_params(cfg, seed=3)
+    toks, mask = batch(cfg, seed=4)
+    want_loss, want = jax_grads(cfg, params, toks, mask)
+    got_loss, got = Mirror(cfg).loss_and_grads(params, toks, mask)
+    assert abs(got_loss - want_loss) < 1e-3 * max(1.0, abs(want_loss)), (got_loss, want_loss)
+    for n in M.trainable_names(cfg):
+        e = rel_err(got[n], want[n])
+        assert e < 2e-3, f"{method} {n}: rel err {e}"
+
+
+def test_eval_loss_mirror_matches_jax():
+    cfg = ModelCfg(method="oft_v2", **CFG_KW)
+    params = build_params(cfg, seed=8)
+    toks, mask = batch(cfg, seed=9)
+    want = float(M.loss_fn(cfg, params, jnp.asarray(toks), jnp.asarray(mask))[0])
+    got, _ = Mirror(cfg).loss_and_grads(params, toks, mask)
+    assert abs(got - want) < 1e-3 * max(1.0, abs(want))

@@ -22,7 +22,7 @@ use oftv2::{artifacts_root, Result};
 fn main() -> Result<()> {
     let iters = if quick_mode() { 5 } else { 20 };
     let engine = Engine::cpu()?;
-    let cat = MicroCatalog::load(artifacts_root())?;
+    let cat = MicroCatalog::load_or_builtin(artifacts_root())?;
     let mut report = Report::new("cnp_vs_cayley");
 
     // ---- (a) build-time comparison --------------------------------------

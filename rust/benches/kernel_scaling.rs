@@ -19,7 +19,7 @@ const DIMS: [usize; 4] = [256, 512, 1024, 2048];
 fn main() -> Result<()> {
     let iters = if quick_mode() { 5 } else { 15 };
     let engine = Engine::cpu()?;
-    let cat = MicroCatalog::load(artifacts_root())?;
+    let cat = MicroCatalog::load_or_builtin(artifacts_root())?;
     let mut report = Report::new("kernel_scaling");
 
     let mut rows = Vec::new();

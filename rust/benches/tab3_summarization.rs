@@ -53,16 +53,14 @@ fn main() -> Result<()> {
             ("QLoRA", format!("{preset}_qlora_nf4")),
             ("QOFT", format!("{preset}_qoft_nf4")),
         ] {
-            if !artifacts_root().join(&tag).exists() {
-                println!("(skipping {tag}: bundle not built)");
-                continue;
-            }
             // paper App. A: OFT variants train at 4x the LoRA LR
             let mut phase = fin.clone();
             if tag.contains("oft") {
                 phase.lr *= 4.0;
             }
-            let mut tr = finetune_trainer(
+            // graceful per-tag skip (e.g. PJRT backend with a partial
+            // artifact tree): keep the rows already measured
+            let mut tr = match finetune_trainer(
                 &engine,
                 &artifacts_root(),
                 &tag,
@@ -70,7 +68,13 @@ fn main() -> Result<()> {
                 &phase,
                 Some(&ckpt),
                 &fin_loader,
-            )?;
+            ) {
+                Ok(tr) => tr,
+                Err(e) => {
+                    println!("(skipping {tag}: {e})");
+                    continue;
+                }
+            };
             tr.train()?;
             let rouge = tr.rouge_eval(n_eval, 28)?;
             let params = tr.manifest.params_trainable;

@@ -52,36 +52,13 @@ fn main() -> Result<()> {
             ("QOFT", format!("{preset}_qoft_nf4"), fin.steps),
         ];
         for (label, tag, steps) in methods {
-            if !artifacts_root().join(&tag).exists() {
-                // small preset has no "none" bundle; use the full one frozen
-                let alt = format!("{preset}_full");
-                if label == "Baseline" && artifacts_root().join(&alt).exists() {
-                    let mut phase = fin.clone();
-                    phase.steps = 0;
-                    let mut tr = finetune_trainer(
-                        &engine,
-                        &artifacts_root(),
-                        &alt,
-                        TaskKind::Math,
-                        &phase,
-                        Some(&ckpt),
-                        &fin_loader,
-                    )?;
-                    let p1 = tr.pass1_eval(n_eval, 28)?;
-                    rows.push(vec![scale.into(), label.into(), "-".into(), format!("{p1:.1}")]);
-                    results.push((scale.into(), label.into(), p1));
-                    continue;
-                }
-                println!("(skipping {tag})");
-                continue;
-            }
             let mut phase = fin.clone();
             phase.steps = steps;
             // paper App. A: OFT variants train at 4x the LoRA LR
             if tag.contains("oft") {
                 phase.lr *= 4.0;
             }
-            let mut tr = finetune_trainer(
+            let mut tr = match finetune_trainer(
                 &engine,
                 &artifacts_root(),
                 &tag,
@@ -89,7 +66,13 @@ fn main() -> Result<()> {
                 &phase,
                 Some(&ckpt),
                 &fin_loader,
-            )?;
+            ) {
+                Ok(tr) => tr,
+                Err(e) => {
+                    println!("(skipping {tag}: {e})");
+                    continue;
+                }
+            };
             if steps > 0 {
                 tr.train()?;
             }

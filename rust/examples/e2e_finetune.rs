@@ -52,12 +52,12 @@ fn parse_opts() -> Opts {
 fn main() -> Result<()> {
     let opts = parse_opts();
     let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("runtime platform: {}", engine.platform());
     std::fs::create_dir_all(&opts.out_dir)?;
 
     let root = artifacts_root();
     let full_tag = format!("{}_full", opts.preset);
-    let man = Manifest::load(root.join(&full_tag))?;
+    let man = Manifest::load_or_builtin(root.join(&full_tag))?;
     println!(
         "== {} :: {} base parameters, d={}, {} layers ==",
         opts.preset, man.params_base, man.model.d_model, man.model.n_layers
@@ -108,12 +108,8 @@ fn main() -> Result<()> {
     // ---- Phase 2: adapter finetuning on the shifted corpus -------------
     let mut rows = Vec::new();
     for method_tag in [format!("{}_oft_v2", opts.preset), format!("{}_lora", opts.preset)] {
-        if !root.join(&method_tag).exists() {
-            println!("(skipping {method_tag}: bundle not built)");
-            continue;
-        }
         println!("\n-- finetuning {method_tag} for {} steps --", opts.steps);
-        let man = Manifest::load(root.join(&method_tag))?;
+        let man = Manifest::load_or_builtin(root.join(&method_tag))?;
         let mut fcfg = cfg.clone();
         fcfg.tag = method_tag.clone();
         fcfg.steps = opts.steps;

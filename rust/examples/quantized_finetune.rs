@@ -50,7 +50,7 @@ fn run_bundle(engine: &Engine, tag: &str, steps: usize) -> Result<(f64, f64, f64
 fn main() -> Result<()> {
     let steps = steps_arg();
     let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("runtime platform: {}", engine.platform());
 
     // ---- quantized finetuning across backends ---------------------------
     println!("\n== quantized finetuning ({steps} steps, synthetic math SFT) ==");

@@ -1,7 +1,7 @@
 //! Quickstart: finetune a tiny transformer with OFTv2 (the paper's
 //! input-centric orthogonal finetuning) in under a minute on CPU.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
 //! Loads the `tiny_oft_v2` AOT bundle (2-layer, d=64, block b=16),
 //! trains on synthetic math word problems, and greedy-decodes one
@@ -14,7 +14,7 @@ use oftv2::{artifacts_root, Result};
 
 fn main() -> Result<()> {
     let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("runtime platform: {}", engine.platform());
 
     let mut cfg = RunCfg::default();
     cfg.tag = "tiny_oft_v2".into();

@@ -4,10 +4,21 @@
 //! then frozen, then quantized packs, then data), with shapes, dtypes
 //! and init specs. The coordinator never re-derives these numbers; it
 //! uploads buffers in exactly the recorded order.
+//!
+//! Bundles come from two equivalent sources:
+//!
+//! * [`Manifest::load`] — parse `<dir>/manifest.json` written by
+//!   `python -m compile.aot` (required for the PJRT backend, which
+//!   also needs the HLO files it names);
+//! * [`Manifest::builtin`] — synthesize the identical contract from a
+//!   bundle tag (`<preset>_<method>[_<quant>]`), mirroring
+//!   `aot.build_manifest` field-for-field, so the reference engine
+//!   needs no artifact tree at all. [`Manifest::load_or_builtin`]
+//!   picks whichever is available.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::json::{self, Json};
 use crate::runtime::Dtype;
@@ -95,7 +106,264 @@ pub struct Manifest {
     pub logits_last_file: String,
 }
 
+/// Model-shape presets mirrored from `python/compile/configs.PRESETS`:
+/// (vocab, d_model, n_layers, n_heads, d_ff, seq_len, batch, block_b,
+/// lora_r).
+const PRESETS: [(&str, [usize; 9]); 6] = [
+    ("tiny", [256, 64, 2, 2, 256, 48, 4, 16, 4]),
+    ("small", [512, 128, 2, 4, 512, 64, 8, 32, 8]),
+    ("bench", [512, 256, 4, 8, 1024, 128, 8, 32, 16]),
+    ("fig1", [512, 1024, 2, 8, 2048, 32, 4, 32, 16]),
+    ("e2e", [4096, 512, 6, 8, 2048, 256, 8, 32, 16]),
+    ("e2e100m", [8192, 896, 8, 14, 3584, 256, 4, 32, 16]),
+];
+
+const METHODS: [&str; 7] = ["full", "none", "lora", "oft_merged", "oft_v2", "qlora", "qoft"];
+
+/// Split a bundle tag into (preset, method, quant).
+pub fn parse_tag(tag: &str) -> Result<(String, String, String)> {
+    let (preset, rest) = tag
+        .split_once('_')
+        .with_context(|| format!("bundle tag '{tag}' is not <preset>_<method>[_<quant>]"))?;
+    for method in METHODS {
+        if rest == method {
+            return Ok((preset.to_string(), method.to_string(), "none".to_string()));
+        }
+        for quant in ["nf4", "awq"] {
+            if rest == format!("{method}_{quant}") {
+                return Ok((preset.to_string(), method.to_string(), quant.to_string()));
+            }
+        }
+    }
+    bail!("bundle tag '{tag}' names no known method")
+}
+
+/// NF4 pack sizes for a flat tensor of `n` elements (mirrors
+/// `python/compile/kernels/nf4.packed_sizes`): (code bytes, absmax
+/// blocks, double-quant groups) after padding to whole tiles.
+fn nf4_packed_sizes(n: usize) -> (usize, usize, usize) {
+    let tile = crate::quant::NF4_TILE;
+    let npad = n.div_ceil(tile) * tile;
+    let nblocks = npad / crate::quant::NF4_BLOCK;
+    (npad / 2, nblocks, nblocks / crate::quant::NF4_GROUP)
+}
+
 impl Manifest {
+    /// Synthesize the bundle contract for `tag` without an artifact
+    /// tree — the reference engine's path. Field-for-field identical to
+    /// what `aot.build_manifest` writes to manifest.json.
+    pub fn builtin(tag: &str) -> Result<Manifest> {
+        let (preset, method, quant) = parse_tag(tag)?;
+        let dims = PRESETS
+            .iter()
+            .find(|(name, _)| *name == preset)
+            .map(|(_, d)| *d)
+            .with_context(|| format!("unknown preset '{preset}'"))?;
+        let [vocab, d_model, n_layers, n_heads, d_ff, seq_len, batch, block_b, lora_r] = dims;
+        let model = ModelDims {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            seq_len,
+            batch,
+            block_b,
+            neumann_k: 5,
+            lora_r,
+            lora_alpha: 16.0,
+        };
+        let is_quantized = matches!(method.as_str(), "qlora" | "qoft");
+        ensure!(
+            is_quantized == (quant != "none"),
+            "method '{method}' is inconsistent with quant '{quant}'"
+        );
+        let (d, f) = (d_model, d_ff);
+        if method.starts_with("oft") || method == "qoft" {
+            ensure!(
+                d % block_b == 0 && f % block_b == 0,
+                "block size {block_b} must divide d_model {d} and d_ff {f}"
+            );
+        }
+
+        // (name, din, dout) for every adapted linear, in graph order.
+        let mut linears: Vec<(String, usize, usize)> = Vec::new();
+        for i in 0..n_layers {
+            for proj in ["wq", "wk", "wv", "wo"] {
+                linears.push((format!("layers.{i}.attn.{proj}"), d, d));
+            }
+            linears.push((format!("layers.{i}.mlp.up"), d, f));
+            linears.push((format!("layers.{i}.mlp.down"), f, d));
+        }
+
+        // Base (pretrained) parameter specs.
+        let mut base: Vec<ParamSpec> = vec![
+            ParamSpec {
+                name: "embed.tok".into(),
+                shape: vec![vocab, d],
+                init: Init::Normal(0.02),
+            },
+            ParamSpec {
+                name: "embed.pos".into(),
+                shape: vec![seq_len, d],
+                init: Init::Normal(0.01),
+            },
+            ParamSpec {
+                name: "final_norm".into(),
+                shape: vec![d],
+                init: Init::Ones,
+            },
+            ParamSpec {
+                name: "lm_head".into(),
+                shape: vec![d, vocab],
+                init: Init::Normal(0.02),
+            },
+        ];
+        for i in 0..n_layers {
+            for norm in ["attn.norm", "mlp.norm"] {
+                base.push(ParamSpec {
+                    name: format!("layers.{i}.{norm}"),
+                    shape: vec![d],
+                    init: Init::Ones,
+                });
+            }
+        }
+        for (name, din, dout) in &linears {
+            base.push(ParamSpec {
+                name: name.clone(),
+                shape: vec![*din, *dout],
+                init: Init::Normal(0.02),
+            });
+        }
+        base.sort_by(|a, b| a.name.cmp(&b.name));
+
+        // Trainable adapter specs (sorted by name, like aot.py).
+        let mut trainable: Vec<ParamSpec> = match method.as_str() {
+            "full" => base.clone(),
+            "none" => Vec::new(),
+            "lora" | "qlora" => linears
+                .iter()
+                .flat_map(|(name, din, dout)| {
+                    vec![
+                        ParamSpec {
+                            name: format!("{name}.lora_a"),
+                            shape: vec![*din, lora_r],
+                            init: Init::Normal(0.01),
+                        },
+                        ParamSpec {
+                            name: format!("{name}.lora_b"),
+                            shape: vec![lora_r, *dout],
+                            init: Init::Zeros,
+                        },
+                    ]
+                })
+                .collect(),
+            "oft_merged" | "oft_v2" | "qoft" => linears
+                .iter()
+                .map(|(name, din, _)| ParamSpec {
+                    name: format!("{name}.oft_q"),
+                    shape: vec![din / block_b, block_b * (block_b - 1) / 2],
+                    init: Init::Zeros,
+                })
+                .collect(),
+            other => bail!("unknown method '{other}'"),
+        };
+        trainable.sort_by(|a, b| a.name.cmp(&b.name));
+
+        // Frozen base inputs: everything for full-precision adapter
+        // methods, non-linear tensors for quantized ones, none for full.
+        let frozen: Vec<ParamSpec> = match method.as_str() {
+            "full" => Vec::new(),
+            "qlora" | "qoft" => base
+                .iter()
+                .filter(|s| !linears.iter().any(|(n, _, _)| n == &s.name))
+                .cloned()
+                .collect(),
+            _ => base.clone(),
+        };
+
+        // Quantized packs, in linear order (not sorted — graph order).
+        let mut quantized: Vec<QuantSpec> = Vec::new();
+        if is_quantized {
+            for (name, din, dout) in &linears {
+                let n = din * dout;
+                if quant == "nf4" {
+                    let (nbytes, nblocks, ngroups) = nf4_packed_sizes(n);
+                    let packs = [
+                        ("nf4_codes", vec![nbytes], Dtype::U8),
+                        ("nf4_absmax_q", vec![nblocks], Dtype::I8),
+                        ("nf4_absmax_s", vec![ngroups], Dtype::F32),
+                        ("nf4_offset", vec![1], Dtype::F32),
+                    ];
+                    for (suffix, shape, dtype) in packs {
+                        quantized.push(QuantSpec {
+                            name: format!("{name}.{suffix}"),
+                            base: name.clone(),
+                            shape,
+                            dtype,
+                        });
+                    }
+                } else {
+                    let g = din / crate::quant::AWQ_GROUP;
+                    let packs = [
+                        ("awq_codes", vec![din / 2, *dout], Dtype::U8),
+                        ("awq_scales", vec![g, *dout], Dtype::F32),
+                        ("awq_eq", vec![*din], Dtype::F32),
+                    ];
+                    for (suffix, shape, dtype) in packs {
+                        quantized.push(QuantSpec {
+                            name: format!("{name}.{suffix}"),
+                            base: name.clone(),
+                            shape,
+                            dtype,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Parameter counts (mirrors configs.param_count).
+        let params_base: u64 = base.iter().map(|s| s.numel() as u64).sum();
+        let params_trainable: u64 = trainable.iter().map(|s| s.numel() as u64).sum();
+
+        Ok(Manifest {
+            dir: crate::artifacts_root().join(tag),
+            tag: tag.to_string(),
+            preset,
+            method,
+            quant,
+            model,
+            params_base,
+            params_trainable,
+            trainable,
+            frozen,
+            quantized,
+            adam: (0.9, 0.999, 1e-8),
+            train_step_file: "train_step.hlo.txt".to_string(),
+            eval_loss_file: "eval_loss.hlo.txt".to_string(),
+            logits_last_file: "logits_last.hlo.txt".to_string(),
+        })
+    }
+
+    /// `load` when `<dir>/manifest.json` exists, else [`Manifest::builtin`]
+    /// derived from the directory name.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            return Manifest::load(dir);
+        }
+        let tag = dir
+            .file_name()
+            .and_then(|s| s.to_str())
+            .with_context(|| format!("bundle path '{}' has no tag name", dir.display()))?;
+        Manifest::builtin(tag).with_context(|| {
+            format!(
+                "no manifest.json under {} and tag is not a builtin bundle",
+                dir.display()
+            )
+        })
+    }
+
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -229,14 +497,13 @@ mod tests {
     use super::*;
     use crate::artifacts_root;
 
-    fn tiny(tag: &str) -> Option<Manifest> {
-        let dir = artifacts_root().join(tag);
-        dir.exists().then(|| Manifest::load(dir).unwrap())
+    fn tiny(tag: &str) -> Manifest {
+        Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap()
     }
 
     #[test]
     fn loads_tiny_bundle() {
-        let Some(m) = tiny("tiny_oft_v2") else { return };
+        let m = tiny("tiny_oft_v2");
         assert_eq!(m.method, "oft_v2");
         assert_eq!(m.model.d_model, 64);
         assert_eq!(m.model.block_b, 16);
@@ -250,7 +517,7 @@ mod tests {
 
     #[test]
     fn quantized_bundle_has_packs() {
-        let Some(m) = tiny("tiny_qoft_nf4") else { return };
+        let m = tiny("tiny_qoft_nf4");
         assert_eq!(m.quant, "nf4");
         assert_eq!(m.quantized.len(), 4 * 6 * m.model.n_layers);
         let bases = m.quantized_bases();
@@ -265,11 +532,125 @@ mod tests {
 
     #[test]
     fn linear_shapes_match_dims() {
-        let Some(m) = tiny("tiny_qoft_nf4") else { return };
+        let m = tiny("tiny_qoft_nf4");
         assert_eq!(m.linear_shape("layers.0.attn.wq").unwrap(), (64, 64));
         assert_eq!(m.linear_shape("layers.1.mlp.up").unwrap(), (64, 256));
         assert_eq!(m.linear_shape("layers.1.mlp.down").unwrap(), (256, 64));
         assert!(m.linear_shape("embed.tok").is_err());
+    }
+
+    #[test]
+    fn tag_parsing() {
+        assert_eq!(
+            parse_tag("tiny_oft_v2").unwrap(),
+            ("tiny".into(), "oft_v2".into(), "none".into())
+        );
+        assert_eq!(
+            parse_tag("bench_qlora_nf4").unwrap(),
+            ("bench".into(), "qlora".into(), "nf4".into())
+        );
+        assert_eq!(
+            parse_tag("e2e100m_full").unwrap(),
+            ("e2e100m".into(), "full".into(), "none".into())
+        );
+        assert!(parse_tag("tiny").is_err());
+        assert!(parse_tag("tiny_warp").is_err());
+    }
+
+    #[test]
+    fn builtin_tiny_oft_v2_matches_aot_contract() {
+        let m = Manifest::builtin("tiny_oft_v2").unwrap();
+        assert_eq!(m.method, "oft_v2");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.model.block_b, 16);
+        assert!(!m.trainable.is_empty());
+        assert!(!m.frozen.is_empty());
+        assert!(m.quantized.is_empty());
+        assert_eq!(m.trainable_numel(), m.params_trainable);
+        // every adapted linear contributes one packed-Q tensor
+        assert_eq!(m.trainable.len(), 6 * m.model.n_layers);
+        // packed dim b(b-1)/2 for b=16, over d/b blocks per d-input linear
+        let wq = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.oft_q")
+            .unwrap();
+        assert_eq!(wq.shape, vec![4, 120]);
+        // trainables sorted by name (graph order)
+        let names: Vec<&str> = m.trainable.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn builtin_quantized_bundle_has_packs() {
+        let m = Manifest::builtin("tiny_qoft_nf4").unwrap();
+        assert_eq!(m.quant, "nf4");
+        assert_eq!(m.quantized.len(), 4 * 6 * m.model.n_layers);
+        let bases = m.quantized_bases();
+        assert_eq!(bases.len(), 6 * m.model.n_layers);
+        for b in &bases {
+            assert!(!m.frozen.iter().any(|f| &f.name == b));
+            let (din, dout) = m.linear_shape(b).unwrap();
+            assert!(din >= 64 && dout >= 64);
+        }
+        // NF4 pads 64*64 = 4096 elements up to one 16384 tile
+        let codes = m
+            .quantized
+            .iter()
+            .find(|q| q.name == "layers.0.attn.wq.nf4_codes")
+            .unwrap();
+        assert_eq!(codes.shape, vec![8192]);
+        assert_eq!(codes.dtype, Dtype::U8);
+        let awq = Manifest::builtin("tiny_qlora_awq").unwrap();
+        assert_eq!(awq.quantized.len(), 3 * 6 * awq.model.n_layers);
+    }
+
+    #[test]
+    fn builtin_full_and_none_bundles() {
+        let full = Manifest::builtin("tiny_full").unwrap();
+        assert!(full.frozen.is_empty());
+        assert_eq!(full.params_base, full.params_trainable);
+        let none = Manifest::builtin("tiny_none").unwrap();
+        assert!(none.trainable.is_empty());
+        assert_eq!(none.params_trainable, 0);
+        assert_eq!(none.frozen.len(), full.trainable.len());
+    }
+
+    #[test]
+    fn builtin_every_default_bundle_synthesizes() {
+        for tag in [
+            "tiny_full",
+            "tiny_none",
+            "tiny_lora",
+            "tiny_oft_merged",
+            "tiny_oft_v2",
+            "tiny_qlora_nf4",
+            "tiny_qoft_nf4",
+            "tiny_qlora_awq",
+            "tiny_qoft_awq",
+            "small_oft_v2",
+            "bench_oft_v2",
+            "fig1_oft_merged",
+            "e2e_oft_v2",
+        ] {
+            let m = Manifest::builtin(tag).unwrap();
+            assert_eq!(m.tag, tag);
+            assert_eq!(m.trainable_numel(), m.params_trainable, "{tag}");
+        }
+        assert!(Manifest::builtin("mystery_oft_v2").is_err());
+        // qlora without a quant suffix is inconsistent
+        assert!(Manifest::builtin("tiny_qlora").is_err());
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let dir = std::env::temp_dir().join("no_artifacts_here/tiny_oft_v2");
+        let m = Manifest::load_or_builtin(&dir).unwrap();
+        assert_eq!(m.tag, "tiny_oft_v2");
+        let bad = std::env::temp_dir().join("no_artifacts_here/not_a_tag");
+        assert!(Manifest::load_or_builtin(&bad).is_err());
     }
 
     #[test]

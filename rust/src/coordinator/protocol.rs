@@ -64,7 +64,7 @@ pub fn pretrain(
     phase: &Phase,
 ) -> Result<(Checkpoint, Loader)> {
     let tag = format!("{preset}_full");
-    let man = Manifest::load(artifacts_root.join(&tag))?;
+    let man = Manifest::load_or_builtin(artifacts_root.join(&tag))?;
     let (pre_loader, fin_loader) = Loader::pretrain_finetune_pair(
         task,
         phase.documents,
@@ -91,7 +91,7 @@ pub fn finetune_trainer<'e>(
     ckpt: Option<&Checkpoint>,
     fin_loader: &Loader,
 ) -> Result<Trainer<'e>> {
-    let man = Manifest::load(artifacts_root.join(tag))?;
+    let man = Manifest::load_or_builtin(artifacts_root.join(tag))?;
     let cfg = run_cfg(tag, phase, task);
     let mut tr = Trainer::with_checkpoint(engine, man, cfg, ckpt)?;
     tr.set_loader(fin_loader.clone());

@@ -6,12 +6,11 @@
 //! *dequantization* (Pallas kernels) — DESIGN.md §4.
 
 use anyhow::{bail, ensure, Context, Result};
-use xla::Literal;
 
 use super::checkpoint::Checkpoint;
 use super::manifest::{Init, Manifest, ParamSpec};
 use crate::quant::{AwqTensor, Nf4Tensor};
-use crate::runtime::{lit_f32, lit_i8, lit_u8};
+use crate::runtime::{lit_f32, lit_i8, lit_u8, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -74,7 +73,7 @@ pub fn quantize_base(
     man: &Manifest,
     base: &str,
     weight: &Tensor,
-) -> Result<Vec<(String, Literal)>> {
+) -> Result<Vec<(String, Value)>> {
     let specs: Vec<_> = man.quantized.iter().filter(|q| q.base == base).collect();
     ensure!(!specs.is_empty(), "no quantized specs for '{base}'");
     let mut out = Vec::new();
@@ -116,7 +115,7 @@ pub struct BundleState {
     /// Trainable tensors, manifest order.
     pub trainable: Vec<Tensor>,
     /// Frozen + quantized literals, graph order.
-    pub fixed: Vec<Literal>,
+    pub fixed: Vec<Value>,
     /// Host copies of the quantized base weights (for §4 requantization
     /// analyses and oracle checks); empty for full-precision bundles.
     pub quantized_bases: Vec<(String, Tensor)>,
@@ -141,7 +140,7 @@ impl BundleState {
         let mut quantized_bases = Vec::new();
         if !man.quantized.is_empty() {
             // Quantize each base once, then emit packs in manifest order.
-            let mut packs: Vec<(String, Literal)> = Vec::new();
+            let mut packs: Vec<(String, Value)> = Vec::new();
             for base in man.quantized_bases() {
                 let w = init_quantized_base(man, &base, seed, ckpt)?;
                 packs.extend(quantize_base(man, &base, &w)?);
@@ -164,7 +163,7 @@ impl BundleState {
     }
 
     /// Trainable tensors as literals (manifest order).
-    pub fn trainable_literals(&self, man: &Manifest) -> Result<Vec<Literal>> {
+    pub fn trainable_literals(&self, man: &Manifest) -> Result<Vec<Value>> {
         man.trainable
             .iter()
             .zip(&self.trainable)
@@ -173,7 +172,7 @@ impl BundleState {
     }
 
     /// Zero-filled Adam-moment literals (manifest order).
-    pub fn zero_moments(&self, man: &Manifest) -> Result<Vec<Literal>> {
+    pub fn zero_moments(&self, man: &Manifest) -> Result<Vec<Value>> {
         man.trainable
             .iter()
             .map(|s| lit_f32(&s.shape, &vec![0.0; s.numel()]))
@@ -197,9 +196,8 @@ mod tests {
     use crate::artifacts_root;
     use crate::coordinator::manifest::Manifest;
 
-    fn man(tag: &str) -> Option<Manifest> {
-        let dir = artifacts_root().join(tag);
-        dir.exists().then(|| Manifest::load(dir).unwrap())
+    fn man(tag: &str) -> Manifest {
+        Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap()
     }
 
     #[test]
@@ -256,7 +254,7 @@ mod tests {
 
     #[test]
     fn full_precision_bundle_state() {
-        let Some(m) = man("tiny_oft_v2") else { return };
+        let m = man("tiny_oft_v2");
         let st = BundleState::init(&m, 7, None).unwrap();
         assert_eq!(st.trainable.len(), m.trainable.len());
         assert_eq!(st.fixed.len(), m.frozen.len());
@@ -270,7 +268,7 @@ mod tests {
     #[test]
     fn quantized_bundle_state_pack_counts() {
         for (tag, per_base) in [("tiny_qoft_nf4", 4usize), ("tiny_qoft_awq", 3usize)] {
-            let Some(m) = man(tag) else { continue };
+            let m = man(tag);
             let st = BundleState::init(&m, 7, None).unwrap();
             let n_base = st.quantized_bases.len();
             assert_eq!(m.quantized.len(), n_base * per_base);
@@ -285,7 +283,7 @@ mod tests {
 
     #[test]
     fn nf4_pack_layout_matches_quant_module() {
-        let Some(m) = man("tiny_qoft_nf4") else { return };
+        let m = man("tiny_qoft_nf4");
         let base = &m.quantized_bases()[0];
         let w = init_quantized_base(&m, base, 7, None).unwrap();
         let packs = quantize_base(&m, base, &w).unwrap();

@@ -1,5 +1,5 @@
-//! The finetuning trainer: drives the AOT train-step/eval/decode graphs
-//! with device-resident fixed inputs, the LR schedule, metric logging,
+//! The finetuning trainer: drives the train-step/eval/decode graphs
+//! with engine-resident fixed inputs, the LR schedule, metric logging,
 //! checkpointing, and greedy decoding.
 //!
 //! Step anatomy (all graph I/O in manifest order):
@@ -11,14 +11,13 @@
 //! outputs = new_trainables + new_m + new_v + [loss]
 //! ```
 //!
-//! Frozen/quantized buffers — the bulk of the bytes — never leave the
-//! device. The (small, adapter-sized) state round-trips as literals
-//! because PJRT returns the output tuple as a single buffer; on the CPU
+//! Frozen/quantized buffers — the bulk of the bytes — are uploaded once
+//! and reused across steps. The (small, adapter-sized) state round-trips
+//! as host values; on both the reference engine and the CPU PJRT
 //! backend this is a host-memory copy, uniform across methods, so the
-//! paper's *relative* timing claims are preserved (DESIGN.md §8).
+//! paper's *relative* timing claims are preserved.
 
 use anyhow::{ensure, Context, Result};
-use xla::{Literal, PjRtBuffer};
 
 use super::checkpoint::{self, Checkpoint};
 use super::manifest::Manifest;
@@ -28,7 +27,10 @@ use crate::config::RunCfg;
 use crate::data::corpus::TaskKind;
 use crate::data::loader::{Batch, Loader};
 use crate::data::tokenizer::EOS;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, Engine, Graph};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, Buffer, BundleRole, Engine,
+    Graph, Value,
+};
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 use crate::{log_debug, log_info};
@@ -41,12 +43,12 @@ pub struct Trainer<'e> {
     train_step: Graph,
     eval_loss: Graph,
     logits_last: Option<Graph>,
-    /// Frozen f32 weights + quantized packs, device-resident.
-    fixed_bufs: Vec<PjRtBuffer>,
-    /// Trainables / Adam moments (manifest order), host literals.
-    tr: Vec<Literal>,
-    m: Vec<Literal>,
-    v: Vec<Literal>,
+    /// Frozen f32 weights + quantized packs, engine-resident.
+    fixed_bufs: Vec<Buffer>,
+    /// Trainables / Adam moments (manifest order), host values.
+    tr: Vec<Value>,
+    m: Vec<Value>,
+    v: Vec<Value>,
     /// Host copies kept for analyses/checkpoints (refreshed lazily).
     host_state: BundleState,
     step: usize,
@@ -54,11 +56,12 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
-    /// Load bundle `cfg.tag` from `artifacts_root`, compile its graphs,
-    /// initialize state (optionally from `cfg.init_from`), and build
-    /// the data pipeline.
+    /// Load bundle `cfg.tag` from `artifacts_root` (or synthesize the
+    /// builtin bundle of the same tag), compile its graphs, initialize
+    /// state (optionally from `cfg.init_from`), and build the data
+    /// pipeline.
     pub fn new(engine: &'e Engine, artifacts_root: &std::path::Path, cfg: RunCfg) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_root.join(&cfg.tag))?;
+        let manifest = Manifest::load_or_builtin(artifacts_root.join(&cfg.tag))?;
         let ckpt = match &cfg.init_from {
             Some(p) => Some(checkpoint::load(p)?),
             None => None,
@@ -75,10 +78,10 @@ impl<'e> Trainer<'e> {
         ckpt: Option<&Checkpoint>,
     ) -> Result<Self> {
         let t0 = Timer::start();
-        let train_step = engine.load_graph(manifest.artifact(&manifest.train_step_file))?;
-        let eval_loss = engine.load_graph(manifest.artifact(&manifest.eval_loss_file))?;
+        let train_step = engine.load_bundle_graph(&manifest, BundleRole::TrainStep)?;
+        let eval_loss = engine.load_bundle_graph(&manifest, BundleRole::EvalLoss)?;
         log_debug!(
-            "{}: compiled train_step + eval_loss in {:.2}s",
+            "{}: loaded train_step + eval_loss in {:.2}s",
             manifest.tag,
             t0.secs()
         );
@@ -130,9 +133,9 @@ impl<'e> Trainer<'e> {
 
     /// Run one optimizer step on `batch`; returns the (pre-update) loss.
     pub fn train_on(&mut self, batch: &Batch) -> Result<f32> {
-        let man = &self.manifest;
-        let b = man.model.batch;
-        let t = man.model.seq_len;
+        let b = self.manifest.model.batch;
+        let t = self.manifest.model.seq_len;
+        let n = self.tr.len();
         ensure!(batch.batch == b && batch.seq == t, "batch shape mismatch");
         self.step += 1;
         let lr = self.cfg.optim.lr_at(self.step, self.cfg.steps) as f32;
@@ -146,13 +149,12 @@ impl<'e> Trainer<'e> {
             lit_scalar_f32(self.step as f32),
         ];
 
-        // Upload state + data; fixed buffers are already device-resident.
-        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(3 * self.tr.len() + 4);
+        // Upload state + data; fixed buffers are already engine-resident.
+        let mut bufs: Vec<Buffer> = Vec::with_capacity(3 * n + 4);
         for lit in self.tr.iter().chain(&self.m).chain(&self.v).chain(&data) {
             bufs.push(self.engine.upload(lit)?);
         }
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(bufs.len() + self.fixed_bufs.len());
-        let n = self.tr.len();
+        let mut args: Vec<&Buffer> = Vec::with_capacity(bufs.len() + self.fixed_bufs.len());
         args.extend(bufs[..3 * n].iter());
         args.extend(self.fixed_bufs.iter());
         args.extend(bufs[3 * n..].iter());
@@ -167,10 +169,27 @@ impl<'e> Trainer<'e> {
         let loss = scalar_f32(&outs[3 * n])?;
         ensure!(loss.is_finite(), "loss diverged to {loss} at step {}", self.step);
         outs.truncate(3 * n);
+        // Restore manifest shapes (PJRT returns flat buffers).
+        let shapes: Vec<Vec<usize>> = self
+            .manifest
+            .trainable
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
         let mut it = outs.into_iter();
-        self.tr = (&mut it).take(n).collect();
-        self.m = (&mut it).take(n).collect();
-        self.v = (&mut it).take(n).collect();
+        let mut take = |shapes: &[Vec<usize>]| -> Result<Vec<Value>> {
+            shapes
+                .iter()
+                .map(|s| {
+                    it.next()
+                        .context("train_step output truncated")?
+                        .with_shape(s)
+                })
+                .collect()
+        };
+        self.tr = take(&shapes)?;
+        self.m = take(&shapes)?;
+        self.v = take(&shapes)?;
         Ok(loss)
     }
 
@@ -234,8 +253,8 @@ impl<'e> Trainer<'e> {
 
     /// Mean eval loss + perplexity over the held-out split.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let man = &self.manifest;
-        let (b, t) = (man.model.batch, man.model.seq_len);
+        let b = self.manifest.model.batch;
+        let t = self.manifest.model.seq_len;
         let mut sum_nll = 0.0f64;
         let mut count = 0.0f64;
         for batch in self.loader.eval_batches() {
@@ -247,7 +266,7 @@ impl<'e> Trainer<'e> {
             }
             bufs.push(self.engine.upload(&tokens)?);
             bufs.push(self.engine.upload(&mask)?);
-            let mut args: Vec<&PjRtBuffer> = Vec::new();
+            let mut args: Vec<&Buffer> = Vec::new();
             args.extend(bufs[..self.tr.len()].iter());
             args.extend(self.fixed_bufs.iter());
             args.extend(bufs[self.tr.len()..].iter());
@@ -266,7 +285,7 @@ impl<'e> Trainer<'e> {
         if self.logits_last.is_none() {
             let g = self
                 .engine
-                .load_graph(self.manifest.artifact(&self.manifest.logits_last_file))?;
+                .load_bundle_graph(&self.manifest, BundleRole::LogitsLast)?;
             self.logits_last = Some(g);
         }
         let graph = self.logits_last.as_ref().unwrap();
@@ -287,7 +306,7 @@ impl<'e> Trainer<'e> {
             }
             bufs.push(self.engine.upload(&tokens)?);
             bufs.push(self.engine.upload(&cur)?);
-            let mut args: Vec<&PjRtBuffer> = Vec::new();
+            let mut args: Vec<&Buffer> = Vec::new();
             args.extend(bufs[..self.tr.len()].iter());
             args.extend(self.fixed_bufs.iter());
             args.extend(bufs[self.tr.len()..].iter());
@@ -353,7 +372,7 @@ impl<'e> Trainer<'e> {
         Ok(crate::eval::pass_at_1(&pairs))
     }
 
-    /// Current trainable tensors (fetched from the working literals).
+    /// Current trainable tensors (fetched from the working values).
     pub fn trainable_tensors(&self) -> Result<Vec<(String, Tensor)>> {
         self.manifest
             .trainable
@@ -414,6 +433,6 @@ mod tests {
         assert_eq!(argmax(&[1.0, 1.0]), 0);
     }
 
-    // Full trainer integration tests (they need artifacts + a PJRT
-    // client) live in rust/tests/trainer.rs.
+    // Full trainer integration tests live in rust/tests/trainer.rs;
+    // with the reference engine they run without artifacts.
 }

@@ -102,6 +102,16 @@ fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
     Ok(cfg)
 }
 
+/// Engine from the `--backend` option. An explicit backend name always
+/// wins; `auto` (the default) defers to `Engine::cpu`, which honors the
+/// `OFT_BACKEND` env var.
+fn engine_for(args: &oftv2::cli::Args) -> Result<Engine> {
+    match args.get("backend") {
+        Some("auto") | None => Engine::cpu(),
+        Some(name) => Engine::by_name(name),
+    }
+}
+
 fn train_command(name: &'static str, about: &'static str) -> Command {
     Command::new(name, about)
         .opt("config", "TOML run config file", None)
@@ -117,6 +127,7 @@ fn train_command(name: &'static str, about: &'static str) -> Command {
         .opt("out-dir", "directory for history/checkpoint output", None)
         .opt("set", "comma-separated config overrides a.b=v", None)
         .opt("save-checkpoint", "path to write the final checkpoint", None)
+        .opt("backend", "runtime backend: auto | reference | pjrt", Some("auto"))
         .flag("help", "show help")
 }
 
@@ -128,8 +139,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let cfg = run_cfg(&args)?;
-    let engine = Engine::cpu()?;
-    log_info!("PJRT platform: {}", engine.platform());
+    let engine = engine_for(&args)?;
+    log_info!("runtime platform: {}", engine.platform());
     let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
     let history = trainer.train()?;
     let (eval_loss, ppl) = trainer.evaluate()?;
@@ -153,7 +164,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let cfg = run_cfg(&args)?;
-    let engine = Engine::cpu()?;
+    let engine = engine_for(&args)?;
     let trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
     let (eval_loss, ppl) = trainer.evaluate()?;
     println!(
@@ -176,7 +187,7 @@ fn cmd_decode(argv: &[String]) -> Result<()> {
     let cfg = run_cfg(&args)?;
     let prompt = args.get_or("prompt", "question :").to_string();
     let max_new = args.get_usize("max-new", 32)?;
-    let engine = Engine::cpu()?;
+    let engine = engine_for(&args)?;
     let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
     let out = trainer.complete(&prompt, max_new)?;
     println!("prompt:    {prompt}");
@@ -263,7 +274,15 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let tag = args.get_or("tag", "tiny_oft_v2");
-    let man = oftv2::coordinator::Manifest::load(artifacts_root().join(tag))?;
+    let man = oftv2::coordinator::Manifest::load_or_builtin(artifacts_root().join(tag))?;
+    if !man.artifact(&man.train_step_file).exists() {
+        bail!(
+            "bundle '{tag}' has no HLO artifacts under {} — static cost analysis \
+             reads the lowered graphs; run `python -m compile.aot` first \
+             (the reference engine itself does not need them)",
+            man.dir.display()
+        );
+    }
     println!("bundle {tag} (method={}, quant={})\n", man.method, man.quant);
     for file in [&man.train_step_file, &man.eval_loss_file, &man.logits_last_file] {
         let cost = oftv2::runtime::hlo_cost::analyze_file(man.artifact(file))?;
@@ -299,7 +318,24 @@ fn parse_model(name: &str) -> Result<ModelSpec> {
 fn cmd_bundles() -> Result<()> {
     let root = artifacts_root();
     if !root.exists() {
-        bail!("no artifacts at {} — run `make artifacts`", root.display());
+        println!("no artifact tree at {} — builtin bundles (reference engine):\n", root.display());
+        println!("{:<22} {:<12} {:<6} {:>12} {:>10}", "tag", "method", "quant", "trainable", "d_model");
+        for preset in ["tiny", "small", "bench", "fig1", "e2e", "e2e100m"] {
+            for suffix in ["full", "none", "lora", "oft_merged", "oft_v2", "qlora_nf4", "qoft_nf4", "qlora_awq", "qoft_awq"] {
+                let tag = format!("{preset}_{suffix}");
+                if let Ok(man) = oftv2::coordinator::Manifest::builtin(&tag) {
+                    println!(
+                        "{:<22} {:<12} {:<6} {:>12} {:>10}",
+                        man.tag,
+                        man.method,
+                        man.quant,
+                        human_count(man.params_trainable),
+                        man.model.d_model
+                    );
+                }
+            }
+        }
+        return Ok(());
     }
     println!("{:<22} {:<12} {:<6} {:>12} {:>10}", "tag", "method", "quant", "trainable", "d_model");
     let mut entries: Vec<_> = std::fs::read_dir(&root)?

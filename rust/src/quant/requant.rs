@@ -81,6 +81,7 @@ fn report(w: &Tensor, merged: &Tensor, delta_inf: f64) -> RequantReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit;
     use crate::util::rng::Rng;
 
     fn setup(seed: u64) -> (Tensor, LoraAdapter, OftAdapter) {
@@ -140,5 +141,59 @@ mod tests {
         let (w, lora, _) = setup(9);
         let r = qlora_requant(&w, &lora).unwrap();
         assert!(r.delta_inf > 0.0);
+    }
+
+    #[test]
+    fn merged_rw_requant_error_below_lora_additive_baseline() {
+        // §4 as a *property*, swept over shapes, seeds and adapter
+        // strengths: at matched ||Δ||_F, re-quantizing the orthogonal
+        // merge R·W never costs (appreciably) more than re-quantizing
+        // the additive merge W + AB, and on average costs less — the
+        // low-rank update concentrates energy into range-inflating
+        // outliers while the rotation spreads it.
+        // (sum of LoRA rms, sum of RW rms, cases) across the sweep
+        let acc = std::cell::RefCell::new((0.0f64, 0.0f64, 0usize));
+        testkit::check("RW requant error <= LoRA additive baseline", 25, |g| {
+            let din = *g.choose(&[64usize, 128, 256]);
+            let dout = *g.choose(&[64usize, 128]);
+            let b = *g.choose(&[16usize, 32]);
+            let strength = g.f32_in(0.01, 0.08);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+            let oft = OftAdapter::random(din, b, 6, strength, &mut rng);
+            let lora = LoraAdapter::random(din, dout, 16, 32.0, strength, &mut rng);
+
+            // match adaptation strength: rescale the LoRA delta to the
+            // OFT delta's Frobenius norm before merging
+            let d_oft = oft
+                .merge(&w)
+                .and_then(|m| m.sub(&w))
+                .map_err(|e| e.to_string())?;
+            let d_lora_raw = lora.delta().map_err(|e| e.to_string())?;
+            let s = d_oft.fro_norm() / d_lora_raw.fro_norm().max(1e-12);
+            let merged_lora = w.add(&d_lora_raw.scale(s)).map_err(|e| e.to_string())?;
+            let merged_oft = w.add(&d_oft).map_err(|e| e.to_string())?;
+
+            let rq = |m: &Tensor| err_stats(&Nf4Tensor::quantize(m).dequantize(), m);
+            let e_lora = rq(&merged_lora).rms;
+            let e_oft = rq(&merged_oft).rms;
+            // per-case: orthogonal merge never appreciably worse
+            if e_oft > e_lora * 1.15 + 1e-6 {
+                return Err(format!(
+                    "RW rms {e_oft:.6} exceeds LoRA rms {e_lora:.6} (din={din}, b={b})"
+                ));
+            }
+            let mut a = acc.borrow_mut();
+            a.0 += e_lora;
+            a.1 += e_oft;
+            a.2 += 1;
+            Ok(())
+        });
+        let (sum_lora, sum_oft, cases) = *acc.borrow();
+        assert!(cases > 0);
+        assert!(
+            sum_oft <= sum_lora * 1.02,
+            "mean RW requant rms {sum_oft} above LoRA baseline {sum_lora}"
+        );
     }
 }

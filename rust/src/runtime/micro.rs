@@ -1,20 +1,33 @@
-//! Micro-kernel artifact loader: `artifacts/micro/` holds standalone
-//! HLO graphs (rotate / merge / CNP / dequant at swept sizes) used by
-//! the complexity-scaling and ablation benches (Fig. 1, §3.2, §3.3).
+//! Micro-kernel catalog: standalone graphs (rotate / merge / CNP /
+//! dequant at swept sizes) used by the complexity-scaling and ablation
+//! benches (Fig. 1, §3.2, §3.3).
 //!
-//! `manifest.json` maps kernel name -> {artifact, inputs, meta}; this
-//! module loads a kernel, fabricates seeded random inputs matching the
-//! declared specs, and executes through the same [`Engine`] as the
-//! training path.
+//! Two sources of truth, same kernel names either way:
+//!
+//! * `artifacts/micro/manifest.json` (written by `python -m
+//!   compile.aot`) when an artifact tree exists — each entry also names
+//!   an HLO file for the PJRT backend;
+//! * [`MicroCatalog::builtin`] otherwise — the same specs synthesized
+//!   in Rust, executed natively by the reference engine.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
-use xla::Literal;
 
-use super::{lit_f32, lit_i32, lit_i8, lit_u8, Dtype, Engine, Graph};
+use super::{lit_f32, lit_i32, lit_i8, lit_u8, Dtype, Engine, Graph, Value};
 use crate::json::{self, Json};
 use crate::util::rng::Rng;
+
+/// Input rows for the linear-layer micro benches (aot.MICRO_ROWS).
+pub const MICRO_ROWS: usize = 128;
+/// Block size of the rotate/merge sweep kernels (aot.MICRO_B).
+pub const MICRO_B: usize = 32;
+/// Neumann terms of the sweep kernels (aot.MICRO_K).
+pub const MICRO_K: usize = 5;
+/// LoRA rank of the lora_w kernels (aot.MICRO_LORA_R).
+pub const MICRO_LORA_R: usize = 16;
+/// Hidden sizes of the scaling sweep (aot.MICRO_DIMS).
+pub const MICRO_DIMS: [usize; 4] = [256, 512, 1024, 2048];
 
 /// One input spec of a micro kernel.
 #[derive(Clone, Debug)]
@@ -41,10 +54,14 @@ impl MicroSpec {
     }
 }
 
-/// The parsed micro manifest.
+/// The kernel catalog (parsed manifest or builtin synthesis).
 pub struct MicroCatalog {
     pub root: std::path::PathBuf,
     pub specs: Vec<MicroSpec>,
+}
+
+fn packed_dim(b: usize) -> usize {
+    b * (b - 1) / 2
 }
 
 impl MicroCatalog {
@@ -73,6 +90,156 @@ impl MicroCatalog {
         Ok(MicroCatalog { root, specs })
     }
 
+    /// The artifact-free catalog: the exact kernel set
+    /// `python/compile/aot.py::micro_defs` lowers, synthesized in Rust
+    /// for the reference engine.
+    pub fn builtin() -> MicroCatalog {
+        let mut specs = Vec::new();
+        let f32_in = |name: &str, shape: Vec<usize>| MicroInput {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+        };
+        let p = packed_dim(MICRO_B);
+        for d in MICRO_DIMS {
+            let nb = d / MICRO_B;
+            let x = f32_in("x", vec![MICRO_ROWS, d]);
+            let q = f32_in("q", vec![nb, p]);
+            let w = f32_in("w", vec![d, d]);
+            let meta = Json::obj(vec![("d", Json::num(d as f64))]);
+            let push = |specs: &mut Vec<MicroSpec>, name: String, inputs: Vec<MicroInput>| {
+                specs.push(MicroSpec {
+                    artifact: format!("{name}.hlo.txt"),
+                    name,
+                    inputs,
+                    meta: meta.clone(),
+                });
+            };
+            push(&mut specs, format!("rotate_d{d}"), vec![x.clone(), q.clone()]);
+            push(
+                &mut specs,
+                format!("rotate_w_d{d}"),
+                vec![x.clone(), q.clone(), w.clone()],
+            );
+            push(
+                &mut specs,
+                format!("merge_w_d{d}"),
+                vec![x.clone(), q.clone(), w.clone()],
+            );
+            push(&mut specs, format!("base_w_d{d}"), vec![x.clone(), w.clone()]);
+            push(
+                &mut specs,
+                format!("lora_w_d{d}"),
+                vec![
+                    x.clone(),
+                    f32_in("a", vec![d, MICRO_LORA_R]),
+                    f32_in("b", vec![MICRO_LORA_R, d]),
+                    w.clone(),
+                ],
+            );
+        }
+        for b in [16usize, 32, 64] {
+            let q = f32_in("q", vec![32, packed_dim(b)]);
+            specs.push(MicroSpec {
+                name: format!("cnp_b{b}"),
+                artifact: format!("cnp_b{b}.hlo.txt"),
+                inputs: vec![q.clone()],
+                meta: Json::obj(vec![
+                    ("b", Json::num(b as f64)),
+                    ("k", Json::num(MICRO_K as f64)),
+                ]),
+            });
+            specs.push(MicroSpec {
+                name: format!("cayley_schulz_b{b}"),
+                artifact: format!("cayley_schulz_b{b}.hlo.txt"),
+                inputs: vec![q],
+                meta: Json::obj(vec![("b", Json::num(b as f64))]),
+            });
+        }
+        for k in 1..=8usize {
+            specs.push(MicroSpec {
+                name: format!("cnp_b{MICRO_B}_k{k}"),
+                artifact: format!("cnp_b{MICRO_B}_k{k}.hlo.txt"),
+                inputs: vec![f32_in("q", vec![32, p])],
+                meta: Json::obj(vec![
+                    ("b", Json::num(MICRO_B as f64)),
+                    ("k", Json::num(k as f64)),
+                ]),
+            });
+        }
+        // quant dequant kernels at a fixed realistic size
+        let n = 1024 * 1024usize;
+        let (nbytes, nblocks, ngroups) = (n / 2, n / 64, n / 64 / 256);
+        specs.push(MicroSpec {
+            name: "nf4_dequant_1m".to_string(),
+            artifact: "nf4_dequant_1m.hlo.txt".to_string(),
+            inputs: vec![
+                MicroInput {
+                    name: "codes".into(),
+                    shape: vec![nbytes],
+                    dtype: Dtype::U8,
+                },
+                MicroInput {
+                    name: "absmax_q".into(),
+                    shape: vec![nblocks],
+                    dtype: Dtype::I8,
+                },
+                MicroInput {
+                    name: "absmax_s".into(),
+                    shape: vec![ngroups],
+                    dtype: Dtype::F32,
+                },
+                MicroInput {
+                    name: "offset".into(),
+                    shape: vec![1],
+                    dtype: Dtype::F32,
+                },
+            ],
+            meta: Json::obj(vec![("n", Json::num(n as f64))]),
+        });
+        let dq = 1024usize;
+        specs.push(MicroSpec {
+            name: "awq_dequant_1m".to_string(),
+            artifact: "awq_dequant_1m.hlo.txt".to_string(),
+            inputs: vec![
+                MicroInput {
+                    name: "codes".into(),
+                    shape: vec![dq / 2, dq],
+                    dtype: Dtype::U8,
+                },
+                MicroInput {
+                    name: "scales".into(),
+                    shape: vec![dq / 64, dq],
+                    dtype: Dtype::F32,
+                },
+                MicroInput {
+                    name: "eq".into(),
+                    shape: vec![dq],
+                    dtype: Dtype::F32,
+                },
+            ],
+            meta: Json::obj(vec![
+                ("din", Json::num(dq as f64)),
+                ("dout", Json::num(dq as f64)),
+            ]),
+        });
+        MicroCatalog {
+            root: std::path::PathBuf::from("builtin"),
+            specs,
+        }
+    }
+
+    /// The artifact catalog when present, the builtin one otherwise —
+    /// what benches should use.
+    pub fn load_or_builtin(artifacts_root: impl AsRef<Path>) -> Result<MicroCatalog> {
+        let root = artifacts_root.as_ref();
+        if root.join("micro/manifest.json").exists() {
+            MicroCatalog::load(root)
+        } else {
+            Ok(MicroCatalog::builtin())
+        }
+    }
+
     pub fn get(&self, name: &str) -> Result<&MicroSpec> {
         self.specs
             .iter()
@@ -92,15 +259,15 @@ impl MicroCatalog {
         v
     }
 
-    /// Compile one kernel.
+    /// Load one kernel through the engine.
     pub fn compile(&self, engine: &Engine, name: &str) -> Result<MicroKernel> {
         let spec = self.get(name)?.clone();
-        let graph = engine.load_graph(self.root.join(&spec.artifact))?;
+        let graph = engine.load_micro_kernel(&self.root, &spec)?;
         Ok(MicroKernel { spec, graph })
     }
 }
 
-/// A compiled micro kernel ready to execute.
+/// A loaded micro kernel ready to execute.
 pub struct MicroKernel {
     pub spec: MicroSpec,
     pub graph: Graph,
@@ -109,7 +276,7 @@ pub struct MicroKernel {
 impl MicroKernel {
     /// Fabricate seeded inputs matching the declared specs. f32 inputs
     /// are N(0, std); integer/code inputs are uniform over their domain.
-    pub fn random_inputs(&self, seed: u64, std: f32) -> Result<Vec<Literal>> {
+    pub fn random_inputs(&self, seed: u64, std: f32) -> Result<Vec<Value>> {
         let mut rng = Rng::new(seed);
         self.spec
             .inputs
@@ -127,8 +294,7 @@ impl MicroKernel {
                         lit_u8(&inp.shape, &v)
                     }
                     Dtype::I8 => {
-                        let v: Vec<i8> =
-                            (0..n).map(|_| rng.below(255) as i32 as i8).collect();
+                        let v: Vec<i8> = (0..n).map(|_| rng.below(255) as i32 as i8).collect();
                         lit_i8(&inp.shape, &v)
                     }
                 }
@@ -137,7 +303,7 @@ impl MicroKernel {
     }
 
     /// Execute once with the given inputs.
-    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
         self.graph.run(inputs)
     }
 }
@@ -145,9 +311,6 @@ impl MicroKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Catalog parsing is covered here; execution tests live in
-    // rust/tests/ (they need compiled artifacts).
 
     #[test]
     fn parses_micro_manifest_shape() {
@@ -171,6 +334,45 @@ mod tests {
         assert_eq!(s.inputs[0].shape, vec![128, 256]);
         assert_eq!(cat.names_with_prefix("rotate_d"), vec!["rotate_d256"]);
         assert!(cat.get("nope").is_err());
-        let _ = std::fs::remove_dir_all(dir);
+        // load_or_builtin prefers the on-disk manifest...
+        let via = MicroCatalog::load_or_builtin(&dir).unwrap();
+        assert_eq!(via.specs.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+        // ...and falls back to the builtin set otherwise.
+        let fallback = MicroCatalog::load_or_builtin(&dir).unwrap();
+        assert!(fallback.specs.len() > 20);
+    }
+
+    #[test]
+    fn builtin_catalog_covers_the_sweeps() {
+        let cat = MicroCatalog::builtin();
+        for d in MICRO_DIMS {
+            for prefix in ["rotate_d", "rotate_w_d", "merge_w_d", "base_w_d", "lora_w_d"] {
+                assert!(cat.get(&format!("{prefix}{d}")).is_ok(), "{prefix}{d}");
+            }
+        }
+        for b in [16, 32, 64] {
+            assert!(cat.get(&format!("cnp_b{b}")).is_ok());
+            assert!(cat.get(&format!("cayley_schulz_b{b}")).is_ok());
+        }
+        for k in 1..=8 {
+            let s = cat.get(&format!("cnp_b32_k{k}")).unwrap();
+            assert_eq!(s.meta_usize("k"), Some(k));
+        }
+        assert!(cat.get("nf4_dequant_1m").is_ok());
+        assert!(cat.get("awq_dequant_1m").is_ok());
+        // shapes mirror aot.py: rotate_d256 has q (8, 496)
+        let s = cat.get("rotate_d256").unwrap();
+        assert_eq!(s.inputs[1].shape, vec![8, 496]);
+    }
+
+    #[test]
+    fn builtin_kernels_execute_on_reference_engine() {
+        let cat = MicroCatalog::builtin();
+        let e = Engine::reference();
+        let k = cat.compile(&e, "cnp_b16").unwrap();
+        let inputs = k.random_inputs(1, 0.02).unwrap();
+        let out = k.run(&inputs).unwrap();
+        assert_eq!(out[0].shape, vec![32, 16, 16]);
     }
 }

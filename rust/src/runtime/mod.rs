@@ -1,23 +1,36 @@
-//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many
-//! times — the only place the process touches the accelerator API.
+//! Backend-abstracted runtime: the coordinator executes *graphs* (train
+//! step, eval loss, last-position logits, micro kernels) through an
+//! [`Engine`] without knowing what implements them.
 //!
-//! The interchange format is HLO *text* (see DESIGN.md §4 and
-//! /opt/xla-example/README.md): jax>=0.5 serialized protos carry 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects, while the text
-//! parser reassigns ids cleanly.
+//! Two engines exist:
 //!
-//! All AOT graphs are lowered with `return_tuple=True`, so every
-//! execution returns exactly one tuple buffer; [`Graph`] unpacks it into
-//! per-output [`Literal`]s. Long-lived inputs (frozen weights, quantized
-//! packs) are uploaded once as [`PjRtBuffer`]s and reused across steps.
+//! * [`reference`] — the default pure-Rust engine. It executes the
+//!   manifest's graphs natively via the host `tensor`/`peft`/`quant`
+//!   oracles (matrix-free OFTv2 rotation included), so the whole test
+//!   and bench suite runs on a clean checkout with no artifacts, no
+//!   Python, and no accelerator.
+//! * [`pjrt`] (cargo feature `pjrt`) — the original PJRT/HLO path: load
+//!   AOT-compiled HLO text produced by `python -m compile.aot`, compile
+//!   once through the `xla` crate, execute many times. See DESIGN notes
+//!   in the module.
+//!
+//! The interchange currency is the host [`Value`] (a shaped, typed
+//! tensor) plus the opaque device [`Buffer`] handle for inputs that
+//! should be uploaded once and reused across steps.
 
 pub mod hlo_cost;
 pub mod micro;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+pub mod refmodel;
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::{bail, Result};
+
+use crate::coordinator::manifest::Manifest;
+use self::micro::MicroSpec;
 
 /// Dtype names used by manifest.json.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,15 +52,6 @@ impl Dtype {
         })
     }
 
-    pub fn element_type(self) -> ElementType {
-        match self {
-            Dtype::F32 => ElementType::F32,
-            Dtype::I32 => ElementType::S32,
-            Dtype::U8 => ElementType::U8,
-            Dtype::I8 => ElementType::S8,
-        }
-    }
-
     pub fn size_bytes(self) -> usize {
         match self {
             Dtype::F32 | Dtype::I32 => 4,
@@ -57,181 +61,390 @@ impl Dtype {
 }
 
 // ---------------------------------------------------------------------------
-// Literal constructors (host -> XLA)
+// Host values (the backend-agnostic literal)
 // ---------------------------------------------------------------------------
 
-fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+/// Typed storage behind a [`Value`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ValueData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    I8(Vec<i8>),
 }
 
-/// f32 literal of the given shape.
-pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
-    Ok(Literal::create_from_shape_and_untyped_data(
-        ElementType::F32,
-        shape,
-        bytes_of(data),
-    )?)
+/// A shaped host tensor — what graphs consume and produce.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Value {
+    /// Row-major dimensions; empty for scalars.
+    pub shape: Vec<usize>,
+    pub data: ValueData,
 }
 
-/// i32 literal of the given shape.
-pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
-    Ok(Literal::create_from_shape_and_untyped_data(
-        ElementType::S32,
-        shape,
-        bytes_of(data),
-    )?)
+impl Value {
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            ValueData::F32(_) => Dtype::F32,
+            ValueData::I32(_) => Dtype::I32,
+            ValueData::U8(_) => Dtype::U8,
+            ValueData::I8(_) => Dtype::I8,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            ValueData::F32(v) => v.len(),
+            ValueData::I32(v) => v.len(),
+            ValueData::U8(v) => v.len(),
+            ValueData::I8(v) => v.len(),
+        }
+    }
+
+    /// Extract the elements as a vector of `T` (dtype must match).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// First element of a scalar/1-element value.
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        match v.first() {
+            Some(x) => Ok(*x),
+            None => bail!("empty value"),
+        }
+    }
+
+    /// Reinterpret with a new shape of the same element count (used to
+    /// restore manifest shapes on flat graph outputs).
+    pub fn with_shape(mut self, shape: &[usize]) -> Result<Value> {
+        check_shape(shape, self.element_count())?;
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Borrow the f32 payload.
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            ValueData::F32(v) => Ok(v),
+            other => bail!("expected f32 value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    /// Borrow the i32 payload.
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            ValueData::I32(v) => Ok(v),
+            other => bail!("expected i32 value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    /// Borrow the u8 payload.
+    pub fn u8s(&self) -> Result<&[u8]> {
+        match &self.data {
+            ValueData::U8(v) => Ok(v),
+            other => bail!("expected u8 value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    /// Borrow the i8 payload.
+    pub fn i8s(&self) -> Result<&[i8]> {
+        match &self.data {
+            ValueData::I8(v) => Ok(v),
+            other => bail!("expected i8 value, got {:?}", dtype_of(other)),
+        }
+    }
 }
 
-/// u8 literal (quantized code packs).
-pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Literal> {
-    Ok(Literal::create_from_shape_and_untyped_data(
-        ElementType::U8,
-        shape,
-        data,
-    )?)
+fn dtype_of(d: &ValueData) -> Dtype {
+    match d {
+        ValueData::F32(_) => Dtype::F32,
+        ValueData::I32(_) => Dtype::I32,
+        ValueData::U8(_) => Dtype::U8,
+        ValueData::I8(_) => Dtype::I8,
+    }
 }
 
-/// i8 literal (NF4 double-quantized absmax).
-pub fn lit_i8(shape: &[usize], data: &[i8]) -> Result<Literal> {
-    Ok(Literal::create_from_shape_and_untyped_data(
-        ElementType::S8,
-        shape,
-        bytes_of(data),
-    )?)
+/// Element types a [`Value`] can hold.
+pub trait Element: Copy {
+    fn extract(v: &Value) -> Result<Vec<Self>>;
 }
 
-/// Scalar literals.
-pub fn lit_scalar_f32(x: f32) -> Literal {
-    Literal::scalar(x)
+impl Element for f32 {
+    fn extract(v: &Value) -> Result<Vec<f32>> {
+        Ok(v.f32s()?.to_vec())
+    }
 }
 
-pub fn lit_scalar_i32(x: i32) -> Literal {
-    Literal::scalar(x)
+impl Element for i32 {
+    fn extract(v: &Value) -> Result<Vec<i32>> {
+        Ok(v.i32s()?.to_vec())
+    }
+}
+
+impl Element for u8 {
+    fn extract(v: &Value) -> Result<Vec<u8>> {
+        Ok(v.u8s()?.to_vec())
+    }
+}
+
+impl Element for i8 {
+    fn extract(v: &Value) -> Result<Vec<i8>> {
+        Ok(v.i8s()?.to_vec())
+    }
+}
+
+fn check_shape(shape: &[usize], len: usize) -> Result<()> {
+    let want: usize = shape.iter().product();
+    if want != len {
+        bail!("shape {shape:?} wants {want} elements, got {len}");
+    }
+    Ok(())
+}
+
+/// f32 value of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value {
+        shape: shape.to_vec(),
+        data: ValueData::F32(data.to_vec()),
+    })
+}
+
+/// i32 value of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value {
+        shape: shape.to_vec(),
+        data: ValueData::I32(data.to_vec()),
+    })
+}
+
+/// u8 value (quantized code packs).
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value {
+        shape: shape.to_vec(),
+        data: ValueData::U8(data.to_vec()),
+    })
+}
+
+/// i8 value (NF4 double-quantized absmax).
+pub fn lit_i8(shape: &[usize], data: &[i8]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value {
+        shape: shape.to_vec(),
+        data: ValueData::I8(data.to_vec()),
+    })
+}
+
+/// Scalar f32 value.
+pub fn lit_scalar_f32(x: f32) -> Value {
+    Value {
+        shape: Vec::new(),
+        data: ValueData::F32(vec![x]),
+    }
+}
+
+/// Scalar i32 value.
+pub fn lit_scalar_i32(x: i32) -> Value {
+    Value {
+        shape: Vec::new(),
+        data: ValueData::I32(vec![x]),
+    }
+}
+
+/// Fetch an f32 vector from a value.
+pub fn to_vec_f32(v: &Value) -> Result<Vec<f32>> {
+    v.to_vec::<f32>()
+}
+
+/// Fetch the single f32 in a scalar/1-element value.
+pub fn scalar_f32(v: &Value) -> Result<f32> {
+    v.get_first_element::<f32>()
 }
 
 // ---------------------------------------------------------------------------
-// Engine
+// Device buffers
 // ---------------------------------------------------------------------------
 
-/// A PJRT client plus compile/upload helpers. One per process.
+pub(crate) enum BufferRepr {
+    /// Host-resident (reference engine): the value itself.
+    Host(Value),
+    /// Device-resident PJRT buffer.
+    #[cfg(feature = "pjrt")]
+    Device(xla::PjRtBuffer),
+}
+
+/// An engine-owned input handle: long-lived inputs (frozen weights,
+/// quantized packs) are uploaded once and reused across executions.
+pub struct Buffer {
+    pub(crate) repr: BufferRepr,
+}
+
+impl Buffer {
+    pub(crate) fn host(v: Value) -> Buffer {
+        Buffer {
+            repr: BufferRepr::Host(v),
+        }
+    }
+
+    /// Borrow the host value (reference engine buffers only).
+    pub(crate) fn as_host(&self) -> Result<&Value> {
+        match &self.repr {
+            BufferRepr::Host(v) => Ok(v),
+            #[cfg(feature = "pjrt")]
+            BufferRepr::Device(_) => bail!("buffer is device-resident, not a host value"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine / graph abstraction
+// ---------------------------------------------------------------------------
+
+/// The three graphs every artifact bundle exports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BundleRole {
+    TrainStep,
+    EvalLoss,
+    LogitsLast,
+}
+
+impl BundleRole {
+    pub fn label(self) -> &'static str {
+        match self {
+            BundleRole::TrainStep => "train_step",
+            BundleRole::EvalLoss => "eval_loss",
+            BundleRole::LogitsLast => "logits_last",
+        }
+    }
+}
+
+/// One runtime implementation (reference or PJRT).
+pub trait EngineBackend {
+    fn platform(&self) -> String;
+    fn upload(&self, v: &Value) -> Result<Buffer>;
+    fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>>;
+    fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec)
+        -> Result<Box<dyn GraphBackend>>;
+}
+
+/// One executable graph.
+pub trait GraphBackend {
+    fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>>;
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>>;
+}
+
+/// The process-wide runtime handle. One per process is plenty.
 pub struct Engine {
-    client: PjRtClient,
+    backend: Box<dyn EngineBackend>,
 }
 
 impl Engine {
-    /// Create the CPU PJRT client (the testbed backend; see DESIGN.md
-    /// §Substitutions for how GPU claims are reproduced analytically).
-    pub fn cpu() -> Result<Engine> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
+    /// The pure-Rust reference engine (always available).
+    pub fn reference() -> Engine {
+        Engine {
+            backend: Box::new(reference::ReferenceEngine::new()),
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load one HLO-text artifact and compile it.
-    pub fn load_graph(&self, path: impl AsRef<Path>) -> Result<Graph> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Graph {
-            exe,
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-            path: path.to_path_buf(),
+    /// The PJRT engine over the `xla` crate (feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Engine> {
+        Ok(Engine {
+            backend: Box::new(pjrt::PjrtEngine::cpu()?),
         })
     }
 
-    /// Upload a host literal to a device-resident buffer (done once for
-    /// frozen weights / quantized packs).
-    pub fn upload(&self, lit: &Literal) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    /// The default CPU engine: the reference backend, unless the
+    /// `OFT_BACKEND` env var selects another.
+    pub fn cpu() -> Result<Engine> {
+        match std::env::var("OFT_BACKEND") {
+            Ok(name) => Engine::by_name(&name),
+            Err(_) => Ok(Engine::reference()),
+        }
     }
 
-    /// Upload many literals.
-    pub fn upload_all(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
-        lits.iter().map(|l| self.upload(l)).collect()
+    /// Select a backend by name: `reference` (alias `host`, `auto`) or
+    /// `pjrt`.
+    pub fn by_name(name: &str) -> Result<Engine> {
+        match name {
+            "" | "reference" | "host" | "auto" => Ok(Engine::reference()),
+            "pjrt" => pjrt_engine(),
+            other => bail!("unknown backend '{other}' (expected 'reference' or 'pjrt')"),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Upload a host value to an engine-owned buffer (done once for
+    /// frozen weights / quantized packs).
+    pub fn upload(&self, v: &Value) -> Result<Buffer> {
+        self.backend.upload(v)
+    }
+
+    /// Upload many values.
+    pub fn upload_all(&self, vs: &[Value]) -> Result<Vec<Buffer>> {
+        vs.iter().map(|v| self.upload(v)).collect()
+    }
+
+    /// Load one of a bundle's graphs (train step / eval loss / logits).
+    pub fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Graph> {
+        Ok(Graph {
+            name: format!("{}/{}", man.tag, role.label()),
+            inner: self.backend.load_bundle_graph(man, role)?,
+        })
+    }
+
+    /// Load a standalone micro kernel.
+    pub fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec) -> Result<Graph> {
+        Ok(Graph {
+            name: spec.name.clone(),
+            inner: self.backend.load_micro_kernel(micro_root, spec)?,
+        })
     }
 }
 
-/// A compiled executable for one AOT artifact.
+#[cfg(feature = "pjrt")]
+fn pjrt_engine() -> Result<Engine> {
+    Engine::pjrt()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine() -> Result<Engine> {
+    bail!("backend 'pjrt' requires building with `--features pjrt`")
+}
+
+/// A loaded executable graph.
 pub struct Graph {
-    exe: PjRtLoadedExecutable,
     pub name: String,
-    pub path: PathBuf,
+    inner: Box<dyn GraphBackend>,
 }
 
 impl Graph {
-    /// Execute with host literals (uploads everything; simplest path).
-    /// Returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let out = self.exe.execute::<Literal>(inputs)?;
-        Self::unpack(out)
+    /// Execute with host values (simplest path).
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = inputs.iter().collect();
+        self.inner.run_refs(&refs)
     }
 
-    /// Execute with device-resident buffers (the hot path: frozen
-    /// weights stay on device across steps).
-    pub fn run_b(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
-        let out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
-        Self::unpack(out)
+    /// Execute with borrowed host values (no cloning of inputs).
+    pub fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.inner.run_refs(inputs)
     }
 
-    /// Execute with buffers and keep the result on device: returns the
-    /// raw (tuple) output buffers for timing loops that fetch only once
-    /// at the end.
-    pub fn run_b_raw(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
-        let mut out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
-        if out.is_empty() || out[0].is_empty() {
-            bail!("{}: empty execution result", self.name);
-        }
-        Ok(out.remove(0))
+    /// Execute with engine-owned buffers (the hot path: frozen weights
+    /// stay resident across steps).
+    pub fn run_b(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
+        self.inner.run_buffers(inputs)
     }
-
-    fn unpack(mut out: Vec<Vec<PjRtBuffer>>) -> Result<Vec<Literal>> {
-        if out.is_empty() || out[0].is_empty() {
-            bail!("empty execution result");
-        }
-        let replica = out.remove(0);
-        // return_tuple=True => exactly one tuple-typed output buffer.
-        let lit = replica[0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Host-literal helpers
-// ---------------------------------------------------------------------------
-
-/// Fetch an f32 vector from a literal.
-pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Fetch the single f32 in a scalar/1-element literal.
-pub fn scalar_f32(lit: &Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    if v.is_empty() {
-        bail!("empty literal");
-    }
-    Ok(v[0])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Graph-level integration tests live in rust/tests/ (they need
-    // artifacts); these cover the host-side helpers.
 
     #[test]
     fn dtype_parsing() {
@@ -248,6 +461,7 @@ mod tests {
     fn literal_roundtrip_f32() {
         let lit = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
         assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.dtype(), Dtype::F32);
         assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
@@ -255,16 +469,36 @@ mod tests {
     fn literal_roundtrip_i32() {
         let lit = lit_i32(&[4], &[7, -1, 0, 2]).unwrap();
         assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 0, 2]);
+        assert!(lit.to_vec::<f32>().is_err(), "dtype mismatch must fail");
     }
 
     #[test]
     fn literal_shape_mismatch_rejected() {
         assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        assert!(lit_u8(&[3], &[1, 2]).is_err());
     }
 
     #[test]
     fn scalar_literals() {
         assert_eq!(scalar_f32(&lit_scalar_f32(2.5)).unwrap(), 2.5);
         assert_eq!(lit_scalar_i32(7).get_first_element::<i32>().unwrap(), 7);
+        assert!(lit_scalar_f32(0.0).shape.is_empty());
+    }
+
+    #[test]
+    fn engine_selection() {
+        let e = Engine::reference();
+        assert_eq!(e.platform(), "host-reference");
+        assert!(Engine::by_name("reference").is_ok());
+        assert!(Engine::by_name("bogus").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(Engine::by_name("pjrt").is_err());
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        let e = Engine::reference();
+        let b = e.upload(&lit_f32(&[2], &[1.0, 2.0]).unwrap()).unwrap();
+        assert_eq!(b.as_host().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
     }
 }

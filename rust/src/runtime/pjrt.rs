@@ -1,0 +1,174 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT-compiled HLO text,
+//! compile once through the `xla` crate, execute many times — the only
+//! place the process touches the accelerator API.
+//!
+//! The interchange format is HLO *text* (see DESIGN notes in
+//! python/compile/aot.py): jax>=0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids cleanly.
+//!
+//! All AOT graphs are lowered with `return_tuple=True`, so every
+//! execution returns exactly one tuple buffer which is unpacked into
+//! per-output [`Value`]s. Long-lived inputs (frozen weights, quantized
+//! packs) are uploaded once as PJRT buffers and reused across steps.
+//!
+//! Note: the workspace vendors a *stub* `xla` crate so this module
+//! compiles offline; executing requires patching in the real crate
+//! (see rust/vendor/xla/src/lib.rs).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::micro::MicroSpec;
+use super::{Buffer, BufferRepr, BundleRole, Dtype, EngineBackend, GraphBackend, Value, ValueData};
+use crate::coordinator::manifest::Manifest;
+
+fn element_type(d: Dtype) -> xla::ElementType {
+    match d {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::I32 => xla::ElementType::S32,
+        Dtype::U8 => xla::ElementType::U8,
+        Dtype::I8 => xla::ElementType::S8,
+    }
+}
+
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+fn value_to_literal(v: &Value) -> Result<xla::Literal> {
+    let ty = element_type(v.dtype());
+    let lit = match &v.data {
+        ValueData::F32(d) => {
+            xla::Literal::create_from_shape_and_untyped_data(ty, &v.shape, bytes_of(d))?
+        }
+        ValueData::I32(d) => {
+            xla::Literal::create_from_shape_and_untyped_data(ty, &v.shape, bytes_of(d))?
+        }
+        ValueData::U8(d) => xla::Literal::create_from_shape_and_untyped_data(ty, &v.shape, d)?,
+        ValueData::I8(d) => {
+            xla::Literal::create_from_shape_and_untyped_data(ty, &v.shape, bytes_of(d))?
+        }
+    };
+    Ok(lit)
+}
+
+/// Graph outputs are f32 in every exported graph; shapes are restored
+/// by the coordinator from the manifest where they matter.
+fn literal_to_value(lit: &xla::Literal) -> Result<Value> {
+    let data = lit.to_vec::<f32>()?;
+    Ok(Value {
+        shape: vec![data.len()],
+        data: ValueData::F32(data),
+    })
+}
+
+/// A PJRT client plus compile/upload helpers. One per process.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    /// Create the CPU PJRT client (the testbed backend; GPU claims are
+    /// reproduced analytically — see memmodel).
+    pub fn cpu() -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client })
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<PjrtGraph> {
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-UTF8 artifact path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(PjrtGraph {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            path: path.to_path_buf(),
+        })
+    }
+}
+
+impl EngineBackend for PjrtEngine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn upload(&self, v: &Value) -> Result<Buffer> {
+        let lit = value_to_literal(v)?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(Buffer {
+            repr: BufferRepr::Device(buf),
+        })
+    }
+
+    fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>> {
+        let file = match role {
+            BundleRole::TrainStep => &man.train_step_file,
+            BundleRole::EvalLoss => &man.eval_loss_file,
+            BundleRole::LogitsLast => &man.logits_last_file,
+        };
+        Ok(Box::new(self.compile_file(&man.artifact(file))?))
+    }
+
+    fn load_micro_kernel(
+        &self,
+        micro_root: &Path,
+        spec: &MicroSpec,
+    ) -> Result<Box<dyn GraphBackend>> {
+        Ok(Box::new(self.compile_file(&micro_root.join(&spec.artifact))?))
+    }
+}
+
+/// A compiled executable for one AOT artifact.
+pub struct PjrtGraph {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub path: PathBuf,
+}
+
+impl PjrtGraph {
+    fn unpack(&self, mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Value>> {
+        if out.is_empty() || out[0].is_empty() {
+            bail!("{}: empty execution result", self.name);
+        }
+        let replica = out.remove(0);
+        // return_tuple=True => exactly one tuple-typed output buffer.
+        let lit = replica[0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(literal_to_value).collect()
+    }
+}
+
+impl GraphBackend for PjrtGraph {
+    fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| value_to_literal(v))
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        self.unpack(out)
+    }
+
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|b| match &b.repr {
+                BufferRepr::Device(d) => Ok(d),
+                BufferRepr::Host(_) => {
+                    bail!("host buffer passed to a PJRT graph (mixed engines?)")
+                }
+            })
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        self.unpack(out)
+    }
+}

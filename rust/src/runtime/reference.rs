@@ -1,0 +1,411 @@
+//! The reference engine: executes bundle graphs and micro kernels
+//! natively on the host via [`super::refmodel`] and the `tensor`/
+//! `peft`/`quant` oracles. Always available — no artifacts, no Python,
+//! no accelerator — and the default backend for tests and benches.
+//!
+//! Micro kernels are dispatched by catalog name (the same names
+//! `python/compile/aot.py` lowers to HLO), so the scaling and ablation
+//! benches measure the *engine's* fused kernels: the cache-blocked
+//! multithreaded matmul and the fused CNP-build + block-rotate path.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::micro::MicroSpec;
+use super::refmodel::{self, RefBundle};
+use super::{lit_f32, Buffer, BundleRole, EngineBackend, GraphBackend, Value};
+use crate::coordinator::manifest::Manifest;
+use crate::peft;
+use crate::quant::{AwqTensor, Nf4Tensor};
+use crate::tensor::Tensor;
+
+/// The host backend (stateless; all state lives in graphs and buffers).
+pub(crate) struct ReferenceEngine;
+
+impl ReferenceEngine {
+    pub(crate) fn new() -> ReferenceEngine {
+        ReferenceEngine
+    }
+}
+
+impl EngineBackend for ReferenceEngine {
+    fn platform(&self) -> String {
+        "host-reference".to_string()
+    }
+
+    fn upload(&self, v: &Value) -> Result<Buffer> {
+        Ok(Buffer::host(v.clone()))
+    }
+
+    fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>> {
+        let bundle = RefBundle::from_manifest(man)?;
+        Ok(Box::new(RefBundleGraph { bundle, role }))
+    }
+
+    fn load_micro_kernel(
+        &self,
+        _micro_root: &Path,
+        spec: &MicroSpec,
+    ) -> Result<Box<dyn GraphBackend>> {
+        // Validate the name up-front so unknown kernels fail at load
+        // time (as an HLO parse would), not mid-bench.
+        kernel_kind(&spec.name)?;
+        Ok(Box::new(RefMicroKernel { spec: spec.clone() }))
+    }
+}
+
+fn buffers_to_values<'a>(inputs: &[&'a Buffer]) -> Result<Vec<&'a Value>> {
+    inputs.iter().map(|b| b.as_host()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Bundle graphs
+// ---------------------------------------------------------------------------
+
+struct RefBundleGraph {
+    bundle: RefBundle,
+    role: BundleRole,
+}
+
+impl GraphBackend for RefBundleGraph {
+    fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        match self.role {
+            BundleRole::TrainStep => self.bundle.train_step(inputs),
+            BundleRole::EvalLoss => self.bundle.eval_loss(inputs),
+            BundleRole::LogitsLast => self.bundle.logits_last(inputs),
+        }
+    }
+
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
+        self.run_refs(&buffers_to_values(inputs)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro kernels
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KernelKind {
+    Cnp,
+    CayleySchulz,
+    RotateW,
+    MergeW,
+    BaseW,
+    LoraW,
+    Rotate,
+    Nf4Dequant,
+    AwqDequant,
+}
+
+fn kernel_kind(name: &str) -> Result<KernelKind> {
+    // Longest-prefix first: `rotate_w_` before `rotate_`.
+    let table: [(&str, KernelKind); 9] = [
+        ("cayley_schulz_b", KernelKind::CayleySchulz),
+        ("cnp_b", KernelKind::Cnp),
+        ("rotate_w_d", KernelKind::RotateW),
+        ("merge_w_d", KernelKind::MergeW),
+        ("base_w_d", KernelKind::BaseW),
+        ("lora_w_d", KernelKind::LoraW),
+        ("rotate_d", KernelKind::Rotate),
+        ("nf4_dequant", KernelKind::Nf4Dequant),
+        ("awq_dequant", KernelKind::AwqDequant),
+    ];
+    for (prefix, kind) in table {
+        if name.starts_with(prefix) {
+            return Ok(kind);
+        }
+    }
+    bail!("reference engine has no micro kernel named '{name}'")
+}
+
+struct RefMicroKernel {
+    spec: MicroSpec,
+}
+
+impl GraphBackend for RefMicroKernel {
+    fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        run_micro(&self.spec, inputs)
+    }
+
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
+        self.run_refs(&buffers_to_values(inputs)?)
+    }
+}
+
+fn tensor_of(v: &Value) -> Result<Tensor> {
+    Ok(Tensor::from_vec(&v.shape, v.f32s()?.to_vec()))
+}
+
+/// Blocks for a packed (nb, p) input, with block size inferred from the
+/// rotated dimension d (nb * b == d).
+fn blocks_for(q: &Value, d: usize, k: usize) -> Result<Vec<Tensor>> {
+    ensure!(q.shape.len() == 2, "packed Q must be 2-D, got {:?}", q.shape);
+    let nb = q.shape[0];
+    ensure!(nb > 0 && d % nb == 0, "cannot split d={d} into {nb} blocks");
+    let b = d / nb;
+    ensure!(
+        q.shape[1] == peft::packed_dim(b),
+        "packed dim {} does not match block size {b}",
+        q.shape[1]
+    );
+    refmodel::build_cnp_blocks(&tensor_of(q)?, b, k)
+}
+
+fn stack_blocks(blocks: &[Tensor]) -> Value {
+    let b = blocks[0].shape[0];
+    let mut data = Vec::with_capacity(blocks.len() * b * b);
+    for blk in blocks {
+        data.extend_from_slice(&blk.data);
+    }
+    lit_f32(&[blocks.len(), b, b], &data).expect("stacked block shape")
+}
+
+/// Newton–Schulz iteration X <- X (2I - A X) for A^{-1} — the
+/// matmul-only "exact" Cayley baseline (mirrors model.schulz_inverse).
+fn schulz_inverse(a: &Tensor, iters: usize) -> Result<Tensor> {
+    let n = a.shape[0];
+    let eye2 = Tensor::eye(n).scale(2.0);
+    let mut x = Tensor::eye(n);
+    for _ in 0..iters {
+        let ax = a.matmul(&x)?;
+        x = x.matmul(&eye2.sub(&ax)?)?;
+    }
+    Ok(x)
+}
+
+fn run_micro(spec: &MicroSpec, inputs: &[&Value]) -> Result<Vec<Value>> {
+    ensure!(
+        inputs.len() == spec.inputs.len(),
+        "kernel '{}' expected {} inputs, got {}",
+        spec.name,
+        spec.inputs.len(),
+        inputs.len()
+    );
+    let kind = kernel_kind(&spec.name)?;
+    let meta_k = spec.meta_usize("k").unwrap_or(5);
+    match kind {
+        KernelKind::Cnp => {
+            let b = spec
+                .meta_usize("b")
+                .context("cnp kernel missing meta 'b'")?;
+            let q = tensor_of(inputs[0])?;
+            let blocks = refmodel::build_cnp_blocks(&q, b, meta_k)?;
+            Ok(vec![stack_blocks(&blocks)])
+        }
+        KernelKind::CayleySchulz => {
+            let b = spec
+                .meta_usize("b")
+                .context("cayley_schulz kernel missing meta 'b'")?;
+            let q = tensor_of(inputs[0])?;
+            let p = peft::packed_dim(b);
+            ensure!(q.shape.len() == 2 && q.shape[1] == p, "bad packed shape");
+            let mut blocks = Vec::with_capacity(q.shape[0]);
+            for i in 0..q.shape[0] {
+                let skew = peft::skew_from_packed(&q.data[i * p..(i + 1) * p], b);
+                let eye = Tensor::eye(b);
+                let inv = schulz_inverse(&eye.sub(&skew)?, 12)?;
+                blocks.push(eye.add(&skew)?.matmul(&inv)?);
+            }
+            Ok(vec![stack_blocks(&blocks)])
+        }
+        KernelKind::Rotate => {
+            let d = spec.meta_usize("d").context("rotate missing meta 'd'")?;
+            let x = tensor_of(inputs[0])?;
+            let blocks = blocks_for(inputs[1], d, meta_k)?;
+            let y = refmodel::block_rotate_fast(&x, &blocks)?;
+            Ok(vec![lit_f32(&y.shape, &y.data)?])
+        }
+        KernelKind::RotateW => {
+            let d = spec.meta_usize("d").context("rotate_w missing meta 'd'")?;
+            let x = tensor_of(inputs[0])?;
+            let blocks = blocks_for(inputs[1], d, meta_k)?;
+            let w = tensor_of(inputs[2])?;
+            let y = refmodel::block_rotate_fast(&x, &blocks)?.matmul(&w)?;
+            Ok(vec![lit_f32(&y.shape, &y.data)?])
+        }
+        KernelKind::MergeW => {
+            // The weight-centric baseline: build blockdiag(R) and pay
+            // the cubic d^2 * n merge before the layer matmul.
+            let d = spec.meta_usize("d").context("merge_w missing meta 'd'")?;
+            let x = tensor_of(inputs[0])?;
+            let blocks = blocks_for(inputs[1], d, meta_k)?;
+            let w = tensor_of(inputs[2])?;
+            let rd = peft::blockdiag_dense(&blocks, d);
+            let y = x.matmul(&rd.matmul(&w)?)?;
+            Ok(vec![lit_f32(&y.shape, &y.data)?])
+        }
+        KernelKind::BaseW => {
+            let x = tensor_of(inputs[0])?;
+            let w = tensor_of(inputs[1])?;
+            let y = x.matmul(&w)?;
+            Ok(vec![lit_f32(&y.shape, &y.data)?])
+        }
+        KernelKind::LoraW => {
+            let x = tensor_of(inputs[0])?;
+            let a = tensor_of(inputs[1])?;
+            let b = tensor_of(inputs[2])?;
+            let w = tensor_of(inputs[3])?;
+            let r = a.shape[1].max(1);
+            let scale = 16.0 / r as f32;
+            let y = x.matmul(&w)?.add(&x.matmul(&a)?.matmul(&b)?.scale(scale))?;
+            Ok(vec![lit_f32(&y.shape, &y.data)?])
+        }
+        KernelKind::Nf4Dequant => {
+            let n = spec
+                .meta_usize("n")
+                .context("nf4_dequant missing meta 'n'")?;
+            let q = Nf4Tensor {
+                codes: inputs[0].u8s()?.to_vec(),
+                absmax_q: inputs[1].i8s()?.to_vec(),
+                absmax_s: inputs[2].f32s()?.to_vec(),
+                offset: inputs[3].f32s()?[0],
+                n,
+                shape: vec![n],
+            };
+            let t = q.dequantize();
+            Ok(vec![lit_f32(&[n], &t.data)?])
+        }
+        KernelKind::AwqDequant => {
+            let codes = inputs[0];
+            ensure!(codes.shape.len() == 2, "awq codes must be 2-D");
+            let din = codes.shape[0] * 2;
+            let dout = codes.shape[1];
+            let q = AwqTensor {
+                codes: codes.u8s()?.to_vec(),
+                scales: inputs[1].f32s()?.to_vec(),
+                eq: inputs[2].f32s()?.to_vec(),
+                din,
+                dout,
+            };
+            let t = q.dequantize();
+            Ok(vec![lit_f32(&[din, dout], &t.data)?])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+    use crate::runtime::micro::MicroInput;
+    use crate::runtime::Dtype;
+    use crate::util::rng::Rng;
+
+    fn spec(name: &str, inputs: Vec<(&str, Vec<usize>, Dtype)>, meta: Vec<(&str, f64)>) -> MicroSpec {
+        MicroSpec {
+            name: name.to_string(),
+            artifact: format!("{name}.hlo.txt"),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, shape, dtype)| MicroInput {
+                    name: n.to_string(),
+                    shape,
+                    dtype,
+                })
+                .collect(),
+            meta: Json::obj(meta.into_iter().map(|(k, v)| (k, Json::num(v))).collect()),
+        }
+    }
+
+    #[test]
+    fn kernel_name_dispatch() {
+        assert_eq!(kernel_kind("cnp_b32").unwrap(), KernelKind::Cnp);
+        assert_eq!(kernel_kind("cnp_b32_k8").unwrap(), KernelKind::Cnp);
+        assert_eq!(
+            kernel_kind("cayley_schulz_b16").unwrap(),
+            KernelKind::CayleySchulz
+        );
+        assert_eq!(kernel_kind("rotate_d256").unwrap(), KernelKind::Rotate);
+        assert_eq!(kernel_kind("rotate_w_d512").unwrap(), KernelKind::RotateW);
+        assert_eq!(kernel_kind("merge_w_d512").unwrap(), KernelKind::MergeW);
+        assert_eq!(kernel_kind("nf4_dequant_1m").unwrap(), KernelKind::Nf4Dequant);
+        assert!(kernel_kind("mystery_k").is_err());
+    }
+
+    #[test]
+    fn schulz_inverse_converges() {
+        let mut rng = Rng::new(2);
+        let p = peft::packed_dim(8);
+        let packed = rng.normal_vec(p, 0.1);
+        let q = peft::skew_from_packed(&packed, 8);
+        let a = Tensor::eye(8).sub(&q).unwrap();
+        let inv = schulz_inverse(&a, 12).unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        assert!(prod.max_abs_diff(&Tensor::eye(8)) < 1e-4);
+    }
+
+    #[test]
+    fn cayley_schulz_kernel_matches_exact_cayley() {
+        let mut rng = Rng::new(3);
+        let b = 16usize;
+        let p = peft::packed_dim(b);
+        let nb = 4usize;
+        let q = rng.normal_vec(nb * p, 0.05);
+        let s = spec(
+            "cayley_schulz_b16",
+            vec![("q", vec![nb, p], Dtype::F32)],
+            vec![("b", b as f64)],
+        );
+        let out = run_micro(&s, &[&lit_f32(&[nb, p], &q).unwrap()]).unwrap();
+        let got = out[0].f32s().unwrap();
+        for i in 0..nb {
+            let exact = peft::cayley_exact(&q[i * p..(i + 1) * p], b).unwrap();
+            let blk = &got[i * b * b..(i + 1) * b * b];
+            let diff = blk
+                .iter()
+                .zip(&exact.data)
+                .fold(0.0f32, |m, (a, e)| m.max((a - e).abs()));
+            assert!(diff < 1e-4, "block {i}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn base_and_lora_kernels() {
+        let mut rng = Rng::new(4);
+        let (m, d, r) = (4usize, 8usize, 2usize);
+        let x = rng.normal_vec(m * d, 1.0);
+        let w = rng.normal_vec(d * d, 0.1);
+        let a = rng.normal_vec(d * r, 0.1);
+        let b = vec![0.0f32; r * d];
+        let sb = spec(
+            "base_w_d8",
+            vec![("x", vec![m, d], Dtype::F32), ("w", vec![d, d], Dtype::F32)],
+            vec![("d", d as f64)],
+        );
+        let base = run_micro(
+            &sb,
+            &[&lit_f32(&[m, d], &x).unwrap(), &lit_f32(&[d, d], &w).unwrap()],
+        )
+        .unwrap();
+        let sl = spec(
+            "lora_w_d8",
+            vec![
+                ("x", vec![m, d], Dtype::F32),
+                ("a", vec![d, r], Dtype::F32),
+                ("b", vec![r, d], Dtype::F32),
+                ("w", vec![d, d], Dtype::F32),
+            ],
+            vec![("d", d as f64)],
+        );
+        let lora = run_micro(
+            &sl,
+            &[
+                &lit_f32(&[m, d], &x).unwrap(),
+                &lit_f32(&[d, r], &a).unwrap(),
+                &lit_f32(&[r, d], &b).unwrap(),
+                &lit_f32(&[d, d], &w).unwrap(),
+            ],
+        )
+        .unwrap();
+        // B = 0 => LoRA == base
+        let diff = base[0]
+            .f32s()
+            .unwrap()
+            .iter()
+            .zip(lora[0].f32s().unwrap())
+            .fold(0.0f32, |acc, (p, q)| acc.max((p - q).abs()));
+        assert!(diff < 1e-6);
+    }
+}

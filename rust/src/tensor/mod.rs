@@ -68,6 +68,11 @@ impl Tensor {
     }
 
     /// Matrix multiply: (m, k) @ (k, n) -> (m, n).
+    ///
+    /// Cache-blocked over the contraction dimension and multithreaded
+    /// over row panels for large problems; accumulation order per
+    /// output element is identical at every thread count, so results
+    /// are bitwise deterministic.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
             bail!("matmul shape mismatch {:?} @ {:?}", self.shape, other.shape);
@@ -75,18 +80,24 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.shape[1]);
         let n = other.shape[1];
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        if m == 0 || k == 0 || n == 0 {
+            return Ok(Tensor::from_vec(&[m, n], out));
+        }
+        let threads = matmul_threads(m, m * k * n);
+        if threads <= 1 {
+            matmul_panel(&self.data, &other.data, &mut out, 0, m, k, n);
+        } else {
+            let rows_per = m.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let a = &self.data;
+                    let b = &other.data;
+                    s.spawn(move || {
+                        let rows = chunk.len() / n;
+                        matmul_panel(a, b, chunk, ci * rows_per, rows, k, n);
+                    });
                 }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
+            });
         }
         Ok(Tensor::from_vec(&[m, n], out))
     }
@@ -215,9 +226,142 @@ impl Tensor {
     }
 }
 
+/// One thread's share of a matmul: rows [row0, row0+rows) of the
+/// output, k-blocked so a panel of B stays cache-hot across rows.
+fn matmul_panel(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    const KC: usize = 256;
+    let mut p0 = 0;
+    while p0 < k {
+        let pend = (p0 + KC).min(k);
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in p0..pend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..p * n + n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        p0 = pend;
+    }
+}
+
+/// Worker count for a matmul of `flops` fused multiply-adds over `rows`
+/// output rows (1 below the threading threshold).
+fn matmul_threads(rows: usize, flops: usize) -> usize {
+    if flops < (1 << 18) {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.min(rows).max(1)
+}
+
+/// Apply `f(row_index, row_slice)` over the rows of a (rows, cols)
+/// buffer, in parallel for large outputs. Each row is written by
+/// exactly one thread, so the result is deterministic.
+pub(crate) fn parallel_over_rows<F>(out: &mut [f32], rows: usize, cols: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = matmul_threads(rows, rows * cols * 16);
+    if threads <= 1 {
+        for (i, row) in out.chunks_mut(cols).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows_per * cols).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (ri, row) in chunk.chunks_mut(cols).enumerate() {
+                    f(ci * rows_per + ri, row);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The textbook triple loop, for parity checks against the blocked
+    /// threaded implementation.
+    fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a.data[i * k + p] * b.data[p * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(3, 5, 7), (17, 64, 9), (33, 300, 21)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let got = a.matmul(&b).unwrap();
+            let want = matmul_naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_matches_naive_above_threshold() {
+        // 128*128*128 = 2M MACs: well above the threading threshold.
+        let mut rng = Rng::new(22);
+        let a = Tensor::randn(&[128, 128], 1.0, &mut rng);
+        let b = Tensor::randn(&[128, 128], 1.0, &mut rng);
+        let got = a.matmul(&b).unwrap();
+        let want = matmul_naive(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn matmul_is_deterministic() {
+        let mut rng = Rng::new(23);
+        let a = Tensor::randn(&[96, 200], 1.0, &mut rng);
+        let b = Tensor::randn(&[200, 64], 1.0, &mut rng);
+        let x = a.matmul(&b).unwrap();
+        let y = a.matmul(&b).unwrap();
+        assert_eq!(x, y, "repeated matmuls must agree bitwise");
+    }
+
+    #[test]
+    fn parallel_over_rows_covers_every_row() {
+        let (rows, cols) = (301, 40);
+        let mut out = vec![0f32; rows * cols];
+        parallel_over_rows(&mut out, rows, cols, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * cols + j) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
 
     #[test]
     fn matmul_known() {
