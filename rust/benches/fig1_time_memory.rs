@@ -8,7 +8,9 @@
 //! Shape target (DESIGN.md §3): OFTv2 is multiple-x faster than OFT and
 //! within ~2x of LoRA; memory ratio OFT/OFTv2 ≈ 3x.
 
-use oftv2::bench::{fmt_ms, fmt_ratio, print_table, quick_mode, Report};
+use oftv2::bench::{
+    fmt_ms, fmt_ratio, print_table, quick_mode, write_bench_json, BenchRecord, Report,
+};
 use oftv2::config::RunCfg;
 use oftv2::coordinator::Trainer;
 use oftv2::json::Json;
@@ -17,7 +19,8 @@ use oftv2::modelspec::ModelSpec;
 use oftv2::runtime::Engine;
 use oftv2::{artifacts_root, Result};
 
-fn mean_step_secs(engine: &Engine, tag: &str, steps: usize) -> Result<f64> {
+/// Post-warmup per-step wall times for one bundle.
+fn step_samples(engine: &Engine, tag: &str, steps: usize) -> Result<Vec<f64>> {
     let mut cfg = RunCfg::default();
     cfg.tag = tag.into();
     cfg.steps = steps;
@@ -26,13 +29,14 @@ fn mean_step_secs(engine: &Engine, tag: &str, steps: usize) -> Result<f64> {
     cfg.data.documents = 300;
     let mut tr = Trainer::new(engine, &artifacts_root(), cfg)?;
     let hist = tr.train()?;
-    Ok(hist.mean_step_secs(steps / 5))
+    Ok(hist.step_secs(steps / 5))
 }
 
 fn main() -> Result<()> {
     let steps = if quick_mode() { 8 } else { 25 };
     let engine = Engine::cpu()?;
     let mut report = Report::new("fig1_time_memory");
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // -- measured training time (fig1 preset: d=1024 > rows=128, the merge-dominated regime) ---------
     let mut rows = Vec::new();
@@ -42,13 +46,17 @@ fn main() -> Result<()> {
         ("OFTv2 (input-centric)", "fig1_oft_v2"),
         ("LoRA", "fig1_lora"),
     ] {
-        let s = mean_step_secs(&engine, tag, steps)?;
+        let samples = step_samples(&engine, tag, steps)?;
+        let rec = BenchRecord::from_samples(format!("step_time_{tag}"), &samples)
+            .with("method", Json::str(label));
+        let s = rec.mean;
         times.push((label, s));
         report.add_kv(vec![
             ("kind", Json::str("step_time")),
             ("method", Json::str(label)),
             ("secs", Json::num(s)),
         ]);
+        records.push(rec);
     }
     let oft = times[0].1;
     let v2 = times[1].1;
@@ -96,15 +104,29 @@ fn main() -> Result<()> {
             vec!["LoRA".into(), format!("{m_lora:.1}"), fmt_ratio(m_lora / m_v2)],
         ],
     );
+    // Memory is a different unit than the step times, so it gets its
+    // own BENCH file rather than polluting the secs-unit records.
+    let mut mem_records: Vec<BenchRecord> = Vec::new();
     for (m, g) in [("OFT", m_oft), ("OFTv2", m_v2), ("LoRA", m_lora)] {
         report.add_kv(vec![
             ("kind", Json::str("memory_gib")),
             ("method", Json::str(m)),
             ("gib", Json::num(g)),
         ]);
+        mem_records.push(
+            BenchRecord::from_samples(format!("memory_gib_{m}"), &[g])
+                .with("method", Json::str(m)),
+        );
     }
     assert!(m_oft / m_v2 > 2.0 && m_oft / m_v2 < 4.5);
     let path = report.save()?;
-    println!("\nresults -> {}", path.display());
+    let bench_path = write_bench_json("fig1_time_memory", "secs", &records)?;
+    let mem_path = write_bench_json("fig1_memory", "gib", &mem_records)?;
+    println!(
+        "\nresults -> {}, {} and {}",
+        path.display(),
+        bench_path.display(),
+        mem_path.display()
+    );
     Ok(())
 }

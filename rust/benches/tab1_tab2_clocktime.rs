@@ -7,7 +7,7 @@
 //! than QLoRA (Table 2: 3:25:00 vs 3:19:30 on 7B). We assert the same
 //! orderings on per-step means, scaled to an epoch of EPOCH_STEPS.
 
-use oftv2::bench::{fmt_ms, print_table, quick_mode, Report};
+use oftv2::bench::{fmt_ms, print_table, quick_mode, write_bench_json, BenchRecord, Report};
 use oftv2::config::RunCfg;
 use oftv2::coordinator::Trainer;
 use oftv2::json::Json;
@@ -19,7 +19,7 @@ use oftv2::{artifacts_root, Result};
 /// is ~a few thousand steps on 8xH100).
 const EPOCH_STEPS: f64 = 2000.0;
 
-fn mean_step(engine: &Engine, tag: &str, steps: usize, task: &str) -> Result<f64> {
+fn step_samples(engine: &Engine, tag: &str, steps: usize, task: &str) -> Result<Vec<f64>> {
     let mut cfg = RunCfg::default();
     cfg.tag = tag.into();
     cfg.steps = steps;
@@ -27,13 +27,21 @@ fn mean_step(engine: &Engine, tag: &str, steps: usize, task: &str) -> Result<f64
     cfg.data.task = task.into();
     cfg.data.documents = 300;
     let mut tr = Trainer::new(engine, &artifacts_root(), cfg)?;
-    Ok(tr.train()?.mean_step_secs(steps / 5))
+    Ok(tr.train()?.step_secs(steps / 5))
 }
 
 fn main() -> Result<()> {
     let steps = if quick_mode() { 8 } else { 25 };
     let engine = Engine::cpu()?;
     let mut report = Report::new("tab1_tab2_clocktime");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut mean_step = |engine: &Engine, tag: &str, steps: usize, task: &str| -> Result<f64> {
+        let samples = step_samples(engine, tag, steps, task)?;
+        let rec = BenchRecord::from_samples(format!("step_time_{tag}"), &samples);
+        let mean = rec.mean;
+        records.push(rec);
+        Ok(mean)
+    };
 
     // ---- Table 1: full precision (math reasoning data) -----------------
     let lora = mean_step(&engine, "bench_lora", steps, "math")?;
@@ -107,6 +115,7 @@ fn main() -> Result<()> {
     );
 
     let path = report.save()?;
-    println!("\nresults -> {}", path.display());
+    let bench_path = write_bench_json("tab1_tab2_clocktime", "secs", &records)?;
+    println!("\nresults -> {} and {}", path.display(), bench_path.display());
     Ok(())
 }

@@ -172,6 +172,96 @@ pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("OFT_BENCH_QUICK").is_ok()
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench records (the perf-trajectory contract)
+// ---------------------------------------------------------------------------
+
+/// One measured configuration in the shared `BENCH_<name>.json` schema:
+/// a config label plus mean/p50/p95 of its samples, with free-form
+/// extra fields (method, dimension, ratio, ...).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub config: String,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub n: usize,
+    pub extra: Vec<(String, Json)>,
+}
+
+impl BenchRecord {
+    /// Record from raw samples (seconds or any consistent unit).
+    pub fn from_samples(config: impl Into<String>, samples: &[f64]) -> BenchRecord {
+        BenchRecord::from_summary(config, &Summary::of(samples))
+    }
+
+    pub fn from_summary(config: impl Into<String>, s: &Summary) -> BenchRecord {
+        BenchRecord {
+            config: config.into(),
+            mean: s.mean,
+            p50: s.median,
+            p95: s.p95,
+            n: s.n,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach an extra field.
+    pub fn with(mut self, key: impl Into<String>, value: Json) -> BenchRecord {
+        self.extra.push((key.into(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj: Vec<(&str, Json)> = vec![
+            ("config", Json::str(self.config.clone())),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("n", Json::num(self.n as f64)),
+        ];
+        for (k, v) in &self.extra {
+            obj.push((k.as_str(), v.clone()));
+        }
+        Json::obj(obj)
+    }
+}
+
+/// Write `BENCH_<name>.json` under the bench output directory
+/// (`OFT_BENCH_OUT`, default `bench_results`): the machine-readable
+/// record every bench emits so the perf trajectory is diffable across
+/// commits. `unit` names what mean/p50/p95 measure (e.g. "secs",
+/// "secs_per_token").
+pub fn write_bench_json(
+    name: &str,
+    unit: &str,
+    records: &[BenchRecord],
+) -> crate::Result<PathBuf> {
+    let dir = std::env::var("OFT_BENCH_OUT").unwrap_or_else(|_| "bench_results".into());
+    write_bench_json_to(dir, name, unit, records)
+}
+
+/// As [`write_bench_json`] with an explicit output directory (no
+/// process-global env read — use this from tests).
+pub fn write_bench_json_to(
+    dir: impl Into<PathBuf>,
+    name: &str,
+    unit: &str,
+    records: &[BenchRecord],
+) -> crate::Result<PathBuf> {
+    let dir = dir.into();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let doc = Json::obj(vec![
+        ("bench", Json::str(name.to_string())),
+        ("unit", Json::str(unit.to_string())),
+        ("schema", Json::str("config/mean/p50/p95/n".to_string())),
+        ("records", Json::arr(records.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +304,24 @@ mod tests {
             256
         );
         std::env::remove_var("OFT_BENCH_OUT");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bench_json_schema() {
+        let dir = std::env::temp_dir().join(format!("oft_benchjson_{}", std::process::id()));
+        let rec = BenchRecord::from_samples("kv_d256", &[0.1, 0.2, 0.3])
+            .with("method", Json::str("oft_v2"));
+        let path = write_bench_json_to(dir.clone(), "unit_serving", "secs", &[rec]).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_serving.json");
+        let doc = crate::json::parse_file(&path).unwrap();
+        assert_eq!(doc.get("unit").unwrap().as_str().unwrap(), "secs");
+        let r = &doc.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r.get("config").unwrap().as_str().unwrap(), "kv_d256");
+        assert!((r.get("mean").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
+        assert!(r.get("p50").unwrap().as_f64().is_ok());
+        assert!(r.get("p95").unwrap().as_f64().is_ok());
+        assert_eq!(r.get("method").unwrap().as_str().unwrap(), "oft_v2");
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -58,6 +58,12 @@ impl History {
         tail.iter().sum::<f64>() / tail.len() as f64
     }
 
+    /// Per-step wall times after skipping `skip` warmup steps (bench
+    /// sample sets for mean/p50/p95 records).
+    pub fn step_secs(&self, skip: usize) -> Vec<f64> {
+        self.steps.iter().skip(skip).map(|r| r.secs).collect()
+    }
+
     /// Mean loss over the last `n` steps (noise-robust convergence
     /// check for the paper-shape assertions).
     pub fn tail_loss(&self, n: usize) -> Option<f64> {

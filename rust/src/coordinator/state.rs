@@ -1,16 +1,27 @@
-//! Parameter-state construction: deterministic initialization from the
-//! manifest's init specs, checkpoint overrides, and quantization of the
-//! frozen base weights into the exact packed layouts the graphs expect.
+//! Parameter-state construction, split along the paper's central
+//! property: the (quantized) base is frozen, so it is a *shared*
+//! resource, while each adapter owns only adapter-sized state.
+//!
+//! * [`BaseModel`] — the frozen f32 weights and lazily-built NF4/AWQ
+//!   packs of one preset, engine-resident (`Arc`-shared, uploaded
+//!   once). Any number of trainers, evaluators, and decoders attach.
+//! * [`AdapterState`] — trainables + Adam moments + step counter for
+//!   one adapter (the only state that round-trips per step).
+//! * [`BundleState`] — the older all-host view, kept for graph-level
+//!   tests that feed every input by value.
 //!
 //! Rust owns *quantization* (model-load time); the AOT graphs own
 //! *dequantization* (Pallas kernels) — DESIGN.md §4.
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, ensure, Context, Result};
 
 use super::checkpoint::Checkpoint;
-use super::manifest::{Init, Manifest, ParamSpec};
+use super::manifest::{Init, Manifest, ModelDims, ParamSpec};
 use crate::quant::{AwqTensor, Nf4Tensor};
-use crate::runtime::{lit_f32, lit_i8, lit_u8, Value};
+use crate::runtime::{lit_f32, lit_i8, lit_u8, Buffer, Engine, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -180,6 +191,242 @@ impl BundleState {
     }
 }
 
+// ---------------------------------------------------------------------------
+// BaseModel: the shared, engine-resident frozen base
+// ---------------------------------------------------------------------------
+
+/// Checkpoint key prefix for first Adam moments (`__adam_m.<param>`).
+pub const ADAM_M_PREFIX: &str = "__adam_m.";
+/// Checkpoint key prefix for second Adam moments (`__adam_v.<param>`).
+pub const ADAM_V_PREFIX: &str = "__adam_v.";
+/// Checkpoint key holding the optimizer step counter (1-element tensor).
+pub const STEP_KEY: &str = "__step";
+
+/// The frozen base of one model preset as a first-class shared object:
+/// every base parameter initialized deterministically (checkpoint
+/// values win), uploaded to the engine exactly once, plus quantized
+/// packs built lazily per quant backend. Trainers, evaluators, and the
+/// `serve` loop attach via `Arc<BaseModel>` and share the buffers.
+pub struct BaseModel {
+    pub preset: String,
+    pub seed: u64,
+    pub dims: ModelDims,
+    /// Host copies of every base parameter (checkpoint export and the
+    /// quantization source of truth).
+    host: BTreeMap<String, Tensor>,
+    /// Engine-resident f32 buffers, one per base parameter.
+    bufs: BTreeMap<String, Arc<Buffer>>,
+    /// quant backend name -> pack input name -> engine buffer.
+    packs: Mutex<BTreeMap<String, BTreeMap<String, Arc<Buffer>>>>,
+}
+
+impl BaseModel {
+    /// Build the shared base of `preset` and upload it once. The
+    /// `<preset>_none` manifest lists every base parameter as frozen,
+    /// so it serves as the preset's base contract.
+    pub fn for_preset(
+        engine: &Engine,
+        preset: &str,
+        seed: u64,
+        ckpt: Option<&Checkpoint>,
+    ) -> Result<Arc<BaseModel>> {
+        let man = Manifest::builtin(&format!("{preset}_none"))
+            .with_context(|| format!("preset '{preset}' has no builtin base contract"))?;
+        Self::from_manifest(engine, &man, seed, ckpt)
+    }
+
+    /// Build a shared base from any manifest: its frozen specs plus the
+    /// base linears behind its quantized packs. (`full` bundles have no
+    /// frozen inputs — their base lives in the trainables — so their
+    /// private BaseModel is empty rather than a dead second copy.)
+    pub fn from_manifest(
+        engine: &Engine,
+        man: &Manifest,
+        seed: u64,
+        ckpt: Option<&Checkpoint>,
+    ) -> Result<Arc<BaseModel>> {
+        let mut host = BTreeMap::new();
+        let mut bufs = BTreeMap::new();
+        for spec in &man.frozen {
+            let t = init_param(spec, seed, ckpt)?;
+            let buf = engine.upload(&lit_f32(&spec.shape, &t.data)?)?;
+            host.insert(spec.name.clone(), t);
+            bufs.insert(spec.name.clone(), Arc::new(buf));
+        }
+        for base in man.quantized_bases() {
+            // Host copy only: quantized graphs read packs, never the
+            // raw f32 linear, so no engine buffer is uploaded for it.
+            // (The `_none` base of `for_preset` lists every base weight
+            // as frozen, so mixed fleets still get f32 buffers there.)
+            let t = init_quantized_base(man, &base, seed, ckpt)?;
+            host.insert(base, t);
+        }
+        Ok(Arc::new(BaseModel {
+            preset: man.preset.clone(),
+            seed,
+            dims: man.model,
+            host,
+            bufs,
+            packs: Mutex::new(BTreeMap::new()),
+        }))
+    }
+
+    /// Host tensor of one base parameter.
+    pub fn host(&self, name: &str) -> Result<&Tensor> {
+        self.host
+            .get(name)
+            .with_context(|| format!("base model '{}' has no parameter '{name}'", self.preset))
+    }
+
+    /// Reject a checkpoint whose base-weight entries disagree with the
+    /// weights `man` actually draws from this base (its frozen inputs
+    /// and quantized base linears): adapter state would otherwise
+    /// silently decode against the wrong frozen weights. Only those
+    /// names are checked — a `full` bundle reads nothing from the base,
+    /// so its trained weights (which shadow base parameter names) never
+    /// conflict. A checkpoint carrying different base weights needs a
+    /// base *built from it* (`from_manifest` / `for_preset` with the
+    /// checkpoint), not an attach.
+    pub fn ensure_checkpoint_matches(&self, man: &Manifest, ckpt: &Checkpoint) -> Result<()> {
+        let names = man
+            .frozen
+            .iter()
+            .map(|s| s.name.clone())
+            .chain(man.quantized_bases());
+        for name in names {
+            if let (Some(h), Some(t)) = (self.host.get(&name), ckpt.get(&name)) {
+                ensure!(
+                    h == t,
+                    "checkpoint base weight '{name}' differs from the shared '{}' base — \
+                     build the BaseModel from this checkpoint instead of attaching to it",
+                    self.preset
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of engine-resident f32 base buffers.
+    pub fn n_buffers(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// The fixed graph inputs (frozen f32 + quantized packs) for `man`,
+    /// in manifest order, as shared buffer handles. f32 buffers are the
+    /// ones uploaded at construction; packs are quantized from the host
+    /// base weights and uploaded once per quant backend, then reused by
+    /// every adapter on that backend.
+    pub fn fixed_for(&self, engine: &Engine, man: &Manifest) -> Result<Vec<Arc<Buffer>>> {
+        ensure!(
+            man.preset == self.preset,
+            "adapter bundle '{}' (preset '{}') cannot attach to the '{}' base",
+            man.tag,
+            man.preset,
+            self.preset
+        );
+        let mut out = Vec::with_capacity(man.frozen.len() + man.quantized.len());
+        for spec in &man.frozen {
+            let buf = self.bufs.get(&spec.name).with_context(|| {
+                format!(
+                    "base model '{}' lacks frozen input '{}' required by '{}'",
+                    self.preset, spec.name, man.tag
+                )
+            })?;
+            out.push(Arc::clone(buf));
+        }
+        if !man.quantized.is_empty() {
+            self.ensure_packs(engine, man)?;
+            let packs = self.packs.lock().expect("pack cache poisoned");
+            let by_name = packs.get(&man.quant).expect("packs just built");
+            for spec in &man.quantized {
+                let buf = by_name
+                    .get(&spec.name)
+                    .with_context(|| format!("missing quantized pack '{}'", spec.name))?;
+                out.push(Arc::clone(buf));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Quantize + upload any of `man.quant`'s packs not yet resident
+    /// (a one-time cost per quant backend and base weight — manifests
+    /// quantizing different base subsets on the same backend compose).
+    fn ensure_packs(&self, engine: &Engine, man: &Manifest) -> Result<()> {
+        let mut packs = self.packs.lock().expect("pack cache poisoned");
+        let by_name = packs.entry(man.quant.clone()).or_default();
+        for base in man.quantized_bases() {
+            let missing = man
+                .quantized
+                .iter()
+                .any(|q| q.base == base && !by_name.contains_key(&q.name));
+            if !missing {
+                continue;
+            }
+            let w = self.host(&base)?;
+            for (name, lit) in quantize_base(man, &base, w)? {
+                if !by_name.contains_key(&name) {
+                    by_name.insert(name, Arc::new(engine.upload(&lit)?));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdapterState: the adapter-sized working state
+// ---------------------------------------------------------------------------
+
+/// Trainables + Adam moments + step counter for one adapter — all the
+/// per-tenant state a [`BaseModel`] attachment carries.
+pub struct AdapterState {
+    /// Trainable literals, manifest order.
+    pub tr: Vec<Value>,
+    /// First Adam moments, manifest order.
+    pub m: Vec<Value>,
+    /// Second Adam moments, manifest order.
+    pub v: Vec<Value>,
+    /// Optimizer steps taken.
+    pub step: usize,
+}
+
+impl AdapterState {
+    /// Initialize from the manifest (checkpoint values win). Moments
+    /// and the step counter restore from `__adam_m.*` / `__adam_v.*` /
+    /// `__step` entries when present (a full-state resume checkpoint),
+    /// else start at zero (a weights-only init checkpoint).
+    pub fn init(man: &Manifest, seed: u64, ckpt: Option<&Checkpoint>) -> Result<AdapterState> {
+        let mut tr = Vec::with_capacity(man.trainable.len());
+        let mut m = Vec::with_capacity(man.trainable.len());
+        let mut v = Vec::with_capacity(man.trainable.len());
+        for spec in &man.trainable {
+            let t = init_param(spec, seed, ckpt)?;
+            tr.push(lit_f32(&spec.shape, &t.data)?);
+            m.push(moment_literal(spec, ADAM_M_PREFIX, ckpt)?);
+            v.push(moment_literal(spec, ADAM_V_PREFIX, ckpt)?);
+        }
+        let step = match ckpt.and_then(|c| c.get(STEP_KEY)) {
+            Some(t) => t.data.first().copied().unwrap_or(0.0) as usize,
+            None => 0,
+        };
+        Ok(AdapterState { tr, m, v, step })
+    }
+}
+
+fn moment_literal(spec: &ParamSpec, prefix: &str, ckpt: Option<&Checkpoint>) -> Result<Value> {
+    if let Some(t) = ckpt.and_then(|c| c.get(&format!("{prefix}{}", spec.name))) {
+        ensure!(
+            t.shape == spec.shape,
+            "checkpoint moment '{prefix}{}' has shape {:?}, manifest wants {:?}",
+            spec.name,
+            t.shape,
+            spec.shape
+        );
+        return lit_f32(&spec.shape, &t.data);
+    }
+    lit_f32(&spec.shape, &vec![0.0; spec.numel()])
+}
+
 /// Sanity check a quantized-pack literal count: NF4 has 4 packs per
 /// base, AWQ has 3.
 pub fn packs_per_base(quant: &str) -> Result<usize> {
@@ -279,6 +526,71 @@ mod tests {
                 assert_eq!(lit.element_count(), spec.shape.iter().product::<usize>());
             }
         }
+    }
+
+    #[test]
+    fn base_model_serves_mixed_methods_from_one_upload() {
+        let e = crate::runtime::Engine::reference();
+        let base = BaseModel::for_preset(&e, "tiny", 7, None).unwrap();
+        let n_base = e.upload_count();
+        assert_eq!(n_base as usize, base.n_buffers());
+
+        // full-precision adapter: all fixed inputs resolve, no uploads
+        let v2 = man("tiny_oft_v2");
+        let fixed = base.fixed_for(&e, &v2).unwrap();
+        assert_eq!(fixed.len(), v2.frozen.len());
+        assert_eq!(e.upload_count(), n_base);
+
+        // quantized adapter: packs built + uploaded once, then reused
+        let q = man("tiny_qoft_nf4");
+        let fixed_q = base.fixed_for(&e, &q).unwrap();
+        assert_eq!(fixed_q.len(), q.frozen.len() + q.quantized.len());
+        let after_packs = e.upload_count();
+        assert_eq!(after_packs, n_base + q.quantized.len() as u64);
+        let again = base.fixed_for(&e, &q).unwrap();
+        assert_eq!(again.len(), fixed_q.len());
+        assert_eq!(e.upload_count(), after_packs, "packs must be cached");
+
+        // pack literals match what BundleState would have produced
+        let st = BundleState::init(&q, 7, None).unwrap();
+        for ((arc, lit), spec) in fixed_q[q.frozen.len()..]
+            .iter()
+            .zip(&st.fixed[q.frozen.len()..])
+            .zip(&q.quantized)
+        {
+            let host = arc.as_host().unwrap();
+            assert_eq!(host, lit, "pack '{}' differs from BundleState", spec.name);
+        }
+
+        // wrong-preset attachment is rejected
+        let other = Manifest::builtin("small_oft_v2").unwrap();
+        assert!(base.fixed_for(&e, &other).is_err());
+    }
+
+    #[test]
+    fn adapter_state_restores_moments_and_step() {
+        let m = man("tiny_oft_v2");
+        let fresh = AdapterState::init(&m, 7, None).unwrap();
+        assert_eq!(fresh.step, 0);
+        assert_eq!(fresh.tr.len(), m.trainable.len());
+        assert!(fresh.m.iter().all(|v| v.f32s().unwrap().iter().all(|&x| x == 0.0)));
+
+        let mut ck = Checkpoint::new();
+        let spec = &m.trainable[0];
+        ck.insert(
+            format!("{ADAM_M_PREFIX}{}", spec.name),
+            Tensor::ones(&spec.shape),
+        );
+        ck.insert(STEP_KEY.into(), Tensor::from_vec(&[1], vec![9.0]));
+        let resumed = AdapterState::init(&m, 7, Some(&ck)).unwrap();
+        assert_eq!(resumed.step, 9);
+        assert!(resumed.m[0].f32s().unwrap().iter().all(|&x| x == 1.0));
+        assert!(resumed.v[0].f32s().unwrap().iter().all(|&x| x == 0.0));
+
+        // shape-mismatched moment is an error, not silent fallback
+        let mut bad = Checkpoint::new();
+        bad.insert(format!("{ADAM_V_PREFIX}{}", spec.name), Tensor::zeros(&[3]));
+        assert!(AdapterState::init(&m, 7, Some(&bad)).is_err());
     }
 
     #[test]

@@ -11,27 +11,33 @@
 //! outputs = new_trainables + new_m + new_v + [loss]
 //! ```
 //!
-//! Frozen/quantized buffers — the bulk of the bytes — are uploaded once
-//! and reused across steps. The (small, adapter-sized) state round-trips
-//! as host values; on both the reference engine and the CPU PJRT
-//! backend this is a host-memory copy, uniform across methods, so the
-//! paper's *relative* timing claims are preserved.
+//! The frozen/quantized buffers — the bulk of the bytes — live in a
+//! shared [`BaseModel`]: one upload serves every trainer, evaluator,
+//! and decoder attached to the same base (the multi-adapter property
+//! the paper's input-centric design buys). The (small, adapter-sized)
+//! [`AdapterState`] round-trips as host values; on both the reference
+//! engine and the CPU PJRT backend this is a host-memory copy, uniform
+//! across methods, so the paper's *relative* timing claims are
+//! preserved.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use super::checkpoint::{self, Checkpoint};
 use super::manifest::Manifest;
 use super::metrics::{EvalRecord, History, StepRecord};
-use super::state::BundleState;
+use super::state::{AdapterState, BaseModel, ADAM_M_PREFIX, ADAM_V_PREFIX, STEP_KEY};
 use crate::config::RunCfg;
 use crate::data::corpus::TaskKind;
 use crate::data::loader::{Batch, Loader};
 use crate::data::tokenizer::EOS;
 use crate::runtime::{
-    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, Buffer, BundleRole, Engine,
-    Graph, Value,
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, Buffer, BundleRole, Decoder,
+    Engine, Graph, Value,
 };
 use crate::tensor::Tensor;
+use crate::util::argmax;
 use crate::util::timer::Timer;
 use crate::{log_debug, log_info};
 
@@ -43,15 +49,17 @@ pub struct Trainer<'e> {
     train_step: Graph,
     eval_loss: Graph,
     logits_last: Option<Graph>,
-    /// Frozen f32 weights + quantized packs, engine-resident.
-    fixed_bufs: Vec<Buffer>,
-    /// Trainables / Adam moments (manifest order), host values.
-    tr: Vec<Value>,
-    m: Vec<Value>,
-    v: Vec<Value>,
-    /// Host copies kept for analyses/checkpoints (refreshed lazily).
-    host_state: BundleState,
-    step: usize,
+    /// Cached incremental decoder over the current trainables; dropped
+    /// whenever a train step changes them (rebuilding re-dequantizes
+    /// the base and rebuilds rotation blocks — too costly per prompt).
+    decoder: Option<Decoder>,
+    /// The shared frozen base this adapter is attached to.
+    base: Arc<BaseModel>,
+    /// Frozen f32 weights + quantized packs (manifest order), shared
+    /// handles into the base model's engine-resident buffers.
+    fixed_bufs: Vec<Arc<Buffer>>,
+    /// Trainables / Adam moments / step counter.
+    state: AdapterState,
     pub loader: Loader,
 }
 
@@ -70,12 +78,27 @@ impl<'e> Trainer<'e> {
     }
 
     /// As [`Trainer::new`] but with an in-memory checkpoint (the
-    /// pretrain→finetune protocol without touching disk).
+    /// pretrain→finetune protocol without touching disk). Builds a
+    /// private [`BaseModel`]; use [`Trainer::with_base`] to share one.
     pub fn with_checkpoint(
         engine: &'e Engine,
         manifest: Manifest,
         cfg: RunCfg,
         ckpt: Option<&Checkpoint>,
+    ) -> Result<Self> {
+        let base = BaseModel::from_manifest(engine, &manifest, cfg.seed, ckpt)?;
+        Self::with_base(engine, manifest, cfg, ckpt, base)
+    }
+
+    /// Attach a new trainer to an existing shared base: only the
+    /// adapter-sized state is created; the frozen/quantized buffers are
+    /// the base model's (uploaded once, however many tenants attach).
+    pub fn with_base(
+        engine: &'e Engine,
+        manifest: Manifest,
+        cfg: RunCfg,
+        ckpt: Option<&Checkpoint>,
+        base: Arc<BaseModel>,
     ) -> Result<Self> {
         let t0 = Timer::start();
         let train_step = engine.load_bundle_graph(&manifest, BundleRole::TrainStep)?;
@@ -86,11 +109,11 @@ impl<'e> Trainer<'e> {
             t0.secs()
         );
 
-        let host_state = BundleState::init(&manifest, cfg.seed, ckpt)?;
-        let fixed_bufs = engine.upload_all(&host_state.fixed)?;
-        let tr = host_state.trainable_literals(&manifest)?;
-        let m = host_state.zero_moments(&manifest)?;
-        let v = host_state.zero_moments(&manifest)?;
+        if let Some(c) = ckpt {
+            base.ensure_checkpoint_matches(&manifest, c)?;
+        }
+        let fixed_bufs = base.fixed_for(engine, &manifest)?;
+        let state = AdapterState::init(&manifest, cfg.seed, ckpt)?;
 
         let task = TaskKind::parse(&cfg.data.task)
             .with_context(|| format!("unknown data.task '{}'", cfg.data.task))?;
@@ -111,12 +134,10 @@ impl<'e> Trainer<'e> {
             train_step,
             eval_loss,
             logits_last: None,
+            decoder: None,
+            base,
             fixed_bufs,
-            tr,
-            m,
-            v,
-            host_state,
-            step: 0,
+            state,
             loader,
         })
     }
@@ -127,36 +148,47 @@ impl<'e> Trainer<'e> {
         self.loader = loader;
     }
 
+    /// The shared base this trainer is attached to.
+    pub fn base(&self) -> Arc<BaseModel> {
+        Arc::clone(&self.base)
+    }
+
     pub fn step_count(&self) -> usize {
-        self.step
+        self.state.step
     }
 
     /// Run one optimizer step on `batch`; returns the (pre-update) loss.
     pub fn train_on(&mut self, batch: &Batch) -> Result<f32> {
         let b = self.manifest.model.batch;
         let t = self.manifest.model.seq_len;
-        let n = self.tr.len();
+        let n = self.state.tr.len();
         ensure!(batch.batch == b && batch.seq == t, "batch shape mismatch");
-        self.step += 1;
-        let lr = self.cfg.optim.lr_at(self.step, self.cfg.steps) as f32;
+        // The step is about to change the trainables; any cached
+        // decoder would serve stale adapter weights.
+        self.decoder = None;
+        self.state.step += 1;
+        let step = self.state.step;
+        let lr = self.cfg.optim.lr_at(step, self.cfg.steps) as f32;
 
         let tokens = lit_i32(&[b, t + 1], &batch.tokens)?;
         let mask = lit_f32(&[b, t], &batch.mask)?;
-        let data = [
-            tokens,
-            mask,
-            lit_scalar_f32(lr),
-            lit_scalar_f32(self.step as f32),
-        ];
+        let data = [tokens, mask, lit_scalar_f32(lr), lit_scalar_f32(step as f32)];
 
         // Upload state + data; fixed buffers are already engine-resident.
         let mut bufs: Vec<Buffer> = Vec::with_capacity(3 * n + 4);
-        for lit in self.tr.iter().chain(&self.m).chain(&self.v).chain(&data) {
+        for lit in self
+            .state
+            .tr
+            .iter()
+            .chain(&self.state.m)
+            .chain(&self.state.v)
+            .chain(&data)
+        {
             bufs.push(self.engine.upload(lit)?);
         }
         let mut args: Vec<&Buffer> = Vec::with_capacity(bufs.len() + self.fixed_bufs.len());
         args.extend(bufs[..3 * n].iter());
-        args.extend(self.fixed_bufs.iter());
+        args.extend(self.fixed_bufs.iter().map(|a| a.as_ref()));
         args.extend(bufs[3 * n..].iter());
 
         let mut outs = self.train_step.run_b(&args)?;
@@ -167,7 +199,7 @@ impl<'e> Trainer<'e> {
             3 * n + 1
         );
         let loss = scalar_f32(&outs[3 * n])?;
-        ensure!(loss.is_finite(), "loss diverged to {loss} at step {}", self.step);
+        ensure!(loss.is_finite(), "loss diverged to {loss} at step {step}");
         outs.truncate(3 * n);
         // Restore manifest shapes (PJRT returns flat buffers).
         let shapes: Vec<Vec<usize>> = self
@@ -187,9 +219,9 @@ impl<'e> Trainer<'e> {
                 })
                 .collect()
         };
-        self.tr = take(&shapes)?;
-        self.m = take(&shapes)?;
-        self.v = take(&shapes)?;
+        self.state.tr = take(&shapes)?;
+        self.state.m = take(&shapes)?;
+        self.state.v = take(&shapes)?;
         Ok(loss)
     }
 
@@ -210,34 +242,35 @@ impl<'e> Trainer<'e> {
             let timer = Timer::start();
             let loss = self.train_on(&batch)?;
             let secs = timer.secs();
-            let lr = self.cfg.optim.lr_at(self.step, self.cfg.steps);
+            let step = self.state.step;
+            let lr = self.cfg.optim.lr_at(step, self.cfg.steps);
             history.push_step(StepRecord {
-                step: self.step,
+                step,
                 loss: loss as f64,
                 lr,
                 secs,
             });
-            if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
                 log_info!(
                     "[{}] step {:>5}  loss {:.4}  lr {:.2e}  {:.1} ms/step",
                     self.manifest.tag,
-                    self.step,
+                    step,
                     loss,
                     lr,
                     secs * 1e3
                 );
             }
-            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+            if self.cfg.eval_every > 0 && step % self.cfg.eval_every == 0 {
                 let (eval_loss, ppl) = self.evaluate()?;
                 history.push_eval(EvalRecord {
-                    step: self.step,
+                    step,
                     eval_loss,
                     perplexity: ppl,
                 });
                 log_info!(
                     "[{}] step {:>5}  eval_loss {:.4}  ppl {:.2}",
                     self.manifest.tag,
-                    self.step,
+                    step,
                     eval_loss,
                     ppl
                 );
@@ -255,21 +288,22 @@ impl<'e> Trainer<'e> {
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         let b = self.manifest.model.batch;
         let t = self.manifest.model.seq_len;
+        let n = self.state.tr.len();
         let mut sum_nll = 0.0f64;
         let mut count = 0.0f64;
         for batch in self.loader.eval_batches() {
             let tokens = lit_i32(&[b, t + 1], &batch.tokens)?;
             let mask = lit_f32(&[b, t], &batch.mask)?;
-            let mut bufs = Vec::with_capacity(self.tr.len() + 2);
-            for lit in self.tr.iter() {
+            let mut bufs = Vec::with_capacity(n + 2);
+            for lit in self.state.tr.iter() {
                 bufs.push(self.engine.upload(lit)?);
             }
             bufs.push(self.engine.upload(&tokens)?);
             bufs.push(self.engine.upload(&mask)?);
             let mut args: Vec<&Buffer> = Vec::new();
-            args.extend(bufs[..self.tr.len()].iter());
-            args.extend(self.fixed_bufs.iter());
-            args.extend(bufs[self.tr.len()..].iter());
+            args.extend(bufs[..n].iter());
+            args.extend(self.fixed_bufs.iter().map(|a| a.as_ref()));
+            args.extend(bufs[n..].iter());
             let outs = self.eval_loss.run_b(&args)?;
             ensure!(outs.len() == 2, "eval_loss returned {} outputs", outs.len());
             sum_nll += scalar_f32(&outs[0])? as f64;
@@ -279,9 +313,46 @@ impl<'e> Trainer<'e> {
         Ok((mean, crate::eval::perplexity(sum_nll, count)))
     }
 
+    /// Build an incremental decoder over the *current* trainables (call
+    /// again after further training to pick up new adapter weights).
+    pub fn decoder(&self) -> Result<Decoder> {
+        let tr: Vec<&Value> = self.state.tr.iter().collect();
+        let fixed: Vec<&Buffer> = self.fixed_bufs.iter().map(|a| a.as_ref()).collect();
+        self.engine.load_decoder(&self.manifest, &tr, &fixed)
+    }
+
     /// Greedy decoding from `prompt_ids` (BOS included), up to
-    /// `max_new` tokens or EOS. Returns only the generated ids.
+    /// `max_new` tokens or EOS, via the KV-cached incremental decoder —
+    /// O(T) work per generated token. The decoder is cached across
+    /// calls until the next train step. Backends without an incremental
+    /// decoder (PJRT) fall back to the full re-forward path, which
+    /// emits identical tokens. Returns only the generated ids.
     pub fn decode_greedy(&mut self, prompt_ids: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        if self.decoder.is_none() {
+            match self.decoder() {
+                Ok(dec) => self.decoder = Some(dec),
+                Err(e) => {
+                    log_debug!(
+                        "[{}] incremental decoder unavailable ({e:#}); \
+                         using the full re-forward decode path",
+                        self.manifest.tag
+                    );
+                    return self.decode_greedy_reforward(prompt_ids, max_new);
+                }
+            }
+        }
+        decode_greedy_session(self.decoder.as_ref().unwrap(), prompt_ids, max_new)
+    }
+
+    /// The pre-KV-cache decode path: re-runs the whole `logits_last`
+    /// forward over the padded sequence for every generated token
+    /// (O(T²) total). Kept as the correctness oracle the KV path is
+    /// tested token-for-token against, and as the bench baseline.
+    pub fn decode_greedy_reforward(
+        &mut self,
+        prompt_ids: &[i32],
+        max_new: usize,
+    ) -> Result<Vec<i32>> {
         if self.logits_last.is_none() {
             let g = self
                 .engine
@@ -291,25 +362,31 @@ impl<'e> Trainer<'e> {
         let graph = self.logits_last.as_ref().unwrap();
         let t = self.manifest.model.seq_len;
         let vocab = self.manifest.model.vocab;
+        let n = self.state.tr.len();
 
         let mut ids: Vec<i32> = prompt_ids.to_vec();
         ids.truncate(t);
+        if ids.is_empty() {
+            // Same contract as the KV path: nothing to condition on,
+            // nothing generated.
+            return Ok(Vec::new());
+        }
         let mut generated = Vec::new();
         while generated.len() < max_new && ids.len() < t {
             let mut padded = ids.clone();
             padded.resize(t, 0);
             let tokens = lit_i32(&[1, t], &padded)?;
             let cur = lit_scalar_i32(ids.len() as i32);
-            let mut bufs = Vec::with_capacity(self.tr.len() + 2);
-            for lit in self.tr.iter() {
+            let mut bufs = Vec::with_capacity(n + 2);
+            for lit in self.state.tr.iter() {
                 bufs.push(self.engine.upload(lit)?);
             }
             bufs.push(self.engine.upload(&tokens)?);
             bufs.push(self.engine.upload(&cur)?);
             let mut args: Vec<&Buffer> = Vec::new();
-            args.extend(bufs[..self.tr.len()].iter());
-            args.extend(self.fixed_bufs.iter());
-            args.extend(bufs[self.tr.len()..].iter());
+            args.extend(bufs[..n].iter());
+            args.extend(self.fixed_bufs.iter().map(|a| a.as_ref()));
+            args.extend(bufs[n..].iter());
             let outs = graph.run_b(&args)?;
             ensure!(outs.len() == 1, "logits_last returned {} outputs", outs.len());
             let logits = outs[0].to_vec::<f32>()?;
@@ -377,7 +454,7 @@ impl<'e> Trainer<'e> {
         self.manifest
             .trainable
             .iter()
-            .zip(&self.tr)
+            .zip(&self.state.tr)
             .map(|(s, lit)| {
                 Ok((
                     s.name.clone(),
@@ -387,21 +464,54 @@ impl<'e> Trainer<'e> {
             .collect()
     }
 
+    /// Current Adam moments as (name, m, v) tensors.
+    pub fn adam_moments(&self) -> Result<Vec<(String, Tensor, Tensor)>> {
+        self.manifest
+            .trainable
+            .iter()
+            .zip(self.state.m.iter().zip(&self.state.v))
+            .map(|(s, (m, v))| {
+                Ok((
+                    s.name.clone(),
+                    Tensor::from_vec(&s.shape, m.to_vec::<f32>()?),
+                    Tensor::from_vec(&s.shape, v.to_vec::<f32>()?),
+                ))
+            })
+            .collect()
+    }
+
     /// Export a checkpoint of the current trainables, merged over the
-    /// initial host state (so a `full` pretraining run exports every
-    /// base weight a later PEFT run can `init_from`).
+    /// base weights (so a `full` pretraining run exports every base
+    /// weight a later PEFT run can `init_from`).
     pub fn checkpoint(&self) -> Result<Checkpoint> {
         let mut ck = Checkpoint::new();
         // frozen weights as initialized (unchanged by training)
-        for (s, lit) in self.manifest.frozen.iter().zip(&self.host_state.fixed) {
-            ck.insert(s.name.clone(), Tensor::from_vec(&s.shape, lit.to_vec::<f32>()?));
+        for s in &self.manifest.frozen {
+            ck.insert(s.name.clone(), self.base.host(&s.name)?.clone());
         }
-        for (base, w) in &self.host_state.quantized_bases {
-            ck.insert(base.clone(), w.clone());
+        for base in self.manifest.quantized_bases() {
+            ck.insert(base.clone(), self.base.host(&base)?.clone());
         }
         for (name, t) in self.trainable_tensors()? {
             ck.insert(name, t);
         }
+        Ok(ck)
+    }
+
+    /// As [`Trainer::checkpoint`] plus the full optimizer state (Adam
+    /// moments under `__adam_m.*` / `__adam_v.*`, the step counter
+    /// under `__step`): restoring through [`Trainer::with_checkpoint`]
+    /// resumes training bit-for-bit.
+    pub fn checkpoint_full(&self) -> Result<Checkpoint> {
+        let mut ck = self.checkpoint()?;
+        for (name, m, v) in self.adam_moments()? {
+            ck.insert(format!("{ADAM_M_PREFIX}{name}"), m);
+            ck.insert(format!("{ADAM_V_PREFIX}{name}"), v);
+        }
+        ck.insert(
+            STEP_KEY.to_string(),
+            Tensor::from_vec(&[1], vec![self.state.step as f32]),
+        );
         Ok(ck)
     }
 
@@ -411,28 +521,35 @@ impl<'e> Trainer<'e> {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
+/// Greedy-decode through a KV session: prefill the prompt once, then
+/// each generated token costs one incremental step.
+pub fn decode_greedy_session(dec: &Decoder, prompt_ids: &[i32], max_new: usize) -> Result<Vec<i32>> {
+    let t = dec.max_positions();
+    let mut ids: Vec<i32> = prompt_ids.to_vec();
+    ids.truncate(t);
+    if ids.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut sess = dec.begin()?;
+    let mut logits = Vec::new();
+    for &id in &ids {
+        logits = sess.step(id)?;
+    }
+    let mut generated = Vec::new();
+    while generated.len() < max_new && ids.len() < t {
+        let next = argmax(&logits) as i32;
+        ids.push(next);
+        generated.push(next);
+        if next == EOS {
+            break;
+        }
+        if generated.len() < max_new && ids.len() < t {
+            logits = sess.step(next)?;
         }
     }
-    best
+    Ok(generated)
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_basics() {
-        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-        // ties resolve to the first
-        assert_eq!(argmax(&[1.0, 1.0]), 0);
-    }
-
-    // Full trainer integration tests live in rust/tests/trainer.rs;
-    // with the reference engine they run without artifacts.
-}
+// Full trainer integration tests live in rust/tests/trainer.rs and
+// rust/tests/serving.rs; with the reference engine they run without
+// artifacts.

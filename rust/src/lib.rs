@@ -39,6 +39,7 @@ pub mod modelspec;
 pub mod peft;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

@@ -40,6 +40,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("train") => cmd_train(&argv[1..]),
         Some("eval") => cmd_eval(&argv[1..]),
         Some("decode") => cmd_decode(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
         Some("params") => cmd_params(),
         Some("memory") => cmd_memory(&argv[1..]),
         Some("bundles") => cmd_bundles(),
@@ -58,6 +59,7 @@ fn usage() -> &'static str {
      \x20 train    finetune one artifact bundle\n\
      \x20 eval     evaluate a bundle without training\n\
      \x20 decode   greedy-decode a prompt through a bundle\n\
+     \x20 serve    batched multi-adapter serving over one shared base\n\
      \x20 params   trainable-parameter tables (paper Tables 3-5)\n\
      \x20 memory   analytic GPU-memory tables (paper Figs. 1/4, Table 11)\n\
      \x20 bundles  list available artifact bundles\n\
@@ -192,6 +194,150 @@ fn cmd_decode(argv: &[String]) -> Result<()> {
     let out = trainer.complete(&prompt, max_new)?;
     println!("prompt:    {prompt}");
     println!("generated: {out}");
+    Ok(())
+}
+
+/// Batched multi-tenant serving: N adapters (any mix of PEFT methods)
+/// over ONE engine-resident base, FIFO queue, continuous batching,
+/// KV-cached incremental decode.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "batched multi-adapter serving over one shared base")
+        .opt(
+            "adapters",
+            "comma-separated bundle tags sharing one preset",
+            Some("tiny_oft_v2,tiny_qoft_nf4"),
+        )
+        .opt("requests", "total requests to serve", Some("12"))
+        .opt("max-new", "max generated tokens per request", Some("16"))
+        .opt("max-batch", "max concurrently active sequences", Some("4"))
+        .opt("task", "prompt task: wiki | math | summarize", Some("math"))
+        .opt("documents", "synthetic corpus size for prompts", Some("200"))
+        .opt("seed", "master seed", Some("7"))
+        .opt("backend", "runtime backend: auto | reference | pjrt", Some("auto"))
+        .flag("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let tags: Vec<String> = args
+        .get_or("adapters", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if tags.is_empty() {
+        bail!("--adapters needs at least one bundle tag");
+    }
+    let requests = args.get_usize("requests", 12)?;
+    let max_new = args.get_usize("max-new", 16)?;
+    let max_batch = args.get_usize("max-batch", 4)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let documents = args.get_usize("documents", 200)?;
+    let engine = engine_for(&args)?;
+    log_info!("runtime platform: {}", engine.platform());
+
+    let manifests: Vec<oftv2::coordinator::Manifest> = tags
+        .iter()
+        .map(|t| oftv2::coordinator::Manifest::load_or_builtin(artifacts_root().join(t)))
+        .collect::<Result<_>>()?;
+    let preset = manifests[0].preset.clone();
+    for m in &manifests {
+        if m.preset != preset {
+            bail!(
+                "all adapters must share one base preset; got '{}' and '{}'",
+                preset,
+                m.preset
+            );
+        }
+    }
+
+    // One shared base, uploaded once; every adapter attaches to it.
+    let base = oftv2::coordinator::BaseModel::for_preset(&engine, &preset, seed, None)
+        .or_else(|_| oftv2::coordinator::BaseModel::from_manifest(&engine, &manifests[0], seed, None))?;
+    let uploads_base = engine.upload_count();
+    let mut server = oftv2::serve::Server::new(&engine, base, max_batch);
+    let mut names = Vec::new();
+    for (i, (tag, man)) in tags.iter().zip(manifests.iter()).enumerate() {
+        let name = if names.iter().any(|n: &String| n == tag) {
+            format!("{tag}@{i}")
+        } else {
+            tag.clone()
+        };
+        server.add_adapter_init(&name, man.clone(), seed, None)?;
+        names.push(name);
+    }
+    log_info!(
+        "base '{preset}' resident ({} f32 buffers); {} adapters attached with {} extra uploads",
+        server.base().n_buffers(),
+        names.len(),
+        engine.upload_count() - uploads_base
+    );
+
+    // Synthetic prompts over the preset's vocabulary.
+    let dims = manifests[0].model;
+    let task = oftv2::data::corpus::TaskKind::parse(args.get_or("task", "math"))
+        .context("unknown --task")?;
+    let loader = oftv2::data::loader::Loader::new(
+        task,
+        documents,
+        seed,
+        /*style=*/ 1,
+        dims.vocab,
+        dims.batch,
+        dims.seq_len,
+    );
+    let examples = loader.eval_examples().to_vec();
+    for r in 0..requests {
+        let adapter = &names[r % names.len()];
+        let ex = &examples[r % examples.len()];
+        server.submit(adapter, loader.encode_prompt(&ex.prompt), max_new)?;
+    }
+    let responses = server.run_until_idle()?;
+
+    let tok = loader.tokenizer();
+    for resp in responses.iter().take(4) {
+        println!(
+            "#{:<3} [{}] {:>2} tokens in {:>7.1} ms: {}",
+            resp.id,
+            resp.adapter,
+            resp.tokens.len(),
+            resp.latency_secs * 1e3,
+            tok.decode(&resp.tokens)
+        );
+    }
+    if responses.len() > 4 {
+        println!("... ({} more)", responses.len() - 4);
+    }
+
+    let m = server.metrics();
+    let rows: Vec<Vec<String>> = m
+        .per_adapter
+        .iter()
+        .map(|(name, a)| {
+            vec![
+                name.clone(),
+                a.requests.to_string(),
+                a.tokens_out.to_string(),
+                format!("{:.1}", a.mean_ttft_secs() * 1e3),
+                format!("{:.1}", a.mean_latency_secs() * 1e3),
+                format!("{:.1}", a.tokens_per_sec()),
+            ]
+        })
+        .collect();
+    oftv2::bench::print_table(
+        "serve: per-adapter metrics",
+        &["adapter", "reqs", "tokens", "ttft ms", "latency ms", "tok/s"],
+        &rows,
+    );
+    println!(
+        "\n{} requests, {} tokens in {:.2}s wall ({:.1} tok/s aggregate, peak batch {})",
+        m.total_requests,
+        m.total_tokens,
+        m.wall_secs,
+        m.tokens_per_sec(),
+        m.peak_active
+    );
     Ok(())
 }
 

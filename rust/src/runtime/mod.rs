@@ -26,6 +26,7 @@ pub mod reference;
 pub mod refmodel;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -327,6 +328,16 @@ pub trait EngineBackend {
     fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>>;
     fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec)
         -> Result<Box<dyn GraphBackend>>;
+    /// Build an adapter-bound incremental decoder: trainables + fixed
+    /// inputs are resolved once (dequantization, CNP block build, LoRA
+    /// scaling), then any number of KV-cached sessions decode token by
+    /// token without re-running the prefix.
+    fn load_decoder(
+        &self,
+        man: &Manifest,
+        trainables: &[&Value],
+        fixed: &[&Buffer],
+    ) -> Result<Box<dyn DecoderBackend>>;
 }
 
 /// One executable graph.
@@ -335,43 +346,111 @@ pub trait GraphBackend {
     fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>>;
 }
 
+/// An adapter-bound incremental decoder (see [`EngineBackend::load_decoder`]).
+pub trait DecoderBackend {
+    /// Start a fresh sequence with an empty KV cache.
+    fn begin(&self) -> Result<Box<dyn DecodeSessionBackend>>;
+    /// Maximum positions a session can consume (the model's seq_len).
+    fn max_positions(&self) -> usize;
+    fn vocab(&self) -> usize;
+}
+
+/// One in-flight sequence: owns its KV cache, consumes one token per
+/// step, and returns next-token logits.
+pub trait DecodeSessionBackend {
+    fn step(&mut self, token: i32) -> Result<Vec<f32>>;
+    /// Positions consumed so far.
+    fn position(&self) -> usize;
+}
+
+/// Names `Engine::by_name` accepts, with a one-line description each
+/// (used for `--backend` error/help text).
+pub fn backend_catalog() -> Vec<(&'static str, &'static str)> {
+    let pjrt_about = if cfg!(feature = "pjrt") {
+        "PJRT/HLO engine over the xla crate"
+    } else {
+        "PJRT/HLO engine (unavailable: build with --features pjrt)"
+    };
+    vec![
+        ("reference", "pure-Rust host engine (aliases: host, auto)"),
+        ("pjrt", pjrt_about),
+    ]
+}
+
+fn backend_list() -> String {
+    backend_catalog()
+        .iter()
+        .map(|(name, about)| format!("  {name:<10} {about}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 /// The process-wide runtime handle. One per process is plenty.
 pub struct Engine {
     backend: Box<dyn EngineBackend>,
+    uploads: AtomicU64,
+    upload_bytes: AtomicU64,
 }
 
 impl Engine {
+    fn wrap(backend: Box<dyn EngineBackend>) -> Engine {
+        Engine {
+            backend,
+            uploads: AtomicU64::new(0),
+            upload_bytes: AtomicU64::new(0),
+        }
+    }
+
     /// The pure-Rust reference engine (always available).
     pub fn reference() -> Engine {
-        Engine {
-            backend: Box::new(reference::ReferenceEngine::new()),
-        }
+        Engine::wrap(Box::new(reference::ReferenceEngine::new()))
     }
 
     /// The PJRT engine over the `xla` crate (feature `pjrt`).
     #[cfg(feature = "pjrt")]
     pub fn pjrt() -> Result<Engine> {
-        Ok(Engine {
-            backend: Box::new(pjrt::PjrtEngine::cpu()?),
-        })
+        Ok(Engine::wrap(Box::new(pjrt::PjrtEngine::cpu()?)))
     }
 
-    /// The default CPU engine: the reference backend, unless the
-    /// `OFT_BACKEND` env var selects another.
+    /// The default CPU engine: honors the `OFT_BACKEND` env var, else
+    /// the reference engine — logging why PJRT was skipped instead of
+    /// silently picking reference.
     pub fn cpu() -> Result<Engine> {
         match std::env::var("OFT_BACKEND") {
-            Ok(name) => Engine::by_name(&name),
-            Err(_) => Ok(Engine::reference()),
+            Ok(name) if !name.is_empty() => Engine::by_name(&name),
+            _ => Engine::auto(),
         }
+    }
+
+    fn auto() -> Result<Engine> {
+        #[cfg(feature = "pjrt")]
+        {
+            crate::log_debug!(
+                "auto backend: using the reference engine (PJRT needs AOT artifacts; \
+                 opt in explicitly with --backend pjrt or OFT_BACKEND=pjrt)"
+            );
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            crate::log_debug!(
+                "auto backend: PJRT skipped (crate built without the `pjrt` feature); \
+                 using the reference engine"
+            );
+        }
+        Ok(Engine::reference())
     }
 
     /// Select a backend by name: `reference` (alias `host`, `auto`) or
     /// `pjrt`.
     pub fn by_name(name: &str) -> Result<Engine> {
         match name {
-            "" | "reference" | "host" | "auto" => Ok(Engine::reference()),
+            "" | "auto" => Engine::auto(),
+            "reference" | "host" => Ok(Engine::reference()),
             "pjrt" => pjrt_engine(),
-            other => bail!("unknown backend '{other}' (expected 'reference' or 'pjrt')"),
+            other => bail!(
+                "unknown backend '{other}'; valid backends:\n{}",
+                backend_list()
+            ),
         }
     }
 
@@ -379,9 +458,25 @@ impl Engine {
         self.backend.platform()
     }
 
+    /// Number of `upload` calls served so far — lets tests prove that
+    /// shared frozen/quantized buffers really are uploaded once.
+    pub fn upload_count(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes moved through `upload` so far.
+    pub fn upload_bytes(&self) -> u64 {
+        self.upload_bytes.load(Ordering::Relaxed)
+    }
+
     /// Upload a host value to an engine-owned buffer (done once for
     /// frozen weights / quantized packs).
     pub fn upload(&self, v: &Value) -> Result<Buffer> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.upload_bytes.fetch_add(
+            (v.element_count() * v.dtype().size_bytes()) as u64,
+            Ordering::Relaxed,
+        );
         self.backend.upload(v)
     }
 
@@ -403,6 +498,20 @@ impl Engine {
         Ok(Graph {
             name: spec.name.clone(),
             inner: self.backend.load_micro_kernel(micro_root, spec)?,
+        })
+    }
+
+    /// Build an adapter-bound incremental decoder over engine-resident
+    /// fixed buffers. See [`Decoder`].
+    pub fn load_decoder(
+        &self,
+        man: &Manifest,
+        trainables: &[&Value],
+        fixed: &[&Buffer],
+    ) -> Result<Decoder> {
+        Ok(Decoder {
+            name: man.tag.clone(),
+            inner: self.backend.load_decoder(man, trainables, fixed)?,
         })
     }
 }
@@ -439,6 +548,50 @@ impl Graph {
     /// stay resident across steps).
     pub fn run_b(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
         self.inner.run_buffers(inputs)
+    }
+}
+
+/// An adapter-bound incremental decoder: the adapter's merged state
+/// (dequantized base, CNP rotation blocks, LoRA factors) is resolved
+/// once at load, then [`Decoder::begin`] spawns independent KV-cached
+/// sessions — the unit the `serve` subsystem schedules.
+pub struct Decoder {
+    pub name: String,
+    inner: Box<dyn DecoderBackend>,
+}
+
+impl Decoder {
+    /// Start a fresh sequence (empty KV cache).
+    pub fn begin(&self) -> Result<DecodeSession> {
+        Ok(DecodeSession {
+            inner: self.inner.begin()?,
+        })
+    }
+
+    /// Maximum positions a session can consume (model seq_len).
+    pub fn max_positions(&self) -> usize {
+        self.inner.max_positions()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+}
+
+/// One in-flight decode sequence over a [`Decoder`].
+pub struct DecodeSession {
+    inner: Box<dyn DecodeSessionBackend>,
+}
+
+impl DecodeSession {
+    /// Consume `token` at the next position; returns next-token logits.
+    pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.inner.step(token)
+    }
+
+    /// Positions consumed so far.
+    pub fn position(&self) -> usize {
+        self.inner.position()
     }
 }
 
@@ -500,5 +653,26 @@ mod tests {
         let e = Engine::reference();
         let b = e.upload(&lit_f32(&[2], &[1.0, 2.0]).unwrap()).unwrap();
         assert_eq!(b.as_host().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_valid_backends() {
+        // (match instead of unwrap_err: Engine has no Debug impl)
+        let err = match Engine::by_name("bogus") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("bogus backend should fail"),
+        };
+        assert!(err.contains("reference"), "error should list backends: {err}");
+        assert!(err.contains("pjrt"), "error should list backends: {err}");
+    }
+
+    #[test]
+    fn upload_counter_tracks_calls_and_bytes() {
+        let e = Engine::reference();
+        assert_eq!(e.upload_count(), 0);
+        e.upload(&lit_f32(&[3], &[1.0, 2.0, 3.0]).unwrap()).unwrap();
+        e.upload(&lit_u8(&[2], &[1, 2]).unwrap()).unwrap();
+        assert_eq!(e.upload_count(), 2);
+        assert_eq!(e.upload_bytes(), 3 * 4 + 2);
     }
 }

@@ -21,7 +21,10 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::micro::MicroSpec;
-use super::{Buffer, BufferRepr, BundleRole, Dtype, EngineBackend, GraphBackend, Value, ValueData};
+use super::{
+    Buffer, BufferRepr, BundleRole, DecoderBackend, Dtype, EngineBackend, GraphBackend, Value,
+    ValueData,
+};
 use crate::coordinator::manifest::Manifest;
 
 fn element_type(d: Dtype) -> xla::ElementType {
@@ -125,6 +128,21 @@ impl EngineBackend for PjrtEngine {
         spec: &MicroSpec,
     ) -> Result<Box<dyn GraphBackend>> {
         Ok(Box::new(self.compile_file(&micro_root.join(&spec.artifact))?))
+    }
+
+    fn load_decoder(
+        &self,
+        man: &Manifest,
+        _trainables: &[&Value],
+        _fixed: &[&Buffer],
+    ) -> Result<Box<dyn DecoderBackend>> {
+        // The AOT bundles export whole-sequence graphs only; a KV-cached
+        // HLO decode graph is future work. Serve on the reference engine.
+        bail!(
+            "bundle '{}': the PJRT backend has no incremental decoder; \
+             use `--backend reference` for KV-cached decoding/serving",
+            man.tag
+        )
     }
 }
 

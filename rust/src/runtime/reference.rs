@@ -9,12 +9,16 @@
 //! multithreaded matmul and the fused CNP-build + block-rotate path.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::micro::MicroSpec;
-use super::refmodel::{self, RefBundle};
-use super::{lit_f32, Buffer, BundleRole, EngineBackend, GraphBackend, Value};
+use super::refmodel::{self, DecodeModel, KvCache, RefBundle};
+use super::{
+    lit_f32, Buffer, BundleRole, DecodeSessionBackend, DecoderBackend, EngineBackend,
+    GraphBackend, Value,
+};
 use crate::coordinator::manifest::Manifest;
 use crate::peft;
 use crate::quant::{AwqTensor, Nf4Tensor};
@@ -52,6 +56,57 @@ impl EngineBackend for ReferenceEngine {
         // time (as an HLO parse would), not mid-bench.
         kernel_kind(&spec.name)?;
         Ok(Box::new(RefMicroKernel { spec: spec.clone() }))
+    }
+
+    fn load_decoder(
+        &self,
+        man: &Manifest,
+        trainables: &[&Value],
+        fixed: &[&Buffer],
+    ) -> Result<Box<dyn DecoderBackend>> {
+        let bundle = RefBundle::from_manifest(man)?;
+        let fixed_vals = buffers_to_values(fixed)?;
+        let model = bundle.decode_model(trainables, &fixed_vals)?;
+        Ok(Box::new(RefDecoder {
+            model: Arc::new(model),
+        }))
+    }
+}
+
+/// Adapter-resolved decoder: sessions share the merged state via `Arc`.
+struct RefDecoder {
+    model: Arc<DecodeModel>,
+}
+
+impl DecoderBackend for RefDecoder {
+    fn begin(&self) -> Result<Box<dyn DecodeSessionBackend>> {
+        Ok(Box::new(RefDecodeSession {
+            cache: self.model.new_cache(),
+            model: Arc::clone(&self.model),
+        }))
+    }
+
+    fn max_positions(&self) -> usize {
+        self.model.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.vocab()
+    }
+}
+
+struct RefDecodeSession {
+    model: Arc<DecodeModel>,
+    cache: KvCache,
+}
+
+impl DecodeSessionBackend for RefDecodeSession {
+    fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.model.forward_incremental(&mut self.cache, token)
+    }
+
+    fn position(&self) -> usize {
+        self.cache.position()
     }
 }
 

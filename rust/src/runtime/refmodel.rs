@@ -662,6 +662,236 @@ impl RefBundle {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Incremental (KV-cached) decoding
+// ---------------------------------------------------------------------------
+
+/// One adapted linear with the adapter resolved at build time: decode
+/// steps pay only the per-token apply, never dequantization or CNP
+/// block construction.
+enum DecLinear {
+    Plain { w: Tensor },
+    Lora { w: Tensor, a: Tensor, b: Tensor, scale: f32 },
+    /// Input-centric OFTv2/QOFT: rotate the token's activations
+    /// block-by-block, then the frozen matmul (matrix-free, §3).
+    Rotate { w: Tensor, blocks: Vec<Tensor> },
+    /// Weight-centric baseline: blockdiag(R) @ W merged once at load
+    /// (decoding re-pays it per adapter, not per token).
+    Merged { rw: Tensor },
+}
+
+impl DecLinear {
+    /// Apply to a (1, din) row; mirrors `linear_fwd` operation order so
+    /// decode logits match the full re-forward bit for bit.
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        match self {
+            DecLinear::Plain { w } => x.matmul(w),
+            DecLinear::Lora { w, a, b, scale } => {
+                let xa = x.matmul(a)?;
+                x.matmul(w)?.add(&xa.matmul(b)?.scale(*scale))
+            }
+            DecLinear::Rotate { w, blocks } => block_rotate_fast(x, blocks)?.matmul(w),
+            DecLinear::Merged { rw } => x.matmul(rw),
+        }
+    }
+}
+
+struct DecLayer {
+    attn_norm: Vec<f32>,
+    wq: DecLinear,
+    wk: DecLinear,
+    wv: DecLinear,
+    wo: DecLinear,
+    mlp_norm: Vec<f32>,
+    up: DecLinear,
+    down: DecLinear,
+}
+
+/// Per-sequence KV cache: one (seq_len, d_model) key and value plane
+/// per layer, filled left to right.
+pub struct KvCache {
+    /// Interleaved per layer: k then v, each seq_len * d_model.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn position(&self) -> usize {
+        self.len
+    }
+}
+
+/// A bundle + adapter state compiled for incremental decoding: token
+/// step cost is O(T) in cache length instead of the O(T²) full
+/// re-forward `logits_last` pays per generated token.
+pub struct DecodeModel {
+    dims: ModelDims,
+    tok_emb: Tensor,
+    pos_emb: Tensor,
+    final_norm: Vec<f32>,
+    lm_head: Tensor,
+    layers: Vec<DecLayer>,
+}
+
+impl RefBundle {
+    /// Resolve trainables + fixed inputs into a [`DecodeModel`] —
+    /// dequantization and adapter merging happen here, once.
+    pub fn decode_model(&self, trainables: &[&Value], fixed: &[&Value]) -> Result<DecodeModel> {
+        let params = self.assemble_params(trainables, fixed)?;
+        let norm = |name: &str| -> Result<Vec<f32>> { Ok(params.get(name)?.data.clone()) };
+        let linear = |name: &str| -> Result<DecLinear> { self.resolve_linear(&params, name) };
+        let mut layers = Vec::with_capacity(self.dims.n_layers);
+        for i in 0..self.dims.n_layers {
+            let pre = format!("layers.{i}");
+            layers.push(DecLayer {
+                attn_norm: norm(&format!("{pre}.attn.norm"))?,
+                wq: linear(&format!("{pre}.attn.wq"))?,
+                wk: linear(&format!("{pre}.attn.wk"))?,
+                wv: linear(&format!("{pre}.attn.wv"))?,
+                wo: linear(&format!("{pre}.attn.wo"))?,
+                mlp_norm: norm(&format!("{pre}.mlp.norm"))?,
+                up: linear(&format!("{pre}.mlp.up"))?,
+                down: linear(&format!("{pre}.mlp.down"))?,
+            });
+        }
+        Ok(DecodeModel {
+            dims: self.dims,
+            tok_emb: params.get("embed.tok")?.clone(),
+            pos_emb: params.get("embed.pos")?.clone(),
+            final_norm: norm("final_norm")?,
+            lm_head: params.get("lm_head")?.clone(),
+            layers,
+        })
+    }
+
+    fn resolve_linear(&self, params: &Params, name: &str) -> Result<DecLinear> {
+        let w = params.get(name)?.clone();
+        Ok(match self.method {
+            Method::Full | Method::None => DecLinear::Plain { w },
+            Method::Lora | Method::QLora => DecLinear::Lora {
+                a: params.get(&format!("{name}.lora_a"))?.clone(),
+                b: params.get(&format!("{name}.lora_b"))?.clone(),
+                scale: (self.dims.lora_alpha / self.dims.lora_r as f64) as f32,
+                w,
+            },
+            Method::OftV2 | Method::QOft => {
+                let packed = params.get(&format!("{name}.oft_q"))?;
+                let blocks = build_cnp_blocks(packed, self.dims.block_b, self.dims.neumann_k)?;
+                DecLinear::Rotate { w, blocks }
+            }
+            Method::OftMerged => {
+                let packed = params.get(&format!("{name}.oft_q"))?;
+                let blocks = build_cnp_blocks(packed, self.dims.block_b, self.dims.neumann_k)?;
+                let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
+                DecLinear::Merged { rw: rd.matmul(&w)? }
+            }
+        })
+    }
+}
+
+impl DecodeModel {
+    pub fn seq_len(&self) -> usize {
+        self.dims.seq_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.dims.vocab
+    }
+
+    /// Empty cache sized for one sequence.
+    pub fn new_cache(&self) -> KvCache {
+        let plane = self.dims.seq_len * self.dims.d_model;
+        KvCache {
+            k: (0..self.dims.n_layers).map(|_| vec![0f32; plane]).collect(),
+            v: (0..self.dims.n_layers).map(|_| vec![0f32; plane]).collect(),
+            len: 0,
+        }
+    }
+
+    /// Incremental forward: consume `token` at position `cache.len`
+    /// and return the next-token logits (V,). Only the new token's
+    /// activations are computed (and, for OFTv2/QOFT, rotated) —
+    /// attention reads keys/values from the per-sequence cache, so a
+    /// T-token greedy decode is O(T) forwards of one row instead of
+    /// the O(T²) whole-sequence re-forwards `logits_last` pays.
+    pub fn forward_incremental(&self, cache: &mut KvCache, token: i32) -> Result<Vec<f32>> {
+        let d = self.dims.d_model;
+        let t = self.dims.seq_len;
+        let h = self.dims.n_heads;
+        let hd = d / h;
+        let pos = cache.len;
+        ensure!(pos < t, "KV cache full: position {pos} of seq_len {t}");
+        ensure!(
+            token >= 0 && (token as usize) < self.dims.vocab,
+            "token id {token} out of vocab {}",
+            self.dims.vocab
+        );
+
+        let mut x = Tensor::zeros(&[1, d]);
+        {
+            let te = &self.tok_emb.data[token as usize * d..(token as usize + 1) * d];
+            let pe = &self.pos_emb.data[pos * d..(pos + 1) * d];
+            for j in 0..d {
+                x.data[j] = te[j] + pe[j];
+            }
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (xn1, _) = rmsnorm_fwd(&x, &layer.attn_norm);
+            let q = layer.wq.apply(&xn1)?;
+            let k = layer.wk.apply(&xn1)?;
+            let v = layer.wv.apply(&xn1)?;
+            cache.k[li][pos * d..(pos + 1) * d].copy_from_slice(&k.data);
+            cache.v[li][pos * d..(pos + 1) * d].copy_from_slice(&v.data);
+
+            // Single-query causal attention over the cache; loop order
+            // mirrors attention_fwd so results match bitwise.
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut o = Tensor::zeros(&[1, d]);
+            for hh in 0..h {
+                let qoff = hh * hd;
+                let mut row = vec![0f32; pos + 1];
+                let mut maxv = f32::NEG_INFINITY;
+                for (t2, rv) in row.iter_mut().enumerate() {
+                    let koff = t2 * d + hh * hd;
+                    let mut acc = 0f32;
+                    for c in 0..hd {
+                        acc += q.data[qoff + c] * cache.k[li][koff + c];
+                    }
+                    *rv = acc * scale;
+                    maxv = maxv.max(*rv);
+                }
+                let mut sum = 0f32;
+                for rv in &mut row {
+                    *rv = (*rv - maxv).exp();
+                    sum += *rv;
+                }
+                for (t2, rv) in row.iter().enumerate() {
+                    let a = rv / sum;
+                    let voff = t2 * d + hh * hd;
+                    for c in 0..hd {
+                        o.data[qoff + c] += a * cache.v[li][voff + c];
+                    }
+                }
+            }
+
+            let ywo = layer.wo.apply(&o)?;
+            let x_mid = x.add(&ywo)?;
+            let (xn2, _) = rmsnorm_fwd(&x_mid, &layer.mlp_norm);
+            let up_pre = layer.up.apply(&xn2)?;
+            let act = gelu_fwd(&up_pre);
+            let ydown = layer.down.apply(&act)?;
+            x = x_mid.add(&ydown)?;
+        }
+
+        cache.len = pos + 1;
+        let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
+        let logits = xf.matmul(&self.lm_head)?;
+        Ok(logits.data)
+    }
+}
+
 /// Name-keyed parameter map (trainables + frozen + dequantized bases).
 pub struct Params {
     pub map: BTreeMap<String, Tensor>,
@@ -1285,6 +1515,52 @@ mod tests {
         assert!((y.data[1] - 5.0).abs() < 1e-3);
         assert!(y.data[2].abs() < 1e-3);
         assert!((y.data[3] - 0.8412).abs() < 1e-3); // known value
+    }
+
+    #[test]
+    fn incremental_forward_matches_logits_last_exactly() {
+        // The KV-cached row-at-a-time forward must reproduce the padded
+        // whole-sequence forward's last-position logits exactly (same
+        // kernels, same per-row accumulation order).
+        for tag in ["tiny_oft_v2", "tiny_lora", "tiny_oft_merged"] {
+            let bu = bundle(tag);
+            let tr = random_values(&bu.trainable, 0.05, 21);
+            let fixed: Vec<Value> = bu
+                .frozen
+                .iter()
+                .map(|s| {
+                    let t = crate::coordinator::state::init_param(s, 3, None).unwrap();
+                    lit_f32(&s.shape, &t.data).unwrap()
+                })
+                .collect();
+            let tr_refs: Vec<&Value> = tr.iter().collect();
+            let fixed_refs: Vec<&Value> = fixed.iter().collect();
+
+            let model = bu.decode_model(&tr_refs, &fixed_refs).unwrap();
+            let mut cache = model.new_cache();
+            let toks = [1i32, 7, 3, 9, 2];
+            let mut inc = Vec::new();
+            for &tk in &toks {
+                inc = model.forward_incremental(&mut cache, tk).unwrap();
+            }
+            assert_eq!(cache.position(), toks.len());
+
+            let t = bu.dims.seq_len;
+            let mut padded: Vec<i32> = toks.to_vec();
+            padded.resize(t, 0);
+            let tokens = super::super::lit_i32(&[1, t], &padded).unwrap();
+            let cur = super::super::lit_scalar_i32(toks.len() as i32);
+            let mut inputs: Vec<&Value> = tr_refs.clone();
+            inputs.extend(fixed_refs.iter().copied());
+            inputs.push(&tokens);
+            inputs.push(&cur);
+            let out = bu.logits_last(&inputs).unwrap();
+            assert_eq!(
+                out[0].f32s().unwrap(),
+                inc.as_slice(),
+                "{tag}: incremental logits diverged from logits_last"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Multi-tenant adapter serving over one shared [`BaseModel`].
+//!
+//! The paper's input-centric design leaves the (quantized) base weights
+//! untouched, so one frozen base can serve many adapters at once — the
+//! same property BOFT/HOFT exploit. This module is that runtime: N
+//! named adapters (any mix of the 7 PEFT methods) attach to a single
+//! engine-resident base, requests enter a FIFO queue, and a continuous
+//! batching loop interleaves one KV-cached decode step per in-flight
+//! sequence per tick, admitting queued requests as slots free up.
+//!
+//! The loop is deterministic and single-threaded: scheduling policy is
+//! testable without timing races, and per-request / per-adapter
+//! latency + throughput metrics come out of the same code path the
+//! `serve` CLI and the serving bench use.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::manifest::Manifest;
+use crate::coordinator::state::{AdapterState, BaseModel};
+use crate::coordinator::Checkpoint;
+use crate::data::tokenizer::EOS;
+use crate::runtime::{Buffer, DecodeSession, Decoder, Engine, Value};
+use crate::util::argmax;
+use crate::util::timer::Timer;
+
+/// One decode request against a named adapter.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// A finished request with its generated tokens and timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub adapter: String,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Seconds spent waiting in the queue before admission.
+    pub queued_secs: f64,
+    /// Submit → first generated token.
+    pub ttft_secs: f64,
+    /// Submit → completion.
+    pub latency_secs: f64,
+}
+
+/// Aggregate counters for one adapter.
+#[derive(Clone, Debug, Default)]
+pub struct AdapterMetrics {
+    pub requests: u64,
+    pub tokens_out: u64,
+    pub sum_latency_secs: f64,
+    pub sum_ttft_secs: f64,
+    /// Seconds spent inside this adapter's decode steps.
+    pub decode_secs: f64,
+}
+
+impl AdapterMetrics {
+    pub fn mean_latency_secs(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_latency_secs / self.requests as f64
+        }
+    }
+
+    pub fn mean_ttft_secs(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_ttft_secs / self.requests as f64
+        }
+    }
+
+    /// Generated tokens per second of this adapter's decode time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_secs <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.decode_secs
+        }
+    }
+}
+
+/// Server-wide counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub per_adapter: BTreeMap<String, AdapterMetrics>,
+    pub total_requests: u64,
+    pub total_tokens: u64,
+    /// Wall-clock seconds inside `run_until_idle`.
+    pub wall_secs: f64,
+    /// Highest number of simultaneously active sequences observed.
+    pub peak_active: usize,
+}
+
+impl ServeMetrics {
+    /// Aggregate generated-token throughput over the serving wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.wall_secs
+        }
+    }
+}
+
+struct Adapter {
+    manifest: Manifest,
+    decoder: Decoder,
+}
+
+struct Active {
+    req: Request,
+    sess: DecodeSession,
+    seq_len: usize,
+    total_len: usize,
+    generated: Vec<i32>,
+    last_logits: Vec<f32>,
+    queued_secs: f64,
+    ttft_secs: Option<f64>,
+    submitted: Timer,
+}
+
+/// A batched multi-tenant decode server over one shared base.
+pub struct Server<'e> {
+    engine: &'e Engine,
+    base: Arc<BaseModel>,
+    adapters: BTreeMap<String, Adapter>,
+    queue: VecDeque<(Request, Timer)>,
+    active: Vec<Active>,
+    /// Maximum simultaneously active sequences.
+    pub max_batch: usize,
+    next_id: u64,
+    metrics: ServeMetrics,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(engine: &'e Engine, base: Arc<BaseModel>, max_batch: usize) -> Server<'e> {
+        Server {
+            engine,
+            base,
+            adapters: BTreeMap::new(),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_batch: max_batch.max(1),
+            next_id: 0,
+            metrics: ServeMetrics::default(),
+        }
+    }
+
+    pub fn base(&self) -> Arc<BaseModel> {
+        Arc::clone(&self.base)
+    }
+
+    /// Attach a named adapter with explicit trainable values (e.g. a
+    /// finetuned trainer's weights). Fixed inputs come from the shared
+    /// base — no base re-upload.
+    pub fn add_adapter(&mut self, name: &str, manifest: Manifest, trainables: &[Value]) -> Result<()> {
+        ensure!(
+            !self.adapters.contains_key(name),
+            "adapter '{name}' already registered"
+        );
+        ensure!(
+            trainables.len() == manifest.trainable.len(),
+            "adapter '{name}': {} trainable values for {} manifest specs",
+            trainables.len(),
+            manifest.trainable.len()
+        );
+        let fixed = self.base.fixed_for(self.engine, &manifest)?;
+        let tr: Vec<&Value> = trainables.iter().collect();
+        let fixed_refs: Vec<&Buffer> = fixed.iter().map(|a| a.as_ref()).collect();
+        let decoder = self.engine.load_decoder(&manifest, &tr, &fixed_refs)?;
+        self.metrics
+            .per_adapter
+            .insert(name.to_string(), AdapterMetrics::default());
+        self.adapters.insert(
+            name.to_string(),
+            Adapter { manifest, decoder },
+        );
+        Ok(())
+    }
+
+    /// Attach a named adapter initialized from its bundle's init specs
+    /// (checkpoint values win) — the serving analogue of
+    /// `Trainer::with_checkpoint`. A checkpoint whose base weights
+    /// disagree with the shared base is rejected rather than silently
+    /// decoding against the wrong frozen weights.
+    pub fn add_adapter_init(
+        &mut self,
+        name: &str,
+        manifest: Manifest,
+        seed: u64,
+        ckpt: Option<&Checkpoint>,
+    ) -> Result<()> {
+        if let Some(c) = ckpt {
+            self.base.ensure_checkpoint_matches(&manifest, c)?;
+        }
+        let state = AdapterState::init(&manifest, seed, ckpt)?;
+        self.add_adapter(name, manifest, &state.tr)
+    }
+
+    pub fn adapter_names(&self) -> Vec<String> {
+        self.adapters.keys().cloned().collect()
+    }
+
+    /// Vocab of a registered adapter (for prompt construction).
+    pub fn vocab_of(&self, adapter: &str) -> Result<usize> {
+        Ok(self
+            .adapters
+            .get(adapter)
+            .with_context(|| format!("unknown adapter '{adapter}'"))?
+            .manifest
+            .model
+            .vocab)
+    }
+
+    /// Enqueue a request (FIFO); returns its id.
+    pub fn submit(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<u64> {
+        ensure!(
+            self.adapters.contains_key(adapter),
+            "unknown adapter '{adapter}' (registered: {})",
+            self.adapter_names().join(", ")
+        );
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            Request {
+                id,
+                adapter: adapter.to_string(),
+                prompt,
+                max_new,
+            },
+            Timer::start(),
+        ));
+        Ok(id)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Admit queued requests into free batch slots (FIFO), prefilling
+    /// each prompt through a fresh KV session. Requests that can emit
+    /// nothing (`max_new == 0`, or a prompt already filling seq_len)
+    /// complete immediately with no tokens — the same empty result
+    /// `Trainer::decode_greedy` returns for them.
+    fn admit(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        while self.active.len() < self.max_batch {
+            let Some((req, submitted)) = self.queue.pop_front() else {
+                break;
+            };
+            let queued_secs = submitted.secs();
+            let adapter = self
+                .adapters
+                .get(&req.adapter)
+                .with_context(|| format!("unknown adapter '{}'", req.adapter))?;
+            let seq_len = adapter.decoder.max_positions();
+            let mut prompt = req.prompt.clone();
+            prompt.truncate(seq_len);
+            if req.max_new == 0 || prompt.len() >= seq_len {
+                let latency = submitted.secs();
+                let am = self
+                    .metrics
+                    .per_adapter
+                    .get_mut(&req.adapter)
+                    .expect("metrics registered with adapter");
+                am.requests += 1;
+                am.sum_latency_secs += latency;
+                am.sum_ttft_secs += latency;
+                self.metrics.total_requests += 1;
+                done.push(Response {
+                    id: req.id,
+                    adapter: req.adapter,
+                    prompt_len: prompt.len(),
+                    tokens: Vec::new(),
+                    queued_secs,
+                    ttft_secs: latency,
+                    latency_secs: latency,
+                });
+                continue;
+            }
+            let mut sess = adapter.decoder.begin()?;
+            let t0 = Timer::start();
+            let mut last_logits = Vec::new();
+            for &id in &prompt {
+                last_logits = sess.step(id)?;
+            }
+            let prefill_secs = t0.secs();
+            self.metrics
+                .per_adapter
+                .get_mut(&req.adapter)
+                .expect("metrics registered with adapter")
+                .decode_secs += prefill_secs;
+            let total_len = prompt.len();
+            self.active.push(Active {
+                req,
+                sess,
+                seq_len,
+                total_len,
+                generated: Vec::new(),
+                last_logits,
+                queued_secs,
+                ttft_secs: None,
+                submitted,
+            });
+        }
+        self.metrics.peak_active = self.metrics.peak_active.max(self.active.len());
+        Ok(done)
+    }
+
+    /// One scheduler tick: every active sequence emits one token (and
+    /// steps its KV cache unless it just finished). Returns responses
+    /// for sequences that completed this tick.
+    fn tick(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let adapter_name = a.req.adapter.clone();
+            let next = argmax(&a.last_logits) as i32;
+            a.generated.push(next);
+            a.total_len += 1;
+            if a.ttft_secs.is_none() {
+                a.ttft_secs = Some(a.submitted.secs());
+            }
+            let finished = next == EOS
+                || a.generated.len() >= a.req.max_new
+                || a.total_len >= a.seq_len;
+            let step_secs = if finished {
+                0.0
+            } else {
+                let t0 = Timer::start();
+                a.last_logits = a.sess.step(next)?;
+                t0.secs()
+            };
+            self.metrics.total_tokens += 1;
+            let am = self
+                .metrics
+                .per_adapter
+                .get_mut(&adapter_name)
+                .expect("metrics registered with adapter");
+            am.tokens_out += 1;
+            am.decode_secs += step_secs;
+            if finished {
+                let a = self.active.remove(i);
+                let latency = a.submitted.secs();
+                let am = self
+                    .metrics
+                    .per_adapter
+                    .get_mut(&adapter_name)
+                    .expect("metrics registered with adapter");
+                am.requests += 1;
+                am.sum_latency_secs += latency;
+                am.sum_ttft_secs += a.ttft_secs.unwrap_or(latency);
+                self.metrics.total_requests += 1;
+                done.push(Response {
+                    id: a.req.id,
+                    adapter: a.req.adapter,
+                    prompt_len: a.req.prompt.len().min(a.seq_len),
+                    tokens: a.generated,
+                    queued_secs: a.queued_secs,
+                    ttft_secs: a.ttft_secs.unwrap_or(latency),
+                    latency_secs: latency,
+                });
+                continue; // element removed; same index is the next seq
+            }
+            i += 1;
+        }
+        Ok(done)
+    }
+
+    /// Drain queue + in-flight work to completion; returns responses in
+    /// completion order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        if self.adapters.is_empty() {
+            bail!("no adapters registered");
+        }
+        let wall = Timer::start();
+        let mut responses = Vec::new();
+        loop {
+            responses.extend(self.admit()?);
+            if self.active.is_empty() {
+                break;
+            }
+            responses.extend(self.tick()?);
+        }
+        self.metrics.wall_secs += wall.secs();
+        Ok(responses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_rates() {
+        let mut m = AdapterMetrics::default();
+        assert_eq!(m.mean_latency_secs(), 0.0);
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        m.requests = 2;
+        m.tokens_out = 20;
+        m.sum_latency_secs = 1.0;
+        m.decode_secs = 0.5;
+        assert_eq!(m.mean_latency_secs(), 0.5);
+        assert_eq!(m.tokens_per_sec(), 40.0);
+    }
+
+    #[test]
+    fn submit_requires_known_adapter() {
+        let engine = Engine::reference();
+        let base = BaseModel::for_preset(&engine, "tiny", 7, None).unwrap();
+        let mut srv = Server::new(&engine, base, 4);
+        assert!(srv.submit("ghost", vec![1], 4).is_err());
+        assert!(srv.run_until_idle().is_err(), "no adapters registered");
+    }
+
+    // End-to-end serving tests (base sharing, KV-vs-reforward equality,
+    // continuous batching) live in rust/tests/serving.rs.
+}

@@ -43,6 +43,19 @@ pub fn human_clock(secs: f64) -> String {
     format!("{:02}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
 }
 
+/// Index of the largest element; ties resolve to the first (the greedy
+/// decode rule — every decode path must share it or emitted tokens
+/// silently diverge between paths).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,6 +66,14 @@ mod tests {
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
         assert_eq!(human_bytes(80 * 1024 * 1024 * 1024), "80.00 GiB");
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        // ties resolve to the first
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
     }
 
     #[test]

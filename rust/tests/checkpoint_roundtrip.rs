@@ -1,0 +1,109 @@
+//! Full-state checkpoint roundtrip: save → load must restore the
+//! trainables AND Adam moments bitwise and reproduce the next training
+//! step exactly, for every PEFT method of the paper on the tiny preset.
+
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{Manifest, Trainer};
+use oftv2::runtime::Engine;
+
+fn cfg(tag: &str, steps: usize) -> RunCfg {
+    let mut c = RunCfg::default();
+    c.tag = tag.into();
+    c.steps = steps;
+    c.log_every = 0;
+    c.data.task = "math".into();
+    c.data.documents = 200;
+    c.optim.lr = 2e-3;
+    c
+}
+
+/// All 7 methods (quantized ones on the NF4 backend).
+const TAGS: [&str; 7] = [
+    "tiny_full",
+    "tiny_none",
+    "tiny_lora",
+    "tiny_oft_merged",
+    "tiny_oft_v2",
+    "tiny_qlora_nf4",
+    "tiny_qoft_nf4",
+];
+
+#[test]
+fn full_checkpoint_roundtrip_is_bitwise_for_every_method() {
+    let e = Engine::cpu().unwrap();
+    for tag in TAGS {
+        let steps = 4;
+        let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, steps)).unwrap();
+        tr.train().unwrap();
+
+        // Save the FULL state (weights + Adam moments + step) to disk.
+        let path = std::env::temp_dir().join(format!(
+            "oft_roundtrip_{}_{}.ckpt",
+            std::process::id(),
+            tag
+        ));
+        let ck = tr.checkpoint_full().unwrap();
+        oftv2::coordinator::checkpoint::save(&path, &ck).unwrap();
+        let loaded = oftv2::coordinator::checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ck, "{tag}: checkpoint file roundtrip changed tensors");
+
+        // Restore into a fresh trainer.
+        let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+        let mut tr2 = Trainer::with_checkpoint(&e, man, cfg(tag, steps), Some(&loaded)).unwrap();
+
+        // Trainables and both Adam moments must be bitwise identical.
+        assert_eq!(tr2.step_count(), steps, "{tag}: step counter not restored");
+        let (w1, w2) = (tr.trainable_tensors().unwrap(), tr2.trainable_tensors().unwrap());
+        assert_eq!(w1.len(), w2.len());
+        for ((n1, t1), (n2, t2)) in w1.iter().zip(&w2) {
+            assert_eq!(n1, n2);
+            assert!(
+                bitwise_eq(&t1.data, &t2.data),
+                "{tag}: trainable '{n1}' not bitwise after restore"
+            );
+        }
+        let (m1, m2) = (tr.adam_moments().unwrap(), tr2.adam_moments().unwrap());
+        for ((n1, ma, va), (n2, mb, vb)) in m1.iter().zip(&m2) {
+            assert_eq!(n1, n2);
+            assert!(bitwise_eq(&ma.data, &mb.data), "{tag}: adam m '{n1}' differs");
+            assert!(bitwise_eq(&va.data, &vb.data), "{tag}: adam v '{n1}' differs");
+        }
+
+        // The SAME next batch must produce the identical next-step loss.
+        let batch = tr.loader.next_batch();
+        let loss_a = tr.train_on(&batch).unwrap();
+        let loss_b = tr2.train_on(&batch).unwrap();
+        assert!(
+            loss_a.to_bits() == loss_b.to_bits(),
+            "{tag}: next-step loss diverged after restore ({loss_a} vs {loss_b})"
+        );
+
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn weights_only_checkpoint_still_resets_optimizer() {
+    // The init-style checkpoint (no __adam_* entries) must keep the old
+    // semantics: weights restore, moments and step start fresh.
+    let e = Engine::cpu().unwrap();
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg("tiny_oft_v2", 4)).unwrap();
+    tr.train().unwrap();
+    let ck = tr.checkpoint().unwrap();
+    assert!(ck.keys().all(|k| !k.starts_with("__")));
+
+    let man = Manifest::load_or_builtin(artifacts_root().join("tiny_oft_v2")).unwrap();
+    let tr2 = Trainer::with_checkpoint(&e, man, cfg("tiny_oft_v2", 4), Some(&ck)).unwrap();
+    assert_eq!(tr2.step_count(), 0);
+    for (name, m, v) in tr2.adam_moments().unwrap() {
+        assert!(
+            m.data.iter().all(|&x| x == 0.0) && v.data.iter().all(|&x| x == 0.0),
+            "moments of '{name}' should start at zero from a weights-only checkpoint"
+        );
+    }
+}
+
+fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}

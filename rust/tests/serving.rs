@@ -1,0 +1,221 @@
+//! Serving integration: the BaseModel/AdapterState split, KV-cached
+//! decode correctness against the full re-forward oracle, and the
+//! continuous-batching serve loop — all on the reference engine with
+//! builtin bundles.
+
+use std::sync::Arc;
+
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{BaseModel, Manifest, Trainer};
+use oftv2::runtime::Engine;
+use oftv2::serve::Server;
+
+fn cfg(tag: &str, steps: usize) -> RunCfg {
+    let mut c = RunCfg::default();
+    c.tag = tag.into();
+    c.steps = steps;
+    c.log_every = 0;
+    c.data.task = "math".into();
+    c.data.documents = 200;
+    c.optim.lr = 3e-3;
+    c
+}
+
+fn man(tag: &str) -> Manifest {
+    Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap()
+}
+
+#[test]
+fn base_buffers_upload_once_across_adapters() {
+    let e = Engine::reference();
+    let base = BaseModel::for_preset(&e, "tiny", 7, None).unwrap();
+    let after_base = e.upload_count();
+    assert_eq!(
+        after_base as usize,
+        base.n_buffers(),
+        "base construction uploads each base parameter exactly once"
+    );
+
+    let mut srv = Server::new(&e, Arc::clone(&base), 4);
+    // Full-precision adapter: every fixed input is a shared base buffer.
+    srv.add_adapter_init("oft_v2", man("tiny_oft_v2"), 7, None).unwrap();
+    assert_eq!(
+        e.upload_count(),
+        after_base,
+        "attaching a full-precision adapter must not re-upload the base"
+    );
+
+    // Quantized adapter: NF4 packs are built and uploaded once...
+    srv.add_adapter_init("qoft", man("tiny_qoft_nf4"), 7, None).unwrap();
+    let after_qoft = e.upload_count();
+    let nf4_packs = man("tiny_qoft_nf4").quantized.len() as u64;
+    assert_eq!(
+        after_qoft,
+        after_base + nf4_packs,
+        "first NF4 adapter uploads each pack exactly once"
+    );
+
+    // ...and every further NF4 adapter reuses them.
+    srv.add_adapter_init("qlora", man("tiny_qlora_nf4"), 7, None).unwrap();
+    assert_eq!(
+        e.upload_count(),
+        after_qoft,
+        "second NF4 adapter must reuse the resident packs"
+    );
+
+    // Serving decodes through shared buffers: zero further uploads.
+    for (i, name) in ["oft_v2", "qoft", "qlora", "oft_v2"].iter().enumerate() {
+        srv.submit(name, vec![1, 5 + i as i32], 6).unwrap();
+    }
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 4);
+    assert_eq!(
+        e.upload_count(),
+        after_qoft,
+        "decoding must run entirely over resident buffers"
+    );
+}
+
+#[test]
+fn kv_decode_matches_reforward_token_for_token() {
+    // The KV-cached incremental decoder must emit exactly the ids the
+    // old padded full re-forward emitted, for every adapter family
+    // (plain / LoRA / input-centric OFT / merged OFT / quantized).
+    let e = Engine::cpu().unwrap();
+    for tag in [
+        "tiny_full",
+        "tiny_lora",
+        "tiny_oft_merged",
+        "tiny_oft_v2",
+        "tiny_qoft_nf4",
+        "tiny_qlora_nf4",
+    ] {
+        let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, 6)).unwrap();
+        tr.train().unwrap(); // non-trivial adapter weights
+        for prompt in [vec![1, 10, 20], vec![2], vec![1, 3, 5, 7, 9, 11]] {
+            let old = tr.decode_greedy_reforward(&prompt, 16).unwrap();
+            let new = tr.decode_greedy(&prompt, 16).unwrap();
+            assert_eq!(
+                old, new,
+                "{tag}: KV decode diverged from re-forward on prompt {prompt:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kv_decode_fills_to_sequence_end() {
+    // Generation bounded by seq_len: both paths stop at the same place.
+    let e = Engine::cpu().unwrap();
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg("tiny_oft_v2", 3)).unwrap();
+    tr.train().unwrap();
+    let t = tr.manifest.model.seq_len;
+    let prompt: Vec<i32> = (0..(t - 3) as i32).map(|i| (i % 50) + 1).collect();
+    let old = tr.decode_greedy_reforward(&prompt, 64).unwrap();
+    let new = tr.decode_greedy(&prompt, 64).unwrap();
+    assert_eq!(old, new);
+    assert!(new.len() <= 3, "at most 3 positions remain before seq_len");
+}
+
+#[test]
+fn serve_batches_across_adapters_and_reports_metrics() {
+    let e = Engine::reference();
+    let base = BaseModel::for_preset(&e, "tiny", 11, None).unwrap();
+    let mut srv = Server::new(&e, base, 2);
+    srv.add_adapter_init("a", man("tiny_oft_v2"), 11, None).unwrap();
+    srv.add_adapter_init("b", man("tiny_qoft_nf4"), 11, None).unwrap();
+
+    let n = 7usize;
+    let mut ids = Vec::new();
+    for r in 0..n {
+        let name = if r % 2 == 0 { "a" } else { "b" };
+        ids.push(srv.submit(name, vec![1, (r + 2) as i32], 5).unwrap());
+    }
+    assert_eq!(srv.queued(), n);
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), n);
+    assert_eq!(srv.queued(), 0);
+    assert_eq!(srv.active(), 0);
+
+    // every submitted id came back exactly once, tokens are in-vocab
+    let mut seen: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, ids);
+    let vocab = srv.vocab_of("a").unwrap() as i32;
+    for r in &responses {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 5);
+        assert!(r.tokens.iter().all(|&t| t >= 0 && t < vocab));
+        assert!(r.latency_secs >= r.ttft_secs && r.ttft_secs >= 0.0);
+    }
+
+    let m = srv.metrics();
+    assert_eq!(m.total_requests, n as u64);
+    assert_eq!(m.per_adapter["a"].requests, 4);
+    assert_eq!(m.per_adapter["b"].requests, 3);
+    assert_eq!(
+        m.total_tokens,
+        responses.iter().map(|r| r.tokens.len() as u64).sum::<u64>()
+    );
+    assert_eq!(m.peak_active, 2, "continuous batching should fill max_batch");
+    assert!(m.wall_secs > 0.0);
+    assert!(m.tokens_per_sec() > 0.0);
+
+    // zero-capacity requests (max_new == 0) complete immediately with
+    // no tokens — the same empty result decode_greedy returns.
+    let id0 = srv.submit("a", vec![1, 2], 0).unwrap();
+    let r0 = srv.run_until_idle().unwrap();
+    assert_eq!(r0.len(), 1);
+    assert_eq!(r0[0].id, id0);
+    assert!(r0[0].tokens.is_empty());
+}
+
+#[test]
+fn serve_matches_solo_decode_over_shared_base() {
+    // Batched multi-tenant scheduling must not change what any single
+    // request decodes: same base, same adapter init, same prompt ->
+    // token-for-token the ids a lone Trainer attached to the same
+    // BaseModel produces. Also exercises full-precision + quantized
+    // adapters sharing one base (the acceptance scenario).
+    let e = Engine::reference();
+    let seed = 42u64; // RunCfg::default().seed, so solo trainers agree
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+
+    let mut srv = Server::new(&e, Arc::clone(&base), 3);
+    srv.add_adapter_init("v2", man("tiny_oft_v2"), seed, None).unwrap();
+    srv.add_adapter_init("qoft", man("tiny_qoft_nf4"), seed, None).unwrap();
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4], vec![1, 30], vec![2, 2, 2], vec![1, 9, 4]];
+    for p in &prompts {
+        srv.submit("v2", p.clone(), 8).unwrap();
+        srv.submit("qoft", p.clone(), 8).unwrap();
+    }
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 2 * prompts.len());
+
+    // Solo decoders attached to the SAME shared base.
+    let mut solo_v2 = Trainer::with_base(
+        &e,
+        man("tiny_oft_v2"),
+        cfg("tiny_oft_v2", 0),
+        None,
+        Arc::clone(&base),
+    )
+    .unwrap();
+    let mut solo_q = Trainer::with_base(
+        &e,
+        man("tiny_qoft_nf4"),
+        cfg("tiny_qoft_nf4", 0),
+        None,
+        Arc::clone(&base),
+    )
+    .unwrap();
+    // Request ids are submit order: v2 even, qoft odd.
+    for (i, p) in prompts.iter().enumerate() {
+        let v2 = responses.iter().find(|r| r.id == (2 * i) as u64).unwrap();
+        let q = responses.iter().find(|r| r.id == (2 * i + 1) as u64).unwrap();
+        assert_eq!(v2.adapter, "v2");
+        assert_eq!(q.adapter, "qoft");
+        assert_eq!(v2.tokens, solo_v2.decode_greedy(p, 8).unwrap());
+        assert_eq!(q.tokens, solo_q.decode_greedy(p, 8).unwrap());
+    }
+}
