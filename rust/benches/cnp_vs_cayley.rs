@@ -64,7 +64,7 @@ fn main() -> Result<()> {
     // ---- (b) error vs k --------------------------------------------------
     let b = 32;
     let p = peft::packed_dim(b);
-    let mut rng = Rng::new(7);
+    let mut rng = Rng::new(oftv2::bench::bench_seed());
     let packed: Vec<f32> = rng.normal_vec(32 * p, 0.02);
     let exact0 = peft::cayley_exact(&packed[..p], b)?;
     let mut rows = Vec::new();

@@ -9,27 +9,41 @@
 //! within ~2x of LoRA; memory ratio OFT/OFTv2 ≈ 3x.
 
 use oftv2::bench::{
-    fmt_ms, fmt_ratio, print_table, quick_mode, write_bench_json, BenchRecord, Report,
+    bench_seed, fmt_ms, fmt_ratio, print_table, quick_mode, write_bench_json, BenchRecord, Report,
 };
 use oftv2::config::RunCfg;
 use oftv2::coordinator::Trainer;
 use oftv2::json::Json;
 use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
-use oftv2::runtime::Engine;
+use oftv2::runtime::{CheckpointPolicy, Engine};
 use oftv2::{artifacts_root, Result};
 
-/// Post-warmup per-step wall times for one bundle.
-fn step_samples(engine: &Engine, tag: &str, steps: usize) -> Result<Vec<f64>> {
+/// Post-warmup per-step wall times for one bundle under a checkpoint
+/// policy.
+fn step_samples_ckpt(
+    engine: &Engine,
+    tag: &str,
+    steps: usize,
+    policy: CheckpointPolicy,
+) -> Result<Vec<f64>> {
     let mut cfg = RunCfg::default();
     cfg.tag = tag.into();
     cfg.steps = steps;
     cfg.log_every = 0;
+    cfg.seed = bench_seed();
+    cfg.data.seed = bench_seed();
     cfg.data.task = "wiki".into();
     cfg.data.documents = 300;
+    cfg.train.grad_checkpoint = policy;
     let mut tr = Trainer::new(engine, &artifacts_root(), cfg)?;
     let hist = tr.train()?;
     Ok(hist.step_secs(steps / 5))
+}
+
+/// Post-warmup per-step wall times for one bundle.
+fn step_samples(engine: &Engine, tag: &str, steps: usize) -> Result<Vec<f64>> {
+    step_samples_ckpt(engine, tag, steps, CheckpointPolicy::None)
 }
 
 fn main() -> Result<()> {
@@ -119,6 +133,53 @@ fn main() -> Result<()> {
         );
     }
     assert!(m_oft / m_v2 > 2.0 && m_oft / m_v2 < 4.5);
+
+    // -- the checkpoint time/memory trade-off curve ----------------------
+    // Measured step time (fig1 OFTv2 bundle) under each CheckpointPolicy
+    // against the analytic activation memory at the paper's 7B scale:
+    // recompute buys activation memory, and both axes are now real
+    // numbers rather than a boolean.
+    let mut ck_records: Vec<BenchRecord> = Vec::new();
+    let mut ck_rows = Vec::new();
+    let mut ck_base = 0.0f64;
+    for policy in [
+        CheckpointPolicy::None,
+        CheckpointPolicy::EveryK(1),
+        CheckpointPolicy::EveryK(2),
+    ] {
+        let samples = step_samples_ckpt(&engine, "fig1_oft_v2", steps, policy)?;
+        let mem_shape = TrainShape {
+            checkpoint: policy,
+            ..TrainShape::default()
+        };
+        let gib = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, mem_shape);
+        let rec = BenchRecord::from_samples(format!("ckpt_{}", policy.label()), &samples)
+            .with("checkpoint", Json::str(policy.label()))
+            .with("memory_gib_7b", Json::num(gib));
+        if policy == CheckpointPolicy::None {
+            ck_base = rec.mean;
+        }
+        ck_rows.push(vec![
+            policy.label(),
+            fmt_ms(rec.mean),
+            fmt_ratio(rec.mean / ck_base.max(1e-12)),
+            format!("{gib:.1}"),
+        ]);
+        report.add_kv(vec![
+            ("kind", Json::str("ckpt_tradeoff")),
+            ("policy", Json::str(policy.label())),
+            ("secs", Json::num(rec.mean)),
+            ("gib_7b", Json::num(gib)),
+        ]);
+        ck_records.push(rec);
+    }
+    print_table(
+        "Gradient-checkpoint trade-off (fig1_oft_v2 step time vs 7B activation memory)",
+        &["policy", "ms/step", "vs full tape", "GiB @7B"],
+        &ck_rows,
+    );
+    records.extend(ck_records);
+
     let path = report.save()?;
     let bench_path = write_bench_json("fig1_time_memory", "secs", &records)?;
     let mem_path = write_bench_json("fig1_memory", "gib", &mem_records)?;

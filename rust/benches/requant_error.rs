@@ -19,12 +19,16 @@ fn main() -> Result<()> {
     let mut report = Report::new("requant_error");
     let (din, dout) = (512, 512);
     let n_seeds = 5;
+    let base_seed = oftv2::bench::bench_seed();
 
     let mut rows = Vec::new();
     for strength in [0.01f32, 0.02, 0.05, 0.1] {
         let mut acc = [0.0f64; 6]; // [lora_rms, oft_rms, lora_infl, oft_infl, lora_dinf, oft_dinf]
         for seed in 0..n_seeds {
-            let mut rng = Rng::new(1000 + seed);
+            // Offset so the unset-env default (base_seed = 7) collapses
+            // to the pre-bench_seed literals and BENCH_*.json stays
+            // comparable across the seed-plumbing change.
+            let mut rng = Rng::new(993 + base_seed + seed);
             let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
             let lora = LoraAdapter::random(din, dout, 16, 32.0, strength, &mut rng);
             let oft = OftAdapter::random(din, 32, 6, strength, &mut rng);
@@ -96,8 +100,9 @@ fn main() -> Result<()> {
         &rows,
     );
 
-    // unmatched (raw) reports too, for the record
-    let mut rng = Rng::new(77);
+    // unmatched (raw) reports too, for the record (70 + default 7 = the
+    // pre-bench_seed literal 77)
+    let mut rng = Rng::new(70 + base_seed);
     let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
     let lora = LoraAdapter::random(din, dout, 16, 32.0, 0.05, &mut rng);
     let oft = OftAdapter::random(din, 32, 6, 0.05, &mut rng);

@@ -176,7 +176,7 @@ fn main() -> Result<()> {
 
     // ---- 2. multi-tenant serving over one shared base ------------------
     let preset = if quick { "small" } else { "bench" };
-    let seed = 7u64;
+    let seed = oftv2::bench::bench_seed();
     let base = BaseModel::for_preset(&engine, preset, seed, None)?;
     let uploads_before = engine.upload_count();
     let mut server = Server::new(&engine, base, 4);

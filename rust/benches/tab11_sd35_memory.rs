@@ -10,6 +10,7 @@ use oftv2::bench::{print_table, Report};
 use oftv2::json::Json;
 use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
+use oftv2::runtime::CheckpointPolicy;
 use oftv2::Result;
 
 fn main() -> Result<()> {
@@ -17,7 +18,7 @@ fn main() -> Result<()> {
         batch: 1,  // Dreambooth default
         seq: 4096, // 128x128 latent patches + text tokens
         act_bytes: 2.0,
-        grad_checkpoint: false, // Dreambooth scripts keep activations
+        checkpoint: CheckpointPolicy::None, // Dreambooth scripts keep activations
     };
     let mut report = Report::new("tab11_sd35_memory");
 

@@ -10,7 +10,7 @@
 //! Shape targets: adapters beat the frozen base; OFTv2 matches or
 //! beats LoRA at roughly half the trainable parameters.
 
-use oftv2::bench::{print_table, quick_mode, Report};
+use oftv2::bench::{bench_seed, print_table, quick_mode, Report};
 use oftv2::coordinator::protocol::{finetune_trainer, pretrain, Phase};
 use oftv2::data::corpus::TaskKind;
 use oftv2::json::Json;
@@ -37,13 +37,13 @@ fn main() -> Result<()> {
             steps: if quick { pre_steps / 4 } else { pre_steps },
             documents: 1200,
             lr: 3e-3,
-            seed: 7,
+            seed: bench_seed(),
         };
         let fin = Phase {
             steps: if quick { fin_steps / 4 } else { fin_steps },
             documents: 1200,
             lr: 2e-3,
-            seed: 11,
+            seed: bench_seed() + 4,
         };
         let (ckpt, fin_loader) = pretrain(&engine, &artifacts_root(), preset, TaskKind::Summarize, &pre)?;
 

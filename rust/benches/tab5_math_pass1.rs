@@ -10,7 +10,7 @@
 //! Shape targets: finetuning beats the frozen baseline; QOFT >= QLoRA
 //! at roughly half the trainable parameters.
 
-use oftv2::bench::{print_table, quick_mode, Report};
+use oftv2::bench::{bench_seed, print_table, quick_mode, Report};
 use oftv2::coordinator::protocol::{finetune_trainer, pretrain, Phase};
 use oftv2::data::corpus::TaskKind;
 use oftv2::json::Json;
@@ -36,13 +36,13 @@ fn main() -> Result<()> {
             steps: if quick { pre_steps / 4 } else { pre_steps },
             documents: 2000,
             lr: 3e-3,
-            seed: 7,
+            seed: bench_seed(),
         };
         let fin = Phase {
             steps: if quick { fin_steps / 4 } else { fin_steps },
             documents: 2000,
             lr: 2e-3,
-            seed: 11,
+            seed: bench_seed() + 4,
         };
         let (ckpt, fin_loader) = pretrain(&engine, &artifacts_root(), preset, TaskKind::Math, &pre)?;
 

@@ -8,6 +8,7 @@
 
 use oftv2::memmodel::{finetune_memory, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
+use oftv2::runtime::CheckpointPolicy;
 use oftv2::Result;
 
 const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
@@ -17,7 +18,7 @@ fn main() -> Result<()> {
         batch: 1,
         seq: 2048,
         act_bytes: 2.0,
-        grad_checkpoint: true,
+        checkpoint: CheckpointPolicy::EveryK(1),
     };
     let gpus = [("A100-40G", 40.0), ("H100-80G", 80.0), ("H100-NVL", 94.0)];
 

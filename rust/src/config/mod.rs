@@ -25,6 +25,8 @@ pub mod toml;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::{CheckpointPolicy, TrainOpts};
+
 pub use self::toml::TomlDoc;
 
 /// Learning-rate schedule shape.
@@ -93,6 +95,36 @@ impl Default for DataCfg {
     }
 }
 
+/// Training-execution settings: the gradient-checkpoint policy and the
+/// data-parallel worker count (`--grad-checkpoint` / `--workers`).
+/// Defaults reproduce the classic single-worker, full-tape step; every
+/// combination yields a bitwise-identical loss curve on the reference
+/// engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrainCfg {
+    pub grad_checkpoint: CheckpointPolicy,
+    pub workers: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            grad_checkpoint: CheckpointPolicy::None,
+            workers: 1,
+        }
+    }
+}
+
+impl TrainCfg {
+    /// The runtime-level options this config selects.
+    pub fn to_opts(self) -> TrainOpts {
+        TrainOpts {
+            checkpoint: self.grad_checkpoint,
+            workers: self.workers.max(1),
+        }
+    }
+}
+
 /// A full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunCfg {
@@ -105,6 +137,7 @@ pub struct RunCfg {
     pub out_dir: Option<String>,
     pub optim: OptimCfg,
     pub data: DataCfg,
+    pub train: TrainCfg,
 }
 
 impl Default for RunCfg {
@@ -119,6 +152,7 @@ impl Default for RunCfg {
             out_dir: None,
             optim: OptimCfg::default(),
             data: DataCfg::default(),
+            train: TrainCfg::default(),
         }
     }
 }
@@ -166,6 +200,8 @@ impl RunCfg {
             "data.task" => self.data.task = value.into(),
             "data.documents" => self.data.documents = value.parse()?,
             "data.seed" => self.data.seed = value.parse()?,
+            "train.grad_checkpoint" => self.train.grad_checkpoint = CheckpointPolicy::parse(value)?,
+            "train.workers" => self.train.workers = value.parse()?,
             _ => bail!("unknown config key '{path}'"),
         }
         Ok(())
@@ -190,6 +226,24 @@ mod tests {
         cfg.set("optim.lr", "5e-5").unwrap();
         assert_eq!(cfg.optim.lr, 5e-5);
         assert!(cfg.set("nope.x", "1").is_err());
+    }
+
+    #[test]
+    fn train_cfg_keys_and_opts() {
+        let mut cfg = RunCfg::default();
+        assert_eq!(cfg.train, TrainCfg::default());
+        assert_eq!(cfg.train.to_opts(), TrainOpts::default());
+        cfg.set("train.grad_checkpoint", "every-2").unwrap();
+        cfg.set("train.workers", "4").unwrap();
+        assert_eq!(cfg.train.grad_checkpoint, CheckpointPolicy::EveryK(2));
+        assert_eq!(cfg.train.workers, 4);
+        let opts = cfg.train.to_opts();
+        assert_eq!(opts.checkpoint, CheckpointPolicy::EveryK(2));
+        assert_eq!(opts.workers, 4);
+        assert!(cfg.set("train.grad_checkpoint", "sometimes").is_err());
+        // workers = 0 clamps to 1 at the runtime boundary
+        cfg.set("train.workers", "0").unwrap();
+        assert_eq!(cfg.train.to_opts().workers, 1);
     }
 
     #[test]

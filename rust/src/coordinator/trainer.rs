@@ -46,7 +46,10 @@ pub struct Trainer<'e> {
     engine: &'e Engine,
     pub manifest: Manifest,
     pub cfg: RunCfg,
-    train_step: Graph,
+    /// Loaded on first train step — eval/decode-only flows never touch
+    /// it, so train-only options (`--workers`, `--grad-checkpoint`)
+    /// can't fail a run that never trains.
+    train_step: Option<Graph>,
     eval_loss: Graph,
     logits_last: Option<Graph>,
     /// Cached incremental decoder over the current trainables; dropped
@@ -101,10 +104,9 @@ impl<'e> Trainer<'e> {
         base: Arc<BaseModel>,
     ) -> Result<Self> {
         let t0 = Timer::start();
-        let train_step = engine.load_bundle_graph(&manifest, BundleRole::TrainStep)?;
         let eval_loss = engine.load_bundle_graph(&manifest, BundleRole::EvalLoss)?;
         log_debug!(
-            "{}: loaded train_step + eval_loss in {:.2}s",
+            "{}: loaded eval_loss in {:.2}s",
             manifest.tag,
             t0.secs()
         );
@@ -131,7 +133,7 @@ impl<'e> Trainer<'e> {
             engine,
             manifest,
             cfg,
-            train_step,
+            train_step: None,
             eval_loss,
             logits_last: None,
             decoder: None,
@@ -163,6 +165,19 @@ impl<'e> Trainer<'e> {
         let t = self.manifest.model.seq_len;
         let n = self.state.tr.len();
         ensure!(batch.batch == b && batch.seq == t, "batch shape mismatch");
+        if self.train_step.is_none() {
+            // The train step carries the run's gradient-checkpoint
+            // policy and worker count; on the reference engine every
+            // combination is bitwise identical (per-sequence
+            // microbatches + fixed-order tree reduction), so
+            // --workers/--grad-checkpoint change speed and memory,
+            // never the loss curve. Backends without native support
+            // reject non-default options here, on the first step.
+            let graph = self
+                .engine
+                .load_train_step(&self.manifest, self.cfg.train.to_opts())?;
+            self.train_step = Some(graph);
+        }
         // The step is about to change the trainables; any cached
         // decoder would serve stale adapter weights.
         self.decoder = None;
@@ -191,7 +206,11 @@ impl<'e> Trainer<'e> {
         args.extend(self.fixed_bufs.iter().map(|a| a.as_ref()));
         args.extend(bufs[3 * n..].iter());
 
-        let mut outs = self.train_step.run_b(&args)?;
+        let mut outs = self
+            .train_step
+            .as_ref()
+            .expect("train_step loaded above")
+            .run_b(&args)?;
         ensure!(
             outs.len() == 3 * n + 1,
             "train_step returned {} outputs, expected {}",

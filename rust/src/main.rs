@@ -86,6 +86,10 @@ fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
         cfg.data.task = task.to_string();
     }
     cfg.data.documents = args.get_usize("documents", cfg.data.documents)?;
+    if let Some(policy) = args.get("grad-checkpoint") {
+        cfg.train.grad_checkpoint = oftv2::runtime::CheckpointPolicy::parse(policy)?;
+    }
+    cfg.train.workers = args.get_usize("workers", cfg.train.workers)?;
     if let Some(p) = args.get("init-from") {
         cfg.init_from = Some(p.to_string());
     }
@@ -125,6 +129,12 @@ fn train_command(name: &'static str, about: &'static str) -> Command {
         .opt("documents", "synthetic corpus size", None)
         .opt("log-every", "steps between log lines", None)
         .opt("eval-every", "steps between evals (0 = off)", None)
+        .opt(
+            "grad-checkpoint",
+            "gradient checkpointing: none | every-<k> blocks",
+            None,
+        )
+        .opt("workers", "data-parallel training workers", None)
         .opt("init-from", "checkpoint to initialize from", None)
         .opt("out-dir", "directory for history/checkpoint output", None)
         .opt("set", "comma-separated config overrides a.b=v", None)

@@ -18,6 +18,7 @@
 
 use crate::modelspec::ModelSpec;
 use crate::peft::counting::{count, MethodKind};
+use crate::runtime::CheckpointPolicy;
 
 /// Weight storage precision of the frozen base model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,9 +85,12 @@ pub struct TrainShape {
     pub seq: usize,
     /// Activation bytes (bf16 autograd saves).
     pub act_bytes: f64,
-    /// Gradient checkpointing on transformer blocks (HF default for
-    /// large-model finetuning): keeps only block inputs + recompute.
-    pub grad_checkpoint: bool,
+    /// Gradient-checkpoint policy on transformer blocks (the same
+    /// [`CheckpointPolicy`] the reference trainer executes):
+    /// `EveryK(1)` is the HF default for large-model finetuning,
+    /// `EveryK(k)` keeps one boundary per k blocks at the cost of a
+    /// k-block live recompute window, `None` keeps every save.
+    pub checkpoint: CheckpointPolicy,
 }
 
 impl Default for TrainShape {
@@ -95,8 +99,15 @@ impl Default for TrainShape {
             batch: 1,
             seq: 2048,
             act_bytes: 2.0,
-            grad_checkpoint: true,
+            checkpoint: CheckpointPolicy::EveryK(1),
         }
+    }
+}
+
+impl TrainShape {
+    /// Whether any per-block saves are dropped and recomputed.
+    fn checkpointed(&self) -> bool {
+        self.checkpoint.every().is_some()
     }
 }
 
@@ -156,15 +167,25 @@ pub fn finetune_memory(
     let tokens = (shape.batch * shape.seq) as f64;
     let d = spec.d_model as f64;
     let l = spec.n_layers as f64;
-    // Per-block saved activations (bf16): with gradient checkpointing we
-    // keep ~2 d-wide tensors per block (block input + one checkpoint
-    // inside) plus the full final logits/loss pipeline; without, ~14
-    // d-wide tensors + attention probabilities.
+    // Per-block saved activations (bf16), per CheckpointPolicy. A
+    // non-checkpointed block keeps ~14 d-wide tensors; a checkpointed
+    // run keeps ~2 d-wide tensors per segment boundary (block input +
+    // one checkpoint inside) plus, during backward, one live segment
+    // of k recomputed blocks at the full 14 — the time/memory
+    // trade-off `fig1_time_memory` sweeps.
     // Attention probabilities are never materialized: every stack the
     // paper benchmarks (HF transformers / diffusers) runs SDPA/flash
     // attention, which keeps the seq x seq matrix in registers.
-    let per_block_vecs = if shape.grad_checkpoint { 2.0 } else { 14.0 };
-    let mut activations = tokens * d * per_block_vecs * l * shape.act_bytes;
+    const BLOCK_VECS_FULL: f64 = 14.0;
+    const BLOCK_VECS_BOUNDARY: f64 = 2.0;
+    let saved_vecs = match shape.checkpoint.every() {
+        None => BLOCK_VECS_FULL * l,
+        Some(k) => {
+            let k = (k as f64).min(l);
+            BLOCK_VECS_BOUNDARY * (l / k).ceil() + BLOCK_VECS_FULL * k
+        }
+    };
+    let mut activations = tokens * d * saved_vecs * shape.act_bytes;
     // logits + embeddings staging
     activations += tokens * (spec.vocab.max(1) as f64).min(160_000.0) * 0.05 * shape.act_bytes
         + tokens * d * 4.0;
@@ -174,7 +195,7 @@ pub fn finetune_memory(
     // base weight itself needs no gradient. Under gradient
     // checkpointing these are recomputed and only one block's saves are
     // live at a time.
-    let adapter_input_saves: f64 = if shape.grad_checkpoint {
+    let adapter_input_saves: f64 = if shape.checkpointed() {
         spec.linears_per_layer
             .iter()
             .map(|li| tokens * li.din as f64 * shape.act_bytes)
@@ -238,7 +259,7 @@ mod tests {
             batch: 1,
             seq: 2048,
             act_bytes: 2.0,
-            grad_checkpoint: true,
+            checkpoint: CheckpointPolicy::EveryK(1),
         }
     }
 
@@ -310,7 +331,7 @@ mod tests {
             batch: 2,
             seq: 4096,
             act_bytes: 2.0,
-            grad_checkpoint: false,
+            checkpoint: CheckpointPolicy::None,
         };
         let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
         let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
@@ -319,6 +340,29 @@ mod tests {
         assert!((v2 - lora).abs() / lora < 0.10);
         assert!((qo - ql).abs() / ql < 0.10);
         assert!(qo < lora);
+    }
+
+    #[test]
+    fn checkpoint_policy_trades_activation_memory() {
+        // Any checkpoint policy must beat the full-tape baseline on
+        // activation memory at 7B scale, and the boundary count must
+        // shrink as k grows (the segment-live term grows instead —
+        // that's the trade-off curve fig1_time_memory sweeps).
+        let spec = ModelSpec::qwen25("7b");
+        let mem_at = |checkpoint: CheckpointPolicy| {
+            let shape = TrainShape { checkpoint, ..shape_7b() };
+            finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape)
+                .activations
+        };
+        let full = mem_at(CheckpointPolicy::None);
+        for k in [1usize, 2, 4] {
+            let ck = mem_at(CheckpointPolicy::EveryK(k));
+            assert!(ck < full, "every-{k}: {ck} >= full-tape {full}");
+        }
+        // every-1 keeps strictly more boundaries than every-4 keeps
+        // boundaries+window at this depth (l = 28): the curve is not
+        // flat in k.
+        assert!(mem_at(CheckpointPolicy::EveryK(2)) < mem_at(CheckpointPolicy::EveryK(1)));
     }
 
     #[test]

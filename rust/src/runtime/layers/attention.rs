@@ -1,0 +1,163 @@
+//! Causal multi-head attention.
+
+use crate::tensor::Tensor;
+
+/// Attention over already-projected q/k/v planes. Takes three inputs,
+/// so it keeps the layer forward/backward shape with a bespoke
+/// signature instead of implementing the single-input [`super::Layer`]
+/// trait.
+pub struct Attention {
+    pub n_heads: usize,
+}
+
+/// The q/k/v planes (moved in, not cloned) plus the softmax
+/// probabilities the backward reuses.
+pub struct AttentionAct {
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    /// (bsz, heads, T, T) flattened; future positions exactly zero.
+    pub att: Vec<f32>,
+}
+
+impl Attention {
+    pub fn new(n_heads: usize) -> Attention {
+        Attention { n_heads }
+    }
+
+    pub fn forward(
+        &self,
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+        bsz: usize,
+        t: usize,
+    ) -> (Tensor, AttentionAct) {
+        let h = self.n_heads;
+        let hd = q.shape[1] / h;
+        let (o, att) = attention_fwd(&q, &k, &v, bsz, t, h, hd);
+        (o, AttentionAct { q, k, v, att })
+    }
+
+    /// Returns (dq, dk, dv).
+    pub fn backward(
+        &self,
+        act: &AttentionAct,
+        do_: &Tensor,
+        bsz: usize,
+        t: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        let h = self.n_heads;
+        let hd = act.q.shape[1] / h;
+        attention_bwd(&act.q, &act.k, &act.v, &act.att, do_, bsz, t, h, hd)
+    }
+}
+
+/// Causal multi-head attention forward. Returns (output (M, D), softmax
+/// probabilities (bsz*h*t*t, future positions exactly zero)).
+pub fn attention_fwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bsz: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+) -> (Tensor, Vec<f32>) {
+    let d = h * hd;
+    let m = bsz * t;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0f32; bsz * h * t * t];
+    let mut o = Tensor::zeros(&[m, d]);
+    for b in 0..bsz {
+        for hh in 0..h {
+            for t1 in 0..t {
+                let qoff = (b * t + t1) * d + hh * hd;
+                let mut row = vec![0f32; t1 + 1];
+                let mut maxv = f32::NEG_INFINITY;
+                for (t2, rv) in row.iter_mut().enumerate() {
+                    let koff = (b * t + t2) * d + hh * hd;
+                    let mut acc = 0f32;
+                    for c in 0..hd {
+                        acc += q.data[qoff + c] * k.data[koff + c];
+                    }
+                    *rv = acc * scale;
+                    maxv = maxv.max(*rv);
+                }
+                let mut sum = 0f32;
+                for rv in &mut row {
+                    *rv = (*rv - maxv).exp();
+                    sum += *rv;
+                }
+                let abase = ((b * h + hh) * t + t1) * t;
+                let ooff = (b * t + t1) * d + hh * hd;
+                for (t2, rv) in row.iter().enumerate() {
+                    let a = rv / sum;
+                    att[abase + t2] = a;
+                    let voff = (b * t + t2) * d + hh * hd;
+                    for c in 0..hd {
+                        o.data[ooff + c] += a * v.data[voff + c];
+                    }
+                }
+            }
+        }
+    }
+    (o, att)
+}
+
+/// Causal attention backward: returns (dq, dk, dv).
+pub fn attention_bwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    att: &[f32],
+    do_: &Tensor,
+    bsz: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let d = h * hd;
+    let m = bsz * t;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = Tensor::zeros(&[m, d]);
+    let mut dk = Tensor::zeros(&[m, d]);
+    let mut dv = Tensor::zeros(&[m, d]);
+    for b in 0..bsz {
+        for hh in 0..h {
+            for t1 in 0..t {
+                let abase = ((b * h + hh) * t + t1) * t;
+                let ooff = (b * t + t1) * d + hh * hd;
+                let mut dpost = vec![0f32; t1 + 1];
+                for (t2, dp) in dpost.iter_mut().enumerate() {
+                    let voff = (b * t + t2) * d + hh * hd;
+                    let a = att[abase + t2];
+                    let mut acc = 0f32;
+                    for c in 0..hd {
+                        let g = do_.data[ooff + c];
+                        acc += g * v.data[voff + c];
+                        dv.data[voff + c] += a * g;
+                    }
+                    *dp = acc;
+                }
+                let mut dot = 0f32;
+                for (t2, dp) in dpost.iter().enumerate() {
+                    dot += dp * att[abase + t2];
+                }
+                let qoff = ooff;
+                for (t2, dp) in dpost.iter().enumerate() {
+                    let da = att[abase + t2] * (dp - dot) * scale;
+                    if da == 0.0 {
+                        continue;
+                    }
+                    let koff = (b * t + t2) * d + hh * hd;
+                    for c in 0..hd {
+                        dq.data[qoff + c] += da * k.data[koff + c];
+                        dk.data[koff + c] += da * q.data[qoff + c];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}

@@ -1,0 +1,94 @@
+//! One transformer block: attention branch + MLP branch with residual
+//! adds, composed from the per-layer objects.
+
+use anyhow::Result;
+
+use super::attention::{Attention, AttentionAct};
+use super::linear::{LinearAct, PeftLinear};
+use super::mlp::{Mlp, MlpAct};
+use super::rmsnorm::{RmsNorm, RmsNormAct};
+use super::{Ctx, Gradients, Layer};
+use crate::tensor::Tensor;
+
+pub struct TransformerBlock {
+    pub attn_norm: RmsNorm,
+    pub wq: PeftLinear,
+    pub wk: PeftLinear,
+    pub wv: PeftLinear,
+    pub wo: PeftLinear,
+    pub attn: Attention,
+    pub mlp: Mlp,
+}
+
+/// Activation records of one block, in sub-layer order. The residual
+/// skip paths need no saved tensors (their backward is the identity);
+/// the block input lives inside the attention norm's record.
+pub struct BlockAct {
+    pub norm1: RmsNormAct,
+    pub cq: LinearAct,
+    pub ck: LinearAct,
+    pub cv: LinearAct,
+    pub attn: AttentionAct,
+    pub co: LinearAct,
+    pub mlp: MlpAct,
+}
+
+impl TransformerBlock {
+    pub fn new(prefix: &str, n_heads: usize) -> TransformerBlock {
+        TransformerBlock {
+            attn_norm: RmsNorm::new(&format!("{prefix}.attn.norm")),
+            wq: PeftLinear::new(&format!("{prefix}.attn.wq")),
+            wk: PeftLinear::new(&format!("{prefix}.attn.wk")),
+            wv: PeftLinear::new(&format!("{prefix}.attn.wv")),
+            wo: PeftLinear::new(&format!("{prefix}.attn.wo")),
+            attn: Attention::new(n_heads),
+            mlp: Mlp::new(prefix),
+        }
+    }
+
+    pub fn forward(&self, ctx: &Ctx, x: &Tensor, bsz: usize) -> Result<(Tensor, BlockAct)> {
+        let t = ctx.dims.seq_len;
+        let (xn1, norm1) = self.attn_norm.forward(ctx, x)?;
+        let (q, cq) = self.wq.forward(ctx, &xn1)?;
+        let (k, ck) = self.wk.forward(ctx, &xn1)?;
+        let (v, cv) = self.wv.forward(ctx, &xn1)?;
+        let (o, attn) = self.attn.forward(q, k, v, bsz, t);
+        let (ywo, co) = self.wo.forward(ctx, &o)?;
+        let x_mid = x.add(&ywo)?;
+        let (ydown, mlp) = self.mlp.forward(ctx, &x_mid)?;
+        let out = x_mid.add(&ydown)?;
+        Ok((
+            out,
+            BlockAct {
+                norm1,
+                cq,
+                ck,
+                cv,
+                attn,
+                co,
+                mlp,
+            },
+        ))
+    }
+
+    pub fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &BlockAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let t = ctx.dims.seq_len;
+        let bsz = dy.shape[0] / t;
+        let dxmid = dy.add(&self.mlp.backward(ctx, &act.mlp, dy, grads)?)?;
+        let do_ = self.wo.backward(ctx, &act.co, &dxmid, grads)?;
+        let (dq, dk, dv) = self.attn.backward(&act.attn, &do_, bsz, t);
+        let dxn1 = self
+            .wq
+            .backward(ctx, &act.cq, &dq, grads)?
+            .add(&self.wk.backward(ctx, &act.ck, &dk, grads)?)?
+            .add(&self.wv.backward(ctx, &act.cv, &dv, grads)?)?;
+        let dxin_n = self.attn_norm.backward(ctx, &act.norm1, &dxn1, grads)?;
+        dxmid.add(&dxin_n)
+    }
+}

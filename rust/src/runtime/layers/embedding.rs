@@ -1,0 +1,82 @@
+//! Token + learned positional embedding (`embed.tok` / `embed.pos`).
+
+use anyhow::{ensure, Result};
+
+use super::{accumulate, Ctx, Gradients};
+use crate::runtime::refmodel::Method;
+use crate::tensor::Tensor;
+
+/// The embedding lookup. Its "activation record" is just the input ids,
+/// which the tape stores anyway, so forward/backward take them
+/// directly instead of a record struct.
+pub struct Embedding;
+
+impl Embedding {
+    pub fn new() -> Embedding {
+        Embedding
+    }
+
+    /// ids (bsz * T) -> x (bsz * T, D): token embedding + positional
+    /// embedding at `row % T`.
+    pub fn forward(&self, ctx: &Ctx, input_ids: &[i32], bsz: usize) -> Result<Tensor> {
+        let d = ctx.dims.d_model;
+        let t = ctx.dims.seq_len;
+        let vocab = ctx.dims.vocab;
+        let m = bsz * t;
+        ensure!(input_ids.len() == m, "input ids length mismatch");
+        let tok_emb = ctx.params.get("embed.tok")?;
+        let pos_emb = ctx.params.get("embed.pos")?;
+        let mut x = Tensor::zeros(&[m, d]);
+        for (row, &id) in input_ids.iter().enumerate() {
+            ensure!((id as usize) < vocab, "token id {id} out of vocab {vocab}");
+            let tpos = row % t;
+            let dst = &mut x.data[row * d..(row + 1) * d];
+            let te = &tok_emb.data[id as usize * d..(id as usize + 1) * d];
+            let pe = &pos_emb.data[tpos * d..(tpos + 1) * d];
+            for j in 0..d {
+                dst[j] = te[j] + pe[j];
+            }
+        }
+        Ok(x)
+    }
+
+    /// Scatter `dx` back into the embedding tables (only the `full`
+    /// method trains them).
+    pub fn backward(
+        &self,
+        ctx: &Ctx,
+        input_ids: &[i32],
+        dx: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<()> {
+        if ctx.method != Method::Full {
+            return Ok(());
+        }
+        let d = ctx.dims.d_model;
+        let t = ctx.dims.seq_len;
+        let vocab = ctx.dims.vocab;
+        let mut dtok = Tensor::zeros(&[vocab, d]);
+        let mut dpos = Tensor::zeros(&[t, d]);
+        for (row, &id) in input_ids.iter().enumerate() {
+            let tpos = row % t;
+            let src = &dx.data[row * d..(row + 1) * d];
+            let te = &mut dtok.data[id as usize * d..(id as usize + 1) * d];
+            for j in 0..d {
+                te[j] += src[j];
+            }
+            let pe = &mut dpos.data[tpos * d..(tpos + 1) * d];
+            for j in 0..d {
+                pe[j] += src[j];
+            }
+        }
+        accumulate(grads, "embed.tok", dtok);
+        accumulate(grads, "embed.pos", dpos);
+        Ok(())
+    }
+}
+
+impl Default for Embedding {
+    fn default() -> Self {
+        Embedding::new()
+    }
+}

@@ -1,0 +1,437 @@
+//! The PEFT-adapted linear: one layer object covering every method of
+//! the paper — plain frozen matmul, full finetuning, additive LoRA,
+//! weight-centric (merged) OFT, and the matrix-free input-centric
+//! OFTv2/QOFT rotation — plus the CNP block kernels they share.
+
+use anyhow::{ensure, Context, Result};
+
+use super::{accumulate, Ctx, Gradients, Layer};
+use crate::peft;
+use crate::runtime::refmodel::Method;
+use crate::tensor::Tensor;
+
+/// One adapted linear, resolving its base weight (and any adapter
+/// parameters) by name from the context's parameter map.
+pub struct PeftLinear {
+    pub name: String,
+}
+
+pub struct LoraAct {
+    pub xa: Tensor,
+    pub scale: f32,
+}
+
+pub struct OftAct {
+    /// Rotation blocks built inline — only present when the step has
+    /// no shared [`super::AdapterPlan`] carrying them.
+    pub blocks: Vec<Tensor>,
+}
+
+/// Activation record of one adapted linear: the saved input plus the
+/// method-specific extras. Parameters (base weight, LoRA factors,
+/// packed Q) are *not* copied here — backward re-reads them from the
+/// context's parameter map, and shared per-step state (CNP blocks,
+/// merged weights) lives in the [`super::AdapterPlan`]; records only
+/// own what was derived inline.
+pub struct LinearAct {
+    pub x: Tensor,
+    pub lora: Option<LoraAct>,
+    pub oft: Option<OftAct>,
+    /// Merged blockdiag(R) @ W built inline (weight-centric OFT with
+    /// no shared plan).
+    pub rw: Option<Tensor>,
+}
+
+impl PeftLinear {
+    pub fn new(name: &str) -> PeftLinear {
+        PeftLinear { name: name.into() }
+    }
+}
+
+impl Layer for PeftLinear {
+    type Act = LinearAct;
+
+    fn forward(&self, ctx: &Ctx, x: &Tensor) -> Result<(Tensor, LinearAct)> {
+        let name = &self.name;
+        let w = ctx.params.get(name)?;
+        let mut act = LinearAct {
+            x: x.clone(),
+            lora: None,
+            oft: None,
+            rw: None,
+        };
+        let y = match ctx.method {
+            Method::Lora | Method::QLora => {
+                let a = ctx.params.get(&format!("{name}.lora_a"))?;
+                let b = ctx.params.get(&format!("{name}.lora_b"))?;
+                let scale = (ctx.dims.lora_alpha / ctx.dims.lora_r as f64) as f32;
+                let xa = x.matmul(a)?;
+                let y = x.matmul(w)?.add(&xa.matmul(b)?.scale(scale))?;
+                act.lora = Some(LoraAct { xa, scale });
+                y
+            }
+            Method::OftV2 | Method::QOft => match ctx.plan.and_then(|p| p.blocks.get(name)) {
+                Some(blocks) => block_rotate_fast(x, blocks)?.matmul(w)?,
+                None => {
+                    let packed = ctx.params.get(&format!("{name}.oft_q"))?;
+                    let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
+                    let y = block_rotate_fast(x, &blocks)?.matmul(w)?;
+                    act.oft = Some(OftAct { blocks });
+                    y
+                }
+            },
+            // The weight-centric baseline: materialize blockdiag(R) and
+            // pay the cubic matrix-matrix merge — once per step via the
+            // shared plan, else here.
+            Method::OftMerged => match ctx.plan.and_then(|p| p.merged.get(name)) {
+                Some(rw) => x.matmul(rw)?,
+                None => {
+                    let packed = ctx.params.get(&format!("{name}.oft_q"))?;
+                    let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
+                    let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
+                    let rw = rd.matmul(w)?;
+                    let y = x.matmul(&rw)?;
+                    act.rw = Some(rw);
+                    y
+                }
+            },
+            Method::Full | Method::None => x.matmul(w)?,
+        };
+        Ok((y, act))
+    }
+
+    /// Accumulates parameter grads and returns d(loss)/d(input).
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let name = &self.name;
+        let blk = ctx.dims.block_b;
+        let w = ctx.params.get(name)?;
+        match ctx.method {
+            Method::Full => {
+                accumulate(grads, name, act.x.transpose2().matmul(dy)?);
+                dy.matmul(&w.transpose2())
+            }
+            Method::None => dy.matmul(&w.transpose2()),
+            Method::Lora | Method::QLora => {
+                let lc = act.lora.as_ref().context("missing lora record")?;
+                let a = ctx.params.get(&format!("{name}.lora_a"))?;
+                let b = ctx.params.get(&format!("{name}.lora_b"))?;
+                let dxa = dy.matmul(&b.transpose2())?.scale(lc.scale);
+                accumulate(
+                    grads,
+                    &format!("{name}.lora_b"),
+                    lc.xa.transpose2().matmul(dy)?.scale(lc.scale),
+                );
+                accumulate(
+                    grads,
+                    &format!("{name}.lora_a"),
+                    act.x.transpose2().matmul(&dxa)?,
+                );
+                dy.matmul(&w.transpose2())?.add(&dxa.matmul(&a.transpose2())?)
+            }
+            Method::OftV2 | Method::QOft => {
+                let packed = ctx.params.get(&format!("{name}.oft_q"))?;
+                let blocks = match ctx.plan.and_then(|p| p.blocks.get(name)) {
+                    Some(blocks) => blocks,
+                    None => &act.oft.as_ref().context("missing oft record")?.blocks,
+                };
+                let dz = dy.matmul(&w.transpose2())?;
+                let dr = block_rotate_grad_r(&act.x, &dz, blk);
+                let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+                accumulate(grads, &format!("{name}.oft_q"), dp);
+                block_rotate_transposed(&dz, blocks)
+            }
+            Method::OftMerged => {
+                let packed = ctx.params.get(&format!("{name}.oft_q"))?;
+                let rw = match ctx.plan.and_then(|p| p.merged.get(name)) {
+                    Some(rw) => rw,
+                    None => act.rw.as_ref().context("missing merged weight record")?,
+                };
+                let dm = act.x.transpose2().matmul(dy)?; // (din, dout)
+                let din = w.shape[0];
+                let nb = din / blk;
+                let dout = w.shape[1];
+                let mut dr = Vec::with_capacity(nb);
+                for bi in 0..nb {
+                    let dm_b = Tensor::from_vec(
+                        &[blk, dout],
+                        dm.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
+                    );
+                    let w_b = Tensor::from_vec(
+                        &[blk, dout],
+                        w.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
+                    );
+                    dr.push(dm_b.matmul(&w_b.transpose2())?);
+                }
+                let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+                accumulate(grads, &format!("{name}.oft_q"), dp);
+                dy.matmul(&rw.transpose2())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CNP / block-rotation kernels (shared with the decode path and the
+// reference engine's micro kernels)
+// ---------------------------------------------------------------------------
+
+/// Build all CNP blocks R_i = (I+Q_i)(I + sum Q_i^j) from packed rows.
+pub fn build_cnp_blocks(packed: &Tensor, b: usize, k: usize) -> Result<Vec<Tensor>> {
+    let p = peft::packed_dim(b);
+    ensure!(
+        packed.shape.len() == 2 && packed.shape[1] == p,
+        "packed Q must be (nb, {p}), got {:?}",
+        packed.shape
+    );
+    let nb = packed.shape[0];
+    let mut out = Vec::with_capacity(nb);
+    for i in 0..nb {
+        out.push(peft::cayley_neumann(&packed.data[i * p..(i + 1) * p], b, k)?);
+    }
+    Ok(out)
+}
+
+/// Fused block rotation y[:, ib:(i+1)b] = x[:, ib:(i+1)b] @ R_i — one
+/// pass over x, parallel over rows (the OFTv2 hot path).
+pub fn block_rotate_fast(x: &Tensor, blocks: &[Tensor]) -> Result<Tensor> {
+    ensure!(x.rank() == 2, "block_rotate_fast needs 2-D input");
+    let (m, d) = (x.shape[0], x.shape[1]);
+    ensure!(!blocks.is_empty(), "no rotation blocks");
+    let b = blocks[0].shape[0];
+    ensure!(blocks.len() * b == d, "blocks {}x{b} vs d={d}", blocks.len());
+    let mut out = vec![0f32; m * d];
+    crate::tensor::parallel_over_rows(&mut out, m, d, |row, dst| {
+        let src = &x.data[row * d..(row + 1) * d];
+        for (bi, blk) in blocks.iter().enumerate() {
+            let xoff = bi * b;
+            for j in 0..b {
+                let mut acc = 0f32;
+                for i in 0..b {
+                    acc += src[xoff + i] * blk.data[i * b + j];
+                }
+                dst[xoff + j] = acc;
+            }
+        }
+    });
+    Ok(Tensor::from_vec(&[m, d], out))
+}
+
+/// Rotate by the transposed blocks (the backward direction dz @ R^T).
+pub fn block_rotate_transposed(dz: &Tensor, blocks: &[Tensor]) -> Result<Tensor> {
+    let (m, d) = (dz.shape[0], dz.shape[1]);
+    let b = blocks[0].shape[0];
+    ensure!(blocks.len() * b == d, "blocks {}x{b} vs d={d}", blocks.len());
+    let mut out = vec![0f32; m * d];
+    crate::tensor::parallel_over_rows(&mut out, m, d, |row, dst| {
+        let src = &dz.data[row * d..(row + 1) * d];
+        for (bi, blk) in blocks.iter().enumerate() {
+            let off = bi * b;
+            for i in 0..b {
+                let mut acc = 0f32;
+                for j in 0..b {
+                    acc += src[off + j] * blk.data[i * b + j];
+                }
+                dst[off + i] = acc;
+            }
+        }
+    });
+    Ok(Tensor::from_vec(&[m, d], out))
+}
+
+/// dR_i = x_i^T @ dz_i summed over rows; returns one (b, b) per block.
+pub fn block_rotate_grad_r(x: &Tensor, dz: &Tensor, b: usize) -> Vec<Tensor> {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let nb = d / b;
+    let mut dr: Vec<Tensor> = (0..nb).map(|_| Tensor::zeros(&[b, b])).collect();
+    for row in 0..m {
+        let xr = &x.data[row * d..(row + 1) * d];
+        let dzr = &dz.data[row * d..(row + 1) * d];
+        for (bi, g) in dr.iter_mut().enumerate() {
+            let off = bi * b;
+            for i in 0..b {
+                let xi = xr[off + i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * b..(i + 1) * b];
+                for j in 0..b {
+                    grow[j] += xi * dzr[off + j];
+                }
+            }
+        }
+    }
+    dr
+}
+
+/// d(loss)/d(packed) for one CNP block, given G = d(loss)/dR.
+///
+/// R = (I+Q) S with S = sum_{i=0..k} Q^i:
+///   dQ = G S^T + sum_{i=1..k} sum_{j=0..i-1} (Q^T)^j H (Q^T)^{i-1-j},
+/// with H = (I+Q)^T G; then project onto the packed skew coordinates
+/// (dp_ij = dQ_ij - dQ_ji for i < j). Locked against jax.grad by
+/// python/tests/test_ref_backward.py::test_cnp_backward_matches_jax.
+pub fn cnp_backward(packed: &[f32], b: usize, k: usize, g: &Tensor) -> Result<Vec<f32>> {
+    let q = peft::skew_from_packed(packed, b);
+    let eye = Tensor::eye(b);
+    let mut acc = eye.clone();
+    let mut term = eye.clone();
+    for _ in 0..k {
+        term = term.matmul(&q)?;
+        acc = acc.add(&term)?;
+    }
+    let mut dq = g.matmul(&acc.transpose2())?;
+    let h = eye.add(&q)?.transpose2().matmul(g)?;
+    let qt = q.transpose2();
+    let mut powers = vec![eye];
+    for _ in 1..k.max(1) {
+        let next = powers.last().unwrap().matmul(&qt)?;
+        powers.push(next);
+    }
+    for i in 1..=k {
+        for j in 0..i {
+            let t = powers[j].matmul(&h)?.matmul(&powers[i - 1 - j])?;
+            dq = dq.add(&t)?;
+        }
+    }
+    let mut dp = vec![0f32; peft::packed_dim(b)];
+    let mut idx = 0;
+    for i in 0..b {
+        for j in i + 1..b {
+            dp[idx] = dq.at2(i, j) - dq.at2(j, i);
+            idx += 1;
+        }
+    }
+    Ok(dp)
+}
+
+/// CNP backward over all blocks; returns the (nb, p) packed gradient.
+pub fn cnp_backward_all(packed: &Tensor, b: usize, k: usize, dr: &[Tensor]) -> Result<Tensor> {
+    let p = peft::packed_dim(b);
+    let nb = packed.shape[0];
+    ensure!(dr.len() == nb, "expected {nb} block grads, got {}", dr.len());
+    let mut out = vec![0f32; nb * p];
+    for i in 0..nb {
+        let dp = cnp_backward(&packed.data[i * p..(i + 1) * p], b, k, &dr[i])?;
+        out[i * p..(i + 1) * p].copy_from_slice(&dp);
+    }
+    Ok(Tensor::from_vec(&[nb, p], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rotate_fast_matches_naive_oracle() {
+        let mut rng = Rng::new(9);
+        let (m, b, nb) = (13, 8, 4);
+        let d = b * nb;
+        let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.1, &mut rng);
+        let blocks = build_cnp_blocks(&packed, b, 6).unwrap();
+        let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+        let fast = block_rotate_fast(&x, &blocks).unwrap();
+        let naive = peft::block_rotate(&x, &blocks).unwrap();
+        assert!(fast.max_abs_diff(&naive) < 1e-5);
+    }
+
+    #[test]
+    fn rotate_transposed_inverts_for_orthogonal_blocks() {
+        // R^T is the inverse of an (approximately) orthogonal R.
+        let mut rng = Rng::new(10);
+        let (m, b, nb) = (6, 8, 2);
+        let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.02, &mut rng);
+        let blocks = build_cnp_blocks(&packed, b, 8).unwrap();
+        let x = Tensor::randn(&[m, b * nb], 1.0, &mut rng);
+        let y = block_rotate_fast(&x, &blocks).unwrap();
+        let back = block_rotate_transposed(&y, &blocks).unwrap();
+        assert!(back.max_abs_diff(&x) < 1e-3, "{}", back.max_abs_diff(&x));
+    }
+
+    /// Worst per-row relative norm distortion of the CNP rotation over
+    /// random inputs: |‖y_row‖ − ‖x_row‖| / ‖x_row‖.
+    fn max_norm_err(b: usize, nb: usize, k: usize, q_std: f32, seed: u64) -> f32 {
+        let mut rng = Rng::new(seed);
+        let d = b * nb;
+        let packed = Tensor::randn(&[nb, peft::packed_dim(b)], q_std, &mut rng);
+        let blocks = build_cnp_blocks(&packed, b, k).unwrap();
+        let m = 16usize;
+        let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+        let y = block_rotate_fast(&x, &blocks).unwrap();
+        let mut worst = 0f32;
+        for row in 0..m {
+            let xr = &x.data[row * d..(row + 1) * d];
+            let yr = &y.data[row * d..(row + 1) * d];
+            let nx = xr.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny = yr.iter().map(|v| v * v).sum::<f32>().sqrt();
+            worst = worst.max((ny - nx).abs() / nx.max(1e-12));
+        }
+        worst
+    }
+
+    #[test]
+    fn cnp_rotation_preserves_norm_across_blocks_and_terms() {
+        // Property: a CNP rotation is orthogonal up to the Neumann
+        // truncation error O(‖Q‖^{k+1}), so vector norms are preserved
+        // to a k-dependent tolerance. At the paper's operating point
+        // (small ‖Q‖ — adapters start at Q = 0 and stay small) the
+        // documented tolerances are:
+        //   k >= 6 : 1e-4   (effectively exact in f32)
+        //   k >= 3 : 2e-3
+        //   k >= 2 : 1e-2
+        //   k == 1 : 5e-2   (graceful degradation, not collapse)
+        let tol = |k: usize| -> f32 {
+            match k {
+                0 => unreachable!("k >= 1 in every bundle"),
+                1 => 5e-2,
+                2 => 1e-2,
+                3..=5 => 2e-3,
+                _ => 1e-4,
+            }
+        };
+        for &b in &[4usize, 8, 16, 32] {
+            for &k in &[1usize, 2, 3, 4, 6, 8] {
+                for seed in 0..3u64 {
+                    let err = max_norm_err(b, 64 / b.min(64), k, 0.02, 100 + seed);
+                    assert!(
+                        err < tol(k),
+                        "b={b} k={k} seed={seed}: norm error {err} > {}",
+                        tol(k)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cnp_norm_error_shrinks_with_more_neumann_terms() {
+        // Graceful degradation: truncating the series earlier costs
+        // accuracy smoothly — more terms must never be (meaningfully)
+        // worse, and the k=8 error must be orders of magnitude below
+        // the k=1 error.
+        for &b in &[8usize, 16] {
+            let errs: Vec<f32> = [1usize, 2, 4, 8]
+                .iter()
+                .map(|&k| max_norm_err(b, 4, k, 0.05, 7))
+                .collect();
+            for w in errs.windows(2) {
+                assert!(
+                    w[1] <= w[0] * 1.5 + 1e-6,
+                    "b={b}: error increased with more terms: {errs:?}"
+                );
+            }
+            assert!(
+                errs[3] < errs[0] / 50.0,
+                "b={b}: k=8 ({}) should be far below k=1 ({})",
+                errs[3],
+                errs[0]
+            );
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! The LM head projection plus the masked-NLL loss head it feeds.
+
+use anyhow::Result;
+
+use super::{accumulate, Ctx, Gradients, Layer};
+use crate::runtime::refmodel::Method;
+use crate::tensor::Tensor;
+
+/// Final projection onto vocabulary logits.
+pub struct LmHead {
+    pub name: String,
+}
+
+pub struct LmHeadAct {
+    /// Final-normed activations (M, D) — the head's input.
+    pub xf: Tensor,
+}
+
+impl LmHead {
+    pub fn new(name: &str) -> LmHead {
+        LmHead { name: name.into() }
+    }
+}
+
+impl Layer for LmHead {
+    type Act = LmHeadAct;
+
+    fn forward(&self, ctx: &Ctx, xf: &Tensor) -> Result<(Tensor, LmHeadAct)> {
+        let head = ctx.params.get(&self.name)?;
+        let logits = xf.matmul(head)?;
+        Ok((logits, LmHeadAct { xf: xf.clone() }))
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &LmHeadAct,
+        dlogits: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let head = ctx.params.get(&self.name)?;
+        if ctx.method == Method::Full {
+            accumulate(grads, &self.name, act.xf.transpose2().matmul(dlogits)?);
+        }
+        dlogits.matmul(&head.transpose2())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loss head
+// ---------------------------------------------------------------------------
+
+/// Split a (bsz, T+1) token plane into next-token (inputs, targets).
+pub fn split_tokens(tokens: &[i32], bsz: usize, t: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut inputs = Vec::with_capacity(bsz * t);
+    let mut targets = Vec::with_capacity(bsz * t);
+    for b in 0..bsz {
+        let row = &tokens[b * (t + 1)..(b + 1) * (t + 1)];
+        inputs.extend_from_slice(&row[..t]);
+        targets.extend_from_slice(&row[1..]);
+    }
+    (inputs, targets)
+}
+
+/// Per-row NLL over masked targets: returns (sum_nll, mask_count, logp).
+pub fn nll_stats(logits: &Tensor, targets: &[i32], mask: &[f32]) -> (f32, f32, Tensor) {
+    let m = logits.shape[0];
+    let v = logits.shape[1];
+    let mut logp = Tensor::zeros(&[m, v]);
+    let mut sum_nll = 0f32;
+    let mut count = 0f32;
+    for row in 0..m {
+        let lr = &logits.data[row * v..(row + 1) * v];
+        let maxv = lr.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0f32;
+        for &x in lr {
+            sum += (x - maxv).exp();
+        }
+        let lse = maxv + sum.ln();
+        let out = &mut logp.data[row * v..(row + 1) * v];
+        for j in 0..v {
+            out[j] = lr[j] - lse;
+        }
+        sum_nll += -out[targets[row] as usize] * mask[row];
+        count += mask[row];
+    }
+    (sum_nll, count, logp)
+}
+
+/// d(loss)/d(logits) for mean masked NLL: (softmax - onehot) * mask /
+/// count, with `inv_count` = 1 / count supplied by the caller (the
+/// count is global across microbatches).
+pub fn nll_dlogits(logp: &Tensor, targets: &[i32], mask: &[f32], inv_count: f32) -> Tensor {
+    let m = logp.shape[0];
+    let v = logp.shape[1];
+    let mut dlogits = Tensor::zeros(&[m, v]);
+    for row in 0..m {
+        let scale = mask[row] * inv_count;
+        if scale == 0.0 {
+            continue;
+        }
+        let lp = &logp.data[row * v..(row + 1) * v];
+        let dl = &mut dlogits.data[row * v..(row + 1) * v];
+        for j in 0..v {
+            dl[j] = lp[j].exp() * scale;
+        }
+        dl[targets[row] as usize] -= scale;
+    }
+    dlogits
+}

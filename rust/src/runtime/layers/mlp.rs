@@ -1,0 +1,137 @@
+//! The feed-forward branch: norm → up-projection → GELU → down.
+
+use anyhow::Result;
+
+use super::linear::{LinearAct, PeftLinear};
+use super::rmsnorm::{RmsNorm, RmsNormAct};
+use super::{Ctx, Gradients, Layer};
+use crate::tensor::Tensor;
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044715;
+
+/// Tanh-approximate GELU (JAX's default `approximate=True`).
+pub struct Gelu;
+
+pub struct GeluAct {
+    /// Pre-activation input (the up-projection output).
+    pub x: Tensor,
+}
+
+impl Layer for Gelu {
+    type Act = GeluAct;
+
+    fn forward(&self, _ctx: &Ctx, x: &Tensor) -> Result<(Tensor, GeluAct)> {
+        Ok((gelu_fwd(x), GeluAct { x: x.clone() }))
+    }
+
+    fn backward(
+        &self,
+        _ctx: &Ctx,
+        act: &GeluAct,
+        dy: &Tensor,
+        _grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        Ok(gelu_bwd(&act.x, dy))
+    }
+}
+
+/// The full MLP branch of one block (residual add stays in the block).
+pub struct Mlp {
+    pub norm: RmsNorm,
+    pub up: PeftLinear,
+    pub act: Gelu,
+    pub down: PeftLinear,
+}
+
+pub struct MlpAct {
+    pub norm: RmsNormAct,
+    pub up: LinearAct,
+    pub gelu: GeluAct,
+    pub down: LinearAct,
+}
+
+impl Mlp {
+    pub fn new(prefix: &str) -> Mlp {
+        Mlp {
+            norm: RmsNorm::new(&format!("{prefix}.mlp.norm")),
+            up: PeftLinear::new(&format!("{prefix}.mlp.up")),
+            act: Gelu,
+            down: PeftLinear::new(&format!("{prefix}.mlp.down")),
+        }
+    }
+}
+
+impl Layer for Mlp {
+    type Act = MlpAct;
+
+    fn forward(&self, ctx: &Ctx, x_mid: &Tensor) -> Result<(Tensor, MlpAct)> {
+        let (xn, a_norm) = self.norm.forward(ctx, x_mid)?;
+        let (up_pre, a_up) = self.up.forward(ctx, &xn)?;
+        let (act, a_gelu) = self.act.forward(ctx, &up_pre)?;
+        let (y, a_down) = self.down.forward(ctx, &act)?;
+        Ok((
+            y,
+            MlpAct {
+                norm: a_norm,
+                up: a_up,
+                gelu: a_gelu,
+                down: a_down,
+            },
+        ))
+    }
+
+    /// Returns the branch's contribution to d(x_mid) (the caller adds
+    /// the residual term).
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &MlpAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let dact = self.down.backward(ctx, &act.down, dy, grads)?;
+        let dup = self.act.backward(ctx, &act.gelu, &dact, grads)?;
+        let dxn = self.up.backward(ctx, &act.up, &dup, grads)?;
+        self.norm.backward(ctx, &act.norm, &dxn, grads)
+    }
+}
+
+/// Tanh-approximate GELU (JAX's default `approximate=True`).
+pub fn gelu_fwd(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    for v in &mut y.data {
+        let u = GELU_C * (*v + GELU_A * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + u.tanh());
+    }
+    y
+}
+
+pub fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
+    let mut dx = x.clone();
+    for (v, &dyv) in dx.data.iter_mut().zip(&dy.data) {
+        let xv = *v;
+        let u = GELU_C * (xv + GELU_A * xv * xv * xv);
+        let th = u.tanh();
+        *v = dyv
+            * (0.5 * (1.0 + th)
+                + 0.5 * xv * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * xv * xv));
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // gelu(0) = 0, gelu(large) ~ x, gelu(-large) ~ 0
+        let x = Tensor::from_vec(&[4], vec![0.0, 5.0, -5.0, 1.0]);
+        let y = gelu_fwd(&x);
+        assert!(y.data[0].abs() < 1e-7);
+        assert!((y.data[1] - 5.0).abs() < 1e-3);
+        assert!(y.data[2].abs() < 1e-3);
+        assert!((y.data[3] - 0.8412).abs() < 1e-3); // known value
+    }
+}

@@ -1,0 +1,227 @@
+//! The reference model as an explicit layer stack over a forward tape.
+//!
+//! `refmodel.rs` used to run the whole decoder-only transformer as one
+//! monolithic forward/backward pair. This module tree breaks it into
+//! per-layer objects — [`embedding::Embedding`], [`rmsnorm::RmsNorm`],
+//! [`attention::Attention`], the PEFT-adapted [`linear::PeftLinear`],
+//! [`mlp::Mlp`]/[`mlp::Gelu`], and [`lmhead::LmHead`] — each with a
+//! `forward` that returns its output plus an activation record, and a
+//! `backward` that consumes that record and a cotangent. The records
+//! collect into an explicit [`tape::Tape`], which is what makes
+//! gradient checkpointing possible: a [`tape::CheckpointPolicy`] can
+//! drop inner block records on the way forward and recompute them
+//! (bitwise identically — every kernel is deterministic) during the
+//! backward walk.
+//!
+//! Every gradient formula is the same 1:1 transcription of the JAX
+//! model locked by `python/tests/test_ref_backward.py`; only the code
+//! layout changed.
+
+pub mod attention;
+pub mod block;
+pub mod embedding;
+pub mod linear;
+pub mod lmhead;
+pub mod mlp;
+pub mod rmsnorm;
+pub mod tape;
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::refmodel::Method;
+use crate::coordinator::manifest::ModelDims;
+use crate::tensor::Tensor;
+
+pub use self::tape::{CheckpointPolicy, Tape};
+
+/// Name-keyed parameter map (trainables + frozen + dequantized bases).
+pub struct Params {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl Params {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("missing parameter '{name}'"))
+    }
+}
+
+/// Name-keyed parameter gradients, summed across every use site.
+pub type Gradients = BTreeMap<String, Tensor>;
+
+/// Add `g` into `grads[name]` (elementwise; inserts on first use).
+pub fn accumulate(grads: &mut Gradients, name: &str, g: Tensor) {
+    match grads.get_mut(name) {
+        Some(t) => {
+            for (a, b) in t.data.iter_mut().zip(&g.data) {
+                *a += b;
+            }
+        }
+        None => {
+            grads.insert(name.to_string(), g);
+        }
+    }
+}
+
+/// Per-step adapter state resolved once and shared read-only by every
+/// microbatch (and worker thread) of a training step: CNP rotation
+/// blocks per adapted linear, plus the merged `blockdiag(R) @ W` for
+/// the weight-centric baseline. Without this, per-sequence
+/// microbatching would re-pay the block build (and, for weight-centric
+/// OFT, the cubic merge) once per sequence instead of once per step —
+/// exactly the amortization real frameworks have.
+#[derive(Default)]
+pub struct AdapterPlan {
+    /// Adapted-linear name -> CNP rotation blocks (OFT-family methods).
+    pub blocks: BTreeMap<String, Vec<Tensor>>,
+    /// Adapted-linear name -> merged weight (weight-centric OFT only).
+    pub merged: BTreeMap<String, Tensor>,
+}
+
+/// Everything a layer needs besides its direct input: the resolved
+/// parameter map, the bundle's dims and PEFT method, and the step's
+/// shared [`AdapterPlan`] (absent for paths that resolve adapters
+/// elsewhere, e.g. the decode models).
+pub struct Ctx<'a> {
+    pub params: &'a Params,
+    pub dims: &'a ModelDims,
+    pub method: Method,
+    pub plan: Option<&'a AdapterPlan>,
+}
+
+/// The surface shared by the plain `x -> y` layers (RMSNorm, the PEFT
+/// linear, GELU, the LM head). `forward` returns the output plus this
+/// layer's activation record; `backward` consumes the record and the
+/// output cotangent, accumulates parameter gradients, and returns the
+/// input cotangent. Layers with a different arity (token embedding,
+/// attention over q/k/v) keep the same forward/backward shape with
+/// bespoke signatures.
+pub trait Layer {
+    type Act;
+    fn forward(&self, ctx: &Ctx, x: &Tensor) -> Result<(Tensor, Self::Act)>;
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &Self::Act,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor>;
+}
+
+/// The decomposed reference model: embedding, N transformer blocks,
+/// final norm, LM head. Built once per bundle; stateless apart from
+/// the layer names it resolves against a [`Params`] map at run time.
+pub struct LayerStack {
+    pub embed: embedding::Embedding,
+    pub blocks: Vec<block::TransformerBlock>,
+    pub final_norm: rmsnorm::RmsNorm,
+    pub head: lmhead::LmHead,
+}
+
+impl LayerStack {
+    /// Layer objects for `dims` (names mirror the manifest contract).
+    pub fn build(dims: &ModelDims) -> LayerStack {
+        LayerStack {
+            embed: embedding::Embedding::new(),
+            blocks: (0..dims.n_layers)
+                .map(|i| block::TransformerBlock::new(&format!("layers.{i}"), dims.n_heads))
+                .collect(),
+            final_norm: rmsnorm::RmsNorm::new("final_norm"),
+            head: lmhead::LmHead::new("lm_head"),
+        }
+    }
+
+    /// Full forward pass; the returned [`Tape`] holds what `policy`
+    /// decided to keep (all block records for `CheckpointPolicy::None`,
+    /// only segment-boundary inputs for `EveryK`).
+    pub fn forward(
+        &self,
+        ctx: &Ctx,
+        input_ids: &[i32],
+        bsz: usize,
+        policy: CheckpointPolicy,
+    ) -> Result<Tape> {
+        let mut x = self.embed.forward(ctx, input_ids, bsz)?;
+        let mut boundaries = Vec::new();
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            match policy.every() {
+                None => {
+                    let (y, act) = blk.forward(ctx, &x, bsz)?;
+                    blocks.push(Some(act));
+                    x = y;
+                }
+                Some(k) => {
+                    if i % k == 0 {
+                        boundaries.push(x.clone());
+                    }
+                    // The record is dropped immediately: only the
+                    // boundary inputs survive the forward pass.
+                    let (y, _act) = blk.forward(ctx, &x, bsz)?;
+                    blocks.push(None);
+                    x = y;
+                }
+            }
+        }
+        let (xf, final_norm) = self.final_norm.forward(ctx, &x)?;
+        let (logits, head) = self.head.forward(ctx, &xf)?;
+        Ok(Tape {
+            bsz,
+            input_ids: input_ids.to_vec(),
+            policy,
+            boundaries,
+            blocks,
+            final_norm,
+            head,
+            logits,
+        })
+    }
+
+    /// Backward pass over `tape`. Checkpointed segments are re-forwarded
+    /// from their boundary input first — the recompute runs the exact
+    /// deterministic kernels of the original forward, so the rebuilt
+    /// records (and therefore every gradient) are bitwise identical to
+    /// the non-checkpointed path.
+    pub fn backward(&self, ctx: &Ctx, tape: &Tape, dlogits: &Tensor) -> Result<Gradients> {
+        let mut grads = Gradients::new();
+        let dxf = self.head.backward(ctx, &tape.head, dlogits, &mut grads)?;
+        let mut dx = self
+            .final_norm
+            .backward(ctx, &tape.final_norm, &dxf, &mut grads)?;
+
+        match tape.policy.every() {
+            None => {
+                for (blk, act) in self.blocks.iter().zip(&tape.blocks).rev() {
+                    let act = act.as_ref().context("tape record missing")?;
+                    dx = blk.backward(ctx, act, &dx, &mut grads)?;
+                }
+            }
+            Some(k) => {
+                let n = self.blocks.len();
+                let n_segs = n.div_ceil(k);
+                for seg in (0..n_segs).rev() {
+                    let start = seg * k;
+                    let end = (start + k).min(n);
+                    // Recompute this segment's records from its
+                    // checkpointed input.
+                    let mut x = tape.boundaries[seg].clone();
+                    let mut acts = Vec::with_capacity(end - start);
+                    for blk in &self.blocks[start..end] {
+                        let (y, act) = blk.forward(ctx, &x, tape.bsz)?;
+                        acts.push(act);
+                        x = y;
+                    }
+                    for (blk, act) in self.blocks[start..end].iter().zip(&acts).rev() {
+                        dx = blk.backward(ctx, act, &dx, &mut grads)?;
+                    }
+                }
+            }
+        }
+
+        self.embed.backward(ctx, &tape.input_ids, &dx, &mut grads)?;
+        Ok(grads)
+    }
+}

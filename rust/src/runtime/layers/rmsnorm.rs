@@ -1,0 +1,94 @@
+//! RMSNorm with a trainable per-channel gain.
+
+use anyhow::Result;
+
+use super::{accumulate, Ctx, Gradients, Layer};
+use crate::runtime::refmodel::Method;
+use crate::tensor::Tensor;
+
+/// One RMSNorm instance, resolving its gain by parameter name.
+pub struct RmsNorm {
+    pub name: String,
+}
+
+/// Saved input plus the per-row rsqrt factors the backward reuses.
+pub struct RmsNormAct {
+    pub x: Tensor,
+    pub r: Vec<f32>,
+}
+
+impl RmsNorm {
+    pub fn new(name: &str) -> RmsNorm {
+        RmsNorm { name: name.into() }
+    }
+}
+
+impl Layer for RmsNorm {
+    type Act = RmsNormAct;
+
+    fn forward(&self, ctx: &Ctx, x: &Tensor) -> Result<(Tensor, RmsNormAct)> {
+        let g = ctx.params.get(&self.name)?;
+        let (y, r) = rmsnorm_fwd(x, &g.data);
+        Ok((y, RmsNormAct { x: x.clone(), r }))
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        act: &RmsNormAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let g = ctx.params.get(&self.name)?;
+        let (dx, dg) = rmsnorm_bwd(&act.x, &g.data, &act.r, dy);
+        if ctx.method == Method::Full {
+            accumulate(grads, &self.name, dg);
+        }
+        Ok(dx)
+    }
+}
+
+/// RMSNorm forward: y = x * rsqrt(mean(x^2) + 1e-6) * g. Returns the
+/// per-row rsqrt factors for the backward pass.
+pub fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> (Tensor, Vec<f32>) {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut y = Tensor::zeros(&[m, d]);
+    let mut rs = vec![0f32; m];
+    for row in 0..m {
+        let xr = &x.data[row * d..(row + 1) * d];
+        let mut s = 0f32;
+        for &v in xr {
+            s += v * v;
+        }
+        let r = 1.0 / (s / d as f32 + 1e-6).sqrt();
+        rs[row] = r;
+        let yr = &mut y.data[row * d..(row + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * r * g[j];
+        }
+    }
+    (y, rs)
+}
+
+/// RMSNorm backward: returns (dx, dg).
+pub fn rmsnorm_bwd(x: &Tensor, g: &[f32], r: &[f32], dy: &Tensor) -> (Tensor, Tensor) {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut dx = Tensor::zeros(&[m, d]);
+    let mut dg = Tensor::zeros(&[d]);
+    for row in 0..m {
+        let xr = &x.data[row * d..(row + 1) * d];
+        let dyr = &dy.data[row * d..(row + 1) * d];
+        let rr = r[row];
+        let mut s = 0f32;
+        for j in 0..d {
+            s += dyr[j] * g[j] * xr[j];
+            dg.data[j] += dyr[j] * xr[j] * rr;
+        }
+        let f = rr * rr * rr / d as f32 * s;
+        let dxr = &mut dx.data[row * d..(row + 1) * d];
+        for j in 0..d {
+            dxr[j] = dyr[j] * g[j] * rr - xr[j] * f;
+        }
+    }
+    (dx, dg)
+}

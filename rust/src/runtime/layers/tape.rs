@@ -1,0 +1,107 @@
+//! The forward tape and the gradient-checkpointing policy that decides
+//! how much of it survives the forward pass.
+
+use anyhow::{bail, Result};
+
+use super::block::BlockAct;
+use super::lmhead::LmHeadAct;
+use super::rmsnorm::RmsNormAct;
+use crate::tensor::Tensor;
+
+/// What the tape keeps for the transformer blocks.
+///
+/// * `None` — every block's full activation record is stored (fastest
+///   backward, highest activation memory).
+/// * `EveryK(k)` — only the block *input* at every k-th block boundary
+///   is stored; the records inside each k-block segment are recomputed
+///   from that boundary during backward. Because every kernel is
+///   deterministic, the recomputed records — and therefore the
+///   gradients — are bitwise identical to the non-checkpointed path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CheckpointPolicy {
+    #[default]
+    None,
+    EveryK(usize),
+}
+
+impl CheckpointPolicy {
+    /// Parse a CLI/config spelling: `none` or `every-<k>` (k >= 1).
+    pub fn parse(s: &str) -> Result<CheckpointPolicy> {
+        if s == "none" {
+            return Ok(CheckpointPolicy::None);
+        }
+        if let Some(k) = s.strip_prefix("every-") {
+            match k.parse::<usize>() {
+                Ok(k) if k >= 1 => return Ok(CheckpointPolicy::EveryK(k)),
+                _ => {}
+            }
+        }
+        bail!(
+            "unknown checkpoint policy '{s}'; valid policies: none, every-<k> \
+             (e.g. every-1, every-2)"
+        )
+    }
+
+    /// The segment length, or `None` when checkpointing is off.
+    pub fn every(self) -> Option<usize> {
+        match self {
+            CheckpointPolicy::None => None,
+            CheckpointPolicy::EveryK(k) => Some(k.max(1)),
+        }
+    }
+
+    /// Canonical spelling (inverse of [`CheckpointPolicy::parse`]).
+    pub fn label(self) -> String {
+        match self {
+            CheckpointPolicy::None => "none".into(),
+            CheckpointPolicy::EveryK(k) => format!("every-{k}"),
+        }
+    }
+}
+
+/// Activation records of one forward pass, in layer order: what the
+/// backward pass consumes, and the unit the checkpoint policy trades
+/// against recompute time.
+pub struct Tape {
+    pub bsz: usize,
+    pub input_ids: Vec<i32>,
+    pub policy: CheckpointPolicy,
+    /// Block inputs at segment boundaries (`EveryK` only; empty under
+    /// `None`).
+    pub boundaries: Vec<Tensor>,
+    /// Per-block records; `None` where the policy dropped them.
+    pub blocks: Vec<Option<BlockAct>>,
+    pub final_norm: RmsNormAct,
+    pub head: LmHeadAct,
+    /// (bsz * seq_len, vocab) output logits.
+    pub logits: Tensor,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(CheckpointPolicy::parse("none").unwrap(), CheckpointPolicy::None);
+        assert_eq!(
+            CheckpointPolicy::parse("every-2").unwrap(),
+            CheckpointPolicy::EveryK(2)
+        );
+        assert_eq!(CheckpointPolicy::parse("every-1").unwrap().label(), "every-1");
+        assert_eq!(CheckpointPolicy::None.label(), "none");
+        for bad in ["", "every-0", "every-x", "all", "every"] {
+            let err = match CheckpointPolicy::parse(bad) {
+                Err(e) => format!("{e:#}"),
+                Ok(p) => panic!("'{bad}' parsed as {p:?}"),
+            };
+            assert!(err.contains("every-<k>"), "error should list options: {err}");
+        }
+    }
+
+    #[test]
+    fn policy_every_accessor() {
+        assert_eq!(CheckpointPolicy::None.every(), None);
+        assert_eq!(CheckpointPolicy::EveryK(3).every(), Some(3));
+    }
+}

@@ -19,6 +19,7 @@
 //! should be uploaded once and reused across steps.
 
 pub mod hlo_cost;
+pub mod layers;
 pub mod micro;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -28,10 +29,33 @@ pub mod refmodel;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::manifest::Manifest;
 use self::micro::MicroSpec;
+
+pub use self::layers::CheckpointPolicy;
+
+/// Training execution options carried alongside the train-step graph:
+/// the gradient-checkpoint policy and the data-parallel worker count.
+/// The reference engine guarantees bitwise-identical step outputs for
+/// every combination (see [`refmodel::RefBundle::loss_and_grads_opts`]);
+/// backends without native support reject non-default options instead
+/// of silently ignoring them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrainOpts {
+    pub checkpoint: CheckpointPolicy,
+    pub workers: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            checkpoint: CheckpointPolicy::None,
+            workers: 1,
+        }
+    }
+}
 
 /// Dtype names used by manifest.json.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -326,6 +350,19 @@ pub trait EngineBackend {
     fn platform(&self) -> String;
     fn upload(&self, v: &Value) -> Result<Buffer>;
     fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>>;
+    /// Load the train-step graph with explicit [`TrainOpts`]. Backends
+    /// without native checkpointing / data-parallel support inherit
+    /// this default, which serves the plain graph for default options
+    /// and rejects anything else rather than silently ignoring it.
+    fn load_train_step(&self, man: &Manifest, opts: TrainOpts) -> Result<Box<dyn GraphBackend>> {
+        ensure!(
+            opts == TrainOpts::default(),
+            "backend '{}' supports neither --grad-checkpoint nor --workers \
+             (use the reference backend)",
+            self.platform()
+        );
+        self.load_bundle_graph(man, BundleRole::TrainStep)
+    }
     fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec)
         -> Result<Box<dyn GraphBackend>>;
     /// Build an adapter-bound incremental decoder: trainables + fixed
@@ -490,6 +527,15 @@ impl Engine {
         Ok(Graph {
             name: format!("{}/{}", man.tag, role.label()),
             inner: self.backend.load_bundle_graph(man, role)?,
+        })
+    }
+
+    /// Load the train-step graph with explicit gradient-checkpoint /
+    /// data-parallel options (see [`TrainOpts`]).
+    pub fn load_train_step(&self, man: &Manifest, opts: TrainOpts) -> Result<Graph> {
+        Ok(Graph {
+            name: format!("{}/train_step[{},w{}]", man.tag, opts.checkpoint.label(), opts.workers),
+            inner: self.backend.load_train_step(man, opts)?,
         })
     }
 

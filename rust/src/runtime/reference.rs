@@ -17,7 +17,7 @@ use super::micro::MicroSpec;
 use super::refmodel::{self, DecodeModel, KvCache, RefBundle};
 use super::{
     lit_f32, Buffer, BundleRole, DecodeSessionBackend, DecoderBackend, EngineBackend,
-    GraphBackend, Value,
+    GraphBackend, TrainOpts, Value,
 };
 use crate::coordinator::manifest::Manifest;
 use crate::peft;
@@ -44,7 +44,23 @@ impl EngineBackend for ReferenceEngine {
 
     fn load_bundle_graph(&self, man: &Manifest, role: BundleRole) -> Result<Box<dyn GraphBackend>> {
         let bundle = RefBundle::from_manifest(man)?;
-        Ok(Box::new(RefBundleGraph { bundle, role }))
+        Ok(Box::new(RefBundleGraph {
+            bundle,
+            role,
+            opts: TrainOpts::default(),
+        }))
+    }
+
+    /// The reference engine executes any [`TrainOpts`] natively; the
+    /// per-sequence microbatch decomposition makes every combination
+    /// bitwise identical (see `refmodel::loss_and_grads_opts`).
+    fn load_train_step(&self, man: &Manifest, opts: TrainOpts) -> Result<Box<dyn GraphBackend>> {
+        let bundle = RefBundle::from_manifest(man)?;
+        Ok(Box::new(RefBundleGraph {
+            bundle,
+            role: BundleRole::TrainStep,
+            opts,
+        }))
     }
 
     fn load_micro_kernel(
@@ -121,12 +137,13 @@ fn buffers_to_values<'a>(inputs: &[&'a Buffer]) -> Result<Vec<&'a Value>> {
 struct RefBundleGraph {
     bundle: RefBundle,
     role: BundleRole,
+    opts: TrainOpts,
 }
 
 impl GraphBackend for RefBundleGraph {
     fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
         match self.role {
-            BundleRole::TrainStep => self.bundle.train_step(inputs),
+            BundleRole::TrainStep => self.bundle.train_step_opts(inputs, self.opts),
             BundleRole::EvalLoss => self.bundle.eval_loss(inputs),
             BundleRole::LogitsLast => self.bundle.logits_last(inputs),
         }

@@ -7,6 +7,17 @@
 //! update — so `train_step`, `eval_loss` and `logits_last` run without
 //! artifacts, Python, or an accelerator.
 //!
+//! The model itself lives in [`super::layers`] as an explicit layer
+//! stack with a forward [`Tape`]; this module owns the bundle-level
+//! contracts (graph I/O, parameter assembly, dequantization, Adam) and
+//! the microbatched training driver. Training decomposes every batch
+//! into per-sequence microbatches whose gradient partials are combined
+//! by a fixed-order pairwise tree reduction — so the summed gradients
+//! (and the loss curve) are bitwise identical however many worker
+//! threads execute the microbatches, and bitwise identical with or
+//! without gradient checkpointing (recompute reruns the same
+//! deterministic kernels on the same inputs).
+//!
 //! Every gradient formula here is locked against `jax.grad` of the L2
 //! model by `python/tests/test_ref_backward.py`; the Rust code is a 1:1
 //! transcription of that file's numpy mirror. The OFTv2 forward is
@@ -15,15 +26,21 @@
 //! paper. The weight-centric baseline deliberately *does* materialize
 //! the merge so timing comparisons remain honest.
 
-use std::collections::BTreeMap;
-
 use anyhow::{bail, ensure, Context, Result};
 
-use super::{lit_f32, scalar_f32, Value};
+use super::layers::lmhead::{nll_dlogits, nll_stats, split_tokens};
+use super::layers::linear::build_cnp_blocks as build_cnp_blocks_impl;
+use super::layers::{AdapterPlan, CheckpointPolicy, Ctx, Gradients, LayerStack, Tape};
+use super::{lit_f32, scalar_f32, TrainOpts, Value};
 use crate::coordinator::manifest::{Manifest, ModelDims, ParamSpec, QuantSpec};
 use crate::peft;
 use crate::quant::{AwqTensor, Nf4Tensor};
 use crate::tensor::Tensor;
+
+// Stable public paths for the shared kernels (they moved into the
+// layers tree with the layer/tape decomposition).
+pub use super::layers::linear::{block_rotate_fast, build_cnp_blocks, cnp_backward};
+pub use super::layers::Params;
 
 /// PEFT method of a bundle (mirrors configs.METHODS).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +54,10 @@ pub enum Method {
     QOft,
 }
 
+/// The spellings [`Method::parse`] accepts, in manifest order.
+pub const METHOD_NAMES: [&str; 7] =
+    ["full", "none", "lora", "oft_merged", "oft_v2", "qlora", "qoft"];
+
 impl Method {
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
@@ -47,7 +68,10 @@ impl Method {
             "oft_v2" => Method::OftV2,
             "qlora" => Method::QLora,
             "qoft" => Method::QOft,
-            other => bail!("unknown method '{other}'"),
+            other => bail!(
+                "unknown method '{other}'; valid methods: {}",
+                METHOD_NAMES.join(", ")
+            ),
         })
     }
 
@@ -76,7 +100,7 @@ impl QuantKind {
             "none" => QuantKind::None,
             "nf4" => QuantKind::Nf4,
             "awq" => QuantKind::Awq,
-            other => bail!("unknown quant backend '{other}'"),
+            other => bail!("unknown quant backend '{other}'; valid backends: none, nf4, awq"),
         })
     }
 }
@@ -87,6 +111,7 @@ pub struct RefBundle {
     pub dims: ModelDims,
     pub method: Method,
     pub quant: QuantKind,
+    stack: LayerStack,
     trainable: Vec<ParamSpec>,
     frozen: Vec<ParamSpec>,
     quantized: Vec<QuantSpec>,
@@ -107,6 +132,7 @@ impl RefBundle {
             dims: man.model,
             method,
             quant,
+            stack: LayerStack::build(&man.model),
             trainable: man.trainable.clone(),
             frozen: man.frozen.clone(),
             quantized: man.quantized.clone(),
@@ -120,6 +146,49 @@ impl RefBundle {
 
     fn n_fixed(&self) -> usize {
         self.frozen.len() + self.quantized.len()
+    }
+
+    fn ctx<'a>(&'a self, params: &'a Params, plan: &'a AdapterPlan) -> Ctx<'a> {
+        Ctx {
+            params,
+            dims: &self.dims,
+            method: self.method,
+            plan: Some(plan),
+        }
+    }
+
+    /// Names of the linears this bundle actually adapts, derived from
+    /// the manifest's trainable specs (every OFT-family trainable is a
+    /// `<linear>.oft_q`) — no second hard-coded list to drift.
+    fn adapted_linear_names(&self) -> Vec<String> {
+        self.trainable
+            .iter()
+            .filter_map(|s| s.name.strip_suffix(".oft_q"))
+            .map(str::to_string)
+            .collect()
+    }
+
+    /// Resolve the step's shared adapter state once: CNP blocks per
+    /// adapted linear (OFT family) and the merged `blockdiag(R) @ W`
+    /// (weight-centric baseline). Every microbatch — on every worker —
+    /// reads this one plan, so per-sequence decomposition does not
+    /// re-pay per-step costs per sequence.
+    fn adapter_plan(&self, params: &Params) -> Result<AdapterPlan> {
+        let mut plan = AdapterPlan::default();
+        if !(self.method.is_oft_input_centric() || self.method == Method::OftMerged) {
+            return Ok(plan);
+        }
+        for name in self.adapted_linear_names() {
+            let packed = params.get(&format!("{name}.oft_q"))?;
+            let blocks = build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
+            if self.method == Method::OftMerged {
+                let w = params.get(&name)?;
+                let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
+                plan.merged.insert(name.clone(), rd.matmul(w)?);
+            }
+            plan.blocks.insert(name, blocks);
+        }
+        Ok(plan)
     }
 
     /// (din, dout) of an adapted linear (mirrors manifest.linear_shape).
@@ -156,7 +225,7 @@ impl RefBundle {
             self.n_fixed(),
             fixed.len()
         );
-        let mut map = BTreeMap::new();
+        let mut map = std::collections::BTreeMap::new();
         for (spec, v) in self.trainable.iter().zip(trainables) {
             map.insert(spec.name.clone(), value_tensor(v, &spec.shape)?);
         }
@@ -224,8 +293,16 @@ impl RefBundle {
     // -----------------------------------------------------------------
 
     /// `train_step(tr, m, v, fixed, tokens, mask, lr, t)` ->
-    /// `new_tr + new_m + new_v + [loss]`.
+    /// `new_tr + new_m + new_v + [loss]`, with default train options
+    /// (no checkpointing, one worker).
     pub fn train_step(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.train_step_opts(inputs, TrainOpts::default())
+    }
+
+    /// As [`RefBundle::train_step`] with explicit gradient-checkpoint /
+    /// worker options. The outputs are bitwise identical across every
+    /// `opts` combination — see [`RefBundle::loss_and_grads_opts`].
+    pub fn train_step_opts(&self, inputs: &[&Value], opts: TrainOpts) -> Result<Vec<Value>> {
         let n = self.trainable.len();
         let want = 3 * n + self.n_fixed() + 4;
         ensure!(
@@ -244,7 +321,7 @@ impl RefBundle {
         let t_step = scalar_f32(data[3])?;
 
         let params = self.assemble_params(tr, fixed)?;
-        let (loss, mut grads) = self.loss_and_grads(&params, tokens, mask)?;
+        let (loss, mut grads) = self.loss_and_grads_opts(&params, tokens, mask, opts)?;
 
         let (b1, b2, eps) = (self.adam.0 as f32, self.adam.1 as f32, self.adam.2 as f32);
         let bc1 = 1.0 - b1.powf(t_step);
@@ -359,312 +436,164 @@ impl RefBundle {
     }
 
     // -----------------------------------------------------------------
-    // Forward
+    // Forward / backward (delegating to the layer stack)
     // -----------------------------------------------------------------
 
-    fn forward(&self, params: &Params, input_ids: &[i32], bsz: usize) -> Result<Fwd> {
-        let t = self.dims.seq_len;
-        let d = self.dims.d_model;
-        let h = self.dims.n_heads;
-        let hd = d / h;
-        let m = bsz * t;
-        ensure!(input_ids.len() == m, "input ids length mismatch");
-
-        let tok_emb = params.get("embed.tok")?;
-        let pos_emb = params.get("embed.pos")?;
-        let vocab = self.dims.vocab;
-        let mut x = Tensor::zeros(&[m, d]);
-        for (row, &id) in input_ids.iter().enumerate() {
-            ensure!((id as usize) < vocab, "token id {id} out of vocab {vocab}");
-            let tpos = row % t;
-            let dst = &mut x.data[row * d..(row + 1) * d];
-            let te = &tok_emb.data[id as usize * d..(id as usize + 1) * d];
-            let pe = &pos_emb.data[tpos * d..(tpos + 1) * d];
-            for j in 0..d {
-                dst[j] = te[j] + pe[j];
-            }
-        }
-
-        let mut layers = Vec::with_capacity(self.dims.n_layers);
-        for i in 0..self.dims.n_layers {
-            let pre = format!("layers.{i}");
-            let xin = x.clone();
-            let g1 = params.get(&format!("{pre}.attn.norm"))?;
-            let (xn1, r1) = rmsnorm_fwd(&xin, &g1.data);
-            let (q, cq) = self.linear_fwd(params, &format!("{pre}.attn.wq"), &xn1)?;
-            let (k, ck) = self.linear_fwd(params, &format!("{pre}.attn.wk"), &xn1)?;
-            let (v, cv) = self.linear_fwd(params, &format!("{pre}.attn.wv"), &xn1)?;
-            let (o, att) = attention_fwd(&q, &k, &v, bsz, t, h, hd);
-            let (ywo, co) = self.linear_fwd(params, &format!("{pre}.attn.wo"), &o)?;
-            let x_mid = xin.add(&ywo)?;
-            let g2 = params.get(&format!("{pre}.mlp.norm"))?;
-            let (xn2, r2) = rmsnorm_fwd(&x_mid, &g2.data);
-            let (up_pre, cup) = self.linear_fwd(params, &format!("{pre}.mlp.up"), &xn2)?;
-            let act = gelu_fwd(&up_pre);
-            let (ydown, cdown) = self.linear_fwd(params, &format!("{pre}.mlp.down"), &act)?;
-            x = x_mid.add(&ydown)?;
-            layers.push(LayerFwd {
-                xin,
-                r1,
-                cq,
-                ck,
-                cv,
-                q,
-                k,
-                v,
-                att,
-                co,
-                x_mid,
-                r2,
-                cup,
-                up_pre,
-                cdown,
-            });
-        }
-
-        let gf = params.get("final_norm")?;
-        let (xf, rf) = rmsnorm_fwd(&x, &gf.data);
-        let head = params.get("lm_head")?;
-        let logits = xf.matmul(head)?;
-        Ok(Fwd {
-            bsz,
-            input_ids: input_ids.to_vec(),
-            x_final: x,
-            rf,
-            xf,
-            logits,
-            layers,
-        })
+    /// Whole-batch forward pass with a full tape (eval / logits paths).
+    fn forward(&self, params: &Params, input_ids: &[i32], bsz: usize) -> Result<Tape> {
+        let plan = self.adapter_plan(params)?;
+        let ctx = self.ctx(params, &plan);
+        self.stack
+            .forward(&ctx, input_ids, bsz, CheckpointPolicy::None)
     }
 
-    fn linear_fwd(&self, params: &Params, name: &str, x: &Tensor) -> Result<(Tensor, LinCache)> {
-        let w = params.get(name)?.clone();
-        let mut cache = LinCache {
-            name: name.to_string(),
-            x: x.clone(),
-            w,
-            lora: None,
-            oft: None,
-            rw: None,
-        };
-        let y = match self.method {
-            Method::Lora | Method::QLora => {
-                let a = params.get(&format!("{name}.lora_a"))?.clone();
-                let b = params.get(&format!("{name}.lora_b"))?.clone();
-                let scale = (self.dims.lora_alpha / self.dims.lora_r as f64) as f32;
-                let xa = x.matmul(&a)?;
-                let y = x.matmul(&cache.w)?.add(&xa.matmul(&b)?.scale(scale))?;
-                cache.lora = Some(LoraCache { a, b, xa, scale });
-                y
-            }
-            Method::OftV2 | Method::QOft => {
-                let packed = params.get(&format!("{name}.oft_q"))?.clone();
-                let blocks = build_cnp_blocks(&packed, self.dims.block_b, self.dims.neumann_k)?;
-                let z = block_rotate_fast(x, &blocks)?;
-                let y = z.matmul(&cache.w)?;
-                cache.oft = Some(OftCache { packed, blocks });
-                y
-            }
-            Method::OftMerged => {
-                let packed = params.get(&format!("{name}.oft_q"))?.clone();
-                let blocks = build_cnp_blocks(&packed, self.dims.block_b, self.dims.neumann_k)?;
-                // The weight-centric baseline: materialize blockdiag(R)
-                // and pay the cubic matrix-matrix merge every forward.
-                let rd = peft::blockdiag_dense(&blocks, cache.w.shape[0]);
-                let rw = rd.matmul(&cache.w)?;
-                let y = x.matmul(&rw)?;
-                cache.oft = Some(OftCache { packed, blocks });
-                cache.rw = Some(rw);
-                y
-            }
-            Method::Full | Method::None => x.matmul(&cache.w)?,
-        };
-        Ok((y, cache))
-    }
-
-    // -----------------------------------------------------------------
-    // Backward
-    // -----------------------------------------------------------------
-
-    /// Mean masked NLL and gradients for every trainable parameter.
+    /// Mean masked NLL and gradients for every trainable parameter
+    /// (default options: no checkpointing, one worker).
     pub fn loss_and_grads(
         &self,
         params: &Params,
         tokens: &[i32],
         mask: &[f32],
-    ) -> Result<(f32, BTreeMap<String, Tensor>)> {
+    ) -> Result<(f32, Gradients)> {
+        self.loss_and_grads_opts(params, tokens, mask, TrainOpts::default())
+    }
+
+    /// Mean masked NLL + gradients, computed as per-sequence
+    /// microbatches combined by a fixed-order pairwise tree reduction.
+    ///
+    /// The decomposition is *worker-independent*: each sequence of the
+    /// batch is one microbatch, every microbatch's forward/backward
+    /// runs the same deterministic kernels whatever thread executes it,
+    /// and the reduction tree is ordered by microbatch index — so the
+    /// loss and every gradient are bitwise identical for 1, 2, or N
+    /// workers, with or without gradient checkpointing.
+    pub fn loss_and_grads_opts(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        mask: &[f32],
+        opts: TrainOpts,
+    ) -> Result<(f32, Gradients)> {
         let (bsz, t) = (self.dims.batch, self.dims.seq_len);
         ensure!(tokens.len() == bsz * (t + 1), "tokens shape mismatch");
         ensure!(mask.len() == bsz * t, "mask shape mismatch");
         self.validate_token_ids(tokens)?;
-        let (input_ids, targets) = split_tokens(tokens, bsz, t);
-        let fwd = self.forward(params, &input_ids, bsz)?;
 
-        let v = self.dims.vocab;
-        let m = bsz * t;
-        let (sum_nll, raw_count, logp) = nll_stats(&fwd.logits, &targets, mask);
-        let count = raw_count.max(1.0);
-        let loss = sum_nll / count;
+        // The NLL normalizer is global across microbatches. Mask
+        // entries are 0/1, so this sum is an exact small integer in f32
+        // regardless of summation order.
+        let count = mask.iter().sum::<f32>().max(1.0);
+        let inv_count = 1.0 / count;
 
-        // d(loss)/d(logits) = (softmax - onehot) * mask / count
-        let mut dlogits = Tensor::zeros(&[m, v]);
-        for row in 0..m {
-            let scale = mask[row] / count;
-            if scale == 0.0 {
-                continue;
-            }
-            let lp = &logp.data[row * v..(row + 1) * v];
-            let dl = &mut dlogits.data[row * v..(row + 1) * v];
-            for j in 0..v {
-                dl[j] = lp[j].exp() * scale;
-            }
-            dl[targets[row] as usize] -= scale;
-        }
+        // Per-step adapter state (CNP blocks, merged weights) resolved
+        // once, shared read-only by every microbatch and worker.
+        let plan = self.adapter_plan(params)?;
+        let parts = run_sharded(bsz, opts.workers, |seq| {
+            self.seq_microbatch(params, &plan, tokens, mask, seq, inv_count, opts.checkpoint)
+        })?;
 
-        let grads = self.backward(params, &fwd, &dlogits)?;
-        Ok((loss, grads))
+        // Fixed-order pairwise tree over microbatch index.
+        let (sum_nll, grads) = tree_reduce(parts, |(nll_a, ga), (nll_b, gb)| {
+            (nll_a + nll_b, add_grads(ga, gb))
+        })
+        .context("batch has no sequences")?;
+        Ok((sum_nll / count, grads))
     }
 
-    fn backward(
+    /// Forward + backward of one sequence: returns its (sum_nll,
+    /// gradient partial).
+    fn seq_microbatch(
         &self,
         params: &Params,
-        fwd: &Fwd,
-        dlogits: &Tensor,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        let full = self.method == Method::Full;
-        let (bsz, t) = (fwd.bsz, self.dims.seq_len);
-        let d = self.dims.d_model;
-        let h = self.dims.n_heads;
-        let hd = d / h;
-        let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
-
-        let head = params.get("lm_head")?;
-        if full {
-            accumulate(&mut grads, "lm_head", fwd.xf.transpose2().matmul(dlogits)?);
-        }
-        let dxf = dlogits.matmul(&head.transpose2())?;
-        let gf = params.get("final_norm")?;
-        let (mut dx, dgf) = rmsnorm_bwd(&fwd.x_final, &gf.data, &fwd.rf, &dxf);
-        if full {
-            accumulate(&mut grads, "final_norm", dgf);
-        }
-
-        for i in (0..self.dims.n_layers).rev() {
-            let pre = format!("layers.{i}");
-            let c = &fwd.layers[i];
-            let dact = self.linear_bwd(&c.cdown, &dx, &mut grads)?;
-            let dup = gelu_bwd(&c.up_pre, &dact);
-            let dxn2 = self.linear_bwd(&c.cup, &dup, &mut grads)?;
-            let g2 = params.get(&format!("{pre}.mlp.norm"))?;
-            let (dxmid_n, dg2) = rmsnorm_bwd(&c.x_mid, &g2.data, &c.r2, &dxn2);
-            if full {
-                accumulate(&mut grads, &format!("{pre}.mlp.norm"), dg2);
-            }
-            let dxmid = dx.add(&dxmid_n)?;
-            let do_ = self.linear_bwd(&c.co, &dxmid, &mut grads)?;
-            let (dq, dk, dv) = attention_bwd(&c.q, &c.k, &c.v, &c.att, &do_, bsz, t, h, hd);
-            let dxn1 = self
-                .linear_bwd(&c.cq, &dq, &mut grads)?
-                .add(&self.linear_bwd(&c.ck, &dk, &mut grads)?)?
-                .add(&self.linear_bwd(&c.cv, &dv, &mut grads)?)?;
-            let g1 = params.get(&format!("{pre}.attn.norm"))?;
-            let (dxin_n, dg1) = rmsnorm_bwd(&c.xin, &g1.data, &c.r1, &dxn1);
-            if full {
-                accumulate(&mut grads, &format!("{pre}.attn.norm"), dg1);
-            }
-            dx = dxmid.add(&dxin_n)?;
-        }
-
-        if full {
-            let vocab = self.dims.vocab;
-            let mut dtok = Tensor::zeros(&[vocab, d]);
-            let mut dpos = Tensor::zeros(&[t, d]);
-            for (row, &id) in fwd.input_ids.iter().enumerate() {
-                let tpos = row % t;
-                let src = &dx.data[row * d..(row + 1) * d];
-                let te = &mut dtok.data[id as usize * d..(id as usize + 1) * d];
-                for j in 0..d {
-                    te[j] += src[j];
-                }
-                let pe = &mut dpos.data[tpos * d..(tpos + 1) * d];
-                for j in 0..d {
-                    pe[j] += src[j];
-                }
-            }
-            accumulate(&mut grads, "embed.tok", dtok);
-            accumulate(&mut grads, "embed.pos", dpos);
-        }
-        Ok(grads)
+        plan: &AdapterPlan,
+        tokens: &[i32],
+        mask: &[f32],
+        seq: usize,
+        inv_count: f32,
+        policy: CheckpointPolicy,
+    ) -> Result<(f32, Gradients)> {
+        let t = self.dims.seq_len;
+        let row = &tokens[seq * (t + 1)..(seq + 1) * (t + 1)];
+        let (input_ids, targets) = split_tokens(row, 1, t);
+        let mask_row = &mask[seq * t..(seq + 1) * t];
+        let ctx = self.ctx(params, plan);
+        let tape = self.stack.forward(&ctx, &input_ids, 1, policy)?;
+        let (sum_nll, _, logp) = nll_stats(&tape.logits, &targets, mask_row);
+        let dlogits = nll_dlogits(&logp, &targets, mask_row, inv_count);
+        let grads = self.stack.backward(&ctx, &tape, &dlogits)?;
+        Ok((sum_nll, grads))
     }
+}
 
-    /// Backward of one adapted linear: accumulates parameter grads and
-    /// returns d(loss)/d(input).
-    fn linear_bwd(
-        &self,
-        c: &LinCache,
-        dy: &Tensor,
-        grads: &mut BTreeMap<String, Tensor>,
-    ) -> Result<Tensor> {
-        let b = self.dims.block_b;
-        match self.method {
-            Method::Full => {
-                accumulate(grads, &c.name, c.x.transpose2().matmul(dy)?);
-                dy.matmul(&c.w.transpose2())
-            }
-            Method::None => dy.matmul(&c.w.transpose2()),
-            Method::Lora | Method::QLora => {
-                let lc = c.lora.as_ref().context("missing lora cache")?;
-                let dxa = dy.matmul(&lc.b.transpose2())?.scale(lc.scale);
-                accumulate(
-                    grads,
-                    &format!("{}.lora_b", c.name),
-                    lc.xa.transpose2().matmul(dy)?.scale(lc.scale),
-                );
-                accumulate(
-                    grads,
-                    &format!("{}.lora_a", c.name),
-                    c.x.transpose2().matmul(&dxa)?,
-                );
-                dy.matmul(&c.w.transpose2())?.add(&dxa.matmul(&lc.a.transpose2())?)
-            }
-            Method::OftV2 | Method::QOft => {
-                let oc = c.oft.as_ref().context("missing oft cache")?;
-                let dz = dy.matmul(&c.w.transpose2())?;
-                let dr = block_rotate_grad_r(&c.x, &dz, b);
-                let dp = cnp_backward_all(&oc.packed, b, self.dims.neumann_k, &dr)?;
-                accumulate(grads, &format!("{}.oft_q", c.name), dp);
-                block_rotate_transposed(&dz, &oc.blocks)
-            }
-            Method::OftMerged => {
-                let oc = c.oft.as_ref().context("missing oft cache")?;
-                let rw = c.rw.as_ref().context("missing merged weight cache")?;
-                let dm = c.x.transpose2().matmul(dy)?; // (din, dout)
-                let din = c.w.shape[0];
-                let nb = din / b;
-                let dout = c.w.shape[1];
-                let mut dr = Vec::with_capacity(nb);
-                for bi in 0..nb {
-                    let dm_b = Tensor::from_vec(
-                        &[b, dout],
-                        dm.data[bi * b * dout..(bi + 1) * b * dout].to_vec(),
-                    );
-                    let w_b = Tensor::from_vec(
-                        &[b, dout],
-                        c.w.data[bi * b * dout..(bi + 1) * b * dout].to_vec(),
-                    );
-                    dr.push(dm_b.matmul(&w_b.transpose2())?);
-                }
-                let dp = cnp_backward_all(&oc.packed, b, self.dims.neumann_k, &dr)?;
-                accumulate(grads, &format!("{}.oft_q", c.name), dp);
-                dy.matmul(&rw.transpose2())
+/// Elementwise sum of two gradient partials (`a` from the lower
+/// microbatch index).
+fn add_grads(mut a: Gradients, b: Gradients) -> Gradients {
+    for (name, g) in b {
+        super::layers::accumulate(&mut a, &name, g);
+    }
+    a
+}
+
+/// Fixed-order pairwise tree reduction: combine(parts[0], parts[1]),
+/// combine(parts[2], parts[3]), ... repeatedly. The tree shape depends
+/// only on `parts.len()`, never on which threads produced the parts.
+fn tree_reduce<T>(mut parts: Vec<T>, combine: impl Fn(T, T) -> T) -> Option<T> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
             }
         }
+        parts = next;
     }
+    parts.pop()
+}
+
+/// Run `f(0..n)` across `workers` scoped threads (contiguous shards),
+/// returning the results in index order. Results are position-indexed,
+/// so the output — and everything downstream — is independent of the
+/// worker count; workers only decide who computes what. Worker threads
+/// cap the tensor kernels' nested parallelism at one thread each: the
+/// coarse per-microbatch parallelism replaces the per-matmul row
+/// threading (which per-row determinism makes bitwise irrelevant).
+fn run_sharded<T: Send>(
+    n: usize,
+    workers: usize,
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, chunk) in slots.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                crate::tensor::set_thread_cap(1);
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(w * per + j));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("worker missed a microbatch"))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
 // Incremental (KV-cached) decoding
 // ---------------------------------------------------------------------------
+
+use super::layers::linear::block_rotate_fast as rotate_rows;
+use super::layers::mlp::gelu_fwd;
+use super::layers::rmsnorm::rmsnorm_fwd;
 
 /// One adapted linear with the adapter resolved at build time: decode
 /// steps pay only the per-token apply, never dequantization or CNP
@@ -681,8 +610,8 @@ enum DecLinear {
 }
 
 impl DecLinear {
-    /// Apply to a (1, din) row; mirrors `linear_fwd` operation order so
-    /// decode logits match the full re-forward bit for bit.
+    /// Apply to a (1, din) row; mirrors the layer-stack operation order
+    /// so decode logits match the full re-forward bit for bit.
     fn apply(&self, x: &Tensor) -> Result<Tensor> {
         match self {
             DecLinear::Plain { w } => x.matmul(w),
@@ -690,7 +619,7 @@ impl DecLinear {
                 let xa = x.matmul(a)?;
                 x.matmul(w)?.add(&xa.matmul(b)?.scale(*scale))
             }
-            DecLinear::Rotate { w, blocks } => block_rotate_fast(x, blocks)?.matmul(w),
+            DecLinear::Rotate { w, blocks } => rotate_rows(x, blocks)?.matmul(w),
             DecLinear::Merged { rw } => x.matmul(rw),
         }
     }
@@ -777,12 +706,14 @@ impl RefBundle {
             },
             Method::OftV2 | Method::QOft => {
                 let packed = params.get(&format!("{name}.oft_q"))?;
-                let blocks = build_cnp_blocks(packed, self.dims.block_b, self.dims.neumann_k)?;
+                let blocks =
+                    build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
                 DecLinear::Rotate { w, blocks }
             }
             Method::OftMerged => {
                 let packed = params.get(&format!("{name}.oft_q"))?;
-                let blocks = build_cnp_blocks(packed, self.dims.block_b, self.dims.neumann_k)?;
+                let blocks =
+                    build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
                 let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
                 DecLinear::Merged { rw: rd.matmul(&w)? }
             }
@@ -892,74 +823,8 @@ impl DecodeModel {
     }
 }
 
-/// Name-keyed parameter map (trainables + frozen + dequantized bases).
-pub struct Params {
-    pub map: BTreeMap<String, Tensor>,
-}
-
-impl Params {
-    pub fn get(&self, name: &str) -> Result<&Tensor> {
-        self.map
-            .get(name)
-            .with_context(|| format!("missing parameter '{name}'"))
-    }
-}
-
-struct LoraCache {
-    a: Tensor,
-    b: Tensor,
-    xa: Tensor,
-    scale: f32,
-}
-
-struct OftCache {
-    packed: Tensor,
-    blocks: Vec<Tensor>,
-}
-
-struct LinCache {
-    name: String,
-    x: Tensor,
-    w: Tensor,
-    lora: Option<LoraCache>,
-    oft: Option<OftCache>,
-    rw: Option<Tensor>,
-}
-
-struct LayerFwd {
-    xin: Tensor,
-    r1: Vec<f32>,
-    cq: LinCache,
-    ck: LinCache,
-    cv: LinCache,
-    q: Tensor,
-    k: Tensor,
-    v: Tensor,
-    /// Softmax probabilities, (bsz, heads, T, T) flattened.
-    att: Vec<f32>,
-    co: LinCache,
-    x_mid: Tensor,
-    r2: Vec<f32>,
-    cup: LinCache,
-    up_pre: Tensor,
-    cdown: LinCache,
-}
-
-struct Fwd {
-    bsz: usize,
-    input_ids: Vec<i32>,
-    /// Input to the final norm (M, D).
-    x_final: Tensor,
-    rf: Vec<f32>,
-    /// Final-normed activations (M, D).
-    xf: Tensor,
-    /// (M, V).
-    logits: Tensor,
-    layers: Vec<LayerFwd>,
-}
-
 // ---------------------------------------------------------------------------
-// Shared kernels (also used by the reference engine's micro kernels)
+// Shared helpers
 // ---------------------------------------------------------------------------
 
 fn value_tensor(v: &Value, shape: &[usize]) -> Result<Tensor> {
@@ -971,377 +836,6 @@ fn value_tensor(v: &Value, shape: &[usize]) -> Result<Tensor> {
         shape.iter().product::<usize>()
     );
     Ok(Tensor::from_vec(shape, data.to_vec()))
-}
-
-fn split_tokens(tokens: &[i32], bsz: usize, t: usize) -> (Vec<i32>, Vec<i32>) {
-    let mut inputs = Vec::with_capacity(bsz * t);
-    let mut targets = Vec::with_capacity(bsz * t);
-    for b in 0..bsz {
-        let row = &tokens[b * (t + 1)..(b + 1) * (t + 1)];
-        inputs.extend_from_slice(&row[..t]);
-        targets.extend_from_slice(&row[1..]);
-    }
-    (inputs, targets)
-}
-
-/// Per-row NLL over masked targets: returns (sum_nll, mask_count, logp).
-fn nll_stats(logits: &Tensor, targets: &[i32], mask: &[f32]) -> (f32, f32, Tensor) {
-    let m = logits.shape[0];
-    let v = logits.shape[1];
-    let mut logp = Tensor::zeros(&[m, v]);
-    let mut sum_nll = 0f32;
-    let mut count = 0f32;
-    for row in 0..m {
-        let lr = &logits.data[row * v..(row + 1) * v];
-        let maxv = lr.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-        let mut sum = 0f32;
-        for &x in lr {
-            sum += (x - maxv).exp();
-        }
-        let lse = maxv + sum.ln();
-        let out = &mut logp.data[row * v..(row + 1) * v];
-        for j in 0..v {
-            out[j] = lr[j] - lse;
-        }
-        sum_nll += -out[targets[row] as usize] * mask[row];
-        count += mask[row];
-    }
-    (sum_nll, count, logp)
-}
-
-/// Build all CNP blocks R_i = (I+Q_i)(I + sum Q_i^j) from packed rows.
-pub fn build_cnp_blocks(packed: &Tensor, b: usize, k: usize) -> Result<Vec<Tensor>> {
-    let p = peft::packed_dim(b);
-    ensure!(
-        packed.shape.len() == 2 && packed.shape[1] == p,
-        "packed Q must be (nb, {p}), got {:?}",
-        packed.shape
-    );
-    let nb = packed.shape[0];
-    let mut out = Vec::with_capacity(nb);
-    for i in 0..nb {
-        out.push(peft::cayley_neumann(&packed.data[i * p..(i + 1) * p], b, k)?);
-    }
-    Ok(out)
-}
-
-/// Fused block rotation y[:, ib:(i+1)b] = x[:, ib:(i+1)b] @ R_i — one
-/// pass over x, parallel over rows (the OFTv2 hot path).
-pub fn block_rotate_fast(x: &Tensor, blocks: &[Tensor]) -> Result<Tensor> {
-    ensure!(x.rank() == 2, "block_rotate_fast needs 2-D input");
-    let (m, d) = (x.shape[0], x.shape[1]);
-    ensure!(!blocks.is_empty(), "no rotation blocks");
-    let b = blocks[0].shape[0];
-    ensure!(blocks.len() * b == d, "blocks {}x{b} vs d={d}", blocks.len());
-    let mut out = vec![0f32; m * d];
-    crate::tensor::parallel_over_rows(&mut out, m, d, |row, dst| {
-        let src = &x.data[row * d..(row + 1) * d];
-        for (bi, blk) in blocks.iter().enumerate() {
-            let xoff = bi * b;
-            for j in 0..b {
-                let mut acc = 0f32;
-                for i in 0..b {
-                    acc += src[xoff + i] * blk.data[i * b + j];
-                }
-                dst[xoff + j] = acc;
-            }
-        }
-    });
-    Ok(Tensor::from_vec(&[m, d], out))
-}
-
-/// Rotate by the transposed blocks (the backward direction dz @ R^T).
-fn block_rotate_transposed(dz: &Tensor, blocks: &[Tensor]) -> Result<Tensor> {
-    let (m, d) = (dz.shape[0], dz.shape[1]);
-    let b = blocks[0].shape[0];
-    ensure!(blocks.len() * b == d, "blocks {}x{b} vs d={d}", blocks.len());
-    let mut out = vec![0f32; m * d];
-    crate::tensor::parallel_over_rows(&mut out, m, d, |row, dst| {
-        let src = &dz.data[row * d..(row + 1) * d];
-        for (bi, blk) in blocks.iter().enumerate() {
-            let off = bi * b;
-            for i in 0..b {
-                let mut acc = 0f32;
-                for j in 0..b {
-                    acc += src[off + j] * blk.data[i * b + j];
-                }
-                dst[off + i] = acc;
-            }
-        }
-    });
-    Ok(Tensor::from_vec(&[m, d], out))
-}
-
-/// dR_i = x_i^T @ dz_i summed over rows; returns one (b, b) per block.
-fn block_rotate_grad_r(x: &Tensor, dz: &Tensor, b: usize) -> Vec<Tensor> {
-    let (m, d) = (x.shape[0], x.shape[1]);
-    let nb = d / b;
-    let mut dr: Vec<Tensor> = (0..nb).map(|_| Tensor::zeros(&[b, b])).collect();
-    for row in 0..m {
-        let xr = &x.data[row * d..(row + 1) * d];
-        let dzr = &dz.data[row * d..(row + 1) * d];
-        for (bi, g) in dr.iter_mut().enumerate() {
-            let off = bi * b;
-            for i in 0..b {
-                let xi = xr[off + i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let grow = &mut g.data[i * b..(i + 1) * b];
-                for j in 0..b {
-                    grow[j] += xi * dzr[off + j];
-                }
-            }
-        }
-    }
-    dr
-}
-
-/// d(loss)/d(packed) for one CNP block, given G = d(loss)/dR.
-///
-/// R = (I+Q) S with S = sum_{i=0..k} Q^i:
-///   dQ = G S^T + sum_{i=1..k} sum_{j=0..i-1} (Q^T)^j H (Q^T)^{i-1-j},
-/// with H = (I+Q)^T G; then project onto the packed skew coordinates
-/// (dp_ij = dQ_ij - dQ_ji for i < j). Locked against jax.grad by
-/// python/tests/test_ref_backward.py::test_cnp_backward_matches_jax.
-pub fn cnp_backward(packed: &[f32], b: usize, k: usize, g: &Tensor) -> Result<Vec<f32>> {
-    let q = peft::skew_from_packed(packed, b);
-    let eye = Tensor::eye(b);
-    let mut acc = eye.clone();
-    let mut term = eye.clone();
-    for _ in 0..k {
-        term = term.matmul(&q)?;
-        acc = acc.add(&term)?;
-    }
-    let mut dq = g.matmul(&acc.transpose2())?;
-    let h = eye.add(&q)?.transpose2().matmul(g)?;
-    let qt = q.transpose2();
-    let mut powers = vec![eye];
-    for _ in 1..k.max(1) {
-        let next = powers.last().unwrap().matmul(&qt)?;
-        powers.push(next);
-    }
-    for i in 1..=k {
-        for j in 0..i {
-            let t = powers[j].matmul(&h)?.matmul(&powers[i - 1 - j])?;
-            dq = dq.add(&t)?;
-        }
-    }
-    let mut dp = vec![0f32; peft::packed_dim(b)];
-    let mut idx = 0;
-    for i in 0..b {
-        for j in i + 1..b {
-            dp[idx] = dq.at2(i, j) - dq.at2(j, i);
-            idx += 1;
-        }
-    }
-    Ok(dp)
-}
-
-/// CNP backward over all blocks; returns the (nb, p) packed gradient.
-fn cnp_backward_all(packed: &Tensor, b: usize, k: usize, dr: &[Tensor]) -> Result<Tensor> {
-    let p = peft::packed_dim(b);
-    let nb = packed.shape[0];
-    ensure!(dr.len() == nb, "expected {nb} block grads, got {}", dr.len());
-    let mut out = vec![0f32; nb * p];
-    for i in 0..nb {
-        let dp = cnp_backward(&packed.data[i * p..(i + 1) * p], b, k, &dr[i])?;
-        out[i * p..(i + 1) * p].copy_from_slice(&dp);
-    }
-    Ok(Tensor::from_vec(&[nb, p], out))
-}
-
-/// RMSNorm forward: y = x * rsqrt(mean(x^2) + 1e-6) * g. Returns the
-/// per-row rsqrt factors for the backward pass.
-fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> (Tensor, Vec<f32>) {
-    let (m, d) = (x.shape[0], x.shape[1]);
-    let mut y = Tensor::zeros(&[m, d]);
-    let mut rs = vec![0f32; m];
-    for row in 0..m {
-        let xr = &x.data[row * d..(row + 1) * d];
-        let mut s = 0f32;
-        for &v in xr {
-            s += v * v;
-        }
-        let r = 1.0 / (s / d as f32 + 1e-6).sqrt();
-        rs[row] = r;
-        let yr = &mut y.data[row * d..(row + 1) * d];
-        for j in 0..d {
-            yr[j] = xr[j] * r * g[j];
-        }
-    }
-    (y, rs)
-}
-
-/// RMSNorm backward: returns (dx, dg).
-fn rmsnorm_bwd(x: &Tensor, g: &[f32], r: &[f32], dy: &Tensor) -> (Tensor, Tensor) {
-    let (m, d) = (x.shape[0], x.shape[1]);
-    let mut dx = Tensor::zeros(&[m, d]);
-    let mut dg = Tensor::zeros(&[d]);
-    for row in 0..m {
-        let xr = &x.data[row * d..(row + 1) * d];
-        let dyr = &dy.data[row * d..(row + 1) * d];
-        let rr = r[row];
-        let mut s = 0f32;
-        for j in 0..d {
-            s += dyr[j] * g[j] * xr[j];
-            dg.data[j] += dyr[j] * xr[j] * rr;
-        }
-        let f = rr * rr * rr / d as f32 * s;
-        let dxr = &mut dx.data[row * d..(row + 1) * d];
-        for j in 0..d {
-            dxr[j] = dyr[j] * g[j] * rr - xr[j] * f;
-        }
-    }
-    (dx, dg)
-}
-
-const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
-const GELU_A: f32 = 0.044715;
-
-/// Tanh-approximate GELU (JAX's default `approximate=True`).
-fn gelu_fwd(x: &Tensor) -> Tensor {
-    let mut y = x.clone();
-    for v in &mut y.data {
-        let u = GELU_C * (*v + GELU_A * *v * *v * *v);
-        *v = 0.5 * *v * (1.0 + u.tanh());
-    }
-    y
-}
-
-fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
-    let mut dx = x.clone();
-    for (v, &dyv) in dx.data.iter_mut().zip(&dy.data) {
-        let xv = *v;
-        let u = GELU_C * (xv + GELU_A * xv * xv * xv);
-        let th = u.tanh();
-        *v = dyv
-            * (0.5 * (1.0 + th)
-                + 0.5 * xv * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * xv * xv));
-    }
-    dx
-}
-
-/// Causal multi-head attention forward. Returns (output (M, D), softmax
-/// probabilities (bsz*h*t*t, future positions exactly zero)).
-fn attention_fwd(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    bsz: usize,
-    t: usize,
-    h: usize,
-    hd: usize,
-) -> (Tensor, Vec<f32>) {
-    let d = h * hd;
-    let m = bsz * t;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut att = vec![0f32; bsz * h * t * t];
-    let mut o = Tensor::zeros(&[m, d]);
-    for b in 0..bsz {
-        for hh in 0..h {
-            for t1 in 0..t {
-                let qoff = (b * t + t1) * d + hh * hd;
-                let mut row = vec![0f32; t1 + 1];
-                let mut maxv = f32::NEG_INFINITY;
-                for (t2, rv) in row.iter_mut().enumerate() {
-                    let koff = (b * t + t2) * d + hh * hd;
-                    let mut acc = 0f32;
-                    for c in 0..hd {
-                        acc += q.data[qoff + c] * k.data[koff + c];
-                    }
-                    *rv = acc * scale;
-                    maxv = maxv.max(*rv);
-                }
-                let mut sum = 0f32;
-                for rv in &mut row {
-                    *rv = (*rv - maxv).exp();
-                    sum += *rv;
-                }
-                let abase = ((b * h + hh) * t + t1) * t;
-                let ooff = (b * t + t1) * d + hh * hd;
-                for (t2, rv) in row.iter().enumerate() {
-                    let a = rv / sum;
-                    att[abase + t2] = a;
-                    let voff = (b * t + t2) * d + hh * hd;
-                    for c in 0..hd {
-                        o.data[ooff + c] += a * v.data[voff + c];
-                    }
-                }
-            }
-        }
-    }
-    (o, att)
-}
-
-/// Causal attention backward: returns (dq, dk, dv).
-fn attention_bwd(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    att: &[f32],
-    do_: &Tensor,
-    bsz: usize,
-    t: usize,
-    h: usize,
-    hd: usize,
-) -> (Tensor, Tensor, Tensor) {
-    let d = h * hd;
-    let m = bsz * t;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut dq = Tensor::zeros(&[m, d]);
-    let mut dk = Tensor::zeros(&[m, d]);
-    let mut dv = Tensor::zeros(&[m, d]);
-    for b in 0..bsz {
-        for hh in 0..h {
-            for t1 in 0..t {
-                let abase = ((b * h + hh) * t + t1) * t;
-                let ooff = (b * t + t1) * d + hh * hd;
-                let mut dpost = vec![0f32; t1 + 1];
-                for (t2, dp) in dpost.iter_mut().enumerate() {
-                    let voff = (b * t + t2) * d + hh * hd;
-                    let a = att[abase + t2];
-                    let mut acc = 0f32;
-                    for c in 0..hd {
-                        let g = do_.data[ooff + c];
-                        acc += g * v.data[voff + c];
-                        dv.data[voff + c] += a * g;
-                    }
-                    *dp = acc;
-                }
-                let mut dot = 0f32;
-                for (t2, dp) in dpost.iter().enumerate() {
-                    dot += dp * att[abase + t2];
-                }
-                let qoff = ooff;
-                for (t2, dp) in dpost.iter().enumerate() {
-                    let da = att[abase + t2] * (dp - dot) * scale;
-                    if da == 0.0 {
-                        continue;
-                    }
-                    let koff = (b * t + t2) * d + hh * hd;
-                    for c in 0..hd {
-                        dq.data[qoff + c] += da * k.data[koff + c];
-                        dk.data[koff + c] += da * q.data[qoff + c];
-                    }
-                }
-            }
-        }
-    }
-    (dq, dk, dv)
-}
-
-fn accumulate(grads: &mut BTreeMap<String, Tensor>, name: &str, g: Tensor) {
-    match grads.get_mut(name) {
-        Some(t) => {
-            for (a, b) in t.data.iter_mut().zip(&g.data) {
-                *a += b;
-            }
-        }
-        None => {
-            grads.insert(name.to_string(), g);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -1377,7 +871,13 @@ mod tests {
 
     /// Run train_step at lr=0 (returns pre-update loss; new_m encodes
     /// the raw gradient as new_m = (1-b1) g when m starts at zero).
-    fn step_outputs(bu: &RefBundle, tr: &[Value], toks: &Value, mask: &Value) -> Vec<Value> {
+    fn step_outputs_opts(
+        bu: &RefBundle,
+        tr: &[Value],
+        toks: &Value,
+        mask: &Value,
+        opts: TrainOpts,
+    ) -> Vec<Value> {
         let n = tr.len();
         let zeros: Vec<Value> = bu
             .trainable
@@ -1405,9 +905,13 @@ mod tests {
         inputs.push(mask);
         inputs.push(&lr);
         inputs.push(&t1);
-        let out = bu.train_step(&inputs).unwrap();
+        let out = bu.train_step_opts(&inputs, opts).unwrap();
         assert_eq!(out.len(), 3 * n + 1);
         out
+    }
+
+    fn step_outputs(bu: &RefBundle, tr: &[Value], toks: &Value, mask: &Value) -> Vec<Value> {
+        step_outputs_opts(bu, tr, toks, mask, TrainOpts::default())
     }
 
     #[test]
@@ -1481,40 +985,41 @@ mod tests {
     }
 
     #[test]
-    fn rotate_fast_matches_naive_oracle() {
-        let mut rng = Rng::new(9);
-        let (m, b, nb) = (13, 8, 4);
-        let d = b * nb;
-        let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.1, &mut rng);
-        let blocks = build_cnp_blocks(&packed, b, 6).unwrap();
-        let x = Tensor::randn(&[m, d], 1.0, &mut rng);
-        let fast = block_rotate_fast(&x, &blocks).unwrap();
-        let naive = peft::block_rotate(&x, &blocks).unwrap();
-        assert!(fast.max_abs_diff(&naive) < 1e-5);
+    fn checkpointing_and_workers_do_not_change_step_outputs() {
+        // The acceptance property at the graph level: every TrainOpts
+        // combination must produce bitwise-identical step outputs
+        // (loss, updated params, Adam moments).
+        for tag in ["tiny_oft_v2", "tiny_lora", "tiny_oft_merged"] {
+            let bu = bundle(tag);
+            let tr = random_values(&bu.trainable, 0.02, 13);
+            let (toks, mask) = batch(&bu, 17);
+            let base = step_outputs(&bu, &tr, &toks, &mask);
+            for opts in [
+                TrainOpts { checkpoint: CheckpointPolicy::EveryK(1), workers: 1 },
+                TrainOpts { checkpoint: CheckpointPolicy::EveryK(2), workers: 1 },
+                TrainOpts { checkpoint: CheckpointPolicy::None, workers: 4 },
+                TrainOpts { checkpoint: CheckpointPolicy::EveryK(2), workers: 3 },
+            ] {
+                let out = step_outputs_opts(&bu, &tr, &toks, &mask, opts);
+                assert_eq!(base.len(), out.len());
+                for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+                    assert_eq!(
+                        a, b,
+                        "{tag}: output {i} differs under {:?}/{} workers",
+                        opts.checkpoint, opts.workers
+                    );
+                }
+            }
+        }
     }
 
     #[test]
-    fn rotate_transposed_inverts_for_orthogonal_blocks() {
-        // R^T is the inverse of an (approximately) orthogonal R.
-        let mut rng = Rng::new(10);
-        let (m, b, nb) = (6, 8, 2);
-        let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.02, &mut rng);
-        let blocks = build_cnp_blocks(&packed, b, 8).unwrap();
-        let x = Tensor::randn(&[m, b * nb], 1.0, &mut rng);
-        let y = block_rotate_fast(&x, &blocks).unwrap();
-        let back = block_rotate_transposed(&y, &blocks).unwrap();
-        assert!(back.max_abs_diff(&x) < 1e-3, "{}", back.max_abs_diff(&x));
-    }
-
-    #[test]
-    fn gelu_matches_reference_points() {
-        // gelu(0) = 0, gelu(large) ~ x, gelu(-large) ~ 0
-        let x = Tensor::from_vec(&[4], vec![0.0, 5.0, -5.0, 1.0]);
-        let y = gelu_fwd(&x);
-        assert!(y.data[0].abs() < 1e-7);
-        assert!((y.data[1] - 5.0).abs() < 1e-3);
-        assert!(y.data[2].abs() < 1e-3);
-        assert!((y.data[3] - 0.8412).abs() < 1e-3); // known value
+    fn tree_reduce_shape_is_fixed() {
+        // ((1+2)+(3+4))+5 — pairwise, order by index.
+        let got = tree_reduce(vec![1, 2, 3, 4, 5], |a, b| a + b).unwrap();
+        assert_eq!(got, 15);
+        assert_eq!(tree_reduce(Vec::<i32>::new(), |a, b| a + b), None);
+        assert_eq!(tree_reduce(vec![7], |a, b| a + b), Some(7));
     }
 
     #[test]
@@ -1571,5 +1076,25 @@ mod tests {
         assert!(Method::Lora.is_lora() && Method::QLora.is_lora());
         assert!(Method::OftV2.is_oft_input_centric());
         assert_eq!(QuantKind::parse("nf4").unwrap(), QuantKind::Nf4);
+    }
+
+    #[test]
+    fn parse_errors_list_valid_options() {
+        // Mirrors the `--backend` fix: an unknown name teaches the
+        // valid spellings instead of just rejecting.
+        let err = match Method::parse("bogus") {
+            Err(e) => format!("{e:#}"),
+            Ok(m) => panic!("bogus parsed as {m:?}"),
+        };
+        for name in METHOD_NAMES {
+            assert!(err.contains(name), "method error should list '{name}': {err}");
+        }
+        let err = match QuantKind::parse("int3") {
+            Err(e) => format!("{e:#}"),
+            Ok(q) => panic!("int3 parsed as {q:?}"),
+        };
+        for name in ["none", "nf4", "awq"] {
+            assert!(err.contains(name), "quant error should list '{name}': {err}");
+        }
     }
 }

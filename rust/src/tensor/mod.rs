@@ -251,6 +251,21 @@ fn matmul_panel(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, rows: usize,
     }
 }
 
+thread_local! {
+    /// Per-thread cap on kernel-internal row threading. Data-parallel
+    /// training workers set this to 1 so the coarse per-microbatch
+    /// parallelism is not oversubscribed by nested per-matmul threads.
+    /// Results are unaffected: every output row is computed by exactly
+    /// one thread whatever the count.
+    static THREAD_CAP: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+/// Cap kernel-internal threading for the *calling* thread (and any
+/// kernel invoked from it). `usize::MAX` restores the default.
+pub(crate) fn set_thread_cap(cap: usize) {
+    THREAD_CAP.with(|c| c.set(cap.max(1)));
+}
+
 /// Worker count for a matmul of `flops` fused multiply-adds over `rows`
 /// output rows (1 below the threading threshold).
 fn matmul_threads(rows: usize, flops: usize) -> usize {
@@ -260,7 +275,8 @@ fn matmul_threads(rows: usize, flops: usize) -> usize {
     let hw = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    hw.min(rows).max(1)
+    let cap = THREAD_CAP.with(|c| c.get());
+    hw.min(cap).min(rows).max(1)
 }
 
 /// Apply `f(row_index, row_slice)` over the rows of a (rows, cols)

@@ -1,0 +1,120 @@
+//! The layer/tape decomposition's bitwise contracts, end to end through
+//! the Trainer: gradient checkpointing and data-parallel workers must
+//! change speed and memory, never numbers.
+//!
+//! Training decomposes every batch into per-sequence microbatches
+//! combined by a fixed-order tree reduction, so for every PEFT method:
+//!   * `--grad-checkpoint every-k` reproduces the full-tape gradients
+//!     bitwise (recompute reruns the same deterministic kernels), and
+//!   * `--workers N` reproduces the single-worker loss curve, updated
+//!     parameters, and Adam moments bitwise for any N.
+
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::Trainer;
+use oftv2::runtime::{CheckpointPolicy, Engine};
+use oftv2::tensor::Tensor;
+
+const ALL_METHOD_TAGS: [&str; 7] = [
+    "tiny_full",
+    "tiny_none",
+    "tiny_lora",
+    "tiny_oft_merged",
+    "tiny_oft_v2",
+    "tiny_qlora_nf4",
+    "tiny_qoft_nf4",
+];
+
+/// Loss trace + trainables + Adam moments after a short training run.
+struct RunOutcome {
+    losses: Vec<f64>,
+    trainables: Vec<(String, Tensor)>,
+    moments: Vec<(String, Tensor, Tensor)>,
+}
+
+fn run(tag: &str, steps: usize, workers: usize, policy: CheckpointPolicy) -> RunOutcome {
+    let e = Engine::cpu().unwrap();
+    let mut cfg = RunCfg::default();
+    cfg.tag = tag.into();
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.data.task = "math".into();
+    cfg.data.documents = 120;
+    cfg.optim.lr = 3e-3;
+    cfg.train.workers = workers;
+    cfg.train.grad_checkpoint = policy;
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg).unwrap();
+    let hist = tr.train().unwrap();
+    RunOutcome {
+        losses: hist.steps.iter().map(|s| s.loss).collect(),
+        trainables: tr.trainable_tensors().unwrap(),
+        moments: tr.adam_moments().unwrap(),
+    }
+}
+
+fn assert_bitwise_equal(tag: &str, what: &str, a: &RunOutcome, b: &RunOutcome) {
+    // f64 equality IS the bitwise check: any differing bit in the f32
+    // losses or tensors shows up as inequality here.
+    assert_eq!(a.losses, b.losses, "{tag}: loss trace differs ({what})");
+    assert_eq!(
+        a.trainables.len(),
+        b.trainables.len(),
+        "{tag}: trainable count differs ({what})"
+    );
+    for ((na, ta), (nb, tb)) in a.trainables.iter().zip(&b.trainables) {
+        assert_eq!(na, nb);
+        assert_eq!(ta, tb, "{tag}: trainable '{na}' differs ({what})");
+    }
+    for ((na, ma, va), (nb, mb, vb)) in a.moments.iter().zip(&b.moments) {
+        assert_eq!(na, nb);
+        assert_eq!(ma, mb, "{tag}: adam_m '{na}' differs ({what})");
+        assert_eq!(va, vb, "{tag}: adam_v '{na}' differs ({what})");
+    }
+}
+
+#[test]
+fn worker_count_never_changes_training_all_methods() {
+    // 1 vs 4 workers, every PEFT method: bitwise-identical loss trace,
+    // trained parameters, and optimizer state. (The Adam moments after
+    // step 1 from m = v = 0 encode the raw gradients, so this is also
+    // the bitwise gradient check.)
+    for tag in ALL_METHOD_TAGS {
+        let solo = run(tag, 3, 1, CheckpointPolicy::None);
+        let four = run(tag, 3, 4, CheckpointPolicy::None);
+        assert_bitwise_equal(tag, "1 vs 4 workers", &solo, &four);
+        assert!(solo.losses.iter().all(|l| l.is_finite()), "{tag}: NaN loss");
+    }
+}
+
+#[test]
+fn grad_checkpointing_never_changes_training_all_methods() {
+    // Full tape vs every-1 and every-2 checkpointing: the recomputed
+    // segments must reproduce the gradients bitwise.
+    for tag in ALL_METHOD_TAGS {
+        let full_tape = run(tag, 3, 1, CheckpointPolicy::None);
+        for k in [1usize, 2] {
+            let ck = run(tag, 3, 1, CheckpointPolicy::EveryK(k));
+            assert_bitwise_equal(tag, &format!("checkpoint every-{k}"), &full_tape, &ck);
+        }
+    }
+}
+
+#[test]
+fn workers_and_checkpointing_compose() {
+    // The combined configuration (the one a memory-pressed multi-core
+    // run would actually use) still matches the baseline bitwise.
+    for tag in ["tiny_oft_v2", "tiny_qlora_nf4"] {
+        let base = run(tag, 4, 1, CheckpointPolicy::None);
+        let both = run(tag, 4, 4, CheckpointPolicy::EveryK(2));
+        assert_bitwise_equal(tag, "4 workers + every-2", &base, &both);
+    }
+}
+
+#[test]
+fn worker_counts_beyond_batch_are_safe() {
+    // More workers than sequences (tiny batch = 4) must clamp, not
+    // crash or change results.
+    let base = run("tiny_oft_v2", 2, 1, CheckpointPolicy::None);
+    let many = run("tiny_oft_v2", 2, 16, CheckpointPolicy::None);
+    assert_bitwise_equal("tiny_oft_v2", "16 workers", &base, &many);
+}
