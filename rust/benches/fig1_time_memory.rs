@@ -12,11 +12,13 @@ use oftv2::bench::{
     bench_seed, fmt_ms, fmt_ratio, print_table, quick_mode, write_bench_json, BenchRecord, Report,
 };
 use oftv2::config::RunCfg;
-use oftv2::coordinator::Trainer;
+use oftv2::coordinator::{Manifest, Trainer};
 use oftv2::json::Json;
 use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
+use oftv2::quant::dequant_f32_count;
 use oftv2::runtime::{CheckpointPolicy, Engine};
+use oftv2::util::human_bytes;
 use oftv2::{artifacts_root, Result};
 
 /// Post-warmup per-step wall times for one bundle under a checkpoint
@@ -103,7 +105,7 @@ fn main() -> Result<()> {
     );
 
     // -- analytic memory at the paper's scale ----------------------------
-    let spec = ModelSpec::qwen25("7b");
+    let spec = ModelSpec::qwen25("7b")?;
     let shape = TrainShape::default();
     let mem = |m: Method| finetune_gib(&spec, m, Precision::Bf16, shape);
     let m_oft = mem(Method::OftWeightCentric { b: 32 });
@@ -179,6 +181,68 @@ fn main() -> Result<()> {
         &ck_rows,
     );
     records.extend(ck_records);
+
+    // -- measured packed-base residency (QOFT over NF4) -------------------
+    // The RSS-proxy proof that the f32 base copy is gone from the
+    // compute path: a quantized train + eval + decode run uploads only
+    // the packs (plus the frozen non-linear f32 tensors), and the
+    // process-wide dequant probe stays flat — no pack is ever expanded
+    // into a full f32 tensor. (BaseModel's load-time host master — the
+    // quantization source — is the one f32 form that remains, never
+    // uploaded and never read by a step.)
+    let qman = Manifest::builtin("fig1_qoft_nf4")?;
+    let frozen_bytes = qman.fixed_input_bytes() - qman.quantized_pack_bytes();
+    let deq0 = dequant_f32_count();
+    let bytes0 = engine.upload_bytes();
+    let mut qcfg = RunCfg::default();
+    qcfg.tag = "fig1_qoft_nf4".into();
+    qcfg.steps = 2;
+    qcfg.log_every = 0;
+    qcfg.seed = bench_seed();
+    qcfg.data.seed = bench_seed();
+    qcfg.data.task = "wiki".into();
+    qcfg.data.documents = 120;
+    let mut qtr = Trainer::new(&engine, &artifacts_root(), qcfg)?;
+    let fixed_bytes = engine.upload_bytes() - bytes0;
+    qtr.train()?;
+    qtr.evaluate()?;
+    qtr.decode_greedy(&[1, 2, 3], 4)?;
+    assert_eq!(
+        dequant_f32_count(),
+        deq0,
+        "quantized run expanded a packed base weight to f32"
+    );
+    let packed = qman.quantized_pack_bytes();
+    let f32_base = qman.dequantized_base_bytes()?;
+    let measured_base = fixed_bytes.saturating_sub(frozen_bytes);
+    assert!(
+        measured_base <= packed + packed / 2,
+        "base residency {measured_base} B exceeds 1.5x packed {packed} B"
+    );
+    print_table(
+        "QOFT NF4 base residency (fig1 preset, measured engine uploads)",
+        &["", "bytes"],
+        &[
+            vec!["packed (target)".into(), human_bytes(packed)],
+            vec!["measured resident".into(), human_bytes(measured_base)],
+            vec!["f32 copy (old path)".into(), human_bytes(f32_base)],
+        ],
+    );
+    report.add_kv(vec![
+        ("kind", Json::str("quant_residency")),
+        ("tag", Json::str("fig1_qoft_nf4")),
+        ("measured_bytes", Json::num(measured_base as f64)),
+        ("packed_bytes", Json::num(packed as f64)),
+        ("dequant_f32_bytes", Json::num(f32_base as f64)),
+    ]);
+    let resid_records = vec![BenchRecord::from_samples(
+        "qoft_nf4_base_residency",
+        &[measured_base as f64],
+    )
+    .with("packed_bytes", Json::num(packed as f64))
+    .with("dequant_f32_bytes", Json::num(f32_base as f64))];
+    let resid_path = write_bench_json("fig1_quant_residency", "bytes", &resid_records)?;
+    println!("quant residency -> {}", resid_path.display());
 
     let path = report.save()?;
     let bench_path = write_bench_json("fig1_time_memory", "secs", &records)?;

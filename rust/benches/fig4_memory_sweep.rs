@@ -1,15 +1,23 @@
 //! Fig. 4a/b/c — GPU memory across the Qwen2.5 family (0.5B–72B) for
 //! (a) OFT / LoRA / OFTv2 at BF16, (b) QLoRA / QOFT at NF4,
-//! (c) QLoRA / QOFT at AWQ. Analytic model (DESIGN.md §Substitutions).
+//! (c) QLoRA / QOFT at AWQ. Analytic model (DESIGN.md §Substitutions),
+//! plus *measured* packed-base residency on the reference engine: the
+//! fused dequant-matmul kernels keep the base in its packs, so the
+//! engine-resident base-weight bytes sit at the packed size (~0.52
+//! B/param for NF4), not the f32 copy a dequantize-at-assembly engine
+//! holds — the numbers land in `BENCH_fig4_memory_sweep.json`.
 //!
 //! Shape targets: OFTv2 within a few % of LoRA at every scale; OFT
 //! diverges enormously with model size; quantized variants track each
 //! other and cut memory ~3-4x at large scales.
 
-use oftv2::bench::{print_table, Report};
+use oftv2::bench::{print_table, write_bench_json, BenchRecord, Report};
+use oftv2::coordinator::{BaseModel, Manifest};
 use oftv2::json::Json;
-use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
+use oftv2::memmodel::{finetune_gib, BaseResidency, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
+use oftv2::runtime::Engine;
+use oftv2::util::human_bytes;
 use oftv2::Result;
 
 const SIZES: [&str; 7] = ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"];
@@ -20,11 +28,12 @@ fn main() -> Result<()> {
 
     let sweep = |title: &str,
                  precision: Precision,
+                 shape: TrainShape,
                  methods: &[(&str, Method)],
                  report: &mut Report| {
         let mut rows = Vec::new();
         for size in SIZES {
-            let spec = ModelSpec::qwen25(size);
+            let spec = ModelSpec::qwen25(size).expect("known qwen2.5 size");
             let mut row = vec![spec.name.clone()];
             for (label, m) in methods {
                 let gib = finetune_gib(&spec, *m, precision, shape);
@@ -46,6 +55,7 @@ fn main() -> Result<()> {
     sweep(
         "Fig. 4a: BF16 (GiB)",
         Precision::Bf16,
+        shape,
         &[
             ("OFT", Method::OftWeightCentric { b: 32 }),
             ("LoRA", Method::Lora { r: 16 }),
@@ -56,6 +66,7 @@ fn main() -> Result<()> {
     sweep(
         "Fig. 4b: NF4 (GiB)",
         Precision::Nf4,
+        shape,
         &[
             ("QLoRA", Method::Lora { r: 16 }),
             ("QOFT", Method::OftInputCentric { b: 32 }),
@@ -65,6 +76,24 @@ fn main() -> Result<()> {
     sweep(
         "Fig. 4c: AWQ (GiB)",
         Precision::Awq4,
+        shape,
+        &[
+            ("QLoRA", Method::Lora { r: 16 }),
+            ("QOFT", Method::OftInputCentric { b: 32 }),
+        ],
+        &mut report,
+    );
+    // What the same NF4 sweep would cost if the engine dequantized the
+    // base to f32 at parameter assembly — the path the fused kernels
+    // removed. Kept as a panel so the delta is diffable.
+    let dequant_shape = TrainShape {
+        residency: BaseResidency::DequantF32,
+        ..shape
+    };
+    sweep(
+        "Fig. 4b (counterfactual): NF4 with a dequantized f32 base (GiB)",
+        Precision::Nf4,
+        dequant_shape,
         &[
             ("QLoRA", Method::Lora { r: 16 }),
             ("QOFT", Method::OftInputCentric { b: 32 }),
@@ -72,9 +101,69 @@ fn main() -> Result<()> {
         &mut report,
     );
 
+    // -- measured packed residency on the reference engine ----------------
+    // `bench`-preset linears are whole NF4 tiles, so the packed size is
+    // the honest ~0.52 B/param, not padding-dominated. `fixed_for`
+    // uploads exactly the packs (the frozen f32 buffers are already
+    // resident from base construction), so the upload-bytes delta IS
+    // the engine-resident base-weight footprint.
+    let engine = Engine::reference();
+    let mut records = Vec::new();
+    let mut rows = Vec::new();
+    for tag in [
+        "bench_qlora_nf4",
+        "bench_qoft_nf4",
+        "bench_qlora_awq",
+        "bench_qoft_awq",
+    ] {
+        let man = Manifest::builtin(tag)?;
+        let base = BaseModel::from_manifest(&engine, &man, 7, None)?;
+        let before = engine.upload_bytes();
+        let _fixed = base.fixed_for(&engine, &man)?;
+        let measured = engine.upload_bytes() - before;
+        let packed = man.quantized_pack_bytes();
+        let f32b = man.dequantized_base_bytes()?;
+        assert!(
+            measured <= packed + packed / 2,
+            "{tag}: measured base residency {measured} B exceeds 1.5x packed {packed} B"
+        );
+        assert!(
+            measured * 4 < f32b,
+            "{tag}: packed residency {measured} B should be far below the f32 copy {f32b} B"
+        );
+        rows.push(vec![
+            tag.to_string(),
+            human_bytes(measured),
+            human_bytes(packed),
+            human_bytes(f32b),
+            format!("{:.1}x", f32b as f64 / measured.max(1) as f64),
+        ]);
+        records.push(
+            BenchRecord::from_samples(format!("base_residency_{tag}"), &[measured as f64])
+                .with("packed_bytes", Json::num(packed as f64))
+                .with("dequant_f32_bytes", Json::num(f32b as f64))
+                .with(
+                    "f32_over_measured",
+                    Json::num(f32b as f64 / measured.max(1) as f64),
+                ),
+        );
+        report.add_kv(vec![
+            ("panel", Json::str("measured_residency")),
+            ("tag", Json::str(tag)),
+            ("measured_bytes", Json::num(measured as f64)),
+            ("packed_bytes", Json::num(packed as f64)),
+            ("dequant_f32_bytes", Json::num(f32b as f64)),
+        ]);
+    }
+    print_table(
+        "Measured base-weight residency (reference engine uploads, bench preset)",
+        &["bundle", "measured", "packed", "f32 copy", "saved"],
+        &rows,
+    );
+
     // shape assertions
     for size in SIZES {
-        let spec = ModelSpec::qwen25(size);
+        let spec = ModelSpec::qwen25(size)?;
         let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
         let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
         assert!(
@@ -85,10 +174,16 @@ fn main() -> Result<()> {
             let ql = finetune_gib(&spec, Method::Lora { r: 16 }, p, shape);
             let qo = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, p, shape);
             assert!((qo - ql).abs() / ql < 0.10, "{size}: QOFT {qo} vs QLoRA {ql}");
+            // Packed residency must beat the dequantize-at-assembly
+            // counterfactual at every scale.
+            let qo_deq =
+                finetune_gib(&spec, Method::OftInputCentric { b: 32 }, p, dequant_shape);
+            assert!(qo < qo_deq, "{size}: packed {qo} !< dequant {qo_deq}");
         }
     }
     println!("\nshape checks OK: OFTv2/QOFT within 10% of LoRA/QLoRA at every scale");
     let path = report.save()?;
-    println!("results -> {}", path.display());
+    let bench_path = write_bench_json("fig4_memory_sweep", "bytes", &records)?;
+    println!("results -> {} and {}", path.display(), bench_path.display());
     Ok(())
 }

@@ -8,7 +8,7 @@
 
 use oftv2::bench::{print_table, Report};
 use oftv2::json::Json;
-use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
+use oftv2::memmodel::{finetune_gib, BaseResidency, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
 use oftv2::runtime::CheckpointPolicy;
 use oftv2::Result;
@@ -19,6 +19,7 @@ fn main() -> Result<()> {
         seq: 4096, // 128x128 latent patches + text tokens
         act_bytes: 2.0,
         checkpoint: CheckpointPolicy::None, // Dreambooth scripts keep activations
+        residency: BaseResidency::Packed,
     };
     let mut report = Report::new("tab11_sd35_memory");
 
@@ -31,7 +32,7 @@ fn main() -> Result<()> {
     ];
     let mut ours = std::collections::BTreeMap::new();
     for (size, col) in [("medium", 0usize), ("large", 1usize)] {
-        let spec = ModelSpec::sd35(size);
+        let spec = ModelSpec::sd35(size)?;
         for (label, m, p) in [
             ("LoRA", Method::Lora { r: 16 }, Precision::Bf16),
             ("OFTv2", Method::OftInputCentric { b: 32 }, Precision::Bf16),

@@ -6,7 +6,7 @@
 //! paper's Fig. 1, Fig. 4 and Table 11) to answer: which (method,
 //! precision) combinations fit which GPUs for each Qwen2.5 scale?
 
-use oftv2::memmodel::{finetune_memory, Method, Precision, TrainShape};
+use oftv2::memmodel::{finetune_memory, BaseResidency, Method, Precision, TrainShape};
 use oftv2::modelspec::ModelSpec;
 use oftv2::runtime::CheckpointPolicy;
 use oftv2::Result;
@@ -19,6 +19,7 @@ fn main() -> Result<()> {
         seq: 2048,
         act_bytes: 2.0,
         checkpoint: CheckpointPolicy::EveryK(1),
+        residency: BaseResidency::Packed,
     };
     let gpus = [("A100-40G", 40.0), ("H100-80G", 80.0), ("H100-NVL", 94.0)];
 
@@ -28,7 +29,7 @@ fn main() -> Result<()> {
         "model", "method", "prec", "total", "fits"
     );
     for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
-        let spec = ModelSpec::qwen25(size);
+        let spec = ModelSpec::qwen25(size)?;
         for (method, prec) in [
             (Method::OftWeightCentric { b: 32 }, Precision::Bf16),
             (Method::OftInputCentric { b: 32 }, Precision::Bf16),
@@ -55,7 +56,7 @@ fn main() -> Result<()> {
     }
 
     // The Fig. 1 headline: weight-centric OFT vs OFTv2 on Qwen2.5-7B.
-    let spec = ModelSpec::qwen25("7b");
+    let spec = ModelSpec::qwen25("7b")?;
     let oft = finetune_memory(&spec, Method::OftWeightCentric { b: 32 }, Precision::Bf16, shape);
     let v2 = finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
     println!("== Fig. 1 breakdown: Qwen2.5-7B, BF16 ==");

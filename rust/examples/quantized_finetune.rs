@@ -58,6 +58,7 @@ fn main() -> Result<()> {
         "{:<18} {:>10} {:>10} {:>10}",
         "bundle", "loss0", "loss_end", "eval"
     );
+    let deq0 = oftv2::quant::dequant_f32_count();
     for tag in [
         "tiny_qoft_nf4",
         "tiny_qlora_nf4",
@@ -68,7 +69,13 @@ fn main() -> Result<()> {
         println!("{:<18} {:>10.3} {:>10.3} {:>10.3}", tag, l0, l1, ev);
         assert!(l1 < l0, "{tag}: loss did not decrease");
     }
-    println!("(QOFT runs the identical rotate kernel against NF4 and AWQ packs)");
+    assert_eq!(
+        oftv2::quant::dequant_f32_count(),
+        deq0,
+        "quantized finetuning must never expand the base to f32"
+    );
+    println!("(QOFT runs the identical rotate kernel against NF4 and AWQ packs,");
+    println!(" and no pack was ever dequantized into a full f32 tensor: fused kernels only)");
 
     // ---- §4 requantization analysis -------------------------------------
     println!("\n== merge -> requantize analysis (§4) ==");

@@ -486,6 +486,35 @@ impl Manifest {
         self.trainable.iter().map(|p| p.numel() as u64).sum()
     }
 
+    /// Bytes of the quantized packs alone (codes + scales + metadata) —
+    /// the *entire* engine residency of the quantized base linears on
+    /// the fused compute path.
+    pub fn quantized_pack_bytes(&self) -> u64 {
+        self.quantized
+            .iter()
+            .map(|q| (q.dtype.size_bytes() * q.shape.iter().product::<usize>()) as u64)
+            .sum()
+    }
+
+    /// Bytes of all fixed graph inputs (frozen f32 tensors + quantized
+    /// packs) — the engine-resident base footprint of this bundle.
+    pub fn fixed_input_bytes(&self) -> u64 {
+        let frozen: u64 = self.frozen.iter().map(|s| 4 * s.numel() as u64).sum();
+        frozen + self.quantized_pack_bytes()
+    }
+
+    /// Bytes the quantized base linears would occupy expanded to f32 —
+    /// the extra residency a dequantize-at-assembly engine pays on top
+    /// of the packs (zero for full-precision bundles).
+    pub fn dequantized_base_bytes(&self) -> Result<u64> {
+        let mut total = 0u64;
+        for base in self.quantized_bases() {
+            let (din, dout) = self.linear_shape(&base)?;
+            total += 4 * (din as u64) * (dout as u64);
+        }
+        Ok(total)
+    }
+
     /// Bytes a full train-step state (params + 2 Adam moments) occupies.
     pub fn state_bytes(&self) -> u64 {
         3 * 4 * self.trainable_numel()
@@ -642,6 +671,23 @@ mod tests {
         assert!(Manifest::builtin("mystery_oft_v2").is_err());
         // qlora without a quant suffix is inconsistent
         assert!(Manifest::builtin("tiny_qlora").is_err());
+    }
+
+    #[test]
+    fn pack_bytes_far_below_f32_base() {
+        // The `bench` preset's linears are whole NF4 tiles, so packed
+        // bytes sit at the honest ~0.52 B/param — ~7.7x below the f32
+        // copy the old dequantize-at-assembly path materialized.
+        let m = Manifest::builtin("bench_qoft_nf4").unwrap();
+        let packs = m.quantized_pack_bytes();
+        let f32b = m.dequantized_base_bytes().unwrap();
+        assert!(packs * 6 < f32b, "packed {packs} B vs f32 {f32b} B");
+        let frozen: u64 = m.frozen.iter().map(|s| 4 * s.numel() as u64).sum();
+        assert_eq!(m.fixed_input_bytes(), frozen + packs);
+        // Full-precision bundles have no quantized residency at all.
+        let fp = Manifest::builtin("bench_oft_v2").unwrap();
+        assert_eq!(fp.quantized_pack_bytes(), 0);
+        assert_eq!(fp.dequantized_base_bytes().unwrap(), 0);
     }
 
     #[test]

@@ -256,6 +256,12 @@ impl BaseModel {
         for base in man.quantized_bases() {
             // Host copy only: quantized graphs read packs, never the
             // raw f32 linear, so no engine buffer is uploaded for it.
+            // This host master is the *load-time* quantization source
+            // and checkpoint export — the role the pre-quantization
+            // checkpoint plays in a real QLoRA loader. It never enters
+            // the compute path: every train/eval/decode/serve matmul
+            // reads the packs through the fused kernels (asserted by
+            // tests/quantized_no_f32.rs via quant::dequant_f32_count).
             // (The `_none` base of `for_preset` lists every base weight
             // as frozen, so mixed fleets still get f32 buffers there.)
             let t = init_quantized_base(man, &base, seed, ckpt)?;

@@ -53,8 +53,8 @@ pub struct Trainer<'e> {
     eval_loss: Graph,
     logits_last: Option<Graph>,
     /// Cached incremental decoder over the current trainables; dropped
-    /// whenever a train step changes them (rebuilding re-dequantizes
-    /// the base and rebuilds rotation blocks — too costly per prompt).
+    /// whenever a train step changes them (rebuilding re-resolves the
+    /// base packs and rotation blocks — too costly per prompt).
     decoder: Option<Decoder>,
     /// The shared frozen base this adapter is attached to.
     base: Arc<BaseModel>,
@@ -451,20 +451,32 @@ impl<'e> Trainer<'e> {
     /// problems (greedy decode, answer extracted after `####`) — the
     /// Tables 4/5 metric.
     pub fn pass1_eval(&mut self, max_examples: usize, max_new: usize) -> Result<f64> {
-        let examples: Vec<_> = self
-            .loader
-            .eval_examples()
-            .iter()
-            .filter(|e| e.answer.is_some())
-            .take(max_examples)
-            .cloned()
-            .collect();
-        ensure!(!examples.is_empty(), "no answerable eval examples");
+        // Examples without a reference answer (e.g. prose rows mixed
+        // into a math corpus) are skipped with a counted warning rather
+        // than crashing the eval on an `unwrap`. Examples are cloned
+        // one at a time (decoding needs `&mut self`), so stopping at
+        // `max_examples` never copies the rest of the eval split.
         let mut pairs = Vec::new();
-        for ex in examples {
+        let mut skipped = 0usize;
+        for i in 0..self.loader.eval_examples().len() {
+            if pairs.len() >= max_examples {
+                break;
+            }
+            let ex = self.loader.eval_examples()[i].clone();
+            let Some(answer) = ex.answer else {
+                skipped += 1;
+                continue;
+            };
             let out = self.complete(&ex.prompt, max_new)?;
-            pairs.push((out, ex.answer.unwrap()));
+            pairs.push((out, answer));
         }
+        if skipped > 0 {
+            log_info!(
+                "[{}] pass@1: skipped {skipped} eval examples without reference answers",
+                self.manifest.tag
+            );
+        }
+        ensure!(!pairs.is_empty(), "no answerable eval examples");
         Ok(crate::eval::pass_at_1(&pairs))
     }
 

@@ -233,7 +233,10 @@ mod tests {
     #[test]
     fn math_answers_are_consistent() {
         for ex in generate(TaskKind::Math, 100, 3, 1) {
-            let ans = ex.answer.unwrap();
+            // Fail with the offending example, not a bare unwrap panic.
+            let Some(ans) = ex.answer.clone() else {
+                panic!("math example missing reference answer: {:?}", ex.prompt)
+            };
             assert!(
                 ex.completion.trim_end().ends_with(&format!("#### {ans}")),
                 "{}",

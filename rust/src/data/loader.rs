@@ -318,12 +318,16 @@ impl Prefetcher {
             .expect("prefetch thread terminated unexpectedly")
     }
 
-    /// Stop the thread and recover the loader.
-    pub fn stop(mut self) -> Loader {
+    /// The one shutdown path (used by [`Prefetcher::stop`] and `Drop`):
+    /// signal the thread, drain the queue until it exits, join.
+    /// Idempotent — a second shutdown (or a drop after `stop`) finds
+    /// the handle already taken and is a no-op instead of a panic.
+    /// Returns `None` when already shut down or the thread panicked.
+    fn shutdown(&mut self) -> Option<Loader> {
         let _ = self.stop_tx.send(());
         // Drain so a blocked send unblocks.
         while self.rx.try_recv().is_ok() {}
-        let handle = self.handle.take().unwrap();
+        let handle = self.handle.take()?;
         // Keep draining until the thread observes the stop signal.
         loop {
             match self.rx.recv_timeout(std::time::Duration::from_millis(10)) {
@@ -332,21 +336,19 @@ impl Prefetcher {
                 Err(_) => continue,
             }
         }
-        handle.join().expect("prefetch thread panicked")
+        handle.join().ok()
+    }
+
+    /// Stop the thread and recover the loader (`None` if the thread had
+    /// already shut down or panicked — no longer a crash path).
+    pub fn stop(mut self) -> Option<Loader> {
+        self.shutdown()
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        let _ = self.stop_tx.send(());
-        while self.rx.try_recv().is_ok() {}
-        if let Some(h) = self.handle.take() {
-            while !h.is_finished() {
-                while self.rx.try_recv().is_ok() {}
-                std::thread::yield_now();
-            }
-            let _ = h.join();
-        }
+        let _ = self.shutdown();
     }
 }
 
@@ -437,7 +439,19 @@ mod tests {
         for e in &expected {
             assert_eq!(&pf.next_batch(), e);
         }
-        pf.stop();
+        assert!(pf.stop().is_some());
+    }
+
+    #[test]
+    fn prefetcher_stop_recovers_loader_once() {
+        let pf = loader(TaskKind::Math).prefetch(2);
+        let _ = pf.next_batch();
+        // stop() recovers the loader; the drop that follows inside
+        // stop() re-enters shutdown and must be a no-op (the old code
+        // panicked on the second `handle.take().unwrap()` pattern).
+        let mut recovered = pf.stop().expect("first stop recovers the loader");
+        let b = recovered.next_batch();
+        assert_eq!(b.tokens.len(), 4 * 33);
     }
 
     #[test]

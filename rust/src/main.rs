@@ -358,9 +358,9 @@ fn cmd_params() -> Result<()> {
     for spec in [
         ModelSpec::llama2_7b(),
         ModelSpec::llama2_13b(),
-        ModelSpec::qwen25("1.5b"),
-        ModelSpec::qwen25("7b"),
-        ModelSpec::qwen25("32b"),
+        ModelSpec::qwen25("1.5b")?,
+        ModelSpec::qwen25("7b")?,
+        ModelSpec::qwen25("32b")?,
     ] {
         println!(
             "{:<18} {:>14} {:>14}",
@@ -465,8 +465,8 @@ fn parse_model(name: &str) -> Result<ModelSpec> {
         "llama2-7b" => ModelSpec::llama2_7b(),
         "llama2-13b" => ModelSpec::llama2_13b(),
         "bart-large" => ModelSpec::bart_large(),
-        n if n.starts_with("qwen2.5-") => ModelSpec::qwen25(&n["qwen2.5-".len()..]),
-        n if n.starts_with("sd3.5-") => ModelSpec::sd35(&n["sd3.5-".len()..]),
+        n if n.starts_with("qwen2.5-") => ModelSpec::qwen25(&n["qwen2.5-".len()..])?,
+        n if n.starts_with("sd3.5-") => ModelSpec::sd35(&n["sd3.5-".len()..])?,
         _ => bail!("unknown model '{name}'"),
     })
 }

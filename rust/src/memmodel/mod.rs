@@ -78,6 +78,19 @@ impl Method {
     }
 }
 
+/// How a quantized base resides on-device during compute.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BaseResidency {
+    /// Fused block-dequant kernels read the packs directly (this
+    /// engine's path): residency is the packed bytes only.
+    #[default]
+    Packed,
+    /// Dequantize-at-assembly: the packs are expanded into a full f32
+    /// copy of every quantized linear before compute — what this repo
+    /// paid before the fused kernels, and what naive engines still pay.
+    DequantF32,
+}
+
 /// Training-shape knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainShape {
@@ -91,6 +104,9 @@ pub struct TrainShape {
     /// `EveryK(k)` keeps one boundary per k blocks at the cost of a
     /// k-block live recompute window, `None` keeps every save.
     pub checkpoint: CheckpointPolicy,
+    /// Packed-vs-dequantized residency of a quantized base (ignored at
+    /// BF16, which has no packs).
+    pub residency: BaseResidency,
 }
 
 impl Default for TrainShape {
@@ -100,6 +116,7 @@ impl Default for TrainShape {
             seq: 2048,
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::EveryK(1),
+            residency: BaseResidency::Packed,
         }
     }
 }
@@ -155,8 +172,14 @@ pub fn finetune_memory(
     // norms, lm_head, and (for SD3.5) the frozen text encoders stay in
     // bf16, exactly as bitsandbytes / AutoAWQ treat them.
     let other_params = (spec.total_params() - spec.linear_params()) as f64;
-    let base_weights =
+    let mut base_weights =
         spec.linear_params() as f64 * precision.bytes_per_param() + other_params * 2.0;
+    // A dequantize-at-assembly engine holds a full f32 copy of every
+    // quantized linear *next to* the packs — the residency the fused
+    // block-dequant kernels eliminate.
+    if precision != Precision::Bf16 && shape.residency == BaseResidency::DequantF32 {
+        base_weights += spec.linear_params() as f64 * 4.0;
+    }
 
     // Adapter trained in f32 master + bf16 compute copy is the common
     // setup; Adam keeps two f32 moments.
@@ -260,14 +283,19 @@ mod tests {
             seq: 2048,
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::EveryK(1),
+            residency: BaseResidency::Packed,
         }
+    }
+
+    fn qwen(size: &str) -> ModelSpec {
+        ModelSpec::qwen25(size).unwrap()
     }
 
     #[test]
     fn fig1_oft_vs_oftv2_memory_gap() {
         // Fig. 1: OFT ~3x the memory of OFTv2 on Qwen2.5-7B (H100 80GB:
         // OFT barely fits, OFTv2 comfortable).
-        let spec = ModelSpec::qwen25("7b");
+        let spec = qwen("7b");
         let oft = finetune_gib(&spec, Method::OftWeightCentric { b: 32 }, Precision::Bf16, shape_7b());
         let oftv2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
         let ratio = oft / oftv2;
@@ -281,7 +309,7 @@ mod tests {
     fn fig4a_oftv2_matches_lora_memory() {
         // Fig. 4a: OFTv2 within a few percent of LoRA across scales.
         for size in ["0.5b", "1.5b", "7b", "32b"] {
-            let spec = ModelSpec::qwen25(size);
+            let spec = ModelSpec::qwen25(size).unwrap();
             let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
             let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
             let rel = (v2 - lora).abs() / lora;
@@ -292,7 +320,7 @@ mod tests {
     #[test]
     fn fig4b_quantization_shrinks_memory() {
         // NF4 must cut total memory vs BF16 markedly for big models.
-        let spec = ModelSpec::qwen25("32b");
+        let spec = qwen("32b");
         let bf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
         let nf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Nf4, shape_7b());
         assert!(nf < 0.5 * bf, "bf16 {bf} nf4 {nf}");
@@ -306,7 +334,7 @@ mod tests {
         let shape = shape_7b();
         let mut prev = 0.0;
         for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
-            let spec = ModelSpec::qwen25(size);
+            let spec = ModelSpec::qwen25(size).unwrap();
             let m = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Nf4, shape);
             assert!(m > prev, "{size}: {m} <= {prev}");
             prev = m;
@@ -316,7 +344,7 @@ mod tests {
     #[test]
     fn qwen72b_nf4_fits_h100_but_bf16_does_not() {
         // The practical motivation for QOFT: 72B needs quantization.
-        let spec = ModelSpec::qwen25("72b");
+        let spec = qwen("72b");
         let bf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
         let nf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Nf4, shape_7b());
         assert!(bf > 94.0, "{bf}");
@@ -326,12 +354,13 @@ mod tests {
     #[test]
     fn table11_sd35_shape() {
         // Table 11: LoRA ~= OFTv2 and QLoRA ~= QOFT; quantized < full.
-        let spec = ModelSpec::sd35("large");
+        let spec = ModelSpec::sd35("large").unwrap();
         let shape = TrainShape {
             batch: 2,
             seq: 4096,
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::None,
+            residency: BaseResidency::Packed,
         };
         let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
         let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
@@ -348,7 +377,7 @@ mod tests {
         // activation memory at 7B scale, and the boundary count must
         // shrink as k grows (the segment-live term grows instead —
         // that's the trade-off curve fig1_time_memory sweeps).
-        let spec = ModelSpec::qwen25("7b");
+        let spec = qwen("7b");
         let mem_at = |checkpoint: CheckpointPolicy| {
             let shape = TrainShape { checkpoint, ..shape_7b() };
             finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape)
@@ -366,8 +395,44 @@ mod tests {
     }
 
     #[test]
+    fn packed_residency_prices_the_fused_kernels() {
+        // The fused-kernel engine holds only the packs; a
+        // dequantize-at-assembly engine holds the packs *plus* a full
+        // f32 copy of every quantized linear. At 7B/NF4 that copy
+        // dwarfs the packed bytes (~8.7x on base weights) and the
+        // totals must differ by exactly linear_params * 4 bytes.
+        let spec = qwen("7b");
+        let packed = finetune_memory(
+            &spec,
+            Method::OftInputCentric { b: 32 },
+            Precision::Nf4,
+            shape_7b(),
+        );
+        let dequant = finetune_memory(
+            &spec,
+            Method::OftInputCentric { b: 32 },
+            Precision::Nf4,
+            TrainShape { residency: BaseResidency::DequantF32, ..shape_7b() },
+        );
+        let extra = dequant.base_weights - packed.base_weights;
+        let want = spec.linear_params() as f64 * 4.0;
+        assert!((extra - want).abs() < 1.0, "extra {extra} want {want}");
+        assert!(dequant.base_weights / packed.base_weights > 3.0);
+        assert!((dequant.total() - packed.total() - want).abs() < 1.0);
+        // BF16 has no packs: residency is a no-op there.
+        let bf_p = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
+        let bf_d = finetune_gib(
+            &spec,
+            Method::Lora { r: 16 },
+            Precision::Bf16,
+            TrainShape { residency: BaseResidency::DequantF32, ..shape_7b() },
+        );
+        assert_eq!(bf_p, bf_d);
+    }
+
+    #[test]
     fn breakdown_sums() {
-        let spec = ModelSpec::qwen25("1.5b");
+        let spec = qwen("1.5b");
         let b = finetune_memory(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
         let total = b.base_weights + b.adapter_params + b.adapter_grads + b.optimizer
             + b.activations + b.transient + b.overhead;

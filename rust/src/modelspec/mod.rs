@@ -5,6 +5,8 @@
 //! Numbers come from the public HF configs: hidden sizes, layer counts,
 //! FFN widths, GQA head groups, vocabularies.
 
+use anyhow::{bail, Result};
+
 /// One adapted linear layer (a weight matrix PEFT attaches to).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Linear {
@@ -88,8 +90,10 @@ impl ModelSpec {
     }
 
     /// Qwen2.5 family (GQA: k/v project to n_kv*head_dim; SwiGLU).
-    /// `size` in {"0.5b","1.5b","3b","7b","14b","32b","72b"}.
-    pub fn qwen25(size: &str) -> ModelSpec {
+    /// `size` in {"0.5b","1.5b","3b","7b","14b","32b","72b"}; an
+    /// unknown size is an error listing the valid spellings (matching
+    /// the `Method`/`QuantKind` parse-error style), not a panic.
+    pub fn qwen25(size: &str) -> Result<ModelSpec> {
         // (d, ffn, layers, heads, kv_heads, tied_embeddings)
         let (d, ffn, layers, heads, kv, tied) = match size {
             "0.5b" => (896, 4864, 24, 14, 2, true),
@@ -99,14 +103,16 @@ impl ModelSpec {
             "14b" => (5120, 13824, 48, 40, 8, false),
             "32b" => (5120, 27648, 64, 40, 8, false),
             "72b" => (8192, 29568, 80, 64, 8, false),
-            _ => panic!("unknown qwen2.5 size '{size}'"),
+            other => bail!(
+                "unknown qwen2.5 size '{other}'; valid sizes: 0.5b, 1.5b, 3b, 7b, 14b, 32b, 72b"
+            ),
         };
         // head_dim = d/heads (64 for 0.5B, 128 for the rest)
         let head_dim = d / heads;
         let kv_dim = kv * head_dim;
         let vocab = 151_936;
         let embeds = if tied { vocab * d } else { 2 * vocab * d };
-        ModelSpec {
+        Ok(ModelSpec {
             name: format!("Qwen2.5-{}", size.to_uppercase()),
             d_model: d,
             n_layers: layers,
@@ -125,7 +131,7 @@ impl ModelSpec {
             // norms + qkv biases (Qwen uses attention biases)
             extra_params: (layers * (2 * d + heads * head_dim + 2 * kv_dim) + d) as u64,
             default_seq: 16_384, // the paper's OpenR1 context window
-        }
+        })
     }
 
     /// BART-large encoder-decoder (Table 3): 12 enc + 12 dec layers,
@@ -169,11 +175,11 @@ impl ModelSpec {
     /// Large 8.1B); Dreambooth additionally keeps the frozen text
     /// encoders (T5-XXL 4.76B + CLIP-G 0.69B + CLIP-L 0.12B) and the
     /// VAE on-device, so those ride along in `extra_params`.
-    pub fn sd35(size: &str) -> ModelSpec {
+    pub fn sd35(size: &str) -> Result<ModelSpec> {
         let (d, blocks, mmdit): (usize, usize, u64) = match size {
             "medium" => (1536, 24, 2_500_000_000),
             "large" => (2432, 38, 8_100_000_000),
-            _ => panic!("unknown sd3.5 size '{size}'"),
+            other => bail!("unknown sd3.5 size '{other}'; valid sizes: medium, large"),
         };
         const ENCODERS_AND_VAE: u64 = 5_650_000_000;
         let total = mmdit + ENCODERS_AND_VAE;
@@ -190,7 +196,7 @@ impl ModelSpec {
             .map(|l| (l.din * l.dout) as u64)
             .sum::<u64>()
             * blocks as u64;
-        ModelSpec {
+        Ok(ModelSpec {
             name: format!("SD3.5-{}", size),
             d_model: d,
             n_layers: blocks,
@@ -202,7 +208,7 @@ impl ModelSpec {
             // embedders, modulation) folded here to match the total
             extra_params: total.saturating_sub(linear_total),
             default_seq: 4096, // latent + text tokens
-        }
+        })
     }
 }
 
@@ -233,7 +239,7 @@ mod tests {
             ("72b", 72.7),
         ];
         for (size, want) in expect {
-            let got = billions(ModelSpec::qwen25(size).total_params());
+            let got = billions(ModelSpec::qwen25(size).unwrap().total_params());
             assert!(
                 (got - want).abs() / want < 0.03,
                 "qwen2.5-{size}: got {got}B want {want}B"
@@ -251,13 +257,39 @@ mod tests {
     #[test]
     fn sd35_totals_pinned() {
         // MMDiT size + frozen encoders/VAE (5.65B) kept on-device
-        assert_eq!(ModelSpec::sd35("large").total_params(), 8_100_000_000 + 5_650_000_000);
-        assert_eq!(ModelSpec::sd35("medium").total_params(), 2_500_000_000 + 5_650_000_000);
+        assert_eq!(
+            ModelSpec::sd35("large").unwrap().total_params(),
+            8_100_000_000 + 5_650_000_000
+        );
+        assert_eq!(
+            ModelSpec::sd35("medium").unwrap().total_params(),
+            2_500_000_000 + 5_650_000_000
+        );
+    }
+
+    #[test]
+    fn unknown_sizes_error_listing_valid_spellings() {
+        // The PR 3 parse-error convention: teach the valid spellings
+        // instead of panicking.
+        let err = match ModelSpec::qwen25("9000b") {
+            Err(e) => format!("{e:#}"),
+            Ok(m) => panic!("'9000b' parsed as {}", m.name),
+        };
+        for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
+            assert!(err.contains(size), "qwen error should list '{size}': {err}");
+        }
+        let err = match ModelSpec::sd35("xl") {
+            Err(e) => format!("{e:#}"),
+            Ok(m) => panic!("'xl' parsed as {}", m.name),
+        };
+        for size in ["medium", "large"] {
+            assert!(err.contains(size), "sd3.5 error should list '{size}': {err}");
+        }
     }
 
     #[test]
     fn adapted_linears_count() {
-        let q = ModelSpec::qwen25("7b");
+        let q = ModelSpec::qwen25("7b").unwrap();
         assert_eq!(q.adapted_linears().count(), 7 * 28);
         let b = ModelSpec::bart_large();
         assert_eq!(b.adapted_linears().count(), 16 * 12);

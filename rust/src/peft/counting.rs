@@ -63,13 +63,13 @@ mod tests {
     fn table5_qwen25_param_counts() {
         // Paper Table 5: Qwen2.5-1.5B — QLoRA 18.46M / QOFT 7.89M;
         // 7B — 40.37M / 17.55M; 32B — 134.22M / 57.90M.
-        let q15 = ModelSpec::qwen25("1.5b");
+        let q15 = ModelSpec::qwen25("1.5b").unwrap();
         assert!((mm(count_lora(&q15, 16)) - 18.46).abs() < 0.02, "{}", mm(count_lora(&q15, 16)));
         assert!((mm(count_oft(&q15, 32)) - 7.89).abs() < 0.02, "{}", mm(count_oft(&q15, 32)));
-        let q7 = ModelSpec::qwen25("7b");
+        let q7 = ModelSpec::qwen25("7b").unwrap();
         assert!((mm(count_lora(&q7, 16)) - 40.37).abs() < 0.02, "{}", mm(count_lora(&q7, 16)));
         assert!((mm(count_oft(&q7, 32)) - 17.55).abs() < 0.02, "{}", mm(count_oft(&q7, 32)));
-        let q32 = ModelSpec::qwen25("32b");
+        let q32 = ModelSpec::qwen25("32b").unwrap();
         assert!((mm(count_lora(&q32, 16)) - 134.22).abs() < 0.05, "{}", mm(count_lora(&q32, 16)));
         assert!((mm(count_oft(&q32, 32)) - 57.90).abs() < 0.05, "{}", mm(count_oft(&q32, 32)));
     }
@@ -90,7 +90,7 @@ mod tests {
     #[test]
     fn oft_uses_roughly_half_of_lora() {
         // The paper's "47-53% fewer trainable parameters" claim at b=2r.
-        for spec in [ModelSpec::llama2_7b(), ModelSpec::qwen25("7b")] {
+        for spec in [ModelSpec::llama2_7b(), ModelSpec::qwen25("7b").unwrap()] {
             let ratio = count_oft(&spec, 32) as f64 / count_lora(&spec, 16) as f64;
             assert!(ratio > 0.40 && ratio < 0.60, "{ratio}");
         }

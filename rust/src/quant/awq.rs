@@ -68,8 +68,10 @@ impl AwqTensor {
         })
     }
 
-    /// Dequantize: w = q * scales[group, col] / eq[row].
+    /// Dequantize: w = q * scales[group, col] / eq[row]. (Oracle path —
+    /// counted by `quant::dequant_f32_count`.)
     pub fn dequantize(&self) -> Tensor {
+        super::note_dequant_f32();
         let (din, dout) = (self.din, self.dout);
         let mut out = vec![0f32; din * dout];
         for r2 in 0..din / 2 {

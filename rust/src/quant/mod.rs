@@ -1,13 +1,38 @@
 //! Weight quantization substrate (the bitsandbytes/AutoAWQ role).
 //!
-//! The Rust side *quantizes* (at model-load time); the AOT graphs
-//! *dequantize* (Pallas kernels, every forward). Packing layouts are
-//! byte-identical to python/compile/kernels/ref.py — pytest and the
-//! integration tests cross-check the pair.
+//! The Rust side *quantizes* (at model-load time); compute consumes the
+//! packs directly through [`QuantWeight`]'s fused block-dequant matmul
+//! kernels, so the f32 base matrix is never materialized during train /
+//! eval / decode / serve. Packing layouts are byte-identical to
+//! python/compile/kernels/ref.py — pytest and the integration tests
+//! cross-check the pair; `dequantize()` remains the oracle the fused
+//! kernels are locked against.
 
 pub mod awq;
 pub mod nf4;
+pub mod qweight;
 pub mod requant;
 
 pub use awq::{AwqTensor, AWQ_GROUP};
 pub use nf4::{Nf4Tensor, NF4_BLOCK, NF4_CODE, NF4_GROUP, NF4_TILE};
+pub use qweight::QuantWeight;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of packed→f32 dequantizations. Every
+/// `Nf4Tensor::dequantize` / `AwqTensor::dequantize` call materializes
+/// a full f32 copy of a quantized tensor and increments this; the fused
+/// compute path never does. End-to-end tests (and the memory benches)
+/// assert the counter stays flat across quantized train / eval /
+/// decode / serve — the "no f32 base copy" guarantee, in the same
+/// spirit as `Engine::upload_count`.
+static DEQUANT_F32: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn note_dequant_f32() {
+    DEQUANT_F32.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Number of packed→f32 dequantizations performed by this process.
+pub fn dequant_f32_count() -> u64 {
+    DEQUANT_F32.load(Ordering::Relaxed)
+}

@@ -120,8 +120,10 @@ impl Nf4Tensor {
         }
     }
 
-    /// Dequantize back to f32 (host-side oracle for the Pallas kernel).
+    /// Dequantize back to f32 (host-side oracle for the Pallas kernel
+    /// and the fused matmuls; counted by `quant::dequant_f32_count`).
     pub fn dequantize(&self) -> Tensor {
+        super::note_dequant_f32();
         let npad = self.codes.len() * 2;
         let nb = npad / NF4_BLOCK;
         let mut absmax = vec![0f32; nb];

@@ -1,0 +1,276 @@
+//! [`QuantWeight`] — a packed quantized base weight as a first-class
+//! compute object.
+//!
+//! The NF4/AWQ pack buffers (the storage layer) gain the two matmuls a
+//! frozen base weight actually needs during train / eval / decode /
+//! serve: `y = x @ W` (forward) and `y = g @ W^T` (the backward's
+//! `dL/dx`). Both run through the fused kernels in
+//! [`crate::tensor::fused`], decoding codes group-by-group into a
+//! scratch panel — so a quantized run never materializes the f32 base
+//! matrix the old `dequantize`-at-assembly path expanded.
+//!
+//! `dequantize()` stays available as the oracle the fused kernels are
+//! locked against (rust/tests/quant_fused.rs); every oracle call is
+//! counted by the process-wide probe in [`crate::quant`] so end-to-end
+//! tests can assert the hot paths never take it.
+
+use anyhow::{ensure, Result};
+
+use super::awq::{AwqTensor, AWQ_GROUP};
+use super::nf4::{Nf4Tensor, NF4_BLOCK, NF4_CODE, NF4_GROUP};
+use crate::tensor::fused::{fused_matmul, fused_matmul_t};
+use crate::tensor::Tensor;
+
+/// A packed `(din, dout)` base weight in either quantization format.
+///
+/// The representation is private on purpose: every instance goes
+/// through [`QuantWeight::nf4`] / [`QuantWeight::awq`], so the pack
+/// bounds checks cannot be bypassed and `decode_rows` never indexes
+/// out of bounds mid-matmul.
+#[derive(Clone, Debug)]
+pub struct QuantWeight(Repr);
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Nf4(Nf4Tensor),
+    Awq(AwqTensor),
+}
+
+impl QuantWeight {
+    /// Wrap an NF4 pack, bounds-checking every pack field against the
+    /// weight's shape so a truncated or empty pack surfaces as an error
+    /// naming the field instead of an out-of-bounds panic mid-matmul.
+    pub fn nf4(q: Nf4Tensor) -> Result<QuantWeight> {
+        ensure!(
+            q.shape.len() == 2,
+            "NF4 weight must be 2-D, got shape {:?}",
+            q.shape
+        );
+        ensure!(
+            q.n == q.shape[0] * q.shape[1],
+            "NF4 element count {} does not match shape {:?}",
+            q.n,
+            q.shape
+        );
+        let npad = q.codes.len() * 2;
+        ensure!(
+            npad >= q.n && npad % NF4_BLOCK == 0,
+            "nf4_codes holds {npad} elements ({} bytes); weight needs {} in whole blocks",
+            q.codes.len(),
+            q.n
+        );
+        ensure!(
+            q.absmax_q.len() == npad / NF4_BLOCK,
+            "nf4_absmax_q has {} entries, codes imply {}",
+            q.absmax_q.len(),
+            npad / NF4_BLOCK
+        );
+        ensure!(
+            q.absmax_q.len() % NF4_GROUP == 0
+                && q.absmax_s.len() == q.absmax_q.len() / NF4_GROUP,
+            "nf4_absmax_s has {} entries, absmax blocks imply {}",
+            q.absmax_s.len(),
+            q.absmax_q.len().div_ceil(NF4_GROUP)
+        );
+        ensure!(q.offset.is_finite(), "nf4_offset is not finite");
+        Ok(QuantWeight(Repr::Nf4(q)))
+    }
+
+    /// Wrap an AWQ pack, bounds-checking codes/scales/eq against
+    /// `(din, dout)` (same contract as [`QuantWeight::nf4`]).
+    pub fn awq(q: AwqTensor) -> Result<QuantWeight> {
+        ensure!(
+            q.din % 2 == 0 && q.din % AWQ_GROUP == 0,
+            "AWQ din {} must be even and divisible by {AWQ_GROUP}",
+            q.din
+        );
+        ensure!(
+            q.codes.len() == q.din / 2 * q.dout,
+            "awq_codes has {} bytes, ({}, {}) needs {}",
+            q.codes.len(),
+            q.din,
+            q.dout,
+            q.din / 2 * q.dout
+        );
+        ensure!(
+            q.scales.len() == q.din / AWQ_GROUP * q.dout,
+            "awq_scales has {} entries, ({}, {}) needs {}",
+            q.scales.len(),
+            q.din,
+            q.dout,
+            q.din / AWQ_GROUP * q.dout
+        );
+        ensure!(
+            q.eq.len() == q.din,
+            "awq_eq has {} entries, din is {}",
+            q.eq.len(),
+            q.din
+        );
+        Ok(QuantWeight(Repr::Awq(q)))
+    }
+
+    /// `(din, dout)`.
+    pub fn shape(&self) -> (usize, usize) {
+        match &self.0 {
+            Repr::Nf4(q) => (q.shape[0], q.shape[1]),
+            Repr::Awq(q) => (q.din, q.dout),
+        }
+    }
+
+    /// Packed storage bytes (codes + scales + metadata).
+    pub fn storage_bytes(&self) -> usize {
+        match &self.0 {
+            Repr::Nf4(q) => q.storage_bytes(),
+            Repr::Awq(q) => q.storage_bytes(),
+        }
+    }
+
+    /// Full f32 expansion — the *oracle* the fused kernels are locked
+    /// against, never the compute path. Counted by
+    /// [`crate::quant::dequant_f32_count`].
+    pub fn dequantize(&self) -> Tensor {
+        match &self.0 {
+            Repr::Nf4(q) => q.dequantize(),
+            Repr::Awq(q) => q.dequantize(),
+        }
+    }
+
+    /// Decode rows `[r0, r0 + rows)` of the weight into `panel`
+    /// (row-major `rows x dout`), bit-identical to the same rows of
+    /// `dequantize()`.
+    pub fn decode_rows(&self, r0: usize, rows: usize, panel: &mut [f32]) {
+        match &self.0 {
+            Repr::Nf4(q) => {
+                let dout = q.shape[1];
+                debug_assert_eq!(panel.len(), rows * dout);
+                // Flat element index walks the row range; the per-block
+                // absmax is reconstructed with exactly the expression
+                // `dequantize()` uses, cached across the 64-elem block.
+                let mut e = r0 * dout;
+                let mut blk = usize::MAX;
+                let mut am = 0.0f32;
+                for v in panel.iter_mut() {
+                    let b = e / NF4_BLOCK;
+                    if b != blk {
+                        blk = b;
+                        let g = b / NF4_GROUP;
+                        am = q.absmax_q[b] as f32 / 127.0 * q.absmax_s[g] + q.offset;
+                    }
+                    let byte = q.codes[e / 2];
+                    let nib = if e % 2 == 0 { byte >> 4 } else { byte & 0xF };
+                    *v = NF4_CODE[nib as usize] * am;
+                    e += 1;
+                }
+            }
+            Repr::Awq(q) => {
+                let dout = q.dout;
+                debug_assert_eq!(panel.len(), rows * dout);
+                for (ri, prow) in panel.chunks_mut(dout).enumerate() {
+                    let r = r0 + ri;
+                    let srow = &q.scales[(r / AWQ_GROUP) * dout..(r / AWQ_GROUP + 1) * dout];
+                    let crow = &q.codes[(r / 2) * dout..(r / 2 + 1) * dout];
+                    let hi = r % 2 == 0;
+                    let eq = q.eq[r];
+                    for ((v, &byte), &s) in prow.iter_mut().zip(crow).zip(srow) {
+                        let raw = if hi { byte >> 4 } else { byte & 0xF };
+                        let nib = raw as i32 - 8;
+                        *v = nib as f32 * s / eq;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `y = x @ W`, fused: panels of W are decoded on the fly, the f32
+    /// matrix is never materialized. Bit-identical to
+    /// `x.matmul(&self.dequantize())` (same accumulation order).
+    pub fn matmul(&self, x: &Tensor) -> Result<Tensor> {
+        let (din, dout) = self.shape();
+        fused_matmul(x, din, dout, |r0, rows, panel| {
+            self.decode_rows(r0, rows, panel)
+        })
+    }
+
+    /// `y = g @ W^T`, fused (the backward's `dL/dx`). Bit-identical to
+    /// `g.matmul(&self.dequantize().transpose2())`.
+    pub fn matmul_t(&self, g: &Tensor) -> Result<Tensor> {
+        let (din, dout) = self.shape();
+        fused_matmul_t(g, din, dout, |r0, rows, panel| {
+            self.decode_rows(r0, rows, panel)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn nf4_weight(din: usize, dout: usize, seed: u64) -> (QuantWeight, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        let q = QuantWeight::nf4(Nf4Tensor::quantize(&w)).unwrap();
+        (q, w)
+    }
+
+    fn awq_weight(din: usize, dout: usize, seed: u64) -> QuantWeight {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        QuantWeight::awq(AwqTensor::quantize(&w, None).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn decode_rows_matches_dequantize_bitwise() {
+        for (qw, _) in [nf4_weight(96, 40, 1), nf4_weight(64, 64, 2)] {
+            let (din, dout) = qw.shape();
+            let oracle = qw.dequantize();
+            for (r0, rows) in [(0usize, din), (3, 5), (din - 1, 1)] {
+                let mut panel = vec![0.0f32; rows * dout];
+                qw.decode_rows(r0, rows, &mut panel);
+                assert_eq!(&panel[..], &oracle.data[r0 * dout..(r0 + rows) * dout]);
+            }
+        }
+        let qw = awq_weight(128, 48, 3);
+        let (din, dout) = qw.shape();
+        let oracle = qw.dequantize();
+        let mut panel = vec![0.0f32; din * dout];
+        qw.decode_rows(0, din, &mut panel);
+        assert_eq!(&panel[..], &oracle.data[..]);
+    }
+
+    #[test]
+    fn fused_matmuls_match_oracle() {
+        let mut rng = Rng::new(9);
+        for qw in [nf4_weight(128, 48, 4).0, awq_weight(128, 48, 5)] {
+            let (din, dout) = qw.shape();
+            let d = qw.dequantize();
+            for m in [1usize, 6, 33] {
+                let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+                assert_eq!(qw.matmul(&x).unwrap(), x.matmul(&d).unwrap());
+                let g = Tensor::randn(&[m, dout], 1.0, &mut rng);
+                assert_eq!(qw.matmul_t(&g).unwrap(), g.matmul(&d.transpose2()).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_truncated_packs() {
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(&[64, 64], 0.1, &mut rng);
+        let mut q = Nf4Tensor::quantize(&w);
+        q.codes.truncate(q.codes.len() / 2);
+        assert!(QuantWeight::nf4(q).is_err(), "truncated codes must be rejected");
+
+        let w = Tensor::randn(&[128, 32], 0.1, &mut rng);
+        let mut a = AwqTensor::quantize(&w, None).unwrap();
+        a.scales.pop();
+        assert!(QuantWeight::awq(a).is_err(), "truncated scales must be rejected");
+    }
+
+    #[test]
+    fn shape_and_storage() {
+        let (qw, _) = nf4_weight(64, 64, 11);
+        assert_eq!(qw.shape(), (64, 64));
+        assert!(qw.storage_bytes() > 0);
+    }
+}

@@ -53,7 +53,9 @@ impl Layer for PeftLinear {
 
     fn forward(&self, ctx: &Ctx, x: &Tensor) -> Result<(Tensor, LinearAct)> {
         let name = &self.name;
-        let w = ctx.params.get(name)?;
+        // Packed (quantized) bases multiply through the fused
+        // block-dequant kernels; dense bases through Tensor::matmul.
+        let w = ctx.params.weight(name)?;
         let mut act = LinearAct {
             x: x.clone(),
             lora: None,
@@ -66,26 +68,28 @@ impl Layer for PeftLinear {
                 let b = ctx.params.get(&format!("{name}.lora_b"))?;
                 let scale = (ctx.dims.lora_alpha / ctx.dims.lora_r as f64) as f32;
                 let xa = x.matmul(a)?;
-                let y = x.matmul(w)?.add(&xa.matmul(b)?.scale(scale))?;
+                let y = w.matmul(x)?.add(&xa.matmul(b)?.scale(scale))?;
                 act.lora = Some(LoraAct { xa, scale });
                 y
             }
             Method::OftV2 | Method::QOft => match ctx.plan.and_then(|p| p.blocks.get(name)) {
-                Some(blocks) => block_rotate_fast(x, blocks)?.matmul(w)?,
+                Some(blocks) => w.matmul(&block_rotate_fast(x, blocks)?)?,
                 None => {
                     let packed = ctx.params.get(&format!("{name}.oft_q"))?;
                     let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
-                    let y = block_rotate_fast(x, &blocks)?.matmul(w)?;
+                    let y = w.matmul(&block_rotate_fast(x, &blocks)?)?;
                     act.oft = Some(OftAct { blocks });
                     y
                 }
             },
             // The weight-centric baseline: materialize blockdiag(R) and
             // pay the cubic matrix-matrix merge — once per step via the
-            // shared plan, else here.
+            // shared plan, else here. (Never quantized, so the dense
+            // weight is always available.)
             Method::OftMerged => match ctx.plan.and_then(|p| p.merged.get(name)) {
                 Some(rw) => x.matmul(rw)?,
                 None => {
+                    let w = w.dense()?;
                     let packed = ctx.params.get(&format!("{name}.oft_q"))?;
                     let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
                     let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
@@ -95,7 +99,7 @@ impl Layer for PeftLinear {
                     y
                 }
             },
-            Method::Full | Method::None => x.matmul(w)?,
+            Method::Full | Method::None => w.matmul(x)?,
         };
         Ok((y, act))
     }
@@ -110,13 +114,13 @@ impl Layer for PeftLinear {
     ) -> Result<Tensor> {
         let name = &self.name;
         let blk = ctx.dims.block_b;
-        let w = ctx.params.get(name)?;
+        let w = ctx.params.weight(name)?;
         match ctx.method {
             Method::Full => {
                 accumulate(grads, name, act.x.transpose2().matmul(dy)?);
-                dy.matmul(&w.transpose2())
+                w.matmul_t(dy)
             }
-            Method::None => dy.matmul(&w.transpose2()),
+            Method::None => w.matmul_t(dy),
             Method::Lora | Method::QLora => {
                 let lc = act.lora.as_ref().context("missing lora record")?;
                 let a = ctx.params.get(&format!("{name}.lora_a"))?;
@@ -132,7 +136,9 @@ impl Layer for PeftLinear {
                     &format!("{name}.lora_a"),
                     act.x.transpose2().matmul(&dxa)?,
                 );
-                dy.matmul(&w.transpose2())?.add(&dxa.matmul(&a.transpose2())?)
+                // dL/dx = dy @ W^T + scaled low-rank path — W stays
+                // packed for QLoRA (fused transposed matmul).
+                w.matmul_t(dy)?.add(&dxa.matmul(&a.transpose2())?)
             }
             Method::OftV2 | Method::QOft => {
                 let packed = ctx.params.get(&format!("{name}.oft_q"))?;
@@ -140,13 +146,14 @@ impl Layer for PeftLinear {
                     Some(blocks) => blocks,
                     None => &act.oft.as_ref().context("missing oft record")?.blocks,
                 };
-                let dz = dy.matmul(&w.transpose2())?;
+                let dz = w.matmul_t(dy)?;
                 let dr = block_rotate_grad_r(&act.x, &dz, blk);
                 let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
                 accumulate(grads, &format!("{name}.oft_q"), dp);
                 block_rotate_transposed(&dz, blocks)
             }
             Method::OftMerged => {
+                let w = w.dense()?;
                 let packed = ctx.params.get(&format!("{name}.oft_q"))?;
                 let rw = match ctx.plan.and_then(|p| p.merged.get(name)) {
                     Some(rw) => rw,

@@ -28,24 +28,128 @@ pub mod tape;
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::refmodel::Method;
 use crate::coordinator::manifest::ModelDims;
+use crate::quant::QuantWeight;
 use crate::tensor::Tensor;
 
 pub use self::tape::{CheckpointPolicy, Tape};
 
-/// Name-keyed parameter map (trainables + frozen + dequantized bases).
+/// Name-keyed parameter map: dense f32 tensors (trainables, frozen
+/// norms/embeddings, full-precision bases) plus *packed* quantized base
+/// weights, which stay in their NF4/AWQ packs end-to-end.
 pub struct Params {
     pub map: BTreeMap<String, Tensor>,
+    /// Quantized base weights (QLoRA/QOFT), consumed by the fused
+    /// block-dequant matmul kernels — never expanded to f32.
+    pub quant: BTreeMap<String, QuantWeight>,
 }
 
 impl Params {
     pub fn get(&self, name: &str) -> Result<&Tensor> {
-        self.map
-            .get(name)
-            .with_context(|| format!("missing parameter '{name}'"))
+        if let Some(t) = self.map.get(name) {
+            return Ok(t);
+        }
+        if self.quant.contains_key(name) {
+            bail!(
+                "parameter '{name}' is packed (quantized) and has no dense f32 form; \
+                 use Params::weight for fused compute"
+            );
+        }
+        bail!("missing parameter '{name}'")
+    }
+
+    /// The base weight under `name`, packed or dense — what the PEFT
+    /// linear multiplies against, so quantized bases never need a
+    /// dequantization step.
+    pub fn weight(&self, name: &str) -> Result<WeightRef<'_>> {
+        if let Some(q) = self.quant.get(name) {
+            return Ok(WeightRef::Quant(q));
+        }
+        Ok(WeightRef::Dense(self.get(name)?))
+    }
+}
+
+/// A borrowed base linear weight: dense f32 or packed quantized.
+/// Matmuls against the packed form run the fused block-dequant kernels
+/// (`tensor::fused`), which reproduce dequantize-then-matmul bit for
+/// bit without materializing the f32 matrix.
+#[derive(Clone, Copy)]
+pub enum WeightRef<'a> {
+    Dense(&'a Tensor),
+    Quant(&'a QuantWeight),
+}
+
+impl<'a> WeightRef<'a> {
+    /// `(din, dout)`.
+    pub fn shape2(&self) -> (usize, usize) {
+        match *self {
+            WeightRef::Dense(t) => (t.shape[0], t.shape[1]),
+            WeightRef::Quant(q) => q.shape(),
+        }
+    }
+
+    /// `y = x @ W`.
+    pub fn matmul(&self, x: &Tensor) -> Result<Tensor> {
+        match *self {
+            WeightRef::Dense(t) => x.matmul(t),
+            WeightRef::Quant(q) => q.matmul(x),
+        }
+    }
+
+    /// `y = dy @ W^T` (the backward's `dL/dx` through a frozen base).
+    pub fn matmul_t(&self, dy: &Tensor) -> Result<Tensor> {
+        match *self {
+            WeightRef::Dense(t) => dy.matmul(&t.transpose2()),
+            WeightRef::Quant(q) => q.matmul_t(dy),
+        }
+    }
+
+    /// The dense tensor, for the paths that genuinely need the full
+    /// matrix (weight-centric OFT's cubic merge). Packed weights refuse
+    /// rather than silently dequantizing.
+    pub fn dense(&self) -> Result<&'a Tensor> {
+        match *self {
+            WeightRef::Dense(t) => Ok(t),
+            WeightRef::Quant(_) => {
+                bail!("weight is packed (quantized); refusing to materialize it in f32")
+            }
+        }
+    }
+
+    /// Owned clone (decode models resolve weights once at build time).
+    pub fn cloned(&self) -> BaseWeight {
+        match *self {
+            WeightRef::Dense(t) => BaseWeight::Dense(t.clone()),
+            WeightRef::Quant(q) => BaseWeight::Quant(q.clone()),
+        }
+    }
+}
+
+/// An owned base linear weight (see [`WeightRef`]): what the decode
+/// models hold so KV-cached decoding over a quantized base stays packed
+/// per token.
+#[derive(Clone)]
+pub enum BaseWeight {
+    Dense(Tensor),
+    Quant(QuantWeight),
+}
+
+impl BaseWeight {
+    /// Borrowed view (avoids the std `AsRef` name on purpose — the
+    /// return type is an enum, not a reference).
+    pub fn as_weight(&self) -> WeightRef<'_> {
+        match self {
+            BaseWeight::Dense(t) => WeightRef::Dense(t),
+            BaseWeight::Quant(q) => WeightRef::Quant(q),
+        }
+    }
+
+    /// `y = x @ W`.
+    pub fn matmul(&self, x: &Tensor) -> Result<Tensor> {
+        self.as_weight().matmul(x)
     }
 }
 

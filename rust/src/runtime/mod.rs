@@ -366,7 +366,7 @@ pub trait EngineBackend {
     fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec)
         -> Result<Box<dyn GraphBackend>>;
     /// Build an adapter-bound incremental decoder: trainables + fixed
-    /// inputs are resolved once (dequantization, CNP block build, LoRA
+    /// inputs are resolved once (pack assembly, CNP block build, LoRA
     /// scaling), then any number of KV-cached sessions decode token by
     /// token without re-running the prefix.
     fn load_decoder(
@@ -598,9 +598,10 @@ impl Graph {
 }
 
 /// An adapter-bound incremental decoder: the adapter's merged state
-/// (dequantized base, CNP rotation blocks, LoRA factors) is resolved
-/// once at load, then [`Decoder::begin`] spawns independent KV-cached
-/// sessions — the unit the `serve` subsystem schedules.
+/// (base weights — kept packed when quantized — CNP rotation blocks,
+/// LoRA factors) is resolved once at load, then [`Decoder::begin`]
+/// spawns independent KV-cached sessions — the unit the `serve`
+/// subsystem schedules.
 pub struct Decoder {
     pub name: String,
     inner: Box<dyn DecoderBackend>,

@@ -9,7 +9,8 @@
 //!
 //! The model itself lives in [`super::layers`] as an explicit layer
 //! stack with a forward [`Tape`]; this module owns the bundle-level
-//! contracts (graph I/O, parameter assembly, dequantization, Adam) and
+//! contracts (graph I/O, parameter assembly — NF4/AWQ packs stay packed
+//! as [`QuantWeight`]s for the fused kernels — and Adam) and
 //! the microbatched training driver. Training decomposes every batch
 //! into per-sequence microbatches whose gradient partials are combined
 //! by a fixed-order pairwise tree reduction — so the summed gradients
@@ -30,11 +31,11 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::layers::lmhead::{nll_dlogits, nll_stats, split_tokens};
 use super::layers::linear::build_cnp_blocks as build_cnp_blocks_impl;
-use super::layers::{AdapterPlan, CheckpointPolicy, Ctx, Gradients, LayerStack, Tape};
+use super::layers::{AdapterPlan, BaseWeight, CheckpointPolicy, Ctx, Gradients, LayerStack, Tape};
 use super::{lit_f32, scalar_f32, TrainOpts, Value};
 use crate::coordinator::manifest::{Manifest, ModelDims, ParamSpec, QuantSpec};
 use crate::peft;
-use crate::quant::{AwqTensor, Nf4Tensor};
+use crate::quant::{AwqTensor, Nf4Tensor, QuantWeight};
 use crate::tensor::Tensor;
 
 // Stable public paths for the shared kernels (they moved into the
@@ -209,9 +210,11 @@ impl RefBundle {
     // Parameter assembly
     // -----------------------------------------------------------------
 
-    /// Name -> tensor map from graph inputs: trainables + frozen f32 +
-    /// dequantized base weights (NF4/AWQ packs are decoded here, the
-    /// role the Pallas dequant kernels play on the accelerator).
+    /// Name -> parameter map from graph inputs: trainables + frozen f32
+    /// as dense tensors, NF4/AWQ packs as [`QuantWeight`]s — the packed
+    /// codes go straight to the fused dequant-matmul kernels, so no f32
+    /// copy of a quantized base weight is ever materialized (the memory
+    /// property §4's QOFT claim rests on).
     fn assemble_params(&self, trainables: &[&Value], fixed: &[&Value]) -> Result<Params> {
         ensure!(
             trainables.len() == self.trainable.len(),
@@ -226,6 +229,7 @@ impl RefBundle {
             fixed.len()
         );
         let mut map = std::collections::BTreeMap::new();
+        let mut quant = std::collections::BTreeMap::new();
         for (spec, v) in self.trainable.iter().zip(trainables) {
             map.insert(spec.name.clone(), value_tensor(v, &spec.shape)?);
         }
@@ -246,14 +250,19 @@ impl RefBundle {
                 }
             }
             for base in seen {
-                let w = self.dequantize_base(&base, &packs)?;
-                map.insert(base, w);
+                let w = self.quant_base(&base, &packs)?;
+                quant.insert(base, w);
             }
         }
-        Ok(Params { map })
+        Ok(Params { map, quant })
     }
 
-    fn dequantize_base(&self, base: &str, packs: &[(&QuantSpec, &Value)]) -> Result<Tensor> {
+    /// Assemble the packed [`QuantWeight`] of one base linear from its
+    /// graph inputs. Every pack field is bounds-checked against
+    /// `(din, dout)` (codes / absmax / scales lengths, non-empty
+    /// offset), so an empty or truncated pack surfaces as an error
+    /// naming the bad pack rather than an indexing panic.
+    fn quant_base(&self, base: &str, packs: &[(&QuantSpec, &Value)]) -> Result<QuantWeight> {
         let (din, dout) = self.linear_shape(base)?;
         let field = |suffix: &str| -> Result<&Value> {
             packs
@@ -264,26 +273,28 @@ impl RefBundle {
         };
         match self.quant {
             QuantKind::Nf4 => {
-                let q = Nf4Tensor {
+                let offsets = field("nf4_offset")?.f32s()?;
+                let offset = *offsets
+                    .first()
+                    .with_context(|| format!("pack '{base}.nf4_offset' is empty"))?;
+                QuantWeight::nf4(Nf4Tensor {
                     codes: field("nf4_codes")?.u8s()?.to_vec(),
                     absmax_q: field("nf4_absmax_q")?.i8s()?.to_vec(),
                     absmax_s: field("nf4_absmax_s")?.f32s()?.to_vec(),
-                    offset: field("nf4_offset")?.f32s()?[0],
+                    offset,
                     n: din * dout,
                     shape: vec![din, dout],
-                };
-                Ok(q.dequantize())
+                })
+                .with_context(|| format!("bad NF4 pack for '{base}' ({din}x{dout})"))
             }
-            QuantKind::Awq => {
-                let q = AwqTensor {
-                    codes: field("awq_codes")?.u8s()?.to_vec(),
-                    scales: field("awq_scales")?.f32s()?.to_vec(),
-                    eq: field("awq_eq")?.f32s()?.to_vec(),
-                    din,
-                    dout,
-                };
-                Ok(q.dequantize())
-            }
+            QuantKind::Awq => QuantWeight::awq(AwqTensor {
+                codes: field("awq_codes")?.u8s()?.to_vec(),
+                scales: field("awq_scales")?.f32s()?.to_vec(),
+                eq: field("awq_eq")?.f32s()?.to_vec(),
+                din,
+                dout,
+            })
+            .with_context(|| format!("bad AWQ pack for '{base}' ({din}x{dout})")),
             QuantKind::None => bail!("bundle has quantized packs but quant backend 'none'"),
         }
     }
@@ -596,14 +607,18 @@ use super::layers::mlp::gelu_fwd;
 use super::layers::rmsnorm::rmsnorm_fwd;
 
 /// One adapted linear with the adapter resolved at build time: decode
-/// steps pay only the per-token apply, never dequantization or CNP
-/// block construction.
+/// steps pay only the per-token apply, never CNP block construction —
+/// and quantized bases stay packed, each token's gemv decoding the
+/// codes group-by-group through the fused kernels. That re-decode per
+/// token is the deliberate 4-bit inference trade (packed residency for
+/// unpack work, as in bitsandbytes/AWQ inference kernels); the serving
+/// bench measures the resulting per-token cost for a QOFT adapter.
 enum DecLinear {
-    Plain { w: Tensor },
-    Lora { w: Tensor, a: Tensor, b: Tensor, scale: f32 },
+    Plain { w: BaseWeight },
+    Lora { w: BaseWeight, a: Tensor, b: Tensor, scale: f32 },
     /// Input-centric OFTv2/QOFT: rotate the token's activations
     /// block-by-block, then the frozen matmul (matrix-free, §3).
-    Rotate { w: Tensor, blocks: Vec<Tensor> },
+    Rotate { w: BaseWeight, blocks: Vec<Tensor> },
     /// Weight-centric baseline: blockdiag(R) @ W merged once at load
     /// (decoding re-pays it per adapter, not per token).
     Merged { rw: Tensor },
@@ -614,12 +629,12 @@ impl DecLinear {
     /// so decode logits match the full re-forward bit for bit.
     fn apply(&self, x: &Tensor) -> Result<Tensor> {
         match self {
-            DecLinear::Plain { w } => x.matmul(w),
+            DecLinear::Plain { w } => w.matmul(x),
             DecLinear::Lora { w, a, b, scale } => {
                 let xa = x.matmul(a)?;
-                x.matmul(w)?.add(&xa.matmul(b)?.scale(*scale))
+                w.matmul(x)?.add(&xa.matmul(b)?.scale(*scale))
             }
-            DecLinear::Rotate { w, blocks } => rotate_rows(x, blocks)?.matmul(w),
+            DecLinear::Rotate { w, blocks } => w.matmul(&rotate_rows(x, blocks)?),
             DecLinear::Merged { rw } => x.matmul(rw),
         }
     }
@@ -665,7 +680,8 @@ pub struct DecodeModel {
 
 impl RefBundle {
     /// Resolve trainables + fixed inputs into a [`DecodeModel`] —
-    /// dequantization and adapter merging happen here, once.
+    /// adapter merging happens here, once; quantized bases are carried
+    /// packed into the decode loop.
     pub fn decode_model(&self, trainables: &[&Value], fixed: &[&Value]) -> Result<DecodeModel> {
         let params = self.assemble_params(trainables, fixed)?;
         let norm = |name: &str| -> Result<Vec<f32>> { Ok(params.get(name)?.data.clone()) };
@@ -695,27 +711,30 @@ impl RefBundle {
     }
 
     fn resolve_linear(&self, params: &Params, name: &str) -> Result<DecLinear> {
-        let w = params.get(name)?.clone();
+        let w = params.weight(name)?;
         Ok(match self.method {
-            Method::Full | Method::None => DecLinear::Plain { w },
+            Method::Full | Method::None => DecLinear::Plain { w: w.cloned() },
             Method::Lora | Method::QLora => DecLinear::Lora {
                 a: params.get(&format!("{name}.lora_a"))?.clone(),
                 b: params.get(&format!("{name}.lora_b"))?.clone(),
                 scale: (self.dims.lora_alpha / self.dims.lora_r as f64) as f32,
-                w,
+                w: w.cloned(),
             },
             Method::OftV2 | Method::QOft => {
                 let packed = params.get(&format!("{name}.oft_q"))?;
                 let blocks =
                     build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
-                DecLinear::Rotate { w, blocks }
+                DecLinear::Rotate { w: w.cloned(), blocks }
             }
             Method::OftMerged => {
+                // Weight-centric merge genuinely needs the dense matrix
+                // (never quantized by construction).
+                let w = w.dense()?;
                 let packed = params.get(&format!("{name}.oft_q"))?;
                 let blocks =
                     build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
                 let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
-                DecLinear::Merged { rw: rd.matmul(&w)? }
+                DecLinear::Merged { rw: rd.matmul(w)? }
             }
         })
     }

@@ -1,0 +1,170 @@
+//! Fused dequantize-matmul kernels: multiply against a *packed*
+//! quantized weight by decoding it panel-by-panel into a small scratch
+//! buffer — the full f32 weight matrix never exists.
+//!
+//! The kernels are deliberately accumulation-order-compatible with
+//! [`Tensor::matmul`]: every output element accumulates over the
+//! contraction index in ascending order, with the same skip on zero
+//! left-hand values, so `fused_matmul(x, ...)` reproduces
+//! `x.matmul(&w.dequantize())` bit for bit whenever the decoder emits
+//! the exact `dequantize()` values. One row panel is decoded per
+//! K-block (the same `KC` blocking as `matmul_panel`) and shared
+//! read-only by the [`parallel_over_rows`] workers; each output row is
+//! written by exactly one thread, so results are deterministic at every
+//! thread count (and under `set_thread_cap`, which data-parallel
+//! training workers rely on).
+//!
+//! The kernels know nothing about NF4/AWQ layouts: callers pass a
+//! `decode(row0, rows, panel)` closure (see `quant::QuantWeight`).
+
+use anyhow::{ensure, Result};
+
+use super::{parallel_over_rows, Tensor};
+
+/// Decoded rows per K-block (mirrors `matmul_panel`'s KC). The scratch
+/// panel holds `KC * dout` f32 — a few MB at most, independent of din.
+const KC: usize = 256;
+
+/// `y = x @ W` for a packed `(din, dout)` weight, decoding W's rows
+/// [r0, r0 + rows) on demand via `decode(r0, rows, panel)` (row-major
+/// `rows x dout` into `panel`).
+pub fn fused_matmul<F>(x: &Tensor, din: usize, dout: usize, mut decode: F) -> Result<Tensor>
+where
+    F: FnMut(usize, usize, &mut [f32]),
+{
+    ensure!(
+        x.rank() == 2 && x.shape[1] == din,
+        "fused matmul shape mismatch: {:?} @ packed ({din}, {dout})",
+        x.shape
+    );
+    let m = x.shape[0];
+    let mut out = vec![0.0f32; m * dout];
+    if m == 0 || din == 0 || dout == 0 {
+        return Ok(Tensor::from_vec(&[m, dout], out));
+    }
+    let mut panel = vec![0.0f32; KC.min(din) * dout];
+    let mut p0 = 0;
+    while p0 < din {
+        let pend = (p0 + KC).min(din);
+        let rows = pend - p0;
+        decode(p0, rows, &mut panel[..rows * dout]);
+        let decoded: &[f32] = &panel[..rows * dout];
+        parallel_over_rows(&mut out, m, dout, |i, orow| {
+            let xrow = &x.data[i * din..(i + 1) * din];
+            for p in p0..pend {
+                let av = xrow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
+                for (o, &bv) in orow.iter_mut().zip(wrow) {
+                    *o += av * bv;
+                }
+            }
+        });
+        p0 = pend;
+    }
+    Ok(Tensor::from_vec(&[m, dout], out))
+}
+
+/// `y = g @ W^T` for a packed `(din, dout)` weight: `g` is `(m, dout)`,
+/// the result `(m, din)` — the backward's `dL/dx` against a frozen
+/// quantized base, without materializing W or W^T.
+pub fn fused_matmul_t<F>(g: &Tensor, din: usize, dout: usize, mut decode: F) -> Result<Tensor>
+where
+    F: FnMut(usize, usize, &mut [f32]),
+{
+    ensure!(
+        g.rank() == 2 && g.shape[1] == dout,
+        "fused transposed matmul shape mismatch: {:?} @ packed ({din}, {dout})^T",
+        g.shape
+    );
+    let m = g.shape[0];
+    let mut out = vec![0.0f32; m * din];
+    if m == 0 || din == 0 || dout == 0 {
+        return Ok(Tensor::from_vec(&[m, din], out));
+    }
+    let mut panel = vec![0.0f32; KC.min(din) * dout];
+    let mut p0 = 0;
+    while p0 < din {
+        let pend = (p0 + KC).min(din);
+        let rows = pend - p0;
+        decode(p0, rows, &mut panel[..rows * dout]);
+        let decoded: &[f32] = &panel[..rows * dout];
+        parallel_over_rows(&mut out, m, din, |i, orow| {
+            let grow = &g.data[i * dout..(i + 1) * dout];
+            for p in p0..pend {
+                let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
+                // Same per-element order as dy.matmul(&w.transpose2()):
+                // ascending contraction index, zero left-values skipped.
+                let mut acc = 0.0f32;
+                for (&gv, &wv) in grow.iter().zip(wrow) {
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    acc += gv * wv;
+                }
+                orow[p] = acc;
+            }
+        });
+        p0 = pend;
+    }
+    Ok(Tensor::from_vec(&[m, din], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// "Decoder" that serves rows of an already-dense matrix — isolates
+    /// the kernel's blocking/accumulation from any quantization format.
+    fn dense_rows(w: &Tensor) -> impl FnMut(usize, usize, &mut [f32]) + '_ {
+        let dout = w.shape[1];
+        move |r0, rows, panel| {
+            panel.copy_from_slice(&w.data[r0 * dout..(r0 + rows) * dout]);
+        }
+    }
+
+    #[test]
+    fn fused_matmul_matches_dense_bitwise() {
+        let mut rng = Rng::new(40);
+        for (m, din, dout) in [(1, 64, 32), (7, 300, 17), (33, 512, 64), (5, 64, 300)] {
+            let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+            let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+            let fused = fused_matmul(&x, din, dout, dense_rows(&w)).unwrap();
+            let dense = x.matmul(&w).unwrap();
+            assert_eq!(fused, dense, "({m},{din},{dout})");
+        }
+    }
+
+    #[test]
+    fn fused_matmul_t_matches_dense_bitwise() {
+        let mut rng = Rng::new(41);
+        for (m, din, dout) in [(1, 64, 32), (9, 300, 21), (17, 512, 48)] {
+            let g = Tensor::randn(&[m, dout], 1.0, &mut rng);
+            let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+            let fused = fused_matmul_t(&g, din, dout, dense_rows(&w)).unwrap();
+            let dense = g.matmul(&w.transpose2()).unwrap();
+            assert_eq!(fused, dense, "({m},{din},{dout})");
+        }
+    }
+
+    #[test]
+    fn fused_is_deterministic_across_calls() {
+        let mut rng = Rng::new(42);
+        let (m, din, dout) = (48, 512, 96);
+        let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        let a = fused_matmul(&x, din, dout, dense_rows(&w)).unwrap();
+        let b = fused_matmul(&x, din, dout, dense_rows(&w)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_rejects_shape_mismatch() {
+        let x = Tensor::zeros(&[2, 8]);
+        assert!(fused_matmul(&x, 16, 4, |_, _, _| {}).is_err());
+        assert!(fused_matmul_t(&x, 16, 4, |_, _, _| {}).is_err());
+    }
+}

@@ -5,6 +5,8 @@
 //! oracles (rust/src/peft), requantization-error analysis, and checks
 //! against the runtime outputs. Deliberately simple (row-major, f32).
 
+pub mod fused;
+
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;

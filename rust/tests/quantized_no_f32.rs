@@ -1,0 +1,122 @@
+//! The QOFT/QLoRA memory guarantee, end to end: with `--quant nf4` or
+//! `--quant awq`, no full f32 copy of any base weight matrix enters
+//! the *compute path* during train / eval / decode / serve — the
+//! engine-resident base is the packs, and nothing ever expands them.
+//! (The one f32 form that legitimately exists is `BaseModel`'s
+//! load-time host master — the quantization source and checkpoint
+//! export, exactly the copy a real QLoRA loader reads before packing;
+//! it is never uploaded for quantized bases and never consulted by a
+//! forward/backward/decode step.)
+//!
+//! Two probes, in the spirit of `Engine::upload_count`:
+//! * `quant::dequant_f32_count()` — every packed→f32 expansion
+//!   increments it; the fused kernels never do. This file keeps all
+//!   intentional oracle dequantization out, so the counter must stay
+//!   flat across every quantized flow (the process-wide assertion is
+//!   why these tests live in their own integration binary).
+//! * `Engine::upload_bytes()` — a quantized bundle's fixed inputs
+//!   upload at the packed size, within 1.5x of the manifest's pack
+//!   bytes and far below the f32 base.
+
+use std::sync::Arc;
+
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{BaseModel, Manifest, Trainer};
+use oftv2::quant::dequant_f32_count;
+use oftv2::runtime::{CheckpointPolicy, Engine};
+use oftv2::serve::Server;
+
+fn cfg(tag: &str, steps: usize) -> RunCfg {
+    let mut c = RunCfg::default();
+    c.tag = tag.into();
+    c.steps = steps;
+    c.log_every = 0;
+    c.data.task = "math".into();
+    c.data.documents = 120;
+    c
+}
+
+fn man(tag: &str) -> Manifest {
+    Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap()
+}
+
+#[test]
+fn quantized_flows_never_materialize_f32_base() {
+    let e = Engine::reference();
+    let before = dequant_f32_count();
+
+    // Train (including checkpointed + multi-worker paths), eval, and
+    // both decode paths, for every quantized bundle variant.
+    for tag in [
+        "tiny_qlora_nf4",
+        "tiny_qoft_nf4",
+        "tiny_qlora_awq",
+        "tiny_qoft_awq",
+    ] {
+        let mut c = cfg(tag, 2);
+        if tag == "tiny_qoft_nf4" {
+            c.train.grad_checkpoint = CheckpointPolicy::EveryK(1);
+            c.train.workers = 2;
+        }
+        let mut tr = Trainer::new(&e, &artifacts_root(), c).unwrap();
+        tr.train().unwrap();
+        tr.evaluate().unwrap();
+        tr.decode_greedy(&[1, 5, 9], 4).unwrap();
+        tr.decode_greedy_reforward(&[1, 5, 9], 4).unwrap();
+    }
+
+    // Serve: NF4 and AWQ adapters batched over one shared base. Built
+    // with `from_manifest` from a *quantized* manifest, so the engine
+    // never holds f32 buffers for the base linears at all — a
+    // quantized-only fleet is packed-only even engine-side. (The
+    // `for_preset` base used by mixed fleets deliberately uploads f32
+    // base buffers so full-precision adapters can attach too.)
+    let qman = man("tiny_qoft_nf4");
+    let base = BaseModel::from_manifest(&e, &qman, 7, None).unwrap();
+    let serve_bytes0 = e.upload_bytes();
+    let mut srv = Server::new(&e, Arc::clone(&base), 2);
+    srv.add_adapter_init("qoft", qman.clone(), 7, None).unwrap();
+    srv.add_adapter_init("qlora", man("tiny_qlora_awq"), 7, None).unwrap();
+    srv.submit("qoft", vec![1, 2, 3], 4).unwrap();
+    srv.submit("qlora", vec![1, 4], 4).unwrap();
+    srv.submit("qoft", vec![2], 3).unwrap();
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 3);
+    // Attaching both adapters uploaded exactly the two pack sets (NF4
+    // + AWQ) — no f32 base entered the engine for serving.
+    let serve_uploaded = e.upload_bytes() - serve_bytes0;
+    let packs_both = qman.quantized_pack_bytes() + man("tiny_qlora_awq").quantized_pack_bytes();
+    assert!(
+        serve_uploaded <= packs_both + packs_both / 2,
+        "serve attach uploaded {serve_uploaded} B, packs are {packs_both} B"
+    );
+
+    assert_eq!(
+        dequant_f32_count(),
+        before,
+        "a packed base weight was expanded to a full f32 tensor"
+    );
+}
+
+#[test]
+fn quantized_fixed_inputs_upload_at_packed_size() {
+    let e = Engine::reference();
+    for tag in ["tiny_qoft_nf4", "tiny_qlora_awq"] {
+        let m = man(tag);
+        let base = BaseModel::from_manifest(&e, &m, 7, None).unwrap();
+        let before = e.upload_bytes();
+        let _fixed = base.fixed_for(&e, &m).unwrap();
+        let measured = e.upload_bytes() - before;
+        let packed = m.quantized_pack_bytes();
+        assert!(
+            measured <= packed + packed / 2,
+            "{tag}: base residency {measured} B exceeds 1.5x packed {packed} B"
+        );
+        let f32b = m.dequantized_base_bytes().unwrap();
+        assert!(
+            measured < f32b,
+            "{tag}: packed residency {measured} B not below f32 {f32b} B"
+        );
+    }
+}
