@@ -108,9 +108,9 @@ fn main() -> Result<()> {
     let spec = ModelSpec::qwen25("7b")?;
     let shape = TrainShape::default();
     let mem = |m: Method| finetune_gib(&spec, m, Precision::Bf16, shape);
-    let m_oft = mem(Method::OftWeightCentric { b: 32 });
-    let m_v2 = mem(Method::OftInputCentric { b: 32 });
-    let m_lora = mem(Method::Lora { r: 16 });
+    let m_oft = mem(Method::oft_weight_centric(32));
+    let m_v2 = mem(Method::oft_input_centric(32));
+    let m_lora = mem(Method::lora(16));
     print_table(
         "Fig. 1 (right): GPU memory, Qwen2.5-7B BF16 (analytic)",
         &["method", "GiB", "ratio vs OFTv2"],
@@ -154,7 +154,7 @@ fn main() -> Result<()> {
             checkpoint: policy,
             ..TrainShape::default()
         };
-        let gib = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, mem_shape);
+        let gib = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, mem_shape);
         let rec = BenchRecord::from_samples(format!("ckpt_{}", policy.label()), &samples)
             .with("checkpoint", Json::str(policy.label()))
             .with("memory_gib_7b", Json::num(gib));

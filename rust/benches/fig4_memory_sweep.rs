@@ -57,9 +57,9 @@ fn main() -> Result<()> {
         Precision::Bf16,
         shape,
         &[
-            ("OFT", Method::OftWeightCentric { b: 32 }),
-            ("LoRA", Method::Lora { r: 16 }),
-            ("OFTv2", Method::OftInputCentric { b: 32 }),
+            ("OFT", Method::oft_weight_centric(32)),
+            ("LoRA", Method::lora(16)),
+            ("OFTv2", Method::oft_input_centric(32)),
         ],
         &mut report,
     );
@@ -68,8 +68,8 @@ fn main() -> Result<()> {
         Precision::Nf4,
         shape,
         &[
-            ("QLoRA", Method::Lora { r: 16 }),
-            ("QOFT", Method::OftInputCentric { b: 32 }),
+            ("QLoRA", Method::lora(16)),
+            ("QOFT", Method::oft_input_centric(32)),
         ],
         &mut report,
     );
@@ -78,8 +78,8 @@ fn main() -> Result<()> {
         Precision::Awq4,
         shape,
         &[
-            ("QLoRA", Method::Lora { r: 16 }),
-            ("QOFT", Method::OftInputCentric { b: 32 }),
+            ("QLoRA", Method::lora(16)),
+            ("QOFT", Method::oft_input_centric(32)),
         ],
         &mut report,
     );
@@ -95,8 +95,8 @@ fn main() -> Result<()> {
         Precision::Nf4,
         dequant_shape,
         &[
-            ("QLoRA", Method::Lora { r: 16 }),
-            ("QOFT", Method::OftInputCentric { b: 32 }),
+            ("QLoRA", Method::lora(16)),
+            ("QOFT", Method::oft_input_centric(32)),
         ],
         &mut report,
     );
@@ -164,20 +164,20 @@ fn main() -> Result<()> {
     // shape assertions
     for size in SIZES {
         let spec = ModelSpec::qwen25(size)?;
-        let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
-        let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
+        let lora = finetune_gib(&spec, Method::lora(16), Precision::Bf16, shape);
+        let v2 = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape);
         assert!(
             (v2 - lora).abs() / lora < 0.10,
             "{size}: OFTv2 {v2} vs LoRA {lora}"
         );
         for p in [Precision::Nf4, Precision::Awq4] {
-            let ql = finetune_gib(&spec, Method::Lora { r: 16 }, p, shape);
-            let qo = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, p, shape);
+            let ql = finetune_gib(&spec, Method::lora(16), p, shape);
+            let qo = finetune_gib(&spec, Method::oft_input_centric(32), p, shape);
             assert!((qo - ql).abs() / ql < 0.10, "{size}: QOFT {qo} vs QLoRA {ql}");
             // Packed residency must beat the dequantize-at-assembly
             // counterfactual at every scale.
             let qo_deq =
-                finetune_gib(&spec, Method::OftInputCentric { b: 32 }, p, dequant_shape);
+                finetune_gib(&spec, Method::oft_input_centric(32), p, dequant_shape);
             assert!(qo < qo_deq, "{size}: packed {qo} !< dequant {qo_deq}");
         }
     }

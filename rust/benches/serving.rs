@@ -183,6 +183,8 @@ fn main() -> Result<()> {
     for (name, tag) in [
         ("oft_v2", format!("{preset}_oft_v2")),
         ("qoft", format!("{preset}_qoft_nf4")),
+        ("boft", format!("{preset}_boft")),
+        ("hoft", format!("{preset}_hoft")),
     ] {
         let man = Manifest::load_or_builtin(artifacts_root().join(&tag))?;
         server.add_adapter_init(name, man, seed, None)?;
@@ -221,7 +223,7 @@ fn main() -> Result<()> {
         );
     }
     print_table(
-        &format!("multi-tenant serving ({preset}: OFTv2 + QOFT, one base, batch 4)"),
+        &format!("multi-tenant serving ({preset}: OFTv2 + QOFT + BOFT + HOFT, one base, batch 4)"),
         &["adapter", "reqs", "tokens", "latency ms", "tok/s"],
         &rows,
     );

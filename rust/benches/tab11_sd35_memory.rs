@@ -34,10 +34,10 @@ fn main() -> Result<()> {
     for (size, col) in [("medium", 0usize), ("large", 1usize)] {
         let spec = ModelSpec::sd35(size)?;
         for (label, m, p) in [
-            ("LoRA", Method::Lora { r: 16 }, Precision::Bf16),
-            ("OFTv2", Method::OftInputCentric { b: 32 }, Precision::Bf16),
-            ("QLoRA", Method::Lora { r: 16 }, Precision::Nf4),
-            ("QOFT", Method::OftInputCentric { b: 32 }, Precision::Nf4),
+            ("LoRA", Method::lora(16), Precision::Bf16),
+            ("OFTv2", Method::oft_input_centric(32), Precision::Bf16),
+            ("QLoRA", Method::lora(16), Precision::Nf4),
+            ("QOFT", Method::oft_input_centric(32), Precision::Nf4),
         ] {
             let gib = finetune_gib(&spec, m, p, shape);
             ours.insert((label, size), gib);

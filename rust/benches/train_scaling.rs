@@ -1,7 +1,7 @@
 //! Training-scaling bench — the layer/tape decomposition's two knobs
 //! swept against each other: data-parallel workers (`--workers`) ×
-//! gradient-checkpoint policy (`--grad-checkpoint`), across all 7 PEFT
-//! methods on the `small` preset.
+//! gradient-checkpoint policy (`--grad-checkpoint`), across every
+//! registered PEFT method on the `small` preset.
 //!
 //!   cargo bench --bench train_scaling [-- --quick]
 //!
@@ -25,15 +25,11 @@ use oftv2::json::Json;
 use oftv2::runtime::{CheckpointPolicy, Engine};
 use oftv2::{artifacts_root, Result};
 
-const METHOD_TAGS: [&str; 7] = [
-    "small_full",
-    "small_none",
-    "small_lora",
-    "small_oft_merged",
-    "small_oft_v2",
-    "small_qlora_nf4",
-    "small_qoft_nf4",
-];
+/// One bundle per registered PEFT method (boft/hoft included) — the
+/// sweep grows with the adapter registry instead of a hard-coded list.
+fn method_tags() -> Vec<String> {
+    oftv2::adapters::bundle_tags("small")
+}
 
 /// Post-warmup per-step wall times for one (bundle, workers, policy).
 fn step_samples(
@@ -80,7 +76,7 @@ fn main() -> Result<()> {
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut rows = Vec::new();
     let mut best_speedup_w4 = 0.0f64;
-    for tag in METHOD_TAGS {
+    for tag in &method_tags() {
         for policy in policies {
             let mut base_mean = 0.0f64;
             for workers in worker_counts {

@@ -31,11 +31,11 @@ fn main() -> Result<()> {
     for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
         let spec = ModelSpec::qwen25(size)?;
         for (method, prec) in [
-            (Method::OftWeightCentric { b: 32 }, Precision::Bf16),
-            (Method::OftInputCentric { b: 32 }, Precision::Bf16),
-            (Method::Lora { r: 16 }, Precision::Bf16),
-            (Method::OftInputCentric { b: 32 }, Precision::Nf4),
-            (Method::Lora { r: 16 }, Precision::Nf4),
+            (Method::oft_weight_centric(32), Precision::Bf16),
+            (Method::oft_input_centric(32), Precision::Bf16),
+            (Method::lora(16), Precision::Bf16),
+            (Method::oft_input_centric(32), Precision::Nf4),
+            (Method::lora(16), Precision::Nf4),
         ] {
             let total = finetune_memory(&spec, method, prec, shape).total() / GIB;
             let fits: Vec<&str> = gpus
@@ -57,8 +57,8 @@ fn main() -> Result<()> {
 
     // The Fig. 1 headline: weight-centric OFT vs OFTv2 on Qwen2.5-7B.
     let spec = ModelSpec::qwen25("7b")?;
-    let oft = finetune_memory(&spec, Method::OftWeightCentric { b: 32 }, Precision::Bf16, shape);
-    let v2 = finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
+    let oft = finetune_memory(&spec, Method::oft_weight_centric(32), Precision::Bf16, shape);
+    let v2 = finetune_memory(&spec, Method::oft_input_centric(32), Precision::Bf16, shape);
     println!("== Fig. 1 breakdown: Qwen2.5-7B, BF16 ==");
     println!("{:<16} {:>12} {:>12}", "", "OFT (GiB)", "OFTv2 (GiB)");
     for (label, a, b) in [

@@ -1,0 +1,428 @@
+//! BOFT: butterfly-factorized orthogonal finetuning (Liu et al. 2024)
+//! as a first-class runtime method — the structured-sparsity extension
+//! §5 of the OFTv2 paper calls out, promoted from the host-side
+//! analysis in [`crate::peft::butterfly`] to a trainable adapter.
+//!
+//! Instead of one block-diagonal rotation, BOFT composes `m` butterfly
+//! *factors*: factor `f` rotates coordinates gathered at stride
+//! `b^f` into contiguous b-wide CNP blocks (a perfect-shuffle
+//! permutation), so the product mixes `b^m` coordinates from any one —
+//! global reach at block-diagonal cost. Depth adapts per linear:
+//! `m(din)` is the largest power such that `b^m` divides `din`, so the
+//! tiny preset's `d_model = 64, b = 16` attention linears get one
+//! factor while its `d_ff = 256` MLP linears genuinely compose two.
+//!
+//! Everything stays input-centric: the factors rotate activations
+//! (quadratic work), the frozen base matmul is untouched, and each
+//! factor's blocks come from the same Cayley–Neumann parameterization
+//! as OFTv2 — identity at `Q = 0`, orthogonal to the documented
+//! Neumann-truncation tolerance.
+
+use anyhow::{ensure, Context, Result};
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::peft::{invert_perm, packed_dim, stride_permutation};
+use crate::peft::butterfly::permute_cols;
+use crate::runtime::layers::linear::{
+    block_rotate_fast, block_rotate_grad_r, block_rotate_transposed, build_cnp_blocks,
+    cnp_backward_all,
+};
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+pub struct Boft;
+
+/// Registry object.
+pub static BOFT: Boft = Boft;
+
+/// Butterfly depth for one linear: the largest `m >= 1` with
+/// `b^m | din` (factor `f` strides by `b^f`, so factor `m-1` needs
+/// `b^m` to divide the rotated dimension). Degenerate block sizes
+/// (`b < 2`, where the "blocks" cannot rotate anything) clamp to one
+/// factor instead of diverging.
+pub fn depth(din: usize, b: usize) -> usize {
+    if b < 2 {
+        return 1;
+    }
+    let mut m = 0usize;
+    let mut span = b;
+    while span <= din && din % span == 0 {
+        m += 1;
+        span = match span.checked_mul(b) {
+            Some(s) => s,
+            None => break,
+        };
+    }
+    m.max(1)
+}
+
+fn packed_name(linear: &str) -> String {
+    format!("{linear}.boft_q")
+}
+
+/// One resolved butterfly factor: the stride permutation (and its
+/// inverse) plus this factor's CNP rotation blocks.
+struct BoftFactor {
+    perm: Vec<usize>,
+    inv: Vec<usize>,
+    blocks: Vec<Tensor>,
+}
+
+/// Per-step plan entry: all factors of one linear, resolved once.
+struct BoftPlan {
+    factors: Vec<BoftFactor>,
+}
+
+/// Activation extras: the inputs to factors `1..m` (factor 0's input
+/// is the linear's own input, already saved in the activation record's
+/// `x`), plus the factors themselves when the step had no shared plan.
+struct BoftAct {
+    inputs: Vec<Tensor>,
+    factors: Option<Vec<BoftFactor>>,
+}
+
+/// Resolve the packed parameter `(m*nb, p)` into per-factor blocks +
+/// permutations for a linear of input width `din`.
+fn build_factors(packed: &Tensor, din: usize, dims: &ModelDims) -> Result<Vec<BoftFactor>> {
+    let b = dims.block_b;
+    let nb = din / b;
+    let m = depth(din, b);
+    let p = packed_dim(b);
+    ensure!(
+        packed.shape.len() == 2 && packed.shape[0] == m * nb && packed.shape[1] == p,
+        "packed BOFT parameter must be ({}, {p}) for din {din}, got {:?}",
+        m * nb,
+        packed.shape
+    );
+    let mut factors = Vec::with_capacity(m);
+    let mut stride = 1usize;
+    for f in 0..m {
+        let rows = Tensor::from_vec(
+            &[nb, p],
+            packed.data[f * nb * p..(f + 1) * nb * p].to_vec(),
+        );
+        let blocks = build_cnp_blocks(&rows, b, dims.neumann_k)?;
+        let perm = stride_permutation(din, b, stride);
+        let inv = invert_perm(&perm);
+        factors.push(BoftFactor { perm, inv, blocks });
+        stride *= b;
+    }
+    Ok(factors)
+}
+
+/// One factor: group by stride, rotate the blocks, scatter back.
+fn apply_factor(x: &Tensor, f: &BoftFactor) -> Result<Tensor> {
+    let grouped = permute_cols(x, &f.perm);
+    let rotated = block_rotate_fast(&grouped, &f.blocks)?;
+    Ok(permute_cols(&rotated, &f.inv))
+}
+
+/// Apply the factor product to rows of `x`, returning the output and
+/// the inputs to factors `1..m` (for the backward's dR terms; factor
+/// 0 reads the activation record's saved `x`, so it is not duplicated
+/// here).
+fn rotate_forward(x: &Tensor, factors: &[BoftFactor]) -> Result<(Tensor, Vec<Tensor>)> {
+    let Some((first, rest)) = factors.split_first() else {
+        return Ok((x.clone(), Vec::new()));
+    };
+    let mut cur = apply_factor(x, first)?;
+    let mut inputs = Vec::with_capacity(rest.len());
+    for f in rest {
+        inputs.push(cur.clone());
+        cur = apply_factor(&cur, f)?;
+    }
+    Ok((cur, inputs))
+}
+
+/// As [`rotate_forward`] without saving intermediates — the per-token
+/// decode path, where nothing flows backward.
+fn rotate_only(x: &Tensor, factors: &[BoftFactor]) -> Result<Tensor> {
+    let Some((first, rest)) = factors.split_first() else {
+        return Ok(x.clone());
+    };
+    let mut cur = apply_factor(x, first)?;
+    for f in rest {
+        cur = apply_factor(&cur, f)?;
+    }
+    Ok(cur)
+}
+
+impl Adapter for Boft {
+    fn name(&self) -> &'static str {
+        "boft"
+    }
+
+    fn about(&self) -> &'static str {
+        "butterfly-factorized OFT: m strided CNP factors, b^m mixing reach"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "BOFT"
+    }
+
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        ensure!(
+            dims.block_b >= 2,
+            "boft: block size {} cannot rotate anything (need b >= 2)",
+            dims.block_b
+        );
+        super::oft_v2::ensure_blocks_divide("boft", dims)
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        let b = dims.block_b;
+        let m = depth(din, b);
+        vec![ParamSpec {
+            name: packed_name(linear),
+            shape: vec![m * (din / b), b * (b - 1) / 2],
+            init: Init::Zeros,
+        }]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let packed = params.get(&packed_name(linear))?;
+        let (din, _) = params.weight(linear)?.shape2();
+        Ok(Some(Box::new(BoftPlan {
+            factors: build_factors(packed, din, dims)?,
+        })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        let (din, _) = w.shape2();
+        let (rotated, inputs, inline) =
+            match ctx.plan.and_then(|p| p.get::<BoftPlan>(linear)) {
+                Some(plan) => {
+                    let (rot, inputs) = rotate_forward(x, &plan.factors)?;
+                    (rot, inputs, None)
+                }
+                None => {
+                    let packed = ctx.params.get(&packed_name(linear))?;
+                    let factors = build_factors(packed, din, ctx.dims)?;
+                    let (rot, inputs) = rotate_forward(x, &factors)?;
+                    (rot, inputs, Some(factors))
+                }
+            };
+        let y = w.matmul(&rotated)?;
+        Ok((
+            y,
+            Some(Box::new(BoftAct {
+                inputs,
+                factors: inline,
+            })),
+        ))
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let b = ctx.dims.block_b;
+        let k = ctx.dims.neumann_k;
+        let (din, _) = w.shape2();
+        let nb = din / b;
+        let p = packed_dim(b);
+        let record: &BoftAct = act.extra()?;
+        let factors: &[BoftFactor] = match ctx.plan.and_then(|pl| pl.get::<BoftPlan>(linear)) {
+            Some(plan) => plan.factors.as_slice(),
+            None => record
+                .factors
+                .as_deref()
+                .context("missing boft factor record")?,
+        };
+        let m = factors.len();
+        ensure!(
+            record.inputs.len() + 1 == m,
+            "boft record has {} factor inputs, expected {}",
+            record.inputs.len(),
+            m.saturating_sub(1)
+        );
+        let packed = ctx.params.get(&packed_name(linear))?;
+
+        // Cotangent of the rotated activations, walked back factor by
+        // factor. Each factor's dR is the standard block-rotation
+        // gradient taken in that factor's grouped (permuted) space;
+        // factor 0's input is the record's saved x.
+        let mut dz = w.matmul_t(dy)?;
+        let mut dpack = vec![0f32; m * nb * p];
+        for (f, fac) in factors.iter().enumerate().rev() {
+            let x_f = if f == 0 { &act.x } else { &record.inputs[f - 1] };
+            let grouped_x = permute_cols(x_f, &fac.perm);
+            let d_rot = permute_cols(&dz, &fac.perm);
+            let dr = block_rotate_grad_r(&grouped_x, &d_rot, b);
+            let rows = Tensor::from_vec(
+                &[nb, p],
+                packed.data[f * nb * p..(f + 1) * nb * p].to_vec(),
+            );
+            let dp = cnp_backward_all(&rows, b, k, &dr)?;
+            dpack[f * nb * p..(f + 1) * nb * p].copy_from_slice(&dp.data);
+            let d_grouped = block_rotate_transposed(&d_rot, &fac.blocks)?;
+            dz = permute_cols(&d_grouped, &fac.inv);
+        }
+        accumulate(
+            grads,
+            &packed_name(linear),
+            Tensor::from_vec(&[m * nb, p], dpack),
+        );
+        Ok(dz)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        let packed = params.get(&packed_name(linear))?;
+        let (din, _) = w.shape2();
+        Ok(Box::new(BoftDecode {
+            w: w.cloned(),
+            factors: build_factors(packed, din, dims)?,
+        }))
+    }
+
+    /// Each factor's output is saved for the next factor's dR, so BOFT
+    /// keeps `m - 1` extra activation copies per adapted linear beyond
+    /// the generic input saves.
+    fn mem_transient(
+        &self,
+        spec: &crate::modelspec::ModelSpec,
+        dims: &ModelDims,
+        tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        input_saves
+            + spec
+                .adapted_linears()
+                .map(|li| {
+                    (depth(li.din, dims.block_b).saturating_sub(1)) as f64
+                        * tokens
+                        * li.din as f64
+                        * act_bytes
+                })
+                .sum::<f64>()
+    }
+}
+
+struct BoftDecode {
+    w: BaseWeight,
+    factors: Vec<BoftFactor>,
+}
+
+impl DecodeApply for BoftDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(&rotate_only(x, &self.factors)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::orthogonality_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn depth_adapts_to_linear_width() {
+        assert_eq!(depth(64, 16), 1); // tiny attention linears
+        assert_eq!(depth(256, 16), 2); // tiny MLP linears
+        assert_eq!(depth(4096, 32), 2);
+        assert_eq!(depth(64, 4), 3);
+        assert_eq!(depth(48, 16), 1); // non-dividing widths clamp to 1
+        assert_eq!(depth(64, 1), 1); // degenerate b clamps, never loops
+        assert_eq!(depth(64, 0), 1);
+    }
+
+    fn dims(b: usize, k: usize) -> ModelDims {
+        let mut d = ModelDims::analysis(4, b);
+        d.neumann_k = k;
+        d
+    }
+
+    fn random_packed(din: usize, b: usize, std: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let rows = depth(din, b) * (din / b);
+        Tensor::randn(&[rows, packed_dim(b)], std, &mut rng)
+    }
+
+    /// The factor product applied to the identity: the dense rotation.
+    fn dense_rotation(din: usize, b: usize, k: usize, std: f32, seed: u64) -> Tensor {
+        let packed = random_packed(din, b, std, seed);
+        let factors = build_factors(&packed, din, &dims(b, k)).unwrap();
+        let (r, _) = rotate_forward(&Tensor::eye(din), &factors).unwrap();
+        r
+    }
+
+    #[test]
+    fn butterfly_product_is_orthogonal() {
+        // Orthogonality of the composed factors inherits the CNP
+        // truncation error: at the documented operating point
+        // (small Q, k >= 6) the product's ||R^T R - I||_F stays below
+        // 5e-3 — the same tolerance the host-side butterfly oracle
+        // locks (peft::butterfly::tests::product_is_orthogonal).
+        for &(din, b) in &[(64usize, 16usize), (256, 16), (64, 4)] {
+            for seed in 0..3u64 {
+                let r = dense_rotation(din, b, 8, 0.05, 100 + seed);
+                let err = orthogonality_error(&r);
+                assert!(err < 5e-3, "din={din} b={b} seed={seed}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_at_zero_parameters() {
+        let din = 256;
+        let packed = Tensor::zeros(&[depth(din, 16) * (din / 16), packed_dim(16)]);
+        let factors = build_factors(&packed, din, &dims(16, 5)).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[3, din], 1.0, &mut rng);
+        let (y, inputs) = rotate_forward(&x, &factors).unwrap();
+        // inputs to factors 1.. only — factor 0's input is the saved x
+        assert_eq!(inputs.len(), 1);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+        assert!(rotate_only(&x, &factors).unwrap().max_abs_diff(&y) < 1e-7);
+    }
+
+    #[test]
+    fn multi_factor_mixing_exceeds_one_block() {
+        // One coordinate must reach b^2 coordinates through 2 factors —
+        // the whole point of promoting BOFT over plain block-diagonal.
+        let (din, b) = (256usize, 16usize);
+        let packed = random_packed(din, b, 0.1, 5);
+        let factors = build_factors(&packed, din, &dims(b, 6)).unwrap();
+        let mut probe = Tensor::zeros(&[1, din]);
+        probe.data[0] = 1.0;
+        let (y, _) = rotate_forward(&probe, &factors).unwrap();
+        let touched = y.data.iter().filter(|v| v.abs() > 1e-9).count();
+        assert_eq!(touched, b * b, "mixing reach should be b^2 = {}", b * b);
+    }
+
+    #[test]
+    fn bad_packed_shape_is_an_error() {
+        let packed = Tensor::zeros(&[3, packed_dim(16)]);
+        assert!(build_factors(&packed, 64, &dims(16, 5)).is_err());
+    }
+}

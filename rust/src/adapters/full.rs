@@ -1,0 +1,78 @@
+//! Full finetuning: every base parameter is trainable. The adapted
+//! linear is the plain base matmul, and (uniquely) its weight gradient
+//! is accumulated.
+
+use anyhow::Result;
+
+use super::{ActExtra, Adapter, DecodeApply, PlainDecode};
+use crate::coordinator::manifest::{ModelDims, ParamSpec};
+use crate::runtime::layers::{accumulate, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+pub struct Full;
+
+/// Registry object.
+pub static FULL: Full = Full;
+
+impl Adapter for Full {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn about(&self) -> &'static str {
+        "full finetuning: every base parameter trains"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "Full"
+    }
+
+    fn trains_base(&self) -> bool {
+        true
+    }
+
+    /// No per-linear adapter parameters: manifest synthesis moves the
+    /// whole base into the trainables instead (see `trains_base`).
+    fn linear_trainables(
+        &self,
+        _linear: &str,
+        _din: usize,
+        _dout: usize,
+        _dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        Vec::new()
+    }
+
+    fn linear_forward(
+        &self,
+        _ctx: &Ctx,
+        _linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        Ok((w.matmul(x)?, None))
+    }
+
+    fn linear_backward(
+        &self,
+        _ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        accumulate(grads, linear, act.x.transpose2().matmul(dy)?);
+        w.matmul_t(dy)
+    }
+
+    fn resolve_decode(
+        &self,
+        _params: &Params,
+        _dims: &ModelDims,
+        _linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        Ok(Box::new(PlainDecode { w: w.cloned() }))
+    }
+}

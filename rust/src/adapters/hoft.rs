@@ -1,0 +1,480 @@
+//! HOFT: Householder orthogonal finetuning (Moreno Arcas et al. 2025,
+//! per PAPERS.md) as a runtime method. The per-linear rotation is a
+//! product of `k` Householder reflections
+//! `H(w) = I - 2 w w^T / (w^T w)` applied to the *input* activations
+//! (input-centric, like OFTv2): exactly orthogonal for any `w != 0`,
+//! `O(din)` work per reflection per row, `k * din` trainable
+//! parameters per linear.
+//!
+//! **Identity at init.** A reflection is never the identity, so HOFT
+//! parameterizes each direction as `w_i = a_i + v_i` with a fixed unit
+//! anchor `a_i` (deterministically derived from the linear's name) and
+//! the trainable offset `v_i` initialized to zero — and anchors come
+//! in equal *pairs* (`a_{2j} == a_{2j+1}`). Reflections are
+//! involutions, so at `v = 0` each pair collapses to
+//! `H(a) H(a) = I`: the adapted model starts exactly at the
+//! pretrained base, like Q = 0 does for the Cayley methods, while the
+//! two halves of a pair still receive distinct (order-dependent)
+//! gradients.
+
+use anyhow::{ensure, Context, Result};
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct Hoft;
+
+/// Registry object.
+pub static HOFT: Hoft = Hoft;
+
+/// Reflections per adapted linear: the bundle's LoRA rank rounded up
+/// to an even count (anchors pair up), at least 2.
+pub fn reflections(dims: &ModelDims) -> usize {
+    let k = dims.lora_r.max(2);
+    k + (k & 1)
+}
+
+fn param_name(linear: &str) -> String {
+    format!("{linear}.hoft_v")
+}
+
+/// FNV-1a over the linear's name: gives every linear an independent,
+/// order-free anchor stream (same scheme as parameter init).
+fn name_seed(linear: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in linear.as_bytes() {
+        h ^= *byte as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// The fixed unit anchor of reflection `i` (pairs share: index `i/2`).
+/// Deterministic in (linear, pair, din) — every worker, checkpoint
+/// resume, and decode session reconstructs identical anchors.
+fn anchor(linear: &str, i: usize, din: usize) -> Vec<f32> {
+    let mut rng = Rng::new(
+        0x480F_7EC7 ^ name_seed(linear) ^ ((i / 2) as u64).wrapping_mul(0x9E37_79B9_97F4_A7C1),
+    );
+    let mut a = rng.normal_vec(din, 1.0);
+    let norm = a.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+    for x in &mut a {
+        *x /= norm;
+    }
+    a
+}
+
+/// One resolved reflection: direction `w = a + v` and `s = w . w`.
+struct Refl {
+    w: Vec<f32>,
+    s: f32,
+}
+
+/// Per-step plan entry: all reflections of one linear.
+struct HoftPlan {
+    refl: Vec<Refl>,
+}
+
+/// Activation extras: the inputs to reflections `1..k` (reflection 0's
+/// input is the linear's own input, already saved in the activation
+/// record's `x`), plus the resolved reflections when the step had no
+/// shared plan.
+struct HoftAct {
+    inputs: Vec<Tensor>,
+    refl: Option<Vec<Refl>>,
+}
+
+/// Resolve the trainable `(k, din)` offsets into reflections.
+fn build_reflections(vt: &Tensor, linear: &str, din: usize) -> Result<Vec<Refl>> {
+    ensure!(
+        vt.shape.len() == 2 && vt.shape[1] == din,
+        "HOFT parameter of '{linear}' must be (k, {din}), got {:?}",
+        vt.shape
+    );
+    // Anchors pair up (see module doc): an odd count would leave one
+    // unpaired reflection applied at v = 0, silently shifting the
+    // model away from the pretrained base before training starts.
+    ensure!(
+        vt.shape[0] > 0 && vt.shape[0] % 2 == 0,
+        "HOFT parameter of '{linear}' must hold an even, nonzero reflection count \
+         (anchor pairs make the adapter the identity at init); got {}",
+        vt.shape[0]
+    );
+    let k = vt.shape[0];
+    let mut refl = Vec::with_capacity(k);
+    for i in 0..k {
+        let a = anchor(linear, i, din);
+        let w: Vec<f32> = a
+            .iter()
+            .zip(&vt.data[i * din..(i + 1) * din])
+            .map(|(ai, vi)| ai + vi)
+            .collect();
+        let s = w.iter().map(|x| x * x).sum::<f32>();
+        ensure!(
+            s > 1e-12,
+            "HOFT reflection {i} of '{linear}' collapsed to the zero vector \
+             (offset cancels its anchor); reduce the learning rate"
+        );
+        refl.push(Refl { w, s });
+    }
+    Ok(refl)
+}
+
+/// `y = x H(w)` row-wise: `y_r = x_r - (2 (x_r . w) / s) w`.
+fn reflect(x: &Tensor, r: &Refl) -> Tensor {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0f32; m * d];
+    for row in 0..m {
+        let src = &x.data[row * d..(row + 1) * d];
+        let dst = &mut out[row * d..(row + 1) * d];
+        let mut c = 0f32;
+        for j in 0..d {
+            c += src[j] * r.w[j];
+        }
+        let c = 2.0 * c / r.s;
+        for j in 0..d {
+            dst[j] = src[j] - c * r.w[j];
+        }
+    }
+    Tensor::from_vec(&[m, d], out)
+}
+
+/// Apply all reflections in index order; returns the output and the
+/// inputs to reflections `1..k` (for the backward — reflection 0 reads
+/// the activation record's saved `x`, so it is not duplicated here).
+fn rotate_forward(x: &Tensor, refl: &[Refl]) -> (Tensor, Vec<Tensor>) {
+    let Some((first, rest)) = refl.split_first() else {
+        return (x.clone(), Vec::new());
+    };
+    let mut cur = reflect(x, first);
+    let mut inputs = Vec::with_capacity(rest.len());
+    for r in rest {
+        inputs.push(cur.clone());
+        cur = reflect(&cur, r);
+    }
+    (cur, inputs)
+}
+
+/// As [`rotate_forward`] without saving intermediates — the per-token
+/// decode path, where nothing flows backward.
+fn rotate_only(x: &Tensor, refl: &[Refl]) -> Tensor {
+    let Some((first, rest)) = refl.split_first() else {
+        return x.clone();
+    };
+    let mut cur = reflect(x, first);
+    for r in rest {
+        cur = reflect(&cur, r);
+    }
+    cur
+}
+
+/// Backward through one reflection. With `p_r = x_r . w`,
+/// `q_r = dy_r . w`, `alpha = sum_r p_r q_r`:
+///
+///   dL/dx = dy H(w)                    (H is symmetric)
+///   dL/dw_j = -(2/s) sum_r (p_r dy_rj + q_r x_rj) + (4 alpha / s^2) w_j
+///
+/// and `dL/dv = dL/dw` since `w = a + v` with `a` fixed. Locked by the
+/// finite-difference train-step check in `runtime::refmodel::tests`.
+fn reflect_backward(x: &Tensor, dy: &Tensor, r: &Refl) -> (Vec<f32>, Tensor) {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut dw = vec![0f32; d];
+    let mut alpha = 0f32;
+    for row in 0..m {
+        let xr = &x.data[row * d..(row + 1) * d];
+        let dyr = &dy.data[row * d..(row + 1) * d];
+        let mut p = 0f32;
+        let mut q = 0f32;
+        for j in 0..d {
+            p += xr[j] * r.w[j];
+            q += dyr[j] * r.w[j];
+        }
+        alpha += p * q;
+        let f = 2.0 / r.s;
+        for j in 0..d {
+            dw[j] -= f * (p * dyr[j] + q * xr[j]);
+        }
+    }
+    let g = 4.0 * alpha / (r.s * r.s);
+    for j in 0..d {
+        dw[j] += g * r.w[j];
+    }
+    (dw, reflect(dy, r))
+}
+
+impl Adapter for Hoft {
+    fn name(&self) -> &'static str {
+        "hoft"
+    }
+
+    fn about(&self) -> &'static str {
+        "Householder orthogonal finetuning: k exact reflections per linear"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "HOFT"
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        vec![ParamSpec {
+            name: param_name(linear),
+            shape: vec![reflections(dims), din],
+            init: Init::Zeros,
+        }]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let vt = params.get(&param_name(linear))?;
+        let (din, _) = params.weight(linear)?.shape2();
+        let _ = dims;
+        Ok(Some(Box::new(HoftPlan {
+            refl: build_reflections(vt, linear, din)?,
+        })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        let (din, _) = w.shape2();
+        let (rotated, inputs, inline) =
+            match ctx.plan.and_then(|p| p.get::<HoftPlan>(linear)) {
+                Some(plan) => {
+                    let (rot, inputs) = rotate_forward(x, &plan.refl);
+                    (rot, inputs, None)
+                }
+                None => {
+                    let vt = ctx.params.get(&param_name(linear))?;
+                    let refl = build_reflections(vt, linear, din)?;
+                    let (rot, inputs) = rotate_forward(x, &refl);
+                    (rot, inputs, Some(refl))
+                }
+            };
+        let y = w.matmul(&rotated)?;
+        Ok((
+            y,
+            Some(Box::new(HoftAct {
+                inputs,
+                refl: inline,
+            })),
+        ))
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let (din, _) = w.shape2();
+        let record: &HoftAct = act.extra()?;
+        let refl: &[Refl] = match ctx.plan.and_then(|p| p.get::<HoftPlan>(linear)) {
+            Some(plan) => plan.refl.as_slice(),
+            None => record
+                .refl
+                .as_deref()
+                .context("missing hoft reflection record")?,
+        };
+        let k = refl.len();
+        ensure!(
+            record.inputs.len() + 1 == k,
+            "hoft record has {} reflection inputs, expected {}",
+            record.inputs.len(),
+            k.saturating_sub(1)
+        );
+        let mut dz = w.matmul_t(dy)?;
+        let mut dv = vec![0f32; k * din];
+        for i in (0..k).rev() {
+            // reflection 0's input is the record's saved x
+            let x_i = if i == 0 { &act.x } else { &record.inputs[i - 1] };
+            let (dw, dx) = reflect_backward(x_i, &dz, &refl[i]);
+            dv[i * din..(i + 1) * din].copy_from_slice(&dw);
+            dz = dx;
+        }
+        accumulate(
+            grads,
+            &param_name(linear),
+            Tensor::from_vec(&[k, din], dv),
+        );
+        Ok(dz)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        _dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        let vt = params.get(&param_name(linear))?;
+        let (din, _) = w.shape2();
+        Ok(Box::new(HoftDecode {
+            w: w.cloned(),
+            refl: build_reflections(vt, linear, din)?,
+        }))
+    }
+
+    /// Each reflection's output feeds the next, so HOFT keeps `k - 1`
+    /// extra activation copies per adapted linear alive for backward.
+    fn mem_transient(
+        &self,
+        spec: &crate::modelspec::ModelSpec,
+        dims: &ModelDims,
+        tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        let k = reflections(dims) as f64;
+        input_saves
+            + spec
+                .adapted_linears()
+                .map(|li| (k - 1.0) * tokens * li.din as f64 * act_bytes)
+                .sum::<f64>()
+    }
+}
+
+struct HoftDecode {
+    w: BaseWeight,
+    refl: Vec<Refl>,
+}
+
+impl DecodeApply for HoftDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(&rotate_only(x, &self.refl))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::orthogonality_error;
+    use crate::util::rng::Rng;
+
+    fn random_offsets(k: usize, din: usize, std: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[k, din], std, &mut rng)
+    }
+
+    fn dense_rotation(linear: &str, vt: &Tensor, din: usize) -> Tensor {
+        let refl = build_reflections(vt, linear, din).unwrap();
+        let (r, _) = rotate_forward(&Tensor::eye(din), &refl);
+        r
+    }
+
+    #[test]
+    fn reflection_product_is_orthogonal() {
+        // Householder reflections are exactly orthogonal — unlike the
+        // Cayley–Neumann methods there is no series truncation, so the
+        // documented tolerance is pure f32 rounding: 1e-4 in
+        // Frobenius norm even for large offsets.
+        for &din in &[16usize, 64] {
+            for seed in 0..3u64 {
+                let vt = random_offsets(4, din, 0.5, seed);
+                let r = dense_rotation("layers.0.attn.wq", &vt, din);
+                let err = orthogonality_error(&r);
+                assert!(err < 1e-4, "din={din} seed={seed}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_at_zero_offsets() {
+        // The paired-anchor init: at v = 0 each anchor pair cancels
+        // (H(a) H(a) = I), so the adapted model is exactly the base.
+        let din = 64;
+        let vt = Tensor::zeros(&[4, din]);
+        let refl = build_reflections(&vt, "layers.1.mlp.up", din).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, din], 1.0, &mut rng);
+        let (y, _) = rotate_forward(&x, &refl);
+        assert!(y.max_abs_diff(&x) < 1e-5, "{}", y.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn rotation_preserves_row_norms() {
+        let din = 32;
+        let vt = random_offsets(6, din, 0.3, 7);
+        let refl = build_reflections(&vt, "layers.0.attn.wo", din).unwrap();
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&[4, din], 1.0, &mut rng);
+        let (y, _) = rotate_forward(&x, &refl);
+        for row in 0..4 {
+            let nx: f32 = x.data[row * din..(row + 1) * din].iter().map(|v| v * v).sum();
+            let ny: f32 = y.data[row * din..(row + 1) * din].iter().map(|v| v * v).sum();
+            assert!(
+                (nx.sqrt() - ny.sqrt()).abs() < 1e-3 * nx.sqrt().max(1.0),
+                "row {row}: {} vs {}",
+                nx.sqrt(),
+                ny.sqrt()
+            );
+        }
+    }
+
+    #[test]
+    fn anchors_are_deterministic_and_paired() {
+        let a0 = anchor("layers.0.attn.wq", 0, 64);
+        let a1 = anchor("layers.0.attn.wq", 1, 64);
+        assert_eq!(a0, a1, "pair halves must share an anchor");
+        let a2 = anchor("layers.0.attn.wq", 2, 64);
+        assert_ne!(a0, a2, "different pairs get different anchors");
+        assert_eq!(a0, anchor("layers.0.attn.wq", 0, 64), "deterministic");
+        assert_ne!(a0, anchor("layers.0.attn.wk", 0, 64), "per-linear streams");
+        let norm: f32 = a0.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reflection_count_is_even_and_tracks_rank() {
+        let mut d = ModelDims::analysis(4, 32);
+        assert_eq!(reflections(&d), 4);
+        d.lora_r = 5;
+        assert_eq!(reflections(&d), 6);
+        d.lora_r = 1;
+        assert_eq!(reflections(&d), 2);
+    }
+
+    #[test]
+    fn odd_reflection_count_is_rejected() {
+        // An unpaired anchor would break identity-at-init silently; a
+        // hand-edited (3, din) parameter must error, not load.
+        let vt = Tensor::zeros(&[3, 16]);
+        assert!(build_reflections(&vt, "layers.0.attn.wq", 16).is_err());
+        let empty = Tensor::zeros(&[0, 16]);
+        assert!(build_reflections(&empty, "layers.0.attn.wq", 16).is_err());
+    }
+
+    #[test]
+    fn zero_direction_is_an_error_not_a_panic() {
+        // An offset that exactly cancels its anchor must surface as an
+        // error naming the reflection.
+        let din = 16;
+        let a = anchor("layers.0.attn.wq", 0, din);
+        let mut data = vec![0f32; 2 * din];
+        for (j, aj) in a.iter().enumerate() {
+            data[j] = -aj;
+        }
+        let vt = Tensor::from_vec(&[2, din], data);
+        let err = build_reflections(&vt, "layers.0.attn.wq", din);
+        assert!(err.is_err());
+    }
+}

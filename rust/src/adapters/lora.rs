@@ -1,0 +1,168 @@
+//! LoRA: the additive low-rank adapter `y = x W + (alpha/r) (x A) B`.
+//! One struct serves both the full-precision (`lora`) and quantized
+//! (`qlora`) registrations — the base weight arrives as a [`WeightRef`]
+//! and stays packed on the quantized path (fused transposed matmul in
+//! the backward).
+
+use anyhow::Result;
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::modelspec::ModelSpec;
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+pub struct Lora {
+    pub name: &'static str,
+    pub quantized: bool,
+}
+
+/// Registry object (full-precision base).
+pub static LORA: Lora = Lora {
+    name: "lora",
+    quantized: false,
+};
+
+/// Activation extras of one LoRA linear: the saved low-rank activation
+/// `x A` and the `alpha/r` scale.
+struct LoraAct {
+    xa: Tensor,
+    scale: f32,
+}
+
+fn scale_of(dims: &ModelDims) -> f32 {
+    (dims.lora_alpha / dims.lora_r as f64) as f32
+}
+
+impl Adapter for Lora {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn about(&self) -> &'static str {
+        if self.quantized {
+            "LoRA over an NF4/AWQ-packed frozen base (QLoRA)"
+        } else {
+            "additive low-rank adapter W + (alpha/r) A B"
+        }
+    }
+
+    fn paper_label(&self, quantized: bool) -> &'static str {
+        if self.quantized || quantized {
+            "QLoRA"
+        } else {
+            "LoRA"
+        }
+    }
+
+    fn quantized_base(&self) -> bool {
+        self.quantized
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: format!("{linear}.lora_a"),
+                shape: vec![din, dims.lora_r],
+                init: Init::Normal(0.01),
+            },
+            ParamSpec {
+                name: format!("{linear}.lora_b"),
+                shape: vec![dims.lora_r, dout],
+                init: Init::Zeros,
+            },
+        ]
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        let a = ctx.params.get(&format!("{linear}.lora_a"))?;
+        let b = ctx.params.get(&format!("{linear}.lora_b"))?;
+        let scale = scale_of(ctx.dims);
+        let xa = x.matmul(a)?;
+        let y = w.matmul(x)?.add(&xa.matmul(b)?.scale(scale))?;
+        Ok((y, Some(Box::new(LoraAct { xa, scale }))))
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let lc: &LoraAct = act.extra()?;
+        let a = ctx.params.get(&format!("{linear}.lora_a"))?;
+        let b = ctx.params.get(&format!("{linear}.lora_b"))?;
+        let dxa = dy.matmul(&b.transpose2())?.scale(lc.scale);
+        accumulate(
+            grads,
+            &format!("{linear}.lora_b"),
+            lc.xa.transpose2().matmul(dy)?.scale(lc.scale),
+        );
+        accumulate(
+            grads,
+            &format!("{linear}.lora_a"),
+            act.x.transpose2().matmul(&dxa)?,
+        );
+        // dL/dx = dy @ W^T + scaled low-rank path — W stays packed for
+        // QLoRA (fused transposed matmul).
+        w.matmul_t(dy)?.add(&dxa.matmul(&a.transpose2())?)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        Ok(Box::new(LoraDecode {
+            a: params.get(&format!("{linear}.lora_a"))?.clone(),
+            b: params.get(&format!("{linear}.lora_b"))?.clone(),
+            scale: scale_of(dims),
+            w: w.cloned(),
+        }))
+    }
+
+    /// LoRA additionally keeps the low-rank activations `x A` per
+    /// adapted linear alive for the backward.
+    fn mem_transient(
+        &self,
+        spec: &ModelSpec,
+        dims: &ModelDims,
+        tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        input_saves
+            + tokens * dims.lora_r as f64 * spec.adapted_linears().count() as f64 * act_bytes
+    }
+}
+
+struct LoraDecode {
+    w: BaseWeight,
+    a: Tensor,
+    b: Tensor,
+    scale: f32,
+}
+
+impl DecodeApply for LoraDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        let xa = x.matmul(&self.a)?;
+        self.w.matmul(x)?.add(&xa.matmul(&self.b)?.scale(self.scale))
+    }
+}

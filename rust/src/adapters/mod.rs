@@ -1,0 +1,275 @@
+//! The open PEFT-adapter registry: one [`Adapter`] object per method.
+//!
+//! Method dispatch used to be a closed `Method` enum matched in eight
+//! files (the runtime linear, the manifest synthesizer, the decode
+//! resolver, the counting tables, the memory model, ...). This module
+//! inverts that: each method is one self-contained module owning its
+//!
+//! * **parameter declaration** — the trainable [`ParamSpec`]s it adds
+//!   per adapted linear ([`Adapter::linear_trainables`]), which drives
+//!   both bundle synthesis and the paper's exact parameter counts;
+//! * **runtime hooks** — per-linear forward/backward
+//!   ([`Adapter::linear_forward`] / [`Adapter::linear_backward`]) and
+//!   the per-step shared plan ([`Adapter::plan_linear`]);
+//! * **decode resolution** — [`Adapter::resolve_decode`] builds the
+//!   per-linear applier the KV-cached decoder and `serve` loop run;
+//! * **memory pricing** — [`Adapter::mem_transient`] supplies the
+//!   method-specific transient term of the analytic memory model.
+//!
+//! Adding a method is one new module plus one line in [`REGISTRY`]:
+//! `Method::parse`-style spellings, manifest synthesis, CLI error
+//! messages, bench tag lists, trainable-parameter counting, and the
+//! memory tables all derive from the registry. BOFT and HOFT (this
+//! PR) were added exactly that way — see README "Adding a PEFT
+//! method".
+
+pub mod boft;
+pub mod full;
+pub mod hoft;
+pub mod lora;
+pub mod none;
+pub mod oft_merged;
+pub mod oft_v2;
+pub mod qlora;
+pub mod qoft;
+
+use std::any::Any;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::manifest::{ModelDims, ParamSpec};
+use crate::modelspec::ModelSpec;
+use crate::runtime::layers::{BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+/// One per-linear entry of the per-step shared [`AdapterPlan`]
+/// (adapter-defined payload, downcast by the owning module).
+pub type PlanEntry = Box<dyn Any + Send + Sync>;
+
+/// Adapter-defined extras of one linear's activation record.
+pub type ActExtra = Box<dyn Any + Send>;
+
+/// A resolved adapted linear for incremental decoding: built once per
+/// adapter load ([`Adapter::resolve_decode`]), applied once per token
+/// row. Implementations keep quantized bases packed.
+pub trait DecodeApply: Send + Sync {
+    /// Apply to a `(1, din)` activation row; must mirror the training
+    /// forward's operation order so decode logits match bit for bit.
+    fn apply(&self, x: &Tensor) -> Result<Tensor>;
+}
+
+/// One PEFT method. Implementations are stateless `'static` objects
+/// registered in [`REGISTRY`]; everything per-run lives in the
+/// parameter map, the activation records, and the per-step plan.
+pub trait Adapter: Sync {
+    /// Registry name — what bundle tags, manifests, and `--method`
+    /// spellings use.
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `repro methods` and the README table.
+    fn about(&self) -> &'static str;
+
+    /// Display label in the paper's tables (`quantized` selects the
+    /// 4-bit sibling name where one exists, e.g. LoRA -> QLoRA).
+    fn paper_label(&self, quantized: bool) -> &'static str;
+
+    /// Every base parameter is trainable (full finetuning): manifest
+    /// synthesis moves the whole base into the trainables, and the
+    /// embedding/norm/head layers accumulate gradients.
+    fn trains_base(&self) -> bool {
+        false
+    }
+
+    /// The adapted base linears live behind quantized packs (NF4/AWQ),
+    /// so bundles require a quant backend and the frozen f32 inputs
+    /// exclude those linears.
+    fn quantized_base(&self) -> bool {
+        false
+    }
+
+    /// Validate model dims at manifest-synthesis time (e.g. block-size
+    /// divisibility). Errors here name the constraint, not an index.
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        let _ = dims;
+        Ok(())
+    }
+
+    /// Trainable parameter specs this method adds for one adapted
+    /// linear of shape `(din, dout)`. The same declaration drives
+    /// bundle synthesis AND exact parameter counting (Tables 3-5).
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec>;
+
+    /// Per-step shared state for one adapted linear (CNP blocks,
+    /// merged weights, normalized reflection vectors, ...), resolved
+    /// once per step and read by every microbatch and worker.
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<PlanEntry>> {
+        let _ = (linear, params, dims);
+        Ok(None)
+    }
+
+    /// Forward through one adapted linear: `x (m, din) -> y (m, dout)`
+    /// plus this method's activation extras (consumed by
+    /// [`Adapter::linear_backward`]).
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)>;
+
+    /// Backward through one adapted linear: accumulate this method's
+    /// parameter gradients into `grads` and return `dL/dx`.
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor>;
+
+    /// Resolve one adapted linear for KV-cached decoding (adapter
+    /// state merged once at decoder build, applied per token).
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>>;
+
+    /// Method-specific transient term of the analytic memory model
+    /// (bytes): what training keeps alive beyond base/adapter/optimizer
+    /// state. `input_saves` is the generic saved-input term every PEFT
+    /// method pays for its adapter gradients; the default models an
+    /// input-centric method that needs nothing else.
+    fn mem_transient(
+        &self,
+        spec: &ModelSpec,
+        dims: &ModelDims,
+        tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        let _ = (spec, dims, tokens, act_bytes);
+        input_saves
+    }
+}
+
+/// Every registered method, in manifest/tag order. Adding a method is
+/// one module plus one line here.
+pub static REGISTRY: [&dyn Adapter; 9] = [
+    &full::FULL,
+    &none::NONE,
+    &lora::LORA,
+    &oft_merged::OFT_MERGED,
+    &oft_v2::OFT_V2,
+    &qlora::QLORA,
+    &qoft::QOFT,
+    &boft::BOFT,
+    &hoft::HOFT,
+];
+
+/// All registered adapters.
+pub fn all() -> &'static [&'static dyn Adapter] {
+    &REGISTRY
+}
+
+/// Registered method names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|a| a.name()).collect()
+}
+
+/// Look a method up by name; unknown names list the whole registry.
+pub fn get(name: &str) -> Result<&'static dyn Adapter> {
+    for a in REGISTRY {
+        if a.name() == name {
+            return Ok(a);
+        }
+    }
+    bail!(
+        "unknown method '{name}'; registered methods: {}",
+        names().join(", ")
+    )
+}
+
+/// The default bundle tag of `method` on `preset` (quantized methods
+/// get the NF4 backend).
+pub fn bundle_tag(preset: &str, adapter: &dyn Adapter) -> String {
+    if adapter.quantized_base() {
+        format!("{preset}_{}_nf4", adapter.name())
+    } else {
+        format!("{preset}_{}", adapter.name())
+    }
+}
+
+/// One default bundle tag per registered method — what the
+/// all-methods tests and benches iterate instead of hard-coded lists.
+pub fn bundle_tags(preset: &str) -> Vec<String> {
+    REGISTRY.iter().map(|a| bundle_tag(preset, *a)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Shared building blocks for the method modules
+// ---------------------------------------------------------------------------
+
+/// The no-adapter decode path shared by `full` / `none`: the (possibly
+/// packed) base matmul alone.
+pub(crate) struct PlainDecode {
+    pub w: BaseWeight,
+}
+
+impl DecodeApply for PlainDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let names = names();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[..i].contains(n), "duplicate method name '{n}'");
+            assert_eq!(get(n).unwrap().name(), *n);
+        }
+        assert!(names.contains(&"boft") && names.contains(&"hoft"));
+    }
+
+    #[test]
+    fn unknown_method_error_lists_registry() {
+        let err = match get("bogus") {
+            Err(e) => format!("{e:#}"),
+            Ok(a) => panic!("bogus resolved to '{}'", a.name()),
+        };
+        for n in names() {
+            assert!(err.contains(n), "error should list '{n}': {err}");
+        }
+    }
+
+    #[test]
+    fn bundle_tags_use_nf4_for_quantized_methods() {
+        let tags = bundle_tags("tiny");
+        assert!(tags.contains(&"tiny_oft_v2".to_string()));
+        assert!(tags.contains(&"tiny_qoft_nf4".to_string()));
+        assert!(tags.contains(&"tiny_boft".to_string()));
+        assert!(tags.contains(&"tiny_hoft".to_string()));
+        assert_eq!(tags.len(), REGISTRY.len());
+    }
+}

@@ -1,0 +1,71 @@
+//! The frozen baseline: no trainable parameters at all. Useful as the
+//! base-contract bundle (`<preset>_none` lists every base parameter as
+//! frozen) and as the eval-only control.
+
+use anyhow::Result;
+
+use super::{ActExtra, Adapter, DecodeApply, PlainDecode};
+use crate::coordinator::manifest::{ModelDims, ParamSpec};
+use crate::runtime::layers::{Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+pub struct NoneMethod;
+
+/// Registry object.
+pub static NONE: NoneMethod = NoneMethod;
+
+impl Adapter for NoneMethod {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn about(&self) -> &'static str {
+        "frozen base: no trainable parameters (eval-only control)"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "Frozen"
+    }
+
+    fn linear_trainables(
+        &self,
+        _linear: &str,
+        _din: usize,
+        _dout: usize,
+        _dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        Vec::new()
+    }
+
+    fn linear_forward(
+        &self,
+        _ctx: &Ctx,
+        _linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        Ok((w.matmul(x)?, None))
+    }
+
+    fn linear_backward(
+        &self,
+        _ctx: &Ctx,
+        _linear: &str,
+        w: WeightRef,
+        _act: &LinearAct,
+        dy: &Tensor,
+        _grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        w.matmul_t(dy)
+    }
+
+    fn resolve_decode(
+        &self,
+        _params: &Params,
+        _dims: &ModelDims,
+        _linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        Ok(Box::new(PlainDecode { w: w.cloned() }))
+    }
+}

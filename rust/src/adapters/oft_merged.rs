@@ -1,0 +1,174 @@
+//! Weight-centric OFT — the paper's baseline (eq. 1): materialize
+//! `blockdiag(R)` and pay the cubic merge `R W` per adapted linear per
+//! step. Kept deliberately expensive so the timing and memory
+//! comparisons against the input-centric reformulation stay honest.
+//! Never quantized by construction (the merge needs the dense base).
+
+use anyhow::Result;
+
+use super::oft_v2::{ensure_blocks_divide, packed_name, packed_spec};
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{ModelDims, ParamSpec};
+use crate::peft;
+use crate::runtime::layers::linear::{build_cnp_blocks, cnp_backward_all};
+use crate::runtime::layers::{accumulate, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::modelspec::ModelSpec;
+use crate::tensor::Tensor;
+
+pub struct WeightCentricOft;
+
+/// Registry object.
+pub static OFT_MERGED: WeightCentricOft = WeightCentricOft;
+
+/// Per-step plan entry: the merged `blockdiag(R) @ W` (built once per
+/// step, shared read-only).
+struct MergedPlan {
+    rw: Tensor,
+}
+
+/// Merged weight built inline (no shared plan).
+struct MergedAct {
+    rw: Tensor,
+}
+
+fn merge(params: &Params, dims: &ModelDims, linear: &str, w: &Tensor) -> Result<Tensor> {
+    let packed = params.get(&packed_name(linear))?;
+    let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+    let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
+    rd.matmul(w)
+}
+
+impl Adapter for WeightCentricOft {
+    fn name(&self) -> &'static str {
+        "oft_merged"
+    }
+
+    fn about(&self) -> &'static str {
+        "weight-centric OFT baseline: cubic blockdiag(R) @ W merge per step"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "OFT"
+    }
+
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        ensure_blocks_divide("oft_merged", dims)
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        vec![packed_spec(linear, din, dims)]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let w = params.get(linear)?;
+        Ok(Some(Box::new(MergedPlan {
+            rw: merge(params, dims, linear, w)?,
+        })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        match ctx.plan.and_then(|p| p.get::<MergedPlan>(linear)) {
+            Some(plan) => Ok((x.matmul(&plan.rw)?, None)),
+            None => {
+                let rw = merge(ctx.params, ctx.dims, linear, w.dense()?)?;
+                let y = x.matmul(&rw)?;
+                Ok((y, Some(Box::new(MergedAct { rw }))))
+            }
+        }
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let blk = ctx.dims.block_b;
+        let w = w.dense()?;
+        let packed = ctx.params.get(&packed_name(linear))?;
+        let rw = match ctx.plan.and_then(|p| p.get::<MergedPlan>(linear)) {
+            Some(plan) => &plan.rw,
+            None => &act.extra::<MergedAct>()?.rw,
+        };
+        let dm = act.x.transpose2().matmul(dy)?; // (din, dout)
+        let din = w.shape[0];
+        let nb = din / blk;
+        let dout = w.shape[1];
+        let mut dr = Vec::with_capacity(nb);
+        for bi in 0..nb {
+            let dm_b = Tensor::from_vec(
+                &[blk, dout],
+                dm.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
+            );
+            let w_b = Tensor::from_vec(
+                &[blk, dout],
+                w.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
+            );
+            dr.push(dm_b.matmul(&w_b.transpose2())?);
+        }
+        let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+        accumulate(grads, &packed_name(linear), dp);
+        dy.matmul(&rw.transpose2())
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        // Decoding re-pays the merge per adapter, not per token.
+        Ok(Box::new(MergedDecode {
+            rw: merge(params, dims, linear, w.dense()?)?,
+        }))
+    }
+
+    /// The paper's memory cliff: the materialized `blockdiag(R)`
+    /// (din x din) plus the merged weight `R W` (din x dout) per
+    /// adapted linear, kept alive by autograd for the backward.
+    fn mem_transient(
+        &self,
+        spec: &ModelSpec,
+        _dims: &ModelDims,
+        _tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        input_saves
+            + spec
+                .adapted_linears()
+                .map(|li| (li.din * li.din + li.din * li.dout) as f64 * act_bytes)
+                .sum::<f64>()
+    }
+}
+
+struct MergedDecode {
+    rw: Tensor,
+}
+
+impl DecodeApply for MergedDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        x.matmul(&self.rw)
+    }
+}

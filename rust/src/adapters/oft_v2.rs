@@ -1,0 +1,181 @@
+//! Input-centric orthogonal finetuning (OFTv2, §3 of the paper): the
+//! token activations are rotated block-by-block through Cayley–Neumann
+//! orthogonal blocks before the frozen base matmul — quadratic work,
+//! no merged weight ever materialized. One struct serves both the
+//! full-precision (`oft_v2`) and quantized (`qoft`) registrations.
+
+use anyhow::{ensure, Result};
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::runtime::layers::linear::{
+    block_rotate_fast, block_rotate_grad_r, block_rotate_transposed, build_cnp_blocks,
+    cnp_backward_all,
+};
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::tensor::Tensor;
+
+pub struct InputCentricOft {
+    pub name: &'static str,
+    pub quantized: bool,
+}
+
+/// Registry object (full-precision base).
+pub static OFT_V2: InputCentricOft = InputCentricOft {
+    name: "oft_v2",
+    quantized: false,
+};
+
+/// Per-step plan entry: this linear's CNP rotation blocks, built once
+/// and shared read-only by every microbatch and worker.
+pub(crate) struct CnpPlan {
+    pub blocks: Vec<Tensor>,
+}
+
+/// Activation extras when the step has no shared plan: the blocks
+/// built inline by the forward.
+struct OftAct {
+    blocks: Vec<Tensor>,
+}
+
+pub(crate) fn packed_name(linear: &str) -> String {
+    format!("{linear}.oft_q")
+}
+
+/// The one trainable tensor of an OFT-family linear: packed
+/// skew-symmetric rows, one per b-wide input block (§3.3 storage).
+pub(crate) fn packed_spec(linear: &str, din: usize, dims: &ModelDims) -> ParamSpec {
+    let b = dims.block_b;
+    ParamSpec {
+        name: packed_name(linear),
+        shape: vec![din / b, b * (b - 1) / 2],
+        init: Init::Zeros,
+    }
+}
+
+pub(crate) fn ensure_blocks_divide(name: &str, dims: &ModelDims) -> Result<()> {
+    ensure!(
+        dims.d_model % dims.block_b == 0 && dims.d_ff % dims.block_b == 0,
+        "{name}: block size {} must divide d_model {} and d_ff {}",
+        dims.block_b,
+        dims.d_model,
+        dims.d_ff
+    );
+    Ok(())
+}
+
+impl Adapter for InputCentricOft {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn about(&self) -> &'static str {
+        if self.quantized {
+            "input-centric OFTv2 over an NF4/AWQ-packed frozen base (QOFT)"
+        } else {
+            "input-centric OFTv2: matrix-free CNP block rotation"
+        }
+    }
+
+    fn paper_label(&self, quantized: bool) -> &'static str {
+        if self.quantized || quantized {
+            "QOFT"
+        } else {
+            "OFTv2"
+        }
+    }
+
+    fn quantized_base(&self) -> bool {
+        self.quantized
+    }
+
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        ensure_blocks_divide(self.name, dims)
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        vec![packed_spec(linear, din, dims)]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let packed = params.get(&packed_name(linear))?;
+        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        Ok(Some(Box::new(CnpPlan { blocks })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        match ctx.plan.and_then(|p| p.get::<CnpPlan>(linear)) {
+            Some(plan) => Ok((w.matmul(&block_rotate_fast(x, &plan.blocks)?)?, None)),
+            None => {
+                let packed = ctx.params.get(&packed_name(linear))?;
+                let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
+                let y = w.matmul(&block_rotate_fast(x, &blocks)?)?;
+                Ok((y, Some(Box::new(OftAct { blocks }))))
+            }
+        }
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let blk = ctx.dims.block_b;
+        let packed = ctx.params.get(&packed_name(linear))?;
+        let blocks = match ctx.plan.and_then(|p| p.get::<CnpPlan>(linear)) {
+            Some(plan) => &plan.blocks,
+            None => &act.extra::<OftAct>()?.blocks,
+        };
+        let dz = w.matmul_t(dy)?;
+        let dr = block_rotate_grad_r(&act.x, &dz, blk);
+        let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+        accumulate(grads, &packed_name(linear), dp);
+        block_rotate_transposed(&dz, blocks)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        let packed = params.get(&packed_name(linear))?;
+        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        Ok(Box::new(RotateDecode { w: w.cloned(), blocks }))
+    }
+}
+
+/// Decode applier: rotate the token's activations block-by-block, then
+/// the frozen (possibly packed) matmul — matrix-free, §3.
+struct RotateDecode {
+    w: BaseWeight,
+    blocks: Vec<Tensor>,
+}
+
+impl DecodeApply for RotateDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(&block_rotate_fast(x, &self.blocks)?)
+    }
+}

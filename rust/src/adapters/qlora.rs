@@ -1,0 +1,12 @@
+//! QLoRA: LoRA over an NF4/AWQ-packed frozen base. The whole method is
+//! the shared [`super::lora::Lora`] implementation with the
+//! quantized-base flag set — base matmuls run the fused block-dequant
+//! kernels, so the f32 base never materializes.
+
+use super::lora::Lora;
+
+/// Registry object.
+pub static QLORA: Lora = Lora {
+    name: "qlora",
+    quantized: true,
+};

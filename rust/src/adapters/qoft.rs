@@ -1,0 +1,13 @@
+//! QOFT: input-centric OFTv2 over an NF4/AWQ-packed frozen base — the
+//! paper's headline combination. The whole method is the shared
+//! [`super::oft_v2::InputCentricOft`] implementation with the
+//! quantized-base flag set; rotations touch only activations, so the
+//! packs never leave their fused-kernel form.
+
+use super::oft_v2::InputCentricOft;
+
+/// Registry object.
+pub static QOFT: InputCentricOft = InputCentricOft {
+    name: "qoft",
+    quantized: true,
+};

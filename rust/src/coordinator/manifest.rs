@@ -86,6 +86,45 @@ pub struct ModelDims {
     pub lora_alpha: f64,
 }
 
+impl ModelDims {
+    /// A dims carrier for paper-scale counting/memory analyses, where
+    /// only the adapter hyperparameters (rank, block size) matter: the
+    /// adapted-linear shapes come from a [`crate::modelspec::ModelSpec`]
+    /// instead of these transformer dims.
+    pub fn analysis(lora_r: usize, block_b: usize) -> ModelDims {
+        ModelDims {
+            vocab: 0,
+            d_model: 0,
+            n_layers: 0,
+            n_heads: 1,
+            d_ff: 0,
+            seq_len: 0,
+            batch: 0,
+            block_b,
+            neumann_k: 5,
+            lora_r,
+            lora_alpha: 2.0 * lora_r as f64,
+        }
+    }
+}
+
+/// `(name, din, dout)` of every adapted linear of `dims`, in graph
+/// order — the one list bundle synthesis, the per-step adapter plan,
+/// and the decode resolver all share (mirrors `linear_names()` in
+/// python/compile/model.py).
+pub fn adapted_linear_dims(dims: &ModelDims) -> Vec<(String, usize, usize)> {
+    let (d, f) = (dims.d_model, dims.d_ff);
+    let mut linears = Vec::with_capacity(6 * dims.n_layers);
+    for i in 0..dims.n_layers {
+        for proj in ["wq", "wk", "wv", "wo"] {
+            linears.push((format!("layers.{i}.attn.{proj}"), d, d));
+        }
+        linears.push((format!("layers.{i}.mlp.up"), d, f));
+        linears.push((format!("layers.{i}.mlp.down"), f, d));
+    }
+    linears
+}
+
 /// A parsed artifact-bundle manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -118,14 +157,14 @@ const PRESETS: [(&str, [usize; 9]); 6] = [
     ("e2e100m", [8192, 896, 8, 14, 3584, 256, 4, 32, 16]),
 ];
 
-const METHODS: [&str; 7] = ["full", "none", "lora", "oft_merged", "oft_v2", "qlora", "qoft"];
-
-/// Split a bundle tag into (preset, method, quant).
+/// Split a bundle tag into (preset, method, quant). Method spellings
+/// come from the adapter registry, so a newly registered method is a
+/// valid tag with no list to update here.
 pub fn parse_tag(tag: &str) -> Result<(String, String, String)> {
     let (preset, rest) = tag
         .split_once('_')
         .with_context(|| format!("bundle tag '{tag}' is not <preset>_<method>[_<quant>]"))?;
-    for method in METHODS {
+    for method in crate::adapters::names() {
         if rest == method {
             return Ok((preset.to_string(), method.to_string(), "none".to_string()));
         }
@@ -135,7 +174,10 @@ pub fn parse_tag(tag: &str) -> Result<(String, String, String)> {
             }
         }
     }
-    bail!("bundle tag '{tag}' names no known method")
+    bail!(
+        "bundle tag '{tag}' names no known method; registered methods: {}",
+        crate::adapters::names().join(", ")
+    )
 }
 
 /// NF4 pack sizes for a flat tensor of `n` elements (mirrors
@@ -173,28 +215,17 @@ impl Manifest {
             lora_r,
             lora_alpha: 16.0,
         };
-        let is_quantized = matches!(method.as_str(), "qlora" | "qoft");
+        let adapter = crate::adapters::get(&method)?;
+        let is_quantized = adapter.quantized_base();
         ensure!(
             is_quantized == (quant != "none"),
             "method '{method}' is inconsistent with quant '{quant}'"
         );
-        let (d, f) = (d_model, d_ff);
-        if method.starts_with("oft") || method == "qoft" {
-            ensure!(
-                d % block_b == 0 && f % block_b == 0,
-                "block size {block_b} must divide d_model {d} and d_ff {f}"
-            );
-        }
+        adapter.validate_dims(&model)?;
+        let d = d_model;
 
         // (name, din, dout) for every adapted linear, in graph order.
-        let mut linears: Vec<(String, usize, usize)> = Vec::new();
-        for i in 0..n_layers {
-            for proj in ["wq", "wk", "wv", "wo"] {
-                linears.push((format!("layers.{i}.attn.{proj}"), d, d));
-            }
-            linears.push((format!("layers.{i}.mlp.up"), d, f));
-            linears.push((format!("layers.{i}.mlp.down"), f, d));
-        }
+        let linears = adapted_linear_dims(&model);
 
         // Base (pretrained) parameter specs.
         let mut base: Vec<ParamSpec> = vec![
@@ -237,49 +268,31 @@ impl Manifest {
         }
         base.sort_by(|a, b| a.name.cmp(&b.name));
 
-        // Trainable adapter specs (sorted by name, like aot.py).
-        let mut trainable: Vec<ParamSpec> = match method.as_str() {
-            "full" => base.clone(),
-            "none" => Vec::new(),
-            "lora" | "qlora" => linears
+        // Trainable specs, declared by the adapter itself (sorted by
+        // name, like aot.py): the whole base for base-training methods,
+        // else the method's per-linear adapter parameters.
+        let mut trainable: Vec<ParamSpec> = if adapter.trains_base() {
+            base.clone()
+        } else {
+            linears
                 .iter()
-                .flat_map(|(name, din, dout)| {
-                    vec![
-                        ParamSpec {
-                            name: format!("{name}.lora_a"),
-                            shape: vec![*din, lora_r],
-                            init: Init::Normal(0.01),
-                        },
-                        ParamSpec {
-                            name: format!("{name}.lora_b"),
-                            shape: vec![lora_r, *dout],
-                            init: Init::Zeros,
-                        },
-                    ]
-                })
-                .collect(),
-            "oft_merged" | "oft_v2" | "qoft" => linears
-                .iter()
-                .map(|(name, din, _)| ParamSpec {
-                    name: format!("{name}.oft_q"),
-                    shape: vec![din / block_b, block_b * (block_b - 1) / 2],
-                    init: Init::Zeros,
-                })
-                .collect(),
-            other => bail!("unknown method '{other}'"),
+                .flat_map(|(name, din, dout)| adapter.linear_trainables(name, *din, *dout, &model))
+                .collect()
         };
         trainable.sort_by(|a, b| a.name.cmp(&b.name));
 
         // Frozen base inputs: everything for full-precision adapter
-        // methods, non-linear tensors for quantized ones, none for full.
-        let frozen: Vec<ParamSpec> = match method.as_str() {
-            "full" => Vec::new(),
-            "qlora" | "qoft" => base
-                .iter()
+        // methods, non-linear tensors for quantized ones, none for
+        // base-training methods (their base lives in the trainables).
+        let frozen: Vec<ParamSpec> = if adapter.trains_base() {
+            Vec::new()
+        } else if is_quantized {
+            base.iter()
                 .filter(|s| !linears.iter().any(|(n, _, _)| n == &s.name))
                 .cloned()
-                .collect(),
-            _ => base.clone(),
+                .collect()
+        } else {
+            base.clone()
         };
 
         // Quantized packs, in linear order (not sorted — graph order).
@@ -659,7 +672,11 @@ mod tests {
             "tiny_qoft_nf4",
             "tiny_qlora_awq",
             "tiny_qoft_awq",
+            "tiny_boft",
+            "tiny_hoft",
             "small_oft_v2",
+            "small_boft",
+            "small_hoft",
             "bench_oft_v2",
             "fig1_oft_merged",
             "e2e_oft_v2",
@@ -688,6 +705,53 @@ mod tests {
         let fp = Manifest::builtin("bench_oft_v2").unwrap();
         assert_eq!(fp.quantized_pack_bytes(), 0);
         assert_eq!(fp.dequantized_base_bytes().unwrap(), 0);
+    }
+
+    #[test]
+    fn builtin_registry_methods_synthesize_their_own_specs() {
+        // BOFT: depth adapts per linear — tiny has b=16, so d=64
+        // attention linears carry one factor (4 blocks) and d_ff=256
+        // MLP-down linears carry two (2*16 blocks).
+        let m = Manifest::builtin("tiny_boft").unwrap();
+        let wq = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.boft_q")
+            .unwrap();
+        assert_eq!(wq.shape, vec![4, 120]);
+        let down = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.mlp.down.boft_q")
+            .unwrap();
+        assert_eq!(down.shape, vec![2 * 16, 120]);
+        assert_eq!(m.trainable_numel(), m.params_trainable);
+
+        // HOFT: k = lora_r (tiny: 4) reflections of din parameters.
+        let h = Manifest::builtin("tiny_hoft").unwrap();
+        let wq = h
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.hoft_v")
+            .unwrap();
+        assert_eq!(wq.shape, vec![4, 64]);
+        let up = h
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.1.mlp.up.hoft_v")
+            .unwrap();
+        assert_eq!(up.shape, vec![4, 64]);
+        assert_eq!(h.trainable_numel(), h.params_trainable);
+    }
+
+    #[test]
+    fn adapted_linear_dims_match_linear_shape() {
+        let m = Manifest::builtin("tiny_oft_v2").unwrap();
+        let linears = adapted_linear_dims(&m.model);
+        assert_eq!(linears.len(), 6 * m.model.n_layers);
+        for (name, din, dout) in &linears {
+            assert_eq!(m.linear_shape(name).unwrap(), (*din, *dout), "{name}");
+        }
     }
 
     #[test]

@@ -360,7 +360,14 @@ impl<'e> Trainer<'e> {
                 }
             }
         }
-        decode_greedy_session(self.decoder.as_ref().unwrap(), prompt_ids, max_new)
+        let dec = self.decoder.as_ref().with_context(|| {
+            format!(
+                "[{}] decode session was never initialized — decode_greedy() builds it \
+                 on demand from the current trainables, or call Trainer::decoder() first",
+                self.manifest.tag
+            )
+        })?;
+        decode_greedy_session(dec, prompt_ids, max_new)
     }
 
     /// The pre-KV-cache decode path: re-runs the whole `logits_last`
@@ -378,7 +385,13 @@ impl<'e> Trainer<'e> {
                 .load_bundle_graph(&self.manifest, BundleRole::LogitsLast)?;
             self.logits_last = Some(g);
         }
-        let graph = self.logits_last.as_ref().unwrap();
+        let graph = self.logits_last.as_ref().with_context(|| {
+            format!(
+                "[{}] logits_last graph was never loaded — decode_greedy_reforward() \
+                 loads it on demand via Engine::load_bundle_graph(BundleRole::LogitsLast)",
+                self.manifest.tag
+            )
+        })?;
         let t = self.manifest.model.seq_len;
         let vocab = self.manifest.model.vocab;
         let n = self.state.tr.len();

@@ -27,6 +27,7 @@
 // forward/backward naturally takes many tensor arguments.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod adapters;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -43,6 +43,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("serve") => cmd_serve(&argv[1..]),
         Some("params") => cmd_params(),
         Some("memory") => cmd_memory(&argv[1..]),
+        Some("methods") => cmd_methods(&argv[1..]),
         Some("bundles") => cmd_bundles(),
         Some("inspect") => cmd_inspect(&argv[1..]),
         Some(other) => bail!("unknown subcommand '{other}'\n\n{}", usage()),
@@ -62,6 +63,7 @@ fn usage() -> &'static str {
      \x20 serve    batched multi-adapter serving over one shared base\n\
      \x20 params   trainable-parameter tables (paper Tables 3-5)\n\
      \x20 memory   analytic GPU-memory tables (paper Figs. 1/4, Table 11)\n\
+     \x20 methods  list registered PEFT methods with parameter counts\n\
      \x20 bundles  list available artifact bundles\n\
      \x20 inspect  static HLO cost analysis of a bundle's graphs\n\n\
      Run `repro <subcommand> --help` for options."
@@ -399,13 +401,13 @@ fn cmd_memory(argv: &[String]) -> Result<()> {
     println!("Finetuning memory for {} (analytic model)\n", spec.name);
     println!("{:<10} {:<6} {:>12}", "method", "prec", "total");
     for (m, p) in [
-        (Method::OftWeightCentric { b: 32 }, Precision::Bf16),
-        (Method::OftInputCentric { b: 32 }, Precision::Bf16),
-        (Method::Lora { r: 16 }, Precision::Bf16),
-        (Method::OftInputCentric { b: 32 }, Precision::Nf4),
-        (Method::Lora { r: 16 }, Precision::Nf4),
-        (Method::OftInputCentric { b: 32 }, Precision::Awq4),
-        (Method::Lora { r: 16 }, Precision::Awq4),
+        (Method::oft_weight_centric(32), Precision::Bf16),
+        (Method::oft_input_centric(32), Precision::Bf16),
+        (Method::lora(16), Precision::Bf16),
+        (Method::oft_input_centric(32), Precision::Nf4),
+        (Method::lora(16), Precision::Nf4),
+        (Method::oft_input_centric(32), Precision::Awq4),
+        (Method::lora(16), Precision::Awq4),
     ] {
         let gib = finetune_gib(&spec, m, p, shape);
         println!(
@@ -460,6 +462,49 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// List every registered PEFT method with its exact trainable-param
+/// count on one preset — the registry made visible. Unknown methods
+/// anywhere in the CLI error with this same list.
+fn cmd_methods(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("methods", "list registered PEFT methods")
+        .opt("preset", "model preset for the parameter counts", Some("tiny"))
+        .flag("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let preset = args.get_or("preset", "tiny");
+    println!("Registered PEFT methods (preset '{preset}')\n");
+    println!(
+        "{:<12} {:<6} {:<6} {:>12}  {:<22} {}",
+        "method", "label", "quant", "trainable", "example tag", "about"
+    );
+    for adapter in oftv2::adapters::all() {
+        let tag = oftv2::adapters::bundle_tag(preset, *adapter);
+        // One incompatible (method, preset) pair must not hide the
+        // rest of the registry from the listing.
+        let trainable = match oftv2::coordinator::Manifest::builtin(&tag) {
+            Ok(man) => human_count(man.params_trainable),
+            Err(e) => format!("(unavailable: {e})"),
+        };
+        println!(
+            "{:<12} {:<6} {:<6} {:>12}  {:<22} {}",
+            adapter.name(),
+            adapter.paper_label(adapter.quantized_base()),
+            if adapter.quantized_base() { "4-bit" } else { "f32" },
+            trainable,
+            tag,
+            adapter.about()
+        );
+    }
+    println!(
+        "\nselect with --tag <preset>_<method>[_<quant>]; \
+         see README \"Adding a PEFT method\" to register a new one"
+    );
+    Ok(())
+}
+
 fn parse_model(name: &str) -> Result<ModelSpec> {
     Ok(match name.to_lowercase().as_str() {
         "llama2-7b" => ModelSpec::llama2_7b(),
@@ -477,7 +522,18 @@ fn cmd_bundles() -> Result<()> {
         println!("no artifact tree at {} — builtin bundles (reference engine):\n", root.display());
         println!("{:<22} {:<12} {:<6} {:>12} {:>10}", "tag", "method", "quant", "trainable", "d_model");
         for preset in ["tiny", "small", "bench", "fig1", "e2e", "e2e100m"] {
-            for suffix in ["full", "none", "lora", "oft_merged", "oft_v2", "qlora_nf4", "qoft_nf4", "qlora_awq", "qoft_awq"] {
+            // One tag per registered method (quantized methods on both
+            // 4-bit backends) — the list grows with the registry.
+            let mut suffixes: Vec<String> = Vec::new();
+            for adapter in oftv2::adapters::all() {
+                if adapter.quantized_base() {
+                    suffixes.push(format!("{}_nf4", adapter.name()));
+                    suffixes.push(format!("{}_awq", adapter.name()));
+                } else {
+                    suffixes.push(adapter.name().to_string());
+                }
+            }
+            for suffix in suffixes {
                 let tag = format!("{preset}_{suffix}");
                 if let Ok(man) = oftv2::coordinator::Manifest::builtin(&tag) {
                     println!(

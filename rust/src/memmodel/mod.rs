@@ -16,6 +16,8 @@
 //! gap. Input-centric OFTv2 only keeps the rotated activations, like
 //! LoRA keeps its low-rank activations.
 
+use anyhow::Result;
+
 use crate::modelspec::ModelSpec;
 use crate::peft::counting::{count, MethodKind};
 use crate::runtime::CheckpointPolicy;
@@ -49,32 +51,50 @@ impl Precision {
     }
 }
 
-/// Finetuning method for memory purposes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Lora { r: usize },
-    OftWeightCentric { b: usize },
-    OftInputCentric { b: usize },
+/// Finetuning method for memory purposes: a thin view onto the adapter
+/// registry (see [`crate::adapters`]). The method-specific pricing —
+/// parameter counts and the transient term — lives in each adapter's
+/// own module; this struct only carries the registry handle plus the
+/// rank/block hyperparameters the paper sweeps.
+#[derive(Clone, Copy)]
+pub struct Method {
+    kind: MethodKind,
 }
 
 impl Method {
-    pub fn kind(self) -> MethodKind {
-        match self {
-            Method::Lora { r } => MethodKind::Lora { r },
-            Method::OftWeightCentric { b } | Method::OftInputCentric { b } => {
-                MethodKind::Oft { b }
-            }
+    /// LoRA / QLoRA with rank `r`.
+    pub fn lora(r: usize) -> Method {
+        Method { kind: MethodKind::lora(r) }
+    }
+
+    /// Weight-centric OFT baseline with block size `b` (the merged
+    /// `blockdiag(R) @ W` transient — the Fig. 1 memory cliff).
+    pub fn oft_weight_centric(b: usize) -> Method {
+        Method {
+            kind: MethodKind::oft_merged(b),
         }
     }
 
+    /// Input-centric OFTv2 / QOFT with block size `b`.
+    pub fn oft_input_centric(b: usize) -> Method {
+        Method { kind: MethodKind::oft(b) }
+    }
+
+    /// Any registered method by name, with explicit rank/block
+    /// hyperparameters — prices BOFT, HOFT, or a future method without
+    /// touching this module.
+    pub fn by_name(name: &str, r: usize, b: usize) -> Result<Method> {
+        Ok(Method {
+            kind: MethodKind::by_name(name, r, b)?,
+        })
+    }
+
+    pub fn kind(self) -> MethodKind {
+        self.kind
+    }
+
     pub fn label(self, quantized: bool) -> String {
-        match (self, quantized) {
-            (Method::Lora { .. }, false) => "LoRA".into(),
-            (Method::Lora { .. }, true) => "QLoRA".into(),
-            (Method::OftWeightCentric { .. }, _) => "OFT".into(),
-            (Method::OftInputCentric { .. }, false) => "OFTv2".into(),
-            (Method::OftInputCentric { .. }, true) => "QOFT".into(),
-        }
+        self.kind.adapter.paper_label(quantized).to_string()
     }
 }
 
@@ -229,30 +249,18 @@ pub fn finetune_memory(
             .sum::<f64>()
     };
 
-    // Method-specific transients.
-    let transient = match method {
-        Method::Lora { r } => {
-            // + saved low-rank activations: x@A per adapted linear
-            adapter_input_saves
-                + tokens * (r as f64) * spec.adapted_linears().count() as f64 * shape.act_bytes
-        }
-        Method::OftInputCentric { .. } => {
-            // the rotation output Rx is re-derivable from the saved
-            // input (W frozen => no grad through the base matmul needs
-            // it); only the tiny R blocks are extra.
-            adapter_input_saves
-        }
-        Method::OftWeightCentric { .. } => {
-            // materialized blockdiag(R) (din^2) + merged weight RW
-            // (din*dout) per adapted linear; autograd keeps merged
-            // weights for backward (the paper's memory cliff).
-            adapter_input_saves
-                + spec
-                    .adapted_linears()
-                    .map(|li| (li.din * li.din + li.din * li.dout) as f64 * shape.act_bytes)
-                    .sum::<f64>()
-        }
-    };
+    // Method-specific transient, priced by the adapter module itself
+    // (e.g. LoRA adds its saved low-rank activations; weight-centric
+    // OFT adds the materialized blockdiag(R) + merged RW — the paper's
+    // memory cliff; input-centric methods add nothing).
+    let k = method.kind();
+    let transient = k.adapter.mem_transient(
+        spec,
+        &k.dims,
+        tokens,
+        shape.act_bytes,
+        adapter_input_saves,
+    );
 
     MemBreakdown {
         base_weights,
@@ -296,8 +304,8 @@ mod tests {
         // Fig. 1: OFT ~3x the memory of OFTv2 on Qwen2.5-7B (H100 80GB:
         // OFT barely fits, OFTv2 comfortable).
         let spec = qwen("7b");
-        let oft = finetune_gib(&spec, Method::OftWeightCentric { b: 32 }, Precision::Bf16, shape_7b());
-        let oftv2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
+        let oft = finetune_gib(&spec, Method::oft_weight_centric(32), Precision::Bf16, shape_7b());
+        let oftv2 = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape_7b());
         let ratio = oft / oftv2;
         assert!(ratio > 2.0 && ratio < 4.5, "ratio {ratio} (oft {oft} GiB, v2 {oftv2} GiB)");
         // OFT must stress an 80GB H100; OFTv2 must not.
@@ -310,8 +318,8 @@ mod tests {
         // Fig. 4a: OFTv2 within a few percent of LoRA across scales.
         for size in ["0.5b", "1.5b", "7b", "32b"] {
             let spec = ModelSpec::qwen25(size).unwrap();
-            let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
-            let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
+            let lora = finetune_gib(&spec, Method::lora(16), Precision::Bf16, shape_7b());
+            let v2 = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape_7b());
             let rel = (v2 - lora).abs() / lora;
             assert!(rel < 0.10, "{size}: lora {lora} v2 {v2} rel {rel}");
         }
@@ -321,11 +329,11 @@ mod tests {
     fn fig4b_quantization_shrinks_memory() {
         // NF4 must cut total memory vs BF16 markedly for big models.
         let spec = qwen("32b");
-        let bf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
-        let nf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Nf4, shape_7b());
+        let bf = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape_7b());
+        let nf = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Nf4, shape_7b());
         assert!(nf < 0.5 * bf, "bf16 {bf} nf4 {nf}");
         // QOFT ~ QLoRA under NF4
-        let ql = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Nf4, shape_7b());
+        let ql = finetune_gib(&spec, Method::lora(16), Precision::Nf4, shape_7b());
         assert!((nf - ql).abs() / ql < 0.10, "qlora {ql} qoft {nf}");
     }
 
@@ -335,7 +343,7 @@ mod tests {
         let mut prev = 0.0;
         for size in ["0.5b", "1.5b", "3b", "7b", "14b", "32b", "72b"] {
             let spec = ModelSpec::qwen25(size).unwrap();
-            let m = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Nf4, shape);
+            let m = finetune_gib(&spec, Method::lora(16), Precision::Nf4, shape);
             assert!(m > prev, "{size}: {m} <= {prev}");
             prev = m;
         }
@@ -345,8 +353,8 @@ mod tests {
     fn qwen72b_nf4_fits_h100_but_bf16_does_not() {
         // The practical motivation for QOFT: 72B needs quantization.
         let spec = qwen("72b");
-        let bf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape_7b());
-        let nf = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Nf4, shape_7b());
+        let bf = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape_7b());
+        let nf = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Nf4, shape_7b());
         assert!(bf > 94.0, "{bf}");
         assert!(nf < 94.0, "{nf}");
     }
@@ -362,10 +370,10 @@ mod tests {
             checkpoint: CheckpointPolicy::None,
             residency: BaseResidency::Packed,
         };
-        let lora = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape);
-        let v2 = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape);
-        let ql = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Nf4, shape);
-        let qo = finetune_gib(&spec, Method::OftInputCentric { b: 32 }, Precision::Nf4, shape);
+        let lora = finetune_gib(&spec, Method::lora(16), Precision::Bf16, shape);
+        let v2 = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape);
+        let ql = finetune_gib(&spec, Method::lora(16), Precision::Nf4, shape);
+        let qo = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Nf4, shape);
         assert!((v2 - lora).abs() / lora < 0.10);
         assert!((qo - ql).abs() / ql < 0.10);
         assert!(qo < lora);
@@ -380,7 +388,7 @@ mod tests {
         let spec = qwen("7b");
         let mem_at = |checkpoint: CheckpointPolicy| {
             let shape = TrainShape { checkpoint, ..shape_7b() };
-            finetune_memory(&spec, Method::OftInputCentric { b: 32 }, Precision::Bf16, shape)
+            finetune_memory(&spec, Method::oft_input_centric(32), Precision::Bf16, shape)
                 .activations
         };
         let full = mem_at(CheckpointPolicy::None);
@@ -404,13 +412,13 @@ mod tests {
         let spec = qwen("7b");
         let packed = finetune_memory(
             &spec,
-            Method::OftInputCentric { b: 32 },
+            Method::oft_input_centric(32),
             Precision::Nf4,
             shape_7b(),
         );
         let dequant = finetune_memory(
             &spec,
-            Method::OftInputCentric { b: 32 },
+            Method::oft_input_centric(32),
             Precision::Nf4,
             TrainShape { residency: BaseResidency::DequantF32, ..shape_7b() },
         );
@@ -420,10 +428,10 @@ mod tests {
         assert!(dequant.base_weights / packed.base_weights > 3.0);
         assert!((dequant.total() - packed.total() - want).abs() < 1.0);
         // BF16 has no packs: residency is a no-op there.
-        let bf_p = finetune_gib(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
+        let bf_p = finetune_gib(&spec, Method::lora(16), Precision::Bf16, shape_7b());
         let bf_d = finetune_gib(
             &spec,
-            Method::Lora { r: 16 },
+            Method::lora(16),
             Precision::Bf16,
             TrainShape { residency: BaseResidency::DequantF32, ..shape_7b() },
         );
@@ -433,7 +441,7 @@ mod tests {
     #[test]
     fn breakdown_sums() {
         let spec = qwen("1.5b");
-        let b = finetune_memory(&spec, Method::Lora { r: 16 }, Precision::Bf16, shape_7b());
+        let b = finetune_memory(&spec, Method::lora(16), Precision::Bf16, shape_7b());
         let total = b.base_weights + b.adapter_params + b.adapter_grads + b.optimizer
             + b.activations + b.transient + b.overhead;
         assert!((b.total() - total).abs() < 1.0);

@@ -59,7 +59,9 @@ pub fn stride_permutation(d: usize, b: usize, stride: usize) -> Vec<usize> {
     perm
 }
 
-fn permute_cols(x: &Tensor, perm: &[usize]) -> Tensor {
+/// Reorder columns: `out[:, new] = x[:, perm[new]]`. The gradient of
+/// `permute_cols(·, perm)` is `permute_cols(·, invert_perm(perm))`.
+pub fn permute_cols(x: &Tensor, perm: &[usize]) -> Tensor {
     let (m, d) = (x.shape[0], x.shape[1]);
     assert_eq!(perm.len(), d);
     let mut out = vec![0.0f32; m * d];
@@ -71,7 +73,8 @@ fn permute_cols(x: &Tensor, perm: &[usize]) -> Tensor {
     Tensor::from_vec(&[m, d], out)
 }
 
-fn invert_perm(perm: &[usize]) -> Vec<usize> {
+/// The inverse permutation: `invert_perm(p)[p[i]] == i`.
+pub fn invert_perm(perm: &[usize]) -> Vec<usize> {
     let mut inv = vec![0usize; perm.len()];
     for (new, &old) in perm.iter().enumerate() {
         inv[old] = new;

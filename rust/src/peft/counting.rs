@@ -1,41 +1,102 @@
 //! Trainable-parameter counting — reproduces the `# Params` columns of
 //! Tables 3, 4 and 5 *exactly* from the real model architectures in
 //! [`crate::modelspec`].
+//!
+//! Counting is derived from the adapter registry: every method's
+//! [`crate::adapters::Adapter::linear_trainables`] declaration — the
+//! same one that synthesizes runtime bundles — is summed over a
+//! [`ModelSpec`]'s adapted linears, so the paper tables and the
+//! executable bundles can never disagree about a method's parameter
+//! story. [`MethodKind`] is the thin registry view the memory model
+//! shares.
 
+use crate::adapters::Adapter;
+use crate::coordinator::manifest::ModelDims;
 use crate::modelspec::ModelSpec;
 
-/// PEFT method kind for counting purposes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MethodKind {
-    /// LoRA / QLoRA with rank r: r*(din + dout) per adapted linear.
-    Lora { r: usize },
-    /// OFT / OFTv2 / QOFT with block size b: (din/b) * b(b-1)/2 per
+/// A registry-backed (method, hyperparameter) view for counting and
+/// memory analyses: the adapter plus an analysis [`ModelDims`] carrying
+/// its rank/block hyperparameters.
+#[derive(Clone, Copy)]
+pub struct MethodKind {
+    pub adapter: &'static dyn Adapter,
+    pub dims: ModelDims,
+}
+
+impl MethodKind {
+    /// LoRA / QLoRA with rank `r`: `r*(din + dout)` per adapted linear.
+    pub fn lora(r: usize) -> MethodKind {
+        MethodKind {
+            adapter: &crate::adapters::lora::LORA,
+            dims: ModelDims::analysis(r, 32),
+        }
+    }
+
+    /// OFT / OFTv2 / QOFT with block size `b`: `(din/b) * b(b-1)/2` per
     /// adapted linear (packed skew-symmetric storage, §3.3).
-    Oft { b: usize },
+    pub fn oft(b: usize) -> MethodKind {
+        MethodKind {
+            adapter: &crate::adapters::oft_v2::OFT_V2,
+            dims: ModelDims::analysis(16, b),
+        }
+    }
+
+    /// The weight-centric OFT baseline with block size `b` (same packed
+    /// parameter count as the input-centric form; the memory model
+    /// prices its merged-weight transient differently).
+    pub fn oft_merged(b: usize) -> MethodKind {
+        MethodKind {
+            adapter: &crate::adapters::oft_merged::OFT_MERGED,
+            dims: ModelDims::analysis(16, b),
+        }
+    }
+
+    /// Any registered method by name, with explicit rank/block
+    /// hyperparameters.
+    pub fn by_name(name: &str, r: usize, b: usize) -> crate::Result<MethodKind> {
+        Ok(MethodKind {
+            adapter: crate::adapters::get(name)?,
+            dims: ModelDims::analysis(r, b),
+        })
+    }
+}
+
+/// Trainable parameters of `adapter` over every adapted linear of
+/// `spec`, from the adapter's own spec declaration. Base-training
+/// methods count the full model. When a block size does not divide a
+/// linear's input dimension the remainder columns are left unadapted
+/// (matching the HF PEFT implementation's block truncation).
+pub fn count_with(spec: &ModelSpec, adapter: &dyn Adapter, dims: &ModelDims) -> u64 {
+    if adapter.trains_base() {
+        return spec.total_params();
+    }
+    spec.adapted_linears()
+        .map(|l| {
+            adapter
+                .linear_trainables("linear", l.din, l.dout, dims)
+                .iter()
+                .map(|s| s.numel() as u64)
+                .sum::<u64>()
+        })
+        .sum()
 }
 
 /// LoRA trainable parameters over every adapted linear of `spec`.
 pub fn count_lora(spec: &ModelSpec, r: usize) -> u64 {
-    spec.adapted_linears()
-        .map(|l| (r * (l.din + l.dout)) as u64)
-        .sum()
+    let k = MethodKind::lora(r);
+    count_with(spec, k.adapter, &k.dims)
 }
 
 /// OFT trainable parameters (packed skew storage) over every adapted
-/// linear of `spec`. Blocks sit on the *input* dimension; when b does
-/// not divide din the remainder columns are left unadapted (matching the
-/// HF PEFT implementation's block truncation).
+/// linear of `spec`. Blocks sit on the *input* dimension.
 pub fn count_oft(spec: &ModelSpec, b: usize) -> u64 {
-    let p = (b * (b - 1) / 2) as u64;
-    spec.adapted_linears().map(|l| (l.din / b) as u64 * p).sum()
+    let k = MethodKind::oft(b);
+    count_with(spec, k.adapter, &k.dims)
 }
 
-/// Count for either method.
+/// Count for a registry view.
 pub fn count(spec: &ModelSpec, m: MethodKind) -> u64 {
-    match m {
-        MethodKind::Lora { r } => count_lora(spec, r),
-        MethodKind::Oft { b } => count_oft(spec, b),
-    }
+    count_with(spec, m.adapter, &m.dims)
 }
 
 #[cfg(test)]
@@ -94,5 +155,22 @@ mod tests {
             let ratio = count_oft(&spec, 32) as f64 / count_lora(&spec, 16) as f64;
             assert!(ratio > 0.40 && ratio < 0.60, "{ratio}");
         }
+    }
+
+    #[test]
+    fn registry_view_counts_every_method() {
+        // Any registered method counts through the same declaration the
+        // runtime bundles are synthesized from.
+        let spec = ModelSpec::llama2_7b();
+        let lora = count(&spec, MethodKind::by_name("lora", 16, 32).unwrap());
+        assert_eq!(lora, count_lora(&spec, 16));
+        let boft = count(&spec, MethodKind::by_name("boft", 16, 32).unwrap());
+        let oft = count_oft(&spec, 32);
+        assert!(boft > oft, "butterfly factors add depth: {boft} vs {oft}");
+        let hoft = count(&spec, MethodKind::by_name("hoft", 16, 32).unwrap());
+        assert!(hoft > 0 && hoft < lora, "{hoft} vs lora {lora}");
+        let full = count(&spec, MethodKind::by_name("full", 16, 32).unwrap());
+        assert_eq!(full, spec.total_params());
+        assert_eq!(count(&spec, MethodKind::by_name("none", 16, 32).unwrap()), 0);
     }
 }

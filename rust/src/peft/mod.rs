@@ -10,7 +10,7 @@ pub mod counting;
 pub mod lora;
 pub mod oft;
 
-pub use butterfly::ButterflyAdapter;
+pub use butterfly::{invert_perm, permute_cols, stride_permutation, ButterflyAdapter};
 pub use counting::{count_lora, count_oft, MethodKind};
 pub use lora::LoraAdapter;
 pub use oft::{

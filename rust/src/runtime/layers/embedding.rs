@@ -3,7 +3,6 @@
 use anyhow::{ensure, Result};
 
 use super::{accumulate, Ctx, Gradients};
-use crate::runtime::refmodel::Method;
 use crate::tensor::Tensor;
 
 /// The embedding lookup. Its "activation record" is just the input ids,
@@ -49,7 +48,7 @@ impl Embedding {
         dx: &Tensor,
         grads: &mut Gradients,
     ) -> Result<()> {
-        if ctx.method != Method::Full {
+        if !ctx.adapter.trains_base() {
             return Ok(());
         }
         let d = ctx.dims.d_model;

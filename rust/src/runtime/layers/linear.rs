@@ -1,13 +1,16 @@
-//! The PEFT-adapted linear: one layer object covering every method of
-//! the paper — plain frozen matmul, full finetuning, additive LoRA,
-//! weight-centric (merged) OFT, and the matrix-free input-centric
-//! OFTv2/QOFT rotation — plus the CNP block kernels they share.
+//! The PEFT-adapted linear: resolves its base weight by name and hands
+//! the method-specific work to the context's registered
+//! [`crate::adapters::Adapter`] — the arms that used to be matched
+//! here live in each method's own module. This file keeps the CNP
+//! block kernels the OFT-family adapters (and the decode path and
+//! micro kernels) share.
+
+use std::any::Any;
 
 use anyhow::{ensure, Context, Result};
 
-use super::{accumulate, Ctx, Gradients, Layer};
+use super::{Ctx, Gradients, Layer};
 use crate::peft;
-use crate::runtime::refmodel::Method;
 use crate::tensor::Tensor;
 
 /// One adapted linear, resolving its base weight (and any adapter
@@ -16,30 +19,24 @@ pub struct PeftLinear {
     pub name: String,
 }
 
-pub struct LoraAct {
-    pub xa: Tensor,
-    pub scale: f32,
-}
-
-pub struct OftAct {
-    /// Rotation blocks built inline — only present when the step has
-    /// no shared [`super::AdapterPlan`] carrying them.
-    pub blocks: Vec<Tensor>,
-}
-
 /// Activation record of one adapted linear: the saved input plus the
-/// method-specific extras. Parameters (base weight, LoRA factors,
-/// packed Q) are *not* copied here — backward re-reads them from the
-/// context's parameter map, and shared per-step state (CNP blocks,
-/// merged weights) lives in the [`super::AdapterPlan`]; records only
-/// own what was derived inline.
+/// owning adapter's extras (downcast by that adapter's backward).
+/// Parameters are *not* copied here — backward re-reads them from the
+/// parameter map, and shared per-step state lives in the
+/// [`super::AdapterPlan`]; records only own what was derived inline.
 pub struct LinearAct {
     pub x: Tensor,
-    pub lora: Option<LoraAct>,
-    pub oft: Option<OftAct>,
-    /// Merged blockdiag(R) @ W built inline (weight-centric OFT with
-    /// no shared plan).
-    pub rw: Option<Tensor>,
+    pub extra: Option<Box<dyn Any + Send>>,
+}
+
+impl LinearAct {
+    /// The adapter's extras, downcast to its record type.
+    pub fn extra<T: 'static>(&self) -> Result<&T> {
+        self.extra
+            .as_ref()
+            .and_then(|e| e.downcast_ref::<T>())
+            .context("missing or mistyped adapter activation record")
+    }
 }
 
 impl PeftLinear {
@@ -52,56 +49,11 @@ impl Layer for PeftLinear {
     type Act = LinearAct;
 
     fn forward(&self, ctx: &Ctx, x: &Tensor) -> Result<(Tensor, LinearAct)> {
-        let name = &self.name;
         // Packed (quantized) bases multiply through the fused
         // block-dequant kernels; dense bases through Tensor::matmul.
-        let w = ctx.params.weight(name)?;
-        let mut act = LinearAct {
-            x: x.clone(),
-            lora: None,
-            oft: None,
-            rw: None,
-        };
-        let y = match ctx.method {
-            Method::Lora | Method::QLora => {
-                let a = ctx.params.get(&format!("{name}.lora_a"))?;
-                let b = ctx.params.get(&format!("{name}.lora_b"))?;
-                let scale = (ctx.dims.lora_alpha / ctx.dims.lora_r as f64) as f32;
-                let xa = x.matmul(a)?;
-                let y = w.matmul(x)?.add(&xa.matmul(b)?.scale(scale))?;
-                act.lora = Some(LoraAct { xa, scale });
-                y
-            }
-            Method::OftV2 | Method::QOft => match ctx.plan.and_then(|p| p.blocks.get(name)) {
-                Some(blocks) => w.matmul(&block_rotate_fast(x, blocks)?)?,
-                None => {
-                    let packed = ctx.params.get(&format!("{name}.oft_q"))?;
-                    let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
-                    let y = w.matmul(&block_rotate_fast(x, &blocks)?)?;
-                    act.oft = Some(OftAct { blocks });
-                    y
-                }
-            },
-            // The weight-centric baseline: materialize blockdiag(R) and
-            // pay the cubic matrix-matrix merge — once per step via the
-            // shared plan, else here. (Never quantized, so the dense
-            // weight is always available.)
-            Method::OftMerged => match ctx.plan.and_then(|p| p.merged.get(name)) {
-                Some(rw) => x.matmul(rw)?,
-                None => {
-                    let w = w.dense()?;
-                    let packed = ctx.params.get(&format!("{name}.oft_q"))?;
-                    let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
-                    let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
-                    let rw = rd.matmul(w)?;
-                    let y = x.matmul(&rw)?;
-                    act.rw = Some(rw);
-                    y
-                }
-            },
-            Method::Full | Method::None => w.matmul(x)?,
-        };
-        Ok((y, act))
+        let w = ctx.params.weight(&self.name)?;
+        let (y, extra) = ctx.adapter.linear_forward(ctx, &self.name, w, x)?;
+        Ok((y, LinearAct { x: x.clone(), extra }))
     }
 
     /// Accumulates parameter grads and returns d(loss)/d(input).
@@ -112,74 +64,9 @@ impl Layer for PeftLinear {
         dy: &Tensor,
         grads: &mut Gradients,
     ) -> Result<Tensor> {
-        let name = &self.name;
-        let blk = ctx.dims.block_b;
-        let w = ctx.params.weight(name)?;
-        match ctx.method {
-            Method::Full => {
-                accumulate(grads, name, act.x.transpose2().matmul(dy)?);
-                w.matmul_t(dy)
-            }
-            Method::None => w.matmul_t(dy),
-            Method::Lora | Method::QLora => {
-                let lc = act.lora.as_ref().context("missing lora record")?;
-                let a = ctx.params.get(&format!("{name}.lora_a"))?;
-                let b = ctx.params.get(&format!("{name}.lora_b"))?;
-                let dxa = dy.matmul(&b.transpose2())?.scale(lc.scale);
-                accumulate(
-                    grads,
-                    &format!("{name}.lora_b"),
-                    lc.xa.transpose2().matmul(dy)?.scale(lc.scale),
-                );
-                accumulate(
-                    grads,
-                    &format!("{name}.lora_a"),
-                    act.x.transpose2().matmul(&dxa)?,
-                );
-                // dL/dx = dy @ W^T + scaled low-rank path — W stays
-                // packed for QLoRA (fused transposed matmul).
-                w.matmul_t(dy)?.add(&dxa.matmul(&a.transpose2())?)
-            }
-            Method::OftV2 | Method::QOft => {
-                let packed = ctx.params.get(&format!("{name}.oft_q"))?;
-                let blocks = match ctx.plan.and_then(|p| p.blocks.get(name)) {
-                    Some(blocks) => blocks,
-                    None => &act.oft.as_ref().context("missing oft record")?.blocks,
-                };
-                let dz = w.matmul_t(dy)?;
-                let dr = block_rotate_grad_r(&act.x, &dz, blk);
-                let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
-                accumulate(grads, &format!("{name}.oft_q"), dp);
-                block_rotate_transposed(&dz, blocks)
-            }
-            Method::OftMerged => {
-                let w = w.dense()?;
-                let packed = ctx.params.get(&format!("{name}.oft_q"))?;
-                let rw = match ctx.plan.and_then(|p| p.merged.get(name)) {
-                    Some(rw) => rw,
-                    None => act.rw.as_ref().context("missing merged weight record")?,
-                };
-                let dm = act.x.transpose2().matmul(dy)?; // (din, dout)
-                let din = w.shape[0];
-                let nb = din / blk;
-                let dout = w.shape[1];
-                let mut dr = Vec::with_capacity(nb);
-                for bi in 0..nb {
-                    let dm_b = Tensor::from_vec(
-                        &[blk, dout],
-                        dm.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
-                    );
-                    let w_b = Tensor::from_vec(
-                        &[blk, dout],
-                        w.data[bi * blk * dout..(bi + 1) * blk * dout].to_vec(),
-                    );
-                    dr.push(dm_b.matmul(&w_b.transpose2())?);
-                }
-                let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
-                accumulate(grads, &format!("{name}.oft_q"), dp);
-                dy.matmul(&rw.transpose2())
-            }
-        }
+        let w = ctx.params.weight(&self.name)?;
+        ctx.adapter
+            .linear_backward(ctx, &self.name, w, act, dy, grads)
     }
 }
 

@@ -3,7 +3,6 @@
 use anyhow::Result;
 
 use super::{accumulate, Ctx, Gradients, Layer};
-use crate::runtime::refmodel::Method;
 use crate::tensor::Tensor;
 
 /// Final projection onto vocabulary logits.
@@ -39,7 +38,7 @@ impl Layer for LmHead {
         grads: &mut Gradients,
     ) -> Result<Tensor> {
         let head = ctx.params.get(&self.name)?;
-        if ctx.method == Method::Full {
+        if ctx.adapter.trains_base() {
             accumulate(grads, &self.name, act.xf.transpose2().matmul(dlogits)?);
         }
         dlogits.matmul(&head.transpose2())

@@ -26,15 +26,17 @@ pub mod mlp;
 pub mod rmsnorm;
 pub mod tape;
 
+use std::any::Any;
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use super::refmodel::Method;
+use crate::adapters::Adapter;
 use crate::coordinator::manifest::ModelDims;
 use crate::quant::QuantWeight;
 use crate::tensor::Tensor;
 
+pub use self::linear::LinearAct;
 pub use self::tape::{CheckpointPolicy, Tape};
 
 /// Name-keyed parameter map: dense f32 tensors (trainables, frozen
@@ -171,28 +173,40 @@ pub fn accumulate(grads: &mut Gradients, name: &str, g: Tensor) {
 }
 
 /// Per-step adapter state resolved once and shared read-only by every
-/// microbatch (and worker thread) of a training step: CNP rotation
-/// blocks per adapted linear, plus the merged `blockdiag(R) @ W` for
-/// the weight-centric baseline. Without this, per-sequence
-/// microbatching would re-pay the block build (and, for weight-centric
-/// OFT, the cubic merge) once per sequence instead of once per step —
-/// exactly the amortization real frameworks have.
+/// microbatch (and worker thread) of a training step, keyed by
+/// adapted-linear name. Each entry is an adapter-defined payload (CNP
+/// rotation blocks, a merged `blockdiag(R) @ W`, normalized
+/// Householder directions, ...) built by that method's
+/// [`Adapter::plan_linear`] and downcast back by its own hooks — the
+/// plan itself knows nothing about any method. Without it,
+/// per-sequence microbatching would re-pay per-step costs (block
+/// builds, cubic merges) once per sequence instead of once per step.
 #[derive(Default)]
 pub struct AdapterPlan {
-    /// Adapted-linear name -> CNP rotation blocks (OFT-family methods).
-    pub blocks: BTreeMap<String, Vec<Tensor>>,
-    /// Adapted-linear name -> merged weight (weight-centric OFT only).
-    pub merged: BTreeMap<String, Tensor>,
+    entries: BTreeMap<String, Box<dyn Any + Send + Sync>>,
+}
+
+impl AdapterPlan {
+    /// Store one linear's plan entry.
+    pub fn insert(&mut self, linear: String, entry: Box<dyn Any + Send + Sync>) {
+        self.entries.insert(linear, entry);
+    }
+
+    /// This linear's entry, downcast to the owning adapter's type.
+    pub fn get<T: 'static>(&self, linear: &str) -> Option<&T> {
+        self.entries.get(linear).and_then(|e| e.downcast_ref::<T>())
+    }
 }
 
 /// Everything a layer needs besides its direct input: the resolved
-/// parameter map, the bundle's dims and PEFT method, and the step's
-/// shared [`AdapterPlan`] (absent for paths that resolve adapters
-/// elsewhere, e.g. the decode models).
+/// parameter map, the bundle's dims, the registered PEFT [`Adapter`]
+/// driving the adapted linears, and the step's shared [`AdapterPlan`]
+/// (absent for paths that resolve adapters elsewhere, e.g. the decode
+/// models).
 pub struct Ctx<'a> {
     pub params: &'a Params,
     pub dims: &'a ModelDims,
-    pub method: Method,
+    pub adapter: &'static dyn Adapter,
     pub plan: Option<&'a AdapterPlan>,
 }
 

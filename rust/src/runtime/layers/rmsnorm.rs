@@ -3,7 +3,6 @@
 use anyhow::Result;
 
 use super::{accumulate, Ctx, Gradients, Layer};
-use crate::runtime::refmodel::Method;
 use crate::tensor::Tensor;
 
 /// One RMSNorm instance, resolving its gain by parameter name.
@@ -41,7 +40,7 @@ impl Layer for RmsNorm {
     ) -> Result<Tensor> {
         let g = ctx.params.get(&self.name)?;
         let (dx, dg) = rmsnorm_bwd(&act.x, &g.data, &act.r, dy);
-        if ctx.method == Method::Full {
+        if ctx.adapter.trains_base() {
             accumulate(grads, &self.name, dg);
         }
         Ok(dx)

@@ -1,11 +1,13 @@
 //! Native execution of a bundle's graphs: the pure-Rust twin of the L2
 //! JAX model (python/compile/model.py), used by the reference engine.
 //!
-//! Implements the decoder-only transformer with every PEFT method of
-//! the paper (full / none / LoRA / weight-centric OFT / input-centric
-//! OFTv2 / QLoRA / QOFT), a hand-derived backward pass, and the Adam
-//! update — so `train_step`, `eval_loss` and `logits_last` run without
-//! artifacts, Python, or an accelerator.
+//! Implements the decoder-only transformer with every *registered*
+//! PEFT method (see [`crate::adapters`]: full / none / LoRA /
+//! weight-centric OFT / input-centric OFTv2 / QLoRA / QOFT / BOFT /
+//! HOFT), a hand-derived backward pass, and the Adam update — so
+//! `train_step`, `eval_loss` and `logits_last` run without artifacts,
+//! Python, or an accelerator. Method-specific math lives in each
+//! adapter's own module; this file never matches on a method.
 //!
 //! The model itself lives in [`super::layers`] as an explicit layer
 //! stack with a forward [`Tape`]; this module owns the bundle-level
@@ -30,11 +32,12 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use super::layers::lmhead::{nll_dlogits, nll_stats, split_tokens};
-use super::layers::linear::build_cnp_blocks as build_cnp_blocks_impl;
-use super::layers::{AdapterPlan, BaseWeight, CheckpointPolicy, Ctx, Gradients, LayerStack, Tape};
+use super::layers::{AdapterPlan, CheckpointPolicy, Ctx, Gradients, LayerStack, Tape};
 use super::{lit_f32, scalar_f32, TrainOpts, Value};
-use crate::coordinator::manifest::{Manifest, ModelDims, ParamSpec, QuantSpec};
-use crate::peft;
+use crate::adapters::{Adapter, DecodeApply};
+use crate::coordinator::manifest::{
+    adapted_linear_dims, Manifest, ModelDims, ParamSpec, QuantSpec,
+};
 use crate::quant::{AwqTensor, Nf4Tensor, QuantWeight};
 use crate::tensor::Tensor;
 
@@ -42,50 +45,6 @@ use crate::tensor::Tensor;
 // layers tree with the layer/tape decomposition).
 pub use super::layers::linear::{block_rotate_fast, build_cnp_blocks, cnp_backward};
 pub use super::layers::Params;
-
-/// PEFT method of a bundle (mirrors configs.METHODS).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Full,
-    None,
-    Lora,
-    OftMerged,
-    OftV2,
-    QLora,
-    QOft,
-}
-
-/// The spellings [`Method::parse`] accepts, in manifest order.
-pub const METHOD_NAMES: [&str; 7] =
-    ["full", "none", "lora", "oft_merged", "oft_v2", "qlora", "qoft"];
-
-impl Method {
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "full" => Method::Full,
-            "none" => Method::None,
-            "lora" => Method::Lora,
-            "oft_merged" => Method::OftMerged,
-            "oft_v2" => Method::OftV2,
-            "qlora" => Method::QLora,
-            "qoft" => Method::QOft,
-            other => bail!(
-                "unknown method '{other}'; valid methods: {}",
-                METHOD_NAMES.join(", ")
-            ),
-        })
-    }
-
-    /// LoRA-family method (additive low-rank adapter)?
-    pub fn is_lora(self) -> bool {
-        matches!(self, Method::Lora | Method::QLora)
-    }
-
-    /// Input-centric OFT-family method (matrix-free rotation)?
-    pub fn is_oft_input_centric(self) -> bool {
-        matches!(self, Method::OftV2 | Method::QOft)
-    }
-}
 
 /// Weight storage backend for quantized methods.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,7 +69,8 @@ impl QuantKind {
 /// contract, ready to run any of the three graphs.
 pub struct RefBundle {
     pub dims: ModelDims,
-    pub method: Method,
+    /// The registered PEFT method driving every adapted linear.
+    pub adapter: &'static dyn Adapter,
     pub quant: QuantKind,
     stack: LayerStack,
     trainable: Vec<ParamSpec>,
@@ -121,7 +81,8 @@ pub struct RefBundle {
 
 impl RefBundle {
     pub fn from_manifest(man: &Manifest) -> Result<RefBundle> {
-        let method = Method::parse(&man.method)?;
+        let adapter = crate::adapters::get(&man.method)?;
+        adapter.validate_dims(&man.model)?;
         let quant = QuantKind::parse(&man.quant)?;
         ensure!(
             man.model.d_model % man.model.n_heads == 0,
@@ -131,7 +92,7 @@ impl RefBundle {
         );
         Ok(RefBundle {
             dims: man.model,
-            method,
+            adapter,
             quant,
             stack: LayerStack::build(&man.model),
             trainable: man.trainable.clone(),
@@ -153,41 +114,23 @@ impl RefBundle {
         Ctx {
             params,
             dims: &self.dims,
-            method: self.method,
+            adapter: self.adapter,
             plan: Some(plan),
         }
     }
 
-    /// Names of the linears this bundle actually adapts, derived from
-    /// the manifest's trainable specs (every OFT-family trainable is a
-    /// `<linear>.oft_q`) — no second hard-coded list to drift.
-    fn adapted_linear_names(&self) -> Vec<String> {
-        self.trainable
-            .iter()
-            .filter_map(|s| s.name.strip_suffix(".oft_q"))
-            .map(str::to_string)
-            .collect()
-    }
-
-    /// Resolve the step's shared adapter state once: CNP blocks per
-    /// adapted linear (OFT family) and the merged `blockdiag(R) @ W`
-    /// (weight-centric baseline). Every microbatch — on every worker —
-    /// reads this one plan, so per-sequence decomposition does not
-    /// re-pay per-step costs per sequence.
+    /// Resolve the step's shared adapter state once, by asking the
+    /// registered method for its per-linear plan entries (CNP blocks,
+    /// merged weights, reflection directions — whatever the module
+    /// defines). Every microbatch — on every worker — reads this one
+    /// plan, so per-sequence decomposition does not re-pay per-step
+    /// costs per sequence.
     fn adapter_plan(&self, params: &Params) -> Result<AdapterPlan> {
         let mut plan = AdapterPlan::default();
-        if !(self.method.is_oft_input_centric() || self.method == Method::OftMerged) {
-            return Ok(plan);
-        }
-        for name in self.adapted_linear_names() {
-            let packed = params.get(&format!("{name}.oft_q"))?;
-            let blocks = build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
-            if self.method == Method::OftMerged {
-                let w = params.get(&name)?;
-                let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
-                plan.merged.insert(name.clone(), rd.matmul(w)?);
+        for (name, _, _) in adapted_linear_dims(&self.dims) {
+            if let Some(entry) = self.adapter.plan_linear(&name, params, &self.dims)? {
+                plan.insert(name, entry);
             }
-            plan.blocks.insert(name, blocks);
         }
         Ok(plan)
     }
@@ -602,53 +545,26 @@ fn run_sharded<T: Send>(
 // Incremental (KV-cached) decoding
 // ---------------------------------------------------------------------------
 
-use super::layers::linear::block_rotate_fast as rotate_rows;
 use super::layers::mlp::gelu_fwd;
 use super::layers::rmsnorm::rmsnorm_fwd;
 
-/// One adapted linear with the adapter resolved at build time: decode
-/// steps pay only the per-token apply, never CNP block construction —
-/// and quantized bases stay packed, each token's gemv decoding the
-/// codes group-by-group through the fused kernels. That re-decode per
-/// token is the deliberate 4-bit inference trade (packed residency for
+/// One transformer layer with every adapted linear resolved at build
+/// time into its method's [`DecodeApply`] object: decode steps pay
+/// only the per-token apply, never CNP block construction — and
+/// quantized bases stay packed, each token's gemv decoding the codes
+/// group-by-group through the fused kernels. That re-decode per token
+/// is the deliberate 4-bit inference trade (packed residency for
 /// unpack work, as in bitsandbytes/AWQ inference kernels); the serving
 /// bench measures the resulting per-token cost for a QOFT adapter.
-enum DecLinear {
-    Plain { w: BaseWeight },
-    Lora { w: BaseWeight, a: Tensor, b: Tensor, scale: f32 },
-    /// Input-centric OFTv2/QOFT: rotate the token's activations
-    /// block-by-block, then the frozen matmul (matrix-free, §3).
-    Rotate { w: BaseWeight, blocks: Vec<Tensor> },
-    /// Weight-centric baseline: blockdiag(R) @ W merged once at load
-    /// (decoding re-pays it per adapter, not per token).
-    Merged { rw: Tensor },
-}
-
-impl DecLinear {
-    /// Apply to a (1, din) row; mirrors the layer-stack operation order
-    /// so decode logits match the full re-forward bit for bit.
-    fn apply(&self, x: &Tensor) -> Result<Tensor> {
-        match self {
-            DecLinear::Plain { w } => w.matmul(x),
-            DecLinear::Lora { w, a, b, scale } => {
-                let xa = x.matmul(a)?;
-                w.matmul(x)?.add(&xa.matmul(b)?.scale(*scale))
-            }
-            DecLinear::Rotate { w, blocks } => w.matmul(&rotate_rows(x, blocks)?),
-            DecLinear::Merged { rw } => x.matmul(rw),
-        }
-    }
-}
-
 struct DecLayer {
     attn_norm: Vec<f32>,
-    wq: DecLinear,
-    wk: DecLinear,
-    wv: DecLinear,
-    wo: DecLinear,
+    wq: Box<dyn DecodeApply>,
+    wk: Box<dyn DecodeApply>,
+    wv: Box<dyn DecodeApply>,
+    wo: Box<dyn DecodeApply>,
     mlp_norm: Vec<f32>,
-    up: DecLinear,
-    down: DecLinear,
+    up: Box<dyn DecodeApply>,
+    down: Box<dyn DecodeApply>,
 }
 
 /// Per-sequence KV cache: one (seq_len, d_model) key and value plane
@@ -685,7 +601,8 @@ impl RefBundle {
     pub fn decode_model(&self, trainables: &[&Value], fixed: &[&Value]) -> Result<DecodeModel> {
         let params = self.assemble_params(trainables, fixed)?;
         let norm = |name: &str| -> Result<Vec<f32>> { Ok(params.get(name)?.data.clone()) };
-        let linear = |name: &str| -> Result<DecLinear> { self.resolve_linear(&params, name) };
+        let linear =
+            |name: &str| -> Result<Box<dyn DecodeApply>> { self.resolve_linear(&params, name) };
         let mut layers = Vec::with_capacity(self.dims.n_layers);
         for i in 0..self.dims.n_layers {
             let pre = format!("layers.{i}");
@@ -710,33 +627,11 @@ impl RefBundle {
         })
     }
 
-    fn resolve_linear(&self, params: &Params, name: &str) -> Result<DecLinear> {
+    /// Resolve one adapted linear into its method's decode applier
+    /// (adapter state merged once here, never per token).
+    fn resolve_linear(&self, params: &Params, name: &str) -> Result<Box<dyn DecodeApply>> {
         let w = params.weight(name)?;
-        Ok(match self.method {
-            Method::Full | Method::None => DecLinear::Plain { w: w.cloned() },
-            Method::Lora | Method::QLora => DecLinear::Lora {
-                a: params.get(&format!("{name}.lora_a"))?.clone(),
-                b: params.get(&format!("{name}.lora_b"))?.clone(),
-                scale: (self.dims.lora_alpha / self.dims.lora_r as f64) as f32,
-                w: w.cloned(),
-            },
-            Method::OftV2 | Method::QOft => {
-                let packed = params.get(&format!("{name}.oft_q"))?;
-                let blocks =
-                    build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
-                DecLinear::Rotate { w: w.cloned(), blocks }
-            }
-            Method::OftMerged => {
-                // Weight-centric merge genuinely needs the dense matrix
-                // (never quantized by construction).
-                let w = w.dense()?;
-                let packed = params.get(&format!("{name}.oft_q"))?;
-                let blocks =
-                    build_cnp_blocks_impl(packed, self.dims.block_b, self.dims.neumann_k)?;
-                let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
-                DecLinear::Merged { rw: rd.matmul(w)? }
-            }
-        })
+        self.adapter.resolve_decode(params, &self.dims, name, w)
     }
 }
 
@@ -935,33 +830,86 @@ mod tests {
 
     #[test]
     fn train_step_gradients_match_finite_differences() {
-        // tiny_oft_v2 with non-trivial Q; gradient recovered from the
-        // first Adam moment at m0 = 0: new_m = (1 - b1) g.
-        let bu = bundle("tiny_oft_v2");
-        let n = bu.n_trainable();
-        let tr = random_values(&bu.trainable, 0.02, 5);
-        let (toks, mask) = batch(&bu, 7);
-        let out = step_outputs(&bu, &tr, &toks, &mask);
-        let loss0 = scalar_f32(&out[3 * n]).unwrap();
-        assert!(loss0.is_finite() && loss0 > 0.0);
+        // Non-trivial adapter state; gradient recovered from the first
+        // Adam moment at m0 = 0: new_m = (1 - b1) g. Runs for the CNP
+        // method (oft_v2) AND both registry-added methods (boft, hoft)
+        // so every new backward is FD-locked, not just type-checked.
+        for tag in ["tiny_oft_v2", "tiny_boft", "tiny_hoft"] {
+            let bu = bundle(tag);
+            let n = bu.n_trainable();
+            let tr = random_values(&bu.trainable, 0.02, 5);
+            let (toks, mask) = batch(&bu, 7);
+            let out = step_outputs(&bu, &tr, &toks, &mask);
+            let loss0 = scalar_f32(&out[3 * n]).unwrap();
+            assert!(loss0.is_finite() && loss0 > 0.0, "{tag}: loss {loss0}");
 
-        // pick the largest-|g| coordinate of the first adapter
-        let g: Vec<f32> = out[n].to_vec::<f32>().unwrap();
+            // pick the largest-|g| coordinate of the first adapter
+            let g: Vec<f32> = out[n].to_vec::<f32>().unwrap();
+            let grad: Vec<f32> = g.iter().map(|x| x / (1.0 - 0.9)).collect();
+            let (best, gbest) = grad
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .map(|(i, g)| (i, *g))
+                .unwrap();
+            assert!(gbest.abs() > 0.0, "{tag}: zero gradient everywhere");
+
+            let eps = 2e-2f32;
+            let eval_at = |delta: f32| -> f32 {
+                let mut tr2 = tr.clone();
+                let mut data = tr2[0].to_vec::<f32>().unwrap();
+                data[best] += delta;
+                tr2[0] = lit_f32(&bu.trainable[0].shape, &data).unwrap();
+                let out = step_outputs(&bu, &tr2, &toks, &mask);
+                scalar_f32(&out[3 * n]).unwrap()
+            };
+            let fd = (eval_at(eps) - eval_at(-eps)) / (2.0 * eps);
+            let rel = (fd - gbest).abs() / gbest.abs().max(1e-4);
+            assert!(rel < 0.25, "{tag}: FD {fd} vs analytic {gbest} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn boft_second_factor_gradients_match_finite_differences() {
+        // The generic FD test perturbs the first sorted trainable — for
+        // tiny_boft a depth-1 attention linear — so the multi-factor
+        // dpack slices (rows nb.. of a depth-2 parameter) would go
+        // unchecked. Lock them explicitly on a d_ff=256 MLP linear
+        // (b=16 -> nb=16, m=2): FD a coordinate chosen from the SECOND
+        // factor's packed rows.
+        let bu = bundle("tiny_boft");
+        let n = bu.n_trainable();
+        let tr = random_values(&bu.trainable, 0.02, 29);
+        let (toks, mask) = batch(&bu, 31);
+        let out = step_outputs(&bu, &tr, &toks, &mask);
+
+        let (pi, spec) = bu
+            .trainable
+            .iter()
+            .enumerate()
+            .find(|(_, s)| s.name == "layers.0.mlp.down.boft_q")
+            .expect("tiny boft bundle lost its mlp.down parameter");
+        let p = crate::peft::packed_dim(bu.dims.block_b);
+        let nb = 256 / bu.dims.block_b; // mlp.down input width / b
+        assert_eq!(spec.shape, vec![2 * nb, p], "expected a depth-2 parameter");
+
+        let g: Vec<f32> = out[n + pi].to_vec::<f32>().unwrap();
         let grad: Vec<f32> = g.iter().map(|x| x / (1.0 - 0.9)).collect();
         let (best, gbest) = grad
             .iter()
             .enumerate()
+            .skip(nb * p) // restrict to factor 1's rows
             .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
             .map(|(i, g)| (i, *g))
             .unwrap();
-        assert!(gbest.abs() > 0.0, "zero gradient everywhere");
+        assert!(gbest.abs() > 0.0, "second-factor gradient identically zero");
 
         let eps = 2e-2f32;
         let eval_at = |delta: f32| -> f32 {
             let mut tr2 = tr.clone();
-            let mut data = tr2[0].to_vec::<f32>().unwrap();
+            let mut data = tr2[pi].to_vec::<f32>().unwrap();
             data[best] += delta;
-            tr2[0] = lit_f32(&bu.trainable[0].shape, &data).unwrap();
+            tr2[pi] = lit_f32(&spec.shape, &data).unwrap();
             let out = step_outputs(&bu, &tr2, &toks, &mask);
             scalar_f32(&out[3 * n]).unwrap()
         };
@@ -1008,7 +956,13 @@ mod tests {
         // The acceptance property at the graph level: every TrainOpts
         // combination must produce bitwise-identical step outputs
         // (loss, updated params, Adam moments).
-        for tag in ["tiny_oft_v2", "tiny_lora", "tiny_oft_merged"] {
+        for tag in [
+            "tiny_oft_v2",
+            "tiny_lora",
+            "tiny_oft_merged",
+            "tiny_boft",
+            "tiny_hoft",
+        ] {
             let bu = bundle(tag);
             let tr = random_values(&bu.trainable, 0.02, 13);
             let (toks, mask) = batch(&bu, 17);
@@ -1046,7 +1000,13 @@ mod tests {
         // The KV-cached row-at-a-time forward must reproduce the padded
         // whole-sequence forward's last-position logits exactly (same
         // kernels, same per-row accumulation order).
-        for tag in ["tiny_oft_v2", "tiny_lora", "tiny_oft_merged"] {
+        for tag in [
+            "tiny_oft_v2",
+            "tiny_lora",
+            "tiny_oft_merged",
+            "tiny_boft",
+            "tiny_hoft",
+        ] {
             let bu = bundle(tag);
             let tr = random_values(&bu.trainable, 0.05, 21);
             let fixed: Vec<Value> = bu
@@ -1088,12 +1048,13 @@ mod tests {
     }
 
     #[test]
-    fn method_parsing() {
-        assert_eq!(Method::parse("oft_v2").unwrap(), Method::OftV2);
-        assert_eq!(Method::parse("qlora").unwrap(), Method::QLora);
-        assert!(Method::parse("bogus").is_err());
-        assert!(Method::Lora.is_lora() && Method::QLora.is_lora());
-        assert!(Method::OftV2.is_oft_input_centric());
+    fn method_resolution_comes_from_the_registry() {
+        // Bundles resolve their method through the adapter registry —
+        // the closed enum is gone, so a registered method IS a valid
+        // bundle method, with no second list to keep in sync.
+        let bu = bundle("tiny_hoft");
+        assert_eq!(bu.adapter.name(), "hoft");
+        assert!(RefBundle::from_manifest(&Manifest::builtin("tiny_boft").unwrap()).is_ok());
         assert_eq!(QuantKind::parse("nf4").unwrap(), QuantKind::Nf4);
     }
 
@@ -1101,11 +1062,11 @@ mod tests {
     fn parse_errors_list_valid_options() {
         // Mirrors the `--backend` fix: an unknown name teaches the
         // valid spellings instead of just rejecting.
-        let err = match Method::parse("bogus") {
+        let err = match crate::adapters::get("bogus") {
             Err(e) => format!("{e:#}"),
-            Ok(m) => panic!("bogus parsed as {m:?}"),
+            Ok(a) => panic!("bogus resolved to '{}'", a.name()),
         };
-        for name in METHOD_NAMES {
+        for name in crate::adapters::names() {
             assert!(err.contains(name), "method error should list '{name}': {err}");
         }
         let err = match QuantKind::parse("int3") {

@@ -3,7 +3,7 @@
 //! The paper's input-centric design leaves the (quantized) base weights
 //! untouched, so one frozen base can serve many adapters at once — the
 //! same property BOFT/HOFT exploit. This module is that runtime: N
-//! named adapters (any mix of the 7 PEFT methods) attach to a single
+//! named adapters (any mix of the registered PEFT methods) attach to a single
 //! engine-resident base, requests enter a FIFO queue, and a continuous
 //! batching loop interleaves one KV-cached decode step per in-flight
 //! sequence per tick, admitting queued requests as slots free up.

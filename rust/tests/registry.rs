@@ -1,0 +1,170 @@
+//! The open-registry contracts: (a) parse / list / count / memmodel
+//! agree for every registered PEFT method, and (b) the two methods the
+//! registry was proven with — BOFT and HOFT — run end-to-end (train,
+//! eval, KV-decode vs. the re-forward oracle, serve, checkpoint
+//! resume) selected purely by bundle tag. CI runs this file in release
+//! mode alongside the scaling-invariant locks.
+
+use std::sync::Arc;
+
+use oftv2::adapters;
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{manifest::parse_tag, BaseModel, Manifest, Trainer};
+use oftv2::memmodel::{self, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::peft::counting::{count_with, MethodKind};
+use oftv2::runtime::Engine;
+use oftv2::serve::Server;
+
+fn cfg(tag: &str, steps: usize) -> RunCfg {
+    let mut c = RunCfg::default();
+    c.tag = tag.into();
+    c.steps = steps;
+    c.log_every = 0;
+    c.data.task = "math".into();
+    c.data.documents = 200;
+    c.optim.lr = 3e-3;
+    c
+}
+
+#[test]
+fn registry_parse_list_count_memmodel_agree() {
+    let spec = ModelSpec::llama2_7b();
+    let names = adapters::names();
+    assert!(names.len() >= 9, "registry lost methods: {names:?}");
+    for adapter in adapters::all() {
+        let name = adapter.name();
+        // list -> parse roundtrip
+        assert_eq!(adapters::get(name).unwrap().name(), name);
+
+        // tag parsing resolves every registered method
+        let tag = adapters::bundle_tag("tiny", *adapter);
+        let (preset, method, quant) = parse_tag(&tag).unwrap();
+        assert_eq!(preset, "tiny");
+        assert_eq!(method, name);
+        assert_eq!(quant != "none", adapter.quantized_base(), "{name}");
+
+        // manifest synthesis agrees with the adapter's own declaration
+        let man = Manifest::builtin(&tag).unwrap();
+        assert_eq!(man.method, name);
+        assert_eq!(man.trainable_numel(), man.params_trainable, "{name}");
+        if !adapter.trains_base() {
+            let declared: u64 = oftv2::coordinator::manifest::adapted_linear_dims(&man.model)
+                .iter()
+                .flat_map(|(n, din, dout)| adapter.linear_trainables(n, *din, *dout, &man.model))
+                .map(|s| s.numel() as u64)
+                .sum();
+            assert_eq!(declared, man.params_trainable, "{name}: spec drift");
+        }
+
+        // counting and the memory model price the same declaration
+        let kind = MethodKind::by_name(name, 16, 32).unwrap();
+        let n_params = count_with(&spec, kind.adapter, &kind.dims);
+        let method = memmodel::Method::by_name(name, 16, 32).unwrap();
+        let mem = memmodel::finetune_memory(&spec, method, Precision::Bf16, TrainShape::default());
+        assert!(
+            (mem.adapter_params - n_params as f64 * 4.0).abs() < 1.0,
+            "{name}: memmodel adapter bytes disagree with the registry count"
+        );
+        assert!(mem.total_gib().is_finite() && mem.total_gib() > 0.0, "{name}");
+        assert!(!method.label(adapter.quantized_base()).is_empty());
+    }
+
+    // unknown methods error with the full registry list everywhere
+    let err = format!("{:#}", parse_tag("tiny_warp").unwrap_err());
+    for n in names {
+        assert!(err.contains(n), "parse_tag error should list '{n}': {err}");
+    }
+}
+
+#[test]
+fn boft_and_hoft_train_eval_decode_checkpoint_end_to_end() {
+    let e = Engine::cpu().unwrap();
+    for tag in ["tiny_boft", "tiny_hoft"] {
+        // Train: loss decreases and stays finite, selected purely by tag.
+        let steps = 12;
+        let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, steps)).unwrap();
+        let hist = tr.train().unwrap();
+        let first = hist.first_loss().unwrap();
+        let tail = hist.tail_loss(3).unwrap();
+        assert!(tail < first, "{tag}: loss did not decrease ({first} -> {tail})");
+        assert!(hist.steps.iter().all(|s| s.loss.is_finite()), "{tag}: NaN");
+
+        // Eval: finite loss/perplexity over the held-out split.
+        let (eval_loss, ppl) = tr.evaluate().unwrap();
+        assert!(eval_loss.is_finite() && ppl.is_finite(), "{tag}");
+
+        // KV decode locks token-for-token against the re-forward oracle.
+        for prompt in [vec![1, 10, 20], vec![2], vec![1, 3, 5, 7, 9, 11]] {
+            let old = tr.decode_greedy_reforward(&prompt, 12).unwrap();
+            let new = tr.decode_greedy(&prompt, 12).unwrap();
+            assert_eq!(old, new, "{tag}: KV decode diverged on {prompt:?}");
+        }
+
+        // Full-state checkpoint resume reproduces the next step bitwise.
+        let ck = tr.checkpoint_full().unwrap();
+        let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+        let mut tr2 = Trainer::with_checkpoint(&e, man, cfg(tag, steps), Some(&ck)).unwrap();
+        assert_eq!(tr2.step_count(), steps, "{tag}: step counter not restored");
+        let batch = tr.loader.next_batch();
+        let a = tr.train_on(&batch).unwrap();
+        let b = tr2.train_on(&batch).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: resume diverged ({a} vs {b})");
+    }
+}
+
+#[test]
+fn boft_and_hoft_serve_over_a_shared_base() {
+    // Both new methods attach to one resident base next to the
+    // existing methods and serve batched KV-decode requests that match
+    // a solo decoder token-for-token.
+    let e = Engine::reference();
+    let seed = 42u64; // RunCfg::default().seed, so solo trainers agree
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let uploads_after_base = e.upload_count();
+
+    let mut srv = Server::new(&e, Arc::clone(&base), 3);
+    srv.add_adapter_init("boft", Manifest::builtin("tiny_boft").unwrap(), seed, None)
+        .unwrap();
+    srv.add_adapter_init("hoft", Manifest::builtin("tiny_hoft").unwrap(), seed, None)
+        .unwrap();
+    srv.add_adapter_init("v2", Manifest::builtin("tiny_oft_v2").unwrap(), seed, None)
+        .unwrap();
+    assert_eq!(
+        e.upload_count(),
+        uploads_after_base,
+        "full-precision boft/hoft adapters must not re-upload the base"
+    );
+
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 4], vec![1, 30], vec![2, 2, 2]];
+    for p in &prompts {
+        for name in ["boft", "hoft", "v2"] {
+            srv.submit(name, p.clone(), 8).unwrap();
+        }
+    }
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 3 * prompts.len());
+
+    for (method, tag) in [("boft", "tiny_boft"), ("hoft", "tiny_hoft")] {
+        let mut solo = Trainer::with_base(
+            &e,
+            Manifest::builtin(tag).unwrap(),
+            cfg(tag, 0),
+            None,
+            Arc::clone(&base),
+        )
+        .unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            let served = responses
+                .iter()
+                .find(|r| r.adapter == method && r.prompt_len == p.len() && r.id as usize / 3 == i)
+                .unwrap();
+            assert_eq!(
+                served.tokens,
+                solo.decode_greedy(p, 8).unwrap(),
+                "{method}: served decode diverged from solo on {p:?}"
+            );
+        }
+    }
+}

@@ -80,17 +80,12 @@ fn base_buffers_upload_once_across_adapters() {
 #[test]
 fn kv_decode_matches_reforward_token_for_token() {
     // The KV-cached incremental decoder must emit exactly the ids the
-    // old padded full re-forward emitted, for every adapter family
-    // (plain / LoRA / input-centric OFT / merged OFT / quantized).
+    // old padded full re-forward emitted, for every *registered*
+    // method (plain / LoRA / merged OFT / input-centric / butterfly /
+    // Householder / quantized) — a new registration inherits this
+    // token-for-token lock automatically.
     let e = Engine::cpu().unwrap();
-    for tag in [
-        "tiny_full",
-        "tiny_lora",
-        "tiny_oft_merged",
-        "tiny_oft_v2",
-        "tiny_qoft_nf4",
-        "tiny_qlora_nf4",
-    ] {
+    for tag in &oftv2::adapters::bundle_tags("tiny") {
         let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, 6)).unwrap();
         tr.train().unwrap(); // non-trivial adapter weights
         for prompt in [vec![1, 10, 20], vec![2], vec![1, 3, 5, 7, 9, 11]] {

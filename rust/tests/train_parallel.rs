@@ -15,15 +15,12 @@ use oftv2::coordinator::Trainer;
 use oftv2::runtime::{CheckpointPolicy, Engine};
 use oftv2::tensor::Tensor;
 
-const ALL_METHOD_TAGS: [&str; 7] = [
-    "tiny_full",
-    "tiny_none",
-    "tiny_lora",
-    "tiny_oft_merged",
-    "tiny_oft_v2",
-    "tiny_qlora_nf4",
-    "tiny_qoft_nf4",
-];
+/// One bundle per *registered* PEFT method (quantized ones on the NF4
+/// backend): a newly registered method — boft and hoft included —
+/// inherits these bitwise worker/checkpoint locks automatically.
+fn all_method_tags() -> Vec<String> {
+    oftv2::adapters::bundle_tags("tiny")
+}
 
 /// Loss trace + trainables + Adam moments after a short training run.
 struct RunOutcome {
@@ -78,7 +75,7 @@ fn worker_count_never_changes_training_all_methods() {
     // trained parameters, and optimizer state. (The Adam moments after
     // step 1 from m = v = 0 encode the raw gradients, so this is also
     // the bitwise gradient check.)
-    for tag in ALL_METHOD_TAGS {
+    for tag in &all_method_tags() {
         let solo = run(tag, 3, 1, CheckpointPolicy::None);
         let four = run(tag, 3, 4, CheckpointPolicy::None);
         assert_bitwise_equal(tag, "1 vs 4 workers", &solo, &four);
@@ -90,7 +87,7 @@ fn worker_count_never_changes_training_all_methods() {
 fn grad_checkpointing_never_changes_training_all_methods() {
     // Full tape vs every-1 and every-2 checkpointing: the recomputed
     // segments must reproduce the gradients bitwise.
-    for tag in ALL_METHOD_TAGS {
+    for tag in &all_method_tags() {
         let full_tape = run(tag, 3, 1, CheckpointPolicy::None);
         for k in [1usize, 2] {
             let ck = run(tag, 3, 1, CheckpointPolicy::EveryK(k));
