@@ -10,17 +10,21 @@
 //!    early-vs-late flatness check within one sequence.
 //! 2. Multi-tenant throughput: OFTv2 + QOFT adapters batched over ONE
 //!    shared base, per-adapter latency/throughput.
+//! 3. Load generator: 100+ concurrent adapters (every registered
+//!    method) against the paged scheduler with a constrained decoder
+//!    residency cap — asserts p95/p99 service-time SLOs, flat
+//!    upload_count across hot-swaps, and a bounded KV block pool.
 //!
 //!   cargo bench --bench serving [-- --quick]
 //!
-//! Emits `BENCH_serving.json` (shared config/mean/p50/p95 schema).
+//! Emits `BENCH_serving.json` (shared config/mean/p50/p95/p99 schema).
 
 use oftv2::bench::{fmt_ms, print_table, quick_mode, write_bench_json, BenchRecord};
 use oftv2::config::RunCfg;
 use oftv2::coordinator::{BaseModel, Manifest, Trainer};
 use oftv2::json::Json;
 use oftv2::runtime::Engine;
-use oftv2::serve::Server;
+use oftv2::serve::{ServeConfig, Server};
 use oftv2::util::argmax;
 use oftv2::util::stats::Summary;
 use oftv2::util::timer::Timer;
@@ -238,6 +242,164 @@ fn main() -> Result<()> {
             .with("tokens_per_sec", Json::num(m.tokens_per_sec()))
             .with("total_tokens", Json::num(m.total_tokens as f64))
             .with("adapter_attach_uploads", Json::num(adapter_uploads as f64)),
+    );
+
+    // ---- 3. load generator: 100+ adapters, paged KV, SLO asserts -------
+    // Every registered method, >= 100 named tenants over ONE tiny base,
+    // a residency cap far below the tenant count (forcing constant
+    // hot-swaps), and the paged scheduler's default bounded pool. SLOs
+    // are asserted on *service* time (latency minus queue wait) so they
+    // measure the scheduler + paging machinery, not queue depth.
+    let n_adapters = if quick { 100 } else { 120 };
+    let n_requests = if quick { 120 } else { 360 };
+    let max_new = if quick { 4 } else { 8 };
+    let tags = oftv2::adapters::bundle_tags("tiny");
+    let base = BaseModel::for_preset(&engine, "tiny", seed, None)?;
+
+    let mut cfg = ServeConfig::new(8);
+    cfg.block_tokens = 8;
+    cfg.max_queue = n_requests + 8;
+    cfg.max_resident = Some(12);
+    let mut server = Server::with_config(&engine, base, cfg);
+    for i in 0..n_adapters {
+        let tag = &tags[i % tags.len()];
+        let name = format!("{tag}@{i}");
+        server.add_adapter_init(&name, Manifest::builtin(tag)?, seed + i as u64, None)?;
+    }
+    let names = server.adapter_names();
+    assert!(
+        server.resident_adapters() <= 12,
+        "residency cap must hold after attaching {n_adapters} adapters \
+         (got {} resident)",
+        server.resident_adapters()
+    );
+
+    // Per-request service-time baseline: a few solo requests through the
+    // same server before load. Relative SLOs stay meaningful across
+    // hosts of very different speed.
+    let mut baseline = Vec::new();
+    for name in names.iter().take(3) {
+        server.submit(name, vec![1, 2, 3], max_new)?;
+        let resp = server.run_until_idle()?;
+        assert_eq!(resp.len(), 1);
+        baseline.push(resp[0].latency_secs - resp[0].queued_secs);
+    }
+    let baseline_mean = Summary::of(&baseline).mean;
+
+    let uploads_at_load = engine.upload_count();
+    for r in 0..n_requests {
+        let prompt: Vec<i32> = vec![1, (r % 19 + 2) as i32, (r % 11 + 2) as i32];
+        server.submit(&names[r % names.len()], prompt, max_new)?;
+    }
+    let t0 = Timer::start();
+    let responses = server.run_until_idle()?;
+    let load_secs = t0.secs();
+    assert_eq!(responses.len(), n_requests, "every admitted request must complete");
+    assert_eq!(
+        engine.upload_count(),
+        uploads_at_load,
+        "adapter hot-swaps must never re-upload the shared base or packs"
+    );
+
+    let latency: Vec<f64> = responses.iter().map(|r| r.latency_secs).collect();
+    let service: Vec<f64> = responses
+        .iter()
+        .map(|r| r.latency_secs - r.queued_secs)
+        .collect();
+    let lat = Summary::of(&latency);
+    let svc = Summary::of(&service);
+
+    // SLOs: a request's service time is bounded by its share of a full
+    // batch of decode work, plus paging. Multipliers are generous (CI
+    // hosts jitter; p99 is 1-2 requests here) but still catch a paging
+    // or scheduling path that degrades by an order of magnitude.
+    let batch = server.config().max_batch as f64;
+    let slo_p95 = (10.0 * batch * baseline_mean).max(0.025);
+    let slo_p99 = (20.0 * batch * baseline_mean).max(0.05);
+    assert!(
+        svc.p95 <= slo_p95,
+        "p95 service time SLO violated: {} > {} (baseline {})",
+        fmt_ms(svc.p95),
+        fmt_ms(slo_p95),
+        fmt_ms(baseline_mean)
+    );
+    assert!(
+        svc.p99 <= slo_p99,
+        "p99 service time SLO violated: {} > {} (baseline {})",
+        fmt_ms(svc.p99),
+        fmt_ms(slo_p99),
+        fmt_ms(baseline_mean)
+    );
+
+    let m = server.metrics().clone();
+    assert!(
+        m.adapter_page_ins > 0 && m.adapter_evictions > 0,
+        "a 12-resident cap over {n_adapters} adapters must page \
+         (page_ins {}, evictions {})",
+        m.adapter_page_ins,
+        m.adapter_evictions
+    );
+    assert_eq!(m.kv.in_use, 0, "all KV blocks must return to the free list");
+    assert!(
+        m.kv.peak_in_use <= m.kv.capacity_blocks && m.kv.slab_blocks <= m.kv.capacity_blocks,
+        "KV stays bounded by the pool however many tenants come and go \
+         (peak {}, slab {}, capacity {})",
+        m.kv.peak_in_use,
+        m.kv.slab_blocks,
+        m.kv.capacity_blocks
+    );
+
+    print_table(
+        &format!(
+            "load generator ({n_adapters} adapters x {} methods, {n_requests} requests, \
+             batch 8, 12 resident)",
+            tags.len()
+        ),
+        &["metric", "p50", "p95", "p99", "SLO"],
+        &[
+            vec![
+                "service time".into(),
+                fmt_ms(svc.median),
+                fmt_ms(svc.p95),
+                fmt_ms(svc.p99),
+                format!("{} / {}", fmt_ms(slo_p95), fmt_ms(slo_p99)),
+            ],
+            vec![
+                "latency (incl. queue)".into(),
+                fmt_ms(lat.median),
+                fmt_ms(lat.p95),
+                fmt_ms(lat.p99),
+                "-".into(),
+            ],
+        ],
+    );
+    println!(
+        "{n_requests} requests in {}: {:.1} tok/s aggregate, {} page-ins / {} evictions, \
+         KV peak {}/{} blocks, 0 uploads during load",
+        fmt_ms(load_secs),
+        m.tokens_per_sec(),
+        m.adapter_page_ins,
+        m.adapter_evictions,
+        m.kv.peak_in_use,
+        m.kv.capacity_blocks
+    );
+    records.push(
+        BenchRecord::from_samples("serve_load_latency", &latency)
+            .with("adapters", Json::num(n_adapters as f64))
+            .with("requests", Json::num(n_requests as f64))
+            .with("max_batch", Json::num(batch)),
+    );
+    records.push(
+        BenchRecord::from_samples("serve_load_service", &service)
+            .with("adapters", Json::num(n_adapters as f64))
+            .with("slo_p95_secs", Json::num(slo_p95))
+            .with("slo_p99_secs", Json::num(slo_p99))
+            .with("baseline_secs", Json::num(baseline_mean))
+            .with("page_ins", Json::num(m.adapter_page_ins as f64))
+            .with("evictions", Json::num(m.adapter_evictions as f64))
+            .with("kv_peak_blocks", Json::num(m.kv.peak_in_use as f64))
+            .with("kv_capacity_blocks", Json::num(m.kv.capacity_blocks as f64))
+            .with("uploads_during_load", Json::num(0.0)),
     );
 
     let path = write_bench_json("serving", "secs", &records)?;

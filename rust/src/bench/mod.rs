@@ -194,7 +194,7 @@ fn seed_from(env: Option<String>) -> u64 {
 // ---------------------------------------------------------------------------
 
 /// One measured configuration in the shared `BENCH_<name>.json` schema:
-/// a config label plus mean/p50/p95 of its samples, with free-form
+/// a config label plus mean/p50/p95/p99 of its samples, with free-form
 /// extra fields (method, dimension, ratio, ...).
 #[derive(Clone, Debug)]
 pub struct BenchRecord {
@@ -202,6 +202,7 @@ pub struct BenchRecord {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub n: usize,
     pub extra: Vec<(String, Json)>,
 }
@@ -218,6 +219,7 @@ impl BenchRecord {
             mean: s.mean,
             p50: s.median,
             p95: s.p95,
+            p99: s.p99,
             n: s.n,
             extra: Vec::new(),
         }
@@ -235,6 +237,7 @@ impl BenchRecord {
             ("mean", Json::num(self.mean)),
             ("p50", Json::num(self.p50)),
             ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
             ("n", Json::num(self.n as f64)),
         ];
         for (k, v) in &self.extra {
@@ -272,7 +275,7 @@ pub fn write_bench_json_to(
     let doc = Json::obj(vec![
         ("bench", Json::str(name.to_string())),
         ("unit", Json::str(unit.to_string())),
-        ("schema", Json::str("config/mean/p50/p95/n".to_string())),
+        ("schema", Json::str("config/mean/p50/p95/p99/n".to_string())),
         ("records", Json::arr(records.iter().map(|r| r.to_json()).collect())),
     ]);
     std::fs::write(&path, doc.to_string())?;
@@ -338,6 +341,7 @@ mod tests {
         assert!((r.get("mean").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
         assert!(r.get("p50").unwrap().as_f64().is_ok());
         assert!(r.get("p95").unwrap().as_f64().is_ok());
+        assert!(r.get("p99").unwrap().as_f64().is_ok());
         assert_eq!(r.get("method").unwrap().as_str().unwrap(), "oft_v2");
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -317,6 +317,27 @@ impl BaseModel {
         self.bufs.len()
     }
 
+    /// Bytes of engine-resident f32 base buffers — the shared cost
+    /// every attached adapter amortizes (uploaded once at build).
+    pub fn resident_base_bytes(&self) -> u64 {
+        self.bufs
+            .values()
+            .map(|b| buffer_bytes(b))
+            .sum()
+    }
+
+    /// Bytes of engine-resident quantized packs across all quant
+    /// backends built so far (lazy: zero until a quantized adapter
+    /// attaches, then flat however many adapters share the backend).
+    pub fn resident_pack_bytes(&self) -> u64 {
+        let packs = self.packs.lock().expect("pack cache poisoned");
+        packs
+            .values()
+            .flat_map(|by_name| by_name.values())
+            .map(|b| buffer_bytes(b))
+            .sum()
+    }
+
     /// The fixed graph inputs (frozen f32 + quantized packs) for `man`,
     /// in manifest order, as shared buffer handles. f32 buffers are the
     /// ones uploaded at construction; packs are quantized from the host
@@ -417,6 +438,15 @@ impl AdapterState {
         };
         Ok(AdapterState { tr, m, v, step })
     }
+}
+
+/// Bytes one engine buffer holds (0 for device-resident buffers whose
+/// host view is unavailable — the engine's `upload_bytes()` counter
+/// still covers those).
+fn buffer_bytes(b: &Buffer) -> u64 {
+    b.as_host()
+        .map(|v| (v.element_count() * v.dtype().size_bytes()) as u64)
+        .unwrap_or(0)
 }
 
 fn moment_literal(spec: &ParamSpec, prefix: &str, ckpt: Option<&Checkpoint>) -> Result<Value> {
@@ -597,6 +627,27 @@ mod tests {
         let mut bad = Checkpoint::new();
         bad.insert(format!("{ADAM_V_PREFIX}{}", spec.name), Tensor::zeros(&[3]));
         assert!(AdapterState::init(&m, 7, Some(&bad)).is_err());
+    }
+
+    #[test]
+    fn residency_accounting_tracks_uploads() {
+        let e = crate::runtime::Engine::reference();
+        let base = BaseModel::for_preset(&e, "tiny", 7, None).unwrap();
+        // Base bytes equal what the engine counted at construction.
+        assert_eq!(base.resident_base_bytes(), e.upload_bytes());
+        assert_eq!(base.resident_pack_bytes(), 0, "packs are lazy");
+
+        let before = e.upload_bytes();
+        let q = man("tiny_qoft_nf4");
+        base.fixed_for(&e, &q).unwrap();
+        let pack_bytes = base.resident_pack_bytes();
+        assert!(pack_bytes > 0);
+        assert_eq!(e.upload_bytes() - before, pack_bytes);
+
+        // A second adapter on the same backend adds no resident bytes.
+        base.fixed_for(&e, &man("tiny_qlora_nf4")).unwrap();
+        assert_eq!(base.resident_pack_bytes(), pack_bytes);
+        assert_eq!(base.resident_base_bytes() + pack_bytes, e.upload_bytes());
     }
 
     #[test]

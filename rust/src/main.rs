@@ -210,8 +210,8 @@ fn cmd_decode(argv: &[String]) -> Result<()> {
 }
 
 /// Batched multi-tenant serving: N adapters (any mix of PEFT methods)
-/// over ONE engine-resident base, FIFO queue, continuous batching,
-/// KV-cached incremental decode.
+/// over ONE engine-resident base, bounded admission queue, continuous
+/// batching, paged KV-cached incremental decode.
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "batched multi-adapter serving over one shared base")
         .opt(
@@ -222,10 +222,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("requests", "total requests to serve", Some("12"))
         .opt("max-new", "max generated tokens per request", Some("16"))
         .opt("max-batch", "max concurrently active sequences", Some("4"))
+        .opt("max-queue", "bounded queue depth (backpressure past it)", Some("64"))
+        .opt("kv", "KV layout: paged | contiguous", Some("paged"))
+        .opt("block-tokens", "tokens per KV block (paged mode)", Some("16"))
+        .opt("max-resident", "resident-decoder cap, 0 = unlimited", Some("0"))
         .opt("task", "prompt task: wiki | math | summarize", Some("math"))
         .opt("documents", "synthetic corpus size for prompts", Some("200"))
         .opt("seed", "master seed", Some("7"))
         .opt("backend", "runtime backend: auto | reference | pjrt", Some("auto"))
+        .flag("stream", "print tokens as they are generated")
         .flag("help", "show help");
     let args = cmd.parse(argv)?;
     if args.has_flag("help") {
@@ -244,6 +249,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let requests = args.get_usize("requests", 12)?;
     let max_new = args.get_usize("max-new", 16)?;
     let max_batch = args.get_usize("max-batch", 4)?;
+    let max_queue = args.get_usize("max-queue", 64)?;
+    let block_tokens = args.get_usize("block-tokens", 16)?;
+    let max_resident = args.get_usize("max-resident", 0)?;
+    let kv_mode = match args.get_or("kv", "paged") {
+        "paged" => oftv2::serve::KvMode::Paged,
+        "contiguous" => oftv2::serve::KvMode::Contiguous,
+        other => bail!("--kv must be 'paged' or 'contiguous', got '{other}'"),
+    };
+    let stream = args.has_flag("stream");
     let seed = args.get_usize("seed", 7)? as u64;
     let documents = args.get_usize("documents", 200)?;
     let engine = engine_for(&args)?;
@@ -268,7 +282,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let base = oftv2::coordinator::BaseModel::for_preset(&engine, &preset, seed, None)
         .or_else(|_| oftv2::coordinator::BaseModel::from_manifest(&engine, &manifests[0], seed, None))?;
     let uploads_base = engine.upload_count();
-    let mut server = oftv2::serve::Server::new(&engine, base, max_batch);
+    let mut scfg = oftv2::serve::ServeConfig::new(max_batch);
+    scfg.max_queue = max_queue;
+    scfg.kv = kv_mode;
+    scfg.block_tokens = block_tokens;
+    scfg.max_resident = if max_resident == 0 { None } else { Some(max_resident) };
+    let mut server = oftv2::serve::Server::with_config(&engine, base, scfg);
     let mut names = Vec::new();
     for (i, (tag, man)) in tags.iter().zip(manifests.iter()).enumerate() {
         let name = if names.iter().any(|n: &String| n == tag) {
@@ -300,14 +319,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         dims.seq_len,
     );
     let examples = loader.eval_examples().to_vec();
+    let tok = loader.tokenizer();
+    let mut responses = Vec::new();
+    let drain_streamed = |server: &mut oftv2::serve::Server<'_>| {
+        if stream {
+            for ev in server.take_events() {
+                let end = if ev.last { " <end>" } else { "" };
+                println!(
+                    "  stream #{:<3} [{}] tok[{}] = {}{end}",
+                    ev.request_id,
+                    ev.adapter,
+                    ev.index,
+                    tok.decode(&[ev.token]).trim()
+                );
+            }
+        }
+    };
     for r in 0..requests {
         let adapter = &names[r % names.len()];
         let ex = &examples[r % examples.len()];
-        server.submit(adapter, loader.encode_prompt(&ex.prompt), max_new)?;
+        let prompt = loader.encode_prompt(&ex.prompt);
+        loop {
+            use oftv2::serve::{RejectReason, Submission};
+            match server.try_submit(adapter, prompt.clone(), max_new) {
+                Submission::Accepted { .. } => break,
+                Submission::Rejected(RejectReason::QueueFull { .. }) => {
+                    // Backpressure: run one scheduler step to free a
+                    // queue slot, then retry the submission.
+                    responses.extend(server.run_step()?);
+                    drain_streamed(&mut server);
+                }
+                Submission::Rejected(r) => bail!("request rejected: {r}"),
+            }
+        }
     }
-    let responses = server.run_until_idle()?;
+    while server.queued() > 0 || server.active() > 0 {
+        responses.extend(server.run_step()?);
+        drain_streamed(&mut server);
+    }
 
-    let tok = loader.tokenizer();
     for resp in responses.iter().take(4) {
         println!(
             "#{:<3} [{}] {:>2} tokens in {:>7.1} ms: {}",
@@ -350,6 +400,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         m.tokens_per_sec(),
         m.peak_active
     );
+    println!(
+        "admission: {} rejected (queue full, limit {}), {} truncated request(s) \
+         ({} prompt tokens cut at seq_len)",
+        m.rejected_queue_full, max_queue, m.truncated_requests, m.truncated_tokens
+    );
+    println!(
+        "adapter paging: {} page-ins, {} evictions, peak {} resident (cap {})",
+        m.adapter_page_ins,
+        m.adapter_evictions,
+        m.peak_resident,
+        if max_resident == 0 { "none".to_string() } else { max_resident.to_string() }
+    );
+    match server.kv_mode() {
+        oftv2::serve::KvMode::Paged => println!(
+            "kv pool: {} blocks x {} tokens, peak {} in use, {} allocs, \
+             {:.2} MiB slab high-water",
+            m.kv.capacity_blocks,
+            m.kv.block_tokens,
+            m.kv.peak_in_use,
+            m.kv.total_allocs,
+            m.kv.slab_bytes(dims.n_layers, dims.d_model) as f64 / (1024.0 * 1024.0)
+        ),
+        oftv2::serve::KvMode::Contiguous => println!(
+            "kv: contiguous per-session caches ({} x seq_len {} worst case)",
+            max_batch, dims.seq_len
+        ),
+    }
     Ok(())
 }
 

@@ -278,6 +278,102 @@ pub fn finetune_gib(spec: &ModelSpec, method: Method, precision: Precision, shap
     finetune_memory(spec, method, precision, shape).total_gib()
 }
 
+/// KV residency of the serving path (the analytic mirror of
+/// [`crate::serve::KvMode`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPricing {
+    /// One contiguous seq-length cache per batch slot, paid whether the
+    /// slot is live or not — the worst case the contiguous scheduler
+    /// always reserves.
+    Contiguous,
+    /// Block-pool slab: only blocks actually materialized are paid
+    /// (`KvPoolStats::slab_blocks` is the measured counterpart).
+    Paged { block_tokens: usize, blocks: usize },
+}
+
+/// Multi-tenant serving-shape knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeShape {
+    pub max_batch: usize,
+    pub seq: usize,
+    /// KV element bytes (bf16 inference default).
+    pub kv_bytes: f64,
+    /// Decoders simultaneously resident under the adapter pager's cap —
+    /// attached-but-evicted tenants cost only their (negligible on GPU)
+    /// host-side trainables.
+    pub resident_adapters: usize,
+    pub kv: KvPricing,
+}
+
+impl Default for ServeShape {
+    fn default() -> Self {
+        ServeShape {
+            max_batch: 8,
+            seq: 2048,
+            kv_bytes: 2.0,
+            resident_adapters: 1,
+            kv: KvPricing::Contiguous,
+        }
+    }
+}
+
+/// Byte breakdown of one serving configuration: no gradients, no
+/// optimizer state, no activation tape — the residency is the frozen
+/// base + resident adapter weights + KV.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBreakdown {
+    pub base_weights: f64,
+    /// Resolved weights of the resident adapters (evicted tenants pay
+    /// nothing here).
+    pub adapters: f64,
+    pub kv: f64,
+    pub overhead: f64,
+}
+
+impl ServeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.base_weights + self.adapters + self.kv + self.overhead
+    }
+
+    pub fn total_gib(&self) -> f64 {
+        self.total() / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Estimate multi-tenant serving memory for (model, method, precision,
+/// shape). The base is priced at inference residency (fused kernels
+/// read the packs; no dequantized copy), each resident adapter at its
+/// bf16 resolved weights, and KV per [`KvPricing`] — the term paged
+/// serving turns from `max_batch * seq` worst case into slab occupancy.
+pub fn serving_memory(
+    spec: &ModelSpec,
+    method: Method,
+    precision: Precision,
+    shape: ServeShape,
+) -> ServeBreakdown {
+    let other_params = (spec.total_params() - spec.linear_params()) as f64;
+    let base_weights =
+        spec.linear_params() as f64 * precision.bytes_per_param() + other_params * 2.0;
+    let n_adapter = count(spec, method.kind()) as f64;
+    let adapters = shape.resident_adapters as f64 * n_adapter * 2.0;
+    let kv_row = spec.n_layers as f64 * 2.0 * spec.d_model as f64 * shape.kv_bytes;
+    let kv = match shape.kv {
+        KvPricing::Contiguous => (shape.max_batch * shape.seq) as f64 * kv_row,
+        KvPricing::Paged { block_tokens, blocks } => (blocks * block_tokens) as f64 * kv_row,
+    };
+    ServeBreakdown {
+        base_weights,
+        adapters,
+        kv,
+        overhead: FRAMEWORK_OVERHEAD,
+    }
+}
+
+/// Convenience: serving total GiB.
+pub fn serving_gib(spec: &ModelSpec, method: Method, precision: Precision, shape: ServeShape) -> f64 {
+    serving_memory(spec, method, precision, shape).total_gib()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +532,76 @@ mod tests {
             TrainShape { residency: BaseResidency::DequantF32, ..shape_7b() },
         );
         assert_eq!(bf_p, bf_d);
+    }
+
+    #[test]
+    fn paged_kv_undercuts_contiguous_at_partial_occupancy() {
+        // The block pool only pays for materialized blocks; the
+        // contiguous path pays max_batch full sequences up front. At 25%
+        // occupancy (typical: most sequences finish at EOS well short of
+        // seq_len) the KV term shrinks 4x, and at worst-case occupancy
+        // the two layouts price identically.
+        let spec = qwen("7b");
+        let m = Method::oft_input_centric(32);
+        let base = ServeShape { max_batch: 8, seq: 2048, ..ServeShape::default() };
+        let contig = serving_memory(&spec, m, Precision::Nf4, base);
+        let bt = 16usize;
+        let worst_blocks = 8 * 2048usize.div_ceil(bt);
+        let paged_full = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape { kv: KvPricing::Paged { block_tokens: bt, blocks: worst_blocks }, ..base },
+        );
+        let paged_quarter = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape {
+                kv: KvPricing::Paged { block_tokens: bt, blocks: worst_blocks / 4 },
+                ..base
+            },
+        );
+        assert!((paged_full.kv - contig.kv).abs() < 1.0, "worst case must match contiguous");
+        assert!(
+            (paged_quarter.kv - contig.kv / 4.0).abs() < 1.0,
+            "paged {} vs contiguous/4 {}",
+            paged_quarter.kv,
+            contig.kv / 4.0
+        );
+        assert!(paged_quarter.total() < contig.total());
+        // KV is a real term at this shape: batch 8 x 2048 bf16 KV on 7B.
+        assert!(contig.kv / GIB > 1.0, "{}", contig.kv / GIB);
+    }
+
+    #[test]
+    fn serving_is_inference_priced() {
+        // Serving drops every training term (grads, optimizer, tape):
+        // the non-KV residency is just base + resident adapters +
+        // overhead, and 100 resident OFTv2 tenants still cost less than
+        // the one base they share — the multi-tenant economics the
+        // server exists for.
+        let spec = qwen("7b");
+        let m = Method::oft_input_centric(32);
+        let tune = finetune_memory(&spec, m, Precision::Nf4, TrainShape::default());
+        let serve1 = serving_memory(&spec, m, Precision::Nf4, ServeShape::default());
+        assert!(
+            serve1.total() - serve1.kv
+                < tune.total() - tune.activations - tune.transient,
+            "serving residency minus KV must undercut finetuning minus tape"
+        );
+        let serve100 = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape { resident_adapters: 100, ..ServeShape::default() },
+        );
+        assert!(serve100.adapters > serve1.adapters * 99.0);
+        assert!(serve100.adapters < serve100.base_weights);
+        assert!((serve100.total() - serve100.base_weights - serve100.adapters
+            - serve100.kv - serve100.overhead)
+            .abs()
+            < 1.0);
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::coordinator::manifest::Manifest;
 use self::micro::MicroSpec;
 
 pub use self::layers::CheckpointPolicy;
+pub use self::refmodel::{KvBlockPool, KvPoolStats, SharedKvPool};
 
 /// Training execution options carried alongside the train-step graph:
 /// the gradient-checkpoint policy and the data-parallel worker count.
@@ -387,6 +388,19 @@ pub trait GraphBackend {
 pub trait DecoderBackend {
     /// Start a fresh sequence with an empty KV cache.
     fn begin(&self) -> Result<Box<dyn DecodeSessionBackend>>;
+    /// Start a fresh sequence whose KV rows come from a shared block
+    /// pool instead of a private contiguous cache. Backends without a
+    /// paged path report so instead of silently falling back — the
+    /// caller decides whether contiguous is acceptable.
+    fn begin_paged(&self, _pool: &SharedKvPool) -> Result<Box<dyn DecodeSessionBackend>> {
+        bail!("this backend does not support paged KV decode")
+    }
+    /// (n_layers, d_model) of the KV rows this decoder writes — the
+    /// shape a shared pool must be built with. `None` when the backend
+    /// has no paged path.
+    fn kv_layout(&self) -> Option<(usize, usize)> {
+        None
+    }
     /// Maximum positions a session can consume (the model's seq_len).
     fn max_positions(&self) -> usize;
     fn vocab(&self) -> usize;
@@ -613,6 +627,20 @@ impl Decoder {
         Ok(DecodeSession {
             inner: self.inner.begin()?,
         })
+    }
+
+    /// Start a fresh sequence over a shared KV block pool (see
+    /// [`KvBlockPool`]); errors when the backend has no paged path.
+    pub fn begin_paged(&self, pool: &SharedKvPool) -> Result<DecodeSession> {
+        Ok(DecodeSession {
+            inner: self.inner.begin_paged(pool)?,
+        })
+    }
+
+    /// (n_layers, d_model) a shared KV pool must be built with, or
+    /// `None` when the backend cannot decode paged.
+    pub fn kv_layout(&self) -> Option<(usize, usize)> {
+        self.inner.kv_layout()
     }
 
     /// Maximum positions a session can consume (model seq_len).

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use super::micro::MicroSpec;
-use super::refmodel::{self, DecodeModel, KvCache, RefBundle};
+use super::refmodel::{self, DecodeModel, KvCache, PagedKv, RefBundle, SharedKvPool};
 use super::{
     lit_f32, Buffer, BundleRole, DecodeSessionBackend, DecoderBackend, EngineBackend,
     GraphBackend, TrainOpts, Value,
@@ -102,6 +102,27 @@ impl DecoderBackend for RefDecoder {
         }))
     }
 
+    fn begin_paged(&self, pool: &SharedKvPool) -> Result<Box<dyn DecodeSessionBackend>> {
+        {
+            let p = pool.lock().expect("KV pool poisoned");
+            ensure!(
+                p.matches(self.model.dims()),
+                "KV pool shape does not match this decoder's model"
+            );
+        }
+        Ok(Box::new(RefPagedSession {
+            model: Arc::clone(&self.model),
+            pool: Arc::clone(pool),
+            blocks: Vec::new(),
+            len: 0,
+        }))
+    }
+
+    fn kv_layout(&self) -> Option<(usize, usize)> {
+        let d = self.model.dims();
+        Some((d.n_layers, d.d_model))
+    }
+
     fn max_positions(&self) -> usize {
         self.model.seq_len()
     }
@@ -123,6 +144,47 @@ impl DecodeSessionBackend for RefDecodeSession {
 
     fn position(&self) -> usize {
         self.cache.position()
+    }
+}
+
+/// A decode session whose KV rows live in fixed-size blocks drawn from
+/// a [`SharedKvPool`]. Runs the same `forward_step` arithmetic as the
+/// contiguous [`RefDecodeSession`], so emitted logits are bitwise
+/// identical; only where the rows live differs. Blocks return to the
+/// pool's free list when the session drops.
+struct RefPagedSession {
+    model: Arc<DecodeModel>,
+    pool: SharedKvPool,
+    blocks: Vec<u32>,
+    len: usize,
+}
+
+impl DecodeSessionBackend for RefPagedSession {
+    fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        let mut pool = self.pool.lock().expect("KV pool poisoned");
+        // Grow the block table *before* stepping into a new block so
+        // row writes inside the forward stay infallible.
+        if self.len >= self.blocks.len() * pool.block_tokens() {
+            self.blocks.push(pool.alloc()?);
+        }
+        let mut view = PagedKv::new(&mut pool, &self.blocks);
+        let logits = self.model.forward_step(&mut view, self.len, token)?;
+        self.len += 1;
+        Ok(logits)
+    }
+
+    fn position(&self) -> usize {
+        self.len
+    }
+}
+
+impl Drop for RefPagedSession {
+    fn drop(&mut self) {
+        if let Ok(mut pool) = self.pool.lock() {
+            for &id in &self.blocks {
+                pool.release(id);
+            }
+        }
     }
 }
 

@@ -567,18 +567,271 @@ struct DecLayer {
     down: Box<dyn DecodeApply>,
 }
 
-/// Per-sequence KV cache: one (seq_len, d_model) key and value plane
-/// per layer, filled left to right.
+/// Row-level access to one sequence's KV storage during incremental
+/// decode. Two implementations exist: the contiguous per-session
+/// [`KvCache`] (the original path, kept as the bitwise oracle the way
+/// `dequantize()` backs `tensor::fused`) and the paged [`PagedKv`]
+/// view over a shared [`KvBlockPool`]. `forward_step` is generic over
+/// this trait, so both storage layouts run the *same* attention
+/// arithmetic in the same order — token streams match bitwise.
+pub trait KvStore {
+    /// Store the freshly computed K/V rows of layer `li` at `pos`
+    /// (each `d_model` wide). `pos` grows by one per step; the backing
+    /// row must already be allocated.
+    fn write_row(&mut self, li: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// K row of layer `li` at position `t` (`t` ≤ the last written pos).
+    fn k_row(&self, li: usize, t: usize) -> &[f32];
+    /// V row of layer `li` at position `t`.
+    fn v_row(&self, li: usize, t: usize) -> &[f32];
+}
+
+/// Per-sequence contiguous KV cache: one (seq_len, d_model) key and
+/// value plane per layer, filled left to right — allocated at full
+/// seq_len up front, which is exactly the per-session growth the
+/// paged pool eliminates.
 pub struct KvCache {
     /// Interleaved per layer: k then v, each seq_len * d_model.
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    d_model: usize,
     len: usize,
 }
 
 impl KvCache {
     pub fn position(&self) -> usize {
         self.len
+    }
+}
+
+impl KvStore for KvCache {
+    fn write_row(&mut self, li: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let d = self.d_model;
+        self.k[li][pos * d..(pos + 1) * d].copy_from_slice(k);
+        self.v[li][pos * d..(pos + 1) * d].copy_from_slice(v);
+    }
+
+    fn k_row(&self, li: usize, t: usize) -> &[f32] {
+        let d = self.d_model;
+        &self.k[li][t * d..(t + 1) * d]
+    }
+
+    fn v_row(&self, li: usize, t: usize) -> &[f32] {
+        let d = self.d_model;
+        &self.v[li][t * d..(t + 1) * d]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: fixed-size blocks from a shared free-list pool
+// ---------------------------------------------------------------------------
+
+/// A shared handle to one [`KvBlockPool`] — every paged decode session
+/// of every adapter over one base draws blocks from the same pool.
+pub type SharedKvPool = std::sync::Arc<std::sync::Mutex<KvBlockPool>>;
+
+/// Occupancy counters of a [`KvBlockPool`] (serving metrics + the
+/// bounded-block-count assertions in tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    pub block_tokens: usize,
+    /// Hard capacity in blocks; `alloc` fails beyond it.
+    pub capacity_blocks: usize,
+    /// Blocks ever materialized in the slab (high-water mark of real
+    /// memory; recycled blocks never grow it).
+    pub slab_blocks: usize,
+    pub in_use: usize,
+    pub peak_in_use: usize,
+    /// Total `alloc` calls served (block churn across sessions).
+    pub total_allocs: u64,
+}
+
+impl KvPoolStats {
+    /// Bytes of KV slab actually materialized.
+    pub fn slab_bytes(&self, n_layers: usize, d_model: usize) -> u64 {
+        (self.slab_blocks * n_layers * 2 * self.block_tokens * d_model * 4) as u64
+    }
+}
+
+/// Fixed-size KV block allocator shared across all decode sessions:
+/// each block holds `block_tokens` positions of K and V rows for every
+/// layer. Blocks are handed out from a free list and recycled when a
+/// session ends, so total KV memory is bounded by `max_blocks` however
+/// many sequences come and go — no per-session contiguous seq_len
+/// planes. Reused blocks are *not* zeroed: a session only ever reads
+/// positions it has itself written.
+pub struct KvBlockPool {
+    n_layers: usize,
+    d_model: usize,
+    block_tokens: usize,
+    max_blocks: usize,
+    /// Block storage, grown on demand up to `max_blocks` blocks.
+    slab: Vec<f32>,
+    /// Recycled block ids, ready for reuse.
+    free: Vec<u32>,
+    in_use: usize,
+    peak_in_use: usize,
+    total_allocs: u64,
+}
+
+impl KvBlockPool {
+    pub fn new(
+        n_layers: usize,
+        d_model: usize,
+        block_tokens: usize,
+        max_blocks: usize,
+    ) -> Result<KvBlockPool> {
+        ensure!(n_layers > 0 && d_model > 0, "degenerate KV shape");
+        ensure!(block_tokens > 0, "KV block_tokens must be positive");
+        ensure!(max_blocks > 0, "KV pool needs at least one block");
+        Ok(KvBlockPool {
+            n_layers,
+            d_model,
+            block_tokens,
+            max_blocks,
+            slab: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            peak_in_use: 0,
+            total_allocs: 0,
+        })
+    }
+
+    /// A pool behind the shared handle decode sessions take.
+    pub fn shared(
+        n_layers: usize,
+        d_model: usize,
+        block_tokens: usize,
+        max_blocks: usize,
+    ) -> Result<SharedKvPool> {
+        Ok(std::sync::Arc::new(std::sync::Mutex::new(KvBlockPool::new(
+            n_layers,
+            d_model,
+            block_tokens,
+            max_blocks,
+        )?)))
+    }
+
+    /// f32 elements per block.
+    fn block_floats(&self) -> usize {
+        self.n_layers * 2 * self.block_tokens * self.d_model
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks still allocatable right now.
+    pub fn available(&self) -> usize {
+        self.max_blocks - self.in_use
+    }
+
+    /// Whether this pool's row shape matches `dims` (a session of a
+    /// mismatched model must not attach).
+    pub fn matches(&self, dims: &ModelDims) -> bool {
+        self.n_layers == dims.n_layers && self.d_model == dims.d_model
+    }
+
+    /// Take one block (recycled if possible, fresh slab growth
+    /// otherwise). Fails when the pool is at capacity — admission
+    /// control is expected to prevent that (see `serve::alloc`).
+    pub fn alloc(&mut self) -> Result<u32> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                let next = self.slab.len() / self.block_floats().max(1);
+                ensure!(
+                    next < self.max_blocks,
+                    "KV block pool exhausted: {} blocks in use of {} \
+                     (block_tokens={})",
+                    self.in_use,
+                    self.max_blocks,
+                    self.block_tokens
+                );
+                self.slab.resize(self.slab.len() + self.block_floats(), 0.0);
+                next as u32
+            }
+        };
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        self.total_allocs += 1;
+        Ok(id)
+    }
+
+    /// Return a block to the free list.
+    pub fn release(&mut self, id: u32) {
+        debug_assert!(
+            (id as usize) < self.slab.len() / self.block_floats().max(1),
+            "released block {id} was never allocated"
+        );
+        self.free.push(id);
+        self.in_use = self.in_use.saturating_sub(1);
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            block_tokens: self.block_tokens,
+            capacity_blocks: self.max_blocks,
+            slab_blocks: self.slab.len() / self.block_floats().max(1),
+            in_use: self.in_use,
+            peak_in_use: self.peak_in_use,
+            total_allocs: self.total_allocs,
+        }
+    }
+
+    /// (k-rows offset, v-rows offset) of layer `li` in block `block`.
+    fn layer_base(&self, block: u32, li: usize) -> (usize, usize) {
+        let base = block as usize * self.block_floats()
+            + li * 2 * self.block_tokens * self.d_model;
+        (base, base + self.block_tokens * self.d_model)
+    }
+}
+
+/// One sequence's view over a [`KvBlockPool`]: its block table plus a
+/// mutable borrow of the pool slab for the duration of one step.
+pub struct PagedKv<'a> {
+    pool: &'a mut KvBlockPool,
+    blocks: &'a [u32],
+}
+
+impl<'a> PagedKv<'a> {
+    /// `blocks` must cover every position touched this step (the
+    /// session allocates the next block *before* stepping into it).
+    pub fn new(pool: &'a mut KvBlockPool, blocks: &'a [u32]) -> PagedKv<'a> {
+        PagedKv { pool, blocks }
+    }
+
+    fn row(&self, li: usize, t: usize, v_plane: bool) -> (usize, usize) {
+        let bt = self.pool.block_tokens;
+        let d = self.pool.d_model;
+        let block = self.blocks[t / bt];
+        let (k_base, v_base) = self.pool.layer_base(block, li);
+        let base = if v_plane { v_base } else { k_base };
+        let start = base + (t % bt) * d;
+        (start, start + d)
+    }
+}
+
+impl KvStore for PagedKv<'_> {
+    fn write_row(&mut self, li: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let (ks, ke) = self.row(li, pos, false);
+        self.pool.slab[ks..ke].copy_from_slice(k);
+        let (vs, ve) = self.row(li, pos, true);
+        self.pool.slab[vs..ve].copy_from_slice(v);
+    }
+
+    fn k_row(&self, li: usize, t: usize) -> &[f32] {
+        let (s, e) = self.row(li, t, false);
+        &self.pool.slab[s..e]
+    }
+
+    fn v_row(&self, li: usize, t: usize) -> &[f32] {
+        let (s, e) = self.row(li, t, true);
+        &self.pool.slab[s..e]
     }
 }
 
@@ -644,12 +897,17 @@ impl DecodeModel {
         self.dims.vocab
     }
 
+    pub fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
     /// Empty cache sized for one sequence.
     pub fn new_cache(&self) -> KvCache {
         let plane = self.dims.seq_len * self.dims.d_model;
         KvCache {
             k: (0..self.dims.n_layers).map(|_| vec![0f32; plane]).collect(),
             v: (0..self.dims.n_layers).map(|_| vec![0f32; plane]).collect(),
+            d_model: self.dims.d_model,
             len: 0,
         }
     }
@@ -661,11 +919,27 @@ impl DecodeModel {
     /// T-token greedy decode is O(T) forwards of one row instead of
     /// the O(T²) whole-sequence re-forwards `logits_last` pays.
     pub fn forward_incremental(&self, cache: &mut KvCache, token: i32) -> Result<Vec<f32>> {
+        let pos = cache.len;
+        let logits = self.forward_step(cache, pos, token)?;
+        cache.len = pos + 1;
+        Ok(logits)
+    }
+
+    /// One decode step against any [`KvStore`] layout. The arithmetic
+    /// and its evaluation order are shared verbatim between contiguous
+    /// and paged storage, so the two produce bitwise-identical logits;
+    /// only row addressing differs. `kv` must have backing rows for
+    /// positions `0..=pos`, with `0..pos` previously written.
+    pub fn forward_step<K: KvStore>(
+        &self,
+        kv: &mut K,
+        pos: usize,
+        token: i32,
+    ) -> Result<Vec<f32>> {
         let d = self.dims.d_model;
         let t = self.dims.seq_len;
         let h = self.dims.n_heads;
         let hd = d / h;
-        let pos = cache.len;
         ensure!(pos < t, "KV cache full: position {pos} of seq_len {t}");
         ensure!(
             token >= 0 && (token as usize) < self.dims.vocab,
@@ -687,8 +961,7 @@ impl DecodeModel {
             let q = layer.wq.apply(&xn1)?;
             let k = layer.wk.apply(&xn1)?;
             let v = layer.wv.apply(&xn1)?;
-            cache.k[li][pos * d..(pos + 1) * d].copy_from_slice(&k.data);
-            cache.v[li][pos * d..(pos + 1) * d].copy_from_slice(&v.data);
+            kv.write_row(li, pos, &k.data, &v.data);
 
             // Single-query causal attention over the cache; loop order
             // mirrors attention_fwd so results match bitwise.
@@ -699,10 +972,10 @@ impl DecodeModel {
                 let mut row = vec![0f32; pos + 1];
                 let mut maxv = f32::NEG_INFINITY;
                 for (t2, rv) in row.iter_mut().enumerate() {
-                    let koff = t2 * d + hh * hd;
+                    let krow = kv.k_row(li, t2);
                     let mut acc = 0f32;
                     for c in 0..hd {
-                        acc += q.data[qoff + c] * cache.k[li][koff + c];
+                        acc += q.data[qoff + c] * krow[hh * hd + c];
                     }
                     *rv = acc * scale;
                     maxv = maxv.max(*rv);
@@ -714,9 +987,9 @@ impl DecodeModel {
                 }
                 for (t2, rv) in row.iter().enumerate() {
                     let a = rv / sum;
-                    let voff = t2 * d + hh * hd;
+                    let vrow = kv.v_row(li, t2);
                     for c in 0..hd {
-                        o.data[qoff + c] += a * cache.v[li][voff + c];
+                        o.data[qoff + c] += a * vrow[hh * hd + c];
                     }
                 }
             }
@@ -730,7 +1003,6 @@ impl DecodeModel {
             x = x_mid.add(&ydown)?;
         }
 
-        cache.len = pos + 1;
         let (xf, _) = rmsnorm_fwd(&x, &self.final_norm);
         let logits = xf.matmul(&self.lm_head)?;
         Ok(logits.data)
@@ -1045,6 +1317,82 @@ mod tests {
                 "{tag}: incremental logits diverged from logits_last"
             );
         }
+    }
+
+    #[test]
+    fn paged_kv_matches_contiguous_cache_bitwise() {
+        // The paged block layout must be invisible to the arithmetic:
+        // stepping through blocks of a shared pool yields the exact
+        // logits of the per-session contiguous cache, even with a
+        // deliberately awkward block size and dirty recycled blocks.
+        for tag in ["tiny_oft_v2", "tiny_lora", "tiny_boft"] {
+            let bu = bundle(tag);
+            let tr = random_values(&bu.trainable, 0.05, 21);
+            let fixed: Vec<Value> = bu
+                .frozen
+                .iter()
+                .map(|s| {
+                    let t = crate::coordinator::state::init_param(s, 3, None).unwrap();
+                    lit_f32(&s.shape, &t.data).unwrap()
+                })
+                .collect();
+            let tr_refs: Vec<&Value> = tr.iter().collect();
+            let fixed_refs: Vec<&Value> = fixed.iter().collect();
+            let model = bu.decode_model(&tr_refs, &fixed_refs).unwrap();
+
+            let mut pool =
+                KvBlockPool::new(bu.dims.n_layers, bu.dims.d_model, 3, 8).unwrap();
+            // Dirty a block and recycle it: sessions must never read
+            // positions they did not write.
+            let dirty = pool.alloc().unwrap();
+            for x in pool.slab.iter_mut() {
+                *x = f32::NAN;
+            }
+            pool.release(dirty);
+
+            let mut cache = model.new_cache();
+            let mut blocks: Vec<u32> = Vec::new();
+            let toks = [1i32, 7, 3, 9, 2, 5, 4];
+            for (pos, &tk) in toks.iter().enumerate() {
+                let contiguous = model.forward_incremental(&mut cache, tk).unwrap();
+                if pos >= blocks.len() * pool.block_tokens() {
+                    blocks.push(pool.alloc().unwrap());
+                }
+                let mut view = PagedKv::new(&mut pool, &blocks);
+                let paged = model.forward_step(&mut view, pos, tk).unwrap();
+                assert_eq!(contiguous, paged, "{tag}: paged logits diverged at {pos}");
+            }
+            assert_eq!(blocks.len(), 3, "7 tokens over block_tokens=3");
+            for id in blocks {
+                pool.release(id);
+            }
+            assert_eq!(pool.stats().in_use, 0);
+        }
+    }
+
+    #[test]
+    fn kv_pool_bounds_blocks_and_recycles_the_free_list() {
+        let mut pool = KvBlockPool::new(2, 4, 4, 2).unwrap();
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.available(), 0);
+        let err = pool.alloc().unwrap_err().to_string();
+        assert!(err.contains("exhausted"), "want exhaustion error, got: {err}");
+        pool.release(a);
+        // The freed block is recycled — the slab never grows past the
+        // cap however many sessions come and go.
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a);
+        pool.release(b);
+        pool.release(c);
+        let s = pool.stats();
+        assert_eq!(s.slab_blocks, 2);
+        assert_eq!(s.in_use, 0);
+        assert_eq!(s.peak_in_use, 2);
+        assert_eq!(s.total_allocs, 3);
+        assert_eq!(pool.blocks_for(0), 0);
+        assert_eq!(pool.blocks_for(4), 1);
+        assert_eq!(pool.blocks_for(5), 2);
     }
 
     #[test]

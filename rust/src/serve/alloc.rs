@@ -1,0 +1,230 @@
+//! Resource allocation for the serving loop: the shared KV block
+//! budget (admission-time reservations over a [`KvBlockPool`]) and LRU
+//! paging of adapter decoders under a residency cap.
+//!
+//! Reservations are worst-case: a request is admitted only when the
+//! pool can cover `ceil(min(prompt + max_new, seq_len) / block_tokens)`
+//! blocks on top of every other active sequence's reservation, so the
+//! lazy per-block allocation inside a paged session can never fail
+//! mid-decode. Most sequences finish early (EOS) and return their
+//! blocks without ever drawing the full reservation.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::manifest::{Manifest, ModelDims};
+use crate::coordinator::state::BaseModel;
+use crate::runtime::{Buffer, Decoder, Engine, KvBlockPool, KvPoolStats, SharedKvPool, Value};
+
+use super::{ServeConfig, Server};
+
+/// One attached adapter: the retained state needed to (re)build its
+/// decoder, plus the LRU bookkeeping that pages the decoder in and out.
+/// The manifest and trainables stay resident always — they are the
+/// small per-tenant state; the decoder holds the merged/resolved
+/// weights and is the thing worth evicting.
+pub(crate) struct Adapter {
+    pub(crate) manifest: Manifest,
+    pub(crate) trainables: Vec<Value>,
+    /// `None` while paged out; rebuilt on the next request.
+    pub(crate) decoder: Option<Decoder>,
+    /// LRU clock stamp of the last touch.
+    pub(crate) last_used: u64,
+    /// Active sequences pinning this adapter (never evict while > 0).
+    pub(crate) active_seqs: usize,
+    /// Times the decoder was rebuilt after an eviction.
+    pub(crate) page_ins: u64,
+}
+
+impl Adapter {
+    pub(crate) fn new(manifest: Manifest, trainables: Vec<Value>, decoder: Decoder) -> Adapter {
+        Adapter {
+            manifest,
+            trainables,
+            decoder: Some(decoder),
+            last_used: 0,
+            active_seqs: 0,
+            page_ins: 0,
+        }
+    }
+}
+
+/// LRU clock + residency cap for adapter decoders.
+pub(crate) struct AdapterPager {
+    max_resident: Option<usize>,
+    clock: u64,
+}
+
+impl AdapterPager {
+    pub(crate) fn new(max_resident: Option<usize>) -> AdapterPager {
+        AdapterPager { max_resident, clock: 0 }
+    }
+
+    pub(crate) fn max_resident(&self) -> Option<usize> {
+        self.max_resident
+    }
+
+    pub(crate) fn touch(&mut self, a: &mut Adapter) {
+        self.clock += 1;
+        a.last_used = self.clock;
+    }
+}
+
+/// Resolve an adapter's decoder against the shared base. The base's
+/// buffer/pack caches make this re-runnable: a rebuild after eviction
+/// uploads nothing (`Engine::upload_count()` stays flat).
+pub(crate) fn build_decoder(
+    engine: &Engine,
+    base: &BaseModel,
+    manifest: &Manifest,
+    trainables: &[Value],
+) -> Result<Decoder> {
+    let fixed = base.fixed_for(engine, manifest)?;
+    let tr: Vec<&Value> = trainables.iter().collect();
+    let fixed_refs: Vec<&Buffer> = fixed.iter().map(|a| a.as_ref()).collect();
+    engine.load_decoder(manifest, &tr, &fixed_refs)
+}
+
+/// The server's view of the shared KV pool: capacity, outstanding
+/// admission reservations, and the pool handle sessions decode against.
+pub(crate) struct KvBudget {
+    pool: Option<SharedKvPool>,
+    capacity: usize,
+    block_tokens: usize,
+    reserved: usize,
+    /// Set when the backend reported no paged path — requests fall back
+    /// to contiguous sessions and the budget stops gating admission.
+    demoted: bool,
+}
+
+impl KvBudget {
+    pub(crate) fn new() -> KvBudget {
+        KvBudget {
+            pool: None,
+            capacity: 0,
+            block_tokens: 1,
+            reserved: 0,
+            demoted: false,
+        }
+    }
+
+    pub(crate) fn is_paged(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    pub(crate) fn pool(&self) -> Option<&SharedKvPool> {
+        self.pool.as_ref()
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Build the shared pool on first adapter attach (all adapters
+    /// share one base, hence one KV row shape). A backend without a
+    /// paged path demotes the server to contiguous sessions.
+    pub(crate) fn ensure_pool(
+        &mut self,
+        decoder: &Decoder,
+        dims: &ModelDims,
+        cfg: &ServeConfig,
+    ) -> Result<()> {
+        if self.pool.is_some() || self.demoted {
+            return Ok(());
+        }
+        let Some((n_layers, d_model)) = decoder.kv_layout() else {
+            self.demoted = true;
+            return Ok(());
+        };
+        let per_seq = dims.seq_len.div_ceil(cfg.block_tokens);
+        let capacity = cfg.max_kv_blocks.unwrap_or(cfg.max_batch * per_seq).max(1);
+        self.pool = Some(KvBlockPool::shared(
+            n_layers,
+            d_model,
+            cfg.block_tokens,
+            capacity,
+        )?);
+        self.capacity = capacity;
+        self.block_tokens = cfg.block_tokens;
+        Ok(())
+    }
+
+    /// Worst-case blocks a request needs (0 in contiguous mode).
+    pub(crate) fn blocks_needed(&self, prompt_len: usize, max_new: usize, seq_len: usize) -> usize {
+        if self.pool.is_none() {
+            return 0;
+        }
+        (prompt_len + max_new).min(seq_len).div_ceil(self.block_tokens)
+    }
+
+    pub(crate) fn can_reserve(&self, need: usize) -> bool {
+        self.pool.is_none() || need <= self.capacity - self.reserved
+    }
+
+    pub(crate) fn reserve(&mut self, need: usize) {
+        self.reserved += need;
+    }
+
+    pub(crate) fn release(&mut self, need: usize) {
+        self.reserved = self.reserved.saturating_sub(need);
+    }
+
+    pub(crate) fn stats(&self) -> KvPoolStats {
+        match &self.pool {
+            Some(p) => p.lock().expect("KV pool poisoned").stats(),
+            None => KvPoolStats::default(),
+        }
+    }
+}
+
+impl Server<'_> {
+    /// Page `name`'s decoder back in if it was evicted, stamp its LRU
+    /// clock, and re-enforce the residency cap.
+    pub(crate) fn ensure_resident(&mut self, name: &str) -> Result<()> {
+        let needs_build = self
+            .adapters
+            .get(name)
+            .with_context(|| format!("unknown adapter '{name}'"))?
+            .decoder
+            .is_none();
+        if needs_build {
+            let a = self.adapters.get(name).expect("checked above");
+            let decoder = build_decoder(self.engine, &self.base, &a.manifest, &a.trainables)?;
+            let a = self.adapters.get_mut(name).expect("checked above");
+            a.decoder = Some(decoder);
+            a.page_ins += 1;
+            self.metrics.adapter_page_ins += 1;
+        }
+        self.pager
+            .touch(self.adapters.get_mut(name).expect("checked above"));
+        self.enforce_residency();
+        Ok(())
+    }
+
+    /// Evict least-recently-used decoders until at or under the cap.
+    /// Adapters with active sequences are pinned; if everything
+    /// resident is pinned the cap is temporarily exceeded rather than
+    /// tearing down in-flight sessions.
+    pub(crate) fn enforce_residency(&mut self) {
+        let resident = self.resident_adapters();
+        self.metrics.peak_resident = self.metrics.peak_resident.max(resident);
+        let Some(cap) = self.pager.max_resident() else {
+            return;
+        };
+        let cap = cap.max(1);
+        let mut resident = resident;
+        while resident > cap {
+            let victim = self
+                .adapters
+                .iter()
+                .filter(|(_, a)| a.decoder.is_some() && a.active_seqs == 0)
+                .min_by_key(|(_, a)| a.last_used)
+                .map(|(n, _)| n.clone());
+            let Some(name) = victim else {
+                break;
+            };
+            self.adapters.get_mut(&name).expect("victim exists").decoder = None;
+            self.metrics.adapter_evictions += 1;
+            resident -= 1;
+        }
+    }
+}

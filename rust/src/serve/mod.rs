@@ -3,28 +3,53 @@
 //! The paper's input-centric design leaves the (quantized) base weights
 //! untouched, so one frozen base can serve many adapters at once — the
 //! same property BOFT/HOFT exploit. This module is that runtime: N
-//! named adapters (any mix of the registered PEFT methods) attach to a single
-//! engine-resident base, requests enter a FIFO queue, and a continuous
-//! batching loop interleaves one KV-cached decode step per in-flight
-//! sequence per tick, admitting queued requests as slots free up.
+//! named adapters (any mix of the registered PEFT methods) attach to a
+//! single engine-resident base, requests enter a bounded queue with
+//! reject-with-reason admission control, and a continuous batching loop
+//! interleaves one KV-cached decode step per in-flight sequence per
+//! tick — heterogeneous ticks serve many adapters at once.
+//!
+//! Two resources are paged so the server scales past "everything
+//! resident forever":
+//!
+//! * **KV memory** — sequences draw fixed-size token blocks from one
+//!   shared free-list [`KvBlockPool`] ([`alloc`]) instead of each
+//!   owning a contiguous seq_len cache; total KV is bounded by the pool
+//!   capacity however many sessions come and go, and admission reserves
+//!   worst-case blocks up front so a mid-decode step can never fail.
+//!   The contiguous session stays available as [`KvMode::Contiguous`] —
+//!   the bitwise oracle the paged path is tested against, the way
+//!   `dequantize()` backs `tensor::fused`.
+//! * **Adapter state** — resolved decoders are LRU-paged under a
+//!   residency cap ([`alloc::AdapterPager`]); an evicted adapter's
+//!   decoder is rebuilt on its next request from retained trainables +
+//!   the base's cached buffers, so hot-swap never drops or re-uploads
+//!   the shared base (`Engine::upload_count()` stays flat).
 //!
 //! The loop is deterministic and single-threaded: scheduling policy is
 //! testable without timing races, and per-request / per-adapter
 //! latency + throughput metrics come out of the same code path the
-//! `serve` CLI and the serving bench use.
+//! `serve` CLI and the serving bench use. Incremental output streams as
+//! [`TokenEvent`]s (see [`Server::take_events`]).
+
+mod alloc;
+mod scheduler;
+mod session;
 
 use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::state::{AdapterState, BaseModel};
 use crate::coordinator::Checkpoint;
-use crate::data::tokenizer::EOS;
-use crate::runtime::{Buffer, DecodeSession, Decoder, Engine, Value};
-use crate::util::argmax;
+use crate::runtime::{Engine, KvPoolStats, Value};
 use crate::util::timer::Timer;
+
+use self::alloc::{Adapter, AdapterPager, KvBudget};
+use self::session::Active;
 
 /// One decode request against a named adapter.
 #[derive(Clone, Debug)]
@@ -41,6 +66,10 @@ pub struct Response {
     pub id: u64,
     pub adapter: String,
     pub prompt_len: usize,
+    /// Prompt tokens dropped at admission because the prompt exceeded
+    /// the model's seq_len (0 = nothing was cut). Callers must check
+    /// this — the decode ran against a shortened prompt.
+    pub truncated_tokens: usize,
     pub tokens: Vec<i32>,
     /// Seconds spent waiting in the queue before admission.
     pub queued_secs: f64,
@@ -48,6 +77,90 @@ pub struct Response {
     pub ttft_secs: f64,
     /// Submit → completion.
     pub latency_secs: f64,
+}
+
+/// Why `try_submit` turned a request away at the door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at capacity; retry after draining.
+    QueueFull { limit: usize },
+    UnknownAdapter { name: String },
+    EmptyPrompt,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull { limit } => {
+                write!(f, "queue full ({limit} requests)")
+            }
+            RejectReason::UnknownAdapter { name } => {
+                write!(f, "unknown adapter '{name}'")
+            }
+            RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+        }
+    }
+}
+
+/// Outcome of [`Server::try_submit`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Submission {
+    Accepted { id: u64 },
+    Rejected(RejectReason),
+}
+
+/// One incrementally streamed token (drain via [`Server::take_events`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub request_id: u64,
+    pub adapter: String,
+    pub token: i32,
+    /// 0-based index within the request's generated stream.
+    pub index: usize,
+    /// Set on the final token of the request.
+    pub last: bool,
+}
+
+/// Where sequences keep their KV rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMode {
+    /// Fixed-size blocks from the shared free-list pool (the default).
+    Paged,
+    /// One private contiguous seq_len cache per session — the PR-2
+    /// path, kept as the bitwise oracle for the paged scheduler.
+    Contiguous,
+}
+
+/// Serving policy knobs (see [`Server::with_config`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Maximum simultaneously active sequences.
+    pub max_batch: usize,
+    /// Bounded queue depth; submissions beyond it are rejected.
+    pub max_queue: usize,
+    pub kv: KvMode,
+    /// Tokens per KV block (paged mode).
+    pub block_tokens: usize,
+    /// KV pool capacity in blocks. `None` sizes it for `max_batch`
+    /// full-length sequences — the same worst case the contiguous
+    /// path always pays.
+    pub max_kv_blocks: Option<usize>,
+    /// Resident-decoder cap for adapter LRU paging; `None` = all
+    /// attached adapters stay resident (the pre-paging behavior).
+    pub max_resident: Option<usize>,
+}
+
+impl ServeConfig {
+    pub fn new(max_batch: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch: max_batch.max(1),
+            max_queue: 1024,
+            kv: KvMode::Paged,
+            block_tokens: 16,
+            max_kv_blocks: None,
+            max_resident: None,
+        }
+    }
 }
 
 /// Aggregate counters for one adapter.
@@ -94,10 +207,24 @@ pub struct ServeMetrics {
     pub per_adapter: BTreeMap<String, AdapterMetrics>,
     pub total_requests: u64,
     pub total_tokens: u64,
-    /// Wall-clock seconds inside `run_until_idle`.
+    /// Wall-clock seconds inside `run_until_idle` / `run_step`.
     pub wall_secs: f64,
     /// Highest number of simultaneously active sequences observed.
     pub peak_active: usize,
+    /// Submissions turned away because the queue was at capacity.
+    pub rejected_queue_full: u64,
+    /// Requests whose prompt was cut to seq_len at admission.
+    pub truncated_requests: u64,
+    /// Total prompt tokens dropped by truncation.
+    pub truncated_tokens: u64,
+    /// Decoders rebuilt after an LRU eviction (adapter page-ins).
+    pub adapter_page_ins: u64,
+    /// Decoders dropped by the residency cap.
+    pub adapter_evictions: u64,
+    /// Highest simultaneously resident decoder count observed.
+    pub peak_resident: usize,
+    /// KV block-pool occupancy (all-zero in contiguous mode).
+    pub kv: KvPoolStats,
 }
 
 impl ServeMetrics {
@@ -111,45 +238,43 @@ impl ServeMetrics {
     }
 }
 
-struct Adapter {
-    manifest: Manifest,
-    decoder: Decoder,
-}
-
-struct Active {
-    req: Request,
-    sess: DecodeSession,
-    seq_len: usize,
-    total_len: usize,
-    generated: Vec<i32>,
-    last_logits: Vec<f32>,
-    queued_secs: f64,
-    ttft_secs: Option<f64>,
-    submitted: Timer,
-}
-
 /// A batched multi-tenant decode server over one shared base.
 pub struct Server<'e> {
     engine: &'e Engine,
     base: Arc<BaseModel>,
+    cfg: ServeConfig,
     adapters: BTreeMap<String, Adapter>,
+    pager: AdapterPager,
+    kv: KvBudget,
     queue: VecDeque<(Request, Timer)>,
     active: Vec<Active>,
-    /// Maximum simultaneously active sequences.
-    pub max_batch: usize,
+    events: Vec<TokenEvent>,
     next_id: u64,
     metrics: ServeMetrics,
 }
 
 impl<'e> Server<'e> {
+    /// A server with default policy: paged KV, bounded queue, no
+    /// residency cap.
     pub fn new(engine: &'e Engine, base: Arc<BaseModel>, max_batch: usize) -> Server<'e> {
+        Server::with_config(engine, base, ServeConfig::new(max_batch))
+    }
+
+    pub fn with_config(engine: &'e Engine, base: Arc<BaseModel>, cfg: ServeConfig) -> Server<'e> {
+        let mut cfg = cfg;
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.max_queue = cfg.max_queue.max(1);
+        cfg.block_tokens = cfg.block_tokens.max(1);
         Server {
             engine,
             base,
+            cfg,
             adapters: BTreeMap::new(),
+            pager: AdapterPager::new(cfg.max_resident),
+            kv: KvBudget::new(),
             queue: VecDeque::new(),
             active: Vec::new(),
-            max_batch: max_batch.max(1),
+            events: Vec::new(),
             next_id: 0,
             metrics: ServeMetrics::default(),
         }
@@ -159,9 +284,25 @@ impl<'e> Server<'e> {
         Arc::clone(&self.base)
     }
 
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The KV mode requests actually decode under (a backend without a
+    /// paged path demotes [`KvMode::Paged`] to contiguous at first
+    /// attach).
+    pub fn kv_mode(&self) -> KvMode {
+        if self.kv.is_paged() {
+            KvMode::Paged
+        } else {
+            KvMode::Contiguous
+        }
+    }
+
     /// Attach a named adapter with explicit trainable values (e.g. a
     /// finetuned trainer's weights). Fixed inputs come from the shared
-    /// base — no base re-upload.
+    /// base — no base re-upload — and the trainables are retained so an
+    /// LRU-evicted decoder can be rebuilt without the caller.
     pub fn add_adapter(&mut self, name: &str, manifest: Manifest, trainables: &[Value]) -> Result<()> {
         ensure!(
             !self.adapters.contains_key(name),
@@ -173,17 +314,19 @@ impl<'e> Server<'e> {
             trainables.len(),
             manifest.trainable.len()
         );
-        let fixed = self.base.fixed_for(self.engine, &manifest)?;
-        let tr: Vec<&Value> = trainables.iter().collect();
-        let fixed_refs: Vec<&Buffer> = fixed.iter().map(|a| a.as_ref()).collect();
-        let decoder = self.engine.load_decoder(&manifest, &tr, &fixed_refs)?;
+        let decoder = alloc::build_decoder(self.engine, &self.base, &manifest, trainables)?;
+        if self.cfg.kv == KvMode::Paged {
+            self.kv.ensure_pool(&decoder, &manifest.model, &self.cfg)?;
+        }
         self.metrics
             .per_adapter
             .insert(name.to_string(), AdapterMetrics::default());
         self.adapters.insert(
             name.to_string(),
-            Adapter { manifest, decoder },
+            Adapter::new(manifest, trainables.to_vec(), decoder),
         );
+        self.pager.touch(self.adapters.get_mut(name).expect("just inserted"));
+        self.enforce_residency();
         Ok(())
     }
 
@@ -210,6 +353,12 @@ impl<'e> Server<'e> {
         self.adapters.keys().cloned().collect()
     }
 
+    /// Adapters whose decoder is currently resident (LRU paging keeps
+    /// this at or under the configured cap once nothing pins them).
+    pub fn resident_adapters(&self) -> usize {
+        self.adapters.values().filter(|a| a.decoder.is_some()).count()
+    }
+
     /// Vocab of a registered adapter (for prompt construction).
     pub fn vocab_of(&self, adapter: &str) -> Result<usize> {
         Ok(self
@@ -221,26 +370,13 @@ impl<'e> Server<'e> {
             .vocab)
     }
 
-    /// Enqueue a request (FIFO); returns its id.
+    /// Enqueue a request; turns rejections into errors (see
+    /// [`Server::try_submit`] for the non-erroring form).
     pub fn submit(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Result<u64> {
-        ensure!(
-            self.adapters.contains_key(adapter),
-            "unknown adapter '{adapter}' (registered: {})",
-            self.adapter_names().join(", ")
-        );
-        ensure!(!prompt.is_empty(), "empty prompt");
-        let id = self.next_id;
-        self.next_id += 1;
-        self.queue.push_back((
-            Request {
-                id,
-                adapter: adapter.to_string(),
-                prompt,
-                max_new,
-            },
-            Timer::start(),
-        ));
-        Ok(id)
+        match self.try_submit(adapter, prompt, max_new) {
+            Submission::Accepted { id } => Ok(id),
+            Submission::Rejected(r) => Err(anyhow!("request rejected: {r}")),
+        }
     }
 
     pub fn queued(&self) -> usize {
@@ -255,154 +391,10 @@ impl<'e> Server<'e> {
         &self.metrics
     }
 
-    /// Admit queued requests into free batch slots (FIFO), prefilling
-    /// each prompt through a fresh KV session. Requests that can emit
-    /// nothing (`max_new == 0`, or a prompt already filling seq_len)
-    /// complete immediately with no tokens — the same empty result
-    /// `Trainer::decode_greedy` returns for them.
-    fn admit(&mut self) -> Result<Vec<Response>> {
-        let mut done = Vec::new();
-        while self.active.len() < self.max_batch {
-            let Some((req, submitted)) = self.queue.pop_front() else {
-                break;
-            };
-            let queued_secs = submitted.secs();
-            let adapter = self
-                .adapters
-                .get(&req.adapter)
-                .with_context(|| format!("unknown adapter '{}'", req.adapter))?;
-            let seq_len = adapter.decoder.max_positions();
-            let mut prompt = req.prompt.clone();
-            prompt.truncate(seq_len);
-            if req.max_new == 0 || prompt.len() >= seq_len {
-                let latency = submitted.secs();
-                let am = self
-                    .metrics
-                    .per_adapter
-                    .get_mut(&req.adapter)
-                    .expect("metrics registered with adapter");
-                am.requests += 1;
-                am.sum_latency_secs += latency;
-                am.sum_ttft_secs += latency;
-                self.metrics.total_requests += 1;
-                done.push(Response {
-                    id: req.id,
-                    adapter: req.adapter,
-                    prompt_len: prompt.len(),
-                    tokens: Vec::new(),
-                    queued_secs,
-                    ttft_secs: latency,
-                    latency_secs: latency,
-                });
-                continue;
-            }
-            let mut sess = adapter.decoder.begin()?;
-            let t0 = Timer::start();
-            let mut last_logits = Vec::new();
-            for &id in &prompt {
-                last_logits = sess.step(id)?;
-            }
-            let prefill_secs = t0.secs();
-            self.metrics
-                .per_adapter
-                .get_mut(&req.adapter)
-                .expect("metrics registered with adapter")
-                .decode_secs += prefill_secs;
-            let total_len = prompt.len();
-            self.active.push(Active {
-                req,
-                sess,
-                seq_len,
-                total_len,
-                generated: Vec::new(),
-                last_logits,
-                queued_secs,
-                ttft_secs: None,
-                submitted,
-            });
-        }
-        self.metrics.peak_active = self.metrics.peak_active.max(self.active.len());
-        Ok(done)
-    }
-
-    /// One scheduler tick: every active sequence emits one token (and
-    /// steps its KV cache unless it just finished). Returns responses
-    /// for sequences that completed this tick.
-    fn tick(&mut self) -> Result<Vec<Response>> {
-        let mut done = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
-            let a = &mut self.active[i];
-            let adapter_name = a.req.adapter.clone();
-            let next = argmax(&a.last_logits) as i32;
-            a.generated.push(next);
-            a.total_len += 1;
-            if a.ttft_secs.is_none() {
-                a.ttft_secs = Some(a.submitted.secs());
-            }
-            let finished = next == EOS
-                || a.generated.len() >= a.req.max_new
-                || a.total_len >= a.seq_len;
-            let step_secs = if finished {
-                0.0
-            } else {
-                let t0 = Timer::start();
-                a.last_logits = a.sess.step(next)?;
-                t0.secs()
-            };
-            self.metrics.total_tokens += 1;
-            let am = self
-                .metrics
-                .per_adapter
-                .get_mut(&adapter_name)
-                .expect("metrics registered with adapter");
-            am.tokens_out += 1;
-            am.decode_secs += step_secs;
-            if finished {
-                let a = self.active.remove(i);
-                let latency = a.submitted.secs();
-                let am = self
-                    .metrics
-                    .per_adapter
-                    .get_mut(&adapter_name)
-                    .expect("metrics registered with adapter");
-                am.requests += 1;
-                am.sum_latency_secs += latency;
-                am.sum_ttft_secs += a.ttft_secs.unwrap_or(latency);
-                self.metrics.total_requests += 1;
-                done.push(Response {
-                    id: a.req.id,
-                    adapter: a.req.adapter,
-                    prompt_len: a.req.prompt.len().min(a.seq_len),
-                    tokens: a.generated,
-                    queued_secs: a.queued_secs,
-                    ttft_secs: a.ttft_secs.unwrap_or(latency),
-                    latency_secs: latency,
-                });
-                continue; // element removed; same index is the next seq
-            }
-            i += 1;
-        }
-        Ok(done)
-    }
-
-    /// Drain queue + in-flight work to completion; returns responses in
-    /// completion order.
-    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
-        if self.adapters.is_empty() {
-            bail!("no adapters registered");
-        }
-        let wall = Timer::start();
-        let mut responses = Vec::new();
-        loop {
-            responses.extend(self.admit()?);
-            if self.active.is_empty() {
-                break;
-            }
-            responses.extend(self.tick()?);
-        }
-        self.metrics.wall_secs += wall.secs();
-        Ok(responses)
+    /// Drain the tokens streamed since the last call (emitted in decode
+    /// order — the incremental output a gateway would flush to clients).
+    pub fn take_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.events)
     }
 }
 
@@ -429,9 +421,39 @@ mod tests {
         let base = BaseModel::for_preset(&engine, "tiny", 7, None).unwrap();
         let mut srv = Server::new(&engine, base, 4);
         assert!(srv.submit("ghost", vec![1], 4).is_err());
+        assert_eq!(
+            srv.try_submit("ghost", vec![1], 4),
+            Submission::Rejected(RejectReason::UnknownAdapter { name: "ghost".into() })
+        );
         assert!(srv.run_until_idle().is_err(), "no adapters registered");
     }
 
-    // End-to-end serving tests (base sharing, KV-vs-reforward equality,
-    // continuous batching) live in rust/tests/serving.rs.
+    #[test]
+    fn bounded_queue_rejects_with_reason() {
+        let engine = Engine::reference();
+        let base = BaseModel::for_preset(&engine, "tiny", 7, None).unwrap();
+        let mut cfg = ServeConfig::new(2);
+        cfg.max_queue = 2;
+        let mut srv = Server::with_config(&engine, base, cfg);
+        srv.add_adapter_init("a", Manifest::builtin("tiny_oft_v2").unwrap(), 7, None)
+            .unwrap();
+        assert!(matches!(srv.try_submit("a", vec![1], 2), Submission::Accepted { .. }));
+        assert!(matches!(srv.try_submit("a", vec![2], 2), Submission::Accepted { .. }));
+        let r = srv.try_submit("a", vec![3], 2);
+        assert_eq!(r, Submission::Rejected(RejectReason::QueueFull { limit: 2 }));
+        assert_eq!(
+            srv.try_submit("a", vec![], 2),
+            Submission::Rejected(RejectReason::EmptyPrompt)
+        );
+        assert_eq!(srv.metrics().rejected_queue_full, 1);
+        // The erroring form reports the same reason.
+        let err = srv.submit("a", vec![4], 2).unwrap_err().to_string();
+        assert!(err.contains("queue full"), "got: {err}");
+        srv.run_until_idle().unwrap();
+        assert!(matches!(srv.try_submit("a", vec![5], 2), Submission::Accepted { .. }));
+    }
+
+    // End-to-end serving tests (base sharing, paged-vs-contiguous
+    // equality, continuous batching, edge cases) live in
+    // rust/tests/serving.rs.
 }

@@ -1,0 +1,257 @@
+//! The continuous-batching scheduler: bounded-queue submission,
+//! reservation-gated admission, and the heterogeneous decode tick that
+//! advances every active sequence (any mix of adapters) one token.
+
+use anyhow::{ensure, Result};
+
+use crate::data::tokenizer::EOS;
+use crate::util::argmax;
+use crate::util::timer::Timer;
+
+use super::session::Active;
+use super::{RejectReason, Request, Response, Server, Submission, TokenEvent};
+
+impl Server<'_> {
+    /// Enqueue a request if the server will take it; rejections carry
+    /// the reason instead of an error (admission control, not failure).
+    pub fn try_submit(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Submission {
+        if !self.adapters.contains_key(adapter) {
+            return Submission::Rejected(RejectReason::UnknownAdapter {
+                name: adapter.to_string(),
+            });
+        }
+        if prompt.is_empty() {
+            return Submission::Rejected(RejectReason::EmptyPrompt);
+        }
+        if self.queue.len() >= self.cfg.max_queue {
+            self.metrics.rejected_queue_full += 1;
+            return Submission::Rejected(RejectReason::QueueFull {
+                limit: self.cfg.max_queue,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            Request {
+                id,
+                adapter: adapter.to_string(),
+                prompt,
+                max_new,
+            },
+            Timer::start(),
+        ));
+        Submission::Accepted { id }
+    }
+
+    /// Admit queued requests into free batch slots, prefilling each
+    /// prompt through a fresh KV session. Admission is FIFO except that
+    /// a request whose worst-case KV reservation doesn't fit yet is
+    /// skipped (no head-of-line blocking on memory) and retried next
+    /// step. Requests that can emit nothing (`max_new == 0`, or a
+    /// prompt already filling seq_len) complete immediately with no
+    /// tokens — the same empty result `Trainer::decode_greedy` returns
+    /// for them.
+    fn admit(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        let mut qi = 0;
+        while self.active.len() < self.cfg.max_batch && qi < self.queue.len() {
+            let (seq_len, prompt_use, orig_len, max_new) = {
+                let (req, _) = &self.queue[qi];
+                let seq_len = self
+                    .adapters
+                    .get(&req.adapter)
+                    .expect("validated at submit; adapters are never detached")
+                    .manifest
+                    .model
+                    .seq_len;
+                (seq_len, req.prompt.len().min(seq_len), req.prompt.len(), req.max_new)
+            };
+            let emits_nothing = max_new == 0 || prompt_use >= seq_len;
+            let need = if emits_nothing {
+                0
+            } else {
+                self.kv.blocks_needed(prompt_use, max_new, seq_len)
+            };
+            if !self.kv.can_reserve(need) {
+                qi += 1;
+                continue;
+            }
+            let (req, submitted) = self.queue.remove(qi).expect("index bounded above");
+            let queued_secs = submitted.secs();
+            let truncated = orig_len - prompt_use;
+            if truncated > 0 {
+                self.metrics.truncated_requests += 1;
+                self.metrics.truncated_tokens += truncated as u64;
+            }
+            if emits_nothing {
+                let latency = submitted.secs();
+                let am = self
+                    .metrics
+                    .per_adapter
+                    .get_mut(&req.adapter)
+                    .expect("metrics registered with adapter");
+                am.requests += 1;
+                am.sum_latency_secs += latency;
+                am.sum_ttft_secs += latency;
+                self.metrics.total_requests += 1;
+                done.push(Response {
+                    id: req.id,
+                    adapter: req.adapter,
+                    prompt_len: prompt_use,
+                    truncated_tokens: truncated,
+                    tokens: Vec::new(),
+                    queued_secs,
+                    ttft_secs: latency,
+                    latency_secs: latency,
+                });
+                continue; // removal shifted the queue; qi already points at the next entry
+            }
+            self.ensure_resident(&req.adapter)?;
+            let mut sess = {
+                let adapter = self
+                    .adapters
+                    .get(&req.adapter)
+                    .expect("validated at submit");
+                let dec = adapter.decoder.as_ref().expect("just paged in");
+                match self.kv.pool() {
+                    Some(pool) => dec.begin_paged(pool)?,
+                    None => dec.begin()?,
+                }
+            };
+            let t0 = Timer::start();
+            let mut last_logits = Vec::new();
+            for &tid in req.prompt.iter().take(prompt_use) {
+                last_logits = sess.step(tid)?;
+            }
+            let prefill_secs = t0.secs();
+            self.metrics
+                .per_adapter
+                .get_mut(&req.adapter)
+                .expect("metrics registered with adapter")
+                .decode_secs += prefill_secs;
+            self.kv.reserve(need);
+            self.adapters
+                .get_mut(&req.adapter)
+                .expect("validated at submit")
+                .active_seqs += 1;
+            self.active.push(Active {
+                req,
+                sess,
+                seq_len,
+                total_len: prompt_use,
+                truncated_tokens: truncated,
+                kv_reserved: need,
+                generated: Vec::new(),
+                last_logits,
+                queued_secs,
+                ttft_secs: None,
+                submitted,
+            });
+        }
+        self.metrics.peak_active = self.metrics.peak_active.max(self.active.len());
+        Ok(done)
+    }
+
+    /// One scheduler tick: every active sequence emits one token (and
+    /// steps its KV cache unless it just finished). Returns responses
+    /// for sequences that completed this tick.
+    fn tick(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let adapter_name = a.req.adapter.clone();
+            let next = argmax(&a.last_logits) as i32;
+            a.generated.push(next);
+            a.total_len += 1;
+            if a.ttft_secs.is_none() {
+                a.ttft_secs = Some(a.submitted.secs());
+            }
+            let finished = next == EOS
+                || a.generated.len() >= a.req.max_new
+                || a.total_len >= a.seq_len;
+            self.events.push(TokenEvent {
+                request_id: a.req.id,
+                adapter: adapter_name.clone(),
+                token: next,
+                index: a.generated.len() - 1,
+                last: finished,
+            });
+            let step_secs = if finished {
+                0.0
+            } else {
+                let t0 = Timer::start();
+                a.last_logits = a.sess.step(next)?;
+                t0.secs()
+            };
+            self.metrics.total_tokens += 1;
+            let am = self
+                .metrics
+                .per_adapter
+                .get_mut(&adapter_name)
+                .expect("metrics registered with adapter");
+            am.tokens_out += 1;
+            am.decode_secs += step_secs;
+            if finished {
+                let a = self.active.remove(i);
+                self.kv.release(a.kv_reserved);
+                self.adapters
+                    .get_mut(&adapter_name)
+                    .expect("adapters are never detached")
+                    .active_seqs -= 1;
+                let resp = a.into_response();
+                let am = self
+                    .metrics
+                    .per_adapter
+                    .get_mut(&adapter_name)
+                    .expect("metrics registered with adapter");
+                am.requests += 1;
+                am.sum_latency_secs += resp.latency_secs;
+                am.sum_ttft_secs += resp.ttft_secs;
+                self.metrics.total_requests += 1;
+                done.push(resp);
+                continue; // element removed; same index is the next seq
+            }
+            i += 1;
+        }
+        Ok(done)
+    }
+
+    /// One admit + decode step — the incremental driver for callers
+    /// that stream tokens (drain [`Server::take_events`] between
+    /// steps). Returns requests that completed during the step.
+    pub fn run_step(&mut self) -> Result<Vec<Response>> {
+        ensure!(!self.adapters.is_empty(), "no adapters registered");
+        let wall = Timer::start();
+        let mut responses = self.admit()?;
+        responses.extend(self.tick()?);
+        self.metrics.wall_secs += wall.secs();
+        self.metrics.kv = self.kv.stats();
+        Ok(responses)
+    }
+
+    /// Drain queue + in-flight work to completion; returns responses in
+    /// completion order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        ensure!(!self.adapters.is_empty(), "no adapters registered");
+        let wall = Timer::start();
+        let mut responses = Vec::new();
+        loop {
+            responses.extend(self.admit()?);
+            if self.active.is_empty() {
+                ensure!(
+                    self.queue.is_empty(),
+                    "{} queued request(s) can never be admitted: worst-case KV \
+                     need exceeds the pool capacity of {} blocks",
+                    self.queue.len(),
+                    self.kv.capacity()
+                );
+                break;
+            }
+            responses.extend(self.tick()?);
+        }
+        self.metrics.wall_secs += wall.secs();
+        self.metrics.kv = self.kv.stats();
+        Ok(responses)
+    }
+}

@@ -1,0 +1,45 @@
+//! In-flight sequence state: one [`Active`] per admitted request, plus
+//! its conversion into the final [`Response`].
+
+use crate::runtime::DecodeSession;
+use crate::util::timer::Timer;
+
+use super::{Request, Response};
+
+/// One admitted request mid-decode. The session owns the KV rows
+/// (paged sessions return their blocks to the pool on drop); the
+/// scheduler owns the reservation bookkeeping via `kv_reserved`.
+pub(crate) struct Active {
+    pub(crate) req: Request,
+    pub(crate) sess: DecodeSession,
+    pub(crate) seq_len: usize,
+    /// Prompt + generated positions consumed so far.
+    pub(crate) total_len: usize,
+    /// Prompt tokens dropped at admission (over seq_len).
+    pub(crate) truncated_tokens: usize,
+    /// Blocks reserved against the KV budget (0 in contiguous mode).
+    pub(crate) kv_reserved: usize,
+    pub(crate) generated: Vec<i32>,
+    pub(crate) last_logits: Vec<f32>,
+    pub(crate) queued_secs: f64,
+    pub(crate) ttft_secs: Option<f64>,
+    pub(crate) submitted: Timer,
+}
+
+impl Active {
+    /// Consume the sequence into its response (the KV session — and
+    /// with it any pool blocks — drops here).
+    pub(crate) fn into_response(self) -> Response {
+        let latency = self.submitted.secs();
+        Response {
+            id: self.req.id,
+            adapter: self.req.adapter,
+            prompt_len: self.req.prompt.len().min(self.seq_len),
+            truncated_tokens: self.truncated_tokens,
+            tokens: self.generated,
+            queued_secs: self.queued_secs,
+            ttft_secs: self.ttft_secs.unwrap_or(latency),
+            latency_secs: latency,
+        }
+    }
+}

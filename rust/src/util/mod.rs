@@ -46,14 +46,25 @@ pub fn human_clock(secs: f64) -> String {
 /// Index of the largest element; ties resolve to the first (the greedy
 /// decode rule — every decode path must share it or emitted tokens
 /// silently diverge between paths).
+///
+/// NaN policy: a NaN is never the argmax. The naive `>` scan is
+/// NaN-poisoned — a NaN at index 0 makes every comparison false, so a
+/// single bad logit would silently decode token 0 forever in
+/// `serve::tick` and `decode_greedy`. NaN entries are skipped
+/// explicitly; an all-NaN or empty slice returns 0 (the caller sees a
+/// deterministic token instead of a panic mid-serve).
 pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if xs[b] >= x => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -74,6 +85,22 @@ mod tests {
         assert_eq!(argmax(&[5.0]), 0);
         // ties resolve to the first
         assert_eq!(argmax(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nan() {
+        // NaN first: must not poison the scan into returning index 0.
+        assert_eq!(argmax(&[f32::NAN, 3.0, 2.0]), 1);
+        // NaN mid-slice: the surrounding finite values still compete.
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[4.0, f32::NAN, 2.0]), 0);
+        // NaN never wins, even against -inf.
+        assert_eq!(argmax(&[f32::NAN, f32::NEG_INFINITY]), 1);
+        // Degenerate inputs return 0 instead of panicking.
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        // Ties still resolve to the first across a NaN gap.
+        assert_eq!(argmax(&[2.0, f32::NAN, 2.0]), 0);
     }
 
     #[test]

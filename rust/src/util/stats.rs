@@ -1,4 +1,11 @@
 //! Summary statistics over measurement samples (bench-harness backbone).
+//!
+//! NaN policy: samples are ordered with [`f64::total_cmp`], so a NaN
+//! sample can never panic the sort (the old `partial_cmp().unwrap()`
+//! crashed the whole bench sweep on one bad timer read). Under total
+//! order a positive NaN sorts *after* `+inf`, so NaNs surface loudly
+//! in `max` (and in high percentiles once they are ≥1% of the sample
+//! set) instead of aborting `BENCH_*.json` emission mid-run.
 
 /// Summary of a sample set (times in seconds, or any unit).
 #[derive(Clone, Debug, PartialEq)]
@@ -10,6 +17,7 @@ pub struct Summary {
     pub max: f64,
     pub stddev: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Summary {
@@ -17,7 +25,7 @@ impl Summary {
         assert!(!samples.is_empty(), "empty sample set");
         let n = samples.len();
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / (n.max(2) - 1) as f64;
@@ -29,6 +37,7 @@ impl Summary {
             max: sorted[n - 1],
             stddev: var.sqrt(),
             p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
         }
     }
 }
@@ -87,6 +96,24 @@ mod tests {
         let s = [0.0, 10.0];
         assert!((percentile(&s, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile(&s, 95.0) - 9.5).abs() < 1e-12);
+        assert!((percentile(&s, 99.0) - 9.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_samples_never_panic_the_summary() {
+        // Regression: one NaN sample used to abort the whole bench run
+        // via `partial_cmp().unwrap()`. Under total order the summary
+        // still computes, and the NaN lands in `max` (sorted last)
+        // while the finite order statistics stay meaningful.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert!(s.max.is_nan(), "NaN must surface in max, got {}", s.max);
+        assert!(s.mean.is_nan());
+        // All-NaN degenerates without panicking either.
+        let all = Summary::of(&[f64::NAN, f64::NAN]);
+        assert!(all.min.is_nan() && all.max.is_nan());
     }
 
     #[test]

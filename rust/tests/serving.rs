@@ -8,8 +8,9 @@ use std::sync::Arc;
 use oftv2::artifacts_root;
 use oftv2::config::RunCfg;
 use oftv2::coordinator::{BaseModel, Manifest, Trainer};
+use oftv2::data::tokenizer::EOS;
 use oftv2::runtime::Engine;
-use oftv2::serve::Server;
+use oftv2::serve::{KvMode, ServeConfig, Server};
 
 fn cfg(tag: &str, steps: usize) -> RunCfg {
     let mut c = RunCfg::default();
@@ -163,6 +164,262 @@ fn serve_batches_across_adapters_and_reports_metrics() {
     assert_eq!(r0.len(), 1);
     assert_eq!(r0[0].id, id0);
     assert!(r0[0].tokens.is_empty());
+}
+
+fn server_with(e: &Engine, base: Arc<BaseModel>, kv: KvMode, max_batch: usize) -> Server<'_> {
+    let mut c = ServeConfig::new(max_batch);
+    c.kv = kv;
+    c.block_tokens = 4; // deliberately awkward: seq_len 48 -> 12 blocks
+    Server::with_config(e, base, c)
+}
+
+/// Submit one request and drain the server; returns its response.
+fn run_one(
+    srv: &mut Server<'_>,
+    adapter: &str,
+    prompt: Vec<i32>,
+    max_new: usize,
+) -> oftv2::serve::Response {
+    let id = srv.submit(adapter, prompt, max_new).unwrap();
+    let rs = srv.run_until_idle().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].id, id);
+    rs[0].clone()
+}
+
+#[test]
+fn paged_serving_matches_fifo_oracle_all_methods() {
+    // The acceptance lock: the paged scheduler (block KV + adapter LRU
+    // hot-swap) must emit token-for-token what the legacy contiguous
+    // FIFO emits, and both must match the solo re-forward oracle — for
+    // every registered method. Hot-swapping adapters must never touch
+    // the shared base (upload_count stays flat).
+    let e = Engine::reference();
+    let seed = 42u64; // RunCfg::default().seed, so solo trainers agree
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let tags = oftv2::adapters::bundle_tags("tiny");
+
+    let mut pcfg = ServeConfig::new(3);
+    pcfg.block_tokens = 4;
+    pcfg.max_resident = Some(2); // force LRU hot-swaps across 9 adapters
+    let mut paged = Server::with_config(&e, Arc::clone(&base), pcfg);
+    let mut contig = server_with(&e, Arc::clone(&base), KvMode::Contiguous, 3);
+    for tag in &tags {
+        paged.add_adapter_init(tag, man(tag), seed, None).unwrap();
+        contig.add_adapter_init(tag, man(tag), seed, None).unwrap();
+    }
+    assert_eq!(paged.kv_mode(), KvMode::Paged);
+    assert_eq!(contig.kv_mode(), KvMode::Contiguous);
+    assert!(
+        paged.resident_adapters() <= 2,
+        "residency cap must evict idle decoders at attach time"
+    );
+
+    let prompts = [vec![1i32, 9, 4], vec![2], vec![1, 3, 5, 7]];
+    let uploads_before_serving = e.upload_count();
+    for tag in &tags {
+        for p in &prompts {
+            paged.submit(tag, p.clone(), 8).unwrap();
+            contig.submit(tag, p.clone(), 8).unwrap();
+        }
+    }
+    let pr = paged.run_until_idle().unwrap();
+    let cr = contig.run_until_idle().unwrap();
+    assert_eq!(pr.len(), tags.len() * prompts.len());
+    assert_eq!(
+        e.upload_count(),
+        uploads_before_serving,
+        "adapter hot-swap must rebuild from cached base buffers, never re-upload"
+    );
+
+    // Paged == contiguous, request by request.
+    for r in &pr {
+        let o = cr.iter().find(|c| c.id == r.id).unwrap();
+        assert_eq!(
+            r.tokens, o.tokens,
+            "{}: paged diverged from the contiguous oracle",
+            r.adapter
+        );
+    }
+    // ...and both == the solo re-forward oracle over the same base.
+    for (ti, tag) in tags.iter().enumerate() {
+        let mut solo =
+            Trainer::with_base(&e, man(tag), cfg(tag, 0), None, Arc::clone(&base)).unwrap();
+        for (pi, p) in prompts.iter().enumerate() {
+            let id = (ti * prompts.len() + pi) as u64;
+            let r = pr.iter().find(|r| r.id == id).unwrap();
+            assert_eq!(&r.adapter, tag);
+            assert_eq!(
+                r.tokens,
+                solo.decode_greedy_reforward(p, 8).unwrap(),
+                "{tag}: paged serving diverged from decode_greedy_reforward"
+            );
+        }
+    }
+
+    // Paging really happened, and the block pool stayed bounded.
+    let m = paged.metrics();
+    assert!(
+        m.adapter_page_ins > 0 && m.adapter_evictions > 0,
+        "9 adapters over a 2-decoder cap must hot-swap (page_ins={}, evictions={})",
+        m.adapter_page_ins,
+        m.adapter_evictions
+    );
+    assert!(m.peak_resident >= 2);
+    assert_eq!(m.kv.in_use, 0, "all blocks returned to the free list");
+    assert!(m.kv.peak_in_use > 0 && m.kv.peak_in_use <= m.kv.capacity_blocks);
+    assert!(m.kv.slab_blocks <= m.kv.capacity_blocks);
+    // Bounded: the slab high-water mark covers max_batch sequences, not
+    // one contiguous seq_len cache per request served.
+    let per_seq_blocks = 48usize.div_ceil(4);
+    assert!(
+        m.kv.slab_blocks <= 3 * per_seq_blocks,
+        "slab grew past the max_batch working set: {} blocks",
+        m.kv.slab_blocks
+    );
+    assert!(m.kv.total_allocs >= pr.len() as u64, "blocks were recycled across requests");
+}
+
+#[test]
+fn serving_edge_cases_and_metrics_invariants_both_schedulers() {
+    // Edge-case + invariant suite from the issue: max_new == 0, prompt
+    // exactly seq_len, over-length prompts (truncation is *recorded*),
+    // repeated run_until_idle accumulating wall_secs, and
+    // total_tokens == Σ response.tokens.len() — against both the paged
+    // scheduler and the legacy contiguous FIFO, for every method.
+    let e = Engine::reference();
+    let seed = 42u64;
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let seq_len = base.dims.seq_len;
+    let tags = oftv2::adapters::bundle_tags("tiny");
+
+    for kv in [KvMode::Paged, KvMode::Contiguous] {
+        let mut srv = server_with(&e, Arc::clone(&base), kv, 2);
+        for tag in &tags {
+            srv.add_adapter_init(tag, man(tag), seed, None).unwrap();
+        }
+        let mut all_tokens = 0u64;
+        for tag in &tags {
+            // max_new == 0: completes immediately, empty, untruncated.
+            let id = srv.submit(tag, vec![1, 2], 0).unwrap();
+            let rs = srv.run_until_idle().unwrap();
+            assert_eq!(rs.len(), 1);
+            assert_eq!(rs[0].id, id);
+            assert!(rs[0].tokens.is_empty(), "{tag} ({kv:?}): max_new=0 must emit nothing");
+            assert_eq!(rs[0].truncated_tokens, 0);
+
+            // Prompt exactly seq_len: no room to generate, no truncation.
+            let full: Vec<i32> = (0..seq_len as i32).map(|i| (i % 50) + 1).collect();
+            let rs = run_one(&mut srv, tag, full.clone(), 4);
+            assert!(rs.tokens.is_empty(), "{tag} ({kv:?}): full prompt must emit nothing");
+            assert_eq!(rs.prompt_len, seq_len);
+            assert_eq!(rs.truncated_tokens, 0, "exactly seq_len is not a truncation");
+
+            // Over-length prompt: dropped tokens are recorded, not silent.
+            let mut over = full.clone();
+            over.extend_from_slice(&[3, 3, 3]);
+            let rs = run_one(&mut srv, tag, over, 4);
+            assert_eq!(rs.truncated_tokens, 3, "{tag} ({kv:?}): truncation must be surfaced");
+            assert_eq!(rs.prompt_len, seq_len);
+
+            // A normal request for the totals invariant.
+            let rs = run_one(&mut srv, tag, vec![1, 7, 3], 5);
+            assert!(!rs.tokens.is_empty());
+            all_tokens += rs.tokens.len() as u64;
+        }
+        let m = srv.metrics().clone();
+        assert_eq!(m.total_tokens, all_tokens, "({kv:?}) total_tokens invariant");
+        assert_eq!(m.total_requests, (4 * tags.len()) as u64);
+        assert_eq!(m.truncated_requests, tags.len() as u64);
+        assert_eq!(m.truncated_tokens, (3 * tags.len()) as u64);
+
+        // Repeated run_until_idle calls accumulate wall_secs.
+        let w1 = m.wall_secs;
+        assert!(w1 > 0.0);
+        srv.submit(&tags[0], vec![1, 2, 3], 4).unwrap();
+        srv.run_until_idle().unwrap();
+        assert!(
+            srv.metrics().wall_secs > w1,
+            "({kv:?}) wall_secs must accumulate across runs"
+        );
+    }
+}
+
+#[test]
+fn eos_as_first_generated_token_stops_both_schedulers() {
+    // Find a prompt whose very first greedy continuation is EOS, then
+    // check both schedulers stop at exactly one token. The scan is over
+    // a solo decoder sharing the same base, so whatever it finds holds
+    // for the servers bitwise.
+    let e = Engine::reference();
+    let seed = 42u64;
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let tag = "tiny_oft_v2";
+    let mut solo = Trainer::with_base(&e, man(tag), cfg(tag, 0), None, Arc::clone(&base)).unwrap();
+    let vocab = solo.manifest.model.vocab as i32;
+    let mut eos_prompt: Option<Vec<i32>> = None;
+    'scan: for a in 1..vocab {
+        for b in 0..vocab.min(16) {
+            let p = if b == 0 { vec![a] } else { vec![a, b] };
+            if solo.decode_greedy(&p, 1).unwrap() == [EOS] {
+                eos_prompt = Some(p);
+                break 'scan;
+            }
+        }
+    }
+    let Some(p) = eos_prompt else {
+        // No prompt in the scanned range hits EOS first for this seed;
+        // the property is vacuous here rather than failed.
+        eprintln!("no EOS-first prompt found in scan range; skipping");
+        return;
+    };
+    for kv in [KvMode::Paged, KvMode::Contiguous] {
+        let mut srv = server_with(&e, Arc::clone(&base), kv, 2);
+        srv.add_adapter_init(tag, man(tag), seed, None).unwrap();
+        let r = run_one(&mut srv, tag, p.clone(), 8);
+        assert_eq!(r.tokens, vec![EOS], "({kv:?}) EOS-first must stop after one token");
+    }
+}
+
+#[test]
+fn streamed_events_match_responses() {
+    let e = Engine::reference();
+    let base = BaseModel::for_preset(&e, "tiny", 7, None).unwrap();
+    let mut srv = Server::new(&e, Arc::clone(&base), 2);
+    srv.add_adapter_init("a", man("tiny_oft_v2"), 7, None).unwrap();
+    srv.add_adapter_init("b", man("tiny_lora"), 7, None).unwrap();
+    let ids = [
+        srv.submit("a", vec![1, 9], 5).unwrap(),
+        srv.submit("b", vec![2, 4], 5).unwrap(),
+    ];
+    // Drive incrementally via run_step, draining events as a streaming
+    // gateway would.
+    let mut events = Vec::new();
+    let mut responses = Vec::new();
+    while srv.queued() > 0 || srv.active() > 0 {
+        responses.extend(srv.run_step().unwrap());
+        events.extend(srv.take_events());
+    }
+    assert_eq!(responses.len(), 2);
+    for id in ids {
+        let r = responses.iter().find(|r| r.id == id).unwrap();
+        let stream: Vec<i32> = events
+            .iter()
+            .filter(|ev| ev.request_id == id)
+            .map(|ev| ev.token)
+            .collect();
+        assert_eq!(stream, r.tokens, "streamed tokens must equal the response");
+        let lasts: Vec<bool> = events
+            .iter()
+            .filter(|ev| ev.request_id == id)
+            .map(|ev| ev.last)
+            .collect();
+        assert_eq!(lasts.iter().filter(|&&l| l).count(), 1);
+        assert_eq!(lasts.last(), Some(&true), "final event carries last=true");
+        for (i, ev) in events.iter().filter(|ev| ev.request_id == id).enumerate() {
+            assert_eq!(ev.index, i);
+        }
+    }
 }
 
 #[test]
