@@ -668,6 +668,9 @@ pub struct KvBlockPool {
     slab: Vec<f32>,
     /// Recycled block ids, ready for reuse.
     free: Vec<u32>,
+    /// Per-block allocation state (indexed by block id); guards the
+    /// free list against double releases.
+    allocated: Vec<bool>,
     in_use: usize,
     peak_in_use: usize,
     total_allocs: u64,
@@ -690,6 +693,7 @@ impl KvBlockPool {
             max_blocks,
             slab: Vec::new(),
             free: Vec::new(),
+            allocated: Vec::new(),
             in_use: 0,
             peak_in_use: 0,
             total_allocs: 0,
@@ -753,23 +757,39 @@ impl KvBlockPool {
                     self.block_tokens
                 );
                 self.slab.resize(self.slab.len() + self.block_floats(), 0.0);
+                self.allocated.push(false);
                 next as u32
             }
         };
+        self.allocated[id as usize] = true;
         self.in_use += 1;
         self.peak_in_use = self.peak_in_use.max(self.in_use);
         self.total_allocs += 1;
         Ok(id)
     }
 
-    /// Return a block to the free list.
+    /// Return a block to the free list. Releasing a block that is not
+    /// currently allocated is a caller accounting bug: it trips a debug
+    /// assert, and in release builds is ignored rather than pushing the
+    /// id onto the free list twice (which would hand the same KV rows
+    /// to two sessions and silently corrupt both).
     pub fn release(&mut self, id: u32) {
-        debug_assert!(
-            (id as usize) < self.slab.len() / self.block_floats().max(1),
-            "released block {id} was never allocated"
-        );
+        let live = self.allocated.get(id as usize).copied().unwrap_or(false);
+        debug_assert!(live, "released KV block {id} that is not allocated");
+        if !live {
+            return;
+        }
+        self.allocated[id as usize] = false;
         self.free.push(id);
-        self.in_use = self.in_use.saturating_sub(1);
+        self.in_use -= 1;
+    }
+
+    /// Raise the block capacity (never shrinks, so outstanding blocks
+    /// and reservations stay valid). Used when an adapter attached
+    /// after pool creation has a longer seq_len than the pool was
+    /// originally sized for (see `serve::alloc::KvBudget`).
+    pub fn grow_capacity(&mut self, max_blocks: usize) {
+        self.max_blocks = self.max_blocks.max(max_blocks);
     }
 
     pub fn stats(&self) -> KvPoolStats {
@@ -1393,6 +1413,43 @@ mod tests {
         assert_eq!(pool.blocks_for(0), 0);
         assert_eq!(pool.blocks_for(4), 1);
         assert_eq!(pool.blocks_for(5), 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not allocated")]
+    fn kv_pool_double_release_asserts_in_debug() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2).unwrap();
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn kv_pool_double_release_is_ignored_in_release() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 2).unwrap();
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a); // must not enter the free list twice
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_ne!(b, c, "double release aliased two sessions onto one block");
+        assert_eq!(pool.stats().in_use, 2);
+    }
+
+    #[test]
+    fn kv_pool_capacity_grows_never_shrinks() {
+        let mut pool = KvBlockPool::new(1, 2, 4, 1).unwrap();
+        let a = pool.alloc().unwrap();
+        assert!(pool.alloc().is_err(), "at capacity");
+        pool.grow_capacity(2);
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        pool.grow_capacity(1); // never shrinks
+        assert_eq!(pool.stats().capacity_blocks, 2);
+        pool.release(a);
+        pool.release(b);
     }
 
     #[test]

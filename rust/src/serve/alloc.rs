@@ -91,6 +91,11 @@ pub(crate) struct KvBudget {
     capacity: usize,
     block_tokens: usize,
     reserved: usize,
+    /// Whether capacity came from the default sizing rule (`max_batch`
+    /// full-length sequences) rather than an explicit `max_kv_blocks`.
+    /// Default-sized pools grow when a later adapter has a longer
+    /// seq_len than the one the pool was first sized for.
+    default_sized: bool,
     /// Set when the backend reported no paged path — requests fall back
     /// to contiguous sessions and the budget stops gating admission.
     demoted: bool,
@@ -103,6 +108,7 @@ impl KvBudget {
             capacity: 0,
             block_tokens: 1,
             reserved: 0,
+            default_sized: false,
             demoted: false,
         }
     }
@@ -122,13 +128,31 @@ impl KvBudget {
     /// Build the shared pool on first adapter attach (all adapters
     /// share one base, hence one KV row shape). A backend without a
     /// paged path demotes the server to contiguous sessions.
+    ///
+    /// Called again for every later attach: a default-sized pool grows
+    /// to cover the largest seq_len seen, so an adapter attached after
+    /// pool creation never ends up with a worst-case block need the
+    /// capacity can't satisfy. An explicit `max_kv_blocks` stays a hard
+    /// cap — requests that can never fit it are rejected at submit
+    /// (see [`super::RejectReason::KvExceedsPool`]).
     pub(crate) fn ensure_pool(
         &mut self,
         decoder: &Decoder,
         dims: &ModelDims,
         cfg: &ServeConfig,
     ) -> Result<()> {
-        if self.pool.is_some() || self.demoted {
+        if self.demoted {
+            return Ok(());
+        }
+        if let Some(pool) = &self.pool {
+            if self.default_sized {
+                let per_seq = dims.seq_len.div_ceil(self.block_tokens);
+                let capacity = cfg.max_batch * per_seq;
+                if capacity > self.capacity {
+                    pool.lock().expect("KV pool poisoned").grow_capacity(capacity);
+                    self.capacity = capacity;
+                }
+            }
             return Ok(());
         }
         let Some((n_layers, d_model)) = decoder.kv_layout() else {
@@ -145,6 +169,7 @@ impl KvBudget {
         )?);
         self.capacity = capacity;
         self.block_tokens = cfg.block_tokens;
+        self.default_sized = cfg.max_kv_blocks.is_none();
         Ok(())
     }
 
@@ -158,6 +183,13 @@ impl KvBudget {
 
     pub(crate) fn can_reserve(&self, need: usize) -> bool {
         self.pool.is_none() || need <= self.capacity - self.reserved
+    }
+
+    /// Whether `need` could ever be reserved, even with the pool idle.
+    /// A request failing this is never admittable — submission rejects
+    /// it at the door instead of queueing it forever.
+    pub(crate) fn can_ever_fit(&self, need: usize) -> bool {
+        self.pool.is_none() || need <= self.capacity
     }
 
     pub(crate) fn reserve(&mut self, need: usize) {
@@ -196,15 +228,20 @@ impl Server<'_> {
         }
         self.pager
             .touch(self.adapters.get_mut(name).expect("checked above"));
-        self.enforce_residency();
+        // The adapter being paged in is about to be used but is not yet
+        // pinned by an active sequence — exempt it from eviction so the
+        // cap can't tear down the decoder this very call produced.
+        self.enforce_residency(Some(name));
         Ok(())
     }
 
     /// Evict least-recently-used decoders until at or under the cap.
-    /// Adapters with active sequences are pinned; if everything
-    /// resident is pinned the cap is temporarily exceeded rather than
-    /// tearing down in-flight sessions.
-    pub(crate) fn enforce_residency(&mut self) {
+    /// Adapters with active sequences are pinned, and `keep` (the
+    /// adapter whose page-in triggered enforcement, admitted but not
+    /// yet pinned) is never a victim; if everything resident is pinned
+    /// the cap is temporarily exceeded rather than tearing down
+    /// in-flight sessions.
+    pub(crate) fn enforce_residency(&mut self, keep: Option<&str>) {
         let resident = self.resident_adapters();
         self.metrics.peak_resident = self.metrics.peak_resident.max(resident);
         let Some(cap) = self.pager.max_resident() else {
@@ -216,7 +253,9 @@ impl Server<'_> {
             let victim = self
                 .adapters
                 .iter()
-                .filter(|(_, a)| a.decoder.is_some() && a.active_seqs == 0)
+                .filter(|(n, a)| {
+                    a.decoder.is_some() && a.active_seqs == 0 && keep != Some(n.as_str())
+                })
                 .min_by_key(|(_, a)| a.last_used)
                 .map(|(n, _)| n.clone());
             let Some(name) = victim else {
@@ -226,5 +265,44 @@ impl Server<'_> {
             self.metrics.adapter_evictions += 1;
             resident -= 1;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::AdapterState;
+
+    #[test]
+    fn default_sized_pool_grows_for_longer_seq_len_adapters() {
+        // Regression: the pool used to be sized once, from the first
+        // attached adapter's seq_len — a later adapter with a longer
+        // seq_len had full-length requests that could never fit.
+        let engine = Engine::reference();
+        let base = BaseModel::for_preset(&engine, "tiny", 7, None).unwrap();
+        let manifest = Manifest::builtin("tiny_oft_v2").unwrap();
+        let state = AdapterState::init(&manifest, 7, None).unwrap();
+        let decoder = build_decoder(&engine, &base, &manifest, &state.tr).unwrap();
+        let cfg = ServeConfig::new(2);
+        let per_seq = manifest.model.seq_len.div_ceil(cfg.block_tokens);
+
+        let mut kv = KvBudget::new();
+        kv.ensure_pool(&decoder, &manifest.model, &cfg).unwrap();
+        assert_eq!(kv.capacity(), 2 * per_seq);
+        let mut longer = manifest.model;
+        longer.seq_len *= 2;
+        kv.ensure_pool(&decoder, &longer, &cfg).unwrap();
+        assert_eq!(kv.capacity(), 4 * per_seq, "default sizing covers the max seq_len");
+        assert!(kv.can_ever_fit(2 * per_seq));
+
+        // An explicit max_kv_blocks stays a hard cap; oversized requests
+        // are rejected at submit instead (RejectReason::KvExceedsPool).
+        let mut cfg = ServeConfig::new(2);
+        cfg.max_kv_blocks = Some(per_seq);
+        let mut kv = KvBudget::new();
+        kv.ensure_pool(&decoder, &manifest.model, &cfg).unwrap();
+        kv.ensure_pool(&decoder, &longer, &cfg).unwrap();
+        assert_eq!(kv.capacity(), per_seq);
+        assert!(!kv.can_ever_fit(2 * per_seq));
     }
 }

@@ -86,6 +86,10 @@ pub enum RejectReason {
     QueueFull { limit: usize },
     UnknownAdapter { name: String },
     EmptyPrompt,
+    /// The request's worst-case KV reservation exceeds the entire block
+    /// pool — no amount of waiting can ever admit it. Shrink the prompt
+    /// or `max_new`, or raise `max_kv_blocks`.
+    KvExceedsPool { need_blocks: usize, capacity_blocks: usize },
 }
 
 impl fmt::Display for RejectReason {
@@ -98,6 +102,11 @@ impl fmt::Display for RejectReason {
                 write!(f, "unknown adapter '{name}'")
             }
             RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+            RejectReason::KvExceedsPool { need_blocks, capacity_blocks } => write!(
+                f,
+                "worst-case KV need of {need_blocks} block(s) exceeds the \
+                 pool capacity of {capacity_blocks}"
+            ),
         }
     }
 }
@@ -326,7 +335,7 @@ impl<'e> Server<'e> {
             Adapter::new(manifest, trainables.to_vec(), decoder),
         );
         self.pager.touch(self.adapters.get_mut(name).expect("just inserted"));
-        self.enforce_residency();
+        self.enforce_residency(None);
         Ok(())
     }
 

@@ -15,13 +15,27 @@ impl Server<'_> {
     /// Enqueue a request if the server will take it; rejections carry
     /// the reason instead of an error (admission control, not failure).
     pub fn try_submit(&mut self, adapter: &str, prompt: Vec<i32>, max_new: usize) -> Submission {
-        if !self.adapters.contains_key(adapter) {
+        let Some(seq_len) = self.adapters.get(adapter).map(|a| a.manifest.model.seq_len) else {
             return Submission::Rejected(RejectReason::UnknownAdapter {
                 name: adapter.to_string(),
             });
-        }
+        };
         if prompt.is_empty() {
             return Submission::Rejected(RejectReason::EmptyPrompt);
+        }
+        // Reject at the door what admission could never schedule: a
+        // worst-case reservation larger than the whole pool would
+        // otherwise sit in the queue forever (`admit` skips it on every
+        // step, releases can never free enough).
+        let prompt_use = prompt.len().min(seq_len);
+        if max_new > 0 && prompt_use < seq_len {
+            let need = self.kv.blocks_needed(prompt_use, max_new, seq_len);
+            if !self.kv.can_ever_fit(need) {
+                return Submission::Rejected(RejectReason::KvExceedsPool {
+                    need_blocks: need,
+                    capacity_blocks: self.kv.capacity(),
+                });
+            }
         }
         if self.queue.len() >= self.cfg.max_queue {
             self.metrics.rejected_queue_full += 1;
@@ -217,6 +231,23 @@ impl Server<'_> {
         Ok(done)
     }
 
+    /// Backstop for queued work that can never start: with nothing
+    /// active there are no outstanding reservations, so a request still
+    /// queued after `admit` has a worst-case KV need exceeding the
+    /// whole pool. [`Server::try_submit`] rejects those at the door;
+    /// this turns anything that slips past into an error instead of a
+    /// silent livelock for step-at-a-time drivers.
+    fn ensure_queue_serviceable(&self) -> Result<()> {
+        ensure!(
+            self.queue.is_empty(),
+            "{} queued request(s) can never be admitted: worst-case KV \
+             need exceeds the pool capacity of {} blocks",
+            self.queue.len(),
+            self.kv.capacity()
+        );
+        Ok(())
+    }
+
     /// One admit + decode step — the incremental driver for callers
     /// that stream tokens (drain [`Server::take_events`] between
     /// steps). Returns requests that completed during the step.
@@ -224,6 +255,12 @@ impl Server<'_> {
         ensure!(!self.adapters.is_empty(), "no adapters registered");
         let wall = Timer::start();
         let mut responses = self.admit()?;
+        if self.active.is_empty() {
+            // Nothing admitted and nothing running: a non-empty queue
+            // here would never drain (`while queued > 0 { run_step }`
+            // must error like `run_until_idle`, not spin forever).
+            self.ensure_queue_serviceable()?;
+        }
         responses.extend(self.tick()?);
         self.metrics.wall_secs += wall.secs();
         self.metrics.kv = self.kv.stats();
@@ -239,13 +276,7 @@ impl Server<'_> {
         loop {
             responses.extend(self.admit()?);
             if self.active.is_empty() {
-                ensure!(
-                    self.queue.is_empty(),
-                    "{} queued request(s) can never be admitted: worst-case KV \
-                     need exceeds the pool capacity of {} blocks",
-                    self.queue.len(),
-                    self.kv.capacity()
-                );
+                self.ensure_queue_serviceable()?;
                 break;
             }
             responses.extend(self.tick()?);

@@ -10,7 +10,7 @@ use oftv2::config::RunCfg;
 use oftv2::coordinator::{BaseModel, Manifest, Trainer};
 use oftv2::data::tokenizer::EOS;
 use oftv2::runtime::Engine;
-use oftv2::serve::{KvMode, ServeConfig, Server};
+use oftv2::serve::{KvMode, RejectReason, ServeConfig, Server, Submission};
 
 fn cfg(tag: &str, steps: usize) -> RunCfg {
     let mut c = RunCfg::default();
@@ -420,6 +420,67 @@ fn streamed_events_match_responses() {
             assert_eq!(ev.index, i);
         }
     }
+}
+
+#[test]
+fn residency_cap_one_serves_concurrent_adapters() {
+    // Regression: with max_resident=1 and a batch mixing adapters,
+    // paging in the second adapter while the first was pinned by an
+    // active sequence used to pick the just-paged-in decoder as its own
+    // eviction victim and panic ("just paged in"). The cap must be
+    // temporarily exceeded instead.
+    let e = Engine::reference();
+    let seed = 42u64;
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let mut c = ServeConfig::new(4);
+    c.max_resident = Some(1);
+    let mut srv = Server::with_config(&e, Arc::clone(&base), c);
+    srv.add_adapter_init("a", man("tiny_oft_v2"), seed, None).unwrap();
+    srv.add_adapter_init("b", man("tiny_lora"), seed, None).unwrap();
+    assert_eq!(srv.resident_adapters(), 1, "cap enforced while idle");
+    for r in 0..4u64 {
+        let name = if r % 2 == 0 { "a" } else { "b" };
+        srv.submit(name, vec![1, (r + 2) as i32], 5).unwrap();
+    }
+    let rs = srv.run_until_idle().unwrap();
+    assert_eq!(rs.len(), 4);
+    let m = srv.metrics();
+    assert!(m.adapter_page_ins > 0, "cap 1 over 2 adapters must page");
+    assert!(m.peak_resident >= 2, "both adapters pinned in one batch");
+}
+
+#[test]
+fn oversized_kv_need_rejected_at_submit_not_livelocked() {
+    // Regression: a request whose worst-case KV need exceeds the whole
+    // pool used to queue forever — run_until_idle errored but the
+    // documented `while queued > 0 { run_step }` driver spun silently.
+    // It is now rejected at the door with a reason.
+    let e = Engine::reference();
+    let base = BaseModel::for_preset(&e, "tiny", 7, None).unwrap();
+    let mut c = ServeConfig::new(2);
+    c.block_tokens = 4;
+    c.max_kv_blocks = Some(2); // 8 tokens of KV against seq_len 48
+    let mut srv = Server::with_config(&e, base, c);
+    srv.add_adapter_init("a", man("tiny_oft_v2"), 7, None).unwrap();
+    match srv.try_submit("a", vec![1, 2], 12) {
+        // ceil((2 + 12) / 4) = 4 blocks > 2: never admittable.
+        Submission::Rejected(RejectReason::KvExceedsPool {
+            need_blocks: 4,
+            capacity_blocks: 2,
+        }) => {}
+        r => panic!("expected KvExceedsPool rejection, got {r:?}"),
+    }
+    let err = srv.submit("a", vec![1, 2], 12).unwrap_err().to_string();
+    assert!(err.contains("exceeds the pool capacity"), "got: {err}");
+    // A request that fits the pool is served normally, and the
+    // streaming driver pattern terminates.
+    srv.submit("a", vec![1, 2], 5).unwrap(); // ceil(7/4) = 2 blocks
+    let mut rs = Vec::new();
+    while srv.queued() > 0 || srv.active() > 0 {
+        rs.extend(srv.run_step().unwrap());
+    }
+    assert_eq!(rs.len(), 1);
+    assert!(!rs[0].tokens.is_empty());
 }
 
 #[test]
