@@ -7,7 +7,9 @@
 //! rotate path's ≈ 2 (quadratic); rotate_w stays within a small factor
 //! of base_w at every d, while merge_w blows up.
 
-use oftv2::bench::{fmt_ms, print_table, quick_mode, Bench, Report};
+use oftv2::bench::{
+    fmt_ms, print_table, quick_mode, write_bench_json, Bench, BenchRecord, Report,
+};
 use oftv2::json::Json;
 use oftv2::runtime::micro::MicroCatalog;
 use oftv2::runtime::Engine;
@@ -21,6 +23,7 @@ fn main() -> Result<()> {
     let engine = Engine::cpu()?;
     let cat = MicroCatalog::load_or_builtin(artifacts_root())?;
     let mut report = Report::new("kernel_scaling");
+    let mut recs: Vec<BenchRecord> = Vec::new();
 
     let mut rows = Vec::new();
     let mut series: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
@@ -44,8 +47,50 @@ fn main() -> Result<()> {
                 ("d", Json::num(d as f64)),
                 ("median_secs", Json::num(s.median)),
             ]);
+            recs.push(
+                BenchRecord::from_summary(&name, &s)
+                    .with("kernel", Json::str(prefix))
+                    .with("d", Json::num(d as f64))
+                    .with("dispatch", Json::str("default")),
+            );
         }
         rows.push(row);
+    }
+
+    // When the SIMD kernels are live, re-measure the two matmul-bound
+    // paths at the largest d with the scalar oracle forced, so the
+    // BENCH json carries the end-to-end before/after delta — not just
+    // the microbench numbers in BENCH_roofline.json.
+    if oftv2::tensor::simd_kernels_active() {
+        let d = DIMS[DIMS.len() - 1];
+        for prefix in ["base_w", "rotate_w"] {
+            let name = format!("{prefix}_d{d}");
+            let k = cat.compile(&engine, &name)?;
+            let inputs = k.random_inputs(11, 0.02)?;
+            let prev = oftv2::tensor::force_scalar_kernels(true);
+            let s = Bench::new(&name)
+                .warmup(2)
+                .iters(iters)
+                .max_secs(10.0)
+                .run(|| {
+                    k.run(&inputs).unwrap();
+                });
+            oftv2::tensor::force_scalar_kernels(prev);
+            let simd_median = *series[prefix].last().unwrap();
+            println!(
+                "{name}: scalar {} vs simd {} ({:.2}x)",
+                fmt_ms(s.median),
+                fmt_ms(simd_median),
+                s.median / simd_median
+            );
+            recs.push(
+                BenchRecord::from_summary(format!("{name}_scalar"), &s)
+                    .with("kernel", Json::str(prefix))
+                    .with("d", Json::num(d as f64))
+                    .with("dispatch", Json::str("forced_scalar"))
+                    .with("speedup_vs_scalar", Json::num(s.median / simd_median)),
+            );
+        }
     }
     print_table(
         "§3.2 kernel scaling: per-call time vs hidden size d (128 rows)",
@@ -112,5 +157,7 @@ fn main() -> Result<()> {
 
     let path = report.save()?;
     println!("results -> {}", path.display());
+    let path = write_bench_json("kernel_scaling", "secs", &recs)?;
+    println!("records -> {}", path.display());
     Ok(())
 }

@@ -1,0 +1,287 @@
+//! Roofline bench — makes "fast as the hardware allows" a measured
+//! claim: GFLOP/s of each hot-path kernel (scalar oracle vs SIMD
+//! dispatch) at the shapes `modelspec` actually emits, against the
+//! measured per-core arithmetic peak
+//! (`tensor::simd::arithmetic_peak_gflops`).
+//!
+//! Kernels: dense f32 matmul, fused NF4/AWQ matmuls (+ the NF4
+//! transposed backward), the CNP block rotations, and the raw NF4 row
+//! decode. Shapes: Qwen2.5-0.5B q_proj (896x896) always; Llama-2-7B
+//! q_proj (4096x4096) unless `--quick`.
+//!
+//!   cargo bench --bench roofline --features simd [-- --quick]
+//!
+//! Emits `BENCH_roofline.json` (shared schema, unit = gflops). When the
+//! SIMD kernels are live, asserts the acceptance floor: >= 2x over the
+//! scalar oracle on the f32 matmul and the fused NF4 matmul.
+
+use oftv2::bench::{bench_seed, print_table, quick_mode, write_bench_json, BenchRecord};
+use oftv2::json::Json;
+use oftv2::modelspec::ModelSpec;
+use oftv2::peft;
+use oftv2::quant::{AwqTensor, Nf4Tensor, QuantWeight};
+use oftv2::runtime::layers::linear::{
+    block_rotate_fast, block_rotate_transposed, build_cnp_blocks,
+};
+use oftv2::tensor::{force_scalar_kernels, simd_kernels_active, Tensor};
+use oftv2::util::rng::Rng;
+use oftv2::util::stats::Summary;
+use oftv2::util::timer::Timer;
+use oftv2::Result;
+
+/// Raw per-call samples (seconds). `Bench::run` only returns a summary;
+/// the roofline needs every sample to convert each to GFLOP/s.
+fn time_samples<F: FnMut()>(warmup: usize, iters: usize, max_secs: f64, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    let budget = Timer::start();
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        out.push(t.secs());
+        if max_secs > 0.0 && budget.secs() > max_secs {
+            break;
+        }
+    }
+    out
+}
+
+/// One kernel under measurement: a label, its FLOPs per call, and the
+/// call itself (dispatch is controlled from outside via
+/// `force_scalar_kernels`).
+struct Kernel<'a> {
+    name: String,
+    shape: String,
+    flops: f64,
+    run: Box<dyn FnMut() + 'a>,
+}
+
+fn gflops(samples: &[f64], flops: f64) -> Vec<f64> {
+    samples.iter().map(|s| flops / s.max(1e-12) / 1e9).collect()
+}
+
+fn main() -> Result<()> {
+    let quick = quick_mode();
+    let iters = if quick { 5 } else { 15 };
+    let max_secs = if quick { 3.0 } else { 10.0 };
+    let mut rng = Rng::new(bench_seed());
+    let simd_on = simd_kernels_active();
+
+    let peak = oftv2::tensor::simd::arithmetic_peak_gflops();
+    println!(
+        "arithmetic peak estimate: {peak:.1} GFLOP/s per core \
+         (register-resident multiply-add loop)"
+    );
+
+    // ---- shapes: what modelspec actually emits -------------------------
+    let qwen = ModelSpec::qwen25("0.5b")?;
+    let q = qwen
+        .linears_per_layer
+        .iter()
+        .find(|l| l.label == "q_proj")
+        .expect("qwen2.5 has a q_proj");
+    let mut shapes = vec![("q896", q.din, q.dout)];
+    if !quick {
+        let llama = ModelSpec::llama2_7b();
+        let lq = llama
+            .linears_per_layer
+            .iter()
+            .find(|l| l.label == "q_proj")
+            .expect("llama2 has a q_proj");
+        shapes.push(("l4096", lq.din, lq.dout));
+    }
+    let m = 64usize; // decode/train microbatch rows
+
+    let mut kernels: Vec<Kernel> = Vec::new();
+    for &(tag, din, dout) in &shapes {
+        let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+        let g = Tensor::randn(&[m, dout], 1.0, &mut rng);
+        let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+        let mm_flops = 2.0 * (m * din * dout) as f64;
+        let shape = format!("({m},{din})@({din},{dout})");
+
+        {
+            let (x, w) = (x.clone(), w.clone());
+            kernels.push(Kernel {
+                name: format!("matmul_f32_{tag}"),
+                shape: shape.clone(),
+                flops: mm_flops,
+                run: Box::new(move || {
+                    std::hint::black_box(x.matmul(&w).unwrap());
+                }),
+            });
+        }
+        let nf4 = QuantWeight::nf4(Nf4Tensor::quantize(&w))?;
+        {
+            let (x, nf4) = (x.clone(), nf4.clone());
+            kernels.push(Kernel {
+                name: format!("fused_nf4_matmul_{tag}"),
+                shape: shape.clone(),
+                flops: mm_flops,
+                run: Box::new(move || {
+                    std::hint::black_box(nf4.matmul(&x).unwrap());
+                }),
+            });
+        }
+        {
+            let (g, nf4) = (g.clone(), nf4.clone());
+            kernels.push(Kernel {
+                name: format!("fused_nf4_matmul_t_{tag}"),
+                shape: format!("({m},{dout})@({din},{dout})^T"),
+                flops: mm_flops,
+                run: Box::new(move || {
+                    std::hint::black_box(nf4.matmul_t(&g).unwrap());
+                }),
+            });
+        }
+        {
+            // Pure decode rate: one multiply per element (code * absmax),
+            // so "GFLOP/s" here is decoded Gelem/s.
+            let n = din * dout;
+            let mut panel = vec![0.0f32; n];
+            kernels.push(Kernel {
+                name: format!("nf4_decode_{tag}"),
+                shape: format!("({din},{dout})"),
+                flops: n as f64,
+                run: Box::new(move || {
+                    nf4.decode_rows(0, din, &mut panel);
+                    std::hint::black_box(&panel);
+                }),
+            });
+        }
+        if tag == "q896" {
+            let awq = QuantWeight::awq(AwqTensor::quantize(&w, None)?)?;
+            let xa = x.clone();
+            kernels.push(Kernel {
+                name: format!("fused_awq_matmul_{tag}"),
+                shape: shape.clone(),
+                flops: mm_flops,
+                run: Box::new(move || {
+                    std::hint::black_box(awq.matmul(&xa).unwrap());
+                }),
+            });
+
+            // CNP block rotations at the paper's operating point: b=32
+            // blocks over the full hidden dim, k=4 Neumann terms.
+            let b = 32usize;
+            let nb = din / b;
+            let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.02, &mut rng);
+            let blocks = build_cnp_blocks(&packed, b, 4)?;
+            let rot_flops = 2.0 * (m * din * b) as f64;
+            {
+                let (x, blocks) = (x.clone(), blocks.clone());
+                kernels.push(Kernel {
+                    name: format!("block_rotate_fwd_{tag}"),
+                    shape: format!("({m},{din}) b={b}"),
+                    flops: rot_flops,
+                    run: Box::new(move || {
+                        std::hint::black_box(block_rotate_fast(&x, &blocks).unwrap());
+                    }),
+                });
+            }
+            kernels.push(Kernel {
+                name: format!("block_rotate_bwd_{tag}"),
+                shape: format!("({m},{din}) b={b}"),
+                flops: rot_flops,
+                run: Box::new(move || {
+                    std::hint::black_box(block_rotate_transposed(&x, &blocks).unwrap());
+                }),
+            });
+        }
+    }
+
+    // ---- measure: scalar oracle, then (if live) SIMD dispatch ----------
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for k in kernels.iter_mut() {
+        let prev = force_scalar_kernels(true);
+        let scalar_secs = time_samples(2, iters, max_secs, &mut k.run);
+        force_scalar_kernels(prev);
+        let scalar_gf = gflops(&scalar_secs, k.flops);
+        let scalar_med = Summary::of(&scalar_gf).median;
+        records.push(
+            BenchRecord::from_samples(format!("{}_scalar", k.name), &scalar_gf)
+                .with("kernel", Json::str(k.name.clone()))
+                .with("shape", Json::str(k.shape.clone()))
+                .with("dispatch", Json::str("scalar"))
+                .with("flops_per_call", Json::num(k.flops))
+                .with("peak_gflops", Json::num(peak))
+                .with("frac_of_peak", Json::num(scalar_med / peak.max(1e-12))),
+        );
+
+        let (simd_med, speedup) = if simd_on {
+            let simd_secs = time_samples(2, iters, max_secs, &mut k.run);
+            let simd_gf = gflops(&simd_secs, k.flops);
+            let med = Summary::of(&simd_gf).median;
+            let speedup = med / scalar_med.max(1e-12);
+            records.push(
+                BenchRecord::from_samples(format!("{}_simd", k.name), &simd_gf)
+                    .with("kernel", Json::str(k.name.clone()))
+                    .with("shape", Json::str(k.shape.clone()))
+                    .with("dispatch", Json::str("simd"))
+                    .with("flops_per_call", Json::num(k.flops))
+                    .with("peak_gflops", Json::num(peak))
+                    .with("frac_of_peak", Json::num(med / peak.max(1e-12)))
+                    .with("speedup_vs_scalar", Json::num(speedup)),
+            );
+            speedups.push((k.name.clone(), speedup));
+            (Some(med), Some(speedup))
+        } else {
+            (None, None)
+        };
+
+        let simd_cell = match simd_med {
+            Some(v) => format!("{v:.2}"),
+            None => "-".to_string(),
+        };
+        let speedup_cell = match speedup {
+            Some(v) => format!("{v:.2}x"),
+            None => "-".to_string(),
+        };
+        rows.push(vec![
+            k.name.clone(),
+            k.shape.clone(),
+            format!("{scalar_med:.2}"),
+            simd_cell,
+            speedup_cell,
+            format!(
+                "{:.0}%",
+                100.0 * simd_med.unwrap_or(scalar_med) / peak.max(1e-12)
+            ),
+        ]);
+    }
+
+    print_table(
+        &format!(
+            "roofline: GFLOP/s per kernel (peak {peak:.1} GFLOP/s, simd {})",
+            if simd_on { "on" } else { "off" }
+        ),
+        &["kernel", "shape", "scalar GF/s", "simd GF/s", "speedup", "% peak"],
+        &rows,
+    );
+
+    let path = write_bench_json("roofline", "gflops", &records)?;
+    println!("\nresults -> {}", path.display());
+
+    // Acceptance floor: the SIMD microkernels must beat the scalar
+    // oracle by >= 2x on the f32 matmul and the fused NF4 matmul at a
+    // modelspec-realistic shape. Only meaningful when the dispatch is
+    // actually live.
+    if simd_on {
+        for want in ["matmul_f32_q896", "fused_nf4_matmul_q896"] {
+            let (_, s) = speedups
+                .iter()
+                .find(|(n, _)| n == want)
+                .expect("acceptance kernel measured");
+            assert!(
+                *s >= 2.0,
+                "{want}: simd speedup {s:.2}x < 2x over the scalar oracle"
+            );
+        }
+        println!("acceptance: >= 2x over scalar on matmul_f32_q896 and fused_nf4_matmul_q896");
+    }
+    Ok(())
+}

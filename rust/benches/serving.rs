@@ -178,6 +178,49 @@ fn main() -> Result<()> {
             .with("growth_vs_early", Json::num(growth)),
     );
 
+    // SIMD-vs-scalar end-to-end delta: the same KV decode loop with the
+    // scalar oracle forced, so BENCH_serving.json carries the serving-
+    // path before/after — not just the microbench numbers in
+    // BENCH_roofline.json.
+    if oftv2::tensor::simd_kernels_active() {
+        let mut sample = |n: usize| -> Result<Vec<f64>> {
+            let mut sess = dec.begin()?;
+            let mut logits = sess.step(1)?;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let next = argmax(&logits) as i32;
+                let t0 = Timer::start();
+                logits = sess.step(next)?;
+                out.push(t0.secs());
+            }
+            Ok(out)
+        };
+        let n = (t - 2).min(48);
+        let simd = sample(n)?;
+        let prev = oftv2::tensor::force_scalar_kernels(true);
+        let scalar = sample(n);
+        oftv2::tensor::force_scalar_kernels(prev);
+        let scalar = scalar?;
+        let (sm, cm) = (Summary::of(&simd).mean, Summary::of(&scalar).mean);
+        let speedup = cm / sm.max(1e-12);
+        println!(
+            "KV decode per-token: scalar {} vs simd {} ({speedup:.2}x)",
+            fmt_ms(cm),
+            fmt_ms(sm)
+        );
+        records.push(
+            BenchRecord::from_samples("decode_kv_simd", &simd)
+                .with("dispatch", Json::str("simd"))
+                .with("seq_len", Json::num(t as f64)),
+        );
+        records.push(
+            BenchRecord::from_samples("decode_kv_forced_scalar", &scalar)
+                .with("dispatch", Json::str("forced_scalar"))
+                .with("seq_len", Json::num(t as f64))
+                .with("speedup_vs_scalar", Json::num(speedup)),
+        );
+    }
+
     // ---- 2. multi-tenant serving over one shared base ------------------
     let preset = if quick { "small" } else { "bench" };
     let seed = oftv2::bench::bench_seed();

@@ -17,6 +17,13 @@
 //! factor's blocks come from the same Cayley–Neumann parameterization
 //! as OFTv2 — identity at `Q = 0`, orthogonal to the documented
 //! Neumann-truncation tolerance.
+//!
+//! BOFT's rotate loops inherit the SIMD dispatch automatically: every
+//! factor runs through the shared `block_rotate_fast` /
+//! `block_rotate_transposed` / `block_rotate_grad_r` kernels in
+//! [`crate::runtime::layers::linear`] (equivalence contract documented
+//! there), while the perfect-shuffle `permute_cols` stays a scalar
+//! gather — it moves bytes, not FLOPs.
 
 use anyhow::{ensure, Context, Result};
 

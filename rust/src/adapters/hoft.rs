@@ -124,16 +124,28 @@ fn build_reflections(vt: &Tensor, linear: &str, din: usize) -> Result<Vec<Refl>>
 }
 
 /// `y = x H(w)` row-wise: `y_r = x_r - (2 (x_r . w) / s) w`.
+///
+/// The `x_r . w` contraction dispatches to [`crate::tensor::simd::dot`]
+/// when SIMD kernels are active (equivalence contract: <= 1e-5 rel vs
+/// the scalar sum — lane blocking reassociates the reduction); the
+/// rank-1 update is a branch-free axpy the compiler vectorizes either
+/// way.
 fn reflect(x: &Tensor, r: &Refl) -> Tensor {
     let (m, d) = (x.shape[0], x.shape[1]);
+    let fast = crate::tensor::simd_kernels_active();
     let mut out = vec![0f32; m * d];
     for row in 0..m {
         let src = &x.data[row * d..(row + 1) * d];
         let dst = &mut out[row * d..(row + 1) * d];
-        let mut c = 0f32;
-        for j in 0..d {
-            c += src[j] * r.w[j];
-        }
+        let c = if fast {
+            crate::tensor::simd::dot(src, &r.w)
+        } else {
+            let mut c = 0f32;
+            for j in 0..d {
+                c += src[j] * r.w[j];
+            }
+            c
+        };
         let c = 2.0 * c / r.s;
         for j in 0..d {
             dst[j] = src[j] - c * r.w[j];
@@ -181,17 +193,26 @@ fn rotate_only(x: &Tensor, refl: &[Refl]) -> Tensor {
 /// finite-difference train-step check in `runtime::refmodel::tests`.
 fn reflect_backward(x: &Tensor, dy: &Tensor, r: &Refl) -> (Vec<f32>, Tensor) {
     let (m, d) = (x.shape[0], x.shape[1]);
+    let fast = crate::tensor::simd_kernels_active();
     let mut dw = vec![0f32; d];
     let mut alpha = 0f32;
     for row in 0..m {
         let xr = &x.data[row * d..(row + 1) * d];
         let dyr = &dy.data[row * d..(row + 1) * d];
-        let mut p = 0f32;
-        let mut q = 0f32;
-        for j in 0..d {
-            p += xr[j] * r.w[j];
-            q += dyr[j] * r.w[j];
-        }
+        let (p, q) = if fast {
+            (
+                crate::tensor::simd::dot(xr, &r.w),
+                crate::tensor::simd::dot(dyr, &r.w),
+            )
+        } else {
+            let mut p = 0f32;
+            let mut q = 0f32;
+            for j in 0..d {
+                p += xr[j] * r.w[j];
+                q += dyr[j] * r.w[j];
+            }
+            (p, q)
+        };
         alpha += p * q;
         let f = 2.0 / r.s;
         for j in 0..d {

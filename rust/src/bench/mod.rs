@@ -159,6 +159,7 @@ impl Report {
         let path = PathBuf::from(dir).join(format!("{}.json", self.name));
         let doc = Json::obj(vec![
             ("bench", Json::str(self.name.clone())),
+            ("config", config_json()),
             ("rows", Json::arr(self.rows.clone())),
         ]);
         std::fs::write(&path, doc.to_string())?;
@@ -170,6 +171,38 @@ impl Report {
 /// from argv so `cargo bench` stays fast in CI.
 pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("OFT_BENCH_QUICK").is_ok()
+}
+
+/// Cargo features compiled into this binary that change what a bench
+/// measures. Recorded in every result file's `config` block so perf
+/// trajectories across commits are attributable to the build, not just
+/// the code.
+pub fn enabled_features() -> Vec<&'static str> {
+    let mut fs = Vec::new();
+    if cfg!(feature = "simd") {
+        fs.push("simd");
+    }
+    if cfg!(feature = "pjrt") {
+        fs.push("pjrt");
+    }
+    fs
+}
+
+/// The `config` block stamped into every bench result file: enabled
+/// feature flags plus whether the SIMD kernels are actually live (the
+/// feature can be compiled in but forced off via
+/// `tensor::force_scalar_kernels`).
+fn config_json() -> Json {
+    Json::obj(vec![
+        (
+            "features",
+            Json::arr(enabled_features().iter().map(|f| Json::str(*f)).collect()),
+        ),
+        (
+            "simd_kernels_active",
+            Json::Bool(crate::tensor::simd_kernels_active()),
+        ),
+    ])
 }
 
 /// The default master seed benches feed every `Rng`, trainer, and
@@ -276,6 +309,7 @@ pub fn write_bench_json_to(
         ("bench", Json::str(name.to_string())),
         ("unit", Json::str(unit.to_string())),
         ("schema", Json::str("config/mean/p50/p95/p99/n".to_string())),
+        ("config", config_json()),
         ("records", Json::arr(records.iter().map(|r| r.to_json()).collect())),
     ]);
     std::fs::write(&path, doc.to_string())?;
@@ -343,6 +377,17 @@ mod tests {
         assert!(r.get("p95").unwrap().as_f64().is_ok());
         assert!(r.get("p99").unwrap().as_f64().is_ok());
         assert_eq!(r.get("method").unwrap().as_str().unwrap(), "oft_v2");
+        // Every emitter stamps the build config so perf trajectories
+        // are attributable to feature flags.
+        let cfg = doc.get("config").unwrap();
+        let feats = cfg.get("features").unwrap().as_arr().unwrap();
+        for f in feats {
+            assert!(f.as_str().is_ok(), "features must be strings");
+        }
+        assert_eq!(
+            cfg.get("simd_kernels_active"),
+            Some(&Json::Bool(crate::tensor::simd_kernels_active()))
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -68,25 +68,60 @@ impl AwqTensor {
         })
     }
 
+    /// Decode rows `[r0, r0 + rows)` into `out` (row-major
+    /// `rows x dout`) — **the** scalar AWQ decode oracle:
+    /// `w = (nibble - 8) * scales[group, col] / eq[row]`, per element.
+    pub fn decode_rows(&self, r0: usize, rows: usize, out: &mut [f32]) {
+        let dout = self.dout;
+        debug_assert_eq!(out.len(), rows * dout);
+        for (ri, prow) in out.chunks_mut(dout).enumerate() {
+            let r = r0 + ri;
+            let srow = &self.scales[(r / AWQ_GROUP) * dout..(r / AWQ_GROUP + 1) * dout];
+            let crow = &self.codes[(r / 2) * dout..(r / 2 + 1) * dout];
+            let hi = r % 2 == 0;
+            let eq = self.eq[r];
+            for ((v, &byte), &s) in prow.iter_mut().zip(crow).zip(srow) {
+                let raw = if hi { byte >> 4 } else { byte & 0xF };
+                let nib = raw as i32 - 8;
+                *v = nib as f32 * s / eq;
+            }
+        }
+    }
+
+    /// Vectorizable decode, bitwise identical to [`Self::decode_rows`]:
+    /// the high/low nibble select is hoisted out of the inner loop (it
+    /// is constant per row), leaving a branch-free shift/mask + scale
+    /// loop the compiler can lane-block. Every element computes the
+    /// exact same IEEE expression (including the division by `eq`).
+    pub fn decode_rows_fast(&self, r0: usize, rows: usize, out: &mut [f32]) {
+        let dout = self.dout;
+        debug_assert_eq!(out.len(), rows * dout);
+        for (ri, prow) in out.chunks_mut(dout).enumerate() {
+            let r = r0 + ri;
+            let srow = &self.scales[(r / AWQ_GROUP) * dout..(r / AWQ_GROUP + 1) * dout];
+            let crow = &self.codes[(r / 2) * dout..(r / 2 + 1) * dout];
+            let eq = self.eq[r];
+            if r % 2 == 0 {
+                for ((v, &byte), &s) in prow.iter_mut().zip(crow).zip(srow) {
+                    *v = ((byte >> 4) as i32 - 8) as f32 * s / eq;
+                }
+            } else {
+                for ((v, &byte), &s) in prow.iter_mut().zip(crow).zip(srow) {
+                    *v = ((byte & 0xF) as i32 - 8) as f32 * s / eq;
+                }
+            }
+        }
+    }
+
     /// Dequantize: w = q * scales[group, col] / eq[row]. (Oracle path —
-    /// counted by `quant::dequant_f32_count`.)
+    /// counted by `quant::dequant_f32_count`.) Delegates to
+    /// [`Self::decode_rows`] over all rows so there is exactly one
+    /// scalar decode implementation.
     pub fn dequantize(&self) -> Tensor {
         super::note_dequant_f32();
         let (din, dout) = (self.din, self.dout);
         let mut out = vec![0f32; din * dout];
-        for r2 in 0..din / 2 {
-            for c in 0..dout {
-                let byte = self.codes[r2 * dout + c];
-                for (k, nib) in [(byte >> 4) as i32 - 8, (byte & 0xF) as i32 - 8]
-                    .into_iter()
-                    .enumerate()
-                {
-                    let r = 2 * r2 + k;
-                    let s = self.scales[(r / AWQ_GROUP) * dout + c];
-                    out[r * dout + c] = nib as f32 * s / self.eq[r];
-                }
-            }
-        }
+        self.decode_rows(0, din, &mut out);
         Tensor::from_vec(&[din, dout], out)
     }
 
@@ -155,6 +190,23 @@ mod tests {
                 .sum()
         };
         assert!(err(&tuned) <= err(&plain));
+    }
+
+    #[test]
+    fn fast_decode_is_bitwise_equal_to_oracle() {
+        let mut rng = Rng::new(18);
+        let (din, dout) = (128usize, 33usize);
+        let w = Tensor::randn(&[din, dout], 0.5, &mut rng);
+        let q = AwqTensor::quantize(&w, None).unwrap();
+        for (r0, rows) in [(0usize, din), (1, 1), (2, 1), (63, 3), (din - 1, 1), (4, 0)] {
+            let mut a = vec![0.0f32; rows * dout];
+            let mut b = vec![f32::NAN; rows * dout];
+            q.decode_rows(r0, rows, &mut a);
+            q.decode_rows_fast(r0, rows, &mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "r0={r0} rows={rows} i={i}");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,23 @@ pub const NF4_CODE: [f32; 16] = [
     1.0,
 ];
 
+/// Byte -> (high-nibble code, low-nibble code), precomputed at compile
+/// time. The fast decoder expands one packed byte to two f32 codes with
+/// a single table load instead of two shifts + two 16-entry lookups;
+/// the products `code * absmax` are the exact expressions the scalar
+/// decoder computes, so the fast path stays bitwise identical.
+const fn nf4_pair_lut() -> [[f32; 2]; 256] {
+    let mut lut = [[0.0f32; 2]; 256];
+    let mut b = 0;
+    while b < 256 {
+        lut[b][0] = NF4_CODE[b >> 4];
+        lut[b][1] = NF4_CODE[b & 0xF];
+        b += 1;
+    }
+    lut
+}
+static NF4_PAIRS: [[f32; 2]; 256] = nf4_pair_lut();
+
 /// Elements per absmax block.
 pub const NF4_BLOCK: usize = 64;
 /// Absmax values per double-quantization group.
@@ -120,25 +137,65 @@ impl Nf4Tensor {
         }
     }
 
+    /// Decode flat elements `[e0, e0 + out.len())` — **the** scalar NF4
+    /// decode oracle. Everything else (`dequantize`, the fast decoder,
+    /// `QuantWeight::decode_rows`) is defined as equal to this loop.
+    /// The per-block absmax is reconstructed with the canonical
+    /// `q/127 * s + offset` expression, cached across each 64-elem
+    /// block.
+    pub fn decode_flat(&self, e0: usize, out: &mut [f32]) {
+        let mut e = e0;
+        let mut blk = usize::MAX;
+        let mut am = 0.0f32;
+        for v in out.iter_mut() {
+            let b = e / NF4_BLOCK;
+            if b != blk {
+                blk = b;
+                let g = b / NF4_GROUP;
+                am = self.absmax_q[b] as f32 / 127.0 * self.absmax_s[g] + self.offset;
+            }
+            let byte = self.codes[e / 2];
+            let nib = if e % 2 == 0 { byte >> 4 } else { byte & 0xF };
+            *v = NF4_CODE[nib as usize] * am;
+            e += 1;
+        }
+    }
+
+    /// Vectorizable decode, bitwise identical to [`Self::decode_flat`]:
+    /// scalar head/tail at block boundaries, whole blocks expanded
+    /// byte -> code pair through the 256-entry [`NF4_PAIRS`] table in a
+    /// branch-free inner loop (block starts are even, so the nibble
+    /// pairing inside a byte never straddles a block).
+    pub fn decode_flat_fast(&self, e0: usize, out: &mut [f32]) {
+        let head = ((NF4_BLOCK - e0 % NF4_BLOCK) % NF4_BLOCK).min(out.len());
+        self.decode_flat(e0, &mut out[..head]);
+        let mut e = e0 + head;
+        let mut off = head;
+        while out.len() - off >= NF4_BLOCK {
+            let b = e / NF4_BLOCK;
+            let g = b / NF4_GROUP;
+            let am = self.absmax_q[b] as f32 / 127.0 * self.absmax_s[g] + self.offset;
+            let bytes = &self.codes[e / 2..e / 2 + NF4_BLOCK / 2];
+            let dst = &mut out[off..off + NF4_BLOCK];
+            for (pi, &byte) in bytes.iter().enumerate() {
+                let pair = NF4_PAIRS[byte as usize];
+                dst[2 * pi] = pair[0] * am;
+                dst[2 * pi + 1] = pair[1] * am;
+            }
+            e += NF4_BLOCK;
+            off += NF4_BLOCK;
+        }
+        self.decode_flat(e, &mut out[off..]);
+    }
+
     /// Dequantize back to f32 (host-side oracle for the Pallas kernel
     /// and the fused matmuls; counted by `quant::dequant_f32_count`).
+    /// Delegates to [`Self::decode_flat`] over the full range so there
+    /// is exactly one scalar decode implementation.
     pub fn dequantize(&self) -> Tensor {
         super::note_dequant_f32();
-        let npad = self.codes.len() * 2;
-        let nb = npad / NF4_BLOCK;
-        let mut absmax = vec![0f32; nb];
-        for b in 0..nb {
-            let g = b / NF4_GROUP;
-            absmax[b] = self.absmax_q[b] as f32 / 127.0 * self.absmax_s[g] + self.offset;
-        }
-        let mut out = Vec::with_capacity(npad);
-        for (i, &byte) in self.codes.iter().enumerate() {
-            let b = (2 * i) / NF4_BLOCK;
-            out.push(NF4_CODE[(byte >> 4) as usize] * absmax[b]);
-            let b2 = (2 * i + 1) / NF4_BLOCK;
-            out.push(NF4_CODE[(byte & 0xF) as usize] * absmax[b2]);
-        }
-        out.truncate(self.n);
+        let mut out = vec![0.0f32; self.n];
+        self.decode_flat(0, &mut out);
         Tensor::from_vec(&self.shape, out)
     }
 
@@ -220,6 +277,33 @@ mod tests {
         let q = Nf4Tensor::quantize(&t);
         let bpp = q.bytes_per_param();
         assert!(bpp > 0.5 && bpp < 0.53, "{bpp}");
+    }
+
+    #[test]
+    fn fast_decode_is_bitwise_equal_to_oracle() {
+        let mut rng = Rng::new(17);
+        // 100*33 is odd-width and non-block-aligned end; exercises odd
+        // e0 (mid-byte starts), heads, whole blocks, and tails.
+        let t = Tensor::randn(&[100, 33], 0.7, &mut rng);
+        let q = Nf4Tensor::quantize(&t);
+        for (e0, len) in [
+            (0usize, q.n),
+            (0, 1),
+            (1, 130),
+            (33, 64),
+            (63, 66),
+            (64, 128),
+            (q.n - 1, 1),
+            (5, 0),
+        ] {
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![f32::NAN; len];
+            q.decode_flat(e0, &mut a);
+            q.decode_flat_fast(e0, &mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "e0={e0} len={len} i={i}");
+            }
+        }
     }
 
     #[test]

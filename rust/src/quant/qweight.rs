@@ -17,7 +17,7 @@
 use anyhow::{ensure, Result};
 
 use super::awq::{AwqTensor, AWQ_GROUP};
-use super::nf4::{Nf4Tensor, NF4_BLOCK, NF4_CODE, NF4_GROUP};
+use super::nf4::{Nf4Tensor, NF4_BLOCK, NF4_GROUP};
 use crate::tensor::fused::{fused_matmul, fused_matmul_t};
 use crate::tensor::Tensor;
 
@@ -137,45 +137,28 @@ impl QuantWeight {
 
     /// Decode rows `[r0, r0 + rows)` of the weight into `panel`
     /// (row-major `rows x dout`), bit-identical to the same rows of
-    /// `dequantize()`.
+    /// `dequantize()` in **both** dispatch modes: the scalar path *is*
+    /// the per-format oracle (`Nf4Tensor::decode_flat` /
+    /// `AwqTensor::decode_rows`), and the fast paths compute identical
+    /// per-element IEEE expressions with vectorizable loop structure.
     pub fn decode_rows(&self, r0: usize, rows: usize, panel: &mut [f32]) {
+        let fast = crate::tensor::simd_kernels_active();
         match &self.0 {
             Repr::Nf4(q) => {
                 let dout = q.shape[1];
                 debug_assert_eq!(panel.len(), rows * dout);
-                // Flat element index walks the row range; the per-block
-                // absmax is reconstructed with exactly the expression
-                // `dequantize()` uses, cached across the 64-elem block.
-                let mut e = r0 * dout;
-                let mut blk = usize::MAX;
-                let mut am = 0.0f32;
-                for v in panel.iter_mut() {
-                    let b = e / NF4_BLOCK;
-                    if b != blk {
-                        blk = b;
-                        let g = b / NF4_GROUP;
-                        am = q.absmax_q[b] as f32 / 127.0 * q.absmax_s[g] + q.offset;
-                    }
-                    let byte = q.codes[e / 2];
-                    let nib = if e % 2 == 0 { byte >> 4 } else { byte & 0xF };
-                    *v = NF4_CODE[nib as usize] * am;
-                    e += 1;
+                if fast {
+                    q.decode_flat_fast(r0 * dout, panel);
+                } else {
+                    q.decode_flat(r0 * dout, panel);
                 }
             }
             Repr::Awq(q) => {
-                let dout = q.dout;
-                debug_assert_eq!(panel.len(), rows * dout);
-                for (ri, prow) in panel.chunks_mut(dout).enumerate() {
-                    let r = r0 + ri;
-                    let srow = &q.scales[(r / AWQ_GROUP) * dout..(r / AWQ_GROUP + 1) * dout];
-                    let crow = &q.codes[(r / 2) * dout..(r / 2 + 1) * dout];
-                    let hi = r % 2 == 0;
-                    let eq = q.eq[r];
-                    for ((v, &byte), &s) in prow.iter_mut().zip(crow).zip(srow) {
-                        let raw = if hi { byte >> 4 } else { byte & 0xF };
-                        let nib = raw as i32 - 8;
-                        *v = nib as f32 * s / eq;
-                    }
+                debug_assert_eq!(panel.len(), rows * q.dout);
+                if fast {
+                    q.decode_rows_fast(r0, rows, panel);
+                } else {
+                    q.decode_rows(r0, rows, panel);
                 }
             }
         }

@@ -4,11 +4,15 @@
 //!
 //! The kernels are deliberately accumulation-order-compatible with
 //! [`Tensor::matmul`]: every output element accumulates over the
-//! contraction index in ascending order, with the same skip on zero
-//! left-hand values, so `fused_matmul(x, ...)` reproduces
-//! `x.matmul(&w.dequantize())` bit for bit whenever the decoder emits
-//! the exact `dequantize()` values. One row panel is decoded per
-//! K-block (the same `KC` blocking as `matmul_panel`) and shared
+//! contraction index in ascending order with a single accumulator, so
+//! `fused_matmul(x, ...)` reproduces `x.matmul(&w.dequantize())` bit
+//! for bit whenever the decoder emits the exact `dequantize()` values.
+//! This holds in *both* dispatch modes: the scalar paths here mirror
+//! the scalar `matmul_panel`, and the SIMD paths share the exact
+//! [`crate::tensor::simd::fma_row_block`] microkernel dense matmul
+//! uses (`fused_matmul_t` transposes each decoded panel first so its
+//! contraction runs through the same kernel). One row panel is decoded
+//! per K-block (the same `KC` blocking as `matmul_panel`) and shared
 //! read-only by the [`parallel_over_rows`] workers; each output row is
 //! written by exactly one thread, so results are deterministic at every
 //! thread count (and under `set_thread_cap`, which data-parallel
@@ -42,6 +46,9 @@ where
     if m == 0 || din == 0 || dout == 0 {
         return Ok(Tensor::from_vec(&[m, dout], out));
     }
+    // One dispatch decision per call (caller thread), captured by the
+    // row workers — a fused matmul never mixes kernels.
+    let fast = crate::tensor::simd_kernels_active();
     let mut panel = vec![0.0f32; KC.min(din) * dout];
     let mut p0 = 0;
     while p0 < din {
@@ -51,14 +58,15 @@ where
         let decoded: &[f32] = &panel[..rows * dout];
         parallel_over_rows(&mut out, m, dout, |i, orow| {
             let xrow = &x.data[i * din..(i + 1) * din];
-            for p in p0..pend {
-                let av = xrow[p];
-                if av == 0.0 {
-                    continue;
-                }
-                let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
-                for (o, &bv) in orow.iter_mut().zip(wrow) {
-                    *o += av * bv;
+            if fast {
+                super::simd::fma_row_block(orow, &xrow[p0..pend], decoded, dout);
+            } else {
+                for p in p0..pend {
+                    let av = xrow[p];
+                    let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
+                    for (o, &bv) in orow.iter_mut().zip(wrow) {
+                        *o += av * bv;
+                    }
                 }
             }
         });
@@ -84,27 +92,48 @@ where
     if m == 0 || din == 0 || dout == 0 {
         return Ok(Tensor::from_vec(&[m, din], out));
     }
+    let fast = crate::tensor::simd_kernels_active();
     let mut panel = vec![0.0f32; KC.min(din) * dout];
+    let mut tpanel = if fast {
+        vec![0.0f32; KC.min(din) * dout]
+    } else {
+        Vec::new()
+    };
     let mut p0 = 0;
     while p0 < din {
         let pend = (p0 + KC).min(din);
         let rows = pend - p0;
         decode(p0, rows, &mut panel[..rows * dout]);
         let decoded: &[f32] = &panel[..rows * dout];
+        if fast {
+            // Transpose the decoded panel once (amortized over all m
+            // rows) so the contraction runs through the same
+            // `fma_row_block` microkernel as dense `g @ W^T` — keeping
+            // the two bit-identical under SIMD as well.
+            for r in 0..rows {
+                for j in 0..dout {
+                    tpanel[j * rows + r] = decoded[r * dout + j];
+                }
+            }
+        }
+        let transposed: &[f32] = &tpanel[..if fast { rows * dout } else { 0 }];
         parallel_over_rows(&mut out, m, din, |i, orow| {
             let grow = &g.data[i * dout..(i + 1) * dout];
-            for p in p0..pend {
-                let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
-                // Same per-element order as dy.matmul(&w.transpose2()):
-                // ascending contraction index, zero left-values skipped.
-                let mut acc = 0.0f32;
-                for (&gv, &wv) in grow.iter().zip(wrow) {
-                    if gv == 0.0 {
-                        continue;
+            if fast {
+                // out starts zeroed and each p lives in exactly one
+                // K-block, so accumulate-into-zero equals assignment.
+                super::simd::fma_row_block(&mut orow[p0..pend], grow, transposed, rows);
+            } else {
+                for p in p0..pend {
+                    let wrow = &decoded[(p - p0) * dout..(p - p0 + 1) * dout];
+                    // Same per-element order as dy.matmul(&w.transpose2()):
+                    // ascending contraction index, single accumulator.
+                    let mut acc = 0.0f32;
+                    for (&gv, &wv) in grow.iter().zip(wrow) {
+                        acc += gv * wv;
                     }
-                    acc += gv * wv;
+                    orow[p] = acc;
                 }
-                orow[p] = acc;
             }
         });
         p0 = pend;

@@ -4,12 +4,47 @@
 //! accelerator: parameter initialization, quantization, host-side PEFT
 //! oracles (rust/src/peft), requantization-error analysis, and checks
 //! against the runtime outputs. Deliberately simple (row-major, f32).
+//!
+//! Hot-path inner loops optionally dispatch to the explicit-SIMD
+//! microkernels in [`simd`] when the crate is built with
+//! `--features simd` (see [`simd_kernels_active`]); the scalar kernels
+//! in this file are the locked oracle and the only path in default
+//! builds.
 
 pub mod fused;
+pub mod simd;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
+
+/// Process-wide kill switch for the SIMD kernel dispatch, used by the
+/// equivalence tests and the roofline bench to measure the scalar
+/// oracle from a `--features simd` build. Global (not thread-local) on
+/// purpose: kernels run on worker threads the caller never sees, and a
+/// split-brain dispatch would break the bitwise thread-count
+/// invariance.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force every kernel onto its scalar oracle path (`true`) or restore
+/// SIMD dispatch (`false`); returns the previous setting. No-op in
+/// builds without the `simd` feature. Test/bench hook — flipping it
+/// concurrently with bitwise-comparison tests is a race, so such tests
+/// serialize on a lock.
+pub fn force_scalar_kernels(on: bool) -> bool {
+    FORCE_SCALAR.swap(on, Ordering::SeqCst)
+}
+
+/// Whether kernel calls currently dispatch to the SIMD microkernels
+/// ([`simd`]): requires the `simd` cargo feature and no
+/// [`force_scalar_kernels`] override. Constant across threads, so a
+/// kernel and its workers always agree.
+pub fn simd_kernels_active() -> bool {
+    cfg!(feature = "simd") && !FORCE_SCALAR.load(Ordering::SeqCst)
+}
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -85,9 +120,12 @@ impl Tensor {
         if m == 0 || k == 0 || n == 0 {
             return Ok(Tensor::from_vec(&[m, n], out));
         }
+        // Dispatch decided once per call, on the calling thread, and
+        // shared by every worker: one matmul never mixes kernels.
+        let fast = simd_kernels_active();
         let threads = matmul_threads(m, m * k * n);
         if threads <= 1 {
-            matmul_panel(&self.data, &other.data, &mut out, 0, m, k, n);
+            matmul_panel(&self.data, &other.data, &mut out, 0, m, k, n, fast);
         } else {
             let rows_per = m.div_ceil(threads);
             std::thread::scope(|s| {
@@ -96,7 +134,7 @@ impl Tensor {
                     let b = &other.data;
                     s.spawn(move || {
                         let rows = chunk.len() / n;
-                        matmul_panel(a, b, chunk, ci * rows_per, rows, k, n);
+                        matmul_panel(a, b, chunk, ci * rows_per, rows, k, n, fast);
                     });
                 }
             });
@@ -230,7 +268,22 @@ impl Tensor {
 
 /// One thread's share of a matmul: rows [row0, row0+rows) of the
 /// output, k-blocked so a panel of B stays cache-hot across rows.
-fn matmul_panel(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+/// `fast` routes to the SIMD microkernel (same KC blocking, same
+/// per-element ascending-contraction accumulation).
+fn matmul_panel(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    fast: bool,
+) {
+    if fast {
+        simd::matmul_panel(a, b, out, row0, rows, k, n);
+        return;
+    }
     const KC: usize = 256;
     let mut p0 = 0;
     while p0 < k {
@@ -239,10 +292,12 @@ fn matmul_panel(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, rows: usize,
             let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
             let orow = &mut out[i * n..(i + 1) * n];
             for p in p0..pend {
+                // No zero-skip: the old `if av == 0.0 { continue }` fast
+                // path made latency depend on input sparsity (timing
+                // noise in every bench) and blocked vectorization of
+                // this loop. Dropping it only changes results on
+                // non-finite inputs (0 * inf), which no caller feeds.
                 let av = arow[p];
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = &b[p * n..p * n + n];
                 for (o, &bv) in orow.iter_mut().zip(brow) {
                     *o += av * bv;
@@ -264,21 +319,36 @@ thread_local! {
 
 /// Cap kernel-internal threading for the *calling* thread (and any
 /// kernel invoked from it). `usize::MAX` restores the default.
-pub(crate) fn set_thread_cap(cap: usize) {
+///
+/// Public so the SIMD equivalence suite (rust/tests/simd_kernels.rs)
+/// and benches can sweep thread caps; results are identical at every
+/// cap (each output row is computed by exactly one thread).
+pub fn set_thread_cap(cap: usize) {
     THREAD_CAP.with(|c| c.set(cap.max(1)));
 }
 
+/// Hardware parallelism, resolved once per process: the old
+/// per-matmul `available_parallelism()` syscall showed up in gemv-heavy
+/// decode profiles.
+fn hw_parallelism() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
 /// Worker count for a matmul of `flops` fused multiply-adds over `rows`
-/// output rows (1 below the threading threshold).
+/// output rows (1 below the threading threshold). `THREAD_CAP`
+/// semantics are unchanged: the per-thread cap still applies on every
+/// call — only the hardware count is cached.
 fn matmul_threads(rows: usize, flops: usize) -> usize {
     if flops < (1 << 18) {
         return 1;
     }
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
     let cap = THREAD_CAP.with(|c| c.get());
-    hw.min(cap).min(rows).max(1)
+    hw_parallelism().min(cap).min(rows).max(1)
 }
 
 /// Apply `f(row_index, row_slice)` over the rows of a (rows, cols)
@@ -365,6 +435,29 @@ mod tests {
         let x = a.matmul(&b).unwrap();
         let y = a.matmul(&b).unwrap();
         assert_eq!(x, y, "repeated matmuls must agree bitwise");
+    }
+
+    #[test]
+    fn matmul_threads_respects_caps_and_cached_parallelism() {
+        // Below the flops threshold: always single-threaded.
+        assert_eq!(matmul_threads(64, 1 << 10), 1);
+        // The OnceLock'd hardware count is stable and matches the OS.
+        let hw = hw_parallelism();
+        assert!(hw >= 1);
+        assert_eq!(hw, hw_parallelism());
+        assert_eq!(
+            hw,
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        );
+        // THREAD_CAP semantics unchanged: the per-thread cap still
+        // applies per call, on top of the cached hardware count.
+        set_thread_cap(2);
+        assert!(matmul_threads(64, 1 << 20) <= 2);
+        assert_eq!(matmul_threads(1, 1 << 20), 1);
+        set_thread_cap(usize::MAX);
+        assert_eq!(matmul_threads(1 << 20, 1 << 20), hw);
     }
 
     #[test]

@@ -1,0 +1,371 @@
+//! Explicit-SIMD inner microkernels for the f32 hot paths.
+//!
+//! Every kernel here has a scalar twin that stays the *locked oracle*
+//! (the same pattern `dequantize()` plays for `tensor::fused`): the
+//! SIMD path is only ever reached through a dispatch check
+//! ([`super::simd_kernels_active`]), which is false unless the crate is
+//! built with `--features simd`. The kernels themselves are compiled
+//! unconditionally — they are plain stable Rust — so the equivalence
+//! tests exercise them in every build.
+//!
+//! # Dispatch
+//!
+//! On x86_64 a one-time, cached CPU probe selects an AVX2+FMA
+//! instantiation (`#[target_feature]` wrappers around `#[inline(always)]`
+//! lane kernels, so `f32::mul_add` compiles to `vfmadd` — never a libm
+//! call). Everywhere else a portable lane-blocked fallback runs, using
+//! plain `a * b + c` — which makes the fallback bitwise identical to
+//! the scalar oracle for the accumulate-style kernels. The probe result
+//! is process-constant, so results are deterministic within a build at
+//! every thread count and `set_thread_cap` value: the dispatch decision
+//! never varies call-to-call.
+//!
+//! # Equivalence contract (per kernel)
+//!
+//! * [`fma_row_block`] / [`matmul_panel`]: per output element the
+//!   contraction runs in ascending index order with a single
+//!   accumulator — exactly the scalar chain, but with fused
+//!   multiply-adds. Kernels that share this microkernel (dense matmul,
+//!   `fused_matmul`, `fused_matmul_t`) therefore stay *bitwise
+//!   consistent with each other* within a build, and match the scalar
+//!   oracle to <= 1e-5 (the only difference is the intermediate
+//!   rounding an FMA removes).
+//! * [`dot`]: fixed 4x8-lane partial sums reduced in a fixed order —
+//!   deterministic, <= 1e-5 relative to the scalar left-to-right sum.
+
+use std::sync::OnceLock;
+
+/// f32 lanes per vector register (AVX2 ymm).
+const LANES: usize = 8;
+
+/// Register tile width of the row microkernel (4 ymm accumulators).
+const TILE: usize = 4 * LANES;
+
+/// Cached runtime probe for AVX2 + FMA.
+#[cfg(target_arch = "x86_64")]
+fn have_avx2_fma() -> bool {
+    static PROBE: OnceLock<bool> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn have_avx2_fma() -> bool {
+    false
+}
+
+/// One fused (or plain) multiply-add, selected at monomorphization
+/// time. The `FMA` instantiation is only ever inlined into
+/// `#[target_feature(enable = "fma")]` wrappers, where `mul_add`
+/// lowers to a `vfmadd` instruction rather than a libm call.
+#[inline(always)]
+fn fma1<const FMA: bool>(a: f32, b: f32, c: f32) -> f32 {
+    if FMA {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row microkernel: out[j] += sum_p x[p] * w[p * n + j]
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn fma_row_block_inner<const FMA: bool>(out: &mut [f32], x: &[f32], w: &[f32], n: usize) {
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    let kc = x.len();
+    let mut j0 = 0;
+    // 4 accumulator registers of LANES each stay live across the whole
+    // contraction — the memory round-trip per p of the scalar kernel
+    // becomes one load/store per TILE columns.
+    while j0 + TILE <= n {
+        let mut acc = [[0.0f32; LANES]; 4];
+        for (t, a) in acc.iter_mut().enumerate() {
+            a.copy_from_slice(&out[j0 + t * LANES..j0 + (t + 1) * LANES]);
+        }
+        for p in 0..kc {
+            let av = x[p];
+            let wrow = &w[p * n + j0..p * n + j0 + TILE];
+            for (t, a) in acc.iter_mut().enumerate() {
+                for l in 0..LANES {
+                    a[l] = fma1::<FMA>(av, wrow[t * LANES + l], a[l]);
+                }
+            }
+        }
+        for (t, a) in acc.iter().enumerate() {
+            out[j0 + t * LANES..j0 + (t + 1) * LANES].copy_from_slice(a);
+        }
+        j0 += TILE;
+    }
+    while j0 + LANES <= n {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&out[j0..j0 + LANES]);
+        for p in 0..kc {
+            let av = x[p];
+            let wrow = &w[p * n + j0..p * n + j0 + LANES];
+            for l in 0..LANES {
+                acc[l] = fma1::<FMA>(av, wrow[l], acc[l]);
+            }
+        }
+        out[j0..j0 + LANES].copy_from_slice(&acc);
+        j0 += LANES;
+    }
+    // Scalar tail: same single-accumulator ascending-p chain.
+    for j in j0..n {
+        let mut acc = out[j];
+        for p in 0..kc {
+            acc = fma1::<FMA>(x[p], w[p * n + j], acc);
+        }
+        out[j] = acc;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fma_row_block_avx2(out: &mut [f32], x: &[f32], w: &[f32], n: usize) {
+    fma_row_block_inner::<true>(out, x, w, n);
+}
+
+/// `out[j] += sum_p x[p] * w[p * n + j]` — the shared microkernel
+/// behind dense matmul, the fused quant matmuls, and the CNP block
+/// rotations. Per output element the contraction is a single
+/// accumulator chain in ascending `p`, so every caller of this kernel
+/// is bitwise consistent with every other within a build.
+pub fn fma_row_block(out: &mut [f32], x: &[f32], w: &[f32], n: usize) {
+    assert_eq!(out.len(), n);
+    assert_eq!(w.len(), x.len() * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if have_avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by the runtime probe.
+            unsafe { fma_row_block_avx2(out, x, w, n) };
+            return;
+        }
+    }
+    fma_row_block_inner::<false>(out, x, w, n);
+}
+
+/// The dense matmul panel in SIMD form: same `KC` contraction blocking
+/// as the scalar `matmul_panel`, rows of the output via
+/// [`fma_row_block`].
+pub(crate) fn matmul_panel(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    const KC: usize = 256;
+    let mut p0 = 0;
+    while p0 < k {
+        let pend = (p0 + KC).min(k);
+        let bpanel = &b[p0 * n..pend * n];
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * k + p0..(row0 + i) * k + pend];
+            fma_row_block(&mut out[i * n..(i + 1) * n], arow, bpanel, n);
+        }
+        p0 = pend;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dot product (the HOFT reflection hot path)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn dot_inner<const FMA: bool>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [[0.0f32; LANES]; 4];
+    let mut i = 0;
+    while i + TILE <= n {
+        for (t, ac) in acc.iter_mut().enumerate() {
+            let sa = &a[i + t * LANES..i + (t + 1) * LANES];
+            let sb = &b[i + t * LANES..i + (t + 1) * LANES];
+            for l in 0..LANES {
+                ac[l] = fma1::<FMA>(sa[l], sb[l], ac[l]);
+            }
+        }
+        i += TILE;
+    }
+    while i + LANES <= n {
+        for l in 0..LANES {
+            acc[0][l] = fma1::<FMA>(a[i + l], b[i + l], acc[0][l]);
+        }
+        i += LANES;
+    }
+    // Fixed reduction order: pairwise over the 4 registers, then left
+    // to right across lanes, then the scalar tail. Deterministic.
+    let mut lanes = [0.0f32; LANES];
+    for l in 0..LANES {
+        lanes[l] = (acc[0][l] + acc[1][l]) + (acc[2][l] + acc[3][l]);
+    }
+    let mut s = 0.0f32;
+    for v in lanes {
+        s += v;
+    }
+    for j in i..n {
+        s = fma1::<FMA>(a[j], b[j], s);
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    dot_inner::<true>(a, b)
+}
+
+/// Lane-parallel dot product with a fixed reduction order.
+/// Deterministic; <= 1e-5 relative to the scalar left-to-right sum
+/// (lane partial sums reassociate the accumulation).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if have_avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by the runtime probe.
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    dot_inner::<false>(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic-peak probe (the roofline bench's denominator)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn peak_inner<const FMA: bool>(iters: usize) -> f32 {
+    // 8 independent LANES-wide accumulator chains: enough to cover FMA
+    // latency x throughput on every recent x86 core, so the loop runs
+    // at the per-core multiply-add peak of whichever instruction set
+    // this instantiation targets.
+    let m = std::hint::black_box(0.999_999f32);
+    let c = std::hint::black_box(1.0e-9f32);
+    let mut acc = [[0.0f32; LANES]; 8];
+    for (t, row) in acc.iter_mut().enumerate() {
+        for (l, v) in row.iter_mut().enumerate() {
+            *v = (t * LANES + l) as f32 * 1.0e-3;
+        }
+    }
+    for _ in 0..iters {
+        for row in acc.iter_mut() {
+            for v in row.iter_mut() {
+                *v = fma1::<FMA>(*v, m, c);
+            }
+        }
+    }
+    let mut s = 0.0f32;
+    for row in &acc {
+        for v in row {
+            s += *v;
+        }
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn peak_avx2(iters: usize) -> f32 {
+    peak_inner::<true>(iters)
+}
+
+/// Measured per-core arithmetic peak estimate in GFLOP/s: times a
+/// register-resident multiply-add loop (no memory traffic) on the same
+/// instruction set the kernels dispatch to. The roofline bench divides
+/// kernel GFLOP/s by this to report a fraction of peak.
+pub fn arithmetic_peak_gflops() -> f64 {
+    let iters = 2_000_000usize;
+    let flops = (iters * 8 * LANES * 2) as f64;
+    let run = || -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if have_avx2_fma() {
+                // SAFETY: AVX2 + FMA presence verified by the probe.
+                return std::hint::black_box(unsafe { peak_avx2(iters) });
+            }
+        }
+        std::hint::black_box(peak_inner::<false>(iters))
+    };
+    let _ = run(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = std::time::Instant::now();
+        let _ = run();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    flops / best / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_row_block(out: &mut [f32], x: &[f32], w: &[f32], n: usize) {
+        for (p, &av) in x.iter().enumerate() {
+            for j in 0..n {
+                out[j] += av * w[p * n + j];
+            }
+        }
+    }
+
+    #[test]
+    fn row_block_matches_scalar_on_odd_widths() {
+        // Sweep widths around the lane/tile boundaries, including n < 8.
+        let mut state = 1234567u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for &n in &[1usize, 5, 7, 8, 9, 24, 31, 32, 33, 40, 65, 100] {
+            for &kc in &[1usize, 3, 17, 64] {
+                let x: Vec<f32> = (0..kc).map(|_| next()).collect();
+                let w: Vec<f32> = (0..kc * n).map(|_| next()).collect();
+                let mut got = vec![0.25f32; n];
+                let mut want = got.clone();
+                fma_row_block(&mut got, &x, &w, n);
+                scalar_row_block(&mut want, &x, &w, n);
+                for j in 0..n {
+                    let d = (got[j] - want[j]).abs();
+                    assert!(d <= 1e-5, "n={n} kc={kc} j={j}: {} vs {}", got[j], want[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_within_tolerance() {
+        for &n in &[0usize, 1, 7, 8, 33, 100, 1000] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.1).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.1).collect();
+            let got = dot(&a, &b);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (got - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic() {
+        let a: Vec<f32> = (0..513).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..513).map(|i| (i as f32).cos()).collect();
+        let x = dot(&a, &b);
+        let y = dot(&a, &b);
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+
+    #[test]
+    fn peak_probe_is_positive() {
+        // Sanity only — the roofline bench does the real measurement.
+        let g = arithmetic_peak_gflops();
+        assert!(g.is_finite() && g > 0.0, "{g}");
+    }
+}

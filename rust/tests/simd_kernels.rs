@@ -1,0 +1,285 @@
+//! SIMD-vs-scalar equivalence suite: every dispatched kernel against
+//! its locked scalar oracle, under the documented per-kernel contract
+//! (see README "Performance" and `tensor::simd`):
+//!
+//! * NF4/AWQ row decode, `block_rotate_grad_r`: **bitwise**.
+//! * Fused quant matmuls vs dense matmul of `dequantize()`: **bitwise
+//!   consistent within a build** (they share one microkernel).
+//! * Dense matmul, block rotations, HOFT reflections vs the scalar
+//!   loops: <= 1e-5 (FMA + lane blocking reassociate the contraction).
+//! * Deterministic at every thread count and `set_thread_cap` value.
+//!
+//! Every test here toggles the process-global dispatch flag
+//! (`force_scalar_kernels`), so they serialize on one mutex — the flag
+//! must never flip mid-kernel in a concurrently running test. With the
+//! `simd` feature off the dispatched path *is* the scalar path and the
+//! comparisons hold trivially; under `--features simd` they are the
+//! real lock.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use oftv2::coordinator::{BundleState, Manifest};
+use oftv2::peft;
+use oftv2::quant::{AwqTensor, Nf4Tensor, QuantWeight};
+use oftv2::runtime::layers::linear::{
+    block_rotate_fast, block_rotate_grad_r, block_rotate_transposed, build_cnp_blocks,
+};
+use oftv2::runtime::refmodel::{Params, RefBundle};
+use oftv2::tensor::{force_scalar_kernels, set_thread_cap, simd_kernels_active, Tensor};
+use oftv2::testkit;
+use oftv2::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that touch the global dispatch flag. Poison recovery:
+/// a failed test must not cascade into every later one.
+fn serial() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the scalar oracle forced, restoring dispatch after.
+fn with_scalar<T>(f: impl FnOnce() -> T) -> T {
+    let prev = force_scalar_kernels(true);
+    let out = f();
+    force_scalar_kernels(prev);
+    out
+}
+
+fn qweight(kind: &str, din: usize, dout: usize, seed: u64) -> QuantWeight {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
+    match kind {
+        "nf4" => QuantWeight::nf4(Nf4Tensor::quantize(&w)).unwrap(),
+        "awq" => QuantWeight::awq(AwqTensor::quantize(&w, None).unwrap()).unwrap(),
+        other => panic!("unknown kind {other}"),
+    }
+}
+
+#[test]
+fn matmul_matches_scalar_oracle_on_odd_shapes() {
+    let _g = serial();
+    let mut rng = Rng::new(101);
+    // Odd/unaligned dims around the 8-lane / 32-tile boundaries, the
+    // rows=1 matvec, and KC-straddling contraction lengths.
+    for (m, k, n) in [
+        (1usize, 7usize, 5usize),
+        (3, 31, 33),
+        (2, 64, 72),
+        (5, 300, 41),
+        (129, 257, 65),
+        (1, 1000, 1),
+    ] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 0.1, &mut rng);
+        let got = a.matmul(&b).unwrap();
+        let want = with_scalar(|| a.matmul(&b).unwrap());
+        testkit::assert_allclose(&got.data, &want.data, 1e-5, 1e-5)
+            .map_err(|e| format!("({m},{k},{n}): {e}"))
+            .unwrap();
+    }
+}
+
+#[test]
+fn fused_quant_matmuls_bitwise_consistent_with_dense_in_build() {
+    // The fused kernels and the dense matmul share one microkernel per
+    // dispatch mode, so fused == x @ dequantize() stays *exact* under
+    // SIMD too — the lock `quant_fused.rs` establishes for the default
+    // build, re-asserted with the dispatch live.
+    let _g = serial();
+    let mut rng = Rng::new(102);
+    for kind in ["nf4", "awq"] {
+        for (din, dout) in [(64usize, 33usize), (192, 96), (128, 41)] {
+            let qw = qweight(kind, din, dout, rng.next_u64());
+            let d = qw.dequantize();
+            for m in [1usize, 7] {
+                let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+                assert_eq!(
+                    qw.matmul(&x).unwrap(),
+                    x.matmul(&d).unwrap(),
+                    "{kind} ({din},{dout}) m={m}"
+                );
+                let g = Tensor::randn(&[m, dout], 1.0, &mut rng);
+                assert_eq!(
+                    qw.matmul_t(&g).unwrap(),
+                    g.matmul(&d.transpose2()).unwrap(),
+                    "{kind}^T ({din},{dout}) m={m}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_rows_dispatch_is_bitwise() {
+    let _g = serial();
+    for (kind, din, dout) in [("nf4", 96usize, 40usize), ("awq", 128, 48)] {
+        let qw = qweight(kind, din, dout, 7 + din as u64);
+        for (r0, rows) in [(0usize, din), (3, 5), (din - 1, 1)] {
+            let mut got = vec![0.0f32; rows * dout];
+            qw.decode_rows(r0, rows, &mut got);
+            let want = with_scalar(|| {
+                let mut p = vec![f32::NAN; rows * dout];
+                qw.decode_rows(r0, rows, &mut p);
+                p
+            });
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{kind} r0={r0} rows={rows} i={i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rotate_kernels_match_scalar_oracle() {
+    let _g = serial();
+    let mut rng = Rng::new(103);
+    for b in [4usize, 8, 16, 32] {
+        for nb in [1usize, 3] {
+            let d = b * nb;
+            let packed = Tensor::randn(&[nb, peft::packed_dim(b)], 0.05, &mut rng);
+            let blocks = build_cnp_blocks(&packed, b, 4).unwrap();
+            for m in [1usize, 13] {
+                let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+                let dz = Tensor::randn(&[m, d], 1.0, &mut rng);
+
+                let fwd = block_rotate_fast(&x, &blocks).unwrap();
+                let fwd_s = with_scalar(|| block_rotate_fast(&x, &blocks).unwrap());
+                testkit::assert_allclose(&fwd.data, &fwd_s.data, 1e-5, 1e-5)
+                    .map_err(|e| format!("fwd b={b} nb={nb} m={m}: {e}"))
+                    .unwrap();
+
+                let bwd = block_rotate_transposed(&dz, &blocks).unwrap();
+                let bwd_s = with_scalar(|| block_rotate_transposed(&dz, &blocks).unwrap());
+                testkit::assert_allclose(&bwd.data, &bwd_s.data, 1e-5, 1e-5)
+                    .map_err(|e| format!("bwd b={b} nb={nb} m={m}: {e}"))
+                    .unwrap();
+
+                // grad_r stays one scalar implementation: bitwise.
+                let gr = block_rotate_grad_r(&x, &dz, b);
+                let gr_s = with_scalar(|| block_rotate_grad_r(&x, &dz, b));
+                for (a, c) in gr.iter().zip(&gr_s) {
+                    assert_eq!(a, c, "grad_r b={b} nb={nb} m={m}");
+                }
+            }
+        }
+    }
+}
+
+/// Fused-style Params for a bundle: trainables + frozen from the state,
+/// quantized bases as packed `QuantWeight`s (same harness as
+/// rust/tests/quant_fused.rs).
+fn bundle_params(man: &Manifest, st: &BundleState) -> Params {
+    let mut map: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (spec, t) in man.trainable.iter().zip(&st.trainable) {
+        map.insert(spec.name.clone(), t.clone());
+    }
+    for (spec, v) in man.frozen.iter().zip(&st.fixed[..man.frozen.len()]) {
+        map.insert(
+            spec.name.clone(),
+            Tensor::from_vec(&spec.shape, v.f32s().unwrap().to_vec()),
+        );
+    }
+    let mut quant: BTreeMap<String, QuantWeight> = BTreeMap::new();
+    for (base, w) in &st.quantized_bases {
+        let qw = match man.quant.as_str() {
+            "nf4" => QuantWeight::nf4(Nf4Tensor::quantize(w)).unwrap(),
+            "awq" => QuantWeight::awq(AwqTensor::quantize(w, None).unwrap()).unwrap(),
+            other => panic!("unexpected quant '{other}'"),
+        };
+        quant.insert(base.clone(), qw);
+    }
+    Params { map, quant }
+}
+
+#[test]
+fn all_registry_methods_match_scalar_oracle_end_to_end() {
+    // Every registered method's full forward + backward (loss and all
+    // gradients) with SIMD dispatch vs the scalar oracle — covers the
+    // rotate paths of all 9 methods, including BOFT's butterfly factors
+    // and HOFT's reflections, through the real training step.
+    let _g = serial();
+    for tag in oftv2::adapters::bundle_tags("tiny") {
+        let man = Manifest::builtin(&tag).unwrap();
+        let bu = RefBundle::from_manifest(&man).unwrap();
+        let st = BundleState::init(&man, 7, None).unwrap();
+        let params = bundle_params(&man, &st);
+
+        let (b, t) = (man.model.batch, man.model.seq_len);
+        let mut rng = Rng::new(17);
+        let tokens: Vec<i32> = (0..b * (t + 1))
+            .map(|_| rng.below(man.model.vocab) as i32)
+            .collect();
+        let mask = vec![1.0f32; b * t];
+
+        let (lf, gf) = bu.loss_and_grads(&params, &tokens, &mask).unwrap();
+        let (ls, gs) = with_scalar(|| bu.loss_and_grads(&params, &tokens, &mask).unwrap());
+        assert!(
+            (lf - ls).abs() <= 1e-5 * lf.abs().max(1.0),
+            "{tag}: simd loss {lf} vs scalar loss {ls}"
+        );
+        assert_eq!(gf.len(), gs.len(), "{tag}: gradient key sets differ");
+        for (name, g) in &gf {
+            let o = &gs[name];
+            testkit::assert_allclose(&g.data, &o.data, 1e-4, 1e-3)
+                .map_err(|e| format!("{tag} grad '{name}': {e}"))
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn kernels_bitwise_invariant_across_thread_caps() {
+    let _g = serial();
+    let mut rng = Rng::new(104);
+    // Above the threading threshold so caps actually change the worker
+    // count; each output row is computed by one thread either way.
+    let a = Tensor::randn(&[96, 300], 1.0, &mut rng);
+    let b = Tensor::randn(&[300, 64], 0.1, &mut rng);
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    set_thread_cap(1);
+    let want = a.matmul(&b).unwrap();
+    for cap in 2..=hw.max(2) {
+        set_thread_cap(cap);
+        assert_eq!(a.matmul(&b).unwrap(), want, "matmul at cap {cap}");
+    }
+    set_thread_cap(usize::MAX);
+    assert_eq!(a.matmul(&b).unwrap(), want, "matmul at default cap");
+
+    let packed = Tensor::randn(&[1, peft::packed_dim(32)], 0.05, &mut rng);
+    let blocks = build_cnp_blocks(&packed, 32, 4).unwrap();
+    let x = Tensor::randn(&[1024, 32], 1.0, &mut rng);
+    set_thread_cap(1);
+    let r1 = block_rotate_fast(&x, &blocks).unwrap();
+    set_thread_cap(usize::MAX);
+    assert_eq!(block_rotate_fast(&x, &blocks).unwrap(), r1, "rotate at default cap");
+
+    // Same invariance with the scalar oracle forced.
+    with_scalar(|| {
+        set_thread_cap(1);
+        let w1 = a.matmul(&b).unwrap();
+        set_thread_cap(usize::MAX);
+        assert_eq!(a.matmul(&b).unwrap(), w1, "scalar matmul across caps");
+    });
+}
+
+#[test]
+fn force_scalar_flag_roundtrip() {
+    let _g = serial();
+    let prev = force_scalar_kernels(true);
+    assert!(!simd_kernels_active(), "forced scalar must disable dispatch");
+    let was = force_scalar_kernels(false);
+    assert!(was, "swap must return the previous value");
+    assert_eq!(
+        simd_kernels_active(),
+        cfg!(feature = "simd"),
+        "unforced: dispatch tracks the compiled feature"
+    );
+    force_scalar_kernels(prev);
+}
