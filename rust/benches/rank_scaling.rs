@@ -1,0 +1,162 @@
+//! Rank-scaling bench — ZeRO-1 sharded training swept over the rank
+//! count: 1, 2, and 4 ranks (threads over the in-memory message mesh,
+//! the same `RankGroup` collectives the TCP launcher runs).
+//!
+//!   cargo bench --bench rank_scaling [-- --quick]
+//!
+//! Every rank count replays the identical fixed-order reduction tree,
+//! so the loss curves are bitwise identical from 1 rank to 4 (locked
+//! by rust/tests/train_parallel.rs); what moves is the *per-rank* Adam
+//! moment residency, which shards to `ceil(n/ranks)` elements. Shape
+//! targets: per-rank moment bytes <= 0.6x @ 2 ranks and <= 0.35x @ 4
+//! ranks vs the replicated baseline, and the analytic
+//! `optimizer_shard_bytes` pricing within 1.5x of measurement.
+//!
+//! Emits `BENCH_rank_scaling.json` (shared config/mean/p50/p95 schema;
+//! extra fields: method, ranks, moment_bytes_per_rank,
+//! moment_bytes_frac, model_bytes_per_rank).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use oftv2::bench::{
+    bench_seed, fmt_ms, fmt_ratio, print_table, quick_mode, write_bench_json, BenchRecord,
+};
+use oftv2::comms::RankGroup;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::Trainer;
+use oftv2::json::Json;
+use oftv2::memmodel::optimizer_shard_bytes;
+use oftv2::runtime::Engine;
+use oftv2::{artifacts_root, Result};
+
+const TAG: &str = "small_oft_v2";
+
+struct RankRun {
+    losses: Vec<f64>,
+    step_secs: Vec<f64>,
+    moment_bytes: u64,
+}
+
+/// One rank's full training run (its own engine + trainer, connected
+/// to the group when there is one).
+fn run_rank(group: RankGroup, tag: &str, steps: usize) -> Result<RankRun> {
+    let ranks = group.ranks();
+    let engine = Engine::cpu()?;
+    let mut cfg = RunCfg::default();
+    cfg.tag = tag.into();
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.seed = bench_seed();
+    cfg.data.seed = bench_seed();
+    cfg.data.task = "wiki".into();
+    cfg.data.documents = 200;
+    cfg.train.ranks = ranks;
+    let mut tr = Trainer::new(&engine, &artifacts_root(), cfg)?;
+    if ranks > 1 {
+        tr.connect_ranks(Arc::new(group))?;
+    }
+    let hist = tr.train()?;
+    Ok(RankRun {
+        losses: hist.steps.iter().map(|s| s.loss).collect(),
+        step_secs: hist.step_secs(steps / 4),
+        moment_bytes: tr.moment_resident_bytes(),
+    })
+}
+
+/// Run a whole rank group concurrently; returns the per-rank results
+/// in rank order.
+fn run_group(tag: &str, steps: usize, ranks: usize) -> Result<Vec<RankRun>> {
+    let groups = RankGroup::mem_mesh(ranks, Duration::from_secs(120));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|g| s.spawn(move || run_rank(g, tag, steps)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    })
+}
+
+fn main() -> Result<()> {
+    let steps = if quick_mode() { 6 } else { 16 };
+    let rank_counts: [usize; 3] = [1, 2, 4];
+    println!("rank_scaling: seed {}, {} steps per config, tag {TAG}", bench_seed(), steps);
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rows = Vec::new();
+    let mut full_bytes = 0u64; // replicated baseline (ranks = 1)
+    let mut base_mean = 0.0f64;
+    for ranks in rank_counts {
+        let runs = run_group(TAG, steps, ranks)?;
+        // The determinism contract, checked where it is cheapest: every
+        // rank walked the same tree, so every loss curve is identical.
+        for (r, run) in runs.iter().enumerate().skip(1) {
+            assert_eq!(
+                run.losses, runs[0].losses,
+                "rank {r} loss curve diverged from rank 0 at ranks={ranks}"
+            );
+        }
+        let max_bytes = runs.iter().map(|r| r.moment_bytes).max().unwrap_or(0);
+        if ranks == 1 {
+            full_bytes = max_bytes;
+        }
+        let frac = max_bytes as f64 / full_bytes.max(1) as f64;
+
+        // Analytic pricing must track measurement (acceptance: 1.5x).
+        let n_adapter = full_bytes as f64 / 8.0;
+        let predicted = optimizer_shard_bytes(n_adapter, ranks);
+        let model_ratio = predicted / (max_bytes as f64).max(1.0);
+        assert!(
+            (1.0 / 1.5..=1.5).contains(&model_ratio),
+            "memmodel optimizer_shard_bytes off by >1.5x at ranks={ranks}: \
+             predicted {predicted}, measured {max_bytes}"
+        );
+
+        let mut rec = BenchRecord::from_samples(format!("{TAG}_r{ranks}"), &runs[0].step_secs)
+            .with("method", Json::str(TAG))
+            .with("ranks", Json::num(ranks as f64))
+            .with("moment_bytes_per_rank", Json::num(max_bytes as f64))
+            .with("moment_bytes_frac", Json::num(frac))
+            .with("model_bytes_per_rank", Json::num(predicted));
+        if ranks == 1 {
+            base_mean = rec.mean;
+        }
+        rec = rec.with("time_vs_r1", Json::num(rec.mean / base_mean.max(1e-12)));
+        rows.push(vec![
+            ranks.to_string(),
+            fmt_ms(rec.mean),
+            format!("{}", max_bytes),
+            fmt_ratio(frac),
+            fmt_ratio(model_ratio),
+        ]);
+        records.push(rec);
+    }
+    print_table(
+        "rank_scaling: per-rank Adam residency vs rank count",
+        &["ranks", "ms/step", "moment bytes/rank", "vs replicated", "model/measured"],
+        &rows,
+    );
+
+    // ZeRO-1 shape targets: the moment shard must actually shrink.
+    let frac_at = |ranks: usize| {
+        records
+            .iter()
+            .find(|r| r.config == format!("{TAG}_r{ranks}"))
+            .and_then(|r| match r.extra.iter().find(|(k, _)| k == "moment_bytes_frac") {
+                Some((_, Json::Num(f))) => Some(*f),
+                _ => None,
+            })
+            .expect("record just measured")
+    };
+    let f2 = frac_at(2);
+    let f4 = frac_at(4);
+    assert!(f2 <= 0.6, "2 ranks should hold <= 0.6x of the moments, got {f2:.3}x");
+    assert!(f4 <= 0.35, "4 ranks should hold <= 0.35x of the moments, got {f4:.3}x");
+
+    let path = write_bench_json("rank_scaling", "secs", &records)?;
+    println!("\nresults -> {}", path.display());
+    Ok(())
+}

@@ -20,6 +20,7 @@ fn main() -> Result<()> {
         act_bytes: 2.0,
         checkpoint: CheckpointPolicy::None, // Dreambooth scripts keep activations
         residency: BaseResidency::Packed,
+        ranks: 1,
     };
     let mut report = Report::new("tab11_sd35_memory");
 

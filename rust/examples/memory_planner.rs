@@ -20,6 +20,7 @@ fn main() -> Result<()> {
         act_bytes: 2.0,
         checkpoint: CheckpointPolicy::EveryK(1),
         residency: BaseResidency::Packed,
+        ranks: 1,
     };
     let gpus = [("A100-40G", 40.0), ("H100-80G", 80.0), ("H100-NVL", 94.0)];
 

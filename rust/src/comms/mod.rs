@@ -1,0 +1,1313 @@
+//! L4 comms — shared-nothing, message-passing training collectives.
+//!
+//! `repro train --ranks N` runs N processes that each own a contiguous
+//! shard of the Adam moments (ZeRO-1) and exchange gradients over this
+//! module: a typed length-prefixed wire protocol ([`Frame`]) on
+//! localhost TCP (or an in-process channel mesh for tests/benches), a
+//! full-mesh [`RankGroup`] built from a rank-0 rendezvous, and the
+//! collectives the sharded train step needs — tree all-reduce,
+//! rank-ordered all-gather, broadcast, barrier.
+//!
+//! **Determinism contract.** [`RankGroup::tree_all_reduce`] walks the
+//! exact pairwise reduction schedule of `refmodel::tree_reduce` over
+//! the global leaf index, with leaves owned per
+//! [`crate::runtime::shard_range`] (the same `div_ceil` chunking
+//! `run_sharded` uses for worker threads). Cross-rank pairs move the
+//! right operand to the left owner; every combine therefore executes
+//! the identical float expressions on the identical operands as the
+//! single-process tree, and f32 payloads travel as raw little-endian
+//! bits — so loss, gradients, and updated params are bitwise identical
+//! from 1 thread to N processes.
+//!
+//! **Robustness.** Connect/accept retries are bounded by
+//! [`CommsCfg`] deadlines, and every mid-step receive carries an I/O
+//! timeout: a dead peer surfaces as a typed [`CommsError`] naming the
+//! rank instead of hanging the tree reduction.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::layers::Gradients;
+use crate::runtime::{combine_microbatches, shard_range, GradReducer};
+use crate::tensor::Tensor;
+
+/// Hard ceiling on `--ranks` (localhost full mesh: N^2/2 sockets).
+pub const MAX_RANKS: usize = 64;
+
+/// Frames larger than this are a protocol violation (corrupt length
+/// prefix), not an allocation request.
+const MAX_FRAME: usize = 1 << 30;
+
+// Frame kinds. A frame of the wrong kind for the collective in
+// progress is a typed protocol error, not a misread payload.
+const KIND_HELLO: u8 = 1;
+const KIND_ROSTER: u8 = 2;
+const KIND_REDUCE: u8 = 3;
+const KIND_GATHER: u8 = 4;
+const KIND_BCAST: u8 = 5;
+const KIND_CHECK: u8 = 6;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed communication failures, each naming the peer rank involved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommsError {
+    /// The connection to `rank` died (EOF / reset / closed channel).
+    PeerDead {
+        rank: usize,
+        during: &'static str,
+        detail: String,
+    },
+    /// No frame from `rank` within the I/O deadline.
+    Timeout {
+        rank: usize,
+        during: &'static str,
+        after: Duration,
+    },
+    /// A frame arrived but violates the collective's schedule.
+    Protocol { rank: usize, detail: String },
+    /// Rendezvous / topology setup failed before the mesh existed.
+    Setup { detail: String },
+}
+
+impl std::fmt::Display for CommsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommsError::PeerDead { rank, during, detail } => {
+                write!(f, "rank {rank} died during {during}: {detail}")
+            }
+            CommsError::Timeout { rank, during, after } => write!(
+                f,
+                "rank {rank} unresponsive during {during} (no frame within {:.1}s)",
+                after.as_secs_f64()
+            ),
+            CommsError::Protocol { rank, detail } => {
+                write!(f, "protocol violation involving rank {rank}: {detail}")
+            }
+            CommsError::Setup { detail } => write!(f, "rank rendezvous failed: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CommsError {}
+
+/// Transport-level failure, before the peer rank is attached.
+#[derive(Debug)]
+pub enum TransportError {
+    Dead(String),
+    Timeout(Duration),
+    Protocol(String),
+}
+
+impl TransportError {
+    fn into_comms(self, rank: usize, during: &'static str) -> CommsError {
+        match self {
+            TransportError::Dead(detail) => CommsError::PeerDead { rank, during, detail },
+            TransportError::Timeout(after) => CommsError::Timeout { rank, during, after },
+            TransportError::Protocol(detail) => CommsError::Protocol { rank, detail },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topology / address validation (Method/QuantKind parse-error style)
+// ---------------------------------------------------------------------------
+
+/// Validate a `(rank, ranks)` pair, erroring with the valid range.
+pub fn validate_topology(rank: usize, ranks: usize) -> Result<()> {
+    ensure!(
+        (1..=MAX_RANKS).contains(&ranks),
+        "--ranks must be in 1..={MAX_RANKS}, got {ranks}"
+    );
+    ensure!(
+        rank < ranks,
+        "--rank must be in 0..={} for --ranks {ranks}, got {rank}",
+        ranks - 1
+    );
+    Ok(())
+}
+
+/// Parse a rendezvous address (`host:port`; port 0 lets rank 0 pick a
+/// free port).
+pub fn parse_rendezvous(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .ok()
+        .and_then(|mut it| it.next())
+        .with_context(|| {
+            format!(
+                "malformed rendezvous address '{addr}'; expected host:port \
+                 (e.g. 127.0.0.1:29400, or 127.0.0.1:0 to let rank 0 pick a free port)"
+            )
+        })
+}
+
+/// FNV-1a over a byte string — the per-step batch fingerprint ranks
+/// cross-check so diverged data loaders fail loudly, not silently.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Transports
+// ---------------------------------------------------------------------------
+
+/// One length-prefixed typed frame: `[len u32][kind u8][seq u64][payload]`
+/// (all integers little-endian). `seq` is a per-link monotone counter;
+/// a gap means the two ranks disagree on the collective schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: u8,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// A reliable, ordered frame link to one peer. Implementations must
+/// deliver whole frames or fail typed — never block forever.
+pub trait Transport: Send {
+    fn send(&mut self, kind: u8, seq: u64, payload: &[u8]) -> Result<(), TransportError>;
+    fn recv(&mut self) -> Result<Frame, TransportError>;
+    /// Switch from the (long) handshake deadline to the steady-state
+    /// per-frame I/O deadline.
+    fn set_io_timeout(&mut self, timeout: Duration) -> Result<(), TransportError>;
+}
+
+/// Localhost TCP transport (`TCP_NODELAY`, read/write deadlines).
+pub struct TcpTransport {
+    stream: TcpStream,
+    timeout: Duration,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream, timeout: Duration) -> Result<TcpTransport> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream
+            .set_read_timeout(Some(timeout))
+            .context("set_read_timeout")?;
+        stream
+            .set_write_timeout(Some(timeout))
+            .context("set_write_timeout")?;
+        Ok(TcpTransport { stream, timeout })
+    }
+
+    fn map_io(&self, e: std::io::Error) -> TransportError {
+        use std::io::ErrorKind::*;
+        match e.kind() {
+            WouldBlock | TimedOut => TransportError::Timeout(self.timeout),
+            UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe => {
+                TransportError::Dead(format!("connection lost ({e})"))
+            }
+            _ => TransportError::Dead(format!("socket error ({e})")),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, kind: u8, seq: u64, payload: &[u8]) -> Result<(), TransportError> {
+        let len = (1 + 8 + payload.len()) as u32;
+        let mut head = [0u8; 13];
+        head[..4].copy_from_slice(&len.to_le_bytes());
+        head[4] = kind;
+        head[5..13].copy_from_slice(&seq.to_le_bytes());
+        self.stream.write_all(&head).map_err(|e| self.map_io(e))?;
+        self.stream
+            .write_all(payload)
+            .map_err(|e| self.map_io(e))?;
+        self.stream.flush().map_err(|e| self.map_io(e))
+    }
+
+    fn recv(&mut self) -> Result<Frame, TransportError> {
+        let mut len4 = [0u8; 4];
+        self.stream
+            .read_exact(&mut len4)
+            .map_err(|e| self.map_io(e))?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if !(9..=MAX_FRAME).contains(&len) {
+            return Err(TransportError::Protocol(format!(
+                "frame length {len} outside 9..={MAX_FRAME} (corrupt length prefix?)"
+            )));
+        }
+        let mut body = vec![0u8; len];
+        self.stream
+            .read_exact(&mut body)
+            .map_err(|e| self.map_io(e))?;
+        let kind = body[0];
+        let seq = u64::from_le_bytes(body[1..9].try_into().expect("8-byte seq"));
+        body.drain(..9);
+        Ok(Frame { kind, seq, payload: body })
+    }
+
+    fn set_io_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.timeout = timeout;
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .and_then(|_| self.stream.set_write_timeout(Some(timeout)))
+            .map_err(|e| TransportError::Dead(format!("set timeout ({e})")))
+    }
+}
+
+/// In-process channel transport: the same frames over `mpsc`, used by
+/// the channel mesh ([`RankGroup::mem_mesh`]) in unit tests.
+pub struct MemTransport {
+    tx: Sender<Frame>,
+    rx: Receiver<Frame>,
+    timeout: Duration,
+}
+
+impl Transport for MemTransport {
+    fn send(&mut self, kind: u8, seq: u64, payload: &[u8]) -> Result<(), TransportError> {
+        self.tx
+            .send(Frame { kind, seq, payload: payload.to_vec() })
+            .map_err(|_| TransportError::Dead("channel closed (peer dropped)".into()))
+    }
+
+    fn recv(&mut self) -> Result<Frame, TransportError> {
+        match self.rx.recv_timeout(self.timeout) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout(self.timeout)),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TransportError::Dead("channel closed (peer dropped)".into()))
+            }
+        }
+    }
+
+    fn set_io_timeout(&mut self, timeout: Duration) -> Result<(), TransportError> {
+        self.timeout = timeout;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rank group
+// ---------------------------------------------------------------------------
+
+/// Connect/retry policy for rendezvous and steady-state I/O.
+#[derive(Clone, Copy, Debug)]
+pub struct CommsCfg {
+    /// Total budget for dialing one peer (bounded retry).
+    pub connect_timeout: Duration,
+    /// Pause between dial attempts / accept polls.
+    pub retry_every: Duration,
+    /// Budget for the whole handshake on each link (accept + roster).
+    pub accept_timeout: Duration,
+    /// Steady-state per-frame deadline mid-step.
+    pub io_timeout: Duration,
+}
+
+impl Default for CommsCfg {
+    fn default() -> Self {
+        CommsCfg {
+            connect_timeout: Duration::from_secs(30),
+            retry_every: Duration::from_millis(50),
+            accept_timeout: Duration::from_secs(60),
+            io_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+impl CommsCfg {
+    /// Short deadlines for tests (fail in seconds, not minutes).
+    pub fn fast() -> CommsCfg {
+        CommsCfg {
+            connect_timeout: Duration::from_secs(10),
+            retry_every: Duration::from_millis(10),
+            accept_timeout: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(20),
+        }
+    }
+}
+
+/// One live link, with per-link frame sequence counters.
+struct Peer {
+    transport: Box<dyn Transport>,
+    send_seq: u64,
+    recv_seq: u64,
+}
+
+impl Peer {
+    fn new(transport: Box<dyn Transport>) -> Peer {
+        Peer { transport, send_seq: 0, recv_seq: 0 }
+    }
+
+    fn send(&mut self, kind: u8, payload: &[u8]) -> Result<(), TransportError> {
+        let seq = self.send_seq;
+        self.send_seq += 1;
+        self.transport.send(kind, seq, payload)
+    }
+
+    /// Receive one frame, enforcing the per-link sequence and the
+    /// expected kind.
+    fn recv(&mut self, kind: u8) -> Result<Vec<u8>, TransportError> {
+        let frame = self.transport.recv()?;
+        if frame.seq != self.recv_seq {
+            return Err(TransportError::Protocol(format!(
+                "frame out of sequence: got seq {}, expected {} — \
+                 ranks disagree on the collective schedule",
+                frame.seq, self.recv_seq
+            )));
+        }
+        self.recv_seq += 1;
+        if frame.kind != kind {
+            return Err(TransportError::Protocol(format!(
+                "expected frame kind {kind}, got {} — \
+                 ranks disagree on the collective schedule",
+                frame.kind
+            )));
+        }
+        Ok(frame.payload)
+    }
+}
+
+/// The full-mesh communicator for one rank of a training group.
+pub struct RankGroup {
+    rank: usize,
+    ranks: usize,
+    /// `links[r]` = link to rank `r` (`None` at `r == rank`).
+    links: Vec<Option<Mutex<Peer>>>,
+}
+
+impl RankGroup {
+    /// The trivial single-rank group (no links, all collectives local).
+    pub fn solo() -> RankGroup {
+        RankGroup { rank: 0, ranks: 1, links: vec![None] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Build the TCP mesh for `rank` of `ranks`. Rank 0 binds
+    /// `rendezvous` and accepts; other ranks dial it (bounded retry),
+    /// advertise their own listener, receive the roster, then complete
+    /// the mesh (higher ranks dial lower ranks).
+    pub fn tcp(rank: usize, ranks: usize, rendezvous: &str, cfg: CommsCfg) -> Result<RankGroup> {
+        validate_topology(rank, ranks)?;
+        if ranks == 1 {
+            return Ok(RankGroup::solo());
+        }
+        if rank == 0 {
+            let addr = parse_rendezvous(rendezvous)?;
+            let listener = TcpListener::bind(addr).map_err(|e| CommsError::Setup {
+                detail: format!("rank 0 could not bind rendezvous {addr}: {e}"),
+            })?;
+            RankGroup::tcp_leader(listener, ranks, cfg)
+        } else {
+            RankGroup::tcp_join(rank, ranks, rendezvous, cfg)
+        }
+    }
+
+    /// Rank 0 over an already-bound listener — used by the launcher,
+    /// which binds `host:0` first so it can pass the real port to the
+    /// child processes it spawns.
+    pub fn tcp_leader(listener: TcpListener, ranks: usize, cfg: CommsCfg) -> Result<RankGroup> {
+        validate_topology(0, ranks)?;
+        if ranks == 1 {
+            return Ok(RankGroup::solo());
+        }
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let deadline = Instant::now() + cfg.accept_timeout;
+        let mut peers: Vec<Option<(Peer, String)>> = (0..ranks).map(|_| None).collect();
+        let mut joined = 0usize;
+        while joined < ranks - 1 {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("stream blocking")?;
+                    let t = TcpTransport::new(stream, cfg.accept_timeout)?;
+                    let mut peer = Peer::new(Box::new(t));
+                    let payload = peer
+                        .recv(KIND_HELLO)
+                        .map_err(|e| e.into_comms(usize::MAX, "rendezvous hello"))?;
+                    let hello = Hello::decode(&payload)?;
+                    if hello.ranks != ranks {
+                        bail!(CommsError::Setup {
+                            detail: format!(
+                                "rank {} was launched with --ranks {}, leader expects {ranks}",
+                                hello.rank, hello.ranks
+                            ),
+                        });
+                    }
+                    ensure!(
+                        (1..ranks).contains(&hello.rank),
+                        CommsError::Setup {
+                            detail: format!(
+                                "hello from rank {} outside 1..={}",
+                                hello.rank,
+                                ranks - 1
+                            ),
+                        }
+                    );
+                    ensure!(
+                        peers[hello.rank].is_none(),
+                        CommsError::Setup {
+                            detail: format!("two processes claimed rank {}", hello.rank),
+                        }
+                    );
+                    peers[hello.rank] = Some((peer, hello.addr));
+                    joined += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(CommsError::Setup {
+                            detail: format!(
+                                "timed out after {:.0?} waiting for {} of {} peer rank(s) \
+                                 to join the rendezvous",
+                                cfg.accept_timeout,
+                                ranks - 1 - joined,
+                                ranks - 1
+                            ),
+                        });
+                    }
+                    std::thread::sleep(cfg.retry_every);
+                }
+                Err(e) => bail!(CommsError::Setup { detail: format!("accept failed: {e}") }),
+            }
+        }
+        // Everyone is in: publish the roster of advertised addresses.
+        let addrs: Vec<String> = (1..ranks)
+            .map(|r| peers[r].as_ref().expect("joined").1.clone())
+            .collect();
+        let roster = encode_roster(&addrs);
+        let mut links: Vec<Option<Mutex<Peer>>> = (0..ranks).map(|_| None).collect();
+        for (r, slot) in peers.into_iter().enumerate() {
+            if let Some((mut peer, _)) = slot {
+                peer.send(KIND_ROSTER, &roster)
+                    .map_err(|e| e.into_comms(r, "roster send"))?;
+                peer.transport
+                    .set_io_timeout(cfg.io_timeout)
+                    .map_err(|e| e.into_comms(r, "roster send"))?;
+                links[r] = Some(Mutex::new(peer));
+            }
+        }
+        Ok(RankGroup { rank: 0, ranks, links })
+    }
+
+    /// Join an existing rendezvous as `rank` (>= 1).
+    fn tcp_join(rank: usize, ranks: usize, rendezvous: &str, cfg: CommsCfg) -> Result<RankGroup> {
+        let rdv = parse_rendezvous(rendezvous)?;
+        // Bind our own listener first so the advertised address is live
+        // before the roster goes out.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).context("bind rank listener")?;
+        let my_addr = listener.local_addr().context("rank listener addr")?.to_string();
+
+        let mut leader = Peer::new(Box::new(TcpTransport::new(
+            dial(rdv, 0, &cfg)?,
+            cfg.accept_timeout,
+        )?));
+        leader
+            .send(KIND_HELLO, &Hello { rank, ranks, addr: my_addr }.encode())
+            .map_err(|e| e.into_comms(0, "rendezvous hello"))?;
+        let roster = leader
+            .recv(KIND_ROSTER)
+            .map_err(|e| e.into_comms(0, "roster wait"))?;
+        let addrs = decode_roster(&roster, ranks)?;
+
+        let mut links: Vec<Option<Mutex<Peer>>> = (0..ranks).map(|_| None).collect();
+        // Dial every lower rank (they are accepting after the roster).
+        for (j, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+            let peer_addr = parse_rendezvous(addr)?;
+            let t = TcpTransport::new(dial(peer_addr, j, &cfg)?, cfg.accept_timeout)?;
+            let mut peer = Peer::new(Box::new(t));
+            peer.send(KIND_HELLO, &Hello { rank, ranks, addr: String::new() }.encode())
+                .map_err(|e| e.into_comms(j, "mesh hello"))?;
+            links[j] = Some(Mutex::new(peer));
+        }
+        // Accept every higher rank (they dial us).
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let deadline = Instant::now() + cfg.accept_timeout;
+        let mut expected = ranks - rank - 1;
+        while expected > 0 {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("stream blocking")?;
+                    let t = TcpTransport::new(stream, cfg.accept_timeout)?;
+                    let mut peer = Peer::new(Box::new(t));
+                    let payload = peer
+                        .recv(KIND_HELLO)
+                        .map_err(|e| e.into_comms(usize::MAX, "mesh hello"))?;
+                    let hello = Hello::decode(&payload)?;
+                    ensure!(
+                        hello.rank > rank && hello.rank < ranks,
+                        CommsError::Setup {
+                            detail: format!(
+                                "rank {rank} got a mesh hello from rank {} (expected {}..={})",
+                                hello.rank,
+                                rank + 1,
+                                ranks - 1
+                            ),
+                        }
+                    );
+                    ensure!(
+                        links[hello.rank].is_none(),
+                        CommsError::Setup {
+                            detail: format!("two processes claimed rank {}", hello.rank),
+                        }
+                    );
+                    links[hello.rank] = Some(Mutex::new(peer));
+                    expected -= 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(CommsError::Setup {
+                            detail: format!(
+                                "rank {rank} timed out after {:.0?} waiting for {expected} \
+                                 higher rank(s) to complete the mesh",
+                                cfg.accept_timeout
+                            ),
+                        });
+                    }
+                    std::thread::sleep(cfg.retry_every);
+                }
+                Err(e) => bail!(CommsError::Setup { detail: format!("accept failed: {e}") }),
+            }
+        }
+        links[0] = Some(Mutex::new(leader));
+        for (r, link) in links.iter_mut().enumerate() {
+            if let Some(l) = link {
+                l.get_mut()
+                    .expect("fresh lock")
+                    .transport
+                    .set_io_timeout(cfg.io_timeout)
+                    .map_err(|e| e.into_comms(r, "mesh setup"))?;
+            }
+        }
+        Ok(RankGroup { rank, ranks, links })
+    }
+
+    /// An in-process full mesh over channels — every group is a
+    /// shared-nothing peer exchanging the same frames as the TCP path.
+    pub fn mem_mesh(ranks: usize, io_timeout: Duration) -> Vec<RankGroup> {
+        let mut txs: Vec<Vec<Option<Sender<Frame>>>> =
+            (0..ranks).map(|_| (0..ranks).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Frame>>>> =
+            (0..ranks).map(|_| (0..ranks).map(|_| None).collect()).collect();
+        for i in 0..ranks {
+            for j in 0..ranks {
+                if i != j {
+                    let (tx, rx) = channel();
+                    txs[i][j] = Some(tx); // i -> j sender
+                    rxs[j][i] = Some(rx); // j's receiver from i
+                }
+            }
+        }
+        (0..ranks)
+            .map(|i| {
+                let links = (0..ranks)
+                    .map(|j| {
+                        if i == j {
+                            return None;
+                        }
+                        let tx = txs[i][j].take().expect("sender built");
+                        let rx = rxs[i][j].take().expect("receiver built");
+                        Some(Mutex::new(Peer::new(Box::new(MemTransport {
+                            tx,
+                            rx,
+                            timeout: io_timeout,
+                        }))))
+                    })
+                    .collect();
+                RankGroup { rank: i, ranks, links }
+            })
+            .collect()
+    }
+
+    fn link(&self, peer: usize) -> Result<&Mutex<Peer>, CommsError> {
+        if peer == self.rank || peer >= self.ranks {
+            return Err(CommsError::Protocol {
+                rank: peer,
+                detail: format!(
+                    "rank {} has no link to rank {peer} (of {})",
+                    self.rank, self.ranks
+                ),
+            });
+        }
+        self.links[peer].as_ref().ok_or(CommsError::Protocol {
+            rank: peer,
+            detail: "link missing from mesh".into(),
+        })
+    }
+
+    fn send_to(
+        &self,
+        to: usize,
+        kind: u8,
+        payload: &[u8],
+        during: &'static str,
+    ) -> Result<(), CommsError> {
+        let mut peer = self.link(to)?.lock().expect("link lock poisoned");
+        peer.send(kind, payload).map_err(|e| e.into_comms(to, during))
+    }
+
+    fn recv_from(
+        &self,
+        from: usize,
+        kind: u8,
+        during: &'static str,
+    ) -> Result<Vec<u8>, CommsError> {
+        let mut peer = self.link(from)?.lock().expect("link lock poisoned");
+        peer.recv(kind).map_err(|e| e.into_comms(from, during))
+    }
+
+    /// Broadcast `mine` (required on `root`) to every rank; returns the
+    /// root's payload everywhere.
+    pub fn broadcast(
+        &self,
+        root: usize,
+        mine: Option<&[u8]>,
+        during: &'static str,
+    ) -> Result<Vec<u8>> {
+        if self.rank == root {
+            let payload = mine.context("broadcast root must supply a payload")?;
+            for r in (0..self.ranks).filter(|&r| r != root) {
+                self.send_to(r, KIND_BCAST, payload, during)?;
+            }
+            Ok(payload.to_vec())
+        } else {
+            Ok(self.recv_from(root, KIND_BCAST, during)?)
+        }
+    }
+
+    /// Rank-ordered all-gather: returns every rank's payload, indexed
+    /// by rank. Serialized in rank-order rounds (round r: rank r sends
+    /// to everyone), so no two ranks ever wait on each other.
+    pub fn all_gather(&self, mine: &[u8], during: &'static str) -> Result<Vec<Vec<u8>>> {
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.ranks];
+        for r in 0..self.ranks {
+            if r == self.rank {
+                for t in (0..self.ranks).filter(|&t| t != r) {
+                    self.send_to(t, KIND_GATHER, mine, during)?;
+                }
+                out[r] = mine.to_vec();
+            } else {
+                out[r] = self.recv_from(r, KIND_GATHER, during)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Every rank waits until every other rank has arrived here.
+    pub fn barrier(&self) -> Result<()> {
+        self.all_gather(&[], "barrier")?;
+        Ok(())
+    }
+
+    /// Cross-check a per-step fingerprint (batch hash, step counter)
+    /// against rank 0: a mismatch means the ranks' deterministic data
+    /// loaders diverged, which would silently break the bitwise
+    /// contract — so it fails loudly instead.
+    pub fn assert_uniform(&self, label: &str, value: u64) -> Result<()> {
+        if self.ranks == 1 {
+            return Ok(());
+        }
+        if self.rank == 0 {
+            for r in 1..self.ranks {
+                self.send_to(r, KIND_CHECK, &value.to_le_bytes(), "uniformity check")?;
+            }
+            Ok(())
+        } else {
+            let bytes = self.recv_from(0, KIND_CHECK, "uniformity check")?;
+            ensure!(
+                bytes.len() == 8,
+                CommsError::Protocol {
+                    rank: 0,
+                    detail: format!("uniformity check payload has {} bytes, want 8", bytes.len()),
+                }
+            );
+            let v0 = u64::from_le_bytes(bytes[..8].try_into().expect("8 bytes"));
+            ensure!(
+                v0 == value,
+                CommsError::Protocol {
+                    rank: self.rank,
+                    detail: format!(
+                        "{label} diverged: rank 0 has {v0:#018x}, rank {} has {value:#018x} \
+                         — per-rank data loaders out of sync?",
+                        self.rank
+                    ),
+                }
+            );
+            Ok(())
+        }
+    }
+
+    /// Distributed fixed-order pairwise tree all-reduce.
+    ///
+    /// Walks the exact schedule of `refmodel::tree_reduce` over
+    /// `n_leaves` slots, with leaf ownership given by
+    /// [`shard_range`]`(n_leaves, rank, ranks)`. When a pair spans two
+    /// ranks, the right owner ships its value to the left owner, who
+    /// combines — `combine(left, right)` therefore executes on
+    /// identical operands in identical order as the local tree. The
+    /// root value (always on the rank owning leaf 0, i.e. rank 0 for
+    /// `n_leaves > 0`) is broadcast to every rank.
+    pub fn tree_all_reduce<T>(
+        &self,
+        n_leaves: usize,
+        mine: Vec<T>,
+        combine: impl Fn(T, T) -> T,
+        encode: impl Fn(&T) -> Vec<u8>,
+        decode: impl Fn(&[u8]) -> Result<T>,
+    ) -> Result<T> {
+        let (lo, hi) = shard_range(n_leaves, self.rank, self.ranks);
+        ensure!(
+            mine.len() == hi - lo,
+            "rank {} of {} owns leaves {lo}..{hi} but got {}",
+            self.rank,
+            self.ranks,
+            mine.len()
+        );
+        let mut slots: Vec<(usize, Option<T>)> = Vec::with_capacity(n_leaves);
+        for r in 0..self.ranks {
+            let (a, b) = shard_range(n_leaves, r, self.ranks);
+            slots.extend((a..b).map(|_| (r, None)));
+        }
+        for (slot, v) in slots[lo..hi].iter_mut().zip(mine) {
+            slot.1 = Some(v);
+        }
+        while slots.len() > 1 {
+            let mut next = Vec::with_capacity(slots.len().div_ceil(2));
+            let mut it = slots.into_iter();
+            while let Some((oa, va)) = it.next() {
+                match it.next() {
+                    None => next.push((oa, va)),
+                    Some((ob, vb)) => {
+                        let combined = if oa == ob {
+                            // Local pair (or somebody else's): no traffic.
+                            match (va, vb) {
+                                (Some(a), Some(b)) => Some(combine(a, b)),
+                                _ => None,
+                            }
+                        } else if oa == self.rank {
+                            let bytes = self.recv_from(ob, KIND_REDUCE, "tree reduce")?;
+                            let b = decode(&bytes)?;
+                            Some(combine(va.expect("own slot filled"), b))
+                        } else if ob == self.rank {
+                            let b = vb.expect("own slot filled");
+                            self.send_to(oa, KIND_REDUCE, &encode(&b), "tree reduce")?;
+                            None
+                        } else {
+                            None
+                        };
+                        next.push((oa, combined));
+                    }
+                }
+            }
+            slots = next;
+        }
+        let (owner, root) = slots.pop().context("tree reduce over zero leaves")?;
+        if self.rank == owner {
+            let v = root.expect("root owner holds the value");
+            let bytes = encode(&v);
+            for r in (0..self.ranks).filter(|&r| r != self.rank) {
+                self.send_to(r, KIND_BCAST, &bytes, "reduce broadcast")?;
+            }
+            Ok(v)
+        } else {
+            decode(&self.recv_from(owner, KIND_BCAST, "reduce broadcast")?)
+        }
+    }
+
+    /// Rank-ordered all-gather of f32 slices as raw LE bits.
+    pub fn all_gather_f32(&self, mine: &[f32], during: &'static str) -> Result<Vec<Vec<f32>>> {
+        let rows = self.all_gather(&f32s_to_le(mine), during)?;
+        rows.iter().map(|b| le_to_f32s(b)).collect()
+    }
+}
+
+/// Dial `addr` with bounded retry: the peer may not be listening yet
+/// (process spawn order is unconstrained), so refused connections are
+/// retried until `connect_timeout` elapses.
+fn dial(addr: SocketAddr, peer: usize, cfg: &CommsCfg) -> Result<TcpStream, CommsError> {
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let attempt = cfg.retry_every.max(Duration::from_millis(250));
+    loop {
+        match TcpStream::connect_timeout(&addr, attempt) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(CommsError::Setup {
+                        detail: format!(
+                            "could not connect to rank {peer} at {addr} within {:.0?}: {e}",
+                            cfg.connect_timeout
+                        ),
+                    });
+                }
+                std::thread::sleep(cfg.retry_every);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handshake payloads
+// ---------------------------------------------------------------------------
+
+struct Hello {
+    rank: usize,
+    ranks: usize,
+    addr: String,
+}
+
+impl Hello {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10 + self.addr.len());
+        out.extend_from_slice(&(self.rank as u32).to_le_bytes());
+        out.extend_from_slice(&(self.ranks as u32).to_le_bytes());
+        out.extend_from_slice(&(self.addr.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.addr.as_bytes());
+        out
+    }
+
+    fn decode(b: &[u8]) -> Result<Hello> {
+        let mut cur = Cursor::new(b);
+        let rank = cur.u32()? as usize;
+        let ranks = cur.u32()? as usize;
+        let len = cur.u16()? as usize;
+        let addr = String::from_utf8(cur.bytes(len)?.to_vec()).context("hello addr utf8")?;
+        cur.done()?;
+        Ok(Hello { rank, ranks, addr })
+    }
+}
+
+fn encode_roster(addrs: &[String]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(addrs.len() as u16).to_le_bytes());
+    for a in addrs {
+        out.extend_from_slice(&(a.len() as u16).to_le_bytes());
+        out.extend_from_slice(a.as_bytes());
+    }
+    out
+}
+
+/// Roster for `ranks` total ranks: the advertised addresses of ranks
+/// `1..ranks`, indexed so `addrs[r]` is rank r's address (`addrs[0]`
+/// is empty — rank 0 is the rendezvous itself).
+fn decode_roster(b: &[u8], ranks: usize) -> Result<Vec<String>> {
+    let mut cur = Cursor::new(b);
+    let count = cur.u16()? as usize;
+    ensure!(
+        count == ranks - 1,
+        "roster lists {count} peer ranks, expected {}",
+        ranks - 1
+    );
+    let mut addrs = vec![String::new()];
+    for _ in 0..count {
+        let len = cur.u16()? as usize;
+        addrs.push(String::from_utf8(cur.bytes(len)?.to_vec()).context("roster addr utf8")?);
+    }
+    cur.done()?;
+    Ok(addrs)
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "payload truncated at byte {} (wanted {n} more of {})",
+            self.i,
+            self.b.len()
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.i == self.b.len(),
+            "payload has {} trailing bytes",
+            self.b.len() - self.i
+        );
+        Ok(())
+    }
+}
+
+fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "f32 payload has {} bytes (not /4)", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect())
+}
+
+/// Serialize one microbatch partial `(sum_nll, grads)`. Gradients ride
+/// in `BTreeMap` order (sorted by name) with raw LE f32 data.
+fn encode_part(part: &(f32, Gradients)) -> Vec<u8> {
+    let (nll, grads) = part;
+    let mut out = Vec::new();
+    out.extend_from_slice(&nll.to_le_bytes());
+    out.extend_from_slice(&(grads.len() as u32).to_le_bytes());
+    for (name, t) in grads {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&f32s_to_le(&t.data));
+    }
+    out
+}
+
+fn decode_part(b: &[u8]) -> Result<(f32, Gradients)> {
+    let mut cur = Cursor::new(b);
+    let nll = cur.f32()?;
+    let n = cur.u32()? as usize;
+    let mut grads = Gradients::new();
+    for _ in 0..n {
+        let name_len = cur.u32()? as usize;
+        let name = String::from_utf8(cur.bytes(name_len)?.to_vec()).context("grad name utf8")?;
+        let ndims = cur.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(cur.u32()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let data = le_to_f32s(cur.bytes(numel * 4)?)?;
+        grads.insert(name, Tensor::from_vec(&shape, data));
+    }
+    cur.done()?;
+    Ok((nll, grads))
+}
+
+// ---------------------------------------------------------------------------
+// The socket reducer
+// ---------------------------------------------------------------------------
+
+/// [`GradReducer`] over a [`RankGroup`]: the distributed leg of the
+/// fixed-order pairwise tree (gradient partials as typed frames, f32
+/// data as raw LE bits) plus the rank-ordered param all-gather.
+pub struct SocketReducer {
+    group: Arc<RankGroup>,
+}
+
+impl SocketReducer {
+    pub fn new(group: Arc<RankGroup>) -> SocketReducer {
+        SocketReducer { group }
+    }
+}
+
+impl GradReducer for SocketReducer {
+    fn rank(&self) -> usize {
+        self.group.rank()
+    }
+
+    fn ranks(&self) -> usize {
+        self.group.ranks()
+    }
+
+    fn reduce(
+        &self,
+        n_leaves: usize,
+        mine: Vec<(f32, Gradients)>,
+    ) -> Result<(f32, Gradients)> {
+        ensure!(n_leaves > 0, "batch has no sequences");
+        self.group
+            .tree_all_reduce(n_leaves, mine, combine_microbatches, encode_part, decode_part)
+    }
+
+    fn all_gather_f32(&self, mine: &[f32]) -> Result<Vec<Vec<f32>>> {
+        self.group.all_gather_f32(mine, "param all-gather")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The local oracle: refmodel's tree over all leaves at once.
+    fn local_tree(n: usize) -> String {
+        let leaves: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+        crate::runtime::refmodel::tree_reduce(leaves, |a, b| format!("({a}+{b})"))
+            .expect("n > 0")
+    }
+
+    fn str_codec() -> (
+        impl Fn(&String) -> Vec<u8>,
+        impl Fn(&[u8]) -> Result<String>,
+    ) {
+        (
+            |s: &String| s.as_bytes().to_vec(),
+            |b: &[u8]| Ok(String::from_utf8(b.to_vec()).unwrap()),
+        )
+    }
+
+    #[test]
+    fn topology_validation_messages() {
+        assert!(validate_topology(0, 1).is_ok());
+        assert!(validate_topology(3, 4).is_ok());
+        let e = validate_topology(4, 4).unwrap_err().to_string();
+        assert!(e.contains("0..=3"), "{e}");
+        let e = validate_topology(0, 0).unwrap_err().to_string();
+        assert!(e.contains("1..=64"), "{e}");
+        let e = validate_topology(0, MAX_RANKS + 1).unwrap_err().to_string();
+        assert!(e.contains("1..=64"), "{e}");
+    }
+
+    #[test]
+    fn rendezvous_parse_errors_name_the_format() {
+        assert!(parse_rendezvous("127.0.0.1:0").is_ok());
+        assert!(parse_rendezvous("127.0.0.1:29400").is_ok());
+        let e = parse_rendezvous("not-an-address").unwrap_err().to_string();
+        assert!(e.contains("host:port"), "{e}");
+        let e = parse_rendezvous("127.0.0.1:notaport").unwrap_err().to_string();
+        assert!(e.contains("malformed rendezvous"), "{e}");
+    }
+
+    #[test]
+    fn mem_mesh_tree_reduce_matches_local_tree() {
+        // The distributed schedule must reproduce the local pairwise
+        // tree bit-for-bit — proven on a non-commutative combine, for
+        // every (ranks, leaves) shape including empty-chunk ranks.
+        for ranks in 1..=5usize {
+            for n_leaves in 1..=9usize {
+                let want = local_tree(n_leaves);
+                let groups = RankGroup::mem_mesh(ranks, Duration::from_secs(10));
+                let results: Vec<String> = std::thread::scope(|s| {
+                    let handles: Vec<_> = groups
+                        .iter()
+                        .map(|g| {
+                            s.spawn(move || {
+                                let (lo, hi) = shard_range(n_leaves, g.rank(), ranks);
+                                let mine: Vec<String> =
+                                    (lo..hi).map(|i| i.to_string()).collect();
+                                let (enc, dec) = str_codec();
+                                g.tree_all_reduce(
+                                    n_leaves,
+                                    mine,
+                                    |a, b| format!("({a}+{b})"),
+                                    enc,
+                                    dec,
+                                )
+                                .unwrap()
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                for (r, got) in results.iter().enumerate() {
+                    assert_eq!(
+                        got, &want,
+                        "ranks={ranks} leaves={n_leaves} rank={r}: schedule diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_is_rank_ordered() {
+        let ranks = 4;
+        let groups = RankGroup::mem_mesh(ranks, Duration::from_secs(10));
+        let results: Vec<Vec<Vec<u8>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let mine = vec![g.rank() as u8; g.rank() + 1];
+                        g.all_gather(&mine, "test").unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for rows in results {
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(row, &vec![r as u8; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn uniformity_check_names_the_divergence() {
+        let groups = RankGroup::mem_mesh(2, Duration::from_secs(10));
+        let errs: Vec<Option<String>> = std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let v = if g.rank() == 0 { 7u64 } else { 8u64 };
+                        g.assert_uniform("batch fingerprint", v)
+                            .err()
+                            .map(|e| e.to_string())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(errs[0].is_none(), "rank 0 only sends");
+        let msg = errs[1].as_ref().expect("rank 1 must detect divergence");
+        assert!(msg.contains("batch fingerprint"), "{msg}");
+        assert!(msg.contains("out of sync"), "{msg}");
+    }
+
+    #[test]
+    fn dead_peer_is_typed_and_named() {
+        // Drop rank 2's group entirely; rank 0's next collective that
+        // needs rank 2 must fail with a typed error naming rank 2 —
+        // never hang the tree.
+        let mut groups = RankGroup::mem_mesh(3, Duration::from_millis(300));
+        let g2 = groups.pop().unwrap();
+        drop(g2);
+        let g0 = &groups[0];
+        let msg = g0.all_gather(b"x", "test").unwrap_err().to_string();
+        assert!(msg.contains("rank 2"), "error must name the dead rank: {msg}");
+        assert!(
+            msg.contains("died") || msg.contains("unresponsive"),
+            "expected a PeerDead/Timeout message, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn silent_peer_times_out_with_rank() {
+        // Both groups alive, but rank 1 never participates: rank 0's
+        // receive must time out (bounded) and name rank 1.
+        let groups = RankGroup::mem_mesh(2, Duration::from_millis(200));
+        let g0 = &groups[0];
+        let t0 = Instant::now();
+        let msg = g0.all_gather(b"x", "test").unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5), "must be bounded");
+        assert!(
+            msg.contains("rank 1") && msg.contains("unresponsive"),
+            "expected a timeout naming rank 1, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn grad_part_codec_roundtrips_bitwise() {
+        let mut grads = Gradients::new();
+        grads.insert(
+            "layers.0.wq".into(),
+            Tensor::from_vec(&[2, 3], vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, -0.0, 3e38]),
+        );
+        grads.insert("embed".into(), Tensor::from_vec(&[4], vec![0.1, 0.2, 0.3, 0.4]));
+        let part = (0.625f32, grads);
+        let back = decode_part(&encode_part(&part)).unwrap();
+        assert_eq!(back.0.to_bits(), part.0.to_bits());
+        assert_eq!(back.1.len(), part.1.len());
+        for ((na, ta), (nb, tb)) in back.1.iter().zip(&part.1) {
+            assert_eq!(na, nb);
+            assert_eq!(ta.shape, tb.shape);
+            let bits_a: Vec<u32> = ta.data.iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u32> = tb.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+    }
+
+    #[test]
+    fn tcp_mesh_smoke() {
+        // Real loopback sockets end-to-end: rendezvous, roster, mesh,
+        // then a reduce + gather + barrier.
+        let ranks = 3usize;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let results: Vec<String> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            {
+                let cfg = CommsCfg::fast();
+                handles.push(s.spawn(move || {
+                    let g = RankGroup::tcp_leader(listener, ranks, cfg).unwrap();
+                    run_rank(&g)
+                }));
+            }
+            for rank in 1..ranks {
+                let addr = addr.clone();
+                let cfg = CommsCfg::fast();
+                handles.push(s.spawn(move || {
+                    let g = RankGroup::tcp(rank, ranks, &addr, cfg).unwrap();
+                    run_rank(&g)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let want = local_tree(5);
+        for got in &results {
+            assert_eq!(got, &want);
+        }
+
+        fn run_rank(g: &RankGroup) -> String {
+            let n_leaves = 5;
+            let (lo, hi) = shard_range(n_leaves, g.rank(), g.ranks());
+            let mine: Vec<String> = (lo..hi).map(|i| i.to_string()).collect();
+            let reduced = g
+                .tree_all_reduce(
+                    n_leaves,
+                    mine,
+                    |a, b| format!("({a}+{b})"),
+                    |s: &String| s.as_bytes().to_vec(),
+                    |b: &[u8]| Ok(String::from_utf8(b.to_vec()).unwrap()),
+                )
+                .unwrap();
+            let rows = g
+                .all_gather_f32(&[g.rank() as f32], "test")
+                .unwrap();
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(row, &vec![r as f32]);
+            }
+            g.assert_uniform("step", 42).unwrap();
+            g.barrier().unwrap();
+            reduced
+        }
+    }
+
+    #[test]
+    fn solo_group_is_fully_local() {
+        let g = RankGroup::solo();
+        assert_eq!((g.rank(), g.ranks()), (0, 1));
+        let rows = g.all_gather(b"abc", "test").unwrap();
+        assert_eq!(rows, vec![b"abc".to_vec()]);
+        g.barrier().unwrap();
+        g.assert_uniform("x", 1).unwrap();
+        let red = SocketReducer::new(Arc::new(RankGroup::solo()));
+        let mut grads = Gradients::new();
+        grads.insert("w".into(), Tensor::from_vec(&[1], vec![2.0]));
+        let (nll, g2) = red.reduce(1, vec![(1.0, grads)]).unwrap();
+        assert_eq!(nll, 1.0);
+        assert_eq!(g2["w"].data, vec![2.0]);
+    }
+}

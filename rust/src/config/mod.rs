@@ -95,15 +95,20 @@ impl Default for DataCfg {
     }
 }
 
-/// Training-execution settings: the gradient-checkpoint policy and the
-/// data-parallel worker count (`--grad-checkpoint` / `--workers`).
-/// Defaults reproduce the classic single-worker, full-tape step; every
+/// Training-execution settings: the gradient-checkpoint policy, the
+/// data-parallel worker count (`--grad-checkpoint` / `--workers`), and
+/// the multi-process rank count (`--ranks`). Defaults reproduce the
+/// classic single-process, single-worker, full-tape step; every
 /// combination yields a bitwise-identical loss curve on the reference
 /// engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrainCfg {
     pub grad_checkpoint: CheckpointPolicy,
     pub workers: usize,
+    /// Total rank count of the training group (1 = single-process).
+    /// The per-process `--rank` is launcher state, not run config: it
+    /// must differ across the group while this struct must not.
+    pub ranks: usize,
 }
 
 impl Default for TrainCfg {
@@ -111,16 +116,20 @@ impl Default for TrainCfg {
         TrainCfg {
             grad_checkpoint: CheckpointPolicy::None,
             workers: 1,
+            ranks: 1,
         }
     }
 }
 
 impl TrainCfg {
-    /// The runtime-level options this config selects.
+    /// The runtime-level options this config selects (rank 0's view;
+    /// the trainer swaps in the live rank once the group connects).
     pub fn to_opts(self) -> TrainOpts {
         TrainOpts {
             checkpoint: self.grad_checkpoint,
-            workers: self.workers.max(1),
+            workers: self.workers,
+            rank: 0,
+            ranks: self.ranks,
         }
     }
 }
@@ -201,7 +210,23 @@ impl RunCfg {
             "data.documents" => self.data.documents = value.parse()?,
             "data.seed" => self.data.seed = value.parse()?,
             "train.grad_checkpoint" => self.train.grad_checkpoint = CheckpointPolicy::parse(value)?,
-            "train.workers" => self.train.workers = value.parse()?,
+            "train.workers" => {
+                let n: usize = value.parse().with_context(|| format!("train.workers '{value}'"))?;
+                if n == 0 {
+                    bail!("--workers must be in 1..=1024, got 0");
+                }
+                if n > 1024 {
+                    bail!("--workers must be in 1..=1024, got {n}");
+                }
+                self.train.workers = n;
+            }
+            "train.ranks" => {
+                let n: usize = value.parse().with_context(|| format!("train.ranks '{value}'"))?;
+                if !(1..=crate::comms::MAX_RANKS).contains(&n) {
+                    bail!("--ranks must be in 1..={}, got {n}", crate::comms::MAX_RANKS);
+                }
+                self.train.ranks = n;
+            }
             _ => bail!("unknown config key '{path}'"),
         }
         Ok(())
@@ -235,15 +260,22 @@ mod tests {
         assert_eq!(cfg.train.to_opts(), TrainOpts::default());
         cfg.set("train.grad_checkpoint", "every-2").unwrap();
         cfg.set("train.workers", "4").unwrap();
+        cfg.set("train.ranks", "2").unwrap();
         assert_eq!(cfg.train.grad_checkpoint, CheckpointPolicy::EveryK(2));
         assert_eq!(cfg.train.workers, 4);
+        assert_eq!(cfg.train.ranks, 2);
         let opts = cfg.train.to_opts();
         assert_eq!(opts.checkpoint, CheckpointPolicy::EveryK(2));
         assert_eq!(opts.workers, 4);
+        assert_eq!((opts.rank, opts.ranks), (0, 2));
         assert!(cfg.set("train.grad_checkpoint", "sometimes").is_err());
-        // workers = 0 clamps to 1 at the runtime boundary
-        cfg.set("train.workers", "0").unwrap();
-        assert_eq!(cfg.train.to_opts().workers, 1);
+        // out-of-range topology values error with the valid range
+        let e = cfg.set("train.workers", "0").unwrap_err().to_string();
+        assert!(e.contains("1..=1024"), "{e}");
+        let e = cfg.set("train.ranks", "0").unwrap_err().to_string();
+        assert!(e.contains("1..=64"), "{e}");
+        let e = cfg.set("train.ranks", "65").unwrap_err().to_string();
+        assert!(e.contains("1..=64"), "{e}");
     }
 
     #[test]

@@ -1,17 +1,30 @@
 //! Checkpoints: a name->tensor map in one file (JSON header + raw f32
 //! little-endian payload). Used for the pretrain→finetune protocol
-//! (`run.init_from`) and for saving finetuned adapters.
+//! (`run.init_from`), for saving finetuned adapters, and — under
+//! `--ranks N` — for per-rank *shard* files that
+//! [`reassemble_sharded`] stitches back into a byte-identical
+//! full-state checkpoint.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use super::manifest::Manifest;
+use super::state::{ShardInfo, ADAM_M_PREFIX, ADAM_V_PREFIX, STEP_KEY};
 use crate::json::{self, Json};
+use crate::runtime::shard_range;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"OFTCKPT1";
+
+/// Key holding one rank's flat first-moment shard.
+pub const SHARD_M_KEY: &str = "__adam_shard.m";
+/// Key holding one rank's flat second-moment shard.
+pub const SHARD_V_KEY: &str = "__adam_shard.v";
+/// Key holding the shard topology ([`shard_meta`]).
+pub const SHARD_META_KEY: &str = "__adam_shard.meta";
 
 /// An ordered name -> tensor map.
 pub type Checkpoint = BTreeMap<String, Tensor>;
@@ -91,6 +104,158 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     Ok(ckpt)
 }
 
+/// Path of rank `rank`'s shard file for a run saving to `path`:
+/// `<path>.rank<r>of<R>` (rank 0's shard rides next to — not inside —
+/// the full-format file name, so `load(path)` semantics never change).
+pub fn shard_checkpoint_path(path: impl AsRef<Path>, rank: usize, ranks: usize) -> PathBuf {
+    let p = path.as_ref();
+    let mut s = p.as_os_str().to_os_string();
+    s.push(format!(".rank{rank}of{ranks}"));
+    PathBuf::from(s)
+}
+
+/// Encode a shard topology as six integers exact in f32 (payloads are
+/// f32-only): `[rank, ranks, lo & 0xffff, lo >> 16, hi & 0xffff,
+/// hi >> 16]` — 16-bit halves keep element offsets exact up to 2^32.
+pub fn shard_meta(info: ShardInfo) -> Tensor {
+    Tensor::from_vec(
+        &[6],
+        vec![
+            info.rank as f32,
+            info.ranks as f32,
+            (info.lo & 0xffff) as f32,
+            (info.lo >> 16) as f32,
+            (info.hi & 0xffff) as f32,
+            (info.hi >> 16) as f32,
+        ],
+    )
+}
+
+/// Decode [`shard_meta`].
+pub fn parse_shard_meta(t: &Tensor) -> Result<ShardInfo> {
+    ensure!(
+        t.data.len() == 6,
+        "'{SHARD_META_KEY}' holds {} values, expected 6",
+        t.data.len()
+    );
+    let u = |x: f32| x as usize;
+    let d = &t.data;
+    Ok(ShardInfo {
+        rank: u(d[0]),
+        ranks: u(d[1]),
+        lo: u(d[2]) | (u(d[3]) << 16),
+        hi: u(d[4]) | (u(d[5]) << 16),
+    })
+}
+
+/// Reassemble a full-state checkpoint from the per-rank shard files of
+/// one `--ranks N` run (`parts`: one [`Checkpoint`] per rank, any
+/// order). Validates that the shards tile `man`'s flat trainable space
+/// exactly and agree on the step counter, then emits rank 0's weight
+/// entries plus the re-concatenated `__adam_m.*` / `__adam_v.*`
+/// moments — byte-identical (through [`save`]) to the
+/// `checkpoint_full()` a single-process run would have written.
+pub fn reassemble_sharded(man: &Manifest, parts: &[Checkpoint]) -> Result<Checkpoint> {
+    ensure!(!parts.is_empty(), "no shard checkpoints given");
+    let ranks = parts.len();
+    let total: usize = man.trainable.iter().map(|s| s.numel()).sum();
+    let mut by_rank: Vec<Option<&Checkpoint>> = vec![None; ranks];
+    for part in parts {
+        let meta = part.get(SHARD_META_KEY).with_context(|| {
+            format!("checkpoint lacks '{SHARD_META_KEY}' — not a rank shard file?")
+        })?;
+        let info = parse_shard_meta(meta)?;
+        ensure!(
+            info.ranks == ranks,
+            "shard file says the run had {} ranks, but {ranks} shard file(s) were given",
+            info.ranks
+        );
+        ensure!(
+            info.rank < ranks,
+            "shard file claims rank {} of {ranks}",
+            info.rank
+        );
+        ensure!(
+            by_rank[info.rank].is_none(),
+            "two shard files claim rank {}",
+            info.rank
+        );
+        let (lo, hi) = shard_range(total, info.rank, ranks);
+        ensure!(
+            (info.lo, info.hi) == (lo, hi),
+            "rank {} shard covers elements {}..{}, but manifest '{}' shards as {lo}..{hi}",
+            info.rank,
+            info.lo,
+            info.hi,
+            man.tag
+        );
+        by_rank[info.rank] = Some(part);
+    }
+    let mut m_flat = Vec::with_capacity(total);
+    let mut v_flat = Vec::with_capacity(total);
+    let mut step: Option<f32> = None;
+    for (r, slot) in by_rank.iter().enumerate() {
+        let part = slot.expect("every rank present (validated above)");
+        let (lo, hi) = shard_range(total, r, ranks);
+        let m = part
+            .get(SHARD_M_KEY)
+            .with_context(|| format!("rank {r} shard lacks '{SHARD_M_KEY}'"))?;
+        let v = part
+            .get(SHARD_V_KEY)
+            .with_context(|| format!("rank {r} shard lacks '{SHARD_V_KEY}'"))?;
+        ensure!(
+            m.data.len() == hi - lo && v.data.len() == hi - lo,
+            "rank {r} shard holds {} moment elements, expected {}",
+            m.data.len(),
+            hi - lo
+        );
+        m_flat.extend_from_slice(&m.data);
+        v_flat.extend_from_slice(&v.data);
+        let s = part
+            .get(STEP_KEY)
+            .with_context(|| format!("rank {r} shard lacks '{STEP_KEY}'"))?
+            .data
+            .first()
+            .copied()
+            .unwrap_or(0.0);
+        match step {
+            None => step = Some(s),
+            Some(prev) => ensure!(
+                prev == s,
+                "shard files disagree on the step counter ({prev} vs {s}) — \
+                 shards from different runs?"
+            ),
+        }
+    }
+    // Rank 0's shard carries the full weight checkpoint; keep all of it
+    // except the shard-local keys, then splice the gathered moments in.
+    let mut out = Checkpoint::new();
+    for (name, t) in by_rank[0].expect("rank 0 present") {
+        if name == SHARD_M_KEY || name == SHARD_V_KEY || name == SHARD_META_KEY {
+            continue;
+        }
+        out.insert(name.clone(), t.clone());
+    }
+    let mut off = 0usize;
+    for spec in &man.trainable {
+        let n = spec.numel();
+        out.insert(
+            format!("{ADAM_M_PREFIX}{}", spec.name),
+            Tensor::from_vec(&spec.shape, m_flat[off..off + n].to_vec()),
+        );
+        out.insert(
+            format!("{ADAM_V_PREFIX}{}", spec.name),
+            Tensor::from_vec(&spec.shape, v_flat[off..off + n].to_vec()),
+        );
+        off += n;
+    }
+    ensure!(
+        out.contains_key(STEP_KEY),
+        "rank 0 shard lacks the '{STEP_KEY}' entry"
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +293,73 @@ mod tests {
         save(&p, &Checkpoint::new()).unwrap();
         assert!(load(&p).unwrap().is_empty());
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn shard_meta_roundtrips_exactly() {
+        for info in [
+            ShardInfo { rank: 0, ranks: 1, lo: 0, hi: 10 },
+            ShardInfo { rank: 3, ranks: 4, lo: 100_000, hi: 133_333 },
+            ShardInfo { rank: 1, ranks: 2, lo: 70_000, hi: 140_000 },
+        ] {
+            assert_eq!(parse_shard_meta(&shard_meta(info)).unwrap(), info);
+        }
+        assert!(parse_shard_meta(&Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn shard_path_suffix() {
+        let p = shard_checkpoint_path("run.ckpt", 2, 4);
+        assert_eq!(p.to_str().unwrap(), "run.ckpt.rank2of4");
+    }
+
+    #[test]
+    fn reassemble_validates_and_tiles() {
+        let man =
+            Manifest::load_or_builtin(crate::artifacts_root().join("tiny_oft_v2")).unwrap();
+        let total: usize = man.trainable.iter().map(|s| s.numel()).sum();
+        let ranks = 2usize;
+        let mut parts = Vec::new();
+        for rank in 0..ranks {
+            let (lo, hi) = shard_range(total, rank, ranks);
+            let mut ck = Checkpoint::new();
+            ck.insert(
+                SHARD_M_KEY.into(),
+                Tensor::from_vec(&[hi - lo], (lo..hi).map(|i| i as f32).collect()),
+            );
+            ck.insert(
+                SHARD_V_KEY.into(),
+                Tensor::from_vec(&[hi - lo], (lo..hi).map(|i| -(i as f32)).collect()),
+            );
+            ck.insert(
+                SHARD_META_KEY.into(),
+                shard_meta(ShardInfo { rank, ranks, lo, hi }),
+            );
+            ck.insert(STEP_KEY.into(), Tensor::from_vec(&[1], vec![5.0]));
+            if rank == 0 {
+                ck.insert("some_weight".into(), Tensor::ones(&[2]));
+            }
+            parts.push(ck);
+        }
+        parts.reverse(); // file discovery order must not matter
+        let full = reassemble_sharded(&man, &parts).unwrap();
+        assert!(full.contains_key("some_weight"));
+        assert!(!full.contains_key(SHARD_M_KEY));
+        assert!(!full.contains_key(SHARD_META_KEY));
+        assert_eq!(full.get(STEP_KEY).unwrap().data, vec![5.0]);
+        // moments re-tile flat values back into manifest shapes
+        let mut off = 0usize;
+        for spec in &man.trainable {
+            let m = full.get(&format!("{ADAM_M_PREFIX}{}", spec.name)).unwrap();
+            assert_eq!(m.shape, spec.shape);
+            assert_eq!(
+                m.data,
+                (off..off + spec.numel()).map(|i| i as f32).collect::<Vec<_>>()
+            );
+            off += spec.numel();
+        }
+        assert_eq!(off, total);
+        // wrong shard-file count is rejected, not silently truncated
+        assert!(reassemble_sharded(&man, &parts[..1]).is_err());
     }
 }

@@ -21,5 +21,5 @@ pub mod trainer;
 pub use checkpoint::Checkpoint;
 pub use manifest::{Init, Manifest, ModelDims, ParamSpec, QuantSpec};
 pub use metrics::{EvalRecord, History, StepRecord};
-pub use state::{AdapterState, BaseModel, BundleState};
+pub use state::{AdapterState, BaseModel, BundleState, ShardInfo};
 pub use trainer::Trainer;

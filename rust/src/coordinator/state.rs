@@ -404,17 +404,46 @@ impl BaseModel {
 // AdapterState: the adapter-sized working state
 // ---------------------------------------------------------------------------
 
+/// The contiguous element window of the flat (manifest-order
+/// concatenated) trainable space one rank owns under ZeRO-1 moment
+/// sharding — always `crate::runtime::shard_range(total, rank, ranks)`,
+/// the same chunking rule the microbatch tree uses for its leaves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardInfo {
+    pub rank: usize,
+    pub ranks: usize,
+    /// First flat element this rank owns.
+    pub lo: usize,
+    /// One past the last flat element this rank owns.
+    pub hi: usize,
+}
+
+impl ShardInfo {
+    /// Elements this rank owns.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
 /// Trainables + Adam moments + step counter for one adapter — all the
 /// per-tenant state a [`BaseModel`] attachment carries.
 pub struct AdapterState {
     /// Trainable literals, manifest order.
     pub tr: Vec<Value>,
-    /// First Adam moments, manifest order.
+    /// First Adam moments: manifest order when full, or a single flat
+    /// `[lo..hi)` shard after [`AdapterState::shard_moments`].
     pub m: Vec<Value>,
-    /// Second Adam moments, manifest order.
+    /// Second Adam moments (same layout as `m`).
     pub v: Vec<Value>,
     /// Optimizer steps taken.
     pub step: usize,
+    /// `Some` once the moments have been re-laid-out as this rank's
+    /// ZeRO-1 shard.
+    pub shard: Option<ShardInfo>,
 }
 
 impl AdapterState {
@@ -436,7 +465,51 @@ impl AdapterState {
             Some(t) => t.data.first().copied().unwrap_or(0.0) as usize,
             None => 0,
         };
-        Ok(AdapterState { tr, m, v, step })
+        Ok(AdapterState {
+            tr,
+            m,
+            v,
+            step,
+            shard: None,
+        })
+    }
+
+    /// Drop the full Adam moments in favor of this rank's contiguous
+    /// element shard (ZeRO-1): after this, `m`/`v` each hold one flat
+    /// `[hi - lo]` value and the rank prices ~`2/ranks` of the full
+    /// optimizer state. The window is [`crate::runtime::shard_range`]
+    /// over the flat manifest-order concatenation, so re-gathering all
+    /// ranks' shards in rank order reproduces the full moments exactly.
+    pub fn shard_moments(
+        &mut self,
+        man: &Manifest,
+        rank: usize,
+        ranks: usize,
+    ) -> Result<ShardInfo> {
+        ensure!(self.shard.is_none(), "Adam moments are already sharded");
+        ensure!(ranks >= 1 && rank < ranks, "rank {rank} out of 0..{ranks}");
+        let total: usize = man.trainable.iter().map(|s| s.numel()).sum();
+        ensure!(
+            ranks <= total,
+            "--ranks {ranks} exceeds the {total} trainable elements of '{}'",
+            man.tag
+        );
+        let (lo, hi) = crate::runtime::shard_range(total, rank, ranks);
+        let flatten = |vals: &[Value]| -> Result<Vec<f32>> {
+            let mut flat = Vec::with_capacity(total);
+            for val in vals {
+                flat.extend(val.f32s()?);
+            }
+            ensure!(flat.len() == total, "moments hold {} of {total} elements", flat.len());
+            Ok(flat)
+        };
+        let m_flat = flatten(&self.m)?;
+        let v_flat = flatten(&self.v)?;
+        self.m = vec![lit_f32(&[hi - lo], &m_flat[lo..hi])?];
+        self.v = vec![lit_f32(&[hi - lo], &v_flat[lo..hi])?];
+        let info = ShardInfo { rank, ranks, lo, hi };
+        self.shard = Some(info);
+        Ok(info)
     }
 }
 
@@ -648,6 +721,62 @@ mod tests {
         base.fixed_for(&e, &man("tiny_qlora_nf4")).unwrap();
         assert_eq!(base.resident_pack_bytes(), pack_bytes);
         assert_eq!(base.resident_base_bytes() + pack_bytes, e.upload_bytes());
+    }
+
+    #[test]
+    fn shard_moments_tiles_the_flat_space() {
+        let m = man("tiny_oft_v2");
+        let total: usize = m.trainable.iter().map(|s| s.numel()).sum();
+        // Seed distinct moment values through a resume checkpoint so
+        // the tiling is observable.
+        let mut ck = Checkpoint::new();
+        let mut x = 0.0f32;
+        for spec in &m.trainable {
+            let data: Vec<f32> = (0..spec.numel())
+                .map(|_| {
+                    x += 1.0;
+                    x
+                })
+                .collect();
+            ck.insert(
+                format!("{ADAM_M_PREFIX}{}", spec.name),
+                Tensor::from_vec(&spec.shape, data.clone()),
+            );
+            ck.insert(
+                format!("{ADAM_V_PREFIX}{}", spec.name),
+                Tensor::from_vec(&spec.shape, data.iter().map(|d| d * 0.5).collect()),
+            );
+        }
+        let full: Vec<f32> = AdapterState::init(&m, 7, Some(&ck))
+            .unwrap()
+            .m
+            .iter()
+            .flat_map(|v| v.f32s().unwrap())
+            .collect();
+        assert_eq!(full.len(), total);
+
+        let ranks = 3;
+        let mut cat = Vec::new();
+        for rank in 0..ranks {
+            let mut st = AdapterState::init(&m, 7, Some(&ck)).unwrap();
+            let info = st.shard_moments(&m, rank, ranks).unwrap();
+            assert_eq!(
+                (info.lo, info.hi),
+                crate::runtime::shard_range(total, rank, ranks)
+            );
+            assert_eq!(st.m.len(), 1);
+            assert_eq!(st.m[0].f32s().unwrap().len(), info.len());
+            cat.extend(st.m[0].f32s().unwrap());
+            assert!(
+                st.shard_moments(&m, rank, ranks).is_err(),
+                "double shard must fail"
+            );
+        }
+        assert_eq!(cat, full, "rank-order shards must tile the flat moments");
+
+        // more ranks than trainable elements is rejected
+        let mut st = AdapterState::init(&m, 7, None).unwrap();
+        assert!(st.shard_moments(&m, 0, total + 1).is_err());
     }
 
     #[test]

@@ -24,10 +24,11 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
-use super::checkpoint::{self, Checkpoint};
+use super::checkpoint::{self, Checkpoint, SHARD_M_KEY, SHARD_META_KEY, SHARD_V_KEY};
 use super::manifest::Manifest;
 use super::metrics::{EvalRecord, History, StepRecord};
 use super::state::{AdapterState, BaseModel, ADAM_M_PREFIX, ADAM_V_PREFIX, STEP_KEY};
+use crate::comms::{fnv1a64, RankGroup, SocketReducer};
 use crate::config::RunCfg;
 use crate::data::corpus::TaskKind;
 use crate::data::loader::{Batch, Loader};
@@ -63,6 +64,9 @@ pub struct Trainer<'e> {
     fixed_bufs: Vec<Arc<Buffer>>,
     /// Trainables / Adam moments / step counter.
     state: AdapterState,
+    /// The rank group of a `--ranks N` run ([`Trainer::connect_ranks`]);
+    /// `None` for classic single-process training.
+    comm: Option<Arc<RankGroup>>,
     pub loader: Loader,
 }
 
@@ -140,8 +144,44 @@ impl<'e> Trainer<'e> {
             base,
             fixed_bufs,
             state,
+            comm: None,
             loader,
         })
+    }
+
+    /// Join a multi-process training group: every rank of a `--ranks N`
+    /// run calls this with its connected [`RankGroup`] *before the
+    /// first train step*. The Adam moments are re-laid-out as this
+    /// rank's ZeRO-1 shard (the `shard_range` window of the flat
+    /// trainable space), and subsequent steps run the sharded train
+    /// step: full gradients everywhere via the fixed-order tree
+    /// all-reduce, the Adam update only on the owned window, updated
+    /// params re-assembled by all-gather — bitwise identical to the
+    /// single-process step.
+    pub fn connect_ranks(&mut self, comm: Arc<RankGroup>) -> Result<()> {
+        ensure!(
+            self.train_step.is_none(),
+            "connect_ranks must be called before the first train step"
+        );
+        ensure!(
+            self.comm.is_none(),
+            "trainer is already connected to a rank group"
+        );
+        ensure!(
+            self.cfg.train.ranks == comm.ranks(),
+            "config says train.ranks = {}, but the rank group has {} ranks",
+            self.cfg.train.ranks,
+            comm.ranks()
+        );
+        self.state
+            .shard_moments(&self.manifest, comm.rank(), comm.ranks())?;
+        self.comm = Some(comm);
+        Ok(())
+    }
+
+    /// The rank group this trainer is connected to, if any.
+    pub fn rank_group(&self) -> Option<&Arc<RankGroup>> {
+        self.comm.as_ref()
     }
 
     /// Replace the loader (e.g. to reuse a pretraining vocabulary or a
@@ -167,15 +207,34 @@ impl<'e> Trainer<'e> {
         ensure!(batch.batch == b && batch.seq == t, "batch shape mismatch");
         if self.train_step.is_none() {
             // The train step carries the run's gradient-checkpoint
-            // policy and worker count; on the reference engine every
-            // combination is bitwise identical (per-sequence
-            // microbatches + fixed-order tree reduction), so
-            // --workers/--grad-checkpoint change speed and memory,
-            // never the loss curve. Backends without native support
-            // reject non-default options here, on the first step.
-            let graph = self
-                .engine
-                .load_train_step(&self.manifest, self.cfg.train.to_opts())?;
+            // policy, worker count, and rank topology; on the reference
+            // engine every combination is bitwise identical
+            // (per-sequence microbatches + fixed-order tree reduction),
+            // so --workers/--grad-checkpoint/--ranks change speed and
+            // memory, never the loss curve. Backends without native
+            // support reject non-default options here, on the first
+            // step.
+            let graph = match &self.comm {
+                Some(comm) => {
+                    let mut opts = self.cfg.train.to_opts();
+                    opts.rank = comm.rank();
+                    opts.ranks = comm.ranks();
+                    let reducer: Arc<dyn crate::runtime::GradReducer> =
+                        Arc::new(SocketReducer::new(Arc::clone(comm)));
+                    self.engine
+                        .load_train_step_sharded(&self.manifest, opts, reducer)?
+                }
+                None => {
+                    ensure!(
+                        self.cfg.train.ranks <= 1,
+                        "train.ranks = {} but no rank group is connected — \
+                         call Trainer::connect_ranks before the first step",
+                        self.cfg.train.ranks
+                    );
+                    self.engine
+                        .load_train_step(&self.manifest, self.cfg.train.to_opts())?
+                }
+            };
             self.train_step = Some(graph);
         }
         // The step is about to change the trainables; any cached
@@ -185,12 +244,33 @@ impl<'e> Trainer<'e> {
         let step = self.state.step;
         let lr = self.cfg.optim.lr_at(step, self.cfg.steps) as f32;
 
+        if let Some(comm) = &self.comm {
+            // Data parallelism here is scatter-free: every rank builds
+            // the identical deterministic Loader and must therefore see
+            // the identical batch. Cross-check a fingerprint against
+            // rank 0 so a diverged loader fails loudly instead of
+            // silently breaking the bitwise contract.
+            let mut bytes =
+                Vec::with_capacity(4 * (batch.tokens.len() + batch.mask.len()) + 8);
+            for &tk in &batch.tokens {
+                bytes.extend_from_slice(&tk.to_le_bytes());
+            }
+            for &mk in &batch.mask {
+                bytes.extend_from_slice(&mk.to_le_bytes());
+            }
+            bytes.extend_from_slice(&(step as u64).to_le_bytes());
+            comm.assert_uniform("training batch", fnv1a64(&bytes))?;
+        }
+
         let tokens = lit_i32(&[b, t + 1], &batch.tokens)?;
         let mask = lit_f32(&[b, t], &batch.mask)?;
         let data = [tokens, mask, lit_scalar_f32(lr), lit_scalar_f32(step as f32)];
 
         // Upload state + data; fixed buffers are already engine-resident.
-        let mut bufs: Vec<Buffer> = Vec::with_capacity(3 * n + 4);
+        // Sharded runs carry one flat moment value per kind instead of
+        // n per-param values, so count the state inputs, don't assume.
+        let n_state = self.state.tr.len() + self.state.m.len() + self.state.v.len();
+        let mut bufs: Vec<Buffer> = Vec::with_capacity(n_state + 4);
         for lit in self
             .state
             .tr
@@ -202,9 +282,9 @@ impl<'e> Trainer<'e> {
             bufs.push(self.engine.upload(lit)?);
         }
         let mut args: Vec<&Buffer> = Vec::with_capacity(bufs.len() + self.fixed_bufs.len());
-        args.extend(bufs[..3 * n].iter());
+        args.extend(bufs[..n_state].iter());
         args.extend(self.fixed_bufs.iter().map(|a| a.as_ref()));
-        args.extend(bufs[3 * n..].iter());
+        args.extend(bufs[n_state..].iter());
 
         let mut outs = self
             .train_step
@@ -212,21 +292,26 @@ impl<'e> Trainer<'e> {
             .expect("train_step loaded above")
             .run_b(&args)?;
         ensure!(
-            outs.len() == 3 * n + 1,
+            outs.len() == n_state + 1,
             "train_step returned {} outputs, expected {}",
             outs.len(),
-            3 * n + 1
+            n_state + 1
         );
-        let loss = scalar_f32(&outs[3 * n])?;
+        let loss = scalar_f32(&outs[n_state])?;
         ensure!(loss.is_finite(), "loss diverged to {loss} at step {step}");
-        outs.truncate(3 * n);
-        // Restore manifest shapes (PJRT returns flat buffers).
+        outs.truncate(n_state);
+        // Restore manifest shapes (PJRT returns flat buffers); sharded
+        // moments keep their flat [hi - lo] shard shape.
         let shapes: Vec<Vec<usize>> = self
             .manifest
             .trainable
             .iter()
             .map(|s| s.shape.clone())
             .collect();
+        let moment_shapes: Vec<Vec<usize>> = match self.state.shard {
+            Some(info) => vec![vec![info.len()]],
+            None => shapes.clone(),
+        };
         let mut it = outs.into_iter();
         let mut take = |shapes: &[Vec<usize>]| -> Result<Vec<Value>> {
             shapes
@@ -239,8 +324,8 @@ impl<'e> Trainer<'e> {
                 .collect()
         };
         self.state.tr = take(&shapes)?;
-        self.state.m = take(&shapes)?;
-        self.state.v = take(&shapes)?;
+        self.state.m = take(&moment_shapes)?;
+        self.state.v = take(&moment_shapes)?;
         Ok(loss)
     }
 
@@ -509,7 +594,52 @@ impl<'e> Trainer<'e> {
     }
 
     /// Current Adam moments as (name, m, v) tensors.
+    ///
+    /// On a `--ranks N` trainer this is a **collective**: the moments
+    /// live sharded, so every rank must call it in the same step (it
+    /// all-gathers the shards over the rank group). The gathered result
+    /// is identical on every rank and bitwise equal to what a
+    /// single-process run would hold.
     pub fn adam_moments(&self) -> Result<Vec<(String, Tensor, Tensor)>> {
+        if let (Some(comm), Some(info)) = (&self.comm, self.state.shard) {
+            let total: usize = self.manifest.trainable.iter().map(|s| s.numel()).sum();
+            let gather = |vals: &[Value], what: &str| -> Result<Vec<f32>> {
+                ensure!(vals.len() == 1, "sharded {what} must be one flat value");
+                let mine = vals[0].to_vec::<f32>()?;
+                ensure!(
+                    mine.len() == info.len(),
+                    "rank {} holds {} {what} elements, owns {}",
+                    info.rank,
+                    mine.len(),
+                    info.len()
+                );
+                let rows = comm.all_gather_f32(&mine, "moment gather")?;
+                for (r, row) in rows.iter().enumerate() {
+                    let (lo, hi) = crate::runtime::shard_range(total, r, info.ranks);
+                    ensure!(
+                        row.len() == hi - lo,
+                        "rank {r} sent {} {what} elements, owns {}",
+                        row.len(),
+                        hi - lo
+                    );
+                }
+                Ok(rows.concat())
+            };
+            let m_flat = gather(&self.state.m, "first moments")?;
+            let v_flat = gather(&self.state.v, "second moments")?;
+            let mut out = Vec::with_capacity(self.manifest.trainable.len());
+            let mut off = 0usize;
+            for s in &self.manifest.trainable {
+                let numel = s.numel();
+                out.push((
+                    s.name.clone(),
+                    Tensor::from_vec(&s.shape, m_flat[off..off + numel].to_vec()),
+                    Tensor::from_vec(&s.shape, v_flat[off..off + numel].to_vec()),
+                ));
+                off += numel;
+            }
+            return Ok(out);
+        }
         self.manifest
             .trainable
             .iter()
@@ -522,6 +652,53 @@ impl<'e> Trainer<'e> {
                 ))
             })
             .collect()
+    }
+
+    /// Engine-resident optimizer-moment bytes this process carries:
+    /// `8 * total` single-process, `~8 * total / ranks` under ZeRO-1
+    /// sharding (the residency the memory model prices with
+    /// `optimizer_shard_bytes`).
+    pub fn moment_resident_bytes(&self) -> u64 {
+        let elems: usize = self
+            .state
+            .m
+            .iter()
+            .chain(&self.state.v)
+            .map(|v| v.element_count())
+            .sum();
+        4 * elems as u64
+    }
+
+    /// This rank's shard-checkpoint content for a `--ranks N` run: the
+    /// rank's flat Adam-moment shard plus its topology (and, on rank 0
+    /// only, the full weight checkpoint). Rank-local — no collectives —
+    /// so each rank can write its own file independently;
+    /// `checkpoint::reassemble_sharded` stitches the files back into a
+    /// byte-identical full-state checkpoint.
+    pub fn checkpoint_shard(&self) -> Result<Checkpoint> {
+        let info = self
+            .state
+            .shard
+            .context("checkpoint_shard needs sharded moments — connect_ranks first")?;
+        let mut ck = if info.rank == 0 {
+            self.checkpoint()?
+        } else {
+            Checkpoint::new()
+        };
+        ck.insert(
+            SHARD_M_KEY.to_string(),
+            Tensor::from_vec(&[info.len()], self.state.m[0].to_vec::<f32>()?),
+        );
+        ck.insert(
+            SHARD_V_KEY.to_string(),
+            Tensor::from_vec(&[info.len()], self.state.v[0].to_vec::<f32>()?),
+        );
+        ck.insert(SHARD_META_KEY.to_string(), checkpoint::shard_meta(info));
+        ck.insert(
+            STEP_KEY.to_string(),
+            Tensor::from_vec(&[1], vec![self.state.step as f32]),
+        );
+        Ok(ck)
     }
 
     /// Export a checkpoint of the current trainables, merged over the
@@ -545,7 +722,10 @@ impl<'e> Trainer<'e> {
     /// As [`Trainer::checkpoint`] plus the full optimizer state (Adam
     /// moments under `__adam_m.*` / `__adam_v.*`, the step counter
     /// under `__step`): restoring through [`Trainer::with_checkpoint`]
-    /// resumes training bit-for-bit.
+    /// resumes training bit-for-bit. On a `--ranks N` trainer this is a
+    /// collective (it gathers the moment shards via
+    /// [`Trainer::adam_moments`]) — every rank must call it together;
+    /// use [`Trainer::checkpoint_shard`] for rank-local saves.
     pub fn checkpoint_full(&self) -> Result<Checkpoint> {
         let mut ck = self.checkpoint()?;
         for (name, m, v) in self.adam_moments()? {

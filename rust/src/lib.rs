@@ -30,6 +30,7 @@
 pub mod adapters;
 pub mod bench;
 pub mod cli;
+pub mod comms;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -17,6 +17,7 @@
 use anyhow::{bail, Context, Result};
 
 use oftv2::cli::{parse_raw, Command};
+use oftv2::comms::{CommsCfg, RankGroup};
 use oftv2::config::RunCfg;
 use oftv2::coordinator::Trainer;
 use oftv2::memmodel::{finetune_gib, Method, Precision, TrainShape};
@@ -91,7 +92,12 @@ fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
     if let Some(policy) = args.get("grad-checkpoint") {
         cfg.train.grad_checkpoint = oftv2::runtime::CheckpointPolicy::parse(policy)?;
     }
-    cfg.train.workers = args.get_usize("workers", cfg.train.workers)?;
+    if let Some(w) = args.get("workers") {
+        cfg.set("train.workers", w)?;
+    }
+    if let Some(r) = args.get("ranks") {
+        cfg.set("train.ranks", r)?;
+    }
     if let Some(p) = args.get("init-from") {
         cfg.init_from = Some(p.to_string());
     }
@@ -137,6 +143,9 @@ fn train_command(name: &'static str, about: &'static str) -> Command {
             None,
         )
         .opt("workers", "data-parallel training workers", None)
+        .opt("ranks", "multi-process training ranks (1 = single-process)", None)
+        .opt("rank", "join an existing group as this rank (spawned by the leader)", None)
+        .opt("rendezvous", "rank-0 rendezvous address host:port", None)
         .opt("init-from", "checkpoint to initialize from", None)
         .opt("out-dir", "directory for history/checkpoint output", None)
         .opt("set", "comma-separated config overrides a.b=v", None)
@@ -153,20 +162,145 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let cfg = run_cfg(&args)?;
-    let engine = engine_for(&args)?;
-    log_info!("runtime platform: {}", engine.platform());
-    let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
-    let history = trainer.train()?;
-    let (eval_loss, ppl) = trainer.evaluate()?;
-    println!(
-        "final: train_loss {:.4} -> {:.4}, eval_loss {eval_loss:.4}, ppl {ppl:.2}",
-        history.first_loss().unwrap_or(f64::NAN),
-        history.final_loss().unwrap_or(f64::NAN),
-    );
-    if let Some(path) = args.get("save-checkpoint") {
-        trainer.save_checkpoint(path)?;
-        println!("checkpoint -> {path}");
+    let ranks = cfg.train.ranks;
+
+    if ranks <= 1 {
+        if args.get("rank").is_some() {
+            bail!("--rank requires --ranks > 1 (a single-process run has no group to join)");
+        }
+        let engine = engine_for(&args)?;
+        log_info!("runtime platform: {}", engine.platform());
+        let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
+        let history = trainer.train()?;
+        let (eval_loss, ppl) = trainer.evaluate()?;
+        println!(
+            "final: train_loss {:.4} -> {:.4}, eval_loss {eval_loss:.4}, ppl {ppl:.2}",
+            history.first_loss().unwrap_or(f64::NAN),
+            history.final_loss().unwrap_or(f64::NAN),
+        );
+        if let Some(path) = args.get("save-checkpoint") {
+            trainer.save_checkpoint(path)?;
+            println!("checkpoint -> {path}");
+        }
+        return Ok(());
     }
+
+    if let Some(r) = args.get("rank") {
+        // A group member (spawned by the leader below, or launched by
+        // hand): join the rendezvous and run this rank's share.
+        let rank: usize = r
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--rank expects an integer, got '{r}'"))?;
+        oftv2::comms::validate_topology(rank, ranks)?;
+        let rdv = args
+            .get("rendezvous")
+            .context("--rank requires --rendezvous (the leader passes it when spawning)")?;
+        let group = RankGroup::tcp(rank, ranks, rdv, CommsCfg::default())?;
+        return run_rank_train(&args, cfg, group);
+    }
+
+    // Leader-launcher: bind the rendezvous first (port 0 picks a free
+    // one), spawn ranks 1..N pointing at the real address, then run
+    // rank 0 in-process.
+    let rdv = args.get_or("rendezvous", "127.0.0.1:0");
+    let bind_addr = oftv2::comms::parse_rendezvous(rdv)?;
+    let listener = std::net::TcpListener::bind(bind_addr)
+        .with_context(|| format!("binding rendezvous {bind_addr}"))?;
+    let actual = listener.local_addr().context("rendezvous local addr")?.to_string();
+    let exe = std::env::current_exe().context("locating the repro binary for rank spawns")?;
+
+    // Children replay the parsed options verbatim (config file, --set,
+    // tag, ...) so every rank assembles an identical RunCfg; only the
+    // rank identity and the resolved rendezvous address differ.
+    let mut child_args: Vec<String> = Vec::new();
+    for (k, v) in &args.options {
+        if k == "rank" || k == "rendezvous" {
+            continue;
+        }
+        child_args.push(format!("--{k}={v}"));
+    }
+    for f in &args.flags {
+        child_args.push(format!("--{f}"));
+    }
+    child_args.push(format!("--rendezvous={actual}"));
+
+    let mut children = Vec::new();
+    for rank in 1..ranks {
+        let child = std::process::Command::new(&exe)
+            .arg("train")
+            .args(&child_args)
+            .arg(format!("--rank={rank}"))
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning rank {rank} of {ranks}"))?;
+        children.push((rank, child));
+    }
+    log_info!("spawned ranks 1..{ranks} (rendezvous {actual})");
+
+    let group = RankGroup::tcp_leader(listener, ranks, CommsCfg::default());
+    // If the rendezvous failed, still reap the children before erroring.
+    let lead = group.and_then(|g| run_rank_train(&args, cfg, g));
+    let mut failures = Vec::new();
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} not reaped: {e}")),
+        }
+    }
+    lead?;
+    if !failures.is_empty() {
+        bail!("{} rank(s) failed: {}", failures.len(), failures.join("; "));
+    }
+    Ok(())
+}
+
+/// One rank's training run: connect the trainer to the group, train,
+/// write checkpoints (full + this rank's shard), and report on rank 0.
+fn run_rank_train(args: &oftv2::cli::Args, mut cfg: RunCfg, group: RankGroup) -> Result<()> {
+    let group = std::sync::Arc::new(group);
+    let rank = group.rank();
+    if rank > 0 {
+        // Rank 0 owns the terminal: the loss curve is bitwise-identical
+        // on every rank, so member logs and evals are pure duplication.
+        oftv2::util::logging::set_level(oftv2::util::logging::Level::Warn);
+        cfg.log_every = 0;
+        cfg.eval_every = 0;
+        cfg.out_dir = None;
+    }
+    let engine = engine_for(args)?;
+    if rank == 0 {
+        log_info!("runtime platform: {} ({} ranks)", engine.platform(), group.ranks());
+    }
+    let mut trainer = Trainer::new(&engine, &artifacts_root(), cfg)?;
+    trainer.connect_ranks(std::sync::Arc::clone(&group))?;
+    let history = trainer.train()?;
+    if let Some(path) = args.get("save-checkpoint") {
+        // checkpoint_full() all-gathers the moment shards — a collective
+        // every rank must enter, even though only rank 0 writes it.
+        let full = trainer.checkpoint_full()?;
+        if rank == 0 {
+            oftv2::coordinator::checkpoint::save(path, &full)?;
+        }
+        let shard = trainer.checkpoint_shard()?;
+        let shard_path =
+            oftv2::coordinator::checkpoint::shard_checkpoint_path(path, rank, group.ranks());
+        oftv2::coordinator::checkpoint::save(&shard_path, &shard)?;
+        if rank == 0 {
+            println!("checkpoint -> {path} (+{} rank shard files)", group.ranks());
+        }
+    }
+    if rank == 0 {
+        let (eval_loss, ppl) = trainer.evaluate()?;
+        println!(
+            "final: train_loss {:.4} -> {:.4}, eval_loss {eval_loss:.4}, ppl {ppl:.2}",
+            history.first_loss().unwrap_or(f64::NAN),
+            history.final_loss().unwrap_or(f64::NAN),
+        );
+    }
+    // Keep the group alive until everyone has written their shard, so
+    // the leader's exit never races a member's file I/O.
+    group.barrier()?;
     Ok(())
 }
 
@@ -466,6 +600,7 @@ fn cmd_params() -> Result<()> {
 fn cmd_memory(argv: &[String]) -> Result<()> {
     let cmd = Command::new("memory", "analytic finetuning-memory tables")
         .opt("model", "qwen2.5-<size> | llama2-7b | sd3.5-<size>", Some("qwen2.5-7b"))
+        .opt("ranks", "ZeRO-1 optimizer-sharding ranks", Some("1"))
         .flag("help", "show help");
     let args = cmd.parse(argv)?;
     if args.has_flag("help") {
@@ -474,8 +609,19 @@ fn cmd_memory(argv: &[String]) -> Result<()> {
     }
     let name = args.get_or("model", "qwen2.5-7b");
     let spec = parse_model(name)?;
-    let shape = TrainShape::default();
-    println!("Finetuning memory for {} (analytic model)\n", spec.name);
+    let ranks = args.get_usize("ranks", 1)?;
+    if !(1..=oftv2::comms::MAX_RANKS).contains(&ranks) {
+        bail!("--ranks must be in 1..={}, got {ranks}", oftv2::comms::MAX_RANKS);
+    }
+    let shape = TrainShape { ranks, ..TrainShape::default() };
+    if ranks > 1 {
+        println!(
+            "Finetuning memory for {} — per-rank view, Adam state sharded {ranks} ways\n",
+            spec.name
+        );
+    } else {
+        println!("Finetuning memory for {} (analytic model)\n", spec.name);
+    }
     println!("{:<10} {:<6} {:>12}", "method", "prec", "total");
     for (m, p) in [
         (Method::oft_weight_centric(32), Precision::Bf16),

@@ -127,6 +127,11 @@ pub struct TrainShape {
     /// Packed-vs-dequantized residency of a quantized base (ignored at
     /// BF16, which has no packs).
     pub residency: BaseResidency,
+    /// Multi-process training ranks (`--ranks`). Adam moments are
+    /// ZeRO-1 sharded across the group, so each rank holds only its
+    /// `ceil(n/ranks)`-element window of the optimizer state; params,
+    /// grads, and activations stay fully replicated.
+    pub ranks: usize,
 }
 
 impl Default for TrainShape {
@@ -137,6 +142,7 @@ impl Default for TrainShape {
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::EveryK(1),
             residency: BaseResidency::Packed,
+            ranks: 1,
         }
     }
 }
@@ -202,10 +208,10 @@ pub fn finetune_memory(
     }
 
     // Adapter trained in f32 master + bf16 compute copy is the common
-    // setup; Adam keeps two f32 moments.
+    // setup; Adam keeps two f32 moments, ZeRO-1 sharded across ranks.
     let adapter_params = n_adapter * 4.0;
     let adapter_grads = n_adapter * 4.0;
-    let optimizer = n_adapter * 8.0;
+    let optimizer = optimizer_shard_bytes(n_adapter, shape.ranks);
 
     let tokens = (shape.batch * shape.seq) as f64;
     let d = spec.d_model as f64;
@@ -276,6 +282,14 @@ pub fn finetune_memory(
 /// Convenience: total GiB.
 pub fn finetune_gib(spec: &ModelSpec, method: Method, precision: Precision, shape: TrainShape) -> f64 {
     finetune_memory(spec, method, precision, shape).total_gib()
+}
+
+/// Per-rank Adam-moment residency under ZeRO-1 sharding: two f32
+/// moments over the *largest* shard (rank 0's, `ceil(n/ranks)`
+/// elements — the same `shard_range` chunking the trainer executes).
+/// `ranks == 1` reduces to the classic replicated `8n` bytes.
+pub fn optimizer_shard_bytes(n_adapter: f64, ranks: usize) -> f64 {
+    8.0 * (n_adapter / ranks.max(1) as f64).ceil()
 }
 
 /// KV residency of the serving path (the analytic mirror of
@@ -388,6 +402,7 @@ mod tests {
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::EveryK(1),
             residency: BaseResidency::Packed,
+            ranks: 1,
         }
     }
 
@@ -465,6 +480,7 @@ mod tests {
             act_bytes: 2.0,
             checkpoint: CheckpointPolicy::None,
             residency: BaseResidency::Packed,
+            ranks: 1,
         };
         let lora = finetune_gib(&spec, Method::lora(16), Precision::Bf16, shape);
         let v2 = finetune_gib(&spec, Method::oft_input_centric(32), Precision::Bf16, shape);
@@ -602,6 +618,43 @@ mod tests {
             - serve100.kv - serve100.overhead)
             .abs()
             < 1.0);
+    }
+
+    #[test]
+    fn zero1_sharding_scales_optimizer_state_down() {
+        // Only the optimizer term shards; params/grads/activations are
+        // replicated — exactly the trainer's ZeRO-1 contract. The
+        // thresholds mirror the rank_scaling bench acceptance bars.
+        let spec = qwen("7b");
+        let m = Method::oft_input_centric(32);
+        let one = finetune_memory(&spec, m, Precision::Bf16, shape_7b());
+        for ranks in [2usize, 4, 8, 64] {
+            let sharded = finetune_memory(
+                &spec,
+                m,
+                Precision::Bf16,
+                TrainShape { ranks, ..shape_7b() },
+            );
+            // largest shard = ceil(n/ranks) elements, within one
+            // 8-byte element of the even split
+            let even = one.optimizer / ranks as f64;
+            assert!(
+                sharded.optimizer >= even - 1e-6 && sharded.optimizer <= even + 8.0,
+                "ranks {ranks}: shard {} vs even split {even}",
+                sharded.optimizer
+            );
+            assert_eq!(sharded.adapter_params, one.adapter_params);
+            assert_eq!(sharded.adapter_grads, one.adapter_grads);
+            assert_eq!(sharded.activations, one.activations);
+        }
+        let two = optimizer_shard_bytes(1000.0, 2);
+        let four = optimizer_shard_bytes(1000.0, 4);
+        let full = optimizer_shard_bytes(1000.0, 1);
+        assert_eq!(full, 8000.0);
+        assert!(two <= 0.6 * full, "{two}");
+        assert!(four <= 0.35 * full, "{four}");
+        // odd splits round up to the largest shard
+        assert_eq!(optimizer_shard_bytes(5.0, 2), 8.0 * 3.0);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod refmodel;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::manifest::Manifest;
 use self::micro::MicroSpec;
@@ -38,7 +38,8 @@ pub use self::layers::CheckpointPolicy;
 pub use self::refmodel::{KvBlockPool, KvPoolStats, SharedKvPool};
 
 /// Training execution options carried alongside the train-step graph:
-/// the gradient-checkpoint policy and the data-parallel worker count.
+/// the gradient-checkpoint policy, the data-parallel worker count, and
+/// the rank topology for multi-process sharded training.
 /// The reference engine guarantees bitwise-identical step outputs for
 /// every combination (see [`refmodel::RefBundle::loss_and_grads_opts`]);
 /// backends without native support reject non-default options instead
@@ -47,6 +48,10 @@ pub use self::refmodel::{KvBlockPool, KvPoolStats, SharedKvPool};
 pub struct TrainOpts {
     pub checkpoint: CheckpointPolicy,
     pub workers: usize,
+    /// This process's rank in `0..ranks` (always 0 single-process).
+    pub rank: usize,
+    /// Total rank count of the training group (1 = single-process).
+    pub ranks: usize,
 }
 
 impl Default for TrainOpts {
@@ -54,7 +59,95 @@ impl Default for TrainOpts {
         TrainOpts {
             checkpoint: CheckpointPolicy::None,
             workers: 1,
+            rank: 0,
+            ranks: 1,
         }
+    }
+}
+
+/// The contiguous slice `[lo, hi)` of `n` items owned by `rank` out of
+/// `ranks`, chunked `div_ceil`-style — the SAME rule `run_sharded` uses
+/// for worker chunks. Every distributed ownership decision (microbatch
+/// leaves, Adam-moment elements) goes through this one function, so the
+/// reduction tree and the ZeRO-1 shards agree across every process.
+/// Rank 0 always owns item 0 whenever `n > 0`.
+pub fn shard_range(n: usize, rank: usize, ranks: usize) -> (usize, usize) {
+    let ranks = ranks.max(1);
+    let per = n.div_ceil(ranks);
+    let lo = (rank * per).min(n);
+    let hi = ((rank + 1) * per).min(n);
+    (lo, hi)
+}
+
+/// Combine two microbatch partials (`a` from the lower microbatch
+/// index) — the reduction operator of the fixed-order pairwise tree,
+/// shared verbatim by the in-process and socket reducers so a combine
+/// executes the identical float expressions wherever it runs.
+pub fn combine_microbatches(
+    a: (f32, layers::Gradients),
+    b: (f32, layers::Gradients),
+) -> (f32, layers::Gradients) {
+    let (nll_a, mut ga) = a;
+    let (nll_b, gb) = b;
+    for (name, g) in gb {
+        layers::accumulate(&mut ga, &name, g);
+    }
+    (nll_a + nll_b, ga)
+}
+
+/// All-reduce/all-gather primitives the sharded train step drives. The
+/// in-process [`LocalReducer`] is the rank-0-of-1 degenerate case; the
+/// socket implementation (`comms::SocketReducer`) runs the *same*
+/// fixed-order pairwise tree distributed over a rank group, so both
+/// produce bitwise-identical results.
+pub trait GradReducer: Send + Sync {
+    fn rank(&self) -> usize;
+    fn ranks(&self) -> usize;
+
+    /// Tree-all-reduce microbatch partials. `n_leaves` is the global
+    /// microbatch count; `mine` holds this rank's leaves — the indices
+    /// `shard_range(n_leaves, rank, ranks)` — in leaf order. Every rank
+    /// returns the identical combined `(sum_nll, grads)`.
+    fn reduce(
+        &self,
+        n_leaves: usize,
+        mine: Vec<(f32, layers::Gradients)>,
+    ) -> Result<(f32, layers::Gradients)>;
+
+    /// Rank-ordered all-gather of f32 slices (raw little-endian bits on
+    /// the wire — bit-exact). Returns every rank's contribution.
+    fn all_gather_f32(&self, mine: &[f32]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The in-process reducer: rank 0 of 1. `reduce` IS the local
+/// fixed-order pairwise tree — the single-process oracle every
+/// distributed run is locked against.
+pub struct LocalReducer;
+
+impl GradReducer for LocalReducer {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn ranks(&self) -> usize {
+        1
+    }
+
+    fn reduce(
+        &self,
+        n_leaves: usize,
+        mine: Vec<(f32, layers::Gradients)>,
+    ) -> Result<(f32, layers::Gradients)> {
+        ensure!(
+            mine.len() == n_leaves,
+            "local reduce expected {n_leaves} leaves, got {}",
+            mine.len()
+        );
+        refmodel::tree_reduce(mine, combine_microbatches).context("batch has no sequences")
+    }
+
+    fn all_gather_f32(&self, mine: &[f32]) -> Result<Vec<Vec<f32>>> {
+        Ok(vec![mine.to_vec()])
     }
 }
 
@@ -358,11 +451,26 @@ pub trait EngineBackend {
     fn load_train_step(&self, man: &Manifest, opts: TrainOpts) -> Result<Box<dyn GraphBackend>> {
         ensure!(
             opts == TrainOpts::default(),
-            "backend '{}' supports neither --grad-checkpoint nor --workers \
-             (use the reference backend)",
+            "backend '{}' supports none of --grad-checkpoint, --workers, \
+             or --ranks (use the reference backend)",
             self.platform()
         );
         self.load_bundle_graph(man, BundleRole::TrainStep)
+    }
+    /// Load the ZeRO-1 sharded train-step graph, which reduces
+    /// gradients and all-gathers updated params through `reducer`.
+    /// Backends without message-passing support inherit this default.
+    fn load_train_step_sharded(
+        &self,
+        _man: &Manifest,
+        _opts: TrainOpts,
+        _reducer: std::sync::Arc<dyn GradReducer>,
+    ) -> Result<Box<dyn GraphBackend>> {
+        bail!(
+            "backend '{}' does not support multi-process sharded training \
+             (--ranks); use the reference backend",
+            self.platform()
+        )
     }
     fn load_micro_kernel(&self, micro_root: &Path, spec: &MicroSpec)
         -> Result<Box<dyn GraphBackend>>;
@@ -550,6 +658,29 @@ impl Engine {
         Ok(Graph {
             name: format!("{}/train_step[{},w{}]", man.tag, opts.checkpoint.label(), opts.workers),
             inner: self.backend.load_train_step(man, opts)?,
+        })
+    }
+
+    /// Load the ZeRO-1 sharded train-step graph: full trainables in,
+    /// flat Adam-moment *shards* in/out, gradients all-reduced and
+    /// updated params all-gathered through `reducer` (see
+    /// [`refmodel::RefBundle::train_step_sharded`]).
+    pub fn load_train_step_sharded(
+        &self,
+        man: &Manifest,
+        opts: TrainOpts,
+        reducer: std::sync::Arc<dyn GradReducer>,
+    ) -> Result<Graph> {
+        Ok(Graph {
+            name: format!(
+                "{}/train_step[{},w{},rank{}of{}]",
+                man.tag,
+                opts.checkpoint.label(),
+                opts.workers,
+                opts.rank,
+                opts.ranks
+            ),
+            inner: self.backend.load_train_step_sharded(man, opts, reducer)?,
         })
     }
 

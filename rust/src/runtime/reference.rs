@@ -17,7 +17,7 @@ use super::micro::MicroSpec;
 use super::refmodel::{self, DecodeModel, KvCache, PagedKv, RefBundle, SharedKvPool};
 use super::{
     lit_f32, Buffer, BundleRole, DecodeSessionBackend, DecoderBackend, EngineBackend,
-    GraphBackend, TrainOpts, Value,
+    GradReducer, GraphBackend, TrainOpts, Value,
 };
 use crate::coordinator::manifest::Manifest;
 use crate::peft;
@@ -55,11 +55,34 @@ impl EngineBackend for ReferenceEngine {
     /// per-sequence microbatch decomposition makes every combination
     /// bitwise identical (see `refmodel::loss_and_grads_opts`).
     fn load_train_step(&self, man: &Manifest, opts: TrainOpts) -> Result<Box<dyn GraphBackend>> {
+        ensure!(
+            opts.ranks <= 1,
+            "--ranks {} needs the sharded train step: load it through \
+             Engine::load_train_step_sharded with a connected rank group",
+            opts.ranks
+        );
         let bundle = RefBundle::from_manifest(man)?;
         Ok(Box::new(RefBundleGraph {
             bundle,
             role: BundleRole::TrainStep,
             opts,
+        }))
+    }
+
+    /// The ZeRO-1 sharded step: the same microbatch decomposition with
+    /// gradients all-reduced and updated params all-gathered through
+    /// `reducer` (see `refmodel::RefBundle::train_step_sharded`).
+    fn load_train_step_sharded(
+        &self,
+        man: &Manifest,
+        opts: TrainOpts,
+        reducer: Arc<dyn GradReducer>,
+    ) -> Result<Box<dyn GraphBackend>> {
+        let bundle = RefBundle::from_manifest(man)?;
+        Ok(Box::new(RefShardedGraph {
+            bundle,
+            opts,
+            reducer,
         }))
     }
 
@@ -209,6 +232,25 @@ impl GraphBackend for RefBundleGraph {
             BundleRole::EvalLoss => self.bundle.eval_loss(inputs),
             BundleRole::LogitsLast => self.bundle.logits_last(inputs),
         }
+    }
+
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {
+        self.run_refs(&buffers_to_values(inputs)?)
+    }
+}
+
+/// The sharded train-step graph: holds the rank group's reducer so
+/// every `run` call exchanges gradients/params with the peer ranks.
+struct RefShardedGraph {
+    bundle: RefBundle,
+    opts: TrainOpts,
+    reducer: Arc<dyn GradReducer>,
+}
+
+impl GraphBackend for RefShardedGraph {
+    fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.bundle
+            .train_step_sharded(inputs, self.opts, self.reducer.as_ref())
     }
 
     fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Value>> {

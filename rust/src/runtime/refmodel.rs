@@ -257,6 +257,10 @@ impl RefBundle {
     /// worker options. The outputs are bitwise identical across every
     /// `opts` combination — see [`RefBundle::loss_and_grads_opts`].
     pub fn train_step_opts(&self, inputs: &[&Value], opts: TrainOpts) -> Result<Vec<Value>> {
+        ensure!(
+            opts.ranks <= 1,
+            "ranks > 1 requires the sharded train step (train_step_sharded)"
+        );
         let n = self.trainable.len();
         let want = 3 * n + self.n_fixed() + 4;
         ensure!(
@@ -277,9 +281,7 @@ impl RefBundle {
         let params = self.assemble_params(tr, fixed)?;
         let (loss, mut grads) = self.loss_and_grads_opts(&params, tokens, mask, opts)?;
 
-        let (b1, b2, eps) = (self.adam.0 as f32, self.adam.1 as f32, self.adam.2 as f32);
-        let bc1 = 1.0 - b1.powf(t_step);
-        let bc2 = 1.0 - b2.powf(t_step);
+        let coef = AdamCoef::new(self.adam, lr, t_step);
         let mut new_p = Vec::with_capacity(n);
         let mut new_m = Vec::with_capacity(n);
         let mut new_v = Vec::with_capacity(n);
@@ -302,14 +304,7 @@ impl RefBundle {
             let mut mn = vec![0f32; numel];
             let mut vn = vec![0f32; numel];
             for j in 0..numel {
-                let gj = g.data[j];
-                let mm = b1 * m0[j] + (1.0 - b1) * gj;
-                let vv = b2 * v0[j] + (1.0 - b2) * gj * gj;
-                let mhat = mm / bc1;
-                let vhat = vv / bc2;
-                mn[j] = mm;
-                vn[j] = vv;
-                pn[j] = p[j] - lr * mhat / (vhat.sqrt() + eps);
+                (pn[j], mn[j], vn[j]) = coef.update(p[j], m0[j], v0[j], g.data[j]);
             }
             new_p.push(lit_f32(&spec.shape, &pn)?);
             new_m.push(lit_f32(&spec.shape, &mn)?);
@@ -318,6 +313,136 @@ impl RefBundle {
         let mut out = new_p;
         out.extend(new_m);
         out.extend(new_v);
+        out.push(super::lit_scalar_f32(loss));
+        Ok(out)
+    }
+
+    /// ZeRO-1 sharded train step:
+    /// `(tr, m_shard, v_shard, fixed, tokens, mask, lr, t)` ->
+    /// `new_tr + [new_m_shard, new_v_shard] + [loss]`.
+    ///
+    /// Every rank holds the FULL trainables but only its contiguous
+    /// [`super::shard_range`] slice of the flat concatenated Adam
+    /// moments. Gradients are all-reduced over the same fixed-order
+    /// pairwise tree as the single-process step (bitwise identical on
+    /// every rank), each rank Adam-updates only its element window —
+    /// the update is elementwise, so shard boundaries cannot change a
+    /// bit — and the updated param shards are all-gathered back into
+    /// full tensors. Net: `new_tr` and `loss` equal the unsharded step
+    /// exactly, while per-rank moment residency shrinks ~1/ranks.
+    pub fn train_step_sharded(
+        &self,
+        inputs: &[&Value],
+        opts: TrainOpts,
+        red: &dyn super::GradReducer,
+    ) -> Result<Vec<Value>> {
+        ensure!(
+            opts.rank == red.rank() && opts.ranks == red.ranks(),
+            "train opts say rank {} of {} but the reducer is rank {} of {}",
+            opts.rank,
+            opts.ranks,
+            red.rank(),
+            red.ranks()
+        );
+        let n = self.trainable.len();
+        let want = n + 2 + self.n_fixed() + 4;
+        ensure!(
+            inputs.len() == want,
+            "train_step_sharded expected {want} inputs, got {}",
+            inputs.len()
+        );
+        let tr = &inputs[..n];
+        let m_shard = inputs[n].f32s()?;
+        let v_shard = inputs[n + 1].f32s()?;
+        let fixed = &inputs[n + 2..n + 2 + self.n_fixed()];
+        let data = &inputs[n + 2 + self.n_fixed()..];
+        let tokens = data[0].i32s()?;
+        let mask = data[1].f32s()?;
+        let lr = scalar_f32(data[2])?;
+        let t_step = scalar_f32(data[3])?;
+
+        let total: usize = self.trainable.iter().map(|s| s.numel()).sum();
+        ensure!(
+            red.ranks() <= total,
+            "more ranks ({}) than trainable elements ({total})",
+            red.ranks()
+        );
+        let (lo, hi) = super::shard_range(total, red.rank(), red.ranks());
+        ensure!(
+            m_shard.len() == hi - lo && v_shard.len() == hi - lo,
+            "moment shard has {} elements, rank {} of {} owns {}",
+            m_shard.len(),
+            red.rank(),
+            red.ranks(),
+            hi - lo
+        );
+
+        let params = self.assemble_params(tr, fixed)?;
+        let (loss, mut grads) = self.loss_and_grads_reduced(&params, tokens, mask, opts, red)?;
+
+        // This rank's [lo, hi) element window of params + grads, in
+        // manifest order (missing grads are zeros, as in the full step).
+        let mut p_win = Vec::with_capacity(hi - lo);
+        let mut g_win = Vec::with_capacity(hi - lo);
+        let mut off = 0usize;
+        for (i, spec) in self.trainable.iter().enumerate() {
+            let numel = spec.numel();
+            let (a, b) = (off.max(lo), (off + numel).min(hi));
+            if a < b {
+                p_win.extend_from_slice(&tr[i].f32s()?[a - off..b - off]);
+                match grads.remove(&spec.name) {
+                    Some(g) => {
+                        ensure!(
+                            g.numel() == numel,
+                            "gradient for '{}' has {} elements, want {numel}",
+                            spec.name,
+                            g.numel()
+                        );
+                        g_win.extend_from_slice(&g.data[a - off..b - off]);
+                    }
+                    None => g_win.resize(g_win.len() + (b - a), 0.0),
+                }
+            }
+            off += numel;
+        }
+
+        let coef = AdamCoef::new(self.adam, lr, t_step);
+        let mut pn = vec![0f32; hi - lo];
+        let mut mn = vec![0f32; hi - lo];
+        let mut vn = vec![0f32; hi - lo];
+        for j in 0..hi - lo {
+            (pn[j], mn[j], vn[j]) = coef.update(p_win[j], m_shard[j], v_shard[j], g_win[j]);
+        }
+
+        // All-gather updated element shards back into full params.
+        let shards = red.all_gather_f32(&pn)?;
+        ensure!(
+            shards.len() == red.ranks(),
+            "all-gather returned {} shards for {} ranks",
+            shards.len(),
+            red.ranks()
+        );
+        let mut flat = Vec::with_capacity(total);
+        for (r, s) in shards.iter().enumerate() {
+            let (a, b) = super::shard_range(total, r, red.ranks());
+            ensure!(
+                s.len() == b - a,
+                "rank {r} gathered {} param elements, expected {}",
+                s.len(),
+                b - a
+            );
+            flat.extend_from_slice(s);
+        }
+
+        let mut out = Vec::with_capacity(n + 3);
+        let mut off = 0usize;
+        for spec in &self.trainable {
+            let numel = spec.numel();
+            out.push(lit_f32(&spec.shape, &flat[off..off + numel])?);
+            off += numel;
+        }
+        out.push(lit_f32(&[hi - lo], &mn)?);
+        out.push(lit_f32(&[hi - lo], &vn)?);
         out.push(super::lit_scalar_f32(loss));
         Ok(out)
     }
@@ -428,6 +553,24 @@ impl RefBundle {
         mask: &[f32],
         opts: TrainOpts,
     ) -> Result<(f32, Gradients)> {
+        self.loss_and_grads_reduced(params, tokens, mask, opts, &super::LocalReducer)
+    }
+
+    /// As [`RefBundle::loss_and_grads_opts`], but with the microbatch
+    /// leaves split across a rank group: this rank forwards/backwards
+    /// only its contiguous leaf chunk (`shard_range` over sequence
+    /// index), then all ranks all-reduce through `red` — the SAME
+    /// fixed-order pairwise tree, with cross-rank pairs exchanged over
+    /// the reducer instead of combined locally. With the in-process
+    /// [`super::LocalReducer`] this is exactly the single-process path.
+    pub fn loss_and_grads_reduced(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        mask: &[f32],
+        opts: TrainOpts,
+        red: &dyn super::GradReducer,
+    ) -> Result<(f32, Gradients)> {
         let (bsz, t) = (self.dims.batch, self.dims.seq_len);
         ensure!(tokens.len() == bsz * (t + 1), "tokens shape mismatch");
         ensure!(mask.len() == bsz * t, "mask shape mismatch");
@@ -442,15 +585,13 @@ impl RefBundle {
         // Per-step adapter state (CNP blocks, merged weights) resolved
         // once, shared read-only by every microbatch and worker.
         let plan = self.adapter_plan(params)?;
-        let parts = run_sharded(bsz, opts.workers, |seq| {
-            self.seq_microbatch(params, &plan, tokens, mask, seq, inv_count, opts.checkpoint)
+        let (lo, hi) = super::shard_range(bsz, red.rank(), red.ranks());
+        let parts = run_sharded(hi - lo, opts.workers, |j| {
+            self.seq_microbatch(params, &plan, tokens, mask, lo + j, inv_count, opts.checkpoint)
         })?;
 
-        // Fixed-order pairwise tree over microbatch index.
-        let (sum_nll, grads) = tree_reduce(parts, |(nll_a, ga), (nll_b, gb)| {
-            (nll_a + nll_b, add_grads(ga, gb))
-        })
-        .context("batch has no sequences")?;
+        // Fixed-order pairwise tree over global microbatch index.
+        let (sum_nll, grads) = red.reduce(bsz, parts)?;
         Ok((sum_nll / count, grads))
     }
 
@@ -479,19 +620,48 @@ impl RefBundle {
     }
 }
 
-/// Elementwise sum of two gradient partials (`a` from the lower
-/// microbatch index).
-fn add_grads(mut a: Gradients, b: Gradients) -> Gradients {
-    for (name, g) in b {
-        super::layers::accumulate(&mut a, &name, g);
+/// The per-element Adam update — the ONE set of float expressions both
+/// the full and the ZeRO-1 sharded step execute, so element j's result
+/// is bitwise identical wherever (and on whichever rank) it computes.
+struct AdamCoef {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+}
+
+impl AdamCoef {
+    fn new(adam: (f64, f64, f64), lr: f32, t_step: f32) -> AdamCoef {
+        let (b1, b2, eps) = (adam.0 as f32, adam.1 as f32, adam.2 as f32);
+        AdamCoef {
+            b1,
+            b2,
+            eps,
+            bc1: 1.0 - b1.powf(t_step),
+            bc2: 1.0 - b2.powf(t_step),
+            lr,
+        }
     }
-    a
+
+    /// `(p, m, v, g) -> (p', m', v')`.
+    #[inline]
+    fn update(&self, p: f32, m0: f32, v0: f32, g: f32) -> (f32, f32, f32) {
+        let mm = self.b1 * m0 + (1.0 - self.b1) * g;
+        let vv = self.b2 * v0 + (1.0 - self.b2) * g * g;
+        let mhat = mm / self.bc1;
+        let vhat = vv / self.bc2;
+        (p - self.lr * mhat / (vhat.sqrt() + self.eps), mm, vv)
+    }
 }
 
 /// Fixed-order pairwise tree reduction: combine(parts[0], parts[1]),
 /// combine(parts[2], parts[3]), ... repeatedly. The tree shape depends
 /// only on `parts.len()`, never on which threads produced the parts.
-fn tree_reduce<T>(mut parts: Vec<T>, combine: impl Fn(T, T) -> T) -> Option<T> {
+/// `comms::RankGroup::tree_all_reduce` walks this exact schedule with
+/// the leaves distributed over ranks — keep the two in lockstep.
+pub(crate) fn tree_reduce<T>(mut parts: Vec<T>, combine: impl Fn(T, T) -> T) -> Option<T> {
     while parts.len() > 1 {
         let mut next = Vec::with_capacity(parts.len().div_ceil(2));
         let mut it = parts.into_iter();
@@ -1259,11 +1429,16 @@ mod tests {
             let tr = random_values(&bu.trainable, 0.02, 13);
             let (toks, mask) = batch(&bu, 17);
             let base = step_outputs(&bu, &tr, &toks, &mask);
+            let o = |checkpoint, workers| TrainOpts {
+                checkpoint,
+                workers,
+                ..Default::default()
+            };
             for opts in [
-                TrainOpts { checkpoint: CheckpointPolicy::EveryK(1), workers: 1 },
-                TrainOpts { checkpoint: CheckpointPolicy::EveryK(2), workers: 1 },
-                TrainOpts { checkpoint: CheckpointPolicy::None, workers: 4 },
-                TrainOpts { checkpoint: CheckpointPolicy::EveryK(2), workers: 3 },
+                o(CheckpointPolicy::EveryK(1), 1),
+                o(CheckpointPolicy::EveryK(2), 1),
+                o(CheckpointPolicy::None, 4),
+                o(CheckpointPolicy::EveryK(2), 3),
             ] {
                 let out = step_outputs_opts(&bu, &tr, &toks, &mask, opts);
                 assert_eq!(base.len(), out.len());

@@ -96,6 +96,82 @@ fn weights_only_checkpoint_still_resets_optimizer() {
     }
 }
 
+#[test]
+fn sharded_checkpoints_reassemble_byte_identical() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use oftv2::comms::RankGroup;
+    use oftv2::coordinator::checkpoint::{self, shard_checkpoint_path};
+
+    let tag = "tiny_oft_v2";
+    let steps = 4;
+
+    // Oracle: the classic single-process run and its full checkpoint.
+    let e = Engine::cpu().unwrap();
+    let mut solo = Trainer::new(&e, &artifacts_root(), cfg(tag, steps)).unwrap();
+    solo.train().unwrap();
+    let oracle = solo.checkpoint_full().unwrap();
+
+    // A 2-rank in-process group; each rank produces only its shard.
+    let ranks = 2usize;
+    let groups = RankGroup::mem_mesh(ranks, Duration::from_secs(60));
+    let shards: Vec<oftv2::coordinator::Checkpoint> = std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let e = Engine::cpu().unwrap();
+                    let mut c = cfg(tag, steps);
+                    c.train.ranks = ranks;
+                    let mut tr = Trainer::new(&e, &artifacts_root(), c).unwrap();
+                    tr.connect_ranks(Arc::new(g)).unwrap();
+                    tr.train().unwrap();
+                    tr.checkpoint_shard().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Round-trip each shard through its `.rank<r>of<R>` file, then the
+    // reassembled checkpoint's file must be byte-identical to the full
+    // single-process save.
+    let base = std::env::temp_dir().join(format!("oft_shard_rt_{}.ckpt", std::process::id()));
+    checkpoint::save(&base, &oracle).unwrap();
+    let mut parts = Vec::new();
+    for (r, shard) in shards.iter().enumerate() {
+        let p = shard_checkpoint_path(&base, r, ranks);
+        checkpoint::save(&p, shard).unwrap();
+        parts.push(checkpoint::load(&p).unwrap());
+        let _ = std::fs::remove_file(p);
+    }
+    let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+    let reassembled = checkpoint::reassemble_sharded(&man, &parts).unwrap();
+    let repath = base.with_extension("ckpt.reassembled");
+    checkpoint::save(&repath, &reassembled).unwrap();
+    assert_eq!(
+        std::fs::read(&repath).unwrap(),
+        std::fs::read(&base).unwrap(),
+        "reassembled sharded checkpoint is not byte-identical to the full save"
+    );
+
+    // Resuming from the reassembled state reproduces the oracle's next
+    // step bitwise.
+    let man_a = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+    let mut tr_a = Trainer::with_checkpoint(&e, man_a, cfg(tag, steps), Some(&oracle)).unwrap();
+    let man_b = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+    let mut tr_b =
+        Trainer::with_checkpoint(&e, man_b, cfg(tag, steps), Some(&reassembled)).unwrap();
+    let batch = tr_a.loader.next_batch();
+    let la = tr_a.train_on(&batch).unwrap();
+    let lb = tr_b.train_on(&batch).unwrap();
+    assert_eq!(la.to_bits(), lb.to_bits(), "resume diverged: {la} vs {lb}");
+
+    let _ = std::fs::remove_file(base);
+    let _ = std::fs::remove_file(repath);
+}
+
 fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }

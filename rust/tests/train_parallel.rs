@@ -9,9 +9,13 @@
 //!   * `--workers N` reproduces the single-worker loss curve, updated
 //!     parameters, and Adam moments bitwise for any N.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use oftv2::artifacts_root;
+use oftv2::comms::{CommsCfg, RankGroup};
 use oftv2::config::RunCfg;
-use oftv2::coordinator::Trainer;
+use oftv2::coordinator::{checkpoint, Checkpoint, Manifest, Trainer};
 use oftv2::runtime::{CheckpointPolicy, Engine};
 use oftv2::tensor::Tensor;
 
@@ -114,4 +118,201 @@ fn worker_counts_beyond_batch_are_safe() {
     let base = run("tiny_oft_v2", 2, 1, CheckpointPolicy::None);
     let many = run("tiny_oft_v2", 2, 16, CheckpointPolicy::None);
     assert_bitwise_equal("tiny_oft_v2", "16 workers", &base, &many);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-rank (ZeRO-1 sharded) training: same contracts, across ranks
+// ---------------------------------------------------------------------------
+
+/// One rank's run inside a connected group: train, then the collective
+/// state reads — every rank must enter them in the same order, so all
+/// of it lives in this one helper shared by the threaded and the
+/// multi-process legs. Returns (outcome, full checkpoint, own shard).
+fn run_in_group(
+    group: RankGroup,
+    tag: &str,
+    steps: usize,
+    workers: usize,
+    policy: CheckpointPolicy,
+) -> (RunOutcome, Checkpoint, Checkpoint) {
+    let e = Engine::cpu().unwrap();
+    let ranks = group.ranks();
+    let mut cfg = RunCfg::default();
+    cfg.tag = tag.into();
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.data.task = "math".into();
+    cfg.data.documents = 120;
+    cfg.optim.lr = 3e-3;
+    cfg.train.workers = workers;
+    cfg.train.grad_checkpoint = policy;
+    cfg.train.ranks = ranks;
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg).unwrap();
+    tr.connect_ranks(Arc::new(group)).unwrap();
+    let hist = tr.train().unwrap();
+    let full = tr.checkpoint_full().unwrap();
+    let shard = tr.checkpoint_shard().unwrap();
+    let outcome = RunOutcome {
+        losses: hist.steps.iter().map(|s| s.loss).collect(),
+        trainables: tr.trainable_tensors().unwrap(),
+        moments: tr.adam_moments().unwrap(),
+    };
+    (outcome, full, shard)
+}
+
+/// Run a whole rank group as threads over the in-memory mesh, assert
+/// every rank saw identical state AND that the per-rank shard files
+/// reassemble to the full checkpoint, then return rank 0's view.
+fn run_ranks(
+    tag: &str,
+    steps: usize,
+    ranks: usize,
+    workers: usize,
+    policy: CheckpointPolicy,
+) -> (RunOutcome, Checkpoint) {
+    let groups = RankGroup::mem_mesh(ranks, Duration::from_secs(60));
+    let mut results: Vec<(RunOutcome, Checkpoint, Checkpoint)> = std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|g| s.spawn(move || run_in_group(g, tag, steps, workers, policy)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    });
+    for r in 1..results.len() {
+        assert_bitwise_equal(tag, &format!("rank {r} vs rank 0"), &results[r].0, &results[0].0);
+        assert_eq!(
+            results[r].1, results[0].1,
+            "{tag}: full checkpoint differs on rank {r}"
+        );
+    }
+    let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+    let parts: Vec<Checkpoint> = results.iter().map(|r| r.2.clone()).collect();
+    let reassembled = checkpoint::reassemble_sharded(&man, &parts).unwrap();
+    assert_eq!(
+        reassembled, results[0].1,
+        "{tag}: reassembled shards != full checkpoint"
+    );
+    let (outcome, full, _) = results.remove(0);
+    (outcome, full)
+}
+
+#[test]
+fn rank_sharding_never_changes_training_all_methods() {
+    // 1 process vs 2 and 4 ranks, every registered PEFT method: the
+    // distributed tree walks the same pairwise schedule as the local
+    // one, and each rank's Adam window updates with the same float
+    // expressions — so losses, trained parameters, and moments must be
+    // bitwise identical at any rank count.
+    for tag in &all_method_tags() {
+        let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+        if man.params_trainable == 0 {
+            // Nothing to shard ('none'): connecting must refuse with a
+            // typed message, not hang or divide the empty space.
+            let mut groups = RankGroup::mem_mesh(2, Duration::from_secs(5));
+            let e = Engine::cpu().unwrap();
+            let mut cfg = RunCfg::default();
+            cfg.tag = tag.to_string();
+            cfg.train.ranks = 2;
+            let mut tr = Trainer::new(&e, &artifacts_root(), cfg).unwrap();
+            let err = tr
+                .connect_ranks(Arc::new(groups.remove(0)))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("exceeds"), "{tag}: unexpected error '{err}'");
+            continue;
+        }
+        let solo = run(tag, 3, 1, CheckpointPolicy::None);
+        for ranks in [2usize, 4] {
+            let (sharded, _full) = run_ranks(tag, 3, ranks, 1, CheckpointPolicy::None);
+            assert_bitwise_equal(tag, &format!("{ranks} ranks vs 1 process"), &solo, &sharded);
+        }
+    }
+}
+
+#[test]
+fn ranks_workers_and_checkpointing_compose() {
+    // The full stack at once — 2 ranks x 2 workers x every-2
+    // checkpointing — still reproduces the plain single-process run
+    // bitwise, on both a full-precision and a quantized-base method.
+    for tag in ["tiny_oft_v2", "tiny_qoft_nf4"] {
+        let base = run(tag, 4, 1, CheckpointPolicy::None);
+        let (combo, _) = run_ranks(tag, 4, 2, 2, CheckpointPolicy::EveryK(2));
+        assert_bitwise_equal(tag, "2 ranks + 2 workers + every-2", &base, &combo);
+    }
+}
+
+#[test]
+fn rank_counts_beyond_batch_are_safe() {
+    // More ranks than sequences (tiny batch = 4): the reduction tree
+    // hands the high ranks empty leaf windows and the result must not
+    // move.
+    let base = run("tiny_oft_v2", 2, 1, CheckpointPolicy::None);
+    let (many, _) = run_ranks("tiny_oft_v2", 2, 6, 1, CheckpointPolicy::None);
+    assert_bitwise_equal("tiny_oft_v2", "6 ranks", &base, &many);
+}
+
+#[test]
+fn multi_process_ranks_match_single_process() {
+    // Child mode: the parent below re-execs this test binary with the
+    // rendezvous in env vars; the child joins over real localhost TCP,
+    // runs the same helper, saves its shard file, and exits.
+    if let Ok(rank) = std::env::var("OFT_TEST_RANK") {
+        let rank: usize = rank.parse().unwrap();
+        let ranks: usize = std::env::var("OFT_TEST_RANKS").unwrap().parse().unwrap();
+        let rdv = std::env::var("OFT_TEST_RDV").unwrap();
+        let tag = std::env::var("OFT_TEST_TAG").unwrap();
+        let ckpt = std::env::var("OFT_TEST_CKPT").unwrap();
+        let group = RankGroup::tcp(rank, ranks, &rdv, CommsCfg::fast()).unwrap();
+        let (_out, _full, shard) = run_in_group(group, &tag, 3, 1, CheckpointPolicy::None);
+        checkpoint::save(checkpoint::shard_checkpoint_path(&ckpt, rank, ranks), &shard).unwrap();
+        return;
+    }
+
+    // Parent: one real spawned process per extra rank, three methods
+    // covering full-precision OFTv2, quantized QOFT, and LoRA.
+    let ranks = 2usize;
+    for tag in ["tiny_oft_v2", "tiny_qoft_nf4", "tiny_lora"] {
+        let solo = run(tag, 3, 1, CheckpointPolicy::None);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let ckpt = std::env::temp_dir().join(format!("oft_mp_{}_{tag}.ckpt", std::process::id()));
+        let exe = std::env::current_exe().unwrap();
+        let mut children = Vec::new();
+        for rank in 1..ranks {
+            let child = std::process::Command::new(&exe)
+                .arg("multi_process_ranks_match_single_process")
+                .args(["--exact", "--test-threads=1"])
+                .env("OFT_TEST_RANK", rank.to_string())
+                .env("OFT_TEST_RANKS", ranks.to_string())
+                .env("OFT_TEST_RDV", &addr)
+                .env("OFT_TEST_TAG", tag)
+                .env("OFT_TEST_CKPT", &ckpt)
+                .stdout(std::process::Stdio::null())
+                .spawn()
+                .unwrap();
+            children.push((rank, child));
+        }
+        let group = RankGroup::tcp_leader(listener, ranks, CommsCfg::fast()).unwrap();
+        let (out, full, shard0) = run_in_group(group, tag, 3, 1, CheckpointPolicy::None);
+        for (rank, mut child) in children {
+            let status = child.wait().unwrap();
+            assert!(status.success(), "{tag}: child rank {rank} failed: {status}");
+        }
+        assert_bitwise_equal(tag, &format!("{ranks} processes vs 1"), &solo, &out);
+
+        // Sharded-vs-full checkpoint equivalence across the process
+        // boundary: rank 0's in-memory shard + the children's files.
+        let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+        let mut parts = vec![shard0];
+        for rank in 1..ranks {
+            let path = checkpoint::shard_checkpoint_path(&ckpt, rank, ranks);
+            parts.push(checkpoint::load(&path).unwrap());
+            let _ = std::fs::remove_file(path);
+        }
+        let reassembled = checkpoint::reassemble_sharded(&man, &parts).unwrap();
+        assert_eq!(reassembled, full, "{tag}: reassembled != full across processes");
+    }
 }
