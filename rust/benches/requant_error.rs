@@ -7,9 +7,10 @@
 //! inflation, and the ‖Δ‖∞ bound for both methods at matched ‖Δ‖_F.
 
 use oftv2::bench::{print_table, Report};
+use oftv2::coordinator::manifest::ModelDims;
 use oftv2::json::Json;
 use oftv2::peft::{LoraAdapter, OftAdapter};
-use oftv2::quant::requant::{err_stats, qlora_requant, qoft_requant};
+use oftv2::quant::requant::{analysis_trainables, err_stats, merge_requant, QuantKind};
 use oftv2::quant::Nf4Tensor;
 use oftv2::tensor::Tensor;
 use oftv2::util::rng::Rng;
@@ -100,14 +101,18 @@ fn main() -> Result<()> {
         &rows,
     );
 
-    // unmatched (raw) reports too, for the record (70 + default 7 = the
+    // unmatched (raw) reports too, for the record, now through the
+    // registry's trait-driven merge path (70 + default 7 = the
     // pre-bench_seed literal 77)
     let mut rng = Rng::new(70 + base_seed);
     let w = Tensor::randn(&[din, dout], 0.1, &mut rng);
-    let lora = LoraAdapter::random(din, dout, 16, 32.0, 0.05, &mut rng);
-    let oft = OftAdapter::random(din, 32, 6, 0.05, &mut rng);
-    let rl = qlora_requant(&w, &lora)?;
-    let ro = qoft_requant(&w, &oft)?;
+    let dims = ModelDims::analysis(16, 32);
+    let lora = oftv2::adapters::get("lora")?;
+    let oft = oftv2::adapters::get("oft_v2")?;
+    let tr_lora = analysis_trainables(lora, "w", din, dout, &dims, 0.05, &mut rng);
+    let tr_oft = analysis_trainables(oft, "w", din, dout, &dims, 0.05, &mut rng);
+    let (_, rl) = merge_requant(lora, "w", &w, &tr_lora, &dims, QuantKind::Nf4)?;
+    let (_, ro) = merge_requant(oft, "w", &w, &tr_oft, &dims, QuantKind::Nf4)?;
     println!(
         "\nraw (unmatched) reports: QLoRA rms {:.5} infl {:.3} | QOFT rms {:.5} infl {:.3}",
         rl.merged.rms, rl.range_inflation, ro.merged.rms, ro.range_inflation

@@ -445,6 +445,125 @@ fn main() -> Result<()> {
             .with("uploads_during_load", Json::num(0.0)),
     );
 
+    // ---- 4. merged-artifact fleet mix ----------------------------------
+    // The lifecycle's serving end: a fleet mixing live adapters (shared
+    // base + trainables) with merged artifacts (zero-trainable residents
+    // on private bases), under a residency cap that forces both kinds to
+    // page. Hot-loads must stay upload-free after the initial attach.
+    let n_live = if quick { 6 } else { 12 };
+    let n_merged = if quick { 6 } else { 12 };
+    let mix_requests = if quick { 60 } else { 180 };
+    let base = BaseModel::for_preset(&engine, "tiny", seed, None)?;
+
+    let merge_tags = ["tiny_oft_v2", "tiny_lora", "tiny_boft"];
+    let mut merged_arts = Vec::new();
+    for tag in merge_tags {
+        let mut c = RunCfg::default();
+        c.tag = tag.into();
+        c.steps = 0;
+        c.log_every = 0;
+        c.seed = seed;
+        c.data.task = "math".into();
+        c.data.documents = 150;
+        let tr = Trainer::with_base(
+            &engine,
+            Manifest::builtin(tag)?,
+            c,
+            None,
+            std::sync::Arc::clone(&base),
+        )?;
+        merged_arts.push(oftv2::artifact::merge_checkpoint(
+            &Manifest::builtin(tag)?,
+            &tr.checkpoint()?,
+            seed,
+            oftv2::quant::requant::QuantKind::None,
+        )?);
+    }
+
+    let mut cfg = ServeConfig::new(8);
+    cfg.block_tokens = 8;
+    cfg.max_queue = mix_requests + 8;
+    cfg.max_resident = Some(6);
+    let mut server = Server::with_config(&engine, base, cfg);
+    for i in 0..n_live {
+        let tag = &tags[i % tags.len()];
+        server.add_adapter_init(&format!("live@{i}"), Manifest::builtin(tag)?, seed, None)?;
+    }
+    for i in 0..n_merged {
+        server.add_artifact(&format!("merged@{i}"), &merged_arts[i % merged_arts.len()])?;
+    }
+    assert_eq!(server.merged_adapters(), n_merged);
+    let names = server.adapter_names();
+
+    let uploads_at_mix = engine.upload_count();
+    for r in 0..mix_requests {
+        let prompt: Vec<i32> = vec![1, (r % 19 + 2) as i32, (r % 11 + 2) as i32];
+        server.submit(&names[r % names.len()], prompt, max_new)?;
+    }
+    let t0 = Timer::start();
+    let responses = server.run_until_idle()?;
+    let mix_secs = t0.secs();
+    assert_eq!(responses.len(), mix_requests);
+    assert_eq!(
+        engine.upload_count(),
+        uploads_at_mix,
+        "merged-artifact and live-adapter page-ins must both be upload-free"
+    );
+
+    let svc_of = |pred: &dyn Fn(&str) -> bool| -> Vec<f64> {
+        responses
+            .iter()
+            .filter(|r| pred(&r.adapter))
+            .map(|r| r.latency_secs - r.queued_secs)
+            .collect()
+    };
+    let svc_merged = svc_of(&|a: &str| a.starts_with("merged@"));
+    let svc_live = svc_of(&|a: &str| a.starts_with("live@"));
+    assert!(!svc_merged.is_empty() && !svc_live.is_empty());
+    let m = server.metrics().clone();
+    assert!(
+        m.adapter_page_ins > 0,
+        "a 6-resident cap over {} tenants must page",
+        n_live + n_merged
+    );
+    print_table(
+        &format!(
+            "merged-artifact fleet mix ({n_live} live + {n_merged} merged over one tiny \
+             base, {mix_requests} requests, 6 resident)"
+        ),
+        &["tenant kind", "reqs", "service p50", "service p95"],
+        &[
+            vec![
+                "merged artifact".into(),
+                svc_merged.len().to_string(),
+                fmt_ms(Summary::of(&svc_merged).median),
+                fmt_ms(Summary::of(&svc_merged).p95),
+            ],
+            vec![
+                "live adapter".into(),
+                svc_live.len().to_string(),
+                fmt_ms(Summary::of(&svc_live).median),
+                fmt_ms(Summary::of(&svc_live).p95),
+            ],
+        ],
+    );
+    println!(
+        "{mix_requests} mixed requests in {}: {:.1} tok/s aggregate, {} page-ins, \
+         0 uploads during load",
+        fmt_ms(mix_secs),
+        m.tokens_per_sec(),
+        m.adapter_page_ins
+    );
+    records.push(
+        BenchRecord::from_samples("serve_merged_mix", &svc_merged)
+            .with("live_adapters", Json::num(n_live as f64))
+            .with("merged_artifacts", Json::num(n_merged as f64))
+            .with("requests", Json::num(mix_requests as f64))
+            .with("live_service_p95_secs", Json::num(Summary::of(&svc_live).p95))
+            .with("page_ins", Json::num(m.adapter_page_ins as f64))
+            .with("uploads_during_load", Json::num(0.0)),
+    );
+
     let path = write_bench_json("serving", "secs", &records)?;
     println!("\nresults -> {}", path.display());
     Ok(())

@@ -311,6 +311,28 @@ impl Adapter for Boft {
         }))
     }
 
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Fold the factor product: the dense rotation is the product
+    /// applied to the identity's rows (`rotate(x) = x M`, so
+    /// `M = rotate(I)`), then `W' = M W` — the same expression the
+    /// orthogonality tests' `dense_rotation` helper evaluates.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let packed = trainables.get(&packed_name(linear))?;
+        let din = w.shape[0];
+        let factors = build_factors(packed, din, dims)?;
+        let (rot, _) = rotate_forward(&Tensor::eye(din), &factors)?;
+        rot.matmul(w)
+    }
+
     /// Each factor's output is saved for the next factor's dR, so BOFT
     /// keeps `m - 1` extra activation copies per adapted linear beyond
     /// the generic input saves.

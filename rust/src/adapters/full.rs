@@ -75,4 +75,20 @@ impl Adapter for Full {
     ) -> Result<Box<dyn DecodeApply>> {
         Ok(Box::new(PlainDecode { w: w.cloned() }))
     }
+
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Full finetuning trains the base in place: the trained linear
+    /// weight *is* the deployable weight.
+    fn merge_linear(
+        &self,
+        _linear: &str,
+        w: &Tensor,
+        _trainables: &Params,
+        _dims: &ModelDims,
+    ) -> Result<Tensor> {
+        Ok(w.clone())
+    }
 }

@@ -355,6 +355,28 @@ impl Adapter for Hoft {
         }))
     }
 
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Fold the reflection product: `rotate(x) = x M` with
+    /// `M = rotate(I)` (each reflection is linear on rows), then
+    /// `W' = M W`. Exactly orthogonal — no series truncation.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let _ = dims;
+        let vt = trainables.get(&param_name(linear))?;
+        let din = w.shape[0];
+        let refl = build_reflections(vt, linear, din)?;
+        let (rot, _) = rotate_forward(&Tensor::eye(din), &refl);
+        rot.matmul(w)
+    }
+
     /// Each reflection's output feeds the next, so HOFT keeps `k - 1`
     /// extra activation copies per adapted linear alive for backward.
     fn mem_transient(

@@ -138,6 +138,24 @@ impl Adapter for Lora {
         }))
     }
 
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Additive fold: `W' = W + (alpha/r) A B`. `x @ W'` equals the
+    /// adapted forward exactly up to f32 summation order.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let a = trainables.get(&format!("{linear}.lora_a"))?;
+        let b = trainables.get(&format!("{linear}.lora_b"))?;
+        w.add(&a.matmul(b)?.scale(scale_of(dims)))
+    }
+
     /// LoRA additionally keeps the low-rank activations `x A` per
     /// adapted linear alive for the backward.
     fn mem_transient(

@@ -151,6 +151,34 @@ pub trait Adapter: Sync {
         w: WeightRef,
     ) -> Result<Box<dyn DecodeApply>>;
 
+    /// Whether this method's adapter folds into the base weight as a
+    /// plain dense matrix ([`Adapter::merge_linear`]). Drives the
+    /// `repro methods` merge column and the `repro merge` lifecycle.
+    fn can_merge(&self) -> bool {
+        false
+    }
+
+    /// Fold the trained adapter of one linear into its base weight:
+    /// returns the merged dense `(din, dout)` weight `W'` such that a
+    /// plain `x @ W'` matmul reproduces this method's adapted forward.
+    /// Orthogonal methods fold by rotation (`W' = R W`, `R` the dense
+    /// input rotation), LoRA by addition (`W' = W + (alpha/r) A B`),
+    /// `full`/`none` trivially (`W' = W`). `trainables` is the run's
+    /// parameter map holding this method's per-linear tensors.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let _ = (linear, w, trainables, dims);
+        bail!(
+            "method '{}' does not support merging (can_merge() is false)",
+            self.name()
+        )
+    }
+
     /// Method-specific transient term of the analytic memory model
     /// (bytes): what training keeps alive beyond base/adapter/optimizer
     /// state. `input_saves` is the generic saved-input term every PEFT

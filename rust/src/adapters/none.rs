@@ -68,4 +68,19 @@ impl Adapter for NoneMethod {
     ) -> Result<Box<dyn DecodeApply>> {
         Ok(Box::new(PlainDecode { w: w.cloned() }))
     }
+
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Nothing to fold: the frozen base is already the deployed weight.
+    fn merge_linear(
+        &self,
+        _linear: &str,
+        w: &Tensor,
+        _trainables: &Params,
+        _dims: &ModelDims,
+    ) -> Result<Tensor> {
+        Ok(w.clone())
+    }
 }

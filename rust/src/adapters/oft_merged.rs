@@ -144,6 +144,21 @@ impl Adapter for WeightCentricOft {
         }))
     }
 
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// The method's own per-step merge, exported: `W' = blockdiag(R) W`.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        merge(trainables, dims, linear, w)
+    }
+
     /// The paper's memory cliff: the materialized `blockdiag(R)`
     /// (din x din) plus the merged weight `R W` (din x dout) per
     /// adapted linear, kept alive by autograd for the backward.

@@ -165,6 +165,26 @@ impl Adapter for InputCentricOft {
         let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
         Ok(Box::new(RotateDecode { w: w.cloned(), blocks }))
     }
+
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Fold by rotation: `W' = blockdiag(R) W`, so a plain `x @ W'`
+    /// equals `block_rotate(x) @ W` (`block_rotate(x) = x blockdiag(R)`
+    /// — the input-centric rotation is linear on rows). The spectrum of
+    /// `W` is preserved (orthogonal left factor), the §4 requant story.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let packed = trainables.get(&packed_name(linear))?;
+        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        crate::peft::blockdiag_dense(&blocks, w.shape[0]).matmul(w)
+    }
 }
 
 /// Decode applier: rotate the token's activations block-by-block, then

@@ -1,0 +1,415 @@
+//! Versioned deployable artifacts: the output of the adapter lifecycle
+//! `merge → requantize → deploy` (`repro merge`).
+//!
+//! A merged artifact is a *base-shaped* object: every base parameter of
+//! the preset's `<preset>_none` contract, with the adapted linears
+//! replaced by their trait-driven merges
+//! ([`crate::adapters::Adapter::merge_linear`]), optionally round-tripped
+//! through NF4/AWQ requantization. Serving hot-loads it as a
+//! zero-trainable resident ([`crate::serve::Server::add_artifact`]):
+//! the decode path is a plain `x @ W'` per linear — no adapter state,
+//! no rotation work per token.
+//!
+//! On disk: magic prefix + format-version byte (a future version errors
+//! as "unsupported vN", not "bad magic"), a hand-rolled JSON header
+//! carrying provenance (preset, method, source tag, quant kind, seed)
+//! and the per-linear [`LinearStats`] requant report, then the raw f32
+//! little-endian payload — the same binary style as
+//! [`crate::coordinator::checkpoint`]. Save → load → save is
+//! byte-stable.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::adapters;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::manifest::{adapted_linear_dims, Manifest};
+use crate::json::{self, Json};
+use crate::quant::requant::{merge_requant, QuantKind};
+use crate::runtime::layers::Params;
+use crate::tensor::Tensor;
+
+/// File magic of merged artifacts, version byte excluded.
+pub const MAGIC_PREFIX: &[u8; 7] = b"OFTMERG";
+/// Current artifact format version (ASCII digit after the prefix).
+pub const FORMAT_VERSION: u8 = b'1';
+
+/// Per-linear merge → requantize statistics, recorded in the artifact
+/// header (the deployment-time requant tolerance evidence).
+#[derive(Clone, Debug)]
+pub struct LinearStats {
+    pub linear: String,
+    /// RMS error of re-quantizing the merged weight.
+    pub merged_rms: f64,
+    /// Max-abs error of re-quantizing the merged weight.
+    pub merged_max: f64,
+    /// RMS error of quantizing the pre-merge weight (the floor).
+    pub baseline_rms: f64,
+    /// `||merged||_inf / ||W||_inf`.
+    pub range_inflation: f64,
+    /// `||merged - W||_inf`.
+    pub delta_inf: f64,
+}
+
+/// A merged deployable: provenance + requant stats + the full
+/// base-shaped parameter payload.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// Model preset the merged base belongs to (`tiny`, `small`, ...).
+    pub preset: String,
+    /// Registry method that was folded in.
+    pub method: String,
+    /// Bundle tag of the source run.
+    pub source_tag: String,
+    /// Requantization the merged linears were round-tripped through.
+    pub quant: QuantKind,
+    /// Base seed of the source run. Provenance only: every parameter
+    /// value ships in the payload, so loading never re-initializes.
+    pub seed: u64,
+    /// One entry per adapted linear, in graph order.
+    pub stats: Vec<LinearStats>,
+    /// Every base parameter of the `<preset>_none` contract, adapted
+    /// linears holding their merged (and round-tripped) weights.
+    pub params: Checkpoint,
+}
+
+/// Fold a finetuned checkpoint into a deployable artifact.
+///
+/// `ckpt` must be a full export (`Trainer::checkpoint()`): base
+/// parameters + trainables (+ quantized-base host masters). For
+/// quantized-base bundles the merge runs against the quantize→dequantize
+/// round trip of the host master — the values the fused kernels
+/// actually decoded with — so the artifact reproduces what the live
+/// adapter served, not what it was initialized from.
+pub fn merge_checkpoint(
+    man: &Manifest,
+    ckpt: &Checkpoint,
+    seed: u64,
+    quant: QuantKind,
+) -> Result<Artifact> {
+    let adapter = adapters::get(&man.method)?;
+    ensure!(
+        adapter.can_merge(),
+        "method '{}' does not support merging (can_merge() is false)",
+        man.method
+    );
+    let none_man = Manifest::builtin(&format!("{}_none", man.preset))
+        .with_context(|| format!("preset '{}' has no builtin base contract", man.preset))?;
+
+    // The adapter's view of the run state: every checkpoint tensor by
+    // name (trainables, and for `full` the trained base itself).
+    let trainables = Params {
+        map: ckpt.iter().map(|(n, t)| (n.clone(), t.clone())).collect(),
+        quant: BTreeMap::new(),
+    };
+
+    let mut params = Checkpoint::new();
+    for spec in &none_man.frozen {
+        let t = ckpt.get(&spec.name).with_context(|| {
+            format!(
+                "source checkpoint lacks base parameter '{}' — export the full \
+                 state (Trainer::checkpoint), not a trainables-only file",
+                spec.name
+            )
+        })?;
+        ensure!(
+            t.shape == spec.shape,
+            "checkpoint '{}' has shape {:?}, base contract wants {:?}",
+            spec.name,
+            t.shape,
+            spec.shape
+        );
+        params.insert(spec.name.clone(), t.clone());
+    }
+
+    let quantized_bases = man.quantized_bases();
+    let mut stats = Vec::new();
+    for (linear, din, dout) in adapted_linear_dims(&man.model) {
+        let w0 = params
+            .get(&linear)
+            .expect("adapted linears are base parameters (inserted above)");
+        let w = if quantized_bases.iter().any(|b| b == &linear) {
+            QuantKind::parse(&man.quant)?.roundtrip(w0)?
+        } else {
+            w0.clone()
+        };
+        let (deployed, rep) = merge_requant(adapter, &linear, &w, &trainables, &man.model, quant)?;
+        ensure!(
+            deployed.shape == vec![din, dout],
+            "merged '{linear}' has shape {:?}, expected ({din}, {dout})",
+            deployed.shape
+        );
+        stats.push(LinearStats {
+            linear: linear.clone(),
+            merged_rms: rep.merged.rms,
+            merged_max: rep.merged.max,
+            baseline_rms: rep.baseline.rms,
+            range_inflation: rep.range_inflation,
+            delta_inf: rep.delta_inf,
+        });
+        params.insert(linear, deployed);
+    }
+
+    Ok(Artifact {
+        preset: man.preset.clone(),
+        method: man.method.clone(),
+        source_tag: man.tag.clone(),
+        quant,
+        seed,
+        stats,
+        params,
+    })
+}
+
+/// Write an artifact file (byte-stable: saving a loaded artifact
+/// reproduces the input bytes exactly).
+pub fn save(path: impl AsRef<Path>, art: &Artifact) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in &art.params {
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            (
+                "shape",
+                Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("offset", Json::num(offset as f64)),
+        ]));
+        offset += t.numel();
+    }
+    let stats = art
+        .stats
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("linear", Json::str(s.linear.clone())),
+                ("merged_rms", Json::num(s.merged_rms)),
+                ("merged_max", Json::num(s.merged_max)),
+                ("baseline_rms", Json::num(s.baseline_rms)),
+                ("range_inflation", Json::num(s.range_inflation)),
+                ("delta_inf", Json::num(s.delta_inf)),
+            ])
+        })
+        .collect();
+    let header = Json::obj(vec![
+        ("preset", Json::str(art.preset.clone())),
+        ("method", Json::str(art.method.clone())),
+        ("source_tag", Json::str(art.source_tag.clone())),
+        ("quant", Json::str(art.quant.name())),
+        ("seed", Json::num(art.seed as f64)),
+        ("stats", Json::arr(stats)),
+        ("entries", Json::arr(entries)),
+        ("total", Json::num(offset as f64)),
+    ])
+    .to_string();
+
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC_PREFIX)?;
+    w.write_all(&[FORMAT_VERSION])?;
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    for t in art.params.values() {
+        for x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an artifact file.
+pub fn load(path: impl AsRef<Path>) -> Result<Artifact> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening artifact {}", path.as_ref().display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic[..7] != MAGIC_PREFIX || !magic[7].is_ascii_digit() {
+        bail!("not an OFT merged artifact: bad magic");
+    }
+    if magic[7] != FORMAT_VERSION {
+        bail!(
+            "artifact format v{} unsupported (max {})",
+            (magic[7] - b'0'),
+            (FORMAT_VERSION - b'0')
+        );
+    }
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes)?;
+    let header = json::parse(std::str::from_utf8(&hbytes)?)?;
+
+    let total = header.get("total")?.as_usize()?;
+    let mut payload = vec![0u8; total * 4];
+    r.read_exact(&mut payload)?;
+    let floats: Vec<f32> = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut params = Checkpoint::new();
+    for e in header.get("entries")?.as_arr()? {
+        let name = e.get("name")?.as_str()?.to_string();
+        let shape = e.get("shape")?.as_shape()?;
+        let offset = e.get("offset")?.as_usize()?;
+        let n: usize = shape.iter().product();
+        if offset + n > floats.len() {
+            bail!("artifact entry '{name}' overruns payload");
+        }
+        params.insert(name, Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()));
+    }
+
+    let mut stats = Vec::new();
+    for s in header.get("stats")?.as_arr()? {
+        stats.push(LinearStats {
+            linear: s.get("linear")?.as_str()?.to_string(),
+            merged_rms: s.get("merged_rms")?.as_f64()?,
+            merged_max: s.get("merged_max")?.as_f64()?,
+            baseline_rms: s.get("baseline_rms")?.as_f64()?,
+            range_inflation: s.get("range_inflation")?.as_f64()?,
+            delta_inf: s.get("delta_inf")?.as_f64()?,
+        });
+    }
+
+    Ok(Artifact {
+        preset: header.get("preset")?.as_str()?.to_string(),
+        method: header.get("method")?.as_str()?.to_string(),
+        source_tag: header.get("source_tag")?.as_str()?.to_string(),
+        quant: QuantKind::parse(header.get("quant")?.as_str()?)?,
+        seed: header.get("seed")?.as_usize()? as u64,
+        stats,
+        params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::init_param;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("oft_artifact_{}_{name}", std::process::id()))
+    }
+
+    /// A full-state checkpoint of `tag` at init (base + trainables) —
+    /// the shape `Trainer::checkpoint()` exports before any training.
+    fn init_checkpoint(man: &Manifest, seed: u64) -> Checkpoint {
+        let none_man = Manifest::builtin(&format!("{}_none", man.preset)).unwrap();
+        let mut ck = Checkpoint::new();
+        for spec in &none_man.frozen {
+            ck.insert(spec.name.clone(), init_param(spec, seed, None).unwrap());
+        }
+        for spec in &man.trainable {
+            ck.insert(spec.name.clone(), init_param(spec, seed, None).unwrap());
+        }
+        ck
+    }
+
+    #[test]
+    fn merge_at_identity_init_is_the_base() {
+        // Zero-initialized adapters are exact identities, so the merged
+        // linears equal the base weights bitwise (quant = none).
+        let man = Manifest::builtin("tiny_oft_v2").unwrap();
+        let ck = init_checkpoint(&man, 7);
+        let art = merge_checkpoint(&man, &ck, 7, QuantKind::None).unwrap();
+        assert_eq!(art.preset, "tiny");
+        assert_eq!(art.method, "oft_v2");
+        assert_eq!(art.stats.len(), adapted_linear_dims(&man.model).len());
+        for s in &art.stats {
+            assert_eq!(s.merged_rms, 0.0, "{}", s.linear);
+            assert_eq!(s.delta_inf, 0.0, "{}", s.linear);
+            assert_eq!(art.params.get(&s.linear).unwrap(), ck.get(&s.linear).unwrap());
+        }
+        // every base parameter of the `_none` contract is present
+        let none_man = Manifest::builtin("tiny_none").unwrap();
+        for spec in &none_man.frozen {
+            assert!(art.params.contains_key(&spec.name), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_byte_stable() {
+        let man = Manifest::builtin("tiny_lora").unwrap();
+        let ck = init_checkpoint(&man, 11);
+        let art = merge_checkpoint(&man, &ck, 11, QuantKind::Nf4).unwrap();
+        let p1 = tmp("roundtrip1");
+        let p2 = tmp("roundtrip2");
+        save(&p1, &art).unwrap();
+        let back = load(&p1).unwrap();
+        assert_eq!(back.preset, art.preset);
+        assert_eq!(back.method, art.method);
+        assert_eq!(back.source_tag, art.source_tag);
+        assert_eq!(back.quant, art.quant);
+        assert_eq!(back.seed, art.seed);
+        assert_eq!(back.params, art.params);
+        assert_eq!(back.stats.len(), art.stats.len());
+        save(&p2, &back).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "save(load(x)) must reproduce x byte for byte"
+        );
+        let _ = std::fs::remove_file(p1);
+        let _ = std::fs::remove_file(p2);
+    }
+
+    #[test]
+    fn future_format_version_names_itself() {
+        let man = Manifest::builtin("tiny_none").unwrap();
+        let ck = init_checkpoint(&man, 3);
+        let art = merge_checkpoint(&man, &ck, 3, QuantKind::None).unwrap();
+        let p = tmp("future_version");
+        save(&p, &art).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..7], MAGIC_PREFIX);
+        assert_eq!(bytes[7], b'1');
+        bytes[7] = b'3';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("artifact format v3 unsupported (max 1)"), "{err}");
+        bytes[7] = b'?';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn trainables_only_checkpoint_is_rejected() {
+        let man = Manifest::builtin("tiny_oft_v2").unwrap();
+        let full = init_checkpoint(&man, 5);
+        let mut trainables_only = Checkpoint::new();
+        for spec in &man.trainable {
+            trainables_only.insert(spec.name.clone(), full.get(&spec.name).unwrap().clone());
+        }
+        let err = merge_checkpoint(&man, &trainables_only, 5, QuantKind::None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("lacks base parameter"), "{err}");
+    }
+
+    #[test]
+    fn quantized_bundle_merges_the_roundtripped_base() {
+        // For a quantized-base bundle the artifact must hold the values
+        // the fused kernels decoded with — the NF4 round trip of the
+        // host master — not the f32 master itself.
+        let man = Manifest::builtin("tiny_qoft_nf4").unwrap();
+        let ck = init_checkpoint(&man, 9);
+        let art = merge_checkpoint(&man, &ck, 9, QuantKind::None).unwrap();
+        for base in man.quantized_bases() {
+            let expect = QuantKind::Nf4.roundtrip(ck.get(&base).unwrap()).unwrap();
+            assert_eq!(
+                art.params.get(&base).unwrap(),
+                &expect,
+                "identity merge of packed '{base}' must equal its round trip"
+            );
+        }
+    }
+}

@@ -17,7 +17,13 @@ use crate::json::{self, Json};
 use crate::runtime::shard_range;
 use crate::tensor::Tensor;
 
-const MAGIC: &[u8; 8] = b"OFTCKPT1";
+/// File magic, split from the format version so a future version is
+/// reported as "unsupported", not "bad magic". The on-disk bytes of a
+/// current-format file are unchanged: `OFTCKPT` + ASCII `1`.
+const MAGIC_PREFIX: &[u8; 7] = b"OFTCKPT";
+/// Current checkpoint format version, stored as an ASCII digit in the
+/// byte after the magic prefix.
+const FORMAT_VERSION: u8 = b'1';
 
 /// Key holding one rank's flat first-moment shard.
 pub const SHARD_M_KEY: &str = "__adam_shard.m";
@@ -53,7 +59,8 @@ pub fn save(path: impl AsRef<Path>, ckpt: &Checkpoint) -> Result<()> {
     let file = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {}", path.as_ref().display()))?;
     let mut w = std::io::BufWriter::new(file);
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_PREFIX)?;
+    w.write_all(&[FORMAT_VERSION])?;
     w.write_all(&(header.len() as u32).to_le_bytes())?;
     w.write_all(header.as_bytes())?;
     for t in ckpt.values() {
@@ -72,8 +79,15 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     let mut r = std::io::BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    if &magic[..7] != MAGIC_PREFIX || !magic[7].is_ascii_digit() {
         bail!("not an OFT checkpoint: bad magic");
+    }
+    if magic[7] != FORMAT_VERSION {
+        bail!(
+            "checkpoint format v{} unsupported (max {})",
+            (magic[7] - b'0'),
+            (FORMAT_VERSION - b'0')
+        );
     }
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
@@ -284,6 +298,33 @@ mod tests {
         let p = tmp("garbage");
         std::fs::write(&p, b"not a checkpoint at all").unwrap();
         assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn future_format_version_names_itself() {
+        // A bumped format-version byte is "unsupported vN", not "bad
+        // magic" — the forward-compat contract of the magic/version
+        // split.
+        let mut rng = Rng::new(2);
+        let mut ck = Checkpoint::new();
+        ck.insert("w".into(), Tensor::randn(&[4, 4], 0.1, &mut rng));
+        let p = tmp("future_version");
+        save(&p, &ck).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes[7], b'1');
+        bytes[7] = b'2';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("checkpoint format v2 unsupported (max 1)"),
+            "{err}"
+        );
+        // a non-digit version byte is still plain bad magic
+        bytes[7] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
         let _ = std::fs::remove_file(p);
     }
 

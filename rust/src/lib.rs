@@ -28,6 +28,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod adapters;
+pub mod artifact;
 pub mod bench;
 pub mod cli;
 pub mod comms;

@@ -4,6 +4,7 @@
 //!   train    finetune one artifact bundle (config file + --set overrides)
 //!   eval     evaluate a bundle's initial state on its held-out split
 //!   decode   greedy-decode a prompt through a bundle
+//!   merge    fold a checkpoint into a deployable merged artifact
 //!   params   print the paper's trainable-parameter tables (Tables 3-5)
 //!   memory   print the analytic GPU-memory tables (Figs. 1/4, Table 11)
 //!   bundles  list available artifact bundles
@@ -11,6 +12,7 @@
 //! Examples:
 //!   repro train --tag tiny_oft_v2 --steps 50
 //!   repro train --config run.toml --set optim.lr=1e-4
+//!   repro merge --tag tiny_oft_v2 --checkpoint ck.bin --quant nf4
 //!   repro params
 //!   repro memory --model qwen2.5-7b
 
@@ -41,6 +43,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("train") => cmd_train(&argv[1..]),
         Some("eval") => cmd_eval(&argv[1..]),
         Some("decode") => cmd_decode(&argv[1..]),
+        Some("merge") => cmd_merge(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("params") => cmd_params(),
         Some("memory") => cmd_memory(&argv[1..]),
@@ -61,12 +64,17 @@ fn usage() -> &'static str {
      \x20 train    finetune one artifact bundle\n\
      \x20 eval     evaluate a bundle without training\n\
      \x20 decode   greedy-decode a prompt through a bundle\n\
+     \x20 merge    fold a finetuned checkpoint into a deployable merged artifact\n\
      \x20 serve    batched multi-adapter serving over one shared base\n\
      \x20 params   trainable-parameter tables (paper Tables 3-5)\n\
      \x20 memory   analytic GPU-memory tables (paper Figs. 1/4, Table 11)\n\
      \x20 methods  list registered PEFT methods with parameter counts\n\
      \x20 bundles  list available artifact bundles\n\
      \x20 inspect  static HLO cost analysis of a bundle's graphs\n\n\
+     Adapter lifecycle example (merge -> requantize -> serve hot-load):\n\
+     \x20 repro train --tag tiny_oft_v2 --steps 50 --save-checkpoint ck.bin\n\
+     \x20 repro merge --tag tiny_oft_v2 --checkpoint ck.bin --quant nf4 --out merged/tiny_oft_v2.oftmerged\n\
+     \x20 repro serve --adapters tiny_lora --artifacts merged/\n\n\
      Run `repro <subcommand> --help` for options."
 }
 
@@ -343,6 +351,77 @@ fn cmd_decode(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Fold a finetuned checkpoint into a versioned deployable artifact:
+/// merge the adapter into the base through the registry's
+/// `Adapter::merge_linear` hook, optionally requantize the merged
+/// linears, and write one self-contained file `serve --artifacts`
+/// hot-loads as a zero-trainable resident.
+fn cmd_merge(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("merge", "fold a checkpoint into a deployable merged artifact")
+        .opt("tag", "bundle tag the checkpoint was trained as", Some("tiny_oft_v2"))
+        .opt(
+            "checkpoint",
+            "full checkpoint to merge (write one with `train --save-checkpoint`)",
+            None,
+        )
+        .opt("quant", "requantize merged linears: none | nf4 | awq", Some("none"))
+        .opt("out", "output artifact path", None)
+        .opt("seed", "base seed recorded as provenance", Some("42"))
+        .flag("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.has_flag("help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let tag = args.get_or("tag", "tiny_oft_v2");
+    let ckpt_path = args
+        .get("checkpoint")
+        .context("--checkpoint is required (write one with `repro train --save-checkpoint`)")?;
+    let quant = oftv2::quant::requant::QuantKind::parse(args.get_or("quant", "none"))?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let man = oftv2::coordinator::Manifest::load_or_builtin(artifacts_root().join(tag))?;
+    let ckpt = oftv2::coordinator::checkpoint::load(ckpt_path)?;
+    let art = oftv2::artifact::merge_checkpoint(&man, &ckpt, seed, quant)?;
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::PathBuf::from(format!("{tag}.oftmerged")),
+    };
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    oftv2::artifact::save(&out, &art)?;
+
+    let rows: Vec<Vec<String>> = art
+        .stats
+        .iter()
+        .map(|s| {
+            vec![
+                s.linear.clone(),
+                format!("{:.6}", s.merged_rms),
+                format!("{:.6}", s.baseline_rms),
+                format!("{:.3}", s.range_inflation),
+                format!("{:.4}", s.delta_inf),
+            ]
+        })
+        .collect();
+    oftv2::bench::print_table(
+        &format!("merge {tag} (method {}, requant {})", art.method, art.quant.name()),
+        &["linear", "requant rms", "baseline rms", "∞-inflation", "‖Δ‖∞"],
+        &rows,
+    );
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "\nartifact -> {} ({}, {} tensors); hot-load with `repro serve --artifacts <dir>`",
+        out.display(),
+        human_bytes(bytes),
+        art.params.len()
+    );
+    Ok(())
+}
+
 /// Batched multi-tenant serving: N adapters (any mix of PEFT methods)
 /// over ONE engine-resident base, bounded admission queue, continuous
 /// batching, paged KV-cached incremental decode.
@@ -352,6 +431,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "adapters",
             "comma-separated bundle tags sharing one preset",
             Some("tiny_oft_v2,tiny_qoft_nf4"),
+        )
+        .opt(
+            "artifacts",
+            "directory of merged artifacts (repro merge) to hot-load alongside",
+            None,
         )
         .opt("requests", "total requests to serve", Some("12"))
         .opt("max-new", "max generated tokens per request", Some("16"))
@@ -438,6 +522,42 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         names.len(),
         engine.upload_count() - uploads_base
     );
+
+    // Merged artifacts join the fleet as zero-trainable residents: one
+    // upload burst at attach, then page-ins stay upload-free.
+    if let Some(dir) = args.get("artifacts") {
+        let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading --artifacts dir {dir}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_file())
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            bail!("--artifacts dir {dir} holds no files; write one with `repro merge`");
+        }
+        let uploads_art = engine.upload_count();
+        let mut merged = 0usize;
+        for p in paths {
+            let art = oftv2::artifact::load(&p)
+                .with_context(|| format!("loading artifact {}", p.display()))?;
+            let stem = p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "artifact".to_string());
+            let name = if names.iter().any(|n: &String| *n == stem) {
+                format!("{stem}@merged")
+            } else {
+                stem
+            };
+            server.add_artifact(&name, &art)?;
+            names.push(name);
+            merged += 1;
+        }
+        log_info!(
+            "{merged} merged artifact(s) hot-loaded from {dir} ({} one-time uploads)",
+            engine.upload_count() - uploads_art
+        );
+    }
 
     // Synthetic prompts over the preset's vocabulary.
     let dims = manifests[0].model;
@@ -700,8 +820,8 @@ fn cmd_methods(argv: &[String]) -> Result<()> {
     let preset = args.get_or("preset", "tiny");
     println!("Registered PEFT methods (preset '{preset}')\n");
     println!(
-        "{:<12} {:<6} {:<6} {:>12}  {:<22} {}",
-        "method", "label", "quant", "trainable", "example tag", "about"
+        "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {}",
+        "method", "label", "quant", "merge", "trainable", "example tag", "about"
     );
     for adapter in oftv2::adapters::all() {
         let tag = oftv2::adapters::bundle_tag(preset, *adapter);
@@ -712,17 +832,19 @@ fn cmd_methods(argv: &[String]) -> Result<()> {
             Err(e) => format!("(unavailable: {e})"),
         };
         println!(
-            "{:<12} {:<6} {:<6} {:>12}  {:<22} {}",
+            "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {}",
             adapter.name(),
             adapter.paper_label(adapter.quantized_base()),
             if adapter.quantized_base() { "4-bit" } else { "f32" },
+            if adapter.can_merge() { "yes" } else { "no" },
             trainable,
             tag,
             adapter.about()
         );
     }
     println!(
-        "\nselect with --tag <preset>_<method>[_<quant>]; \
+        "\nselect with --tag <preset>_<method>[_<quant>]; fold a trained adapter \
+         into a deployable base with `repro merge`; \
          see README \"Adding a PEFT method\" to register a new one"
     );
     Ok(())

@@ -316,6 +316,11 @@ pub struct ServeShape {
     /// attached-but-evicted tenants cost only their (negligible on GPU)
     /// host-side trainables.
     pub resident_adapters: usize,
+    /// Merged-artifact residents (`repro merge` + `serve --artifacts`):
+    /// each carries a *private* base copy instead of adapter weights on
+    /// the shared base — zero per-token adapter work, paid for in
+    /// residency. This is the merged-vs-live deployment trade-off.
+    pub merged_residents: usize,
     pub kv: KvPricing,
 }
 
@@ -326,6 +331,7 @@ impl Default for ServeShape {
             seq: 2048,
             kv_bytes: 2.0,
             resident_adapters: 1,
+            merged_residents: 0,
             kv: KvPricing::Contiguous,
         }
     }
@@ -340,13 +346,16 @@ pub struct ServeBreakdown {
     /// Resolved weights of the resident adapters (evicted tenants pay
     /// nothing here).
     pub adapters: f64,
+    /// Private base copies of merged-artifact residents, each at the
+    /// shared base's inference precision.
+    pub merged_bases: f64,
     pub kv: f64,
     pub overhead: f64,
 }
 
 impl ServeBreakdown {
     pub fn total(&self) -> f64 {
-        self.base_weights + self.adapters + self.kv + self.overhead
+        self.base_weights + self.adapters + self.merged_bases + self.kv + self.overhead
     }
 
     pub fn total_gib(&self) -> f64 {
@@ -370,6 +379,9 @@ pub fn serving_memory(
         spec.linear_params() as f64 * precision.bytes_per_param() + other_params * 2.0;
     let n_adapter = count(spec, method.kind()) as f64;
     let adapters = shape.resident_adapters as f64 * n_adapter * 2.0;
+    // A merged artifact has no adapter weights at all — its cost is a
+    // whole private base at the same inference precision.
+    let merged_bases = shape.merged_residents as f64 * base_weights;
     let kv_row = spec.n_layers as f64 * 2.0 * spec.d_model as f64 * shape.kv_bytes;
     let kv = match shape.kv {
         KvPricing::Contiguous => (shape.max_batch * shape.seq) as f64 * kv_row,
@@ -378,6 +390,7 @@ pub fn serving_memory(
     ServeBreakdown {
         base_weights,
         adapters,
+        merged_bases,
         kv,
         overhead: FRAMEWORK_OVERHEAD,
     }
@@ -615,9 +628,49 @@ mod tests {
         assert!(serve100.adapters > serve1.adapters * 99.0);
         assert!(serve100.adapters < serve100.base_weights);
         assert!((serve100.total() - serve100.base_weights - serve100.adapters
-            - serve100.kv - serve100.overhead)
+            - serve100.merged_bases - serve100.kv - serve100.overhead)
             .abs()
             < 1.0);
+    }
+
+    #[test]
+    fn merged_residents_price_full_base_copies() {
+        // A merged artifact trades per-token adapter work for residency:
+        // each one costs a whole private base, so one merged resident
+        // outweighs even 100 live OFTv2 tenants on the shared base.
+        let spec = qwen("7b");
+        let m = Method::oft_input_centric(32);
+        let live = serving_memory(&spec, m, Precision::Nf4, ServeShape::default());
+        assert_eq!(live.merged_bases, 0.0, "default shape has no merged residents");
+        let merged2 = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape { merged_residents: 2, ..ServeShape::default() },
+        );
+        assert!(
+            (merged2.merged_bases - 2.0 * merged2.base_weights).abs() < 1.0,
+            "each merged resident is one base copy"
+        );
+        assert_eq!(merged2.total() - merged2.merged_bases, live.total());
+        let live100 = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape { resident_adapters: 100, ..ServeShape::default() },
+        );
+        let merged1 = serving_memory(
+            &spec,
+            m,
+            Precision::Nf4,
+            ServeShape { merged_residents: 1, ..ServeShape::default() },
+        );
+        assert!(
+            merged1.merged_bases > live100.adapters,
+            "one merged base ({}) must outweigh 100 live adapters ({})",
+            merged1.merged_bases,
+            live100.adapters
+        );
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! mid-decode. Most sequences finish early (EOS) and return their
 //! blocks without ever drawing the full reservation.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::coordinator::manifest::{Manifest, ModelDims};
@@ -25,6 +27,10 @@ use super::{ServeConfig, Server};
 pub(crate) struct Adapter {
     pub(crate) manifest: Manifest,
     pub(crate) trainables: Vec<Value>,
+    /// For merged-artifact residents: a private base holding the merged
+    /// weights (uploaded once at attach). `None` = a live adapter on
+    /// the server's shared base.
+    pub(crate) base: Option<Arc<BaseModel>>,
     /// `None` while paged out; rebuilt on the next request.
     pub(crate) decoder: Option<Decoder>,
     /// LRU clock stamp of the last touch.
@@ -40,11 +46,31 @@ impl Adapter {
         Adapter {
             manifest,
             trainables,
+            base: None,
             decoder: Some(decoder),
             last_used: 0,
             active_seqs: 0,
             page_ins: 0,
         }
+    }
+
+    /// A merged-artifact resident: zero trainables, decoding against a
+    /// private base instead of the server's shared one.
+    pub(crate) fn merged(manifest: Manifest, base: Arc<BaseModel>, decoder: Decoder) -> Adapter {
+        Adapter {
+            manifest,
+            trainables: Vec::new(),
+            base: Some(base),
+            decoder: Some(decoder),
+            last_used: 0,
+            active_seqs: 0,
+            page_ins: 0,
+        }
+    }
+
+    /// Whether this resident is a merged artifact (private base).
+    pub(crate) fn is_merged(&self) -> bool {
+        self.base.is_some()
     }
 }
 
@@ -220,7 +246,10 @@ impl Server<'_> {
             .is_none();
         if needs_build {
             let a = self.adapters.get(name).expect("checked above");
-            let decoder = build_decoder(self.engine, &self.base, &a.manifest, &a.trainables)?;
+            // Merged artifacts rebuild against their private base; its
+            // buffer cache makes the page-in upload-free too.
+            let base = a.base.as_deref().unwrap_or(&self.base);
+            let decoder = build_decoder(self.engine, base, &a.manifest, &a.trainables)?;
             let a = self.adapters.get_mut(name).expect("checked above");
             a.decoder = Some(decoder);
             a.page_ins += 1;

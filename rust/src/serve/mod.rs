@@ -358,8 +358,55 @@ impl<'e> Server<'e> {
         self.add_adapter(name, manifest, &state.tr)
     }
 
+    /// Attach a merged deployable artifact (`repro merge`) as a
+    /// zero-trainable resident. The artifact's parameters become a
+    /// private base uploaded once here; LRU page-ins rebuild the
+    /// decoder from its cached buffers, so `Engine::upload_count()`
+    /// stays flat across page-ins exactly as for live adapters.
+    pub fn add_artifact(&mut self, name: &str, art: &crate::artifact::Artifact) -> Result<()> {
+        ensure!(
+            !self.adapters.contains_key(name),
+            "adapter '{name}' already registered"
+        );
+        ensure!(
+            art.preset == self.base.preset,
+            "artifact '{name}' was merged for preset '{}', server base is '{}'",
+            art.preset,
+            self.base.preset
+        );
+        let manifest = Manifest::builtin(&format!("{}_none", art.preset))
+            .with_context(|| format!("preset '{}' has no builtin base contract", art.preset))?;
+        for spec in &manifest.frozen {
+            ensure!(
+                art.params.contains_key(&spec.name),
+                "artifact '{name}' lacks base parameter '{}'",
+                spec.name
+            );
+        }
+        let base =
+            BaseModel::from_manifest(self.engine, &manifest, art.seed, Some(&art.params))?;
+        let decoder = alloc::build_decoder(self.engine, &base, &manifest, &[])?;
+        if self.cfg.kv == KvMode::Paged {
+            self.kv.ensure_pool(&decoder, &manifest.model, &self.cfg)?;
+        }
+        self.metrics
+            .per_adapter
+            .insert(name.to_string(), AdapterMetrics::default());
+        self.adapters
+            .insert(name.to_string(), Adapter::merged(manifest, base, decoder));
+        self.pager.touch(self.adapters.get_mut(name).expect("just inserted"));
+        self.enforce_residency(None);
+        Ok(())
+    }
+
     pub fn adapter_names(&self) -> Vec<String> {
         self.adapters.keys().cloned().collect()
+    }
+
+    /// Attached merged-artifact residents (each carries a private
+    /// merged base; see [`crate::memmodel`] for how they are priced).
+    pub fn merged_adapters(&self) -> usize {
+        self.adapters.values().filter(|a| a.is_merged()).count()
     }
 
     /// Adapters whose decoder is currently resident (LRU paging keeps
