@@ -36,6 +36,7 @@ use crate::runtime::layers::linear::{
     cnp_backward_all,
 };
 use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
 use crate::tensor::Tensor;
 
 pub struct Boft;
@@ -175,6 +176,19 @@ impl Adapter for Boft {
             dims.block_b
         );
         super::oft_v2::ensure_blocks_divide("boft", dims)
+    }
+
+    /// The butterfly factorization fixes the block count per factor, so
+    /// `r` and `block_share` do not apply; everything else does.
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[
+            Knob::Coft,
+            Knob::Eps,
+            Knob::ModuleDropout,
+            Knob::BlockSize,
+            Knob::Target,
+            Knob::Exclude,
+        ]
     }
 
     fn linear_trainables(

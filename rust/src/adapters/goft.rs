@@ -1,0 +1,469 @@
+//! GOFT: quasi-orthogonal finetuning via Givens rotations (Ma et al.
+//! 2024, "Parameter Efficient Quasi-Orthogonal Fine-Tuning via Givens
+//! Rotation", per PAPERS.md) as a runtime method. The per-linear
+//! rotation is a product of `k` *stages*; each stage applies `din/2`
+//! disjoint plane (Givens) rotations
+//!
+//! ```text
+//!   y_a =  cos(t) x_a - sin(t) x_b
+//!   y_b =  sin(t) x_a + cos(t) x_b
+//! ```
+//!
+//! so a stage is exactly orthogonal for any angles, costs `O(din)`
+//! per row, and carries `din/2` trainable angles. Stages alternate
+//! between adjacent pairing `(2j, 2j+1)` and the wrap-around offset
+//! pairing `(2j+1, 2j+2 mod din)` — the brick-wall pattern that lets
+//! `k` stages mix coordinates up to distance `k` apart, the paper's
+//! answer to block-diagonal locality.
+//!
+//! **Identity at init.** All angles start at zero (`Init::Zeros`), and
+//! a zero-angle plane rotation is the identity — the adapted model
+//! starts exactly at the pretrained base, like `Q = 0` does for the
+//! Cayley methods. No anchors, no series truncation: orthogonality is
+//! exact at every point of training.
+
+use anyhow::{ensure, Context, Result};
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
+use crate::tensor::Tensor;
+
+pub struct Goft;
+
+/// Registry object.
+pub static GOFT: Goft = Goft;
+
+/// Givens stages per adapted linear: the bundle's LoRA rank, at
+/// least 1 (each stage is din/2 angles, so parameters total
+/// `k * din / 2` — half a HOFT reflection set at equal rank).
+pub fn stages(dims: &ModelDims) -> usize {
+    dims.lora_r.max(1)
+}
+
+fn param_name(linear: &str) -> String {
+    format!("{linear}.goft_theta")
+}
+
+/// The disjoint index pairs of stage `s` over `din` (even) coordinates:
+/// even stages rotate adjacent pairs, odd stages the offset pairs with
+/// a wrap-around — uniformly `din/2` pairs either way.
+fn stage_pairs(s: usize, din: usize) -> Vec<(usize, usize)> {
+    let half = din / 2;
+    (0..half)
+        .map(|j| {
+            if s % 2 == 0 {
+                (2 * j, 2 * j + 1)
+            } else {
+                (2 * j + 1, (2 * j + 2) % din)
+            }
+        })
+        .collect()
+}
+
+/// One resolved stage: its pairing plus the angles' cos/sin tables.
+struct Stage {
+    pairs: Vec<(usize, usize)>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+/// Per-step plan entry: all stages of one linear, resolved once.
+struct GoftPlan {
+    stages: Vec<Stage>,
+}
+
+/// Activation extras: the inputs to stages `1..k` (stage 0's input is
+/// the linear's own input, already saved in the activation record's
+/// `x`), plus the resolved stages when the step had no shared plan.
+struct GoftAct {
+    inputs: Vec<Tensor>,
+    stages: Option<Vec<Stage>>,
+}
+
+/// Resolve the trainable `(k, din/2)` angles into stages.
+fn build_stages(theta: &Tensor, linear: &str, din: usize) -> Result<Vec<Stage>> {
+    ensure!(
+        din % 2 == 0,
+        "GOFT pairs coordinates, so '{linear}' needs an even input width, got {din}"
+    );
+    let half = din / 2;
+    ensure!(
+        theta.shape.len() == 2 && theta.shape[1] == half && theta.shape[0] > 0,
+        "GOFT parameter of '{linear}' must be (k, {half}), got {:?}",
+        theta.shape
+    );
+    let k = theta.shape[0];
+    let mut out = Vec::with_capacity(k);
+    for s in 0..k {
+        let angles = &theta.data[s * half..(s + 1) * half];
+        out.push(Stage {
+            pairs: stage_pairs(s, din),
+            cos: angles.iter().map(|t| t.cos()).collect(),
+            sin: angles.iter().map(|t| t.sin()).collect(),
+        });
+    }
+    Ok(out)
+}
+
+/// Apply one stage to every row. The pairs are disjoint, so each
+/// coordinate is written exactly once.
+fn apply_stage(x: &Tensor, st: &Stage) -> Tensor {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0f32; m * d];
+    for row in 0..m {
+        let src = &x.data[row * d..(row + 1) * d];
+        let dst = &mut out[row * d..(row + 1) * d];
+        for (p, &(a, b)) in st.pairs.iter().enumerate() {
+            let (c, s) = (st.cos[p], st.sin[p]);
+            dst[a] = c * src[a] - s * src[b];
+            dst[b] = s * src[a] + c * src[b];
+        }
+    }
+    Tensor::from_vec(&[m, d], out)
+}
+
+/// Apply all stages in index order; returns the output and the inputs
+/// to stages `1..k` (for the backward — stage 0 reads the activation
+/// record's saved `x`, so it is not duplicated here).
+fn rotate_forward(x: &Tensor, stages: &[Stage]) -> (Tensor, Vec<Tensor>) {
+    let Some((first, rest)) = stages.split_first() else {
+        return (x.clone(), Vec::new());
+    };
+    let mut cur = apply_stage(x, first);
+    let mut inputs = Vec::with_capacity(rest.len());
+    for st in rest {
+        inputs.push(cur.clone());
+        cur = apply_stage(&cur, st);
+    }
+    (cur, inputs)
+}
+
+/// As [`rotate_forward`] without saving intermediates — the per-token
+/// decode path, where nothing flows backward.
+fn rotate_only(x: &Tensor, stages: &[Stage]) -> Tensor {
+    let Some((first, rest)) = stages.split_first() else {
+        return x.clone();
+    };
+    let mut cur = apply_stage(x, first);
+    for st in rest {
+        cur = apply_stage(&cur, st);
+    }
+    cur
+}
+
+/// Backward through one stage. Per pair `(a, b)` with angle `t`
+/// (`c = cos t`, `s = sin t`):
+///
+///   dL/dt   = sum_rows dy_a (-s x_a - c x_b) + dy_b (c x_a - s x_b)
+///   dL/dx_a =  c dy_a + s dy_b        (dx = dy R^T)
+///   dL/dx_b = -s dy_a + c dy_b
+///
+/// Locked by the finite-difference train-step check in
+/// `tests/scenario.rs`.
+fn stage_backward(x: &Tensor, dy: &Tensor, st: &Stage) -> (Vec<f32>, Tensor) {
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let mut dtheta = vec![0f32; st.pairs.len()];
+    let mut dx = vec![0f32; m * d];
+    for row in 0..m {
+        let xr = &x.data[row * d..(row + 1) * d];
+        let dyr = &dy.data[row * d..(row + 1) * d];
+        let dst = &mut dx[row * d..(row + 1) * d];
+        for (p, &(a, b)) in st.pairs.iter().enumerate() {
+            let (c, s) = (st.cos[p], st.sin[p]);
+            dtheta[p] += dyr[a] * (-s * xr[a] - c * xr[b]) + dyr[b] * (c * xr[a] - s * xr[b]);
+            dst[a] = c * dyr[a] + s * dyr[b];
+            dst[b] = -s * dyr[a] + c * dyr[b];
+        }
+    }
+    (dtheta, Tensor::from_vec(&[m, d], dx))
+}
+
+impl Adapter for Goft {
+    fn name(&self) -> &'static str {
+        "goft"
+    }
+
+    fn about(&self) -> &'static str {
+        "Givens-rotation quasi-orthogonal finetuning: k brick-wall plane-rotation stages"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "GOFT"
+    }
+
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        ensure!(
+            dims.d_model % 2 == 0 && dims.d_ff % 2 == 0,
+            "goft pairs coordinates: d_model {} and d_ff {} must be even",
+            dims.d_model,
+            dims.d_ff
+        );
+        Ok(())
+    }
+
+    /// Plane rotations have no block structure (`r`/`block`/
+    /// `block_share` do not apply); angles are zero at identity, so
+    /// COFT's deviation clamp and module dropout compose naturally.
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[
+            Knob::Coft,
+            Knob::Eps,
+            Knob::ModuleDropout,
+            Knob::Target,
+            Knob::Exclude,
+        ]
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        vec![ParamSpec {
+            name: param_name(linear),
+            shape: vec![stages(dims), din / 2],
+            init: Init::Zeros,
+        }]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let theta = params.get(&param_name(linear))?;
+        let (din, _) = params.weight(linear)?.shape2();
+        let _ = dims;
+        Ok(Some(Box::new(GoftPlan {
+            stages: build_stages(theta, linear, din)?,
+        })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        let (din, _) = w.shape2();
+        let (rotated, inputs, inline) = match ctx.plan.and_then(|p| p.get::<GoftPlan>(linear)) {
+            Some(plan) => {
+                let (rot, inputs) = rotate_forward(x, &plan.stages);
+                (rot, inputs, None)
+            }
+            None => {
+                let theta = ctx.params.get(&param_name(linear))?;
+                let stages = build_stages(theta, linear, din)?;
+                let (rot, inputs) = rotate_forward(x, &stages);
+                (rot, inputs, Some(stages))
+            }
+        };
+        let y = w.matmul(&rotated)?;
+        Ok((
+            y,
+            Some(Box::new(GoftAct {
+                inputs,
+                stages: inline,
+            })),
+        ))
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let (din, _) = w.shape2();
+        let half = din / 2;
+        let record: &GoftAct = act.extra()?;
+        let stages: &[Stage] = match ctx.plan.and_then(|p| p.get::<GoftPlan>(linear)) {
+            Some(plan) => plan.stages.as_slice(),
+            None => record
+                .stages
+                .as_deref()
+                .context("missing goft stage record")?,
+        };
+        let k = stages.len();
+        ensure!(
+            record.inputs.len() + 1 == k,
+            "goft record has {} stage inputs, expected {}",
+            record.inputs.len(),
+            k.saturating_sub(1)
+        );
+        let mut dz = w.matmul_t(dy)?;
+        let mut dtheta = vec![0f32; k * half];
+        for i in (0..k).rev() {
+            // stage 0's input is the record's saved x
+            let x_i = if i == 0 { &act.x } else { &record.inputs[i - 1] };
+            let (dt, dx) = stage_backward(x_i, &dz, &stages[i]);
+            dtheta[i * half..(i + 1) * half].copy_from_slice(&dt);
+            dz = dx;
+        }
+        accumulate(
+            grads,
+            &param_name(linear),
+            Tensor::from_vec(&[k, half], dtheta),
+        );
+        Ok(dz)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        _dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        let theta = params.get(&param_name(linear))?;
+        let (din, _) = w.shape2();
+        Ok(Box::new(GoftDecode {
+            w: w.cloned(),
+            stages: build_stages(theta, linear, din)?,
+        }))
+    }
+
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Fold the stage product: `rotate(x) = x M` with `M = rotate(I)`
+    /// (each stage is linear on rows), then `W' = M W`. Exactly
+    /// orthogonal — no series truncation.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let _ = dims;
+        let theta = trainables.get(&param_name(linear))?;
+        let din = w.shape[0];
+        let stages = build_stages(theta, linear, din)?;
+        let (rot, _) = rotate_forward(&Tensor::eye(din), &stages);
+        rot.matmul(w)
+    }
+
+    /// Each stage's output feeds the next, so GOFT keeps `k - 1` extra
+    /// activation copies per adapted linear alive for backward.
+    fn mem_transient(
+        &self,
+        spec: &crate::modelspec::ModelSpec,
+        dims: &ModelDims,
+        tokens: f64,
+        act_bytes: f64,
+        input_saves: f64,
+    ) -> f64 {
+        let k = stages(dims) as f64;
+        input_saves
+            + spec
+                .adapted_linears()
+                .map(|li| (k - 1.0) * tokens * li.din as f64 * act_bytes)
+                .sum::<f64>()
+    }
+}
+
+struct GoftDecode {
+    w: BaseWeight,
+    stages: Vec<Stage>,
+}
+
+impl DecodeApply for GoftDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(&rotate_only(x, &self.stages))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::orthogonality_error;
+    use crate::util::rng::Rng;
+
+    fn random_theta(k: usize, din: usize, std: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[k, din / 2], std, &mut rng)
+    }
+
+    fn dense_rotation(theta: &Tensor, din: usize) -> Tensor {
+        let st = build_stages(theta, "layers.0.attn.wq", din).unwrap();
+        let (r, _) = rotate_forward(&Tensor::eye(din), &st);
+        r
+    }
+
+    #[test]
+    fn stage_product_is_orthogonal() {
+        // Plane rotations are exactly orthogonal, even at large
+        // angles: only f32 rounding remains.
+        for &din in &[16usize, 64] {
+            for seed in 0..3u64 {
+                let theta = random_theta(4, din, 1.0, seed);
+                let err = orthogonality_error(&dense_rotation(&theta, din));
+                assert!(err < 1e-4, "din={din} seed={seed}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_at_zero_angles() {
+        let din = 64;
+        let theta = Tensor::zeros(&[3, din / 2]);
+        let st = build_stages(&theta, "layers.1.mlp.up", din).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, din], 1.0, &mut rng);
+        let (y, _) = rotate_forward(&x, &st);
+        assert!(y.max_abs_diff(&x) < 1e-7);
+        assert!(rotate_only(&x, &st).max_abs_diff(&y) < 1e-7);
+    }
+
+    #[test]
+    fn brick_wall_pairing_mixes_beyond_one_pair() {
+        // With >= 2 stages a single coordinate must spread past its
+        // adjacent partner — the offset stage's wrap-around at work.
+        let din = 8;
+        let theta = random_theta(4, din, 0.7, 11);
+        let st = build_stages(&theta, "layers.0.attn.wq", din).unwrap();
+        let mut probe = Tensor::zeros(&[1, din]);
+        probe.data[0] = 1.0;
+        let (y, _) = rotate_forward(&probe, &st);
+        let touched = y.data.iter().filter(|v| v.abs() > 1e-9).count();
+        assert!(touched > 2, "reach {touched} should exceed one pair");
+    }
+
+    #[test]
+    fn pairs_are_disjoint_and_cover() {
+        for s in 0..4 {
+            for &din in &[8usize, 64] {
+                let pairs = stage_pairs(s, din);
+                assert_eq!(pairs.len(), din / 2);
+                let mut seen = vec![false; din];
+                for (a, b) in pairs {
+                    assert!(!seen[a] && !seen[b], "stage {s} reuses a coordinate");
+                    seen[a] = true;
+                    seen[b] = true;
+                }
+                assert!(seen.iter().all(|&v| v), "stage {s} must cover all coords");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_shapes_are_errors() {
+        // odd width
+        assert!(build_stages(&Tensor::zeros(&[2, 3]), "x", 7).is_err());
+        // wrong angle count
+        assert!(build_stages(&Tensor::zeros(&[2, 3]), "x", 16).is_err());
+        // zero stages
+        assert!(build_stages(&Tensor::zeros(&[0, 8]), "x", 16).is_err());
+    }
+}

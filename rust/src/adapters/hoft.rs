@@ -22,6 +22,7 @@ use anyhow::{ensure, Context, Result};
 use super::{ActExtra, Adapter, DecodeApply};
 use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
 use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -237,6 +238,19 @@ impl Adapter for Hoft {
 
     fn paper_label(&self, _quantized: bool) -> &'static str {
         "HOFT"
+    }
+
+    /// Reflections have no block structure (`r`/`block`/`block_share`
+    /// do not apply); the offsets are zero at identity, so COFT's
+    /// deviation clamp and module dropout compose naturally.
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[
+            Knob::Coft,
+            Knob::Eps,
+            Knob::ModuleDropout,
+            Knob::Target,
+            Knob::Exclude,
+        ]
     }
 
     fn linear_trainables(

@@ -10,6 +10,7 @@ use super::{ActExtra, Adapter, DecodeApply};
 use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
 use crate::modelspec::ModelSpec;
 use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
 use crate::tensor::Tensor;
 
 pub struct Lora {
@@ -57,6 +58,13 @@ impl Adapter for Lora {
 
     fn quantized_base(&self) -> bool {
         self.quantized
+    }
+
+    /// LoRA is additive, not orthogonal: the rotation knobs (COFT,
+    /// `r`/`block`/`block_share`) do not apply — only dropout and
+    /// module targeting carry over (covers `qlora` too).
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[Knob::ModuleDropout, Knob::Target, Knob::Exclude]
     }
 
     fn linear_trainables(

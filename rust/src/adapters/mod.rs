@@ -25,11 +25,13 @@
 
 pub mod boft;
 pub mod full;
+pub mod goft;
 pub mod hoft;
 pub mod lora;
 pub mod none;
 pub mod oft_merged;
 pub mod oft_v2;
+pub mod poft;
 pub mod qlora;
 pub mod qoft;
 
@@ -40,6 +42,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::manifest::{ModelDims, ParamSpec};
 use crate::modelspec::ModelSpec;
 use crate::runtime::layers::{BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::{Knob, ScenarioCfg};
 use crate::tensor::Tensor;
 
 /// One per-linear entry of the per-step shared [`AdapterPlan`]
@@ -92,6 +95,21 @@ pub trait Adapter: Sync {
     fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
         let _ = dims;
         Ok(())
+    }
+
+    /// The scenario knobs this method honors ([`crate::scenario::Knob`]).
+    /// Drives the `repro methods` knob column and the default
+    /// [`Adapter::configure`] validation; the default is none.
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[]
+    }
+
+    /// Accept or reject a [`ScenarioCfg`] at manifest-synthesis time.
+    /// The default rejects any knob absent from
+    /// [`Adapter::supported_knobs`] with a typed error naming the
+    /// valid options; methods override to add cross-knob checks.
+    fn configure(&self, sc: &ScenarioCfg) -> Result<()> {
+        sc.validate_for(self.name(), self.supported_knobs())
     }
 
     /// Trainable parameter specs this method adds for one adapted
@@ -199,7 +217,7 @@ pub trait Adapter: Sync {
 
 /// Every registered method, in manifest/tag order. Adding a method is
 /// one module plus one line here.
-pub static REGISTRY: [&dyn Adapter; 9] = [
+pub static REGISTRY: [&dyn Adapter; 11] = [
     &full::FULL,
     &none::NONE,
     &lora::LORA,
@@ -209,6 +227,8 @@ pub static REGISTRY: [&dyn Adapter; 9] = [
     &qoft::QOFT,
     &boft::BOFT,
     &hoft::HOFT,
+    &goft::GOFT,
+    &poft::POFT,
 ];
 
 /// All registered adapters.
@@ -278,6 +298,7 @@ mod tests {
             assert_eq!(get(n).unwrap().name(), *n);
         }
         assert!(names.contains(&"boft") && names.contains(&"hoft"));
+        assert!(names.contains(&"goft") && names.contains(&"poft"));
     }
 
     #[test]

@@ -6,13 +6,16 @@
 
 use anyhow::Result;
 
-use super::oft_v2::{ensure_blocks_divide, packed_name, packed_spec};
+use super::oft_v2::{
+    cnp_blocks_for, eff_block, ensure_blocks_divide, packed_grad, packed_name, packed_spec,
+    CNP_KNOBS,
+};
 use super::{ActExtra, Adapter, DecodeApply};
 use crate::coordinator::manifest::{ModelDims, ParamSpec};
 use crate::peft;
-use crate::runtime::layers::linear::{build_cnp_blocks, cnp_backward_all};
 use crate::runtime::layers::{accumulate, Ctx, Gradients, LinearAct, Params, WeightRef};
 use crate::modelspec::ModelSpec;
+use crate::scenario::Knob;
 use crate::tensor::Tensor;
 
 pub struct WeightCentricOft;
@@ -33,7 +36,7 @@ struct MergedAct {
 
 fn merge(params: &Params, dims: &ModelDims, linear: &str, w: &Tensor) -> Result<Tensor> {
     let packed = params.get(&packed_name(linear))?;
-    let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+    let blocks = cnp_blocks_for(packed, w.shape[0], dims)?;
     let rd = peft::blockdiag_dense(&blocks, w.shape[0]);
     rd.matmul(w)
 }
@@ -53,6 +56,10 @@ impl Adapter for WeightCentricOft {
 
     fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
         ensure_blocks_divide("oft_merged", dims)
+    }
+
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &CNP_KNOBS
     }
 
     fn linear_trainables(
@@ -103,15 +110,15 @@ impl Adapter for WeightCentricOft {
         dy: &Tensor,
         grads: &mut Gradients,
     ) -> Result<Tensor> {
-        let blk = ctx.dims.block_b;
         let w = w.dense()?;
+        let din = w.shape[0];
+        let blk = eff_block(din, ctx.dims);
         let packed = ctx.params.get(&packed_name(linear))?;
         let rw = match ctx.plan.and_then(|p| p.get::<MergedPlan>(linear)) {
             Some(plan) => &plan.rw,
             None => &act.extra::<MergedAct>()?.rw,
         };
         let dm = act.x.transpose2().matmul(dy)?; // (din, dout)
-        let din = w.shape[0];
         let nb = din / blk;
         let dout = w.shape[1];
         let mut dr = Vec::with_capacity(nb);
@@ -126,7 +133,7 @@ impl Adapter for WeightCentricOft {
             );
             dr.push(dm_b.matmul(&w_b.transpose2())?);
         }
-        let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+        let dp = packed_grad(packed, din, ctx.dims, dr)?;
         accumulate(grads, &packed_name(linear), dp);
         dy.matmul(&rw.transpose2())
     }

@@ -13,6 +13,7 @@ use crate::runtime::layers::linear::{
     cnp_backward_all,
 };
 use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
 use crate::tensor::Tensor;
 
 pub struct InputCentricOft {
@@ -42,18 +43,90 @@ pub(crate) fn packed_name(linear: &str) -> String {
     format!("{linear}.oft_q")
 }
 
+/// Effective rotation-block size for a linear of input width `din`:
+/// the scenario's `r` knob fixes the *number* of blocks per linear
+/// (PEFT's `OFTConfig.r`, so `b = din / r` varies with the linear),
+/// otherwise the preset / `block`-knob block size applies uniformly.
+pub(crate) fn eff_block(din: usize, dims: &ModelDims) -> usize {
+    if dims.scenario.oft_r > 0 {
+        din / dims.scenario.oft_r
+    } else {
+        dims.block_b
+    }
+}
+
 /// The one trainable tensor of an OFT-family linear: packed
-/// skew-symmetric rows, one per b-wide input block (§3.3 storage).
+/// skew-symmetric rows, one per b-wide input block (§3.3 storage) —
+/// or a single shared row under the `block_share` scenario knob.
 pub(crate) fn packed_spec(linear: &str, din: usize, dims: &ModelDims) -> ParamSpec {
-    let b = dims.block_b;
+    let b = eff_block(din, dims);
+    let rows = if dims.scenario.block_share { 1 } else { din / b };
     ParamSpec {
         name: packed_name(linear),
-        shape: vec![din / b, b * (b - 1) / 2],
+        shape: vec![rows, b * (b - 1) / 2],
         init: Init::Zeros,
     }
 }
 
+/// Resolve a linear's packed parameter into its CNP rotation blocks,
+/// honoring the scenario's `r`/`block_share` knobs: under block_share
+/// the single stored block is reused for every b-wide input span.
+pub(crate) fn cnp_blocks_for(packed: &Tensor, din: usize, dims: &ModelDims) -> Result<Vec<Tensor>> {
+    let b = eff_block(din, dims);
+    let blocks = build_cnp_blocks(packed, b, dims.neumann_k)?;
+    let nb = din / b;
+    if dims.scenario.block_share && nb > 1 {
+        ensure!(
+            blocks.len() == 1,
+            "block_share expects one shared block row, got {}",
+            blocks.len()
+        );
+        let shared = blocks.into_iter().next().unwrap();
+        return Ok(vec![shared; nb]);
+    }
+    Ok(blocks)
+}
+
+/// Turn per-block rotation cotangents into the packed-parameter
+/// gradient: under `block_share` every block reads the same stored
+/// row, so the per-block `dR`s sum before the CNP backward.
+pub(crate) fn packed_grad(
+    packed: &Tensor,
+    din: usize,
+    dims: &ModelDims,
+    dr: Vec<Tensor>,
+) -> Result<Tensor> {
+    let b = eff_block(din, dims);
+    if dims.scenario.block_share && dr.len() > 1 {
+        let mut sum = dr[0].clone();
+        for t in &dr[1..] {
+            for (a, v) in sum.data.iter_mut().zip(&t.data) {
+                *a += v;
+            }
+        }
+        return cnp_backward_all(packed, b, dims.neumann_k, &[sum]);
+    }
+    cnp_backward_all(packed, b, dims.neumann_k, &dr)
+}
+
 pub(crate) fn ensure_blocks_divide(name: &str, dims: &ModelDims) -> Result<()> {
+    if dims.scenario.oft_r > 0 {
+        let r = dims.scenario.oft_r;
+        ensure!(
+            dims.d_model % r == 0 && dims.d_ff % r == 0,
+            "{name}: scenario 'r' = {r} rotation blocks must divide d_model {} and d_ff {}",
+            dims.d_model,
+            dims.d_ff
+        );
+        ensure!(
+            dims.d_model / r >= 2 && dims.d_ff / r >= 2,
+            "{name}: scenario 'r' = {r} leaves rotation blocks narrower than 2 \
+             (d_model {}, d_ff {})",
+            dims.d_model,
+            dims.d_ff
+        );
+        return Ok(());
+    }
     ensure!(
         dims.d_model % dims.block_b == 0 && dims.d_ff % dims.block_b == 0,
         "{name}: block size {} must divide d_model {} and d_ff {}",
@@ -63,6 +136,19 @@ pub(crate) fn ensure_blocks_divide(name: &str, dims: &ModelDims) -> Result<()> {
     );
     Ok(())
 }
+
+/// The full scenario surface of the Cayley–Neumann block-rotation
+/// family (shared by `oft_v2`, `qoft`, and `oft_merged`).
+pub(crate) const CNP_KNOBS: [Knob; 8] = [
+    Knob::Coft,
+    Knob::Eps,
+    Knob::ModuleDropout,
+    Knob::BlockShare,
+    Knob::R,
+    Knob::BlockSize,
+    Knob::Target,
+    Knob::Exclude,
+];
 
 impl Adapter for InputCentricOft {
     fn name(&self) -> &'static str {
@@ -93,6 +179,10 @@ impl Adapter for InputCentricOft {
         ensure_blocks_divide(self.name, dims)
     }
 
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &CNP_KNOBS
+    }
+
     fn linear_trainables(
         &self,
         linear: &str,
@@ -110,7 +200,8 @@ impl Adapter for InputCentricOft {
         dims: &ModelDims,
     ) -> Result<Option<super::PlanEntry>> {
         let packed = params.get(&packed_name(linear))?;
-        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        let (din, _) = params.weight(linear)?.shape2();
+        let blocks = cnp_blocks_for(packed, din, dims)?;
         Ok(Some(Box::new(CnpPlan { blocks })))
     }
 
@@ -125,7 +216,8 @@ impl Adapter for InputCentricOft {
             Some(plan) => Ok((w.matmul(&block_rotate_fast(x, &plan.blocks)?)?, None)),
             None => {
                 let packed = ctx.params.get(&packed_name(linear))?;
-                let blocks = build_cnp_blocks(packed, ctx.dims.block_b, ctx.dims.neumann_k)?;
+                let (din, _) = w.shape2();
+                let blocks = cnp_blocks_for(packed, din, ctx.dims)?;
                 let y = w.matmul(&block_rotate_fast(x, &blocks)?)?;
                 Ok((y, Some(Box::new(OftAct { blocks }))))
             }
@@ -141,7 +233,8 @@ impl Adapter for InputCentricOft {
         dy: &Tensor,
         grads: &mut Gradients,
     ) -> Result<Tensor> {
-        let blk = ctx.dims.block_b;
+        let (din, _) = w.shape2();
+        let blk = eff_block(din, ctx.dims);
         let packed = ctx.params.get(&packed_name(linear))?;
         let blocks = match ctx.plan.and_then(|p| p.get::<CnpPlan>(linear)) {
             Some(plan) => &plan.blocks,
@@ -149,7 +242,7 @@ impl Adapter for InputCentricOft {
         };
         let dz = w.matmul_t(dy)?;
         let dr = block_rotate_grad_r(&act.x, &dz, blk);
-        let dp = cnp_backward_all(packed, blk, ctx.dims.neumann_k, &dr)?;
+        let dp = packed_grad(packed, din, ctx.dims, dr)?;
         accumulate(grads, &packed_name(linear), dp);
         block_rotate_transposed(&dz, blocks)
     }
@@ -162,7 +255,8 @@ impl Adapter for InputCentricOft {
         w: WeightRef,
     ) -> Result<Box<dyn DecodeApply>> {
         let packed = params.get(&packed_name(linear))?;
-        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        let (din, _) = w.shape2();
+        let blocks = cnp_blocks_for(packed, din, dims)?;
         Ok(Box::new(RotateDecode { w: w.cloned(), blocks }))
     }
 
@@ -182,7 +276,7 @@ impl Adapter for InputCentricOft {
         dims: &ModelDims,
     ) -> Result<Tensor> {
         let packed = trainables.get(&packed_name(linear))?;
-        let blocks = build_cnp_blocks(packed, dims.block_b, dims.neumann_k)?;
+        let blocks = cnp_blocks_for(packed, w.shape[0], dims)?;
         crate::peft::blockdiag_dense(&blocks, w.shape[0]).matmul(w)
     }
 }

@@ -1,0 +1,374 @@
+//! POFT: principal-subspace orthogonal adaptation (PSOA, per
+//! PAPERS.md "Efficient Orthogonal Fine-Tuning with Principal Subspace
+//! Adaptation") as a runtime method. Instead of rotating all `din`
+//! input coordinates, POFT rotates only a fixed `k`-dimensional
+//! subspace:
+//!
+//! ```text
+//!   A = I + U (C - I) U^T
+//! ```
+//!
+//! with `U` a frozen `din x k` orthonormal basis (deterministically
+//! derived from the linear's name — every worker, checkpoint resume,
+//! and decode session reconstructs the same subspace) and `C` a `k x k`
+//! Cayley–Neumann rotation from `k(k-1)/2` trainable packed skew
+//! parameters. On the subspace `A` acts as `C`; on its orthogonal
+//! complement `A` is the identity, so `A` is orthogonal exactly as far
+//! as `C` is (the documented CNP truncation tolerance) at a parameter
+//! cost independent of `din`.
+//!
+//! **Identity at init.** `Q = 0` gives `C = I`, hence `A = I`: the
+//! adapted model starts exactly at the pretrained base.
+
+use anyhow::{ensure, Result};
+
+use super::{ActExtra, Adapter, DecodeApply};
+use crate::coordinator::manifest::{Init, ModelDims, ParamSpec};
+use crate::runtime::layers::linear::{build_cnp_blocks, cnp_backward_all};
+use crate::runtime::layers::{accumulate, BaseWeight, Ctx, Gradients, LinearAct, Params, WeightRef};
+use crate::scenario::Knob;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct Poft;
+
+/// Registry object.
+pub static POFT: Poft = Poft;
+
+/// Subspace rank per adapted linear: the bundle's LoRA rank, at least
+/// 2 (a 1-dimensional rotation has no skew parameters).
+pub fn rank(dims: &ModelDims) -> usize {
+    dims.lora_r.max(2)
+}
+
+fn param_name(linear: &str) -> String {
+    format!("{linear}.poft_q")
+}
+
+/// FNV-1a over the linear's name: gives every linear an independent,
+/// order-free subspace stream (same scheme as parameter init).
+fn name_seed(linear: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in linear.as_bytes() {
+        h ^= *byte as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// The frozen orthonormal basis `U (din, k)` of one linear:
+/// name-seeded Gaussian columns, modified Gram–Schmidt. Deterministic
+/// in (linear, din, k).
+fn subspace(linear: &str, din: usize, k: usize) -> Tensor {
+    let mut rng = Rng::new(0x905F_7A57 ^ name_seed(linear));
+    let mut cols: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(din, 1.0)).collect();
+    for i in 0..k {
+        for j in 0..i {
+            let prev = cols[j].clone();
+            let dot: f32 = cols[i].iter().zip(&prev).map(|(a, b)| a * b).sum();
+            for (xi, pj) in cols[i].iter_mut().zip(&prev) {
+                *xi -= dot * pj;
+            }
+        }
+        let norm = cols[i].iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        for x in &mut cols[i] {
+            *x /= norm;
+        }
+    }
+    let mut u = vec![0f32; din * k];
+    for (i, col) in cols.iter().enumerate() {
+        for (t, v) in col.iter().enumerate() {
+            u[t * k + i] = *v;
+        }
+    }
+    Tensor::from_vec(&[din, k], u)
+}
+
+/// One linear's resolved adapter: the basis, its transpose, and
+/// `D = C - I`.
+struct Resolved {
+    u: Tensor,
+    ut: Tensor,
+    d: Tensor,
+}
+
+/// Per-step plan entry (also rebuilt inline when the step has no
+/// shared plan — deterministic, so the rebuild is bitwise identical).
+struct PoftPlan {
+    r: Resolved,
+}
+
+fn resolve(packed: &Tensor, linear: &str, din: usize, dims: &ModelDims) -> Result<Resolved> {
+    let k = rank(dims);
+    ensure!(
+        k <= din,
+        "POFT rank {k} exceeds the input width {din} of '{linear}'"
+    );
+    ensure!(
+        packed.shape.len() == 2 && packed.shape[0] == 1 && packed.shape[1] == k * (k - 1) / 2,
+        "POFT parameter of '{linear}' must be (1, {}), got {:?}",
+        k * (k - 1) / 2,
+        packed.shape
+    );
+    let blocks = build_cnp_blocks(packed, k, dims.neumann_k)?;
+    let c = blocks.into_iter().next().expect("one packed row, one block");
+    let d = c.add(&Tensor::eye(k).scale(-1.0))?;
+    let u = subspace(linear, din, k);
+    let ut = u.transpose2();
+    Ok(Resolved { u, ut, d })
+}
+
+/// `rot(x) = x + ((x U) D) U^T` — rows pass through except for their
+/// subspace component, which `C` rotates.
+fn rotate(x: &Tensor, r: &Resolved) -> Result<Tensor> {
+    x.add(&x.matmul(&r.u)?.matmul(&r.d)?.matmul(&r.ut)?)
+}
+
+impl Adapter for Poft {
+    fn name(&self) -> &'static str {
+        "poft"
+    }
+
+    fn about(&self) -> &'static str {
+        "principal-subspace orthogonal adaptation: k-dim CNP rotation in a frozen basis"
+    }
+
+    fn paper_label(&self, _quantized: bool) -> &'static str {
+        "POFT"
+    }
+
+    fn validate_dims(&self, dims: &ModelDims) -> Result<()> {
+        let k = rank(dims);
+        ensure!(
+            k <= dims.d_model && k <= dims.d_ff,
+            "poft: subspace rank {k} must fit every linear (d_model {}, d_ff {})",
+            dims.d_model,
+            dims.d_ff
+        );
+        Ok(())
+    }
+
+    /// The subspace rank is fixed by the bundle's LoRA rank
+    /// (`r`/`block`/`block_share` are block-rotation knobs); the packed
+    /// skew is zero at identity, so COFT and dropout compose naturally.
+    fn supported_knobs(&self) -> &'static [Knob] {
+        &[
+            Knob::Coft,
+            Knob::Eps,
+            Knob::ModuleDropout,
+            Knob::Target,
+            Knob::Exclude,
+        ]
+    }
+
+    fn linear_trainables(
+        &self,
+        linear: &str,
+        _din: usize,
+        _dout: usize,
+        dims: &ModelDims,
+    ) -> Vec<ParamSpec> {
+        let k = rank(dims);
+        vec![ParamSpec {
+            name: param_name(linear),
+            shape: vec![1, k * (k - 1) / 2],
+            init: Init::Zeros,
+        }]
+    }
+
+    fn plan_linear(
+        &self,
+        linear: &str,
+        params: &Params,
+        dims: &ModelDims,
+    ) -> Result<Option<super::PlanEntry>> {
+        let packed = params.get(&param_name(linear))?;
+        let (din, _) = params.weight(linear)?.shape2();
+        Ok(Some(Box::new(PoftPlan {
+            r: resolve(packed, linear, din, dims)?,
+        })))
+    }
+
+    fn linear_forward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        x: &Tensor,
+    ) -> Result<(Tensor, Option<ActExtra>)> {
+        let rotated = match ctx.plan.and_then(|p| p.get::<PoftPlan>(linear)) {
+            Some(plan) => rotate(x, &plan.r)?,
+            None => {
+                let packed = ctx.params.get(&param_name(linear))?;
+                let (din, _) = w.shape2();
+                rotate(x, &resolve(packed, linear, din, ctx.dims)?)?
+            }
+        };
+        Ok((w.matmul(&rotated)?, None))
+    }
+
+    fn linear_backward(
+        &self,
+        ctx: &Ctx,
+        linear: &str,
+        w: WeightRef,
+        act: &LinearAct,
+        dy: &Tensor,
+        grads: &mut Gradients,
+    ) -> Result<Tensor> {
+        let packed = ctx.params.get(&param_name(linear))?;
+        let (din, _) = w.shape2();
+        let k = rank(ctx.dims);
+        // The resolve is deterministic, so rebuilding when no shared
+        // plan exists reproduces the forward's values bit for bit.
+        let rebuilt;
+        let r: &Resolved = match ctx.plan.and_then(|p| p.get::<PoftPlan>(linear)) {
+            Some(plan) => &plan.r,
+            None => {
+                rebuilt = resolve(packed, linear, din, ctx.dims)?;
+                &rebuilt
+            }
+        };
+        let dz = w.matmul_t(dy)?;
+        // dC = (x U)^T (dz U); dQ through the shared CNP backward.
+        let p = act.x.matmul(&r.u)?;
+        let dzu = dz.matmul(&r.u)?;
+        let dc = p.transpose2().matmul(&dzu)?;
+        let dq = cnp_backward_all(packed, k, ctx.dims.neumann_k, &[dc])?;
+        accumulate(grads, &param_name(linear), dq);
+        // dx = dz + (dz U) D^T U^T
+        dz.add(&dzu.matmul(&r.d.transpose2())?.matmul(&r.ut)?)
+    }
+
+    fn resolve_decode(
+        &self,
+        params: &Params,
+        dims: &ModelDims,
+        linear: &str,
+        w: WeightRef,
+    ) -> Result<Box<dyn DecodeApply>> {
+        let packed = params.get(&param_name(linear))?;
+        let (din, _) = w.shape2();
+        Ok(Box::new(PoftDecode {
+            w: w.cloned(),
+            r: resolve(packed, linear, din, dims)?,
+        }))
+    }
+
+    fn can_merge(&self) -> bool {
+        true
+    }
+
+    /// Fold the subspace rotation: `rot(x) = x (I + U D U^T)`, so
+    /// `W' = (I + U D U^T) W`.
+    fn merge_linear(
+        &self,
+        linear: &str,
+        w: &Tensor,
+        trainables: &Params,
+        dims: &ModelDims,
+    ) -> Result<Tensor> {
+        let packed = trainables.get(&param_name(linear))?;
+        let din = w.shape[0];
+        let r = resolve(packed, linear, din, dims)?;
+        let m = Tensor::eye(din).add(&r.u.matmul(&r.d)?.matmul(&r.ut)?)?;
+        m.matmul(w)
+    }
+}
+
+struct PoftDecode {
+    w: BaseWeight,
+    r: Resolved,
+}
+
+impl DecodeApply for PoftDecode {
+    fn apply(&self, x: &Tensor) -> Result<Tensor> {
+        self.w.matmul(&rotate(x, &self.r)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::orthogonality_error;
+    use crate::util::rng::Rng;
+
+    fn dims(k: usize, neumann: usize) -> ModelDims {
+        let mut d = ModelDims::analysis(k, 16);
+        d.neumann_k = neumann;
+        d
+    }
+
+    fn random_packed(k: usize, std: f32, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[1, k * (k - 1) / 2], std, &mut rng)
+    }
+
+    fn dense_rotation(linear: &str, packed: &Tensor, din: usize, d: &ModelDims) -> Tensor {
+        let r = resolve(packed, linear, din, d).unwrap();
+        rotate(&Tensor::eye(din), &r).unwrap()
+    }
+
+    #[test]
+    fn subspace_is_orthonormal_and_deterministic() {
+        let u = subspace("layers.0.attn.wq", 64, 4);
+        assert_eq!(u.shape, vec![64, 4]);
+        let gram = u.transpose2().matmul(&u).unwrap();
+        assert!(gram.max_abs_diff(&Tensor::eye(4)) < 1e-5);
+        assert!(u.max_abs_diff(&subspace("layers.0.attn.wq", 64, 4)) == 0.0);
+        assert!(u.max_abs_diff(&subspace("layers.0.attn.wk", 64, 4)) > 1e-3);
+    }
+
+    #[test]
+    fn adapter_is_orthogonal_to_cnp_tolerance() {
+        // A = I + U(C-I)U^T is orthogonal exactly as far as C is: at
+        // the documented operating point (small Q, k >= 6 Neumann
+        // terms) ||A^T A - I||_F stays below 5e-3.
+        let d = dims(4, 8);
+        for seed in 0..3u64 {
+            let packed = random_packed(4, 0.05, seed);
+            let a = dense_rotation("layers.0.attn.wq", &packed, 64, &d);
+            let err = orthogonality_error(&a);
+            assert!(err < 5e-3, "seed={seed}: err {err}");
+        }
+    }
+
+    #[test]
+    fn identity_at_zero_parameters() {
+        let d = dims(4, 5);
+        let packed = Tensor::zeros(&[1, 6]);
+        let r = resolve(&packed, "layers.1.mlp.up", 64, &d).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, 64], 1.0, &mut rng);
+        let y = rotate(&x, &r).unwrap();
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn complement_passes_through_untouched() {
+        // A row orthogonal to the subspace must be a fixed point of the
+        // rotation even at large parameters.
+        let d = dims(2, 8);
+        let packed = random_packed(2, 0.5, 7);
+        let r = resolve(&packed, "layers.0.attn.wo", 16, &d).unwrap();
+        // build a vector orthogonal to both basis columns
+        let mut rng = Rng::new(5);
+        let v = Tensor::randn(&[1, 16], 1.0, &mut rng);
+        let coeff = v.matmul(&r.u).unwrap(); // (1, k)
+        let proj = coeff.matmul(&r.ut).unwrap();
+        let perp = v.add(&proj.scale(-1.0)).unwrap();
+        let y = rotate(&perp, &r).unwrap();
+        assert!(y.max_abs_diff(&perp) < 1e-5);
+    }
+
+    #[test]
+    fn bad_shapes_are_errors() {
+        let d = dims(4, 5);
+        // wrong packed width
+        assert!(resolve(&Tensor::zeros(&[1, 5]), "x", 64, &d).is_err());
+        // multiple rows
+        assert!(resolve(&Tensor::zeros(&[2, 6]), "x", 64, &d).is_err());
+        // rank exceeding the input width
+        assert!(resolve(&Tensor::zeros(&[1, 6]), "x", 3, &d).is_err());
+    }
+}

@@ -136,7 +136,16 @@ pub fn merge_checkpoint(
         } else {
             w0.clone()
         };
-        let (deployed, rep) = merge_requant(adapter, &linear, &w, &trainables, &man.model, quant)?;
+        // Scenario-targeting-deselected linears carry no adapter state:
+        // merge them through the identity ("none") adapter so the
+        // artifact agrees with what the bundle trained and served.
+        let lin_adapter = if man.skipped.iter().any(|s| s == &linear) {
+            adapters::get("none")?
+        } else {
+            adapter
+        };
+        let (deployed, rep) =
+            merge_requant(lin_adapter, &linear, &w, &trainables, &man.model, quant)?;
         ensure!(
             deployed.shape == vec![din, dout],
             "merged '{linear}' has shape {:?}, expected ({din}, {dout})",

@@ -188,10 +188,46 @@ pub fn enabled_features() -> Vec<&'static str> {
     fs
 }
 
+/// The scenario knobs active for this bench process:
+/// `OFT_BENCH_SCENARIO` holds a tag-suffix string (e.g.
+/// `coft+eps=1e-3+target=wq|wv`); unset means every knob at its
+/// default. Stamped into every result file's `config` block so
+/// scenario-sensitive runs stay attributable across commits.
+pub fn bench_scenario() -> crate::scenario::ScenarioCfg {
+    match std::env::var("OFT_BENCH_SCENARIO") {
+        Ok(s) if !s.is_empty() => {
+            crate::scenario::ScenarioCfg::parse_suffix(&s).unwrap_or_default()
+        }
+        _ => crate::scenario::ScenarioCfg::default(),
+    }
+}
+
+/// The `scenario` object inside every `config` block: one key per
+/// scenario knob, always present (CI greps for them).
+pub fn scenario_json(sc: &crate::scenario::ScenarioCfg) -> Json {
+    Json::obj(vec![
+        ("suffix", Json::str(sc.suffix())),
+        ("coft", Json::Bool(sc.coft)),
+        ("eps", Json::num(sc.eps as f64)),
+        ("module_dropout", Json::num(sc.module_dropout as f64)),
+        ("block_share", Json::Bool(sc.block_share)),
+        ("r", Json::num(sc.oft_r as f64)),
+        ("block", Json::num(sc.block as f64)),
+        (
+            "target",
+            sc.target.clone().map(Json::Str).unwrap_or(Json::Null),
+        ),
+        (
+            "exclude",
+            sc.exclude.clone().map(Json::Str).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
 /// The `config` block stamped into every bench result file: enabled
-/// feature flags plus whether the SIMD kernels are actually live (the
+/// feature flags, whether the SIMD kernels are actually live (the
 /// feature can be compiled in but forced off via
-/// `tensor::force_scalar_kernels`).
+/// `tensor::force_scalar_kernels`), and the active scenario knobs.
 fn config_json() -> Json {
     Json::obj(vec![
         (
@@ -202,6 +238,7 @@ fn config_json() -> Json {
             "simd_kernels_active",
             Json::Bool(crate::tensor::simd_kernels_active()),
         ),
+        ("scenario", scenario_json(&bench_scenario())),
     ])
 }
 
@@ -388,6 +425,14 @@ mod tests {
             cfg.get("simd_kernels_active"),
             Some(&Json::Bool(crate::tensor::simd_kernels_active()))
         );
+        // ... and the scenario knobs, one key per knob (CI greps these).
+        let sc = cfg.get("scenario").unwrap();
+        for key in [
+            "suffix", "coft", "eps", "module_dropout", "block_share", "r", "block", "target",
+            "exclude",
+        ] {
+            assert!(sc.opt(key).is_some(), "config.scenario must stamp '{key}'");
+        }
         let _ = std::fs::remove_dir_all(dir);
     }
 

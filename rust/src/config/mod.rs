@@ -17,9 +17,19 @@
 //! [data]
 //! task = "wiki"               # wiki | math | summarize
 //! documents = 2000
+//!
+//! [scenario]
+//! coft = true                 # COFT constraint projection
+//! eps = 1e-3
+//! dropout = 0.1               # module dropout probability
+//! target = "wq|wv"            # only matching linears are adapted
 //! ```
 //!
-//! plus CLI overrides `--set optim.lr=1e-4`.
+//! plus CLI overrides `--set optim.lr=1e-4`. The `[scenario]` keys are
+//! the same knob spellings the tag-suffix grammar uses
+//! ([`crate::scenario::ScenarioCfg`]); they overlay any suffix already
+//! on the tag, and the launcher re-canonicalizes the tag so every
+//! downstream consumer sees one carrier.
 
 pub mod toml;
 
@@ -147,6 +157,10 @@ pub struct RunCfg {
     pub optim: OptimCfg,
     pub data: DataCfg,
     pub train: TrainCfg,
+    /// Scenario-knob overrides, overlaid onto the tag's suffix (the
+    /// canonical carrier) by the launcher via
+    /// [`crate::scenario::apply_to_tag`].
+    pub scenario: crate::scenario::ScenarioCfg,
 }
 
 impl Default for RunCfg {
@@ -162,6 +176,7 @@ impl Default for RunCfg {
             optim: OptimCfg::default(),
             data: DataCfg::default(),
             train: TrainCfg::default(),
+            scenario: crate::scenario::ScenarioCfg::default(),
         }
     }
 }
@@ -227,6 +242,27 @@ impl RunCfg {
                 }
                 self.train.ranks = n;
             }
+            _ if path.starts_with("scenario.") => {
+                // `[scenario]` keys share the tag-suffix knob grammar, so
+                // one parser owns the spellings and the error messages.
+                let key = &path["scenario.".len()..];
+                let part = match (key, value) {
+                    ("coft", "true") | ("block_share", "true") => key.to_string(),
+                    ("coft", "false") => {
+                        self.scenario.coft = false;
+                        return Ok(());
+                    }
+                    ("block_share", "false") => {
+                        self.scenario.block_share = false;
+                        return Ok(());
+                    }
+                    _ => format!("{key}={value}"),
+                };
+                let one = crate::scenario::ScenarioCfg::parse_suffix(&part)
+                    .with_context(|| format!("config key '{path}'"))?;
+                self.scenario.overlay(&one);
+                self.scenario.validate()?;
+            }
             _ => bail!("unknown config key '{path}'"),
         }
         Ok(())
@@ -276,6 +312,32 @@ mod tests {
         assert!(e.contains("1..=64"), "{e}");
         let e = cfg.set("train.ranks", "65").unwrap_err().to_string();
         assert!(e.contains("1..=64"), "{e}");
+    }
+
+    #[test]
+    fn scenario_section_keys() {
+        let doc = toml::parse(
+            "[scenario]\ncoft = true\neps = 1e-3\ndropout = 0.1\ntarget = \"wq|wv\"\n",
+        )
+        .unwrap();
+        let cfg = RunCfg::from_toml(&doc).unwrap();
+        assert!(cfg.scenario.coft);
+        assert_eq!(cfg.scenario.eps, 1e-3);
+        assert_eq!(cfg.scenario.module_dropout, 0.1);
+        assert_eq!(cfg.scenario.target.as_deref(), Some("wq|wv"));
+        // flags can be reset, and knobs share the suffix-grammar errors
+        let mut cfg = cfg;
+        cfg.set("scenario.coft", "false").unwrap();
+        assert!(!cfg.scenario.coft);
+        let e = format!("{:#}", cfg.set("scenario.warp", "1").unwrap_err());
+        assert!(e.contains("valid knobs"), "{e}");
+        assert!(e.contains("block_share"), "{e}");
+        let e = format!("{:#}", cfg.set("scenario.dropout", "1.5").unwrap_err());
+        assert!(e.contains("[0, 1)"), "{e}");
+        assert!(cfg.set("scenario.target", "(wq").is_err());
+        // r and block stay mutually exclusive across separate sets
+        cfg.set("scenario.r", "4").unwrap();
+        assert!(cfg.set("scenario.block", "8").is_err());
     }
 
     #[test]

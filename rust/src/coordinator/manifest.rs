@@ -22,6 +22,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::json::{self, Json};
 use crate::runtime::Dtype;
+use crate::scenario::{self, ScenarioCfg, ScenarioDims};
 
 /// Parameter initialization spec (`init` field).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -84,6 +85,10 @@ pub struct ModelDims {
     pub neumann_k: usize,
     pub lora_r: usize,
     pub lora_alpha: f64,
+    /// The numeric scenario knobs (COFT, module dropout, block_share,
+    /// `r`), `Copy` so every adapter hook sees them without new
+    /// arguments. Targeting regexes live on the [`Manifest`].
+    pub scenario: ScenarioDims,
 }
 
 impl ModelDims {
@@ -104,6 +109,7 @@ impl ModelDims {
             neumann_k: 5,
             lora_r,
             lora_alpha: 2.0 * lora_r as f64,
+            scenario: ScenarioDims::default(),
         }
     }
 }
@@ -139,6 +145,13 @@ pub struct Manifest {
     pub trainable: Vec<ParamSpec>,
     pub frozen: Vec<ParamSpec>,
     pub quantized: Vec<QuantSpec>,
+    /// The full typed scenario (the tag suffix, parsed and validated
+    /// against the method's supported knobs).
+    pub scenario: ScenarioCfg,
+    /// Adapted linears the targeting regexes deselected, sorted. These
+    /// carry no trainables and run the frozen base path everywhere
+    /// (train, decode, serve, merge, counting, memory pricing).
+    pub skipped: Vec<String>,
     pub adam: (f64, f64, f64),
     pub train_step_file: String,
     pub eval_loss_file: String,
@@ -157,20 +170,29 @@ const PRESETS: [(&str, [usize; 9]); 6] = [
     ("e2e100m", [8192, 896, 8, 14, 3584, 256, 4, 32, 16]),
 ];
 
-/// Split a bundle tag into (preset, method, quant). Method spellings
-/// come from the adapter registry, so a newly registered method is a
-/// valid tag with no list to update here.
+/// Split a bundle tag into (preset, method, quant), ignoring any
+/// scenario suffix. Method spellings come from the adapter registry,
+/// so a newly registered method is a valid tag with no list to update
+/// here.
 pub fn parse_tag(tag: &str) -> Result<(String, String, String)> {
-    let (preset, rest) = tag
+    let (preset, method, quant, _) = parse_tag_full(tag)?;
+    Ok((preset, method, quant))
+}
+
+/// As [`parse_tag`], also parsing the tag's scenario suffix:
+/// `<preset>_<method>[_<quant>][+knob[=value]...]`.
+pub fn parse_tag_full(tag: &str) -> Result<(String, String, String, ScenarioCfg)> {
+    let (base, sc) = scenario::split_tag(tag)?;
+    let (preset, rest) = base
         .split_once('_')
-        .with_context(|| format!("bundle tag '{tag}' is not <preset>_<method>[_<quant>]"))?;
+        .with_context(|| format!("bundle tag '{tag}' is not <preset>_<method>[_<quant>][+knobs]"))?;
     for method in crate::adapters::names() {
         if rest == method {
-            return Ok((preset.to_string(), method.to_string(), "none".to_string()));
+            return Ok((preset.to_string(), method.to_string(), "none".to_string(), sc));
         }
         for quant in ["nf4", "awq"] {
             if rest == format!("{method}_{quant}") {
-                return Ok((preset.to_string(), method.to_string(), quant.to_string()));
+                return Ok((preset.to_string(), method.to_string(), quant.to_string(), sc));
             }
         }
     }
@@ -195,7 +217,7 @@ impl Manifest {
     /// tree — the reference engine's path. Field-for-field identical to
     /// what `aot.build_manifest` writes to manifest.json.
     pub fn builtin(tag: &str) -> Result<Manifest> {
-        let (preset, method, quant) = parse_tag(tag)?;
+        let (preset, method, quant, sc) = parse_tag_full(tag)?;
         let dims = PRESETS
             .iter()
             .find(|(name, _)| *name == preset)
@@ -210,12 +232,17 @@ impl Manifest {
             d_ff,
             seq_len,
             batch,
-            block_b,
+            // the 'block' knob overrides the preset's block size
+            block_b: if sc.block > 0 { sc.block } else { block_b },
             neumann_k: 5,
             lora_r,
             lora_alpha: 16.0,
+            scenario: sc.dims(),
         };
         let adapter = crate::adapters::get(&method)?;
+        // The method accepts or rejects the scenario (typed errors
+        // naming its supported knobs) before anything is synthesized.
+        adapter.configure(&sc)?;
         let is_quantized = adapter.quantized_base();
         ensure!(
             is_quantized == (quant != "none"),
@@ -226,6 +253,12 @@ impl Manifest {
 
         // (name, din, dout) for every adapted linear, in graph order.
         let linears = adapted_linear_dims(&model);
+
+        // Resolve the targeting regexes once, here: the skipped set
+        // drives trainable synthesis, runtime fallback, decode, merge,
+        // counting, and memory pricing from this single answer.
+        let linear_names: Vec<String> = linears.iter().map(|(n, _, _)| n.clone()).collect();
+        let skipped = sc.resolve_skipped(&linear_names)?;
 
         // Base (pretrained) parameter specs.
         let mut base: Vec<ParamSpec> = vec![
@@ -276,6 +309,7 @@ impl Manifest {
         } else {
             linears
                 .iter()
+                .filter(|(name, _, _)| !skipped.contains(name))
                 .flat_map(|(name, din, dout)| adapter.linear_trainables(name, *din, *dout, &model))
                 .collect()
         };
@@ -351,6 +385,8 @@ impl Manifest {
             trainable,
             frozen,
             quantized,
+            scenario: sc,
+            skipped,
             adam: (0.9, 0.999, 1e-8),
             train_step_file: "train_step.hlo.txt".to_string(),
             eval_loss_file: "eval_loss.hlo.txt".to_string(),
@@ -387,6 +423,11 @@ impl Manifest {
             )
         })?;
 
+        // The tag's scenario suffix is authoritative for loaded bundles
+        // too (manifest.json predates the scenario subsystem).
+        let tag = j.get("tag")?.as_str()?.to_string();
+        let sc = scenario::split_tag(&tag).map(|(_, s)| s).unwrap_or_default();
+
         let m = j.get("model")?;
         let model = ModelDims {
             vocab: m.get("vocab")?.as_usize()?,
@@ -400,7 +441,13 @@ impl Manifest {
             neumann_k: m.get("neumann_k")?.as_usize()?,
             lora_r: m.get("lora_r")?.as_usize()?,
             lora_alpha: m.get("lora_alpha")?.as_f64()?,
+            scenario: sc.dims(),
         };
+        let linear_names: Vec<String> = adapted_linear_dims(&model)
+            .into_iter()
+            .map(|(n, _, _)| n)
+            .collect();
+        let skipped = sc.resolve_skipped(&linear_names)?;
 
         let param_spec = |e: &Json| -> Result<ParamSpec> {
             Ok(ParamSpec {
@@ -441,7 +488,7 @@ impl Manifest {
         let params = j.get("params")?;
         Ok(Manifest {
             dir,
-            tag: j.get("tag")?.as_str()?.to_string(),
+            tag,
             preset: j.get("preset")?.as_str()?.to_string(),
             method: j.get("method")?.as_str()?.to_string(),
             quant: j.get("quant")?.as_str()?.to_string(),
@@ -451,6 +498,8 @@ impl Manifest {
             trainable,
             frozen,
             quantized,
+            scenario: sc,
+            skipped,
             adam: (
                 adam.get("b1")?.as_f64()?,
                 adam.get("b2")?.as_f64()?,
@@ -492,6 +541,12 @@ impl Manifest {
         } else {
             bail!("'{base}' is not an adapted linear weight");
         }
+    }
+
+    /// Whether `linear` is adapted under this bundle's targeting
+    /// (skipped linears run the frozen base path everywhere).
+    pub fn adapts(&self, linear: &str) -> bool {
+        !self.skipped.iter().any(|s| s == linear)
     }
 
     /// Total trainable elements (must equal `params_trainable`).
@@ -742,6 +797,77 @@ mod tests {
             .unwrap();
         assert_eq!(up.shape, vec![4, 64]);
         assert_eq!(h.trainable_numel(), h.params_trainable);
+    }
+
+    #[test]
+    fn scenario_suffix_flows_into_builtin() {
+        let m = Manifest::builtin("tiny_oft_v2+coft+eps=0.001+dropout=0.1").unwrap();
+        assert!(m.model.scenario.coft);
+        assert_eq!(m.model.scenario.eps, 0.001);
+        assert_eq!(m.model.scenario.module_dropout, 0.1);
+        assert!(m.skipped.is_empty());
+        // plain parse_tag ignores the suffix
+        assert_eq!(
+            parse_tag("tiny_oft_v2+coft").unwrap(),
+            ("tiny".into(), "oft_v2".into(), "none".into())
+        );
+        // unknown knobs and unsupported knobs are typed errors
+        let err = format!("{:#}", Manifest::builtin("tiny_oft_v2+warp=1").unwrap_err());
+        assert!(err.contains("valid knobs"), "{err}");
+        let err = format!("{:#}", Manifest::builtin("tiny_lora+coft").unwrap_err());
+        assert!(err.contains("does not support scenario knob 'coft'"), "{err}");
+    }
+
+    #[test]
+    fn scenario_targeting_prunes_trainables() {
+        let all = Manifest::builtin("tiny_oft_v2").unwrap();
+        let sub = Manifest::builtin("tiny_oft_v2+target=wq|wv").unwrap();
+        assert_eq!(sub.skipped.len(), 4 * sub.model.n_layers);
+        assert_eq!(sub.trainable.len(), 2 * sub.model.n_layers);
+        assert!(sub.adapts("layers.0.attn.wq"));
+        assert!(!sub.adapts("layers.0.mlp.up"));
+        assert!(sub.params_trainable < all.params_trainable);
+        // the frozen base inputs are untouched by targeting
+        assert_eq!(sub.frozen.len(), all.frozen.len());
+        let exc = Manifest::builtin("tiny_oft_v2+exclude=mlp").unwrap();
+        assert_eq!(exc.skipped.len(), 2 * exc.model.n_layers);
+        // a target matching nothing names the linears
+        let err = format!("{:#}", Manifest::builtin("tiny_oft_v2+target=zzz").unwrap_err());
+        assert!(err.contains("matches none"), "{err}");
+    }
+
+    #[test]
+    fn scenario_block_knobs_resize_params() {
+        // block=8: tiny's d=64 linears get 8 blocks of 8(8-1)/2 = 28
+        let m = Manifest::builtin("tiny_oft_v2+block=8").unwrap();
+        let wq = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.oft_q")
+            .unwrap();
+        assert_eq!(wq.shape, vec![8, 28]);
+        // r=4: every linear gets 4 blocks (wq: b=16; mlp.down: b=64)
+        let m = Manifest::builtin("tiny_oft_v2+r=4").unwrap();
+        let wq = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.oft_q")
+            .unwrap();
+        assert_eq!(wq.shape, vec![4, 120]);
+        let down = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.mlp.down.oft_q")
+            .unwrap();
+        assert_eq!(down.shape, vec![4, 64 * 63 / 2]);
+        // block_share collapses every linear to one shared block row
+        let m = Manifest::builtin("tiny_oft_v2+block_share").unwrap();
+        let wq = m
+            .trainable
+            .iter()
+            .find(|s| s.name == "layers.0.attn.wq.oft_q")
+            .unwrap();
+        assert_eq!(wq.shape, vec![1, 120]);
     }
 
     #[test]

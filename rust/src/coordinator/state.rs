@@ -452,6 +452,23 @@ impl AdapterState {
     /// `__step` entries when present (a full-state resume checkpoint),
     /// else start at zero (a weights-only init checkpoint).
     pub fn init(man: &Manifest, seed: u64, ckpt: Option<&Checkpoint>) -> Result<AdapterState> {
+        // A resume checkpoint that recorded its scenario config must be
+        // resumed under the same knobs — COFT projection, module
+        // dropout and targeting all change the training trajectory, so
+        // a silent mismatch would break the bitwise-resume contract.
+        if let Some(t) = ckpt.and_then(|c| c.get(crate::scenario::CKPT_KEY)) {
+            let saved = crate::scenario::ScenarioCfg::from_checkpoint_tensor(t)
+                .context("checkpoint '__scenario' entry is corrupt")?;
+            ensure!(
+                saved == man.scenario,
+                "checkpoint was trained under scenario '{}' but bundle '{}' \
+                 resumes under '{}' — resume with the same scenario knobs \
+                 (tag suffix / --coft / --module-dropout / targeting)",
+                display_suffix(&saved),
+                man.tag,
+                display_suffix(&man.scenario),
+            );
+        }
         let mut tr = Vec::with_capacity(man.trainable.len());
         let mut m = Vec::with_capacity(man.trainable.len());
         let mut v = Vec::with_capacity(man.trainable.len());
@@ -520,6 +537,16 @@ fn buffer_bytes(b: &Buffer) -> u64 {
     b.as_host()
         .map(|v| (v.element_count() * v.dtype().size_bytes()) as u64)
         .unwrap_or(0)
+}
+
+/// Human-readable form of a scenario for mismatch errors: the canonical
+/// tag suffix, or "(default)" when no knob is set.
+fn display_suffix(sc: &crate::scenario::ScenarioCfg) -> String {
+    if sc.is_default() {
+        "(default)".to_string()
+    } else {
+        sc.suffix()
+    }
 }
 
 fn moment_literal(spec: &ParamSpec, prefix: &str, ckpt: Option<&Checkpoint>) -> Result<Value> {

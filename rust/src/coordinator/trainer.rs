@@ -326,7 +326,32 @@ impl<'e> Trainer<'e> {
         self.state.tr = take(&shapes)?;
         self.state.m = take(&moment_shapes)?;
         self.state.v = take(&moment_shapes)?;
+        if self.manifest.model.scenario.coft {
+            self.coft_project()?;
+        }
         Ok(loss)
+    }
+
+    /// COFT's constrained step: after the unconstrained Adam update,
+    /// project every identity-at-zero adapter parameter back inside the
+    /// eps-ball around the identity (`‖p‖_F <= eps`, uniform scaling).
+    /// Runs on the host over the FULL trainables — which are identical
+    /// on every rank after the sharded step's all-gather — so the
+    /// projected parameters stay bitwise identical across `--workers`
+    /// and `--ranks`. Adam moments are deliberately untouched (the
+    /// projection is a constraint on the iterate, not the optimizer).
+    fn coft_project(&mut self) -> Result<()> {
+        let eps = self.manifest.model.scenario.eps;
+        for (spec, lit) in self.manifest.trainable.iter().zip(&mut self.state.tr) {
+            if spec.init != crate::coordinator::manifest::Init::Zeros {
+                continue; // zero ⇔ identity only for the rotation params
+            }
+            let mut data = lit.to_vec::<f32>()?;
+            if crate::scenario::coft_project(&mut data, eps) {
+                *lit = lit_f32(&spec.shape, &data)?;
+            }
+        }
+        Ok(())
     }
 
     /// Run the configured number of steps with logging and periodic
@@ -698,6 +723,10 @@ impl<'e> Trainer<'e> {
             STEP_KEY.to_string(),
             Tensor::from_vec(&[1], vec![self.state.step as f32]),
         );
+        ck.insert(
+            crate::scenario::CKPT_KEY.to_string(),
+            self.manifest.scenario.to_checkpoint_tensor(),
+        );
         Ok(ck)
     }
 
@@ -735,6 +764,16 @@ impl<'e> Trainer<'e> {
         ck.insert(
             STEP_KEY.to_string(),
             Tensor::from_vec(&[1], vec![self.state.step as f32]),
+        );
+        // The scenario config (COFT/eps, module-dropout probability and
+        // seed, block_share/r, targeting regexes) rides along under
+        // `__scenario`, so resuming validates the run is continued under
+        // the SAME knobs — the dropout stream in particular is a pure
+        // function of (seed, step, name), so persisting seed + step is
+        // the whole RNG state and resume replays it bitwise.
+        ck.insert(
+            crate::scenario::CKPT_KEY.to_string(),
+            self.manifest.scenario.to_checkpoint_tensor(),
         );
         Ok(ck)
     }

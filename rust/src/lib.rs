@@ -42,6 +42,7 @@ pub mod modelspec;
 pub mod peft;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod tensor;
 pub mod testkit;

@@ -112,6 +112,35 @@ fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.to_string());
     }
+    // Scenario flags route through the same knob grammar the tag
+    // suffix and `[scenario]` config section use.
+    if args.has_flag("coft") {
+        cfg.set("scenario.coft", "true")?;
+    }
+    if let Some(v) = args.get("eps") {
+        cfg.set("scenario.eps", v)?;
+    }
+    if let Some(v) = args.get("module-dropout") {
+        cfg.set("scenario.dropout", v)?;
+    }
+    if let Some(v) = args.get("dropout-seed") {
+        cfg.set("scenario.dropout_seed", v)?;
+    }
+    if args.has_flag("block-share") {
+        cfg.set("scenario.block_share", "true")?;
+    }
+    if let Some(v) = args.get("oft-r") {
+        cfg.set("scenario.r", v)?;
+    }
+    if let Some(v) = args.get("oft-block-size") {
+        cfg.set("scenario.block", v)?;
+    }
+    if let Some(v) = args.get("target-modules") {
+        cfg.set("scenario.target", v)?;
+    }
+    if let Some(v) = args.get("exclude-modules") {
+        cfg.set("scenario.exclude", v)?;
+    }
     // --set a.b=v (repeatable via comma separation)
     if let Some(sets) = args.get("set") {
         for kv in sets.split(',') {
@@ -121,6 +150,11 @@ fn run_cfg(args: &oftv2::cli::Args) -> Result<RunCfg> {
             cfg.set(k.trim(), v.trim())?;
         }
     }
+    // Canonicalize: overlay the collected scenario knobs onto the tag's
+    // existing suffix. The tag is the one carrier of the scenario —
+    // trainer, decode, serve, merge, and checkpoints all resolve it
+    // through `Manifest::builtin`.
+    cfg.tag = oftv2::scenario::apply_to_tag(&cfg.tag, &cfg.scenario)?;
     Ok(cfg)
 }
 
@@ -156,7 +190,16 @@ fn train_command(name: &'static str, about: &'static str) -> Command {
         .opt("rendezvous", "rank-0 rendezvous address host:port", None)
         .opt("init-from", "checkpoint to initialize from", None)
         .opt("out-dir", "directory for history/checkpoint output", None)
+        .opt("eps", "COFT deviation bound (default 6e-5; implies nothing without --coft)", None)
+        .opt("module-dropout", "module dropout probability in [0, 1) (default 0)", None)
+        .opt("dropout-seed", "module-dropout decision-stream seed (default fixed)", None)
+        .opt("oft-r", "rotation blocks per linear (exclusive with --oft-block-size)", None)
+        .opt("oft-block-size", "rotation block size override (exclusive with --oft-r)", None)
+        .opt("target-modules", "regex: only matching linears are adapted", None)
+        .opt("exclude-modules", "regex: matching linears stay frozen", None)
         .opt("set", "comma-separated config overrides a.b=v", None)
+        .flag("coft", "COFT: clamp rotation deviation from identity to --eps after every step")
+        .flag("block-share", "share one rotation block across each linear (default off)")
         .opt("save-checkpoint", "path to write the final checkpoint", None)
         .opt("backend", "runtime backend: auto | reference | pjrt", Some("auto"))
         .flag("help", "show help")
@@ -820,8 +863,8 @@ fn cmd_methods(argv: &[String]) -> Result<()> {
     let preset = args.get_or("preset", "tiny");
     println!("Registered PEFT methods (preset '{preset}')\n");
     println!(
-        "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {}",
-        "method", "label", "quant", "merge", "trainable", "example tag", "about"
+        "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {:<40} {}",
+        "method", "label", "quant", "merge", "trainable", "example tag", "scenario knobs", "about"
     );
     for adapter in oftv2::adapters::all() {
         let tag = oftv2::adapters::bundle_tag(preset, *adapter);
@@ -831,19 +874,28 @@ fn cmd_methods(argv: &[String]) -> Result<()> {
             Ok(man) => human_count(man.params_trainable),
             Err(e) => format!("(unavailable: {e})"),
         };
+        let knobs = adapter.supported_knobs();
+        let knobs = if knobs.is_empty() {
+            "(none)".to_string()
+        } else {
+            knobs.iter().map(|k| k.key()).collect::<Vec<_>>().join(",")
+        };
         println!(
-            "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {}",
+            "{:<12} {:<6} {:<6} {:<6} {:>12}  {:<22} {:<40} {}",
             adapter.name(),
             adapter.paper_label(adapter.quantized_base()),
             if adapter.quantized_base() { "4-bit" } else { "f32" },
             if adapter.can_merge() { "yes" } else { "no" },
             trainable,
             tag,
+            knobs,
             adapter.about()
         );
     }
     println!(
-        "\nselect with --tag <preset>_<method>[_<quant>]; fold a trained adapter \
+        "\nselect with --tag <preset>_<method>[_<quant>]; append scenario knobs as \
+         tag suffixes (e.g. {preset}_oft_v2+coft+target=wq|wv) or `train` flags \
+         (--coft, --module-dropout, --target-modules, ...); fold a trained adapter \
          into a deployable base with `repro merge`; \
          see README \"Adding a PEFT method\" to register a new one"
     );

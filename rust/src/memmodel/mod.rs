@@ -93,6 +93,18 @@ impl Method {
         self.kind
     }
 
+    /// Fold a scenario's numeric knobs (`r`/`block`/`block_share`) into
+    /// the analysis dims, so parameter counts and transients price the
+    /// configured shapes. Targeting is handled by
+    /// [`finetune_memory_scenario`] (regexes don't fit in Copy dims).
+    pub fn with_scenario(mut self, sc: &crate::scenario::ScenarioCfg) -> Method {
+        self.kind.dims.scenario = sc.dims();
+        if sc.block > 0 {
+            self.kind.dims.block_b = sc.block;
+        }
+        self
+    }
+
     pub fn label(self, quantized: bool) -> String {
         self.kind.adapter.paper_label(quantized).to_string()
     }
@@ -282,6 +294,31 @@ pub fn finetune_memory(
 /// Convenience: total GiB.
 pub fn finetune_gib(spec: &ModelSpec, method: Method, precision: Precision, shape: TrainShape) -> f64 {
     finetune_memory(spec, method, precision, shape).total_gib()
+}
+
+/// Scenario-aware finetuning memory: every adapter-count-derived term
+/// (params, grads, optimizer state) is re-priced through
+/// [`crate::peft::counting::count_scenario`] — the same targeting
+/// resolution and block/`r`/`block_share` shapes `Manifest::builtin`
+/// uses — so the memory model and the runtime bundle agree on what is
+/// trainable under any scenario. Activation terms are unchanged: the
+/// forward still runs every linear; non-targeted ones just carry no
+/// adapter state.
+pub fn finetune_memory_scenario(
+    spec: &ModelSpec,
+    method: Method,
+    precision: Precision,
+    shape: TrainShape,
+    sc: &crate::scenario::ScenarioCfg,
+) -> Result<MemBreakdown> {
+    let method = method.with_scenario(sc);
+    let mut m = finetune_memory(spec, method, precision, shape);
+    let k = method.kind();
+    let n = crate::peft::counting::count_scenario(spec, k.adapter, &k.dims, sc)? as f64;
+    m.adapter_params = n * 4.0;
+    m.adapter_grads = n * 4.0;
+    m.optimizer = optimizer_shard_bytes(n, shape.ranks);
+    Ok(m)
 }
 
 /// Per-rank Adam-moment residency under ZeRO-1 sharding: two f32

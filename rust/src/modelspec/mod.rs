@@ -55,6 +55,33 @@ impl ModelSpec {
         self.linear_params() + self.embed_params + self.extra_params
     }
 
+    /// A spec mirroring a runtime bundle's architecture: the six
+    /// adapted linears per layer of the builtin presets, labeled with
+    /// the same `attn.wq` / `mlp.up` suffixes the manifest's linear
+    /// names end with — so scenario targeting regexes resolve
+    /// identically against both (see `peft::counting::count_scenario`).
+    pub fn from_dims(name: &str, dims: &crate::coordinator::manifest::ModelDims) -> ModelSpec {
+        let (d, f) = (dims.d_model, dims.d_ff);
+        ModelSpec {
+            name: name.into(),
+            d_model: d,
+            n_layers: dims.n_layers,
+            n_heads: dims.n_heads,
+            vocab: dims.vocab,
+            linears_per_layer: vec![
+                Linear { label: "attn.wq", din: d, dout: d },
+                Linear { label: "attn.wk", din: d, dout: d },
+                Linear { label: "attn.wv", din: d, dout: d },
+                Linear { label: "attn.wo", din: d, dout: d },
+                Linear { label: "mlp.up", din: d, dout: f },
+                Linear { label: "mlp.down", din: f, dout: d },
+            ],
+            embed_params: ((dims.vocab + dims.seq_len + dims.vocab) * d) as u64,
+            extra_params: ((2 * dims.n_layers + 1) * d) as u64,
+            default_seq: dims.seq_len,
+        }
+    }
+
     // -- concrete models -----------------------------------------------
 
     /// Llama-2 7B / 13B (MHA, SwiGLU; q,k,v,o,gate,up,down adapted).

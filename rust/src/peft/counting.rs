@@ -99,6 +99,46 @@ pub fn count(spec: &ModelSpec, m: MethodKind) -> u64 {
     count_with(spec, m.adapter, &m.dims)
 }
 
+/// Scenario-aware trainable count: the same registry-declaration sum
+/// as [`count_with`], but with the scenario's targeting regexes pruning
+/// linears (matched against each linear's label, via the SAME
+/// [`crate::scenario::ScenarioCfg::resolve_skipped`] resolution
+/// `Manifest::builtin` uses) and its `r`/`block`/`block_share` knobs
+/// flowing into the per-linear spec shapes. Analytic counts therefore
+/// agree with the runtime bundle under any scenario.
+pub fn count_scenario(
+    spec: &ModelSpec,
+    adapter: &dyn Adapter,
+    dims: &ModelDims,
+    sc: &crate::scenario::ScenarioCfg,
+) -> crate::Result<u64> {
+    if adapter.trains_base() {
+        return Ok(spec.total_params());
+    }
+    let mut dims = *dims;
+    dims.scenario = sc.dims();
+    if sc.block > 0 {
+        dims.block_b = sc.block;
+    }
+    let labels: Vec<String> = spec
+        .adapted_linears()
+        .map(|l| l.label.to_string())
+        .collect();
+    let skipped = sc.resolve_skipped(&labels)?;
+    let mut total = 0u64;
+    for l in spec.adapted_linears() {
+        if skipped.iter().any(|s| s == l.label) {
+            continue;
+        }
+        total += adapter
+            .linear_trainables(l.label, l.din, l.dout, &dims)
+            .iter()
+            .map(|s| s.numel() as u64)
+            .sum::<u64>();
+    }
+    Ok(total)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

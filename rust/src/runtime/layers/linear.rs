@@ -52,6 +52,12 @@ impl Layer for PeftLinear {
         // Packed (quantized) bases multiply through the fused
         // block-dequant kernels; dense bases through Tensor::matmul.
         let w = ctx.params.weight(&self.name)?;
+        // Scenario targeting / module dropout: deselected linears run
+        // the frozen base path (identity adapter) with no extras, so
+        // no adapter grads accumulate for them this pass.
+        if !ctx.adapts(&self.name) {
+            return Ok((w.matmul(x)?, LinearAct { x: x.clone(), extra: None }));
+        }
         let (y, extra) = ctx.adapter.linear_forward(ctx, &self.name, w, x)?;
         Ok((y, LinearAct { x: x.clone(), extra }))
     }
@@ -65,6 +71,9 @@ impl Layer for PeftLinear {
         grads: &mut Gradients,
     ) -> Result<Tensor> {
         let w = ctx.params.weight(&self.name)?;
+        if !ctx.adapts(&self.name) {
+            return w.matmul_t(dy);
+        }
         ctx.adapter
             .linear_backward(ctx, &self.name, w, act, dy, grads)
     }

@@ -208,6 +208,29 @@ pub struct Ctx<'a> {
     pub dims: &'a ModelDims,
     pub adapter: &'static dyn Adapter,
     pub plan: Option<&'a AdapterPlan>,
+    /// Linears the scenario's targeting regexes deselected (from
+    /// `Manifest::skipped`); they run the frozen base path.
+    pub skipped: Option<&'a std::collections::BTreeSet<String>>,
+    /// The optimizer step, present only on training forwards/backwards
+    /// — the module-dropout decision input. Eval and decode leave it
+    /// `None` (dropout is a training-time regularizer, as in PEFT).
+    pub step: Option<u64>,
+}
+
+impl Ctx<'_> {
+    /// Whether `linear` runs its adapter this pass: not deselected by
+    /// targeting, and not dropped by module dropout at this step. The
+    /// dropout decision is a pure function of (seed, step, name) —
+    /// bitwise identical across workers, ranks, recomputes, resume.
+    pub fn adapts(&self, linear: &str) -> bool {
+        if self.skipped.is_some_and(|s| s.contains(linear)) {
+            return false;
+        }
+        match self.step {
+            Some(step) => !crate::scenario::dropped(linear, step, &self.dims.scenario),
+            None => true,
+        }
+    }
 }
 
 /// The surface shared by the plain `x -> y` layers (RMSNorm, the PEFT

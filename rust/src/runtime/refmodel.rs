@@ -77,11 +77,16 @@ pub struct RefBundle {
     frozen: Vec<ParamSpec>,
     quantized: Vec<QuantSpec>,
     adam: (f64, f64, f64),
+    /// Linears the scenario's targeting regexes deselected: they run
+    /// the frozen base path everywhere (train, eval, decode, merge)
+    /// and carry no adapter parameters or plan entries.
+    skipped: std::collections::BTreeSet<String>,
 }
 
 impl RefBundle {
     pub fn from_manifest(man: &Manifest) -> Result<RefBundle> {
         let adapter = crate::adapters::get(&man.method)?;
+        adapter.configure(&man.scenario)?;
         adapter.validate_dims(&man.model)?;
         let quant = QuantKind::parse(&man.quant)?;
         ensure!(
@@ -99,6 +104,7 @@ impl RefBundle {
             frozen: man.frozen.clone(),
             quantized: man.quantized.clone(),
             adam: man.adam,
+            skipped: man.skipped.iter().cloned().collect(),
         })
     }
 
@@ -110,12 +116,18 @@ impl RefBundle {
         self.frozen.len() + self.quantized.len()
     }
 
-    fn ctx<'a>(&'a self, params: &'a Params, plan: &'a AdapterPlan) -> Ctx<'a> {
+    /// `step` is `Some` only on training passes — it gates module
+    /// dropout (a pure function of seed/step/name, so bitwise identical
+    /// across workers, ranks, recompute and resume); eval and decode
+    /// paths pass `None` and never drop.
+    fn ctx<'a>(&'a self, params: &'a Params, plan: &'a AdapterPlan, step: Option<u64>) -> Ctx<'a> {
         Ctx {
             params,
             dims: &self.dims,
             adapter: self.adapter,
             plan: Some(plan),
+            skipped: Some(&self.skipped),
+            step,
         }
     }
 
@@ -124,10 +136,14 @@ impl RefBundle {
     /// merged weights, reflection directions — whatever the module
     /// defines). Every microbatch — on every worker — reads this one
     /// plan, so per-sequence decomposition does not re-pay per-step
-    /// costs per sequence.
+    /// costs per sequence. Targeting-deselected linears have no
+    /// adapter parameters, so no plan entries either.
     fn adapter_plan(&self, params: &Params) -> Result<AdapterPlan> {
         let mut plan = AdapterPlan::default();
         for (name, _, _) in adapted_linear_dims(&self.dims) {
+            if self.skipped.contains(&name) {
+                continue;
+            }
             if let Some(entry) = self.adapter.plan_linear(&name, params, &self.dims)? {
                 plan.insert(name, entry);
             }
@@ -279,7 +295,14 @@ impl RefBundle {
         let t_step = scalar_f32(data[3])?;
 
         let params = self.assemble_params(tr, fixed)?;
-        let (loss, mut grads) = self.loss_and_grads_opts(&params, tokens, mask, opts)?;
+        let (loss, mut grads) = self.loss_and_grads_stepped(
+            &params,
+            tokens,
+            mask,
+            opts,
+            &super::LocalReducer,
+            Some(t_step as u64),
+        )?;
 
         let coef = AdamCoef::new(self.adam, lr, t_step);
         let mut new_p = Vec::with_capacity(n);
@@ -378,7 +401,8 @@ impl RefBundle {
         );
 
         let params = self.assemble_params(tr, fixed)?;
-        let (loss, mut grads) = self.loss_and_grads_reduced(&params, tokens, mask, opts, red)?;
+        let (loss, mut grads) =
+            self.loss_and_grads_stepped(&params, tokens, mask, opts, red, Some(t_step as u64))?;
 
         // This rank's [lo, hi) element window of params + grads, in
         // manifest order (missing grads are zeros, as in the full step).
@@ -518,10 +542,11 @@ impl RefBundle {
     // Forward / backward (delegating to the layer stack)
     // -----------------------------------------------------------------
 
-    /// Whole-batch forward pass with a full tape (eval / logits paths).
+    /// Whole-batch forward pass with a full tape (eval / logits paths
+    /// — no step, so module dropout never fires here).
     fn forward(&self, params: &Params, input_ids: &[i32], bsz: usize) -> Result<Tape> {
         let plan = self.adapter_plan(params)?;
-        let ctx = self.ctx(params, &plan);
+        let ctx = self.ctx(params, &plan, None);
         self.stack
             .forward(&ctx, input_ids, bsz, CheckpointPolicy::None)
     }
@@ -571,6 +596,21 @@ impl RefBundle {
         opts: TrainOpts,
         red: &dyn super::GradReducer,
     ) -> Result<(f32, Gradients)> {
+        self.loss_and_grads_stepped(params, tokens, mask, opts, red, None)
+    }
+
+    /// The internal stepped variant behind every loss/grad entry point:
+    /// train steps pass `Some(t)` (enabling module dropout at that
+    /// optimizer step), direct/eval callers pass `None`.
+    fn loss_and_grads_stepped(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        mask: &[f32],
+        opts: TrainOpts,
+        red: &dyn super::GradReducer,
+        step: Option<u64>,
+    ) -> Result<(f32, Gradients)> {
         let (bsz, t) = (self.dims.batch, self.dims.seq_len);
         ensure!(tokens.len() == bsz * (t + 1), "tokens shape mismatch");
         ensure!(mask.len() == bsz * t, "mask shape mismatch");
@@ -587,7 +627,16 @@ impl RefBundle {
         let plan = self.adapter_plan(params)?;
         let (lo, hi) = super::shard_range(bsz, red.rank(), red.ranks());
         let parts = run_sharded(hi - lo, opts.workers, |j| {
-            self.seq_microbatch(params, &plan, tokens, mask, lo + j, inv_count, opts.checkpoint)
+            self.seq_microbatch(
+                params,
+                &plan,
+                tokens,
+                mask,
+                lo + j,
+                inv_count,
+                opts.checkpoint,
+                step,
+            )
         })?;
 
         // Fixed-order pairwise tree over global microbatch index.
@@ -597,6 +646,7 @@ impl RefBundle {
 
     /// Forward + backward of one sequence: returns its (sum_nll,
     /// gradient partial).
+    #[allow(clippy::too_many_arguments)]
     fn seq_microbatch(
         &self,
         params: &Params,
@@ -606,12 +656,13 @@ impl RefBundle {
         seq: usize,
         inv_count: f32,
         policy: CheckpointPolicy,
+        step: Option<u64>,
     ) -> Result<(f32, Gradients)> {
         let t = self.dims.seq_len;
         let row = &tokens[seq * (t + 1)..(seq + 1) * (t + 1)];
         let (input_ids, targets) = split_tokens(row, 1, t);
         let mask_row = &mask[seq * t..(seq + 1) * t];
-        let ctx = self.ctx(params, plan);
+        let ctx = self.ctx(params, plan, step);
         let tape = self.stack.forward(&ctx, &input_ids, 1, policy)?;
         let (sum_nll, _, logp) = nll_stats(&tape.logits, &targets, mask_row);
         let dlogits = nll_dlogits(&logp, &targets, mask_row, inv_count);
@@ -1071,9 +1122,14 @@ impl RefBundle {
     }
 
     /// Resolve one adapted linear into its method's decode applier
-    /// (adapter state merged once here, never per token).
+    /// (adapter state merged once here, never per token). Linears the
+    /// scenario targeting deselected resolve through the identity
+    /// (`none`) adapter — the frozen base, as in training.
     fn resolve_linear(&self, params: &Params, name: &str) -> Result<Box<dyn DecodeApply>> {
         let w = params.weight(name)?;
+        if self.skipped.contains(name) {
+            return crate::adapters::get("none")?.resolve_decode(params, &self.dims, name, w);
+        }
         self.adapter.resolve_decode(params, &self.dims, name, w)
     }
 }

@@ -1,0 +1,885 @@
+//! The scenario subsystem: adapter-owned per-run configuration.
+//!
+//! Production OFT (the HF PEFT `OFTConfig`) exposes a scenario surface
+//! beyond a single global `(r, b)` pair: COFT constraint projection
+//! (`coft`/`eps`), multiplicative module dropout, `block_share`, `r`
+//! vs `oft_block_size` selection, and `target_modules` /
+//! `exclude_modules` regex targeting. This module owns the typed
+//! [`ScenarioCfg`] carrying those knobs, parsed from three equivalent
+//! sources that all land in the bundle tag:
+//!
+//! * **tag suffixes** — `tiny_oft_v2+coft+eps=1e-3+target=wq|wv`
+//!   (the canonical carrier: anything resolving a tag through
+//!   `Manifest::builtin` — trainer, decode, serve, merge, tests —
+//!   sees the same scenario with zero extra plumbing);
+//! * **CLI flags** — `--coft`, `--module-dropout 0.1`, ... (overlaid
+//!   onto the tag, then re-canonicalized);
+//! * **config files** — `[scenario]` keys via `config/toml.rs`.
+//!
+//! Each registered method declares which knobs it honors
+//! ([`crate::adapters::Adapter::supported_knobs`]); unknown or
+//! unsupported knobs are typed errors naming the valid options. The
+//! numeric knobs ride inside [`ScenarioDims`] (a `Copy` struct
+//! embedded in `ModelDims`) so they reach every adapter hook; the
+//! targeting regexes resolve once at manifest synthesis into the
+//! skipped-linear set.
+
+pub mod regex;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// Default COFT deviation bound (HF PEFT's `OFTConfig.eps` default).
+pub const DEFAULT_EPS: f32 = 6e-5;
+
+/// Default seed of the module-dropout decision stream. Dropout is a
+/// pure function of `(seed, step, linear name)` — no stateful RNG — so
+/// the decision is bitwise identical across workers, ranks, gradient
+/// recomputes, and checkpoint resume.
+pub const DEFAULT_DROPOUT_SEED: u64 = 0x0D40_B5EE_D0D4_0B1C;
+
+/// Checkpoint key persisting the active [`ScenarioCfg`] (encoded by
+/// [`ScenarioCfg::to_checkpoint_tensor`]). Written by full-state
+/// checkpoints; resume validates it against the manifest's scenario.
+pub const CKPT_KEY: &str = "__scenario";
+
+/// One scenario knob — the unit of per-method support declaration.
+/// `key()` is the spelling tag suffixes, CLI flags, and error messages
+/// use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Knob {
+    /// COFT: post-step constraint projection clamping the rotation
+    /// parameters' deviation from identity to `eps`.
+    Coft,
+    /// The COFT deviation bound.
+    Eps,
+    /// Multiplicative module dropout: per step, each adapted linear
+    /// independently falls back to the frozen base (identity adapter)
+    /// with this probability.
+    ModuleDropout,
+    /// All rotation blocks of a linear share one parameter block.
+    BlockShare,
+    /// `r`: choose the number of rotation blocks per linear (block
+    /// size becomes `din / r`). Mutually exclusive with `block`.
+    R,
+    /// `block` (`oft_block_size`): override the preset's block size.
+    /// Mutually exclusive with `r`.
+    BlockSize,
+    /// Regex selecting which linears are adapted (others stay frozen).
+    Target,
+    /// Regex removing linears from the adapted set.
+    Exclude,
+}
+
+impl Knob {
+    /// All knobs, in canonical (suffix-serialization) order.
+    pub const ALL: [Knob; 8] = [
+        Knob::Coft,
+        Knob::Eps,
+        Knob::ModuleDropout,
+        Knob::BlockShare,
+        Knob::R,
+        Knob::BlockSize,
+        Knob::Target,
+        Knob::Exclude,
+    ];
+
+    /// The tag-suffix / CLI spelling.
+    pub fn key(self) -> &'static str {
+        match self {
+            Knob::Coft => "coft",
+            Knob::Eps => "eps",
+            Knob::ModuleDropout => "dropout",
+            Knob::BlockShare => "block_share",
+            Knob::R => "r",
+            Knob::BlockSize => "block",
+            Knob::Target => "target",
+            Knob::Exclude => "exclude",
+        }
+    }
+}
+
+/// The valid scenario knob spellings, quoted by parse errors.
+pub fn valid_keys() -> String {
+    let mut keys: Vec<&str> = Knob::ALL.iter().map(|k| k.key()).collect();
+    keys.push("dropout_seed");
+    keys.join(", ")
+}
+
+/// The numeric scenario knobs, `Copy` so they embed in `ModelDims` and
+/// flow through every adapter hook (parameter declaration, counting,
+/// memory pricing) without threading a new argument. Targeting strings
+/// stay on [`ScenarioCfg`] / the manifest.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioDims {
+    pub coft: bool,
+    pub eps: f32,
+    pub module_dropout: f32,
+    pub block_share: bool,
+    /// `r` knob: number of rotation blocks per linear (0 = unset, use
+    /// the preset's `block_b` block size instead).
+    pub oft_r: usize,
+    pub dropout_seed: u64,
+}
+
+impl Default for ScenarioDims {
+    fn default() -> ScenarioDims {
+        ScenarioDims {
+            coft: false,
+            eps: DEFAULT_EPS,
+            module_dropout: 0.0,
+            block_share: false,
+            oft_r: 0,
+            dropout_seed: DEFAULT_DROPOUT_SEED,
+        }
+    }
+}
+
+/// The full typed scenario configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioCfg {
+    pub coft: bool,
+    pub eps: f32,
+    pub module_dropout: f32,
+    pub block_share: bool,
+    /// `r` knob (0 = unset): blocks per linear; block size = din / r.
+    pub oft_r: usize,
+    /// `block` knob (0 = unset): overrides the preset's `block_b`.
+    pub block: usize,
+    /// `target_modules` regex: only matching linears are adapted.
+    pub target: Option<String>,
+    /// `exclude_modules` regex: matching linears are never adapted.
+    pub exclude: Option<String>,
+    pub dropout_seed: u64,
+}
+
+impl Default for ScenarioCfg {
+    fn default() -> ScenarioCfg {
+        ScenarioCfg {
+            coft: false,
+            eps: DEFAULT_EPS,
+            module_dropout: 0.0,
+            block_share: false,
+            oft_r: 0,
+            block: 0,
+            target: None,
+            exclude: None,
+            dropout_seed: DEFAULT_DROPOUT_SEED,
+        }
+    }
+}
+
+/// `'+'` inside a knob value (a regex quantifier, say) would split the
+/// suffix; values escape it as `%2B` (and `%` as `%25`) so
+/// [`ScenarioCfg::suffix`] / [`ScenarioCfg::parse_suffix`] round-trip
+/// losslessly.
+fn escape_value(v: &str) -> String {
+    v.replace('%', "%25").replace('+', "%2B")
+}
+
+fn unescape_value(v: &str) -> String {
+    v.replace("%2B", "+").replace("%25", "%")
+}
+
+impl ScenarioCfg {
+    /// Parse a tag suffix (the part after the first `+`, itself
+    /// `+`-separated): `coft+eps=1e-3+dropout=0.25+target=wq|wv`.
+    /// Unknown knobs error with the valid-option list.
+    pub fn parse_suffix(suffix: &str) -> Result<ScenarioCfg> {
+        let mut sc = ScenarioCfg::default();
+        for part in suffix.split('+') {
+            if part.is_empty() {
+                bail!("empty scenario knob in suffix '+{suffix}' (doubled '+'?)");
+            }
+            let (key, value) = match part.split_once('=') {
+                Some((k, v)) => (k, Some(unescape_value(v))),
+                None => (part, None),
+            };
+            let flag = || -> Result<()> {
+                ensure!(
+                    value.is_none(),
+                    "scenario knob '{key}' is a flag and takes no value"
+                );
+                Ok(())
+            };
+            let val = |what: &str| -> Result<String> {
+                value
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("scenario knob '{key}' needs a value ({what})"))
+            };
+            match key {
+                "coft" => {
+                    flag()?;
+                    sc.coft = true;
+                }
+                "eps" => {
+                    let v = val("a positive float")?;
+                    let eps: f32 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("scenario knob 'eps' expects a float, got '{v}'"))?;
+                    ensure!(eps > 0.0 && eps.is_finite(), "scenario knob 'eps' must be > 0, got {eps}");
+                    sc.eps = eps;
+                }
+                "dropout" => {
+                    let v = val("a probability in [0, 1)")?;
+                    let p: f32 = v.parse().map_err(|_| {
+                        anyhow::anyhow!("scenario knob 'dropout' expects a float, got '{v}'")
+                    })?;
+                    ensure!(
+                        (0.0..1.0).contains(&p),
+                        "scenario knob 'dropout' must be in [0, 1), got {p}"
+                    );
+                    sc.module_dropout = p;
+                }
+                "dropout_seed" => {
+                    let v = val("a u64 seed")?;
+                    sc.dropout_seed = v.parse().map_err(|_| {
+                        anyhow::anyhow!("scenario knob 'dropout_seed' expects an integer, got '{v}'")
+                    })?;
+                }
+                "block_share" => {
+                    flag()?;
+                    sc.block_share = true;
+                }
+                "r" => {
+                    let v = val("a positive block count")?;
+                    let r: usize = v.parse().map_err(|_| {
+                        anyhow::anyhow!("scenario knob 'r' expects an integer, got '{v}'")
+                    })?;
+                    ensure!(r > 0, "scenario knob 'r' must be > 0");
+                    sc.oft_r = r;
+                }
+                "block" => {
+                    let v = val("a positive block size")?;
+                    let b: usize = v.parse().map_err(|_| {
+                        anyhow::anyhow!("scenario knob 'block' expects an integer, got '{v}'")
+                    })?;
+                    ensure!(b > 0, "scenario knob 'block' must be > 0");
+                    sc.block = b;
+                }
+                "target" => {
+                    let v = val("a module regex")?;
+                    regex::Regex::new(&v)?; // validate eagerly
+                    sc.target = Some(v);
+                }
+                "exclude" => {
+                    let v = val("a module regex")?;
+                    regex::Regex::new(&v)?;
+                    sc.exclude = Some(v);
+                }
+                other => bail!(
+                    "unknown scenario knob '{other}'; valid knobs: {}",
+                    valid_keys()
+                ),
+            }
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Structural validation shared by every parse path.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            !(self.oft_r > 0 && self.block > 0),
+            "scenario knobs 'r' and 'block' are mutually exclusive \
+             ('r' picks the number of rotation blocks, 'block' the block size)"
+        );
+        ensure!(
+            self.eps > 0.0 && self.eps.is_finite(),
+            "scenario knob 'eps' must be > 0, got {}",
+            self.eps
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.module_dropout),
+            "scenario knob 'dropout' must be in [0, 1), got {}",
+            self.module_dropout
+        );
+        if let Some(t) = &self.target {
+            regex::Regex::new(t)?;
+        }
+        if let Some(e) = &self.exclude {
+            regex::Regex::new(e)?;
+        }
+        Ok(())
+    }
+
+    /// Is every knob at its default?
+    pub fn is_default(&self) -> bool {
+        *self == ScenarioCfg::default()
+    }
+
+    /// The knobs set away from their defaults (the set
+    /// [`ScenarioCfg::validate_for`] checks against a method's
+    /// declared support). A non-default `dropout_seed` counts as
+    /// [`Knob::ModuleDropout`].
+    pub fn knobs_set(&self) -> Vec<Knob> {
+        let d = ScenarioCfg::default();
+        let mut out = Vec::new();
+        if self.coft != d.coft {
+            out.push(Knob::Coft);
+        }
+        if self.eps != d.eps {
+            out.push(Knob::Eps);
+        }
+        if self.module_dropout != d.module_dropout || self.dropout_seed != d.dropout_seed {
+            out.push(Knob::ModuleDropout);
+        }
+        if self.block_share != d.block_share {
+            out.push(Knob::BlockShare);
+        }
+        if self.oft_r != d.oft_r {
+            out.push(Knob::R);
+        }
+        if self.block != d.block {
+            out.push(Knob::BlockSize);
+        }
+        if self.target != d.target {
+            out.push(Knob::Target);
+        }
+        if self.exclude != d.exclude {
+            out.push(Knob::Exclude);
+        }
+        out
+    }
+
+    /// Reject knobs the method does not honor — the `configure` hook's
+    /// default body. Errors name the method's supported knobs,
+    /// matching the `Method`/`QuantKind` parse-error convention.
+    pub fn validate_for(&self, method: &str, supported: &[Knob]) -> Result<()> {
+        self.validate()?;
+        for knob in self.knobs_set() {
+            if !supported.contains(&knob) {
+                let list = if supported.is_empty() {
+                    "(none)".to_string()
+                } else {
+                    supported
+                        .iter()
+                        .map(|k| k.key())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                };
+                bail!(
+                    "method '{method}' does not support scenario knob '{}'; \
+                     supported knobs: {list}",
+                    knob.key()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical tag suffix (leading `+` included; empty when every
+    /// knob is default). `parse_suffix(suffix()[1..])` round-trips.
+    pub fn suffix(&self) -> String {
+        let d = ScenarioCfg::default();
+        let mut parts = Vec::new();
+        if self.coft {
+            parts.push("coft".to_string());
+        }
+        if self.eps != d.eps {
+            parts.push(format!("eps={}", self.eps));
+        }
+        if self.module_dropout != d.module_dropout {
+            parts.push(format!("dropout={}", self.module_dropout));
+        }
+        if self.dropout_seed != d.dropout_seed {
+            parts.push(format!("dropout_seed={}", self.dropout_seed));
+        }
+        if self.block_share {
+            parts.push("block_share".to_string());
+        }
+        if self.oft_r != 0 {
+            parts.push(format!("r={}", self.oft_r));
+        }
+        if self.block != 0 {
+            parts.push(format!("block={}", self.block));
+        }
+        if let Some(t) = &self.target {
+            parts.push(format!("target={}", escape_value(t)));
+        }
+        if let Some(e) = &self.exclude {
+            parts.push(format!("exclude={}", escape_value(e)));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("+{}", parts.join("+"))
+        }
+    }
+
+    /// Overlay `other`'s non-default knobs onto `self` (CLI flags and
+    /// config-file keys win over an existing tag suffix).
+    pub fn overlay(&mut self, other: &ScenarioCfg) {
+        let d = ScenarioCfg::default();
+        if other.coft != d.coft {
+            self.coft = other.coft;
+        }
+        if other.eps != d.eps {
+            self.eps = other.eps;
+        }
+        if other.module_dropout != d.module_dropout {
+            self.module_dropout = other.module_dropout;
+        }
+        if other.dropout_seed != d.dropout_seed {
+            self.dropout_seed = other.dropout_seed;
+        }
+        if other.block_share != d.block_share {
+            self.block_share = other.block_share;
+        }
+        if other.oft_r != d.oft_r {
+            self.oft_r = other.oft_r;
+        }
+        if other.block != d.block {
+            self.block = other.block;
+        }
+        if other.target != d.target {
+            self.target = other.target.clone();
+        }
+        if other.exclude != d.exclude {
+            self.exclude = other.exclude.clone();
+        }
+    }
+
+    /// The `Copy` numeric view embedded in `ModelDims`.
+    pub fn dims(&self) -> ScenarioDims {
+        ScenarioDims {
+            coft: self.coft,
+            eps: self.eps,
+            module_dropout: self.module_dropout,
+            block_share: self.block_share,
+            oft_r: self.oft_r,
+            dropout_seed: self.dropout_seed,
+        }
+    }
+
+    /// Resolve the targeting regexes against the bundle's adapted
+    /// linear names: returns the *skipped* names (sorted), i.e. those
+    /// not matching `target` (when set) or matching `exclude`. A
+    /// `target` pattern matching nothing is a typed error naming the
+    /// available linears.
+    pub fn resolve_skipped(&self, names: &[String]) -> Result<Vec<String>> {
+        let target = self.target.as_deref().map(regex::Regex::new).transpose()?;
+        let exclude = self.exclude.as_deref().map(regex::Regex::new).transpose()?;
+        let mut skipped = Vec::new();
+        let mut targeted_any = false;
+        for name in names {
+            let hit = target.as_ref().is_none_or(|t| t.is_match(name))
+                && !exclude.as_ref().is_some_and(|e| e.is_match(name));
+            if hit {
+                targeted_any = true;
+            } else {
+                skipped.push(name.clone());
+            }
+        }
+        if let Some(t) = &self.target {
+            ensure!(
+                targeted_any,
+                "target_modules regex '{}' matches none of the adapted linears \
+                 (available: {})",
+                t.pattern(),
+                names.join(", ")
+            );
+        }
+        skipped.sort();
+        Ok(skipped)
+    }
+
+    // -- checkpoint persistence ----------------------------------------
+
+    /// Encode into an f32 tensor for the checkpoint payload (16-bit
+    /// halves for the integer fields, the shard-meta idiom; regex
+    /// strings as one length + byte-per-element runs). Version-tagged.
+    pub fn to_checkpoint_tensor(&self) -> Tensor {
+        let mut data: Vec<f32> = vec![
+            1.0, // encoding version
+            if self.coft { 1.0 } else { 0.0 },
+            self.eps,
+            self.module_dropout,
+            if self.block_share { 1.0 } else { 0.0 },
+            self.oft_r as f32,
+            self.block as f32,
+            (self.dropout_seed & 0xffff) as f32,
+            ((self.dropout_seed >> 16) & 0xffff) as f32,
+            ((self.dropout_seed >> 32) & 0xffff) as f32,
+            ((self.dropout_seed >> 48) & 0xffff) as f32,
+        ];
+        for s in [&self.target, &self.exclude] {
+            match s {
+                Some(v) => {
+                    let bytes = v.as_bytes();
+                    data.push(bytes.len() as f32);
+                    data.extend(bytes.iter().map(|&b| b as f32));
+                }
+                None => data.push(-1.0),
+            }
+        }
+        let n = data.len();
+        Tensor::from_vec(&[n], data)
+    }
+
+    /// Decode [`ScenarioCfg::to_checkpoint_tensor`].
+    pub fn from_checkpoint_tensor(t: &Tensor) -> Result<ScenarioCfg> {
+        let d = &t.data;
+        ensure!(d.len() >= 13, "'{CKPT_KEY}' entry too short ({} values)", d.len());
+        ensure!(
+            d[0] == 1.0,
+            "'{CKPT_KEY}' encoding v{} unsupported (max 1)",
+            d[0]
+        );
+        let u16x = |x: f32| (x as u64) & 0xffff;
+        let seed = u16x(d[7]) | (u16x(d[8]) << 16) | (u16x(d[9]) << 32) | (u16x(d[10]) << 48);
+        let mut pos = 11usize;
+        let mut read_str = || -> Result<Option<String>> {
+            ensure!(pos < d.len(), "'{CKPT_KEY}' entry truncated");
+            let len = d[pos];
+            pos += 1;
+            if len < 0.0 {
+                return Ok(None);
+            }
+            let n = len as usize;
+            ensure!(pos + n <= d.len(), "'{CKPT_KEY}' string overruns the entry");
+            let bytes: Vec<u8> = d[pos..pos + n].iter().map(|&x| x as u8).collect();
+            pos += n;
+            Ok(Some(String::from_utf8(bytes).map_err(|_| {
+                anyhow::anyhow!("'{CKPT_KEY}' holds a non-UTF-8 regex")
+            })?))
+        };
+        let target = read_str()?;
+        let exclude = read_str()?;
+        let sc = ScenarioCfg {
+            coft: d[1] != 0.0,
+            eps: d[2],
+            module_dropout: d[3],
+            block_share: d[4] != 0.0,
+            oft_r: d[5] as usize,
+            block: d[6] as usize,
+            target,
+            exclude,
+            dropout_seed: seed,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+}
+
+/// Split a bundle tag into its base (`<preset>_<method>[_<quant>]`)
+/// and parsed scenario suffix.
+pub fn split_tag(tag: &str) -> Result<(String, ScenarioCfg)> {
+    match tag.split_once('+') {
+        Some((base, suffix)) => Ok((base.to_string(), ScenarioCfg::parse_suffix(suffix)?)),
+        None => Ok((tag.to_string(), ScenarioCfg::default())),
+    }
+}
+
+/// Overlay `overrides` (CLI flags / config keys) onto `tag`'s existing
+/// suffix and return the canonical tag. The canonical tag is the one
+/// carrier of the scenario: every consumer (train, decode, serve,
+/// merge) resolves it through `Manifest::builtin`.
+pub fn apply_to_tag(tag: &str, overrides: &ScenarioCfg) -> Result<String> {
+    let (base, mut sc) = split_tag(tag)?;
+    sc.overlay(overrides);
+    sc.validate()?;
+    Ok(format!("{base}{}", sc.suffix()))
+}
+
+// ---------------------------------------------------------------------------
+// Module dropout: a pure per-(linear, step) decision
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a linear name (the same per-name stream-splitting hash
+/// parameter init uses).
+fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Whether `linear` is dropped (falls back to the frozen base path)
+/// at optimizer step `step`. A pure function of
+/// `(dropout_seed, step, name)` — no RNG state to thread — so the
+/// decision is bitwise identical across `--workers`, `--ranks`,
+/// gradient-checkpoint recomputes, and checkpoint resume (`__step`
+/// restores the counter, the checkpoint restores the seed).
+pub fn dropped(linear: &str, step: u64, sd: &ScenarioDims) -> bool {
+    if sd.module_dropout <= 0.0 {
+        return false;
+    }
+    // splitmix64 finalizer over the mixed (seed, step, name) word.
+    let mut h = sd
+        .dropout_seed
+        .wrapping_add(step.wrapping_mul(0x9E37_79B9_97F4_A7C1))
+        ^ fnv1a(linear);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^= h >> 31;
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    u < sd.module_dropout as f64
+}
+
+// ---------------------------------------------------------------------------
+// COFT: post-step constraint projection
+// ---------------------------------------------------------------------------
+
+/// Project one trainable tensor onto the COFT constraint set: the
+/// adapter parameters are zero at identity, so the Frobenius norm of
+/// the tensor *is* its deviation from the identity rotation; clamp it
+/// to `eps` by uniform scaling. Sequential accumulation order — the
+/// projection runs on the full post-all-gather parameters on every
+/// rank, so it is bitwise identical from 1 thread to N workers/ranks.
+/// Returns whether the tensor was clamped.
+pub fn coft_project(data: &mut [f32], eps: f32) -> bool {
+    let norm = frobenius(data);
+    if norm <= eps || norm == 0.0 {
+        return false;
+    }
+    let scale = eps / norm;
+    for x in data.iter_mut() {
+        *x *= scale;
+    }
+    true
+}
+
+/// Frobenius norm, fixed sequential order (f64 accumulator).
+pub fn frobenius(data: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &x in data {
+        acc += (x as f64) * (x as f64);
+    }
+    (acc.sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_empty_suffix() {
+        let sc = ScenarioCfg::default();
+        assert!(sc.is_default());
+        assert_eq!(sc.suffix(), "");
+        assert!(sc.knobs_set().is_empty());
+    }
+
+    #[test]
+    fn suffix_roundtrip() {
+        let sc = ScenarioCfg {
+            coft: true,
+            eps: 1e-3,
+            module_dropout: 0.25,
+            block_share: true,
+            oft_r: 4,
+            block: 0,
+            target: Some("wq|wv".into()),
+            exclude: Some("mlp".into()),
+            dropout_seed: 99,
+        };
+        let suffix = sc.suffix();
+        let back = ScenarioCfg::parse_suffix(&suffix[1..]).unwrap();
+        assert_eq!(back, sc);
+    }
+
+    #[test]
+    fn plus_in_regex_values_escapes() {
+        let sc = ScenarioCfg {
+            target: Some("w[qv]+x".into()),
+            ..Default::default()
+        };
+        let suffix = sc.suffix();
+        assert!(suffix.contains("%2B"), "{suffix}");
+        let back = ScenarioCfg::parse_suffix(&suffix[1..]).unwrap();
+        assert_eq!(back.target.as_deref(), Some("w[qv]+x"));
+    }
+
+    #[test]
+    fn unknown_knob_lists_valid_options() {
+        let err = match ScenarioCfg::parse_suffix("warp=9") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("'warp' should not parse"),
+        };
+        for key in ["coft", "eps", "dropout", "block_share", "r", "block", "target", "exclude"] {
+            assert!(err.contains(key), "error should list '{key}': {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_values_are_typed_errors() {
+        assert!(ScenarioCfg::parse_suffix("eps=zero").is_err());
+        assert!(ScenarioCfg::parse_suffix("eps=-1").is_err());
+        assert!(ScenarioCfg::parse_suffix("dropout=1.5").is_err());
+        assert!(ScenarioCfg::parse_suffix("dropout").is_err()); // needs a value
+        assert!(ScenarioCfg::parse_suffix("coft=yes").is_err()); // flag takes none
+        assert!(ScenarioCfg::parse_suffix("r=0").is_err());
+        assert!(ScenarioCfg::parse_suffix("r=2+block=8").is_err()); // mutually exclusive
+        assert!(ScenarioCfg::parse_suffix("target=(wq").is_err()); // bad regex
+        assert!(ScenarioCfg::parse_suffix("coft++eps=1e-3").is_err()); // doubled '+'
+    }
+
+    #[test]
+    fn validate_for_rejects_unsupported_knobs() {
+        let sc = ScenarioCfg {
+            coft: true,
+            ..Default::default()
+        };
+        let err = match sc.validate_for("lora", &[Knob::ModuleDropout, Knob::Target]) {
+            Err(e) => format!("{e:#}"),
+            Ok(()) => panic!("coft should be unsupported"),
+        };
+        assert!(err.contains("'coft'"), "{err}");
+        assert!(err.contains("dropout"), "{err}");
+        assert!(err.contains("target"), "{err}");
+        sc.validate_for("oft_v2", &Knob::ALL).unwrap();
+        // no knobs set passes any support list
+        ScenarioCfg::default().validate_for("none", &[]).unwrap();
+    }
+
+    #[test]
+    fn overlay_non_defaults_win() {
+        let mut base = ScenarioCfg::parse_suffix("coft+eps=1e-3").unwrap();
+        let over = ScenarioCfg {
+            module_dropout: 0.1,
+            eps: 2e-3,
+            ..Default::default()
+        };
+        base.overlay(&over);
+        assert!(base.coft);
+        assert_eq!(base.eps, 2e-3);
+        assert_eq!(base.module_dropout, 0.1);
+    }
+
+    #[test]
+    fn apply_to_tag_canonicalizes() {
+        let tag = apply_to_tag("tiny_oft_v2", &ScenarioCfg::default()).unwrap();
+        assert_eq!(tag, "tiny_oft_v2");
+        let over = ScenarioCfg {
+            coft: true,
+            ..Default::default()
+        };
+        let tag = apply_to_tag("tiny_oft_v2+eps=0.001", &over).unwrap();
+        assert_eq!(tag, "tiny_oft_v2+coft+eps=0.001");
+        // idempotent: re-applying defaults keeps the canonical form
+        assert_eq!(apply_to_tag(&tag, &ScenarioCfg::default()).unwrap(), tag);
+    }
+
+    #[test]
+    fn targeting_resolution() {
+        let names: Vec<String> = vec![
+            "layers.0.attn.wq".into(),
+            "layers.0.attn.wv".into(),
+            "layers.0.mlp.up".into(),
+        ];
+        let all = ScenarioCfg::default().resolve_skipped(&names).unwrap();
+        assert!(all.is_empty());
+        let sc = ScenarioCfg {
+            target: Some("wq|wv".into()),
+            ..Default::default()
+        };
+        assert_eq!(sc.resolve_skipped(&names).unwrap(), vec!["layers.0.mlp.up".to_string()]);
+        let sc = ScenarioCfg {
+            exclude: Some("mlp".into()),
+            ..Default::default()
+        };
+        assert_eq!(sc.resolve_skipped(&names).unwrap(), vec!["layers.0.mlp.up".to_string()]);
+        // target matching nothing is a typed error naming the linears
+        let sc = ScenarioCfg {
+            target: Some("zzz".into()),
+            ..Default::default()
+        };
+        let err = format!("{:#}", sc.resolve_skipped(&names).unwrap_err());
+        assert!(err.contains("matches none"), "{err}");
+        assert!(err.contains("layers.0.attn.wq"), "{err}");
+    }
+
+    #[test]
+    fn dropout_is_deterministic_and_distributed() {
+        let sd = ScenarioDims {
+            module_dropout: 0.5,
+            ..Default::default()
+        };
+        // pure function: same inputs, same answer
+        for step in 0..20u64 {
+            assert_eq!(
+                dropped("layers.0.attn.wq", step, &sd),
+                dropped("layers.0.attn.wq", step, &sd)
+            );
+        }
+        // roughly the right rate over many (step, name) pairs
+        let mut hits = 0usize;
+        let n = 4000usize;
+        for step in 0..n as u64 {
+            if dropped("layers.1.mlp.up", step, &sd) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.5).abs() < 0.05, "dropout rate {rate}");
+        // p = 0 never drops; different seeds decide differently somewhere
+        let off = ScenarioDims::default();
+        assert!(!dropped("layers.0.attn.wq", 3, &off));
+        let sd2 = ScenarioDims {
+            dropout_seed: 1234,
+            ..sd
+        };
+        assert!((0..200u64).any(|s| dropped("x", s, &sd) != dropped("x", s, &sd2)));
+    }
+
+    #[test]
+    fn coft_projection_clamps_to_eps() {
+        let mut data = vec![0.3f32, -0.4, 0.0, 1.2];
+        let norm0 = frobenius(&data);
+        assert!(norm0 > 1e-2);
+        assert!(coft_project(&mut data, 1e-2));
+        let norm1 = frobenius(&data);
+        assert!((norm1 - 1e-2).abs() < 1e-6, "{norm1}");
+        // direction preserved
+        assert!(data[0] > 0.0 && data[1] < 0.0 && data[2] == 0.0);
+        // already-feasible tensors are untouched
+        let mut small = vec![1e-6f32; 4];
+        let before = small.clone();
+        assert!(!coft_project(&mut small, 1e-2));
+        assert_eq!(small, before);
+    }
+
+    #[test]
+    fn checkpoint_tensor_roundtrip() {
+        for sc in [
+            ScenarioCfg::default(),
+            ScenarioCfg {
+                coft: true,
+                eps: 3e-4,
+                module_dropout: 0.15,
+                block_share: true,
+                oft_r: 8,
+                block: 0,
+                target: Some("w[qv]$".into()),
+                exclude: None,
+                dropout_seed: 0xDEAD_BEEF_1234_5678,
+            },
+        ] {
+            let t = sc.to_checkpoint_tensor();
+            let back = ScenarioCfg::from_checkpoint_tensor(&t).unwrap();
+            assert_eq!(back, sc);
+        }
+        // future encoding version is a typed error
+        let mut t = ScenarioCfg::default().to_checkpoint_tensor();
+        t.data[0] = 2.0;
+        assert!(ScenarioCfg::from_checkpoint_tensor(&t).is_err());
+    }
+
+    #[test]
+    fn split_tag_handles_suffixes() {
+        let (base, sc) = split_tag("tiny_oft_v2").unwrap();
+        assert_eq!(base, "tiny_oft_v2");
+        assert!(sc.is_default());
+        let (base, sc) = split_tag("tiny_oft_v2+coft+r=4").unwrap();
+        assert_eq!(base, "tiny_oft_v2");
+        assert!(sc.coft);
+        assert_eq!(sc.oft_r, 4);
+        assert!(split_tag("tiny_oft_v2+warp").is_err());
+    }
+}

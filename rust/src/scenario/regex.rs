@@ -1,0 +1,456 @@
+//! A small self-contained regex engine for module targeting
+//! (`target_modules` / `exclude_modules`), so patterns like
+//! `q_proj|v_proj` or `layers\.[01]\.attn\..*` resolve against linear
+//! names with zero external dependencies.
+//!
+//! Supported constructs: literals, `.` (any char), `*` / `+` / `?`
+//! postfix repetition, `|` alternation, `(...)` groups, `[abc]` /
+//! `[a-z]` / `[^abc]` character classes, `^` / `$` anchors, and `\x`
+//! escapes. Matching is unanchored substring search (PEFT semantics:
+//! a pattern targets every module whose name *contains* a match)
+//! unless the pattern anchors itself. Malformed patterns are typed
+//! errors naming the supported constructs, matching the
+//! `Method`/`QuantKind` parse-error convention.
+
+use anyhow::{bail, Result};
+
+/// The constructs this engine understands — quoted verbatim by every
+/// parse error so a bad pattern teaches the valid surface.
+pub const SUPPORTED: &str =
+    "literals, '.', '*', '+', '?', '|', '(...)', '[abc]'/'[a-z]'/'[^abc]', '^', '$', '\\' escapes";
+
+/// A compiled pattern.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    pattern: String,
+    ast: Alt,
+}
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Lit(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Group(Alt),
+    Start,
+    End,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Rep {
+    One,
+    Star,
+    Plus,
+    Quest,
+}
+
+#[derive(Debug, Clone)]
+struct Piece {
+    node: Node,
+    rep: Rep,
+}
+
+#[derive(Debug, Clone)]
+struct Seq {
+    pieces: Vec<Piece>,
+}
+
+#[derive(Debug, Clone)]
+struct Alt {
+    seqs: Vec<Seq>,
+}
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    pattern: String,
+}
+
+impl Parser {
+    fn err(&self, what: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "bad regex '{}': {what} (at position {}); supported constructs: {SUPPORTED}",
+            self.pattern,
+            self.pos
+        )
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn parse_alt(&mut self) -> Result<Alt> {
+        let mut seqs = vec![self.parse_seq()?];
+        while self.peek() == Some('|') {
+            self.bump();
+            seqs.push(self.parse_seq()?);
+        }
+        Ok(Alt { seqs })
+    }
+
+    fn parse_seq(&mut self) -> Result<Seq> {
+        let mut pieces = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            pieces.push(self.parse_piece()?);
+        }
+        Ok(Seq { pieces })
+    }
+
+    fn parse_piece(&mut self) -> Result<Piece> {
+        let node = self.parse_atom()?;
+        let rep = match self.peek() {
+            Some('*') => {
+                self.bump();
+                Rep::Star
+            }
+            Some('+') => {
+                self.bump();
+                Rep::Plus
+            }
+            Some('?') => {
+                self.bump();
+                Rep::Quest
+            }
+            _ => Rep::One,
+        };
+        if rep != Rep::One && matches!(node, Node::Start | Node::End) {
+            return Err(self.err("a '^'/'$' anchor cannot be repeated"));
+        }
+        Ok(Piece { node, rep })
+    }
+
+    fn parse_atom(&mut self) -> Result<Node> {
+        let c = self.bump().ok_or_else(|| self.err("pattern ended unexpectedly"))?;
+        Ok(match c {
+            '(' => {
+                let inner = self.parse_alt()?;
+                if self.bump() != Some(')') {
+                    return Err(self.err("unclosed '(' group"));
+                }
+                Node::Group(inner)
+            }
+            ')' => return Err(self.err("unmatched ')'")),
+            '[' => self.parse_class()?,
+            ']' => Node::Lit(']'),
+            '.' => Node::Any,
+            '^' => Node::Start,
+            '$' => Node::End,
+            '*' | '+' | '?' => {
+                self.pos -= 1;
+                return Err(self.err(&format!("'{c}' repetition needs something to repeat")));
+            }
+            '\\' => {
+                let e = self
+                    .bump()
+                    .ok_or_else(|| self.err("trailing '\\' escapes nothing"))?;
+                Node::Lit(e)
+            }
+            other => Node::Lit(other),
+        })
+    }
+
+    fn parse_class(&mut self) -> Result<Node> {
+        let neg = if self.peek() == Some('^') {
+            self.bump();
+            true
+        } else {
+            false
+        };
+        let mut items = Vec::new();
+        loop {
+            let c = match self.bump() {
+                None => return Err(self.err("unclosed '[' character class")),
+                Some(']') if !items.is_empty() || neg => break,
+                Some(']') => break, // '[]' => empty class (matches nothing)
+                Some('\\') => self
+                    .bump()
+                    .ok_or_else(|| self.err("trailing '\\' escapes nothing"))?,
+                Some(c) => c,
+            };
+            if self.peek() == Some('-')
+                && self.chars.get(self.pos + 1).is_some_and(|&n| n != ']')
+            {
+                self.bump(); // '-'
+                let hi = match self.bump() {
+                    Some('\\') => self
+                        .bump()
+                        .ok_or_else(|| self.err("trailing '\\' escapes nothing"))?,
+                    Some(h) => h,
+                    None => return Err(self.err("unclosed '[' character class")),
+                };
+                if hi < c {
+                    return Err(self.err(&format!("class range '{c}-{hi}' is reversed")));
+                }
+                items.push(ClassItem::Range(c, hi));
+            } else {
+                items.push(ClassItem::Ch(c));
+            }
+        }
+        Ok(Node::Class { neg, items })
+    }
+}
+
+impl Regex {
+    /// Compile a pattern; malformed input errors name the supported
+    /// constructs.
+    pub fn new(pattern: &str) -> Result<Regex> {
+        let mut p = Parser {
+            chars: pattern.chars().collect(),
+            pos: 0,
+            pattern: pattern.to_string(),
+        };
+        let ast = p.parse_alt()?;
+        if p.pos < p.chars.len() {
+            // Only a stray ')' can stop parse_alt early at top level.
+            bail!(
+                "bad regex '{pattern}': unmatched ')' (at position {}); supported constructs: {SUPPORTED}",
+                p.pos
+            );
+        }
+        Ok(Regex {
+            pattern: pattern.to_string(),
+            ast,
+        })
+    }
+
+    /// The source pattern.
+    pub fn pattern(&self) -> &str {
+        &self.pattern
+    }
+
+    /// Unanchored substring match (use `^`/`$` in the pattern to
+    /// anchor): does any substring of `text` match?
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        for start in 0..=chars.len() {
+            if !ends_alt(&self.ast, &chars, start).is_empty() {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// All end positions reachable by matching `alt` at `pos` (deduped,
+/// ascending). Backtracking over explicit position sets: fine for the
+/// short module names this engine targets.
+fn ends_alt(alt: &Alt, t: &[char], pos: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for seq in &alt.seqs {
+        merge(&mut out, ends_seq(seq, t, pos));
+    }
+    out
+}
+
+fn ends_seq(seq: &Seq, t: &[char], pos: usize) -> Vec<usize> {
+    let mut set = vec![pos];
+    for piece in &seq.pieces {
+        let mut next = Vec::new();
+        for &p in &set {
+            merge(&mut next, ends_piece(piece, t, p));
+        }
+        set = next;
+        if set.is_empty() {
+            break;
+        }
+    }
+    set
+}
+
+fn ends_piece(piece: &Piece, t: &[char], pos: usize) -> Vec<usize> {
+    match piece.rep {
+        Rep::One => ends_node(&piece.node, t, pos),
+        Rep::Quest => {
+            let mut out = vec![pos];
+            merge(&mut out, ends_node(&piece.node, t, pos));
+            out
+        }
+        Rep::Star | Rep::Plus => {
+            let mut out = if piece.rep == Rep::Star {
+                vec![pos]
+            } else {
+                Vec::new()
+            };
+            let mut frontier = vec![pos];
+            loop {
+                let mut fresh = Vec::new();
+                for &p in &frontier {
+                    for e in ends_node(&piece.node, t, p) {
+                        if !out.contains(&e) && !fresh.contains(&e) {
+                            fresh.push(e);
+                        }
+                    }
+                }
+                if fresh.is_empty() {
+                    break;
+                }
+                merge(&mut out, fresh.clone());
+                frontier = fresh;
+            }
+            out
+        }
+    }
+}
+
+fn ends_node(node: &Node, t: &[char], pos: usize) -> Vec<usize> {
+    match node {
+        Node::Lit(c) => match t.get(pos) {
+            Some(x) if x == c => vec![pos + 1],
+            _ => Vec::new(),
+        },
+        Node::Any => {
+            if pos < t.len() {
+                vec![pos + 1]
+            } else {
+                Vec::new()
+            }
+        }
+        Node::Class { neg, items } => match t.get(pos) {
+            Some(&x) => {
+                let inside = items.iter().any(|it| match *it {
+                    ClassItem::Ch(c) => c == x,
+                    ClassItem::Range(lo, hi) => (lo..=hi).contains(&x),
+                });
+                if inside != *neg {
+                    vec![pos + 1]
+                } else {
+                    Vec::new()
+                }
+            }
+            None => Vec::new(),
+        },
+        Node::Group(a) => ends_alt(a, t, pos),
+        Node::Start => {
+            if pos == 0 {
+                vec![pos]
+            } else {
+                Vec::new()
+            }
+        }
+        Node::End => {
+            if pos == t.len() {
+                vec![pos]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+}
+
+fn merge(out: &mut Vec<usize>, add: Vec<usize>) {
+    for e in add {
+        if !out.contains(&e) {
+            out.push(e);
+        }
+    }
+    out.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pat: &str, text: &str) -> bool {
+        Regex::new(pat).unwrap().is_match(text)
+    }
+
+    #[test]
+    fn literal_substring() {
+        assert!(m("wq", "layers.0.attn.wq"));
+        assert!(m("attn", "layers.0.attn.wq"));
+        assert!(!m("wz", "layers.0.attn.wq"));
+        assert!(m("", "anything")); // empty pattern matches everywhere
+    }
+
+    #[test]
+    fn alternation() {
+        assert!(m("wq|wv", "layers.0.attn.wq"));
+        assert!(m("wq|wv", "layers.1.attn.wv"));
+        assert!(!m("wq|wv", "layers.1.attn.wk"));
+        assert!(m("q_proj|v_proj", "model.layers.3.self_attn.q_proj"));
+    }
+
+    #[test]
+    fn dot_and_escapes() {
+        assert!(m("attn.wq", "layers.0.attnXwq")); // '.' is any
+        assert!(m("attn\\.wq", "layers.0.attn.wq"));
+        assert!(!m("attn\\.wq", "layers.0.attnXwq"));
+        assert!(m("\\|", "a|b"));
+    }
+
+    #[test]
+    fn repetition() {
+        assert!(m("ab*c", "ac"));
+        assert!(m("ab*c", "abbbc"));
+        assert!(m("ab+c", "abc"));
+        assert!(!m("ab+c", "ac"));
+        assert!(m("ab?c", "ac"));
+        assert!(m("ab?c", "abc"));
+        assert!(m("layers\\..*\\.wq", "layers.12.attn.wq"));
+    }
+
+    #[test]
+    fn classes_and_ranges() {
+        assert!(m("w[qv]", "attn.wq"));
+        assert!(m("w[qv]", "attn.wv"));
+        assert!(!m("w[qv]", "attn.wk"));
+        assert!(m("layers\\.[0-3]\\.", "layers.2.attn.wq"));
+        assert!(!m("layers\\.[0-3]\\.", "layers.5.attn.wq"));
+        assert!(m("w[^qv]", "attn.wk"));
+        assert!(!m("w[^qv]$", "attn.wq"));
+    }
+
+    #[test]
+    fn anchors() {
+        assert!(m("^layers", "layers.0.attn.wq"));
+        assert!(!m("^attn", "layers.0.attn.wq"));
+        assert!(m("wq$", "layers.0.attn.wq"));
+        assert!(!m("attn$", "layers.0.attn.wq"));
+        assert!(m("^layers\\.0\\.attn\\.wq$", "layers.0.attn.wq"));
+    }
+
+    #[test]
+    fn groups() {
+        assert!(m("(wq|wv)$", "layers.0.attn.wq"));
+        assert!(!m("(wq|wv)$", "layers.0.attn.wk"));
+        assert!(m("(ab)+c", "ababc"));
+        assert!(!m("(ab)+c", "c"));
+    }
+
+    #[test]
+    fn malformed_patterns_error_naming_constructs() {
+        for bad in ["(wq", "wq)", "*wq", "+wq", "?x", "[qv", "a\\", "[z-a]"] {
+            let err = match Regex::new(bad) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => panic!("'{bad}' should not compile"),
+            };
+            assert!(
+                err.contains("supported constructs"),
+                "'{bad}' error should name the supported constructs: {err}"
+            );
+            assert!(err.contains(bad), "'{bad}' error should quote the pattern: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_class_matches_nothing() {
+        assert!(!m("w[]", "wq"));
+    }
+}

@@ -76,6 +76,56 @@ fn full_checkpoint_roundtrip_is_bitwise_for_every_method() {
 }
 
 #[test]
+fn dropout_resume_is_bitwise() {
+    // Module dropout draws its decisions from (seed, step, name) alone,
+    // so persisting the ScenarioCfg (incl. the seed) plus the step
+    // counter IS the full RNG state: a resumed run must replay the
+    // exact dropout pattern and reproduce the next step bitwise.
+    let tag = "tiny_oft_v2+dropout=0.35+dropout_seed=7";
+    let e = Engine::cpu().unwrap();
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, 4)).unwrap();
+    tr.train().unwrap();
+    let ck = tr.checkpoint_full().unwrap();
+    assert!(
+        ck.get(oftv2::scenario::CKPT_KEY).is_some(),
+        "full checkpoint must persist the scenario config"
+    );
+
+    let man = Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap();
+    let mut tr2 = Trainer::with_checkpoint(&e, man, cfg(tag, 4), Some(&ck)).unwrap();
+    assert_eq!(tr2.step_count(), 4);
+    let batch = tr.loader.next_batch();
+    let la = tr.train_on(&batch).unwrap();
+    let lb = tr2.train_on(&batch).unwrap();
+    assert_eq!(
+        la.to_bits(),
+        lb.to_bits(),
+        "dropout resume diverged: {la} vs {lb}"
+    );
+}
+
+#[test]
+fn scenario_mismatch_on_resume_is_rejected() {
+    // A checkpoint trained under one scenario must not silently resume
+    // under another — dropout/COFT/targeting change the trajectory.
+    let trained = "tiny_oft_v2+dropout=0.35";
+    let e = Engine::cpu().unwrap();
+    let mut tr = Trainer::new(&e, &artifacts_root(), cfg(trained, 2)).unwrap();
+    tr.train().unwrap();
+    let ck = tr.checkpoint_full().unwrap();
+
+    let man = Manifest::load_or_builtin(artifacts_root().join("tiny_oft_v2")).unwrap();
+    let err = match Trainer::with_checkpoint(&e, man, cfg("tiny_oft_v2", 2), Some(&ck)) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("resume under a different scenario should fail"),
+    };
+    assert!(
+        err.contains("resume with the same scenario knobs"),
+        "mismatch error should explain the fix: {err}"
+    );
+}
+
+#[test]
 fn weights_only_checkpoint_still_resets_optimizer() {
     // The init-style checkpoint (no __adam_* entries) must keep the old
     // semantics: weights restore, moments and step start fresh.

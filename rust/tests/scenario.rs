@@ -1,0 +1,438 @@
+//! Scenario subsystem integration locks:
+//!   * COFT keeps every trainable's deviation from identity inside the
+//!     eps ball after EVERY optimizer step (and the bound binds — an
+//!     unconstrained run leaves the ball on the same data);
+//!   * COFT + module dropout are bitwise identical across 1 vs N
+//!     workers and across a 2-rank group;
+//!   * block_share / r resolution and regex targeting produce the SAME
+//!     trainable counts through Manifest::builtin, the peft analytic
+//!     counter, and the memory model;
+//!   * GOFT and POFT — registered purely via adapters/{goft,poft}.rs —
+//!     have FD-locked gradients and run the full lifecycle (train,
+//!     eval, KV decode, checkpoint resume, serve, merge) selected by
+//!     tag alone;
+//!   * malformed scenario input (unknown knobs, bad regexes, range
+//!     violations, unsupported knobs per method) errors name the valid
+//!     options.
+
+use std::sync::Arc;
+
+use oftv2::adapters;
+use oftv2::artifact::{self, merge_checkpoint};
+use oftv2::artifacts_root;
+use oftv2::config::RunCfg;
+use oftv2::coordinator::{BaseModel, Manifest, Trainer};
+use oftv2::memmodel::{self, Precision, TrainShape};
+use oftv2::modelspec::ModelSpec;
+use oftv2::peft::counting::count_scenario;
+use oftv2::quant::requant::QuantKind;
+use oftv2::runtime::refmodel::RefBundle;
+use oftv2::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, Engine, Value};
+use oftv2::scenario::frobenius;
+use oftv2::serve::Server;
+use oftv2::util::rng::Rng;
+
+fn cfg(tag: &str, steps: usize) -> RunCfg {
+    let mut c = RunCfg::default();
+    c.tag = tag.into();
+    c.steps = steps;
+    c.log_every = 0;
+    c.data.task = "math".into();
+    c.data.documents = 200;
+    c.optim.lr = 3e-3;
+    c
+}
+
+fn man(tag: &str) -> Manifest {
+    Manifest::load_or_builtin(artifacts_root().join(tag)).unwrap()
+}
+
+#[test]
+fn coft_keeps_deviation_within_eps_after_every_step() {
+    // The constrained run must sit inside the eps ball after EVERY
+    // step — COFT is a per-step projection, not a final clamp. All
+    // oft_q trainables start at Init::Zeros (identity rotation), so
+    // the Frobenius norm of the packed parameter IS the deviation.
+    let eps = 0.002f32;
+    let e = Engine::cpu().unwrap();
+    let coft_cfg = cfg("tiny_oft_v2+coft+eps=0.002", 0);
+    let mut coft = Trainer::new(&e, &artifacts_root(), coft_cfg).unwrap();
+    let mut free = Trainer::new(&e, &artifacts_root(), cfg("tiny_oft_v2", 0)).unwrap();
+
+    let mut max_free = 0.0f32;
+    for step in 0..8 {
+        let batch = coft.loader.next_batch();
+        coft.train_on(&batch).unwrap();
+        free.train_on(&batch).unwrap();
+        for (name, t) in coft.trainable_tensors().unwrap() {
+            let dev = frobenius(&t.data);
+            assert!(
+                dev <= eps * 1.0001,
+                "step {step}: '{name}' deviates {dev} > eps {eps}"
+            );
+        }
+        for (_, t) in free.trainable_tensors().unwrap() {
+            max_free = max_free.max(frobenius(&t.data));
+        }
+    }
+    // The lock is only meaningful if the unconstrained twin actually
+    // left the ball on the same batches.
+    assert!(
+        max_free > eps,
+        "unconstrained run peaked at {max_free} <= eps {eps}; the COFT bound is vacuous here"
+    );
+}
+
+#[test]
+fn coft_and_dropout_are_bitwise_across_workers_and_ranks() {
+    // The scenario's stochastic/constrained pieces must not depend on
+    // execution layout: module dropout is a pure function of
+    // (seed, step, name) and COFT projects the all-gathered state, so
+    // 1 worker, 4 workers, and a 2-rank group all produce the same
+    // bits.
+    let tag = "tiny_oft_v2+coft+eps=0.002+dropout=0.3+dropout_seed=11";
+    let steps = 6;
+
+    let e = Engine::cpu().unwrap();
+    let mut solo = Trainer::new(&e, &artifacts_root(), cfg(tag, steps)).unwrap();
+    let hist = solo.train().unwrap();
+    assert!(hist.steps.iter().all(|s| s.loss.is_finite()), "NaN loss");
+    let oracle = solo.trainable_tensors().unwrap();
+
+    // 1 vs 4 workers.
+    let mut c = cfg(tag, steps);
+    c.train.workers = 4;
+    let mut four = Trainer::new(&e, &artifacts_root(), c).unwrap();
+    let hist4 = four.train().unwrap();
+    let l1: Vec<f64> = hist.steps.iter().map(|s| s.loss).collect();
+    let l4: Vec<f64> = hist4.steps.iter().map(|s| s.loss).collect();
+    assert_eq!(l1, l4, "loss trace differs under 4 workers");
+    for ((na, ta), (nb, tb)) in oracle.iter().zip(&four.trainable_tensors().unwrap()) {
+        assert_eq!(na, nb);
+        assert_eq!(ta, tb, "trainable '{na}' differs under 4 workers");
+    }
+
+    // 1 process vs a 2-rank group.
+    use oftv2::comms::RankGroup;
+    let ranks = 2usize;
+    let groups = RankGroup::mem_mesh(ranks, std::time::Duration::from_secs(60));
+    let finals: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let e = Engine::cpu().unwrap();
+                    let mut c = cfg(tag, steps);
+                    c.train.ranks = ranks;
+                    let mut tr = Trainer::new(&e, &artifacts_root(), c).unwrap();
+                    tr.connect_ranks(Arc::new(g)).unwrap();
+                    tr.train().unwrap();
+                    tr.trainable_tensors().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (r, tensors) in finals.iter().enumerate() {
+        for ((na, ta), (nb, tb)) in oracle.iter().zip(tensors) {
+            assert_eq!(na, nb);
+            assert_eq!(ta, tb, "rank {r}: trainable '{na}' differs from solo");
+        }
+    }
+}
+
+#[test]
+fn block_share_and_r_resolution_lock_param_shapes() {
+    // tiny: d_model = 64, d_ff = 256, block_b = 16.
+    let plain = Manifest::builtin("tiny_oft_v2").unwrap();
+
+    // block_share collapses every linear's packed factor to ONE shared
+    // 16x16 block: 120 packed entries per linear, 6 linears x 2 layers.
+    let shared = Manifest::builtin("tiny_oft_v2+block_share").unwrap();
+    let q = shared
+        .trainable
+        .iter()
+        .find(|s| s.name.ends_with("attn.wq.oft_q"))
+        .unwrap();
+    assert_eq!(q.shape, vec![1, 120], "block_share should leave one block");
+    assert_eq!(shared.params_trainable, 12 * 120);
+    assert!(shared.params_trainable < plain.params_trainable);
+
+    // r picks the NUMBER of blocks; block size = din / r, so the same
+    // r gives different block widths on attention (din 64 -> 16) and
+    // the MLP down projection (din 256 -> 64).
+    let r4 = Manifest::builtin("tiny_oft_v2+r=4").unwrap();
+    let wq = r4
+        .trainable
+        .iter()
+        .find(|s| s.name.ends_with("attn.wq.oft_q"))
+        .unwrap();
+    assert_eq!(wq.shape, vec![4, 120]);
+    let down = r4
+        .trainable
+        .iter()
+        .find(|s| s.name.ends_with("mlp.down.oft_q"))
+        .unwrap();
+    assert_eq!(down.shape, vec![4, 2016]); // 64-wide blocks: 64*63/2 packed
+
+    // r and block are mutually exclusive spellings of the same choice.
+    let err = format!(
+        "{:#}",
+        Manifest::builtin("tiny_oft_v2+r=4+block=8").unwrap_err()
+    );
+    assert!(err.contains("mutually exclusive"), "{err}");
+}
+
+#[test]
+fn targeting_counts_agree_across_manifest_peft_and_memmodel() {
+    // For every targeting/shape scenario the runtime bundle
+    // (Manifest::builtin), the analytic counter (peft::counting), and
+    // the memory model must report the SAME trainable count — this is
+    // what keeps checkpoints, pricing, and serve in sync.
+    let base = Manifest::builtin("tiny_oft_v2").unwrap();
+    let spec = ModelSpec::from_dims("tiny", &base.model);
+    let adapter = adapters::get("oft_v2").unwrap();
+    for suffix in [
+        "",
+        "+target=attn",
+        "+target=wq|wv",
+        "+exclude=mlp",
+        "+exclude=attn.w[oq]",
+        "+block_share",
+        "+r=4",
+        "+target=attn+exclude=wo",
+    ] {
+        let tag = format!("tiny_oft_v2{suffix}");
+        let m = Manifest::builtin(&tag).unwrap();
+        let n = count_scenario(&spec, adapter, &base.model, &m.scenario).unwrap();
+        assert_eq!(n, m.params_trainable, "'{tag}': peft count disagrees");
+
+        let method =
+            memmodel::Method::by_name("oft_v2", base.model.lora_r, base.model.block_b).unwrap();
+        let mem = memmodel::finetune_memory_scenario(
+            &spec,
+            method,
+            Precision::Bf16,
+            TrainShape::default(),
+            &m.scenario,
+        )
+        .unwrap();
+        assert!(
+            (mem.adapter_params - n as f64 * 4.0).abs() < 1.0,
+            "'{tag}': memmodel prices {} bytes for {n} params",
+            mem.adapter_params
+        );
+    }
+
+    // Subset semantics: target=wq|wv adapts exactly 2 of the 6 linears
+    // per layer; the other 4 fall back to the frozen base path.
+    let sub = Manifest::builtin("tiny_oft_v2+target=wq|wv").unwrap();
+    assert_eq!(sub.trainable.len(), 4, "2 linears x 2 layers");
+    assert_eq!(sub.skipped.len(), 8, "4 linears x 2 layers skipped");
+    assert!(sub.adapts("layers.0.attn.wq"));
+    assert!(sub.adapts("layers.1.attn.wv"));
+    assert!(!sub.adapts("layers.0.attn.wo"));
+    assert!(!sub.adapts("layers.1.mlp.down"));
+}
+
+/// Run one lr=0 train step through the reference bundle: the returned
+/// first Adam moment encodes the raw gradient (m0 = 0, so
+/// new_m = (1 - b1) g), and slot 3n is the pre-update loss.
+fn lr0_step(bu: &RefBundle, m: &Manifest, tr: &[Value], toks: &Value, mask: &Value) -> Vec<Value> {
+    let n = tr.len();
+    let zeros: Vec<Value> = m
+        .trainable
+        .iter()
+        .map(|s| lit_f32(&s.shape, &vec![0.0; s.numel()]).unwrap())
+        .collect();
+    // realistic frozen base (norms at 1, weights ~N(0, 0.02)) so
+    // gradient magnitudes are representative
+    let fixed: Vec<Value> = m
+        .frozen
+        .iter()
+        .map(|s| {
+            let t = oftv2::coordinator::state::init_param(s, 99, None).unwrap();
+            lit_f32(&s.shape, &t.data).unwrap()
+        })
+        .collect();
+    let lr = lit_scalar_f32(0.0);
+    let one = lit_scalar_f32(1.0);
+    let mut inputs: Vec<&Value> = tr.iter().collect();
+    inputs.extend(zeros.iter());
+    inputs.extend(zeros.iter());
+    inputs.extend(fixed.iter());
+    inputs.push(toks);
+    inputs.push(mask);
+    inputs.push(&lr);
+    inputs.push(&one);
+    let out = bu.train_step(&inputs).unwrap();
+    assert_eq!(out.len(), 3 * n + 1);
+    out
+}
+
+#[test]
+fn goft_and_poft_gradients_match_finite_differences() {
+    // Both registry-added methods get the same FD lock the built-in
+    // backwards carry: perturb the largest-gradient coordinate of the
+    // first trainable and compare the central difference against the
+    // analytic gradient recovered from the Adam moment.
+    for tag in ["tiny_goft", "tiny_poft"] {
+        let m = Manifest::builtin(tag).unwrap();
+        let bu = RefBundle::from_manifest(&m).unwrap();
+        let n = m.trainable.len();
+        assert!(n > 0, "{tag}: no trainables");
+
+        let mut rng = Rng::new(5);
+        let tr: Vec<Value> = m
+            .trainable
+            .iter()
+            .map(|s| lit_f32(&s.shape, &rng.normal_vec(s.numel(), 0.02)).unwrap())
+            .collect();
+        let (b, t) = (m.model.batch, m.model.seq_len);
+        let mut brng = Rng::new(7);
+        let toks: Vec<i32> = (0..b * (t + 1)).map(|_| brng.below(m.model.vocab) as i32).collect();
+        let toks = lit_i32(&[b, t + 1], &toks).unwrap();
+        let mask = lit_f32(&[b, t], &vec![1.0f32; b * t]).unwrap();
+
+        let out = lr0_step(&bu, &m, &tr, &toks, &mask);
+        let loss0 = scalar_f32(&out[3 * n]).unwrap();
+        assert!(loss0.is_finite() && loss0 > 0.0, "{tag}: loss {loss0}");
+
+        let g: Vec<f32> = out[n].to_vec::<f32>().unwrap();
+        let grad: Vec<f32> = g.iter().map(|x| x / (1.0 - 0.9)).collect();
+        let (best, gbest) = grad
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, g)| (i, *g))
+            .unwrap();
+        assert!(gbest.abs() > 0.0, "{tag}: zero gradient everywhere");
+
+        let eps = 2e-2f32;
+        let eval_at = |delta: f32| -> f32 {
+            let mut tr2 = tr.clone();
+            let mut data = tr2[0].to_vec::<f32>().unwrap();
+            data[best] += delta;
+            tr2[0] = lit_f32(&m.trainable[0].shape, &data).unwrap();
+            let out = lr0_step(&bu, &m, &tr2, &toks, &mask);
+            scalar_f32(&out[3 * n]).unwrap()
+        };
+        let fd = (eval_at(eps) - eval_at(-eps)) / (2.0 * eps);
+        let rel = (fd - gbest).abs() / gbest.abs().max(1e-4);
+        assert!(rel < 0.25, "{tag}: FD {fd} vs analytic {gbest} (rel {rel})");
+    }
+}
+
+#[test]
+fn goft_and_poft_train_eval_decode_checkpoint_end_to_end() {
+    // Registered purely through adapters/{goft,poft}.rs — no core
+    // dispatch edits — both methods must run the whole loop selected
+    // by tag alone.
+    let e = Engine::cpu().unwrap();
+    for tag in ["tiny_goft", "tiny_poft"] {
+        let steps = 12;
+        let mut tr = Trainer::new(&e, &artifacts_root(), cfg(tag, steps)).unwrap();
+        let hist = tr.train().unwrap();
+        let first = hist.first_loss().unwrap();
+        let tail = hist.tail_loss(3).unwrap();
+        assert!(tail < first, "{tag}: loss did not decrease ({first} -> {tail})");
+        assert!(hist.steps.iter().all(|s| s.loss.is_finite()), "{tag}: NaN");
+
+        let (eval_loss, ppl) = tr.evaluate().unwrap();
+        assert!(eval_loss.is_finite() && ppl.is_finite(), "{tag}");
+
+        // KV decode locks token-for-token against the re-forward oracle.
+        for prompt in [vec![1, 10, 20], vec![2], vec![1, 3, 5, 7, 9, 11]] {
+            let old = tr.decode_greedy_reforward(&prompt, 12).unwrap();
+            let new = tr.decode_greedy(&prompt, 12).unwrap();
+            assert_eq!(old, new, "{tag}: KV decode diverged on {prompt:?}");
+        }
+
+        // Full-state checkpoint resume reproduces the next step bitwise.
+        let ck = tr.checkpoint_full().unwrap();
+        let mut tr2 = Trainer::with_checkpoint(&e, man(tag), cfg(tag, steps), Some(&ck)).unwrap();
+        assert_eq!(tr2.step_count(), steps, "{tag}: step counter not restored");
+        let batch = tr.loader.next_batch();
+        let a = tr.train_on(&batch).unwrap();
+        let b = tr2.train_on(&batch).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: resume diverged ({a} vs {b})");
+    }
+}
+
+#[test]
+fn goft_and_poft_serve_and_merge_over_a_shared_base() {
+    // The serving + artifact legs of the lifecycle: a live adapter
+    // loaded from the training checkpoint, and a QuantKind::None merge
+    // round-tripped through the artifact file format, must both decode
+    // exactly what the solo trainer decodes.
+    let e = Engine::reference();
+    let seed = 42u64; // RunCfg::default().seed, so solo trainers agree
+    let base = BaseModel::for_preset(&e, "tiny", seed, None).unwrap();
+    let prompts = [vec![1i32, 9, 4], vec![2, 7]];
+
+    for (name, tag) in [("goft", "tiny_goft"), ("poft", "tiny_poft")] {
+        let mut tr =
+            Trainer::with_base(&e, man(tag), cfg(tag, 6), None, Arc::clone(&base)).unwrap();
+        tr.train().unwrap();
+        let ckpt = tr.checkpoint().unwrap();
+
+        let art = merge_checkpoint(&man(tag), &ckpt, seed, QuantKind::None).unwrap();
+        assert_eq!(&art.source_tag, tag);
+        let path = std::env::temp_dir().join(format!(
+            "oft_scenario_{}_{tag}.art",
+            std::process::id()
+        ));
+        artifact::save(&path, &art).unwrap();
+        let art = artifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        let mut srv = Server::new(&e, Arc::clone(&base), 2);
+        srv.add_adapter_init("live", man(tag), seed, Some(&ckpt)).unwrap();
+        srv.add_artifact("merged", &art).unwrap();
+        assert_eq!(srv.merged_adapters(), 1);
+
+        for p in &prompts {
+            let solo = tr.decode_greedy(p, 8).unwrap();
+            for adapter in ["live", "merged"] {
+                let id = srv.submit(adapter, p.clone(), 8).unwrap();
+                let rs = srv.run_until_idle().unwrap();
+                assert_eq!(rs.len(), 1);
+                assert_eq!(rs[0].id, id);
+                assert_eq!(
+                    rs[0].tokens, solo,
+                    "{name}: '{adapter}' decode diverged from solo on {p:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_scenario_inputs_error_with_valid_options() {
+    // Every rejection must tell the user what IS valid — knob list,
+    // regex construct list, range, or the method's supported set.
+    for (tag, needle) in [
+        ("tiny_oft_v2+sparsity=0.5", "valid knobs"),
+        ("tiny_oft_v2+coft=yes", "takes no value"),
+        ("tiny_oft_v2+eps", "needs a value"),
+        ("tiny_oft_v2+eps=-1", "must be > 0"),
+        ("tiny_oft_v2+eps=nope", "expects a float"),
+        ("tiny_oft_v2+dropout=1.5", "must be in [0, 1)"),
+        ("tiny_oft_v2+r=0", "must be > 0"),
+        ("tiny_oft_v2+r=4+block=8", "mutually exclusive"),
+        ("tiny_oft_v2+target=w[q", "supported constructs"),
+        ("tiny_oft_v2+target=zzz", "matches none"),
+        ("tiny_full+coft", "does not support scenario knob 'coft'"),
+        ("tiny_lora+coft", "does not support scenario knob 'coft'"),
+        ("tiny_goft+block_share", "does not support scenario knob 'block_share'"),
+    ] {
+        let err = format!("{:#}", Manifest::builtin(tag).unwrap_err());
+        assert!(err.contains(needle), "'{tag}' should mention '{needle}': {err}");
+    }
+
+    // The unsupported-knob error also names what the method DOES take.
+    let err = format!("{:#}", Manifest::builtin("tiny_lora+coft").unwrap_err());
+    for k in ["dropout", "target", "exclude"] {
+        assert!(err.contains(k), "lora error should list '{k}': {err}");
+    }
+}
